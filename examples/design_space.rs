@@ -1,0 +1,89 @@
+//! Design-space exploration: the accuracy/energy Pareto of the PACiM
+//! configuration space (operand width x dynamic thresholds) — the
+//! DESIGN.md §10 ablation harness.
+//!
+//! Run: `cargo run --release --example design_space -- [images]`
+
+use pacim::arch::ThresholdSet;
+use pacim::energy::EnergyModel;
+use pacim::nn::{evaluate, exact_backend, pac_backend, tiny_resnet, PacConfig, WeightStore};
+use pacim::pac::{ComputeMap, PcuRounding};
+use pacim::runtime::Manifest;
+use pacim::workload::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let man = Manifest::load(pacim::runtime::manifest::artifacts_dir())?;
+    let store = WeightStore::load(man.path("weights")?)?;
+    let ds = Dataset::load(man.path("dataset")?)?;
+    let model = tiny_resnet(&store, ds.h, ds.n_classes)?;
+    let n = n.min(ds.n);
+    let images: Vec<&[u8]> = (0..n).map(|i| ds.image(i)).collect();
+    let labels: Vec<usize> = (0..n).map(|i| ds.label(i)).collect();
+    let threads = std::thread::available_parallelism()?.get();
+    let em = EnergyModel::default();
+
+    let exact = exact_backend(&model);
+    let (acc8, _) = evaluate(&model, &exact, &images, &labels, threads);
+    println!("exact 8b/8b: {:.2}% | digital eff {:.2} TOPS/W (8b/8b)\n",
+             acc8 * 100.0, em.digital_8b().tops_w_8b);
+    println!("{:<34} {:>8} {:>10} {:>12} {:>12}", "configuration", "acc %", "loss %", "avg cycles", "TOPS/W 8b");
+
+    let mut frontier: Vec<(f64, f64)> = Vec::new(); // (eff, acc)
+    for bits in [3u32, 4, 5] {
+        for (th, tag) in [
+            (None, "static"),
+            (Some(ThresholdSet::new(0.06, 0.12, 0.25)), "dyn-moderate"),
+            (Some(ThresholdSet::new(0.10, 0.20, 0.35)), "dyn-aggressive"),
+        ] {
+            // Dynamic levels are defined for the 4x4 base; skip others.
+            if th.is_some() && bits != 4 {
+                continue;
+            }
+            let cfg = PacConfig {
+                map: ComputeMap::operand_based(bits, bits),
+                thresholds: th,
+                rounding: PcuRounding::RoundNearest,
+                ..PacConfig::default()
+            };
+            let pac = pac_backend(&model, cfg);
+            let (acc, stats) = evaluate(&model, &pac, &images, &labels, threads);
+            let cycles = if stats.levels.total() > 0 {
+                stats.levels.average_cycles()
+            } else {
+                (bits * bits) as f64
+            };
+            let eff = em.hybrid_efficiency(cycles, 64.0 - cycles).tops_w_8b;
+            println!(
+                "{:<34} {:>8.2} {:>10.2} {:>12.2} {:>12.2}",
+                format!("PAC {bits}x{bits} {tag}"),
+                acc * 100.0,
+                (acc - acc8) * 100.0,
+                cycles,
+                eff
+            );
+            frontier.push((eff, acc));
+        }
+    }
+
+    // PCU rounding ablation (DESIGN.md §10).
+    println!("\nPCU rounding ablation (4x4 static):");
+    for (r, name) in [(PcuRounding::RoundNearest, "round-nearest"), (PcuRounding::Floor, "floor")] {
+        let cfg = PacConfig { rounding: r, ..PacConfig::default() };
+        let pac = pac_backend(&model, cfg);
+        let (acc, _) = evaluate(&model, &pac, &images, &labels, threads);
+        println!("  {name:<16} acc {:.2}%", acc * 100.0);
+    }
+
+    // Report the Pareto frontier.
+    frontier.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    println!("\nPareto frontier (efficiency-ordered):");
+    let mut best_acc = 0.0;
+    for (eff, acc) in frontier {
+        if acc > best_acc {
+            println!("  {eff:8.2} TOPS/W -> {:.2}%", acc * 100.0);
+            best_acc = acc;
+        }
+    }
+    Ok(())
+}

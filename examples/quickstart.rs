@@ -1,0 +1,77 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load the AOT artifacts (trained quantized tiny_resnet).
+//! 2. Classify a few images with the bit-true rust engine — once exactly,
+//!    once through the PAC hybrid backend.
+//! 3. Print the architecture-level cycle/energy/traffic estimate for the
+//!    same inference.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use pacim::coordinator::{schedule_model, ScheduleConfig};
+use pacim::energy::EnergyModel;
+use pacim::nn::{exact_backend, pac_backend, run_model, tiny_resnet, PacConfig, WeightStore};
+use pacim::runtime::Manifest;
+use pacim::workload::shapes::LayerShape;
+use pacim::workload::Dataset;
+
+fn main() -> anyhow::Result<()> {
+    // ---- artifacts --------------------------------------------------------
+    let man = Manifest::load(pacim::runtime::manifest::artifacts_dir())?;
+    let store = WeightStore::load(man.path("weights")?)?;
+    let ds = Dataset::load(man.path("dataset")?)?;
+    let model = tiny_resnet(&store, ds.h, ds.n_classes)?;
+    println!("model {} | {} MACs/image | {} test images", model.name, model.macs(), ds.n);
+
+    // ---- bit-true inference: exact vs PAC ---------------------------------
+    let exact = exact_backend(&model);
+    let pac = pac_backend(&model, PacConfig::default());
+    let mut agree = 0;
+    let n = 8;
+    for i in 0..n {
+        let (le, _) = run_model(&model, &exact, ds.image(i));
+        let (lp, stats) = run_model(&model, &pac, ds.image(i));
+        let pe = argmax(&le);
+        let pp = argmax(&lp);
+        agree += (pe == pp) as usize;
+        println!(
+            "image {i}: label {} | exact -> {pe} | PAC -> {pp} | digital cycles/MAC {:.1}",
+            ds.label(i),
+            stats.avg_cycles_per_mac()
+        );
+    }
+    println!("exact/PAC argmax agreement: {agree}/{n}");
+
+    // ---- architecture estimate for this model -----------------------------
+    let shapes: Vec<LayerShape> = model
+        .compute_layers()
+        .iter()
+        .map(|(name, g)| LayerShape {
+            name: name.to_string(),
+            kind: pacim::workload::LayerShapeKind::Conv,
+            geom: *g,
+        })
+        .collect();
+    let em = EnergyModel::default();
+    let dig = schedule_model(&shapes, &ScheduleConfig::digital_baseline());
+    let pacs = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+    println!("\narchitecture estimate (per image):");
+    for (label, rep, is_pac) in [("digital 8b/8b", &dig, false), ("PACiM 4-bit", &pacs, true)] {
+        println!(
+            "  {label:<14} {:>12} bit-serial cycles | compute {:>8.2} uJ | memory {:>8.2} uJ",
+            rep.total_macs_cycles(),
+            rep.compute_energy_pj(&em) / 1e6,
+            rep.memory_energy_pj(&em, is_pac) / 1e6,
+        );
+    }
+    println!(
+        "  -> cycle reduction {:.0}% | activation-traffic reduction {:.0}%",
+        100.0 * (1.0 - pacs.total_macs_cycles() as f64 / dig.total_macs_cycles() as f64),
+        pacs.act_traffic_reduction() * 100.0
+    );
+    Ok(())
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+}

@@ -1,0 +1,102 @@
+//! End-to-end serving driver (the E2E validation of DESIGN.md §8).
+//!
+//! Loads the AOT-compiled PAC model through PJRT, starts the threaded
+//! batch-serving coordinator, fires concurrent single-image requests from
+//! client threads, and reports latency percentiles, throughput, accuracy
+//! on the synthetic test split, and the per-request architecture-level
+//! energy estimate.
+//!
+//! Run: `cargo run --release --example serve -- [requests] [clients]`
+
+use pacim::coordinator::{schedule_model, BatchPolicy, InferenceServer, ScheduleConfig};
+use pacim::energy::EnergyModel;
+use pacim::nn::{tiny_resnet, WeightStore};
+use pacim::runtime::{Manifest, PjrtExecutor};
+use pacim::workload::shapes::LayerShape;
+use pacim::workload::Dataset;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(256);
+    let clients: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let man = Manifest::load(pacim::runtime::manifest::artifacts_dir())?;
+    let ds = Dataset::load(man.path("dataset")?)?;
+    let store = WeightStore::load(man.path("weights")?)?;
+    let model = tiny_resnet(&store, ds.h, ds.n_classes)?;
+    let (batch, in_elems, classes) = (man.batch()?, man.input_elems()?, man.classes()?);
+    let requests = requests.min(ds.n);
+
+    println!("serving {} ({} classes) | compiled batch {batch} | {clients} client threads | {requests} requests",
+             man.get("model")?, classes);
+
+    let hlo = man.path("model_pac")?;
+    let server = InferenceServer::start_with(
+        move || PjrtExecutor::load(&hlo, batch, in_elems, classes),
+        BatchPolicy { max_wait: std::time::Duration::from_millis(2) },
+    )?;
+    let handle = server.handle();
+
+    let correct = AtomicUsize::new(0);
+    let next = AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let h = handle.clone();
+            let correct = &correct;
+            let next = &next;
+            let ds = &ds;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= requests {
+                    break;
+                }
+                let img: Vec<f32> = ds.image(i).iter().map(|&q| ds.params.dequantize(q)).collect();
+                let reply = h.infer(img).expect("infer");
+                let pred = reply
+                    .logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == ds.label(i) {
+                    correct.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let mut m = server.stop();
+
+    println!("\nresults:");
+    println!("  throughput : {:.1} img/s ({} requests in {:.1} ms)", requests as f64 / wall, requests, wall * 1e3);
+    println!("  latency    : p50 {:.0} us | p95 {:.0} us | p99 {:.0} us",
+             m.latency_percentile_us(50.0), m.latency_percentile_us(95.0), m.latency_percentile_us(99.0));
+    println!("  batching   : {} batches, mean occupancy {:.1}, {} padded slots",
+             m.batches, m.mean_batch_occupancy(), m.padded_slots);
+    println!("  accuracy   : {:.2}% (PAC 4-bit model)",
+             correct.load(Ordering::Relaxed) as f64 / requests as f64 * 100.0);
+
+    // Architecture-level energy per request (what the silicon would burn).
+    let shapes: Vec<LayerShape> = model
+        .compute_layers()
+        .iter()
+        .map(|(name, g)| LayerShape {
+            name: name.to_string(),
+            kind: pacim::workload::LayerShapeKind::Conv,
+            geom: *g,
+        })
+        .collect();
+    let em = EnergyModel::default();
+    let rep = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+    let e_img = (rep.compute_energy_pj(&em) + rep.memory_energy_pj(&em, true)) / 1e6;
+    println!("  arch energy: {:.2} uJ/image (65nm PACiM estimate; digital would be {:.2} uJ)",
+             e_img,
+             {
+                 let d = schedule_model(&shapes, &ScheduleConfig::digital_baseline());
+                 (d.compute_energy_pj(&em) + d.memory_energy_pj(&em, false)) / 1e6
+             });
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Workload trace simulation: run the paper's benchmark networks
+//! (ResNet-18/50, VGG16-BN at CIFAR/ImageNet resolutions) through the
+//! bank scheduler and print the per-layer + whole-model cycle, energy,
+//! and traffic report — the data behind Fig. 7 and Table 4 at full scale.
+//!
+//! Run: `cargo run --release --example trace_sim -- [model] [res]`
+
+use pacim::coordinator::{schedule_model, ScheduleConfig};
+use pacim::energy::EnergyModel;
+use pacim::workload::{resnet18, resnet50, vgg16_bn, Resolution};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "resnet18".into());
+    let res = match std::env::args().nth(2).as_deref() {
+        Some("imagenet") => Resolution::ImageNet,
+        _ => Resolution::Cifar,
+    };
+    let classes = if res == Resolution::ImageNet { 1000 } else { 10 };
+    let shapes = match model.as_str() {
+        "resnet18" => resnet18(res, classes),
+        "resnet50" => resnet50(res, classes),
+        "vgg16" => vgg16_bn(res, classes),
+        other => anyhow::bail!("unknown model '{other}' (resnet18|resnet50|vgg16)"),
+    };
+    let em = EnergyModel::default();
+    let cfg = ScheduleConfig::pacim_default();
+    let rep = schedule_model(&shapes, &cfg);
+
+    println!("{model} @ {res:?} — PACiM single-bank schedule (4-bit static map)\n");
+    println!("{:<22} {:>6} {:>9} {:>14} {:>10} {:>9}",
+             "layer", "tiles", "wloads", "cycles", "act red.", "w red.");
+    for l in &rep.layers {
+        println!(
+            "{:<22} {:>2}x{:<3} {:>9} {:>14} {:>9.1}% {:>8.1}%",
+            l.name,
+            l.row_tiles,
+            l.oc_tiles,
+            l.weight_loads,
+            l.bit_serial_cycles,
+            l.act_reduction() * 100.0,
+            (1.0 - l.weight_bits_pacim as f64 / l.weight_bits_baseline as f64) * 100.0,
+        );
+    }
+
+    let dig = schedule_model(&shapes, &ScheduleConfig::digital_baseline());
+    let dyn_ = schedule_model(&shapes, &ScheduleConfig::pacim_dynamic());
+    println!("\nwhole model:");
+    for (label, r, pac) in [
+        ("digital 8b/8b", &dig, false),
+        ("PACiM static", &rep, true),
+        ("PACiM dynamic", &dyn_, true),
+    ] {
+        let e = (r.compute_energy_pj(&em) + r.memory_energy_pj(&em, pac)) / 1e6;
+        println!(
+            "  {label:<14} cycles {:>14}  energy {:>10.1} uJ  act-traffic red. {:>5.1}%",
+            r.total_macs_cycles(),
+            e,
+            r.act_traffic_reduction() * 100.0
+        );
+    }
+    println!(
+        "\ncycle reduction: static {:.1}% | dynamic {:.1}% (paper: 75% / 81%)",
+        100.0 * (1.0 - rep.total_macs_cycles() as f64 / dig.total_macs_cycles() as f64),
+        100.0 * (1.0 - dyn_.total_macs_cycles() as f64 / dig.total_macs_cycles() as f64),
+    );
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""AOT export: train -> quantize -> emit artifacts.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (wired into
+``make artifacts``). Python's ONLY runtime role ends here; the rust
+binary consumes the artifacts.
+
+Interchange format is HLO TEXT, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+    dataset.bin        quantized synthetic test split (+ params)
+    weights.bin        quantized model sidecar for the rust simulator
+    model_pac.hlo.txt  PAC hybrid forward (Pallas kernels), batch B
+    model_exact.hlo.txt exact bit-serial forward, batch B
+    pac_matmul.hlo.txt standalone L1 kernel (runtime microbench)
+    train_cache.npz    float training cache
+    manifest.txt       key/value index of all of the above
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .datagen import INPUT_PARAMS, generate, write_dataset_bin
+from .kernels.pac_matmul import pac_matmul
+from .model import ADD_NAMES, CONV_NAMES, quantized_forward, quantize_model
+from .quant_utils import QuantParams
+from .train import train_cached
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default printer elides big weight
+    # literals as "{...}", which xla_extension 0.5.1's text parser accepts
+    # silently and turns into GARBAGE values. Hard requirement.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "elided constant survived"
+    return text
+
+
+# ---------------------------------------------------------------------------
+# weights.bin writer (format: rust/src/nn/weights.rs)
+# ---------------------------------------------------------------------------
+
+_DTYPE_TAGS = {np.uint8: 0, np.int32: 1, np.float32: 2}
+
+
+def _write_entry(f, name: str, arr: np.ndarray, scale=1.0, zp=0):
+    tag = _DTYPE_TAGS[arr.dtype.type]
+    f.write(struct.pack("<H", len(name)))
+    f.write(name.encode())
+    f.write(struct.pack("<BB", tag, arr.ndim))
+    for d in arr.shape:
+        f.write(struct.pack("<I", d))
+    f.write(struct.pack("<f", scale))
+    f.write(struct.pack("<i", zp))
+    f.write(arr.tobytes())
+
+
+def write_weights_bin(path: str, q) -> None:
+    entries = []
+    qp = lambda p: np.asarray([p.scale, float(p.zero_point)], np.float32)
+    entries.append(("input.oq", qp(q["input.oq"]), 1.0, 0))
+    for name in CONV_NAMES:
+        layer = q[name]
+        entries.append((f"{name}.w", layer["wq"].astype(np.uint8),
+                        layer["wp"].scale, layer["wp"].zero_point))
+        entries.append((f"{name}.b", layer["b"].astype(np.float32), 1.0, 0))
+        entries.append((f"{name}.oq", qp(layer["oq"]), 1.0, 0))
+    for name in ADD_NAMES:
+        entries.append((f"{name}.oq", qp(q[f"{name}.oq"]), 1.0, 0))
+    entries.append(("fc.w", q["fc"]["wq"].astype(np.uint8),
+                    q["fc"]["wp"].scale, q["fc"]["wp"].zero_point))
+    entries.append(("fc.b", q["fc"]["b"].astype(np.float32), 1.0, 0))
+    with open(path, "wb") as f:
+        f.write(b"PACW")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<I", len(entries)))
+        for name, arr, scale, zp in entries:
+            _write_entry(f, name, np.ascontiguousarray(arr), scale, zp)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--width", type=int, default=16)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--hw", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--n-test", type=int, default=1024)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the jnp reference instead of the Pallas kernels")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    print("[aot] 1/5 training (cached) ...")
+    params, losses, train_acc = train_cached(
+        os.path.join(out, "train_cache.npz"),
+        c=args.width, classes=args.classes, hw=args.hw, steps=args.steps)
+
+    print("[aot] 2/5 dataset ...")
+    # Test split uses a different seed than training (seed+1).
+    x_test, y_test = generate(args.n_test, hw=args.hw,
+                              n_classes=args.classes, seed=8)
+    xq_test = INPUT_PARAMS.quantize(x_test)
+    write_dataset_bin(os.path.join(out, "dataset.bin"),
+                      xq_test, y_test, args.classes)
+
+    print("[aot] 3/5 PTQ calibration ...")
+    q = quantize_model(params, x_test[:256], INPUT_PARAMS)
+    write_weights_bin(os.path.join(out, "weights.bin"), q)
+
+    print("[aot] 4/5 lowering to HLO text ...")
+    in_elems = 3 * args.hw * args.hw
+    spec = jax.ShapeDtypeStruct((args.batch, in_elems), jnp.float32)
+    use_pallas = not args.no_pallas
+
+    def fwd_pac(x):
+        return (quantized_forward(q, x, hw=args.hw, classes=args.classes,
+                                  mode="pac", use_pallas=use_pallas),)
+
+    def fwd_exact(x):
+        return (quantized_forward(q, x, hw=args.hw, classes=args.classes,
+                                  mode="exact", use_pallas=use_pallas),)
+
+    for fname, fn in (("model_pac.hlo.txt", fwd_pac),
+                      ("model_exact.hlo.txt", fwd_exact)):
+        text = to_hlo_text(jax.jit(fn).lower(spec))
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)")
+
+    # Standalone kernel artifact for the runtime microbench.
+    kspec_x = jax.ShapeDtypeStruct((128, 576), jnp.int32)
+    kspec_w = jax.ShapeDtypeStruct((576, 64), jnp.int32)
+
+    def kern(x, w):
+        return (pac_matmul(x, w, zpx=7, zpw=128),)
+
+    text = to_hlo_text(jax.jit(kern).lower(kspec_x, kspec_w))
+    with open(os.path.join(out, "pac_matmul.hlo.txt"), "w") as f:
+        f.write(text)
+
+    print("[aot] 5/5 manifest ...")
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("# generated by python -m compile.aot\n")
+        f.write(f"model       tiny_resnet_c{args.width}\n")
+        f.write(f"batch       {args.batch}\n")
+        f.write(f"in_c        3\n")
+        f.write(f"in_hw       {args.hw}\n")
+        f.write(f"classes     {args.classes}\n")
+        f.write(f"train_acc   {train_acc:.4f}\n")
+        f.write(f"model_pac   model_pac.hlo.txt\n")
+        f.write(f"model_exact model_exact.hlo.txt\n")
+        f.write(f"pac_kernel  pac_matmul.hlo.txt\n")
+        f.write(f"weights     weights.bin\n")
+        f.write(f"dataset     dataset.bin\n")
+    print("[aot] done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Deterministic procedural image-classification dataset.
+
+Our substitution for CIFAR-10/100 (no dataset downloads in this
+environment — DESIGN.md §3): a texture taxonomy whose classes are
+distinguishable by a small CNN but non-trivial (random phase, frequency
+jitter, per-channel color modulation, additive noise). The 100-class
+variant crosses the 10 base textures with 10 color palettes, mirroring
+how CIFAR-100 is "CIFAR-10 but finer".
+
+Everything derives from a single integer seed; the same seed always
+produces the same dataset on any platform (numpy Philox).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .quant_utils import QuantParams
+
+N_TEXTURES = 10
+
+# 10 fixed RGB palettes for the 100-class variant (base, accent).
+_PALETTES = np.array(
+    [
+        [[1.0, 0.2, 0.2], [0.1, 0.1, 0.9]],
+        [[0.2, 1.0, 0.2], [0.9, 0.1, 0.7]],
+        [[0.2, 0.2, 1.0], [0.9, 0.9, 0.1]],
+        [[0.9, 0.6, 0.1], [0.1, 0.7, 0.7]],
+        [[0.8, 0.1, 0.8], [0.2, 0.9, 0.3]],
+        [[0.9, 0.9, 0.9], [0.1, 0.1, 0.1]],
+        [[0.6, 0.3, 0.1], [0.3, 0.6, 0.9]],
+        [[0.1, 0.5, 0.3], [0.9, 0.4, 0.2]],
+        [[0.5, 0.5, 0.9], [0.9, 0.5, 0.5]],
+        [[0.3, 0.9, 0.8], [0.7, 0.2, 0.5]],
+    ],
+    dtype=np.float32,
+)
+
+
+def _texture(kind: int, hw: int, rng: np.random.Generator) -> np.ndarray:
+    """One grayscale texture field in [0, 1], shape (hw, hw)."""
+    yy, xx = np.mgrid[0:hw, 0:hw].astype(np.float32) / hw
+    phase = rng.uniform(0, 2 * np.pi)
+    freq = rng.uniform(2.5, 4.5)
+    t = 2 * np.pi * freq
+    if kind == 0:  # horizontal stripes
+        g = np.sin(t * yy + phase)
+    elif kind == 1:  # vertical stripes
+        g = np.sin(t * xx + phase)
+    elif kind == 2:  # diagonal stripes
+        g = np.sin(t * (xx + yy) / np.sqrt(2) + phase)
+    elif kind == 3:  # checkerboard
+        g = np.sign(np.sin(t * xx + phase) * np.sin(t * yy + phase))
+    elif kind == 4:  # concentric rings
+        cx, cy = rng.uniform(0.35, 0.65, size=2)
+        r = np.sqrt((xx - cx) ** 2 + (yy - cy) ** 2)
+        g = np.sin(2.5 * t * r + phase)
+    elif kind == 5:  # spot lattice
+        g = np.sin(t * xx + phase) * np.sin(t * yy + phase)
+        g = np.where(g > 0.3, 1.0, -1.0)
+    elif kind == 6:  # radial gradient
+        cx, cy = rng.uniform(0.3, 0.7, size=2)
+        r = np.sqrt((xx - cx) ** 2 + (yy - cy) ** 2)
+        g = 1.0 - 2.0 * np.clip(r / 0.7, 0, 1)
+    elif kind == 7:  # linear gradient (random direction)
+        ang = rng.uniform(0, 2 * np.pi)
+        g = 2.0 * ((xx - 0.5) * np.cos(ang) + (yy - 0.5) * np.sin(ang))
+    elif kind == 8:  # coarse block noise
+        blocks = rng.uniform(-1, 1, size=(4, 4)).astype(np.float32)
+        g = np.kron(blocks, np.ones((hw // 4, hw // 4), np.float32))
+    elif kind == 9:  # cross grid
+        g = np.maximum(np.sin(t * xx + phase), np.sin(t * yy + phase))
+    else:
+        raise ValueError(f"unknown texture {kind}")
+    return (np.clip(g, -1, 1) + 1) / 2  # → [0, 1]
+
+
+def generate(
+    n: int, hw: int = 32, n_classes: int = 10, seed: int = 7, noise: float = 0.06
+):
+    """Generate `n` images (NCHW float32 in [0,1]) and labels.
+
+    n_classes = 10 → textures with random palettes (palette is nuisance);
+    n_classes = 100 → texture × palette grid (palette is class-defining).
+    """
+    assert n_classes in (10, 100), "10 or 100 classes"
+    assert hw % 4 == 0
+    rng = np.random.Generator(np.random.Philox(seed))
+    images = np.zeros((n, 3, hw, hw), np.float32)
+    labels = (np.arange(n) % n_classes).astype(np.uint8)
+    # Shuffle label order deterministically so splits are balanced.
+    rng.shuffle(labels)
+    for i in range(n):
+        label = int(labels[i])
+        if n_classes == 10:
+            kind = label
+            palette = _PALETTES[rng.integers(0, len(_PALETTES))]
+        else:
+            kind = label % N_TEXTURES
+            palette = _PALETTES[label // N_TEXTURES]
+        g = _texture(kind, hw, rng)
+        base, accent = palette
+        img = g[None, :, :] * base[:, None, None] + (1 - g[None, :, :]) * accent[
+            :, None, None
+        ]
+        img += rng.normal(0, noise, size=img.shape).astype(np.float32)
+        images[i] = np.clip(img, 0, 1)
+    return images, labels
+
+
+# Input quantization contract: raw [0,1] pixels, scale 1/255, zp 0.
+INPUT_PARAMS = QuantParams(1.0 / 255.0, 0)
+
+
+def write_dataset_bin(path, images_q: np.ndarray, labels: np.ndarray, n_classes: int,
+                      params: QuantParams = INPUT_PARAMS) -> None:
+    """Write `dataset.bin` (format: rust/src/workload/dataset.rs)."""
+    n, c, h, w = images_q.shape
+    assert images_q.dtype == np.uint8 and labels.dtype == np.uint8
+    with open(path, "wb") as f:
+        f.write(b"PACD")
+        for v in (1, n, c, h, w, n_classes):
+            f.write(np.uint32(v).tobytes())
+        f.write(np.float32(params.scale).tobytes())
+        f.write(np.uint32(params.zero_point).tobytes())
+        f.write(images_q.tobytes())
+        f.write(labels.tobytes())

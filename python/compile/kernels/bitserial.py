@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: exact bit-serial GEMM (the pure D-CiM baseline).
+
+All 64 binary (p,q) cycles run exactly (Eq. 1) - this is the kernel the
+digital-baseline model variant uses, and the reference point for the
+kernel-level ablation of approximate operand width.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_M = 128
+
+
+def _bitserial_kernel(x_ref, w_ref, o_ref, *, k: int, zpx: int, zpw: int):
+    x = x_ref[...]
+    w = w_ref[...]
+    raw = jnp.zeros(o_ref.shape, jnp.int32)
+    for p in range(8):
+        xb = (x >> p) & 1
+        for q in range(8):
+            wb = (w >> q) & 1
+            dp = jnp.dot(xb, wb, preferred_element_type=jnp.int32)
+            raw = raw + (dp << (p + q))
+    sum_x = jnp.sum(x, axis=1, keepdims=True)
+    sum_w = jnp.sum(w, axis=0, keepdims=True)
+    o_ref[...] = raw - zpw * sum_x - zpx * sum_w + k * zpx * zpw
+
+
+@functools.partial(jax.jit, static_argnames=("zpx", "zpw", "block_m"))
+def bitserial_matmul(xq, wq, *, zpx: int, zpw: int,
+                     block_m: int = DEFAULT_BLOCK_M):
+    """Exact bit-serial GEMM; equals the plain int32 GEMM (tested)."""
+    x = jnp.asarray(xq, jnp.int32)
+    w = jnp.asarray(wq, jnp.int32)
+    m, k = x.shape
+    n = w.shape[1]
+    bm = min(block_m, m)
+    m_pad = ((m + bm - 1) // bm) * bm
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    kern = functools.partial(_bitserial_kernel, k=k, zpx=zpx, zpw=zpw)
+    out = pl.pallas_call(
+        kern,
+        grid=(m_pad // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.int32),
+        interpret=True,
+    )(x, w)
+    return out[:m]

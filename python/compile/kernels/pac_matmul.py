@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: the hybrid PAC GEMM (Eq. 4).
+
+One kernel invocation computes a (block_m, N) tile of the output. The K
+(dot-product) dimension lives entirely in one VMEM block, mirroring how a
+PACiM CiM column holds the whole DP vector; the M dimension is the grid.
+
+TPU hardware adaptation (DESIGN.md `Hardware-Adaptation`):
+- the D-CiM "NOR array + 256-input adder tree" becomes 16 bit-plane
+  matmuls feeding the MXU (int8-weight-friendly contraction);
+- the PCU sparsity path is a VPU reduction (popcount-as-sum over K)
+  followed by an outer product of sparsity vectors — negligible FLOPs;
+- BlockSpec tiles (block_m, K) x (K, N): VMEM footprint =
+  4*(block_m*K + K*N + block_m*N) bytes (int32), kept under the ~16 MB
+  VMEM budget by choosing block_m (see python/tests/test_kernels.py
+  ::test_vmem_budget).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import digital_pairs
+
+DEFAULT_BLOCK_M = 128
+
+
+def _pac_kernel(x_ref, w_ref, o_ref, *, k: int, zpx: int, zpw: int,
+                bx: int, bw: int):
+    """Kernel body: x (bm, K) int32, w (K, N) int32 -> o (bm, N) int32."""
+    x = x_ref[...]
+    w = w_ref[...]
+    dig = set(digital_pairs(bx, bw))
+
+    xb = [(x >> p) & 1 for p in range(8)]
+    wb = [(w >> q) & 1 for q in range(8)]
+    # Bit-level sparsity: the on-die encoder counts (VPU reduction).
+    sx = [jnp.sum(b, axis=1) for b in xb]   # (bm,)
+    sw = [jnp.sum(b, axis=0) for b in wb]   # (N,)
+
+    raw = jnp.zeros(o_ref.shape, jnp.int32)
+    for p in range(8):
+        for q in range(8):
+            if (p, q) in dig:
+                # Digital domain: exact plane contraction (MXU).
+                dp = jnp.dot(xb[p], wb[q], preferred_element_type=jnp.int32)
+            else:
+                # Sparsity domain: PCU point estimate Sx*Sw/n,
+                # round-nearest fixed point (Eq. 3).
+                prod = sx[p][:, None] * sw[q][None, :]
+                dp = (prod + k // 2) // k
+            raw = raw + (dp << (p + q))
+
+    # Zero-point correction; sum_x is reconstructed from the sparsity
+    # counts (sum_p 2^p Sx[p]) exactly as the architecture does - the
+    # LSB activation bits are never read as binary data.
+    sum_x = jnp.zeros((x.shape[0],), jnp.int32)
+    for p in range(8):
+        sum_x = sum_x + (sx[p] << p)
+    sum_w = jnp.sum(w, axis=0)
+    o_ref[...] = (raw
+                  - zpw * sum_x[:, None]
+                  - zpx * sum_w[None, :]
+                  + k * zpx * zpw)
+
+
+@functools.partial(jax.jit, static_argnames=("zpx", "zpw", "bx", "bw", "block_m"))
+def pac_matmul(xq, wq, *, zpx: int, zpw: int, bx: int = 4, bw: int = 4,
+               block_m: int = DEFAULT_BLOCK_M):
+    """Hybrid PAC GEMM: xq (M, K) x wq (K, N) uint8-valued int32 tensors.
+
+    Returns int32 (M, N) zero-point-corrected accumulators, matching
+    ref.pac_matmul_ref exactly.
+    """
+    x = jnp.asarray(xq, jnp.int32)
+    w = jnp.asarray(wq, jnp.int32)
+    m, k = x.shape
+    n = w.shape[1]
+    bm = min(block_m, m)
+    m_pad = ((m + bm - 1) // bm) * bm
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    kern = functools.partial(_pac_kernel, k=k, zpx=zpx, zpw=zpw, bx=bx, bw=bw)
+    out = pl.pallas_call(
+        kern,
+        grid=(m_pad // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.int32),
+        interpret=True,
+    )(x, w)
+    return out[:m]
+
+
+def vmem_bytes(block_m: int, k: int, n: int) -> int:
+    """Static VMEM footprint estimate of one kernel instance (int32)."""
+    return 4 * (block_m * k + k * n + block_m * n)

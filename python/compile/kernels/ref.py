@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the ground truth the Pallas kernels are tested against
+(`python/tests/test_kernels.py`, hypothesis sweeps) and the numerical
+contract shared with the rust engine (`rust/src/pac/mac.rs` implements
+the same equations; `rust/tests/integration_nn.rs` cross-checks through
+the exported artifacts).
+
+Everything operates on *quantized uint8 values carried as int32*.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# The paper's default operand split: activation/weight MSB bits kept
+# digital (4x4 -> 16 exact cycles, 48 approximated).
+DEFAULT_BITS = 4
+
+
+def digital_pairs(bx: int = DEFAULT_BITS, bw: int = DEFAULT_BITS):
+    """The digital set D = {(p,q) : p >= 8-bx, q >= 8-bw} (Eq. 4)."""
+    return [(p, q) for p in range(8 - bx, 8) for q in range(8 - bw, 8)]
+
+
+def sparsity_pairs(bx: int = DEFAULT_BITS, bw: int = DEFAULT_BITS):
+    dig = set(digital_pairs(bx, bw))
+    return [(p, q) for p in range(8) for q in range(8) if (p, q) not in dig]
+
+
+def exact_matmul_ref(xq, wq, zpx: int, zpw: int):
+    """Exact zero-point-corrected integer GEMM.
+
+    xq: (M, K) uint8-valued, wq: (K, N) uint8-valued; returns int32 (M, N)
+    accumulators sum_k (x-zpx)(w-zpw).
+    """
+    x = jnp.asarray(xq, jnp.int32) - zpx
+    w = jnp.asarray(wq, jnp.int32) - zpw
+    return x @ w
+
+
+def _zero_point_correct(raw, x, w, k, zpx, zpw):
+    sum_x = jnp.sum(x, axis=1, keepdims=True)  # (M, 1)
+    sum_w = jnp.sum(w, axis=0, keepdims=True)  # (1, N)
+    return raw - zpw * sum_x - zpx * sum_w + k * zpx * zpw
+
+
+def bitserial_matmul_ref(xq, wq, zpx: int, zpw: int):
+    """The same GEMM computed the D-CiM way: 64 binary (p,q) plane
+    matmuls with shift-accumulate (Eq. 1), then zero-point correction.
+    Must equal ``exact_matmul_ref`` exactly (tested)."""
+    x = jnp.asarray(xq, jnp.int32)
+    w = jnp.asarray(wq, jnp.int32)
+    k = x.shape[1]
+    raw = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    for p in range(8):
+        xb = (x >> p) & 1
+        for q in range(8):
+            wb = (w >> q) & 1
+            raw = raw + ((xb @ wb) << (p + q))
+    return _zero_point_correct(raw, x, w, k, zpx, zpw)
+
+
+def pac_matmul_ref(xq, wq, zpx: int, zpw: int, bx: int = DEFAULT_BITS,
+                   bw: int = DEFAULT_BITS):
+    """The hybrid PAC GEMM (Eq. 4): digital MSB cycles exact, the rest
+    estimated from bit-level sparsity with PCU round-nearest fixed point
+    (rust: pac::hybrid_mac + zero_point_correct).
+
+    int32 is sufficient: raw <= K*255*255 < 2^31 for K <= 33000.
+    """
+    x = jnp.asarray(xq, jnp.int32)
+    w = jnp.asarray(wq, jnp.int32)
+    m, k = x.shape
+    n = w.shape[1]
+    dig = set(digital_pairs(bx, bw))
+
+    xb = [(x >> p) & 1 for p in range(8)]
+    wb = [(w >> q) & 1 for q in range(8)]
+    sx = [jnp.sum(b, axis=1) for b in xb]  # (M,) per plane
+    sw = [jnp.sum(b, axis=0) for b in wb]  # (N,) per plane
+
+    raw = jnp.zeros((m, n), jnp.int32)
+    for p in range(8):
+        for q in range(8):
+            if (p, q) in dig:
+                dp = xb[p] @ wb[q]
+            else:
+                prod = sx[p][:, None] * sw[q][None, :]
+                dp = (prod + k // 2) // k  # round-nearest divide by DP len
+            raw = raw + (dp << (p + q))
+    return _zero_point_correct(raw, x, w, k, zpx, zpw)
+
+
+def pac_matmul_numpy(xq, wq, zpx, zpw, bx=DEFAULT_BITS, bw=DEFAULT_BITS):
+    """Numpy twin of pac_matmul_ref (used by tests to avoid tracing)."""
+    x = np.asarray(xq, np.int64)
+    w = np.asarray(wq, np.int64)
+    m, k = x.shape
+    n = w.shape[1]
+    dig = set(digital_pairs(bx, bw))
+    raw = np.zeros((m, n), np.int64)
+    for p in range(8):
+        xb = (x >> p) & 1
+        sxp = xb.sum(axis=1)
+        for q in range(8):
+            wb = (w >> q) & 1
+            if (p, q) in dig:
+                dp = xb @ wb
+            else:
+                swq = wb.sum(axis=0)
+                dp = (sxp[:, None] * swq[None, :] + k // 2) // k
+            raw += dp << (p + q)
+    sum_x = x.sum(axis=1, keepdims=True)
+    sum_w = w.sum(axis=0, keepdims=True)
+    return (raw - zpw * sum_x - zpx * sum_w + k * zpx * zpw).astype(np.int32)

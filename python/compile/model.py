@@ -1,0 +1,282 @@
+"""L2: the model compute graph.
+
+Two faces of the same ``tiny_resnet`` topology (kept in sync with
+``rust/src/nn/layers.rs::tiny_resnet``):
+
+1. ``float_forward``  - the float training model (build-time training).
+2. ``quantized_forward`` - the PTQ inference graph whose every GEMM runs
+   through an L1 kernel (PAC hybrid or exact bit-serial); this is what
+   ``aot.py`` lowers to HLO text for the rust PJRT runtime.
+
+Topology (width C, input 3xHWxHW):
+
+    stem:   conv3x3(3->C)/1 + relu
+    block1: save; conv3x3(C->C)+relu; conv3x3(C->C); add+relu
+    down1:  conv3x3(C->2C)/2 + relu
+    block2: residual block @2C
+    down2:  conv3x3(2C->4C)/2 + relu
+    block3: residual block @4C
+    head:   global avgpool; linear(4C->classes) -> logits
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.bitserial import bitserial_matmul
+from .kernels.pac_matmul import pac_matmul
+from .kernels.ref import exact_matmul_ref, pac_matmul_ref
+from .quant_utils import QuantParams, calibrate_minmax, calibrate_weights_symmetric
+
+# Conv layer names in program order (shared with rust + weights.bin).
+CONV_NAMES = [
+    "stem",
+    "block1.conv1", "block1.conv2",
+    "down1",
+    "block2.conv1", "block2.conv2",
+    "down2",
+    "block3.conv1", "block3.conv2",
+]
+# (in_mult, out_mult, stride, relu) per conv, mults x base width C.
+CONV_SPECS = {
+    "stem": (None, 1, 1, True),          # in_c = 3
+    "block1.conv1": (1, 1, 1, True),
+    "block1.conv2": (1, 1, 1, False),
+    "down1": (1, 2, 2, True),
+    "block2.conv1": (2, 2, 1, True),
+    "block2.conv2": (2, 2, 1, False),
+    "down2": (2, 4, 2, True),
+    "block3.conv1": (4, 4, 1, True),
+    "block3.conv2": (4, 4, 1, False),
+}
+ADD_NAMES = ["block1.add", "block2.add", "block3.add"]
+
+
+def conv_channels(c: int):
+    """(in_c, out_c) per conv name for base width c."""
+    out = {}
+    for name, (im, om, _, _) in CONV_SPECS.items():
+        in_c = 3 if im is None else im * c
+        out[name] = (in_c, om * c)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Float training model
+# --------------------------------------------------------------------------
+
+def init_params(key, c: int = 16, classes: int = 10) -> Dict[str, jnp.ndarray]:
+    """He-init float parameters. Conv weights OIHW, fc (classes, 4C)."""
+    params = {}
+    chans = conv_channels(c)
+    for name in CONV_NAMES:
+        in_c, out_c = chans[name]
+        key, sub = jax.random.split(key)
+        fan_in = in_c * 9
+        params[f"{name}.w"] = jax.random.normal(
+            sub, (out_c, in_c, 3, 3), jnp.float32) * np.sqrt(2.0 / fan_in)
+        params[f"{name}.b"] = jnp.zeros((out_c,), jnp.float32)
+    key, sub = jax.random.split(key)
+    params["fc.w"] = jax.random.normal(sub, (classes, 4 * c), jnp.float32) * 0.05
+    params["fc.b"] = jnp.zeros((classes,), jnp.float32)
+    return params
+
+
+def _conv2d(x, w, b, stride):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + b[None, :, None, None]
+
+
+def float_forward(params, x, capture: Callable[[str, jnp.ndarray], None] = None,
+                  noise_key=None, noise_std=0.0):
+    """Float forward; ``capture(name, act)`` observes post-activation
+    tensors for PTQ calibration.
+
+    ``noise_std`` > 0 injects Gaussian noise proportional to each conv
+    output's std *before* the nonlinearity — the training-time proxy for
+    the PAC approximation noise (paper §6.1: fine-tuning under
+    progressively augmented Gaussian noise). The first conv is left
+    clean, mirroring the architecture's exact first layer."""
+    keys = {}
+    if noise_key is not None:
+        split = jax.random.split(noise_key, len(CONV_NAMES))
+        keys = dict(zip(CONV_NAMES, split))
+
+    def note(name, v):
+        if capture is not None:
+            capture(name, v)
+        return v
+
+    def conv(name, h):
+        _, _, stride, relu = CONV_SPECS[name]
+        y = _conv2d(h, params[f"{name}.w"], params[f"{name}.b"], stride)
+        if name in keys and name != "stem":
+            sigma = noise_std * jnp.std(y)
+            y = y + sigma * jax.random.normal(keys[name], y.shape)
+        if relu:
+            y = jax.nn.relu(y)
+        return note(name, y)
+
+    h = conv("stem", x)
+    for blk in ("block1", "block2", "block3"):
+        skip = h
+        h = conv(f"{blk}.conv1", h)
+        h = conv(f"{blk}.conv2", h)
+        h = note(f"{blk}.add", jax.nn.relu(h + skip))
+        if blk == "block1":
+            h = conv("down1", h)
+        elif blk == "block2":
+            h = conv("down2", h)
+    gap = jnp.mean(h, axis=(2, 3))
+    return gap @ params["fc.w"].T + params["fc.b"]
+
+
+# --------------------------------------------------------------------------
+# PTQ: calibrate + pack the quantized model description
+# --------------------------------------------------------------------------
+
+def quantize_model(params, calib_x: np.ndarray, input_params: QuantParams):
+    """Post-training quantization. Returns a dict:
+        {name: {"wq": (out_c, K) uint8, "wp": QuantParams, "b": f32 (out_c,),
+                "oq": QuantParams}}  per conv,
+        plus "<blk>.add.oq" entries, an "fc" entry, and "input.oq".
+    """
+    hi_ranges: Dict[str, float] = {}
+    lo_ranges: Dict[str, float] = {}
+
+    def capture(name, v):
+        hi_ranges[name] = max(hi_ranges.get(name, 0.0), float(jnp.max(v)))
+        lo_ranges[name] = min(lo_ranges.get(name, 0.0), float(jnp.min(v)))
+
+    _ = float_forward(params, jnp.asarray(calib_x), capture)
+    q = {"input.oq": input_params}
+    for name in CONV_NAMES:
+        w = np.asarray(params[f"{name}.w"])  # OIHW
+        out_c = w.shape[0]
+        wq_params = calibrate_weights_symmetric(w)
+        wq = wq_params.quantize(w.reshape(out_c, -1))  # (out_c, K), (c,kh,kw)
+        oq = calibrate_minmax(lo_ranges[name], hi_ranges[name])
+        q[name] = {
+            "wq": wq, "wp": wq_params,
+            "b": np.asarray(params[f"{name}.b"]), "oq": oq,
+        }
+    for name in ADD_NAMES:
+        q[f"{name}.oq"] = calibrate_minmax(0.0, hi_ranges[name])
+    fcw = np.asarray(params["fc.w"])  # (classes, 4C)
+    fwp = calibrate_weights_symmetric(fcw)
+    q["fc"] = {"wq": fwp.quantize(fcw), "wp": fwp,
+               "b": np.asarray(params["fc.b"])}
+    return q
+
+
+# --------------------------------------------------------------------------
+# Quantized inference graph (lowered to HLO by aot.py)
+# --------------------------------------------------------------------------
+
+def _patches_nchw(xq, stride, pad_value):
+    """im2col with zero-point padding: xq int32 (B,C,H,W) ->
+    (B*OH*OW, C*9), (c, kh, kw) feature order (matches rust im2col)."""
+    xpad = jnp.pad(xq, ((0, 0), (0, 0), (1, 1), (1, 1)),
+                   constant_values=pad_value)
+    cols = jax.lax.conv_general_dilated_patches(
+        xpad.astype(jnp.float32),
+        filter_shape=(3, 3), window_strides=(stride, stride),
+        padding="VALID", dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    # (B, C*9, OH, OW), feature dim ordered (c, kh, kw).
+    bb, k, oh, ow = cols.shape
+    cols = jnp.transpose(cols, (0, 2, 3, 1)).reshape(bb * oh * ow, k)
+    return cols.astype(jnp.int32), (oh, ow)
+
+
+def quantized_forward(q, x_flat, *, hw: int, classes: int,
+                      mode: str = "pac", bits: int = 4,
+                      use_pallas: bool = True, block_m: int = 128,
+                      min_dp: int = 512):
+    """The AOT-exported graph: f32 (B, 3*hw*hw) pixels in [0,1] -> logits
+    f32 (B, classes).
+
+    mode: "pac" (hybrid Eq. 4) or "exact" (bit-serial baseline).
+    use_pallas: route GEMMs through the L1 Pallas kernels (default) or
+    the pure-jnp references (fallback / A-B testing).
+    min_dp: layers with DP length below this run exactly. The paper's PAC
+    operating range is DP >= 512 (Table 1 note d; every CONV/LINEAR layer
+    of its benchmarks qualifies); our substitute model has shorter early
+    layers, which stay digital — mirrored by the rust backend's
+    ``PacConfig::min_dp_len`` (512).
+    """
+    b = x_flat.shape[0]
+    inp: QuantParams = q["input.oq"]
+    x = x_flat.reshape(b, 3, hw, hw)
+    xq = jnp.clip(jnp.round(x / inp.scale) + inp.zero_point,
+                  0, 255).astype(jnp.int32)
+
+    first_done = [False]
+
+    def gemm(xcols, layer, h_params):
+        zpx_ = int(h_params.zero_point)
+        zpw_ = int(layer["wp"].zero_point)
+        wq = jnp.asarray(layer["wq"], jnp.int32).T  # (K, out_c)
+        if not first_done[0]:
+            # First layer always exact (standard D-CiM, paper 6.1).
+            first_done[0] = True
+            return exact_matmul_ref(xcols, wq, zpx_, zpw_)
+        if wq.shape[0] < min_dp:
+            # Below the PAC operating range: standard D-CiM.
+            return exact_matmul_ref(xcols, wq, zpx_, zpw_)
+        if mode == "pac":
+            if use_pallas:
+                return pac_matmul(xcols, wq, zpx=zpx_, zpw=zpw_,
+                                  bx=bits, bw=bits, block_m=block_m)
+            return pac_matmul_ref(xcols, wq, zpx_, zpw_, bx=bits, bw=bits)
+        if use_pallas:
+            return bitserial_matmul(xcols, wq, zpx=zpx_, zpw=zpw_,
+                                    block_m=block_m)
+        return exact_matmul_ref(xcols, wq, zpx_, zpw_)
+
+    def conv(name, h, h_params):
+        _, _, stride, relu = CONV_SPECS[name]
+        layer = q[name]
+        cols, (oh, ow) = _patches_nchw(h, stride, int(h_params.zero_point))
+        acc = gemm(cols, layer, h_params)
+        out_c = layer["wq"].shape[0]
+        oq: QuantParams = layer["oq"]
+        real = acc.astype(jnp.float32) * np.float32(h_params.scale * layer["wp"].scale) \
+            + jnp.asarray(layer["b"])
+        if relu:
+            real = jnp.maximum(real, 0.0)
+        y = jnp.clip(jnp.round(real / oq.scale) + oq.zero_point,
+                     0, 255).astype(jnp.int32)
+        y = y.reshape(b, oh, ow, out_c).transpose(0, 3, 1, 2)
+        return y, oq
+
+    h, hp = conv("stem", xq, inp)
+    for blk in ("block1", "block2", "block3"):
+        skip, skip_p = h, hp
+        h, hp = conv(f"{blk}.conv1", h, hp)
+        h, hp = conv(f"{blk}.conv2", h, hp)
+        oq: QuantParams = q[f"{blk}.add.oq"]
+        real = (h - hp.zero_point) * np.float32(hp.scale) \
+            + (skip - skip_p.zero_point) * np.float32(skip_p.scale)
+        real = jnp.maximum(real, 0.0)
+        h = jnp.clip(jnp.round(real / oq.scale) + oq.zero_point,
+                     0, 255).astype(jnp.int32)
+        hp = oq
+        if blk == "block1":
+            h, hp = conv("down1", h, hp)
+        elif blk == "block2":
+            h, hp = conv("down2", h, hp)
+    # Global average pool with round-nearest integer mean (rust exec.rs).
+    px = h.shape[2] * h.shape[3]
+    gap = (jnp.sum(h, axis=(2, 3)) + px // 2) // px  # (B, 4C) int32
+    fc = q["fc"]
+    wq = jnp.asarray(fc["wq"], jnp.int32).T
+    acc = exact_matmul_ref(gap, wq, int(hp.zero_point), int(fc["wp"].zero_point))
+    logits = acc.astype(jnp.float32) * np.float32(hp.scale * fc["wp"].scale) \
+        + jnp.asarray(fc["b"])
+    return logits

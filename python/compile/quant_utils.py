@@ -1,0 +1,54 @@
+"""uint8 affine quantization — the numerical contract shared with rust.
+
+Mirrors ``rust/src/quant/mod.rs`` bit-for-bit:
+
+    q = clamp(round(x / scale) + zero_point, 0, 255)
+    x = scale * (q - zero_point)
+
+Weights use symmetric "shifted-uint8" (zero point pinned to 128) so every
+weight bit-plane is well-defined for the CiM mapping; activations use
+asymmetric min-max calibration widened to include 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    scale: float
+    zero_point: int
+
+    def __post_init__(self):
+        assert self.scale > 0, "scale must be positive"
+        assert 0 <= self.zero_point <= 255, "uint8 zero point"
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        q = np.round(np.asarray(x, np.float64) / self.scale) + self.zero_point
+        return np.clip(q, 0, 255).astype(np.uint8)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        return (np.asarray(q, np.float32) - self.zero_point) * np.float32(self.scale)
+
+
+def calibrate_minmax(lo: float, hi: float) -> QuantParams:
+    """Min-max calibration, widened to include zero (rust: calibrate_minmax)."""
+    lo = min(lo, 0.0)
+    hi = max(hi, 0.0)
+    span = max(hi - lo, 1e-8)
+    scale = span / 255.0
+    zp = int(np.clip(round(-lo / scale), 0, 255))
+    return QuantParams(scale, zp)
+
+
+def calibrate_tensor(x: np.ndarray) -> QuantParams:
+    return calibrate_minmax(float(np.min(x)), float(np.max(x)))
+
+
+def calibrate_weights_symmetric(w: np.ndarray) -> QuantParams:
+    """Symmetric shifted-uint8 (zp = 128), rust: calibrate_weights_symmetric."""
+    max_abs = max(float(np.max(np.abs(w))), 1e-8)
+    return QuantParams(max_abs / 127.0, 128)

@@ -1,0 +1,93 @@
+"""AOT export pipeline tests: HLO text generation, weights.bin format,
+and (when artifacts exist) consistency of the exported files."""
+
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.aot import to_hlo_text, write_weights_bin
+from compile.datagen import INPUT_PARAMS, generate
+from compile.model import init_params, quantize_model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    def fn(a, b):
+        return (jnp.matmul(a, b) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_weights_bin_format(tmp_path):
+    x, _ = generate(8, hw=16, seed=21)
+    params = init_params(jax.random.PRNGKey(2), c=8, classes=10)
+    q = quantize_model(params, x, INPUT_PARAMS)
+    path = tmp_path / "weights.bin"
+    write_weights_bin(str(path), q)
+    raw = path.read_bytes()
+    assert raw[:4] == b"PACW"
+    version, n_entries = struct.unpack("<II", raw[4:12])
+    assert version == 1
+    # 1 input.oq + 9 convs x 3 + 3 add.oq + fc.w + fc.b = 33
+    assert n_entries == 33
+    # First entry name parses.
+    name_len = struct.unpack("<H", raw[12:14])[0]
+    name = raw[14:14 + name_len].decode()
+    assert name  # BTreeMap-ordering on the rust side doesn't care
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@needs_artifacts
+def test_manifest_files_exist():
+    man = {}
+    with open(os.path.join(ARTIFACTS, "manifest.txt")) as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                k, v = line.split(None, 1)
+                man[k] = v
+    for key in ("model_pac", "model_exact", "weights", "dataset", "pac_kernel"):
+        assert os.path.exists(os.path.join(ARTIFACTS, man[key])), key
+
+
+@needs_artifacts
+def test_exported_hlo_mentions_entry():
+    with open(os.path.join(ARTIFACTS, "model_pac.hlo.txt")) as f:
+        head = f.read(4000)
+    assert "HloModule" in head
+
+
+@needs_artifacts
+def test_trained_model_beats_chance_via_hlo_semantics():
+    """Re-run the quantized forward in python on the test split and check
+    accuracy clears chance by a wide margin (full accuracy eval happens in
+    the rust benches)."""
+    from compile.model import quantized_forward
+    from compile.train import train_cached
+
+    cache = os.path.join(ARTIFACTS, "train_cache.npz")
+    data = np.load(cache, allow_pickle=True)
+    params = {k: jnp.asarray(data[k]) for k in data.files
+              if k not in ("config_hash", "losses", "train_acc")}
+    x, y = generate(128, hw=32, n_classes=10, seed=8)  # = aot test split seed
+    q = quantize_model(params, x[:64], INPUT_PARAMS)
+    logits = quantized_forward(q, jnp.asarray(x.reshape(128, -1)),
+                               hw=32, classes=10, mode="pac")
+    acc = float(np.mean(np.argmax(np.asarray(logits), axis=1) == y))
+    assert acc > 0.5, f"PAC accuracy {acc} barely above chance"

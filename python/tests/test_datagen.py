@@ -1,0 +1,68 @@
+"""Synthetic dataset determinism + sanity."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.datagen import INPUT_PARAMS, generate, write_dataset_bin
+
+
+def test_deterministic():
+    a_x, a_y = generate(16, hw=16, seed=5)
+    b_x, b_y = generate(16, hw=16, seed=5)
+    np.testing.assert_array_equal(a_x, b_x)
+    np.testing.assert_array_equal(a_y, b_y)
+
+
+def test_different_seeds_differ():
+    a_x, _ = generate(4, hw=16, seed=1)
+    b_x, _ = generate(4, hw=16, seed=2)
+    assert not np.array_equal(a_x, b_x)
+
+
+def test_shapes_and_ranges():
+    x, y = generate(20, hw=32, n_classes=10, seed=3)
+    assert x.shape == (20, 3, 32, 32)
+    assert x.dtype == np.float32
+    assert float(x.min()) >= 0.0 and float(x.max()) <= 1.0
+    assert y.dtype == np.uint8
+    assert set(np.unique(y)) <= set(range(10))
+
+
+def test_labels_balanced():
+    _, y = generate(1000, hw=16, n_classes=10, seed=4)
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() >= 80 and counts.max() <= 120
+
+
+def test_100_class_variant():
+    x, y = generate(400, hw=16, n_classes=100, seed=6)
+    assert set(np.unique(y)) <= set(range(100))
+    assert len(np.unique(y)) > 80
+
+
+def test_classes_are_separable_by_mean_profile():
+    # Crude separability check: per-class mean images must differ clearly
+    # (a CNN will find much more).
+    x, y = generate(400, hw=16, n_classes=10, seed=7)
+    means = np.stack([x[y == k].mean(axis=0).ravel() for k in range(10)])
+    d = np.linalg.norm(means[:, None, :] - means[None, :, :], axis=2)
+    off_diag = d[~np.eye(10, dtype=bool)]
+    assert off_diag.min() > 0.5, float(off_diag.min())
+
+
+def test_dataset_bin_roundtrip(tmp_path):
+    x, y = generate(8, hw=16, n_classes=10, seed=9)
+    xq = INPUT_PARAMS.quantize(x)
+    p = tmp_path / "ds.bin"
+    write_dataset_bin(p, xq, y, 10)
+    raw = p.read_bytes()
+    assert raw[:4] == b"PACD"
+    n, c, h, w, ncls = np.frombuffer(raw[8:28], np.uint32)
+    assert (n, c, h, w, ncls) == (8, 3, 16, 16, 10)
+    imgs = np.frombuffer(raw[36:36 + 8 * 3 * 16 * 16], np.uint8)
+    np.testing.assert_array_equal(imgs, xq.ravel())

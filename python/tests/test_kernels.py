@@ -1,0 +1,153 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp/numpy oracle.
+
+Hypothesis sweeps shapes, zero points, operand widths and block sizes —
+the CORE correctness signal for the compute path (task: kernel == ref
+exactly; the PAC kernel is integer arithmetic, so equality is exact, not
+allclose).
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels.bitserial import bitserial_matmul
+from compile.kernels.pac_matmul import pac_matmul, vmem_bytes
+from compile.kernels.ref import (
+    bitserial_matmul_ref,
+    digital_pairs,
+    exact_matmul_ref,
+    pac_matmul_numpy,
+    sparsity_pairs,
+)
+
+
+def rand_mat(rng, m, k):
+    return rng.integers(0, 256, (m, k)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Structure of the computing map
+# ---------------------------------------------------------------------------
+
+def test_digital_pairs_default_is_16():
+    assert len(digital_pairs()) == 16
+    assert len(sparsity_pairs()) == 48
+    assert (7, 7) in digital_pairs()
+    assert (3, 3) not in digital_pairs()
+
+
+@pytest.mark.parametrize("b", [0, 1, 2, 4, 5, 8])
+def test_digital_pairs_partition(b):
+    assert len(digital_pairs(b, b)) == b * b
+    assert len(digital_pairs(b, b)) + len(sparsity_pairs(b, b)) == 64
+
+
+# ---------------------------------------------------------------------------
+# Exactness of the bit-serial identity (Eq. 1)
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 96),
+    n=st.integers(1, 16),
+    zpx=st.integers(0, 255),
+    zpw=st.integers(0, 255),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=40, deadline=None)
+def test_bitserial_ref_equals_exact(m, k, n, zpx, zpw, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand_mat(rng, m, k), rand_mat(rng, k, n)
+    got = np.asarray(bitserial_matmul_ref(x, w, zpx, zpw))
+    want = np.asarray(exact_matmul_ref(x, w, zpx, zpw))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracles (the hypothesis sweep the task mandates)
+# ---------------------------------------------------------------------------
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(2, 128),
+    n=st.integers(1, 24),
+    zpx=st.integers(0, 255),
+    zpw=st.sampled_from([0, 100, 128, 255]),
+    bits=st.sampled_from([2, 3, 4, 5, 6]),
+    block_m=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=30, deadline=None)
+def test_pac_pallas_equals_numpy_oracle(m, k, n, zpx, zpw, bits, block_m, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand_mat(rng, m, k), rand_mat(rng, k, n)
+    got = np.asarray(
+        pac_matmul(x, w, zpx=zpx, zpw=zpw, bx=bits, bw=bits, block_m=block_m)
+    )
+    want = pac_matmul_numpy(x, w, zpx, zpw, bx=bits, bw=bits)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    m=st.integers(1, 32),
+    k=st.integers(2, 96),
+    n=st.integers(1, 16),
+    zpx=st.integers(0, 255),
+    block_m=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=20, deadline=None)
+def test_bitserial_pallas_is_exact(m, k, n, zpx, block_m, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand_mat(rng, m, k), rand_mat(rng, k, n)
+    got = np.asarray(bitserial_matmul(x, w, zpx=zpx, zpw=128, block_m=block_m))
+    want = np.asarray(exact_matmul_ref(x, w, zpx, 128))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Approximation quality (paper §3.2 at the kernel level)
+# ---------------------------------------------------------------------------
+
+def test_pac_relative_error_below_1pct_at_dp_1024():
+    rng = np.random.default_rng(42)
+    x, w = rand_mat(rng, 64, 1024), rand_mat(rng, 1024, 32)
+    approx = np.asarray(pac_matmul(x, w, zpx=0, zpw=0)).astype(np.float64)
+    exact = np.asarray(exact_matmul_ref(x, w, 0, 0)).astype(np.float64)
+    rel = np.abs(approx - exact) / np.maximum(exact, 1)
+    assert np.median(rel) < 0.01, float(np.median(rel))
+
+
+def test_wider_operand_reduces_error():
+    rng = np.random.default_rng(43)
+    x, w = rand_mat(rng, 32, 512), rand_mat(rng, 512, 16)
+    exact = np.asarray(exact_matmul_ref(x, w, 0, 0)).astype(np.float64)
+    errs = []
+    for bits in (2, 4, 6):
+        approx = np.asarray(pac_matmul(x, w, zpx=0, zpw=0, bx=bits, bw=bits))
+        errs.append(float(np.abs(approx - exact).mean()))
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+def test_full_digital_operand_is_exact():
+    rng = np.random.default_rng(44)
+    x, w = rand_mat(rng, 16, 64), rand_mat(rng, 64, 8)
+    approx = np.asarray(pac_matmul(x, w, zpx=9, zpw=128, bx=8, bw=8))
+    exact = np.asarray(exact_matmul_ref(x, w, 9, 128))
+    np.testing.assert_array_equal(approx, exact)
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget (L1 perf contract, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def test_vmem_budget():
+    # Largest layer in tiny_resnet at block_m=128: K=576, N=64.
+    assert vmem_bytes(128, 576, 64) < 16 * 2**20
+    # And the biggest ResNet-18 CIFAR layer (K=4608, N=512) still fits.
+    assert vmem_bytes(128, 4608, 512) < 16 * 2**20

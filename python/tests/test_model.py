@@ -1,0 +1,89 @@
+"""L2 model tests: float model shapes/training signal, PTQ fidelity, the
+pallas/ref A-B equality on the full forward, and operand-width ordering."""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.datagen import INPUT_PARAMS, generate
+from compile.model import (
+    float_forward,
+    init_params,
+    quantize_model,
+    quantized_forward,
+)
+
+HW, C, CLASSES, B = 16, 8, 10, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = generate(32, hw=HW, n_classes=CLASSES, seed=11)
+    params = init_params(jax.random.PRNGKey(1), c=C, classes=CLASSES)
+    q = quantize_model(params, x[:16], INPUT_PARAMS)
+    return params, q, x, y
+
+
+def test_float_forward_shape(setup):
+    params, _, x, _ = setup
+    logits = float_forward(params, jnp.asarray(x[:B]))
+    assert logits.shape == (B, CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_quantized_exact_tracks_float(setup):
+    params, q, x, _ = setup
+    xf = x[:B].reshape(B, -1)
+    lq = np.asarray(quantized_forward(q, jnp.asarray(xf), hw=HW,
+                                      classes=CLASSES, mode="exact"))
+    lf = np.asarray(float_forward(params, jnp.asarray(x[:B])))
+    corr = np.corrcoef(lq.ravel(), lf.ravel())[0, 1]
+    assert corr > 0.9, corr
+
+
+def test_pallas_equals_ref_full_forward(setup):
+    _, q, x, _ = setup
+    xf = jnp.asarray(x[:B].reshape(B, -1))
+    for mode in ("pac", "exact"):
+        a = np.asarray(quantized_forward(q, xf, hw=HW, classes=CLASSES,
+                                         mode=mode, use_pallas=True))
+        b = np.asarray(quantized_forward(q, xf, hw=HW, classes=CLASSES,
+                                         mode=mode, use_pallas=False))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pac_forward_close_to_exact(setup):
+    _, q, x, _ = setup
+    xf = jnp.asarray(x[:B].reshape(B, -1))
+    pac = np.asarray(quantized_forward(q, xf, hw=HW, classes=CLASSES, mode="pac"))
+    exact = np.asarray(quantized_forward(q, xf, hw=HW, classes=CLASSES, mode="exact"))
+    # Quantized-logit agreement: same argmax on most rows for an
+    # untrained net is not guaranteed; assert bounded deviation instead.
+    scale = np.abs(exact).max() + 1e-6
+    assert np.abs(pac - exact).max() / scale < 0.6
+
+
+def test_operand_width_monotone(setup):
+    _, q, x, _ = setup
+    xf = jnp.asarray(x[:B].reshape(B, -1))
+    exact = np.asarray(quantized_forward(q, xf, hw=HW, classes=CLASSES, mode="exact"))
+    errs = []
+    for bits in (2, 4, 6):
+        pac = np.asarray(quantized_forward(q, xf, hw=HW, classes=CLASSES,
+                                           mode="pac", bits=bits))
+        errs.append(float(np.abs(pac - exact).mean()))
+    assert errs[0] >= errs[1] >= errs[2], errs
+
+
+def test_training_reduces_loss():
+    from compile.train import train
+    params, losses, acc = train(c=8, classes=10, hw=16, n_train=256,
+                                steps=60, batch=32, log_every=0,
+                                noise_finetune_steps=10, log=lambda *_: None)
+    assert np.mean(losses[:10]) > np.mean(losses[-10:]), "loss did not drop"

@@ -1,0 +1,143 @@
+//! Fig. 6 — DNN inference accuracy.
+//!
+//! (a) PAC approximation of the 8-bit model vs native low-bit PTQ
+//!     ("QAT" in the paper; we use PTQ-at-b-bits as the low-bit baseline —
+//!     DESIGN.md §3) across approximate operand widths;
+//! (b) dynamic workload configuration: average bit-serial cycles vs
+//!     accuracy across threshold sets.
+//!
+//! Requires artifacts (skips gracefully otherwise).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{banner, eval_accuracy, row, Checks};
+use pacim::arch::ThresholdSet;
+use pacim::nn::{exact_backend, pac_backend, Model, Op, PacConfig};
+use pacim::pac::ComputeMap;
+
+const EVAL_N: usize = 256;
+
+/// Snap a trained uint8 model to b-bit weights+activations (PTQ-at-b):
+/// the low-bit baseline of Fig. 6(a).
+fn low_bit_model(model: &Model, bits: u32) -> Model {
+    let mut m = model.clone();
+    let snap = |q: u8, zp: i32| -> u8 {
+        // Keep zp representable: quantize the offset from zp on a b-bit
+        // grid spanning the uint8 range.
+        let step = 1 << (8 - bits);
+        let v = q as i32 - zp;
+        let snapped = ((v + (step >> 1)) / step) * step;
+        (zp + snapped).clamp(0, 255) as u8
+    };
+    for op in &mut m.ops {
+        match op {
+            Op::Conv2d(c) => {
+                let zp = c.wparams.zero_point;
+                for w in c.weight.data_mut() {
+                    *w = snap(*w, zp);
+                }
+            }
+            Op::Linear(l) => {
+                let zp = l.wparams.zero_point;
+                for w in l.weight.data_mut() {
+                    *w = snap(*w, zp);
+                }
+            }
+            _ => {}
+        }
+    }
+    m
+}
+
+fn main() {
+    banner("Fig. 6", "Inference accuracy: PAC vs low-bit baselines; dynamic config");
+    let Some((_, model, ds)) = harness::try_artifacts() else {
+        println!("  artifacts missing; run `make artifacts` first.");
+        return;
+    };
+    let mut checks = Checks::new();
+
+    let exact = exact_backend(&model);
+    let (acc8, _) = eval_accuracy(&model, &exact, &ds, EVAL_N);
+    println!("  baseline exact 8b/8b accuracy: {:.2}%  ({} images)", acc8 * 100.0, EVAL_N);
+
+    // ---- (a) operand-width sweep ----------------------------------------
+    println!("\n  (a) PAC approximation vs low-bit PTQ (paper: ImageNet/ResNet-18)");
+    println!("      paper reference points: PAC-4b 66.02% vs QAT-4b 59.71% (8b = 68.76%)");
+    let mut pac_accs = Vec::new();
+    let mut ptq_accs = Vec::new();
+    for bits in [2u32, 3, 4, 5, 6] {
+        let cfg = PacConfig {
+            map: ComputeMap::operand_based(bits, bits),
+            ..PacConfig::default()
+        };
+        let pac = pac_backend(&model, cfg);
+        let (acc_pac, _) = eval_accuracy(&model, &pac, &ds, EVAL_N);
+        let low = low_bit_model(&model, bits);
+        let lb = exact_backend(&low);
+        let (acc_ptq, _) = eval_accuracy(&low, &lb, &ds, EVAL_N);
+        pac_accs.push(acc_pac);
+        ptq_accs.push(acc_ptq);
+        println!(
+            "      {bits}-bit:  PAC {:6.2}%   PTQ-{bits}b {:6.2}%   (8b exact {:5.2}%)",
+            acc_pac * 100.0,
+            acc_ptq * 100.0,
+            acc8 * 100.0
+        );
+    }
+    // Paper's qualitative claims: PAC-4b beats native 4-bit by a wide
+    // margin; PAC-5b ~ recovers the 8-bit baseline; PAC accuracy is
+    // monotone-ish in operand width.
+    let pac4 = pac_accs[2];
+    let ptq4 = ptq_accs[2];
+    let pac5 = pac_accs[3];
+    checks.claim(pac4 > ptq4, "PAC-4b beats native 4-bit quantization");
+    checks.claim(acc8 - pac5 < 0.02, "PAC-5b within 1-2% of the 8-bit baseline (paper: <1%)");
+    checks.claim(pac_accs[4] >= pac_accs[1], "wider approximate operands do not hurt");
+
+    // ---- (b) dynamic workload configuration ------------------------------
+    println!("\n  (b) dynamic workload configuration (paper: avg 12 cycles at <=1% loss)");
+    let cfg4 = PacConfig::default();
+    let pac4b = pac_backend(&model, cfg4);
+    let (acc_static, _) = eval_accuracy(&model, &pac4b, &ds, EVAL_N);
+    println!("      static 16-cycle:       acc {:6.2}%", acc_static * 100.0);
+    let mut best: Option<(f64, f64)> = None;
+    for (th, label) in [
+        (ThresholdSet::new(0.03, 0.06, 0.12), "conservative"),
+        (ThresholdSet::new(0.06, 0.12, 0.25), "moderate"),
+        (ThresholdSet::new(0.10, 0.20, 0.35), "aggressive"),
+        (ThresholdSet::new(0.20, 0.35, 0.55), "very aggressive"),
+    ] {
+        let cfg = PacConfig {
+            thresholds: Some(th),
+            ..PacConfig::default()
+        };
+        let pac = pac_backend(&model, cfg);
+        let (acc, stats) = eval_accuracy(&model, &pac, &ds, EVAL_N);
+        let cycles = stats.levels.average_cycles();
+        println!(
+            "      {label:<16} acc {:6.2}%  avg digital cycles {:5.2}  (loss {:+.2}%)",
+            acc * 100.0,
+            cycles,
+            (acc - acc_static) * 100.0
+        );
+        if acc_static - acc <= 0.011 {
+            let better = match best {
+                Some((c, _)) => cycles < c,
+                None => true,
+            };
+            if better {
+                best = Some((cycles, acc));
+            }
+        }
+    }
+    if let Some((cycles, acc)) = best {
+        row("best <=1%-loss configuration", "12 cycles", &format!("{cycles:.2} cycles @ {:.2}%", acc * 100.0));
+        checks.claim(cycles < 16.0, "dynamic config reduces cycles at <=1% accuracy loss");
+        checks.claim(cycles <= 14.5, "reaches <=14.5 avg cycles (paper: 12)");
+    } else {
+        checks.claim(false, "some threshold set stays within 1% accuracy loss");
+    }
+    checks.finish("Fig. 6");
+}

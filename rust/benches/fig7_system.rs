@@ -1,0 +1,84 @@
+//! Fig. 7 — system analysis of PACiM.
+//!
+//! (a) bit-serial cycle reduction (64 → 16 static → ~12 dynamic);
+//! (b) cache-access reduction vs channel length (40% @64ch → 50% deep);
+//! (c) single-bank area/power breakdown (CnM ≈ 10% area / 30% power;
+//!     buffer >50% of CnM area, ~70% of its power).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{banner, row, Checks};
+use pacim::coordinator::{schedule_model, ScheduleConfig};
+use pacim::energy::area::AreaModel;
+use pacim::memory::traffic::reduction_vs_channels;
+use pacim::workload::{resnet18, Resolution};
+
+fn main() {
+    banner("Fig. 7", "System analysis: cycles, memory access, area/power");
+    let mut checks = Checks::new();
+    let shapes = resnet18(Resolution::Cifar, 10);
+
+    // ---- (a) bit-serial cycles -------------------------------------------
+    println!("  (a) bit-serial cycles on ResNet-18 (CIFAR shapes)");
+    let dig = schedule_model(&shapes, &ScheduleConfig::digital_baseline());
+    let stat = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+    let dyn_ = schedule_model(&shapes, &ScheduleConfig::pacim_dynamic());
+    let (cd, cs, cy) = (
+        dig.total_macs_cycles(),
+        stat.total_macs_cycles(),
+        dyn_.total_macs_cycles(),
+    );
+    row("digital 8b/8b cycles", "1.00x", &format!("{cd}"));
+    row("PACiM static 4-bit", "-75%", &format!("{cs} ({:+.1}%)", 100.0 * (cs as f64 / cd as f64 - 1.0)));
+    row("PACiM dynamic", "-81%", &format!("{cy} ({:+.1}%)", 100.0 * (cy as f64 / cd as f64 - 1.0)));
+    checks.claim((cs as f64 / cd as f64 - 0.25).abs() < 1e-9, "static map removes 75% of cycles");
+    checks.claim((cy as f64 / cd as f64 - 0.1875).abs() < 1e-9, "dynamic config removes 81% of cycles");
+
+    // ---- (b) memory access vs channel length -----------------------------
+    println!("\n  (b) activation cache-access reduction vs channel length (4-bit MSB)");
+    let rs = reduction_vs_channels(&[16, 32, 64, 128, 256, 512, 1024, 2048], 4);
+    for (c, r) in &rs {
+        let bar = "#".repeat((r * 80.0).max(0.0) as usize);
+        println!("      C={c:<5} {:5.1}%  {bar}", r * 100.0);
+    }
+    let at64 = rs.iter().find(|(c, _)| *c == 64).unwrap().1;
+    let deep = rs.last().unwrap().1;
+    row("reduction @ 64 channels", "40%", &format!("{:.1}%", at64 * 100.0));
+    row("reduction, deep layers", "up to 50%", &format!("{:.1}%", deep * 100.0));
+    checks.claim((0.37..0.45).contains(&at64), "≈40% reduction at 64 channels");
+    checks.claim(deep > 0.47, "approaches 50% in deep layers");
+    let whole = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+    let net_red = whole.act_traffic_reduction();
+    row("whole-net activation traffic (ResNet-18)", "40-50%", &format!("{:.1}%", net_red * 100.0));
+    checks.claim((0.38..0.52).contains(&net_red), "whole-network reduction in the 40-50% band");
+
+    // ---- (c) area / power breakdown ---------------------------------------
+    println!("\n  (c) single-bank area/power breakdown (65nm calibration)");
+    let am = AreaModel::default();
+    let b = am.breakdown();
+    let total_area: f64 = b.area_um2.iter().map(|(_, a)| a).sum();
+    for ((name, a), (_, p)) in b.area_um2.iter().zip(&b.power_frac) {
+        println!(
+            "      {name:<14} area {:8.0} um2 ({:4.1}%)   power {:4.1}%",
+            a,
+            100.0 * a / total_area,
+            p * 100.0
+        );
+    }
+    let cnm_area: f64 = b.area_um2.iter().filter(|(n, _)| n.starts_with("CnM")).map(|(_, a)| a).sum();
+    let cnm_power: f64 = b.power_frac.iter().filter(|(n, _)| n.starts_with("CnM")).map(|(_, p)| p).sum();
+    row("CnM area share", "10%", &format!("{:.1}%", 100.0 * cnm_area / total_area));
+    row("CnM power share", "30%", &format!("{:.1}%", cnm_power * 100.0));
+    let buf_area = b.area_um2.iter().find(|(n, _)| *n == "CnM buffer").unwrap().1;
+    let buf_power = b.power_frac.iter().find(|(n, _)| *n == "CnM buffer").unwrap().1;
+    row("buffer share of CnM area", ">50%", &format!("{:.1}%", 100.0 * buf_area / cnm_area));
+    row("buffer share of CnM power", "70%", &format!("{:.1}%", 100.0 * buf_power / cnm_power));
+    checks.claim((100.0 * cnm_area / total_area - 10.0).abs() < 0.5, "CnM ≈ 10% of bank area");
+    checks.claim((cnm_power - 0.30).abs() < 1e-9, "CnM ≈ 30% of bank power");
+    checks.claim(buf_area / cnm_area > 0.5, "buffer > 50% of CnM area");
+    checks.claim((buf_power / cnm_power - 0.70).abs() < 1e-9, "buffer ≈ 70% of CnM power");
+    row("multi-bank CnM area (buffer removed)", "most of buffer gone",
+        &format!("{:.0} um2 vs {:.0}", am.multibank_cnm_um2(), am.cnm_total_um2()));
+    checks.finish("Fig. 7");
+}

@@ -1,0 +1,114 @@
+//! Shared bench harness (criterion is unavailable offline; `cargo bench`
+//! runs these as `harness = false` binaries).
+//!
+//! Each bench regenerates one table/figure of the paper and prints the
+//! paper-reported value next to the measured one. `timeit` provides
+//! criterion-style micro-timing for the perf bench.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Print a bench banner.
+pub fn banner(id: &str, title: &str) {
+    println!("\n================================================================");
+    println!("  {id} — {title}");
+    println!("================================================================");
+}
+
+/// Print a paper-vs-measured row.
+pub fn row(label: &str, paper: &str, measured: &str) {
+    println!("  {label:<42} paper: {paper:>14}   ours: {measured:>14}");
+}
+
+/// Simple check reporting (benches should not panic mid-table; they
+/// collect failures and exit non-zero at the end).
+pub struct Checks {
+    failures: Vec<String>,
+}
+
+impl Checks {
+    pub fn new() -> Self {
+        Self { failures: Vec::new() }
+    }
+
+    pub fn claim(&mut self, ok: bool, what: &str) {
+        if ok {
+            println!("  [ok]   {what}");
+        } else {
+            println!("  [FAIL] {what}");
+            self.failures.push(what.to_string());
+        }
+    }
+
+    pub fn finish(self, id: &str) {
+        if self.failures.is_empty() {
+            println!("  => {id}: all qualitative claims reproduced\n");
+        } else {
+            println!("  => {id}: {} claim(s) FAILED: {:?}\n", self.failures.len(), self.failures);
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Micro-timing: median of `reps` runs of `f`, returning (median_s, out).
+pub fn timeit<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    assert!(reps >= 1);
+    let mut times = Vec::with_capacity(reps);
+    let mut out = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        out = Some(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (times[times.len() / 2], out.unwrap())
+}
+
+/// Throughput pretty-printer.
+pub fn rate(n: f64, seconds: f64, unit: &str) -> String {
+    let r = n / seconds;
+    if r > 1e9 {
+        format!("{:.2} G{unit}/s", r / 1e9)
+    } else if r > 1e6 {
+        format!("{:.2} M{unit}/s", r / 1e6)
+    } else if r > 1e3 {
+        format!("{:.2} k{unit}/s", r / 1e3)
+    } else {
+        format!("{r:.2} {unit}/s")
+    }
+}
+
+/// Load artifacts if present (accuracy benches degrade gracefully).
+pub fn try_artifacts() -> Option<(
+    pacim::runtime::Manifest,
+    pacim::nn::Model,
+    pacim::workload::Dataset,
+)> {
+    let dir = pacim::runtime::manifest::artifacts_dir();
+    let man = match pacim::runtime::Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("  (artifacts not built: {e}; skipping measured rows)");
+            return None;
+        }
+    };
+    let store = pacim::nn::WeightStore::load(man.path("weights").ok()?).ok()?;
+    let ds = pacim::workload::Dataset::load(man.path("dataset").ok()?).ok()?;
+    let model = pacim::nn::tiny_resnet(&store, ds.h, ds.n_classes).ok()?;
+    Some((man, model, ds))
+}
+
+/// Evaluate accuracy over the first `n` dataset images.
+pub fn eval_accuracy<B: pacim::nn::MacBackend + Sync>(
+    model: &pacim::nn::Model,
+    backend: &B,
+    ds: &pacim::workload::Dataset,
+    n: usize,
+) -> (f64, pacim::nn::RunStats) {
+    let n = n.min(ds.n);
+    let images: Vec<&[u8]> = (0..n).map(|i| ds.image(i)).collect();
+    let labels: Vec<usize> = (0..n).map(|i| ds.label(i)).collect();
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    pacim::nn::evaluate(model, backend, &images, &labels, threads)
+}

@@ -1,0 +1,121 @@
+//! §Perf — hot-path micro/macro benchmarks (EXPERIMENTS.md §Perf).
+//!
+//! L3 hot paths: BitPlanes decomposition, the digital AND-popcount cycle,
+//! the full hybrid MAC, the PAC conv backend on a realistic layer, and
+//! (when artifacts exist) PJRT end-to-end batch latency + serving
+//! throughput. Hand-rolled timing (criterion unavailable offline).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{banner, rate, timeit};
+use pacim::nn::{MacBackend, PacConfig, RunStats};
+use pacim::pac::{hybrid_mac, BitPlanes, ComputeMap, PcuRounding};
+use pacim::tensor::Tensor;
+use pacim::util::rng::Rng;
+
+fn main() {
+    banner("§Perf", "hot-path throughput");
+    let mut rng = Rng::new(77);
+
+    // --- BitPlanes decomposition -----------------------------------------
+    let v: Vec<u8> = (0..4096).map(|_| rng.below(256) as u8).collect();
+    let (t, _) = timeit(30, || BitPlanes::from_u8(&v));
+    println!("  BitPlanes::from_u8 (4096 elems):   {:>10.2} us  ({})",
+             t * 1e6, rate(4096.0, t, "elem"));
+
+    // --- hybrid MAC (Eq. 4) -----------------------------------------------
+    let map = ComputeMap::operand_based(4, 4);
+    for n in [256usize, 1024, 4096] {
+        let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let xp = BitPlanes::from_u8(&x);
+        let wp = BitPlanes::from_u8(&w);
+        let (t, _) = timeit(50, || hybrid_mac(&xp, &wp, &map, PcuRounding::RoundNearest));
+        println!("  hybrid_mac DP={n:<5}:              {:>10.2} us  ({} MAC-equiv)",
+                 t * 1e6, rate(n as f64, t, ""));
+    }
+
+    // --- PAC conv backend on a ResNet-ish layer ----------------------------
+    // K=1152 (3x3x128), N=64 channels, 256 patches (16x16 output tile).
+    let k = 1152;
+    let n_oc = 64;
+    let patches = 256;
+    let wq: Vec<u8> = (0..n_oc * k).map(|_| rng.below(256) as u8).collect();
+    let weight = Tensor::from_vec(&[n_oc, k], wq);
+    let mut backend = pac_backend_for(&weight);
+    let patch_data: Vec<Vec<u8>> = (0..patches)
+        .map(|_| (0..k).map(|_| rng.below(256) as u8).collect())
+        .collect();
+    let mut stats = RunStats::default();
+    let (t, _) = timeit(5, || {
+        for p in &patch_data {
+            std::hint::black_box(backend.gemm(0, p, 7, &mut stats));
+        }
+    });
+    let macs = (patches * n_oc * k) as f64;
+    println!("  PAC conv layer (K=1152,N=64,256px): {:>9.2} ms  ({} hybrid-MAC)",
+             t * 1e3, rate(macs, t, ""));
+    let _ = &mut backend;
+
+    // --- PJRT end-to-end (artifacts required) ------------------------------
+    if let Some((man, _, ds)) = harness::try_artifacts() {
+        use pacim::runtime::PjrtExecutor;
+        let batch = man.batch().unwrap();
+        let in_elems = man.input_elems().unwrap();
+        let classes = man.classes().unwrap();
+        let exe = PjrtExecutor::load(man.path("model_pac").unwrap(), batch, in_elems, classes)
+            .expect("compile");
+        let mut flat = vec![0f32; batch * in_elems];
+        for i in 0..batch {
+            for (j, &q) in ds.image(i).iter().enumerate() {
+                flat[i * in_elems + j] = ds.params.dequantize(q);
+            }
+        }
+        exe.run(&flat).unwrap(); // warm-up
+        let (t, _) = timeit(10, || exe.run(&flat).unwrap());
+        println!("  PJRT model_pac batch={batch}:          {:>9.2} ms  ({})",
+                 t * 1e3, rate(batch as f64, t, "img"));
+
+        // Serving loop throughput (mock-free, real PJRT).
+        use pacim::coordinator::{BatchPolicy, InferenceServer};
+        let hlo = man.path("model_pac").unwrap();
+        let server = InferenceServer::start_with(
+            move || PjrtExecutor::load(&hlo, batch, in_elems, classes),
+            BatchPolicy::default(),
+        )
+        .unwrap();
+        let h = server.handle();
+        let imgs: Vec<Vec<f32>> = (0..64.min(ds.n))
+            .map(|i| ds.image(i).iter().map(|&q| ds.params.dequantize(q)).collect())
+            .collect();
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for chunk in imgs.chunks(8) {
+                let h = h.clone();
+                let chunk = chunk.to_vec();
+                s.spawn(move || {
+                    for img in chunk {
+                        h.infer(img).unwrap();
+                    }
+                });
+            }
+        });
+        let serve_t = t0.elapsed().as_secs_f64();
+        let mut m = server.stop();
+        println!("  serving {} reqs:                   {:>9.2} ms  ({}, p50 {:.0} us, batch occ {:.1})",
+                 imgs.len(), serve_t * 1e3, rate(imgs.len() as f64, serve_t, "img"),
+                 m.latency_percentile_us(50.0), m.mean_batch_occupancy());
+    }
+    println!();
+}
+
+fn pac_backend_for(weight: &Tensor<u8>) -> pacim::nn::PacBackend {
+    let mut b = pacim::nn::PacBackend::new(PacConfig {
+        first_layer_exact: false,
+        min_dp_len: 0,
+        ..PacConfig::default()
+    });
+    b.prepare(0, weight, 128);
+    b
+}

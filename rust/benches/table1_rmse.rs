@@ -1,0 +1,59 @@
+//! Table 1 — "Error of State-of-the-Art Approximate Methods".
+//!
+//! Measures the binary-MAC-cycle RMSE (%) of each behavioral baseline and
+//! of PAC under a common Monte-Carlo protocol (DP 1024, typical sparsity),
+//! plus the PAC band over DP 512–4096 (the paper's note d).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{banner, row, Checks};
+use pacim::baselines::{
+    measure_rmse_pct, AnalogLsb, ApproxAdderTree, ExactDigital, OsaHcim, PacMethod,
+};
+use pacim::pac::PcuRounding;
+
+const N: usize = 1024;
+const ITERS: u64 = 20_000;
+const SX: f64 = 0.3;
+const SW: f64 = 0.5;
+
+fn main() {
+    banner("Table 1", "RMSE of approximate methods (DP=1024, Sx=0.3, Sw=0.5)");
+    let mut checks = Checks::new();
+
+    let exact = measure_rmse_pct(&ExactDigital, N, SX, SW, 1000, 1);
+    let adder = measure_rmse_pct(&ApproxAdderTree::calibrated(N, 0.04), N, SX, SW, ITERS, 2);
+    let diana = measure_rmse_pct(&AnalogLsb::diana(N), N, SX, SW, ITERS, 3);
+    let osa = measure_rmse_pct(&OsaHcim { dp_len: N }, N, SX, SW, ITERS, 4);
+    let pac = measure_rmse_pct(
+        &PacMethod { rounding: PcuRounding::RoundNearest },
+        N, SX, SW, ITERS, 5,
+    );
+
+    row("D-CiM (exact reference)", "0", &format!("{exact:.3}%"));
+    row("Approximate adder tree (ISSCC'22 [29])", "4.0/6.8%", &format!("{adder:.2}%"));
+    row("Analog + ADC (ISSCC'22 [26], DIANA)", "3.5-4.8%", &format!("{diana:.2}%"));
+    row("Hybrid CiM (ASP-DAC'24 [4], OSA-HCIM)", "8.5%", &format!("{osa:.2}%"));
+    row("PAC / sparsity (this work)", "0.3-1.0%", &format!("{pac:.3}%"));
+
+    println!("\n  PAC band over the paper's DP range (note d):");
+    let mut band = Vec::new();
+    for (i, &dp) in [512usize, 1024, 2048, 4096].iter().enumerate() {
+        let r = measure_rmse_pct(
+            &PacMethod { rounding: PcuRounding::RoundNearest },
+            dp, SX, SW, ITERS, 10 + i as u64,
+        );
+        println!("    DP {dp:>5}: {r:.3}%");
+        band.push(r);
+    }
+
+    checks.claim(exact == 0.0, "exact digital reference has zero error");
+    checks.claim((0.2..1.0).contains(&pac), "PAC RMSE in the 0.3-1.0% band at DP 1024");
+    checks.claim(band.iter().all(|&r| r < 1.05), "PAC < ~1% across DP 512-4096");
+    checks.claim(band.windows(2).all(|w| w[1] < w[0]), "PAC RMSE decreases with DP length");
+    checks.claim(adder / pac >= 4.0, "PAC >= 4x better than the approximate adder tree");
+    checks.claim(diana / pac >= 4.0, "PAC >= 4x better than analog H-CiM");
+    checks.claim(osa > diana && diana > pac, "error ordering OSA > DIANA > PAC holds");
+    checks.finish("Table 1");
+}

@@ -1,0 +1,207 @@
+//! Bank logic: saliency speculation and dynamic workload configuration
+//! (§5, Eq. 5, Fig. 6(b)).
+//!
+//! PACiM knows the bit-level sparsity of the *input* activations before
+//! broadcasting them, so it can speculate on each output's magnitude:
+//! `SPEC = Σ_p 2^p · Sx[p]` — a weighted sum of the input sparsity. Low
+//! SPEC ⇒ the output is likely small ⇒ its MAC tolerates more
+//! approximation ⇒ digital cycles can be transferred to the sparsity
+//! domain. A threshold set `[TH0, TH1, TH2]` over the normalized score
+//! selects one of four levels: 10/12/14/16 digital cycles.
+
+use crate::pac::compute_map::DynamicLevel;
+
+/// Normalized speculation thresholds, ascending, each in [0, 1].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThresholdSet {
+    pub th0: f64,
+    pub th1: f64,
+    pub th2: f64,
+}
+
+impl ThresholdSet {
+    pub fn new(th0: f64, th1: f64, th2: f64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&th0) && th0 <= th1 && th1 <= th2 && th2 <= 1.0,
+            "thresholds must be ascending in [0,1]: {th0} {th1} {th2}"
+        );
+        Self { th0, th1, th2 }
+    }
+
+    /// A configuration that disables dynamic adaptation (everything runs
+    /// the full 16-cycle map).
+    pub fn disabled() -> Self {
+        Self {
+            th0: 0.0,
+            th1: 0.0,
+            th2: 0.0,
+        }
+    }
+
+    /// Default operating point used in the Fig. 6(b) reproduction: tuned
+    /// on the synthetic validation split for ≈12-cycle average at ≤1%
+    /// accuracy loss (see `bench fig6_accuracy`).
+    pub fn default_cifar() -> Self {
+        Self {
+            th0: 0.08,
+            th1: 0.16,
+            th2: 0.30,
+        }
+    }
+}
+
+/// Raw speculation score (Eq. 5): `Σ_p 2^p · Sx[p]`. Note this equals the
+/// element sum of the activation group — the same quantity the zero-point
+/// correction uses, so the hardware computes it once.
+pub fn spec_score(sx: &[u32; 8]) -> u64 {
+    (0..8).map(|p| (sx[p] as u64) << p).sum()
+}
+
+/// Normalized SPEC ∈ [0, 1]: raw score / (n · 255) — the maximum possible
+/// element sum of an n-element UINT8 group.
+pub fn spec_normalized(sx: &[u32; 8], n: u32) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    spec_score(sx) as f64 / (n as f64 * 255.0)
+}
+
+/// Classify a normalized SPEC against the thresholds (§5):
+/// > TH2 → 16 cycles; (TH1, TH2] → 14; (TH0, TH1] → 12; ≤ TH0 → 10.
+pub fn classify(spec: f64, th: &ThresholdSet) -> DynamicLevel {
+    if spec > th.th2 {
+        DynamicLevel::Cycles16
+    } else if spec > th.th1 {
+        DynamicLevel::Cycles14
+    } else if spec > th.th0 {
+        DynamicLevel::Cycles12
+    } else {
+        DynamicLevel::Cycles10
+    }
+}
+
+/// Tally of dynamic-level decisions across a layer/model run — backs the
+/// Fig. 6(b)/Fig. 7(a) average-cycle numbers.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LevelHistogram {
+    pub c10: u64,
+    pub c12: u64,
+    pub c14: u64,
+    pub c16: u64,
+}
+
+impl LevelHistogram {
+    pub fn record(&mut self, level: DynamicLevel) {
+        match level {
+            DynamicLevel::Cycles10 => self.c10 += 1,
+            DynamicLevel::Cycles12 => self.c12 += 1,
+            DynamicLevel::Cycles14 => self.c14 += 1,
+            DynamicLevel::Cycles16 => self.c16 += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.c10 + self.c12 + self.c14 + self.c16
+    }
+
+    /// Average digital cycles per output (paper: 12 at the chosen
+    /// thresholds on CIFAR-100).
+    pub fn average_cycles(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        (10 * self.c10 + 12 * self.c12 + 14 * self.c14 + 16 * self.c16) as f64 / t as f64
+    }
+
+    /// Reduction vs a fully digital 64-cycle 8b/8b MAC (Fig. 7(a): 81%
+    /// at the average level of 12).
+    pub fn cycle_reduction_vs_digital(&self) -> f64 {
+        1.0 - self.average_cycles() / 64.0
+    }
+
+    pub fn merge(&mut self, other: &LevelHistogram) {
+        self.c10 += other.c10;
+        self.c12 += other.c12;
+        self.c14 += other.c14;
+        self.c16 += other.c16;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_equals_element_sum() {
+        use crate::pac::sparsity::BitPlanes;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(80);
+        let v: Vec<u8> = (0..300).map(|_| rng.below(256) as u8).collect();
+        let bp = BitPlanes::from_u8(&v);
+        let direct: u64 = v.iter().map(|&x| x as u64).sum();
+        assert_eq!(spec_score(&bp.pop), direct);
+    }
+
+    #[test]
+    fn normalization_bounds() {
+        // All-255 group: normalized SPEC = 1. All-zero: 0.
+        let n = 64u32;
+        let all_on = [n; 8];
+        assert!((spec_normalized(&all_on, n) - 1.0).abs() < 1e-12);
+        assert_eq!(spec_normalized(&[0; 8], n), 0.0);
+    }
+
+    #[test]
+    fn classify_levels() {
+        let th = ThresholdSet::new(0.1, 0.2, 0.4);
+        assert_eq!(classify(0.05, &th), DynamicLevel::Cycles10);
+        assert_eq!(classify(0.15, &th), DynamicLevel::Cycles12);
+        assert_eq!(classify(0.3, &th), DynamicLevel::Cycles14);
+        assert_eq!(classify(0.9, &th), DynamicLevel::Cycles16);
+        // Boundary: exactly TH0 goes down.
+        assert_eq!(classify(0.1, &th), DynamicLevel::Cycles10);
+    }
+
+    #[test]
+    fn disabled_thresholds_always_full() {
+        let th = ThresholdSet::disabled();
+        for s in [0.0001, 0.5, 1.0] {
+            assert_eq!(classify(s, &th), DynamicLevel::Cycles16);
+        }
+        // Exactly zero is the one ≤TH0 case; inputs with SPEC=0 have
+        // all-zero activations and produce zero regardless of level.
+        assert_eq!(classify(0.0, &th), DynamicLevel::Cycles10);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn bad_thresholds_rejected() {
+        let _ = ThresholdSet::new(0.5, 0.2, 0.8);
+    }
+
+    #[test]
+    fn histogram_average() {
+        let mut h = LevelHistogram::default();
+        for _ in 0..2 {
+            h.record(DynamicLevel::Cycles10);
+        }
+        for _ in 0..2 {
+            h.record(DynamicLevel::Cycles14);
+        }
+        assert_eq!(h.average_cycles(), 12.0);
+        // Paper Fig. 7(a): avg 12 cycles ⇒ 81% reduction vs 64.
+        assert!((h.cycle_reduction_vs_digital() - 0.8125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LevelHistogram::default();
+        a.record(DynamicLevel::Cycles16);
+        let mut b = LevelHistogram::default();
+        b.record(DynamicLevel::Cycles10);
+        a.merge(&b);
+        assert_eq!(a.total(), 2);
+        assert_eq!(a.average_cycles(), 13.0);
+    }
+}

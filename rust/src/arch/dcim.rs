@@ -1,0 +1,249 @@
+//! D-CiM bank model (§4.3, Fig. 5 ①).
+//!
+//! A 256×256 6T-SRAM digital CiM array in the style of ISSCC'21 [6]:
+//! 64 multi-bit weight columns (MWCs) of 4 bits each, wordline/input
+//! drivers broadcasting one activation bit-plane per cycle, NOR-gate
+//! dot-product cells, and a 256-input adder tree per column group.
+//!
+//! With the PAC operand split, only the `weight_bits` MSB columns exist
+//! physically (LSB columns eliminated, §4.1); one **bit-serial cycle**
+//! broadcasts activation plane `p` and reduces the AND with weight plane
+//! `q` across all rows of every MWC simultaneously.
+//!
+//! The model is *bit-true* (the adder tree output is exact) and keeps
+//! cycle/write statistics for the energy composition.
+
+use crate::util::{and_popcount, pack_bits_u64, words_for};
+
+/// Static configuration of one D-CiM bank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DCimConfig {
+    /// SRAM rows = maximum DP length per column pass.
+    pub rows: usize,
+    /// Multi-bit weight columns (output channels resident at once).
+    pub mwcs: usize,
+    /// Physical weight bits stored per MWC (MSBs; 4 after LSB elimination).
+    pub weight_bits: u32,
+}
+
+impl Default for DCimConfig {
+    fn default() -> Self {
+        Self {
+            rows: 256,
+            mwcs: 64,
+            weight_bits: 4,
+        }
+    }
+}
+
+impl DCimConfig {
+    /// Physical SRAM columns = MWCs × stored weight bits.
+    pub fn columns(&self) -> usize {
+        self.mwcs * self.weight_bits as usize
+    }
+}
+
+/// Cycle/energy-relevant event counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DCimStats {
+    /// Bit-serial compute cycles executed (one = one (p,q) broadcast
+    /// across the whole array).
+    pub bit_serial_cycles: u64,
+    /// Equivalent binary MAC ops delivered (cycles × active rows × MWCs).
+    pub binary_ops: u64,
+    /// SRAM row-writes performed by weight updates.
+    pub weight_row_writes: u64,
+}
+
+/// One D-CiM bank holding packed weight bit-planes.
+#[derive(Debug, Clone)]
+pub struct DCimBank {
+    pub config: DCimConfig,
+    /// `planes[mwc][q_rel]` = packed plane of stored weight bit
+    /// `q = 8 - weight_bits + q_rel` over the rows.
+    planes: Vec<Vec<Vec<u64>>>,
+    /// Rows occupied by the currently loaded weights (DP length).
+    active_rows: usize,
+    /// Loaded MWC count (≤ config.mwcs).
+    active_mwcs: usize,
+    pub stats: DCimStats,
+}
+
+impl DCimBank {
+    pub fn new(config: DCimConfig) -> Self {
+        Self {
+            config,
+            planes: Vec::new(),
+            active_rows: 0,
+            active_mwcs: 0,
+            stats: DCimStats::default(),
+        }
+    }
+
+    /// Lowest weight bit index stored physically.
+    pub fn min_weight_bit(&self) -> usize {
+        8 - self.config.weight_bits as usize
+    }
+
+    /// Load weights: `weights[mwc]` is the UINT8 weight vector of one
+    /// output channel (length = DP segment ≤ rows). Only the MSB planes
+    /// are written — the LSBs have no columns to live in.
+    pub fn load_weights(&mut self, weights: &[Vec<u8>]) {
+        assert!(
+            weights.len() <= self.config.mwcs,
+            "{} MWCs exceed bank capacity {}",
+            weights.len(),
+            self.config.mwcs
+        );
+        let rows = weights.first().map_or(0, |w| w.len());
+        assert!(rows <= self.config.rows, "DP segment {rows} exceeds {} rows", self.config.rows);
+        for w in weights {
+            assert_eq!(w.len(), rows, "ragged weight load");
+        }
+        let min_bit = self.min_weight_bit();
+        self.planes = weights
+            .iter()
+            .map(|w| {
+                (min_bit..8)
+                    .map(|q| {
+                        let bits: Vec<u8> = w.iter().map(|&v| (v >> q) & 1).collect();
+                        pack_bits_u64(&bits)
+                    })
+                    .collect()
+            })
+            .collect();
+        self.active_rows = rows;
+        self.active_mwcs = weights.len();
+        // Each weight bit of each row is one SRAM cell write; the column
+        // write drivers update a full row per cycle.
+        self.stats.weight_row_writes +=
+            (rows * weights.len()) as u64 * self.config.weight_bits as u64;
+    }
+
+    pub fn active_rows(&self) -> usize {
+        self.active_rows
+    }
+
+    pub fn active_mwcs(&self) -> usize {
+        self.active_mwcs
+    }
+
+    /// Execute one bit-serial cycle: broadcast packed activation plane
+    /// `x_plane` (over `active_rows` rows) against stored weight bit `q`,
+    /// returning the adder-tree output (DP count) of every active MWC.
+    ///
+    /// Panics if `q` addresses an eliminated LSB column — by construction
+    /// the compute map never routes such cycles to the digital domain.
+    pub fn bit_serial_cycle(&mut self, x_plane: &[u64], q: usize) -> Vec<u32> {
+        assert!(
+            q >= self.min_weight_bit() && q < 8,
+            "weight bit {q} not stored (columns {}..7 only)",
+            self.min_weight_bit()
+        );
+        assert_eq!(x_plane.len(), words_for(self.active_rows));
+        let q_rel = q - self.min_weight_bit();
+        let out: Vec<u32> = self
+            .planes
+            .iter()
+            .map(|mwc| and_popcount(x_plane, &mwc[q_rel]))
+            .collect();
+        self.stats.bit_serial_cycles += 1;
+        self.stats.binary_ops += (self.active_rows * self.active_mwcs) as u64;
+        out
+    }
+
+    /// Reset statistics (weights stay loaded).
+    pub fn reset_stats(&mut self) {
+        self.stats = DCimStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn pack_plane(x: &[u8], p: usize) -> Vec<u64> {
+        let bits: Vec<u8> = x.iter().map(|&v| (v >> p) & 1).collect();
+        pack_bits_u64(&bits)
+    }
+
+    #[test]
+    fn config_columns() {
+        let c = DCimConfig::default();
+        assert_eq!(c.columns(), 256);
+    }
+
+    #[test]
+    fn cycle_matches_naive_dp() {
+        let mut rng = Rng::new(50);
+        let rows = 200;
+        let weights: Vec<Vec<u8>> = (0..8)
+            .map(|_| (0..rows).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        let mut bank = DCimBank::new(DCimConfig::default());
+        bank.load_weights(&weights);
+        let x: Vec<u8> = (0..rows).map(|_| rng.below(256) as u8).collect();
+        for p in 0..8 {
+            let xp = pack_plane(&x, p);
+            for q in 4..8 {
+                let got = bank.bit_serial_cycle(&xp, q);
+                for (mwc, w) in weights.iter().enumerate() {
+                    let want: u32 = x
+                        .iter()
+                        .zip(w)
+                        .map(|(&a, &b)| (((a >> p) & 1) & ((b >> q) & 1)) as u32)
+                        .sum();
+                    assert_eq!(got[mwc], want, "p={p} q={q} mwc={mwc}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stats_count_cycles_and_ops() {
+        let mut bank = DCimBank::new(DCimConfig::default());
+        bank.load_weights(&[vec![255u8; 100], vec![1u8; 100]]);
+        assert_eq!(bank.stats.weight_row_writes, 2 * 100 * 4);
+        let xp = pack_plane(&[7u8; 100], 0);
+        bank.bit_serial_cycle(&xp, 7);
+        bank.bit_serial_cycle(&xp, 6);
+        assert_eq!(bank.stats.bit_serial_cycles, 2);
+        assert_eq!(bank.stats.binary_ops, 2 * 100 * 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not stored")]
+    fn lsb_column_access_panics() {
+        let mut bank = DCimBank::new(DCimConfig::default());
+        bank.load_weights(&[vec![0u8; 10]]);
+        let xp = pack_plane(&[0u8; 10], 0);
+        bank.bit_serial_cycle(&xp, 3); // LSB column was eliminated
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed")]
+    fn overloading_mwcs_panics() {
+        let mut bank = DCimBank::new(DCimConfig {
+            rows: 16,
+            mwcs: 2,
+            weight_bits: 4,
+        });
+        bank.load_weights(&[vec![0u8; 4], vec![0u8; 4], vec![0u8; 4]]);
+    }
+
+    #[test]
+    fn full_precision_variant_stores_all_bits() {
+        // weight_bits = 8 models the baseline (no LSB elimination).
+        let mut bank = DCimBank::new(DCimConfig {
+            rows: 64,
+            mwcs: 4,
+            weight_bits: 8,
+        });
+        bank.load_weights(&[vec![0xAB; 64]]);
+        assert_eq!(bank.min_weight_bit(), 0);
+        let xp = pack_plane(&[255u8; 64], 0);
+        let got = bank.bit_serial_cycle(&xp, 0);
+        assert_eq!(got[0], 64); // 0xAB bit0 = 1 on all rows
+    }
+}

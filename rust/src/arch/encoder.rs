@@ -1,0 +1,235 @@
+//! On-die sparsity encoder (§4.5, Fig. 5 ③).
+//!
+//! Converts 8-bit activations coming off the BN/AF/quant pipeline into
+//! sparsity format: eight counters track the number of '1's at each bit
+//! index over an *encoding group*. For CONV layers the group is one output
+//! pixel across all channels (pixel-wise); for LINEAR layers it is the
+//! whole layer (layer-wise). When a group's MACs span multiple weight
+//! tiles in a single-bank system, the intermediate encoding buffer
+//! checkpoints the counters across weight updates; a multi-bank schedule
+//! eliminates the buffer entirely.
+
+/// Encoding granularity (§4.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EncodingMode {
+    /// CONV: one group per output pixel, across channels.
+    PixelWise,
+    /// LINEAR: one group for the whole layer's activations.
+    LayerWise,
+}
+
+/// Counter state — what the intermediate encoding buffer stores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EncoderState {
+    pub counters: [u32; 8],
+    pub count: u32,
+}
+
+/// Statistics for energy accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EncoderStats {
+    /// Activations pushed through the counters.
+    pub encoded_values: u64,
+    /// Counter checkpoints to the intermediate buffer.
+    pub buffer_saves: u64,
+    /// Counter restores from the intermediate buffer.
+    pub buffer_restores: u64,
+    /// Finalized groups emitted to cache.
+    pub groups_emitted: u64,
+}
+
+/// The on-die sparsity encoder.
+#[derive(Debug, Clone)]
+pub struct SparsityEncoder {
+    pub mode: EncodingMode,
+    state: EncoderState,
+    /// Intermediate encoding buffer (single-bank systems only).
+    buffer: Option<EncoderState>,
+    pub stats: EncoderStats,
+}
+
+impl SparsityEncoder {
+    pub fn new(mode: EncodingMode) -> Self {
+        Self {
+            mode,
+            state: EncoderState::default(),
+            buffer: None,
+            stats: EncoderStats::default(),
+        }
+    }
+
+    /// Feed one 8-bit activation into the counters.
+    #[inline]
+    pub fn push(&mut self, value: u8) {
+        let mut bits = value;
+        while bits != 0 {
+            let p = bits.trailing_zeros() as usize;
+            self.state.counters[p] += 1;
+            bits &= bits - 1;
+        }
+        self.state.count += 1;
+        self.stats.encoded_values += 1;
+    }
+
+    pub fn push_slice(&mut self, values: &[u8]) {
+        for &v in values {
+            self.push(v);
+        }
+    }
+
+    /// Current counter snapshot without finalizing.
+    pub fn peek(&self) -> EncoderState {
+        self.state
+    }
+
+    /// Checkpoint the counters to the intermediate encoding buffer — used
+    /// when a weight update interrupts a group (§4.5 "Intermediate
+    /// Encoding Buffer").
+    pub fn save_to_buffer(&mut self) {
+        self.buffer = Some(self.state);
+        self.state = EncoderState::default();
+        self.stats.buffer_saves += 1;
+    }
+
+    /// Resume encoding from the buffered state.
+    pub fn restore_from_buffer(&mut self) {
+        let buffered = self
+            .buffer
+            .take()
+            .expect("restore_from_buffer without a prior save");
+        // Merge the (normally empty) current state into the restored one,
+        // mirroring the configurable counter-load path of the RTL.
+        for p in 0..8 {
+            self.state.counters[p] += buffered.counters[p];
+        }
+        self.state.count += buffered.count;
+        self.stats.buffer_restores += 1;
+    }
+
+    /// Finalize the current group: emit its sparsity vector and reset.
+    pub fn finalize_group(&mut self) -> EncoderState {
+        let out = self.state;
+        self.state = EncoderState::default();
+        self.stats.groups_emitted += 1;
+        out
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = EncoderStats::default();
+    }
+}
+
+/// Encode a CONV layer output tensor (CHW, already quantized to u8)
+/// pixel-wise: returns one sparsity vector per pixel (count over C).
+pub fn encode_conv_output(
+    chw: &[u8],
+    channels: usize,
+    pixels: usize,
+    enc: &mut SparsityEncoder,
+) -> Vec<EncoderState> {
+    assert_eq!(chw.len(), channels * pixels);
+    assert_eq!(enc.mode, EncodingMode::PixelWise);
+    let mut out = Vec::with_capacity(pixels);
+    for pix in 0..pixels {
+        for c in 0..channels {
+            enc.push(chw[c * pixels + pix]);
+        }
+        out.push(enc.finalize_group());
+    }
+    out
+}
+
+/// Encode a LINEAR layer output layer-wise: one sparsity vector total.
+pub fn encode_linear_output(values: &[u8], enc: &mut SparsityEncoder) -> EncoderState {
+    assert_eq!(enc.mode, EncodingMode::LayerWise);
+    enc.push_slice(values);
+    enc.finalize_group()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pac::sparsity::bit_sparsity_counts;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn counters_match_popcounts() {
+        let mut rng = Rng::new(70);
+        let vals: Vec<u8> = (0..500).map(|_| rng.below(256) as u8).collect();
+        let mut enc = SparsityEncoder::new(EncodingMode::LayerWise);
+        let st = encode_linear_output(&vals, &mut enc);
+        assert_eq!(st.counters, bit_sparsity_counts(&vals));
+        assert_eq!(st.count, 500);
+        assert_eq!(enc.stats.groups_emitted, 1);
+    }
+
+    #[test]
+    fn pixel_wise_groups_across_channels() {
+        // 3 channels × 4 pixels, CHW layout.
+        let chw = [
+            0b0001u8, 0b0010, 0b0100, 0b1000, // c0
+            0b0001, 0b0000, 0b0100, 0b0000, // c1
+            0b0001, 0b0010, 0b0000, 0b0000, // c2
+        ];
+        let mut enc = SparsityEncoder::new(EncodingMode::PixelWise);
+        let groups = encode_conv_output(&chw, 3, 4, &mut enc);
+        assert_eq!(groups.len(), 4);
+        // Pixel 0: values {1,1,1} → counters[0] = 3.
+        assert_eq!(groups[0].counters[0], 3);
+        assert_eq!(groups[0].count, 3);
+        // Pixel 1: {2,0,2} → counters[1] = 2.
+        assert_eq!(groups[1].counters[1], 2);
+        // Pixel 3: {8,0,0} → counters[3] = 1.
+        assert_eq!(groups[3].counters[3], 1);
+    }
+
+    #[test]
+    fn buffer_checkpoint_resumes_exactly() {
+        // Encoding interrupted by a weight update must produce the same
+        // group as uninterrupted encoding.
+        let mut rng = Rng::new(71);
+        let vals: Vec<u8> = (0..300).map(|_| rng.below(256) as u8).collect();
+
+        let mut uninterrupted = SparsityEncoder::new(EncodingMode::LayerWise);
+        uninterrupted.push_slice(&vals);
+        let want = uninterrupted.finalize_group();
+
+        let mut interrupted = SparsityEncoder::new(EncodingMode::LayerWise);
+        interrupted.push_slice(&vals[..137]);
+        interrupted.save_to_buffer(); // weight update happens here
+        interrupted.restore_from_buffer();
+        interrupted.push_slice(&vals[137..]);
+        let got = interrupted.finalize_group();
+
+        assert_eq!(got, want);
+        assert_eq!(interrupted.stats.buffer_saves, 1);
+        assert_eq!(interrupted.stats.buffer_restores, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "without a prior save")]
+    fn restore_without_save_panics() {
+        let mut enc = SparsityEncoder::new(EncodingMode::LayerWise);
+        enc.restore_from_buffer();
+    }
+
+    #[test]
+    fn finalize_resets_state() {
+        let mut enc = SparsityEncoder::new(EncodingMode::LayerWise);
+        enc.push(0xFF);
+        let g1 = enc.finalize_group();
+        assert_eq!(g1.counters, [1; 8]);
+        let g2 = enc.finalize_group();
+        assert_eq!(g2.counters, [0; 8]);
+        assert_eq!(g2.count, 0);
+    }
+
+    #[test]
+    fn zero_values_count_toward_group_size() {
+        let mut enc = SparsityEncoder::new(EncodingMode::LayerWise);
+        enc.push_slice(&[0, 0, 0]);
+        let g = enc.finalize_group();
+        assert_eq!(g.count, 3);
+        assert_eq!(g.counters, [0; 8]);
+    }
+}

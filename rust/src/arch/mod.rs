@@ -1,0 +1,300 @@
+//! The PACiM bank architecture model (§4, Fig. 5).
+//!
+//! Composes the D-CiM array ([`dcim`]), the CnM PAC computation engine
+//! ([`pcu`]), the on-die sparsity encoder ([`encoder`]) and the bank
+//! logic's dynamic workload configuration ([`bank_logic`]) into a
+//! *bit-true, cycle-accounted* model of one PACiM bank: weights resident
+//! in the array (4-bit MSB) and in the PCU sparsity registers, input
+//! activations arriving as 4-bit MSB planes + 8 sparsity counts, outputs
+//! produced per multi-bit weight column (MWC).
+//!
+//! `nn::pac_exec` uses a flattened fast path for full-network runs; the
+//! integration tests cross-check the two against each other, MAC by MAC.
+
+pub mod bank_logic;
+pub mod dcim;
+pub mod encoder;
+pub mod multibank;
+pub mod pcu;
+pub mod tuner;
+
+pub use bank_logic::{classify, spec_normalized, spec_score, LevelHistogram, ThresholdSet};
+pub use dcim::{DCimBank, DCimConfig, DCimStats};
+pub use encoder::{EncodingMode, SparsityEncoder};
+pub use multibank::{schedule_network_multibank, MultiBankConfig, MultiBankReport};
+pub use pcu::{Pce, PceStats, Pcu};
+pub use tuner::{candidate_grid, tune, TunePoint, TuneResult};
+
+use crate::pac::compute_map::DynamicLevel;
+use crate::pac::sparsity::BitPlanes;
+use crate::pac::{ComputeMap, PcuRounding};
+
+/// Bank-level configuration.
+#[derive(Debug, Clone)]
+pub struct BankConfig {
+    pub dcim: DCimConfig,
+    /// PCUs in the PCE (6 matches one 64-accumulator bank, §6.2).
+    pub n_pcus: usize,
+    /// Base compute map (operand-based 4×4 by default).
+    pub map: ComputeMap,
+    /// Dynamic workload thresholds (None/disabled ⇒ always the base map).
+    pub thresholds: Option<ThresholdSet>,
+    pub rounding: PcuRounding,
+}
+
+impl Default for BankConfig {
+    fn default() -> Self {
+        Self {
+            dcim: DCimConfig::default(),
+            n_pcus: 6,
+            map: ComputeMap::operand_based(4, 4),
+            thresholds: None,
+            rounding: PcuRounding::RoundNearest,
+        }
+    }
+}
+
+/// Combined event counters of one bank.
+#[derive(Debug, Clone, Default)]
+pub struct BankStats {
+    pub dcim: DCimStats,
+    pub pce: PceStats,
+    pub levels: LevelHistogram,
+}
+
+impl BankStats {
+    /// Average digital bit-serial cycles per output MAC (Fig. 7(a)).
+    pub fn avg_digital_cycles(&self) -> f64 {
+        if self.levels.total() > 0 {
+            self.levels.average_cycles()
+        } else if self.pce.pcu_ops > 0 || self.dcim.bit_serial_cycles > 0 {
+            // Static map: derive from the cycle tally.
+            self.dcim.bit_serial_cycles as f64
+                / (self.pce.pcu_ops as f64 / 48.0).max(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One PACiM bank: D-CiM array + PCE + output accumulators.
+pub struct PacimBank {
+    pub config: BankConfig,
+    dcim: DCimBank,
+    pce: Pce,
+    /// Weight sparsity per resident MWC (the PCE register contents).
+    w_sparsity: Vec<[u32; 8]>,
+    /// Raw weight element sums per MWC (for zero-point correction).
+    w_sums: Vec<i64>,
+    dp_len: usize,
+    pub stats: BankStats,
+}
+
+impl PacimBank {
+    pub fn new(config: BankConfig) -> Self {
+        let dcim = DCimBank::new(config.dcim);
+        let pce = Pce::new(config.n_pcus, config.rounding);
+        Self {
+            config,
+            dcim,
+            pce,
+            w_sparsity: Vec::new(),
+            w_sums: Vec::new(),
+            dp_len: 0,
+            stats: BankStats::default(),
+        }
+    }
+
+    /// Load one weight tile: `weights[mwc]` = UINT8 weight vector
+    /// (DP segment) of one output channel. MSBs go to the array, full
+    /// sparsity counts to the PCE registers.
+    pub fn load_weights(&mut self, weights: &[Vec<u8>]) {
+        self.dcim.load_weights(weights);
+        self.dp_len = weights.first().map_or(0, |w| w.len());
+        self.w_sparsity = weights
+            .iter()
+            .map(|w| BitPlanes::from_u8(w).pop)
+            .collect();
+        self.w_sums = weights
+            .iter()
+            .map(|w| w.iter().map(|&v| v as i64).sum())
+            .collect();
+        if self.dp_len > 0 {
+            self.pce.load_weights(&self.w_sparsity, self.dp_len as u32);
+        }
+    }
+
+    pub fn dp_len(&self) -> usize {
+        self.dp_len
+    }
+
+    /// Weight element sums of the resident MWCs (zero-point correction).
+    pub fn weight_sums(&self) -> &[i64] {
+        &self.w_sums
+    }
+
+    /// Process one input DP vector against all resident MWCs, returning
+    /// the raw (uint-domain) hybrid MAC per MWC plus the level used.
+    ///
+    /// The input arrives exactly as the architecture receives it: MSB
+    /// bit-planes in binary + the 8 sparsity counts from the upstream
+    /// encoder. We take the full vector and decompose internally (the
+    /// LSB planes are used only to *emulate nothing* — digital cycles are
+    /// restricted to stored MSB columns by the compute map).
+    pub fn compute(&mut self, x: &[u8]) -> (Vec<i64>, DynamicLevel) {
+        assert_eq!(x.len(), self.dp_len, "input length != loaded DP length");
+        let xp = BitPlanes::from_u8(x);
+        // --- bank logic: dynamic workload configuration (§5) ---
+        let level = match &self.config.thresholds {
+            Some(th) => {
+                let spec = spec_normalized(&xp.pop, self.dp_len as u32);
+                let lvl = classify(spec, th);
+                self.stats.levels.record(lvl);
+                lvl
+            }
+            None => DynamicLevel::Cycles16,
+        };
+        let map = if self.config.thresholds.is_some() {
+            level.map()
+        } else {
+            self.config.map.clone()
+        };
+
+        // --- digital domain: bit-serial cycles over the D-CiM array ---
+        let mwcs = self.dcim.active_mwcs();
+        let mut digital = vec![0i64; mwcs];
+        for p in 0..8 {
+            for q in 0..8 {
+                if map.is_digital(p, q) {
+                    let dps = self.dcim.bit_serial_cycle(&xp.planes[p], q);
+                    for (m, &dp) in dps.iter().enumerate() {
+                        digital[m] += (dp as i64) << (p + q);
+                    }
+                }
+            }
+        }
+
+        // --- sparsity domain: PCE over the sparsity registers ---
+        let approx =
+            self.pce
+                .compute_all(&self.w_sparsity, self.dp_len as u32, &xp.pop, &map);
+
+        self.stats.dcim = self.dcim.stats;
+        self.stats.pce = self.pce.stats;
+
+        (
+            digital
+                .iter()
+                .zip(&approx)
+                .map(|(&d, &a)| d + a)
+                .collect(),
+            level,
+        )
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.dcim.reset_stats();
+        self.pce.reset_stats();
+        self.stats = BankStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pac::mac::hybrid_mac;
+    use crate::util::rng::Rng;
+
+    fn random_weights(rng: &mut Rng, mwcs: usize, n: usize) -> Vec<Vec<u8>> {
+        (0..mwcs)
+            .map(|_| (0..n).map(|_| rng.below(256) as u8).collect())
+            .collect()
+    }
+
+    #[test]
+    fn bank_matches_hybrid_mac_reference() {
+        // The structural bank model and the flat pac::hybrid_mac kernel
+        // must agree exactly — two independent implementations of Eq. 4.
+        let mut rng = Rng::new(90);
+        let n = 200;
+        let ws = random_weights(&mut rng, 16, n);
+        let mut bank = PacimBank::new(BankConfig::default());
+        bank.load_weights(&ws);
+        let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let (got, level) = bank.compute(&x);
+        assert_eq!(level, DynamicLevel::Cycles16);
+        let xp = BitPlanes::from_u8(&x);
+        let map = ComputeMap::operand_based(4, 4);
+        for (m, w) in ws.iter().enumerate() {
+            let wp = BitPlanes::from_u8(w);
+            let want = hybrid_mac(&xp, &wp, &map, PcuRounding::RoundNearest);
+            assert_eq!(got[m], want.value, "mwc {m}");
+        }
+    }
+
+    #[test]
+    fn digital_cycles_counted_per_broadcast() {
+        let mut rng = Rng::new(91);
+        let ws = random_weights(&mut rng, 8, 64);
+        let mut bank = PacimBank::new(BankConfig::default());
+        bank.load_weights(&ws);
+        let x: Vec<u8> = (0..64).map(|_| rng.below(256) as u8).collect();
+        bank.compute(&x);
+        // 16 digital (p,q) pairs = 16 broadcasts regardless of MWC count.
+        assert_eq!(bank.stats.dcim.bit_serial_cycles, 16);
+        // 48 sparsity cycles per MWC.
+        assert_eq!(bank.stats.pce.pcu_ops, 48 * 8);
+    }
+
+    #[test]
+    fn dynamic_level_engages_for_sparse_input() {
+        let mut rng = Rng::new(92);
+        let ws = random_weights(&mut rng, 4, 128);
+        let mut cfg = BankConfig::default();
+        cfg.thresholds = Some(ThresholdSet::new(0.05, 0.15, 0.3));
+        let mut bank = PacimBank::new(cfg);
+        bank.load_weights(&ws);
+        // Nearly-zero input → SPEC ≈ 0 → minimal level.
+        let x = vec![0u8; 128];
+        let (_, level) = bank.compute(&x);
+        assert_eq!(level, DynamicLevel::Cycles10);
+        // Dense input → full level.
+        let x = vec![255u8; 128];
+        let (_, level) = bank.compute(&x);
+        assert_eq!(level, DynamicLevel::Cycles16);
+        assert_eq!(bank.stats.levels.total(), 2);
+    }
+
+    #[test]
+    fn weight_sums_support_zero_point_correction() {
+        let mut rng = Rng::new(93);
+        let ws = random_weights(&mut rng, 3, 50);
+        let mut bank = PacimBank::new(BankConfig::default());
+        bank.load_weights(&ws);
+        for (m, w) in ws.iter().enumerate() {
+            let want: i64 = w.iter().map(|&v| v as i64).sum();
+            assert_eq!(bank.weight_sums()[m], want);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "input length")]
+    fn wrong_input_length_panics() {
+        let mut bank = PacimBank::new(BankConfig::default());
+        bank.load_weights(&[vec![0u8; 10]]);
+        bank.compute(&[0u8; 11]);
+    }
+
+    #[test]
+    fn reset_stats_clears_everything() {
+        let mut rng = Rng::new(94);
+        let ws = random_weights(&mut rng, 2, 32);
+        let mut bank = PacimBank::new(BankConfig::default());
+        bank.load_weights(&ws);
+        let x: Vec<u8> = (0..32).map(|_| rng.below(256) as u8).collect();
+        bank.compute(&x);
+        bank.reset_stats();
+        assert_eq!(bank.stats.dcim.bit_serial_cycles, 0);
+        assert_eq!(bank.stats.pce.pcu_ops, 0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Multi-bank system model (§4.5 "Tiling Multiple Banks").
+//!
+//! A single-bank PACiM must checkpoint the sparsity encoder across weight
+//! updates (the intermediate encoding buffer — >50% of CnM area, ~70% of
+//! its power, Fig. 7(c)). Tiling multiple banks lets the scheduler stage
+//! weight updates so that, at any time, the banks covering one output
+//! group are resident together: encoding never interrupts, the buffer
+//! disappears, and weight-update latency hides behind compute on the
+//! other banks.
+//!
+//! This module models that schedule: given a layer's tile grid
+//! (`row_tiles × oc_tiles`) and a bank count, it produces the steady-state
+//! schedule, counts buffer checkpoints (zero when the DP tiles of a group
+//! fit the bank set), and quantifies the §4.5 claim that multi-bank tiling
+//! eliminates the intermediate encoding buffer.
+
+use crate::workload::shapes::LayerShape;
+
+/// Multi-bank configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiBankConfig {
+    pub banks: usize,
+    /// Rows per bank (DP segment per pass).
+    pub rows: usize,
+    /// MWCs per bank.
+    pub mwcs: usize,
+}
+
+impl Default for MultiBankConfig {
+    fn default() -> Self {
+        Self {
+            banks: 4,
+            rows: 256,
+            mwcs: 64,
+        }
+    }
+}
+
+/// Outcome of scheduling one layer onto the bank set.
+#[derive(Debug, Clone)]
+pub struct MultiBankSchedule {
+    pub layer: String,
+    pub row_tiles: usize,
+    pub oc_tiles: usize,
+    /// Weight-update *rounds*: groups of tile loads that execute while
+    /// other banks compute.
+    pub update_rounds: usize,
+    /// Encoder checkpoints to the intermediate buffer (single-bank would
+    /// need one per weight update that interrupts a group).
+    pub buffer_checkpoints: u64,
+    /// True when the layer's full DP (all row tiles) is bank-resident at
+    /// once, so encoding never pauses.
+    pub encoding_uninterrupted: bool,
+}
+
+/// Schedule one layer onto `cfg.banks` banks.
+///
+/// Strategy (the §4.5 staging): all `row_tiles` of a DP column group are
+/// placed on distinct banks so an output group's partial sums are
+/// produced in one pass. Output-channel tiles rotate through the
+/// remaining bank capacity; their weight updates are staged during the
+/// compute of resident tiles.
+pub fn schedule_layer_multibank(shape: &LayerShape, cfg: &MultiBankConfig) -> MultiBankSchedule {
+    let k = shape.dp_len();
+    let row_tiles = (k + cfg.rows - 1) / cfg.rows;
+    let oc_tiles = (shape.geom.out_c + cfg.mwcs - 1) / cfg.mwcs;
+    let pixels = shape.out_pixels() as u64;
+
+    if row_tiles <= cfg.banks {
+        // The whole DP is resident: each output group completes without a
+        // weight update in between; oc tiles rotate between groups, with
+        // updates overlapped (double-buffered rows) — no checkpoints.
+        let rounds = oc_tiles.div_ceil(cfg.banks / row_tiles.max(1)).max(1);
+        MultiBankSchedule {
+            layer: shape.name.clone(),
+            row_tiles,
+            oc_tiles,
+            update_rounds: rounds,
+            buffer_checkpoints: 0,
+            encoding_uninterrupted: true,
+        }
+    } else {
+        // DP longer than the bank set: a group's accumulation must pause
+        // while the remaining row tiles are loaded — each pause is one
+        // encoder checkpoint per in-flight output group (pixel).
+        let passes = row_tiles.div_ceil(cfg.banks);
+        MultiBankSchedule {
+            layer: shape.name.clone(),
+            row_tiles,
+            oc_tiles,
+            update_rounds: passes * oc_tiles,
+            buffer_checkpoints: (passes as u64 - 1) * pixels,
+            encoding_uninterrupted: false,
+        }
+    }
+}
+
+/// System-level summary over a whole network.
+#[derive(Debug, Clone, Default)]
+pub struct MultiBankReport {
+    pub schedules: Vec<MultiBankSchedule>,
+}
+
+impl MultiBankReport {
+    pub fn total_checkpoints(&self) -> u64 {
+        self.schedules.iter().map(|s| s.buffer_checkpoints).sum()
+    }
+
+    /// Fraction of layers whose encoding runs uninterrupted.
+    pub fn uninterrupted_fraction(&self) -> f64 {
+        if self.schedules.is_empty() {
+            return 1.0;
+        }
+        self.schedules.iter().filter(|s| s.encoding_uninterrupted).count() as f64
+            / self.schedules.len() as f64
+    }
+
+    /// §4.5 claim: the intermediate encoding buffer can be removed iff no
+    /// layer needs checkpoints.
+    pub fn buffer_removable(&self) -> bool {
+        self.total_checkpoints() == 0
+    }
+}
+
+pub fn schedule_network_multibank(
+    shapes: &[LayerShape],
+    cfg: &MultiBankConfig,
+) -> MultiBankReport {
+    MultiBankReport {
+        schedules: shapes
+            .iter()
+            .map(|s| schedule_layer_multibank(s, cfg))
+            .collect(),
+    }
+}
+
+/// Smallest bank count that removes the buffer for a whole network.
+pub fn min_banks_for_buffer_removal(shapes: &[LayerShape], rows: usize, mwcs: usize) -> usize {
+    let max_row_tiles = shapes
+        .iter()
+        .map(|s| (s.dp_len() + rows - 1) / rows)
+        .max()
+        .unwrap_or(1);
+    let _ = mwcs;
+    max_row_tiles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::shapes::{resnet18, Resolution};
+
+    #[test]
+    fn small_layer_never_checkpoints() {
+        let l = LayerShape::conv("s", 16, 32, 16, 3, 1); // k=144 < 256
+        let s = schedule_layer_multibank(&l, &MultiBankConfig::default());
+        assert_eq!(s.row_tiles, 1);
+        assert!(s.encoding_uninterrupted);
+        assert_eq!(s.buffer_checkpoints, 0);
+    }
+
+    #[test]
+    fn single_bank_long_dp_checkpoints_per_pixel() {
+        // k = 4608 → 18 row tiles; 1 bank → 18 passes → 17 checkpoints
+        // per output pixel.
+        let l = LayerShape::conv("d", 512, 512, 7, 3, 1);
+        let cfg = MultiBankConfig { banks: 1, ..Default::default() };
+        let s = schedule_layer_multibank(&l, &cfg);
+        assert_eq!(s.row_tiles, 18);
+        assert!(!s.encoding_uninterrupted);
+        assert_eq!(s.buffer_checkpoints, 17 * l.out_pixels() as u64);
+    }
+
+    #[test]
+    fn enough_banks_remove_buffer_entirely() {
+        // §4.5: multi-bank tiling eliminates intermediate encoding buffers.
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let need = min_banks_for_buffer_removal(&shapes, 256, 64);
+        let cfg = MultiBankConfig { banks: need, ..Default::default() };
+        let rep = schedule_network_multibank(&shapes, &cfg);
+        assert!(rep.buffer_removable(), "checkpoints: {}", rep.total_checkpoints());
+        assert_eq!(rep.uninterrupted_fraction(), 1.0);
+    }
+
+    #[test]
+    fn single_bank_needs_buffer_on_resnet18() {
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let cfg = MultiBankConfig { banks: 1, ..Default::default() };
+        let rep = schedule_network_multibank(&shapes, &cfg);
+        assert!(!rep.buffer_removable());
+        assert!(rep.uninterrupted_fraction() < 1.0);
+    }
+
+    #[test]
+    fn checkpoints_decrease_monotonically_with_banks() {
+        let shapes = resnet18(Resolution::ImageNet, 1000);
+        let mut last = u64::MAX;
+        for banks in [1usize, 2, 4, 8, 18] {
+            let cfg = MultiBankConfig { banks, ..Default::default() };
+            let rep = schedule_network_multibank(&shapes, &cfg);
+            let cp = rep.total_checkpoints();
+            assert!(cp <= last, "banks={banks} cp={cp} last={last}");
+            last = cp;
+        }
+        assert_eq!(last, 0, "18 banks hold ResNet-18's deepest DP");
+    }
+
+    #[test]
+    fn min_banks_matches_deepest_layer() {
+        let shapes = resnet18(Resolution::Cifar, 10);
+        // Deepest CONV: 3x3x512 = 4608 → 18 tiles of 256.
+        assert_eq!(min_banks_for_buffer_removal(&shapes, 256, 64), 18);
+    }
+}

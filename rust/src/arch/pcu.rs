@@ -1,0 +1,240 @@
+//! PAC Computation Engine (§4.4, Fig. 5 ②).
+//!
+//! The PCE is the CnM block that evaluates sparsity-domain cycles. Each
+//! PAC Computing Unit (PCU) holds a weight-sparsity register file (the
+//! per-MWC `Sw[q]` counts, loaded once — weight-stationary) and the
+//! multiply-divide arithmetic of Eq. 3; an accumulator per MWC merges the
+//! shifted cycle results. Six PCUs match the throughput of one
+//! 64-accumulator D-CiM bank (§6.2).
+
+use crate::pac::mac::{pcu_cycle, PcuRounding};
+use crate::pac::ComputeMap;
+
+/// Event counters for the PCE.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PceStats {
+    /// PCU multiply-divide operations executed (one per sparsity-domain
+    /// (p,q) cycle per output channel).
+    pub pcu_ops: u64,
+    /// Equivalent binary MAC ops delivered (each PCU op covers a whole DP
+    /// vector: n per op).
+    pub equivalent_binary_ops: u64,
+    /// Accumulator shift-add operations.
+    pub acc_ops: u64,
+    /// Weight-sparsity register refreshes.
+    pub weight_loads: u64,
+}
+
+/// One PCU: weight-stationary sparsity registers + arithmetic.
+#[derive(Debug, Clone)]
+pub struct Pcu {
+    /// `Sw[q]` for the weight vector this PCU currently serves.
+    w_sparsity: [u32; 8],
+    /// DP length of the loaded weight vector.
+    n: u32,
+    pub rounding: PcuRounding,
+}
+
+impl Pcu {
+    pub fn new(rounding: PcuRounding) -> Self {
+        Self {
+            w_sparsity: [0; 8],
+            n: 0,
+            rounding,
+        }
+    }
+
+    /// Load the weight sparsity registers (one per weight bit index).
+    pub fn load_weight_sparsity(&mut self, sw: [u32; 8], n: u32) {
+        assert!(n > 0, "DP length must be positive");
+        for (q, &s) in sw.iter().enumerate() {
+            assert!(s <= n, "Sw[{q}]={s} exceeds DP length {n}");
+        }
+        self.w_sparsity = sw;
+        self.n = n;
+    }
+
+    pub fn weight_sparsity(&self) -> [u32; 8] {
+        self.w_sparsity
+    }
+
+    pub fn dp_len(&self) -> u32 {
+        self.n
+    }
+
+    /// One sparsity-domain cycle: estimate the DP of activation bit `p`
+    /// against weight bit `q` from the streamed activation sparsity
+    /// `sx_p` (Eq. 3).
+    #[inline]
+    pub fn cycle(&self, sx_p: u32, q: usize) -> u32 {
+        debug_assert!(self.n > 0, "PCU used before weight load");
+        pcu_cycle(sx_p, self.w_sparsity[q], self.n, self.rounding)
+    }
+
+    /// Full sparsity-domain contribution for one output under `map`:
+    /// `Σ_{(p,q)∈𝔸} 2^{p+q} · cycle(p, q)`, with stats tallied.
+    pub fn sparsity_sum(&self, sx: &[u32; 8], map: &ComputeMap, stats: &mut PceStats) -> i64 {
+        let mut acc = 0i64;
+        for p in 0..8 {
+            for q in 0..8 {
+                if !map.is_digital(p, q) {
+                    acc += (self.cycle(sx[p], q) as i64) << (p + q);
+                    stats.pcu_ops += 1;
+                    stats.equivalent_binary_ops += self.n as u64;
+                    stats.acc_ops += 1;
+                }
+            }
+        }
+        acc
+    }
+}
+
+/// The PCE: a pool of PCUs, one logical accumulator per served MWC.
+#[derive(Debug, Clone)]
+pub struct Pce {
+    pub pcus: Vec<Pcu>,
+    pub stats: PceStats,
+}
+
+impl Pce {
+    /// `n_pcus = 6` matches a single 64-accumulator bank (§6.2).
+    pub fn new(n_pcus: usize, rounding: PcuRounding) -> Self {
+        Self {
+            pcus: (0..n_pcus).map(|_| Pcu::new(rounding)).collect(),
+            stats: PceStats::default(),
+        }
+    }
+
+    pub fn n_pcus(&self) -> usize {
+        self.pcus.len()
+    }
+
+    /// Load weight sparsity for a batch of MWCs, round-robin across PCUs
+    /// (each PCU time-multiplexes several MWCs; the register file holds
+    /// one entry per served MWC — we model the assignment, the arithmetic
+    /// is identical).
+    pub fn load_weights(&mut self, sw_per_mwc: &[[u32; 8]], n: u32) {
+        for (i, &sw) in sw_per_mwc.iter().enumerate() {
+            let idx = i % self.pcus.len();
+            self.pcus[idx].load_weight_sparsity(sw, n);
+            self.stats.weight_loads += 1;
+        }
+    }
+
+    /// Sparsity-domain sums for every MWC given shared activation
+    /// sparsity `sx` (activation broadcast matches the D-CiM array).
+    /// `sw_per_mwc` must be passed again because PCUs time-multiplex.
+    pub fn compute_all(
+        &mut self,
+        sw_per_mwc: &[[u32; 8]],
+        n: u32,
+        sx: &[u32; 8],
+        map: &ComputeMap,
+    ) -> Vec<i64> {
+        let mut out = Vec::with_capacity(sw_per_mwc.len());
+        let rounding = self.pcus[0].rounding;
+        for (i, &sw) in sw_per_mwc.iter().enumerate() {
+            let idx = i % self.pcus.len();
+            // Refresh the time-multiplexed register slot if it serves a
+            // different MWC than last loaded (weight-stationary within an
+            // MWC's tenure).
+            if self.pcus[idx].weight_sparsity() != sw || self.pcus[idx].dp_len() != n {
+                self.pcus[idx].load_weight_sparsity(sw, n);
+            }
+            let _ = rounding;
+            let v = {
+                let mut stats = PceStats::default();
+                let v = self.pcus[idx].sparsity_sum(sx, map, &mut stats);
+                self.stats.pcu_ops += stats.pcu_ops;
+                self.stats.equivalent_binary_ops += stats.equivalent_binary_ops;
+                self.stats.acc_ops += stats.acc_ops;
+                v
+            };
+            out.push(v);
+        }
+        out
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = PceStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pac::sparsity::BitPlanes;
+    use crate::pac::{sparsity_domain_sum, ComputeMap};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pcu_cycle_matches_eq3() {
+        let mut pcu = Pcu::new(PcuRounding::RoundNearest);
+        let mut sw = [0u32; 8];
+        sw[3] = 100;
+        pcu.load_weight_sparsity(sw, 256);
+        // 80·100/256 = 31.25 → 31
+        assert_eq!(pcu.cycle(80, 3), 31);
+    }
+
+    #[test]
+    fn pcu_sum_matches_reference() {
+        let mut rng = Rng::new(60);
+        let n = 512usize;
+        let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let xp = BitPlanes::from_u8(&x);
+        let wp = BitPlanes::from_u8(&w);
+        let map = ComputeMap::operand_based(4, 4);
+        let mut pcu = Pcu::new(PcuRounding::RoundNearest);
+        pcu.load_weight_sparsity(wp.pop, n as u32);
+        let mut stats = PceStats::default();
+        let got = pcu.sparsity_sum(&xp.pop, &map, &mut stats);
+        let want = sparsity_domain_sum(&xp.pop, &wp.pop, n as u32, &map, PcuRounding::RoundNearest);
+        assert_eq!(got, want);
+        assert_eq!(stats.pcu_ops, 48);
+        assert_eq!(stats.equivalent_binary_ops, 48 * n as u64);
+    }
+
+    #[test]
+    fn pce_serves_more_mwcs_than_pcus() {
+        let mut rng = Rng::new(61);
+        let n = 128usize;
+        let map = ComputeMap::operand_based(4, 4);
+        let mwcs = 64;
+        let ws: Vec<Vec<u8>> = (0..mwcs)
+            .map(|_| (0..n).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        let sw: Vec<[u32; 8]> = ws.iter().map(|w| BitPlanes::from_u8(w).pop).collect();
+        let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let sx = BitPlanes::from_u8(&x).pop;
+        let mut pce = Pce::new(6, PcuRounding::RoundNearest);
+        pce.load_weights(&sw, n as u32);
+        let got = pce.compute_all(&sw, n as u32, &sx, &map);
+        assert_eq!(got.len(), mwcs);
+        for (i, w) in ws.iter().enumerate() {
+            let wp = BitPlanes::from_u8(w);
+            let want =
+                sparsity_domain_sum(&sx, &wp.pop, n as u32, &map, PcuRounding::RoundNearest);
+            assert_eq!(got[i], want, "mwc {i}");
+        }
+        assert_eq!(pce.stats.pcu_ops, 48 * mwcs as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds DP length")]
+    fn sparsity_beyond_n_rejected() {
+        let mut pcu = Pcu::new(PcuRounding::RoundNearest);
+        pcu.load_weight_sparsity([300, 0, 0, 0, 0, 0, 0, 0], 256);
+    }
+
+    #[test]
+    fn all_digital_map_means_no_pcu_work() {
+        let mut pcu = Pcu::new(PcuRounding::RoundNearest);
+        pcu.load_weight_sparsity([1; 8], 8);
+        let mut stats = PceStats::default();
+        let v = pcu.sparsity_sum(&[1; 8], &ComputeMap::all_digital(), &mut stats);
+        assert_eq!(v, 0);
+        assert_eq!(stats.pcu_ops, 0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Threshold auto-tuner for the dynamic workload configuration (§5).
+//!
+//! The paper sets `[TH0, TH1, TH2]` "referring to Eq. 5" by hand; a
+//! deployment needs a procedure. This tuner searches the threshold space
+//! against a user-supplied evaluation callback (accuracy on a validation
+//! split) under an accuracy-loss budget, and returns the configuration
+//! with the fewest average digital cycles — the knob behind Fig. 6(b)'s
+//! "average cycle 12 at ≤1% degradation".
+
+use super::bank_logic::ThresholdSet;
+
+/// One evaluated configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TunePoint {
+    pub thresholds: ThresholdSet,
+    pub accuracy: f64,
+    pub avg_cycles: f64,
+}
+
+/// Tuning result: the chosen point and the full trace for reporting.
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub best: Option<TunePoint>,
+    pub baseline_accuracy: f64,
+    pub trace: Vec<TunePoint>,
+}
+
+/// Grid-search candidate generator: geometric ladders over [lo, hi].
+/// Candidates always satisfy th0 ≤ th1 ≤ th2.
+pub fn candidate_grid(levels: usize) -> Vec<ThresholdSet> {
+    let mut out = Vec::new();
+    let steps: Vec<f64> = (0..levels)
+        .map(|i| 0.02 * 1.6f64.powi(i as i32))
+        .take_while(|&v| v < 0.9)
+        .collect();
+    for (i, &t0) in steps.iter().enumerate() {
+        for (j, &t1) in steps.iter().enumerate().skip(i) {
+            for &t2 in steps.iter().skip(j) {
+                out.push(ThresholdSet::new(t0, t1, t2.min(1.0)));
+                let _ = j;
+            }
+        }
+    }
+    out
+}
+
+/// Tune thresholds: `eval(th)` must return `(accuracy, avg_cycles)` for
+/// the dynamic configuration with thresholds `th`; `baseline_accuracy` is
+/// the static-map accuracy; `max_loss` the budget (paper: 0.01).
+pub fn tune<F>(
+    candidates: &[ThresholdSet],
+    baseline_accuracy: f64,
+    max_loss: f64,
+    mut eval: F,
+) -> TuneResult
+where
+    F: FnMut(&ThresholdSet) -> (f64, f64),
+{
+    let mut trace = Vec::with_capacity(candidates.len());
+    let mut best: Option<TunePoint> = None;
+    for th in candidates {
+        let (accuracy, avg_cycles) = eval(th);
+        let pt = TunePoint {
+            thresholds: *th,
+            accuracy,
+            avg_cycles,
+        };
+        trace.push(pt);
+        if baseline_accuracy - accuracy <= max_loss {
+            let better = match best {
+                Some(b) => {
+                    avg_cycles < b.avg_cycles
+                        || (avg_cycles == b.avg_cycles && accuracy > b.accuracy)
+                }
+                None => true,
+            };
+            if better {
+                best = Some(pt);
+            }
+        }
+    }
+    TuneResult {
+        best,
+        baseline_accuracy,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic accuracy/cycles landscape: aggressive thresholds cut
+    /// cycles but cost accuracy (monotone, like the real system).
+    fn fake_eval(th: &ThresholdSet) -> (f64, f64) {
+        // "Aggressiveness" = how much probability mass falls below TH2.
+        let agg = th.th0 * 0.5 + th.th1 * 0.3 + th.th2 * 0.2;
+        let cycles = 16.0 - 6.0 * agg.min(1.0);
+        let acc = 0.93 - 0.08 * agg * agg;
+        (acc, cycles)
+    }
+
+    #[test]
+    fn grid_is_ordered_and_nonempty() {
+        let grid = candidate_grid(8);
+        assert!(grid.len() > 20);
+        for th in &grid {
+            assert!(th.th0 <= th.th1 && th.th1 <= th.th2);
+        }
+    }
+
+    #[test]
+    fn tuner_respects_loss_budget() {
+        let grid = candidate_grid(8);
+        let res = tune(&grid, 0.93, 0.01, fake_eval);
+        let best = res.best.expect("a feasible point exists");
+        assert!(0.93 - best.accuracy <= 0.01 + 1e-12);
+        // It should have found something cheaper than the static 16.
+        assert!(best.avg_cycles < 16.0);
+        // And nothing in the trace with fewer cycles satisfies the budget.
+        for p in &res.trace {
+            if 0.93 - p.accuracy <= 0.01 {
+                assert!(p.avg_cycles >= best.avg_cycles - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_returns_none() {
+        let grid = candidate_grid(6);
+        // Baseline far above anything eval can produce → nothing feasible.
+        let res = tune(&grid, 2.0, 0.001, fake_eval);
+        assert!(res.best.is_none());
+        assert_eq!(res.trace.len(), grid.len());
+    }
+
+    #[test]
+    fn looser_budget_never_worse() {
+        let grid = candidate_grid(8);
+        let tight = tune(&grid, 0.93, 0.005, fake_eval);
+        let loose = tune(&grid, 0.93, 0.02, fake_eval);
+        let (t, l) = (tight.best.unwrap(), loose.best.unwrap());
+        assert!(l.avg_cycles <= t.avg_cycles);
+    }
+}

@@ -1,0 +1,250 @@
+//! Competing approximate-CiM methods (Table 1 / Fig. 3(c) / Table 4).
+//!
+//! The paper compares PAC against three published designs. We cannot
+//! re-implement their silicon, so each is modeled *behaviorally* at the
+//! binary-MAC-cycle level: the method observes one bit-plane dot product
+//! (a popcount over a DP vector) and returns its hardware's estimate of
+//! it. Noise magnitudes are calibrated to the error levels reported in
+//! the respective papers — the quantity Table 1 tabulates — so what our
+//! benches measure is the *consequence* of those error levels under a
+//! common protocol, not a re-derivation of each circuit.
+//!
+//! | Model | Published basis | Cited error |
+//! |---|---|---|
+//! | [`ApproxAdderTree`] | DIMC, ISSCC'22 [29]: approximate arithmetic adder tree | 4.0 / 6.8 % RMSE |
+//! | [`AnalogLsb`] | DIANA, ISSCC'22 [26]: analog core + ADC | 3.5–4.8 % error |
+//! | [`OsaHcim`] | OSA-HCIM, ASP-DAC'24 [4]: hybrid w/ quantization error | 8.5 % RMSE |
+//! | [`PacMethod`] | this work (Eq. 3) | 0.3–1.0 % RMSE |
+
+use crate::pac::mac::{pcu_cycle, PcuRounding};
+use crate::util::rng::Rng;
+use crate::util::stats::Accumulator;
+use crate::util::{and_popcount, pack_bits_u64};
+
+/// A binary-MAC-cycle approximation method. Given the true bit vectors
+/// (as the hardware's array sees them), produce the method's estimate of
+/// the dot product `Σ x_n · w_n`.
+pub trait CycleApprox {
+    fn name(&self) -> &'static str;
+    /// Estimate the DP of one cycle. `rng` supplies the method's internal
+    /// noise source (analog noise, etc.) — deterministic per seed.
+    fn estimate(&self, x: &[u8], w: &[u8], rng: &mut Rng) -> f64;
+}
+
+/// Exact digital reference (D-CiM): zero error by construction.
+pub struct ExactDigital;
+
+impl CycleApprox for ExactDigital {
+    fn name(&self) -> &'static str {
+        "D-CiM (exact)"
+    }
+
+    fn estimate(&self, x: &[u8], w: &[u8], _rng: &mut Rng) -> f64 {
+        and_popcount(&pack_bits_u64(x), &pack_bits_u64(w)) as f64
+    }
+}
+
+/// DIMC-style approximate adder tree [29]: the low carry chains of the
+/// adder tree are cut, so the popcount loses its `trunc_bits` LSBs.
+/// `trunc_bits` is calibrated per DP length to land at the cited
+/// 4.0% (single-approximate) RMSE: truncation error is ~uniform over
+/// [0, 2^t), σ = 2^t/√12 → t = log2(0.04·n·√12).
+pub struct ApproxAdderTree {
+    pub trunc_bits: u32,
+}
+
+impl ApproxAdderTree {
+    /// Calibrate truncation depth for an `rmse_frac` (e.g. 0.04) target
+    /// at DP length n.
+    pub fn calibrated(n: usize, rmse_frac: f64) -> Self {
+        let t = (rmse_frac * n as f64 * 12f64.sqrt()).log2().round();
+        Self {
+            trunc_bits: t.max(0.0) as u32,
+        }
+    }
+}
+
+impl CycleApprox for ApproxAdderTree {
+    fn name(&self) -> &'static str {
+        "Approx adder tree (DIMC'22)"
+    }
+
+    fn estimate(&self, x: &[u8], w: &[u8], _rng: &mut Rng) -> f64 {
+        let exact = and_popcount(&pack_bits_u64(x), &pack_bits_u64(w));
+        ((exact >> self.trunc_bits) << self.trunc_bits) as f64
+    }
+}
+
+/// DIANA-style analog LSB path [26]: charge-domain accumulation read out
+/// by an ADC. Modeled as ADC quantization over [0, n] at `adc_bits`
+/// resolution plus Gaussian analog noise of `noise_frac·n` σ — the
+/// combination calibrated to the 3.5–4.8% error band reported in [11].
+pub struct AnalogLsb {
+    pub adc_bits: u32,
+    pub noise_frac: f64,
+    pub dp_len: usize,
+}
+
+impl AnalogLsb {
+    pub fn diana(dp_len: usize) -> Self {
+        Self {
+            adc_bits: 5,
+            noise_frac: 0.033,
+            dp_len,
+        }
+    }
+}
+
+impl CycleApprox for AnalogLsb {
+    fn name(&self) -> &'static str {
+        "Analog + ADC (DIANA'22)"
+    }
+
+    fn estimate(&self, x: &[u8], w: &[u8], rng: &mut Rng) -> f64 {
+        let exact = and_popcount(&pack_bits_u64(x), &pack_bits_u64(w)) as f64;
+        let noisy = exact + rng.gaussian(0.0, self.noise_frac * self.dp_len as f64);
+        let step = self.dp_len as f64 / 2f64.powi(self.adc_bits as i32);
+        (noisy / step).round().clamp(0.0, 2f64.powi(self.adc_bits as i32)) * step
+    }
+}
+
+/// OSA-HCIM-style hybrid [4]: coarser analog path; the paper reports
+/// 8.5% RMSE from macro spec + quantization error.
+pub struct OsaHcim {
+    pub dp_len: usize,
+}
+
+impl CycleApprox for OsaHcim {
+    fn name(&self) -> &'static str {
+        "Hybrid CiM (OSA-HCIM'24)"
+    }
+
+    fn estimate(&self, x: &[u8], w: &[u8], rng: &mut Rng) -> f64 {
+        let exact = and_popcount(&pack_bits_u64(x), &pack_bits_u64(w)) as f64;
+        let step = self.dp_len as f64 / 16.0; // 4b conversion
+        let noisy = exact + rng.gaussian(0.0, 0.075 * self.dp_len as f64);
+        (noisy / step).round().clamp(0.0, 16.0) * step
+    }
+}
+
+/// This work: the PAC point estimate (Eq. 3) from the observed popcounts.
+pub struct PacMethod {
+    pub rounding: PcuRounding,
+}
+
+impl CycleApprox for PacMethod {
+    fn name(&self) -> &'static str {
+        "PAC (this work)"
+    }
+
+    fn estimate(&self, x: &[u8], w: &[u8], _rng: &mut Rng) -> f64 {
+        let n = x.len() as u32;
+        let sx: u32 = x.iter().map(|&b| b as u32).sum();
+        let sw: u32 = w.iter().map(|&b| b as u32).sum();
+        pcu_cycle(sx, sw, n.max(1), self.rounding) as f64
+    }
+}
+
+/// Measure the RMSE (%) of a method over random bit vectors at the given
+/// sparsity operating point — the common protocol behind Table 1 and
+/// Fig. 3(c).
+pub fn measure_rmse_pct(
+    method: &dyn CycleApprox,
+    n: usize,
+    sparsity_x: f64,
+    sparsity_w: f64,
+    iterations: u64,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut err = Accumulator::new();
+    for _ in 0..iterations {
+        let x = rng.binary_bernoulli(n, sparsity_x);
+        let w = rng.binary_bernoulli(n, sparsity_w);
+        let exact = and_popcount(&pack_bits_u64(&x), &pack_bits_u64(&w)) as f64;
+        let est = method.estimate(&x, &w, &mut rng);
+        err.push(est - exact);
+    }
+    err.rms() / n as f64 * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 1024;
+    const ITERS: u64 = 1500;
+
+    #[test]
+    fn exact_has_zero_error() {
+        let r = measure_rmse_pct(&ExactDigital, N, 0.3, 0.5, 200, 1);
+        assert_eq!(r, 0.0);
+    }
+
+    #[test]
+    fn adder_tree_lands_near_cited_4pct() {
+        let m = ApproxAdderTree::calibrated(N, 0.04);
+        let r = measure_rmse_pct(&m, N, 0.3, 0.5, ITERS, 2);
+        assert!((2.5..5.5).contains(&r), "rmse={r}%");
+    }
+
+    #[test]
+    fn diana_lands_in_cited_band() {
+        let m = AnalogLsb::diana(N);
+        let r = measure_rmse_pct(&m, N, 0.3, 0.5, ITERS, 3);
+        assert!((3.0..5.3).contains(&r), "rmse={r}%");
+    }
+
+    #[test]
+    fn osa_lands_near_cited_8_5pct() {
+        let m = OsaHcim { dp_len: N };
+        let r = measure_rmse_pct(&m, N, 0.3, 0.5, ITERS, 4);
+        assert!((6.5..10.5).contains(&r), "rmse={r}%");
+    }
+
+    #[test]
+    fn pac_beats_all_by_4x() {
+        // Table 1's headline: PAC ≈ 0.3–1.0% — a ≥4× improvement.
+        let pac = measure_rmse_pct(
+            &PacMethod {
+                rounding: PcuRounding::RoundNearest,
+            },
+            N,
+            0.3,
+            0.5,
+            ITERS,
+            5,
+        );
+        assert!((0.2..1.0).contains(&pac), "pac={pac}%");
+        let adder = measure_rmse_pct(&ApproxAdderTree::calibrated(N, 0.04), N, 0.3, 0.5, ITERS, 6);
+        assert!(adder / pac >= 4.0, "adder={adder}% pac={pac}%");
+    }
+
+    #[test]
+    fn pac_crossover_near_dp64() {
+        // Fig. 3(c): PAC's RMSE crosses below the ≈4% competitor line at
+        // DP length ≈ 64.
+        let pac_32 = measure_rmse_pct(
+            &PacMethod {
+                rounding: PcuRounding::RoundNearest,
+            },
+            32,
+            0.3,
+            0.5,
+            ITERS,
+            7,
+        );
+        let pac_128 = measure_rmse_pct(
+            &PacMethod {
+                rounding: PcuRounding::RoundNearest,
+            },
+            128,
+            0.3,
+            0.5,
+            ITERS,
+            8,
+        );
+        assert!(pac_32 > 3.0, "pac@32={pac_32}%");
+        assert!(pac_128 < 4.0, "pac@128={pac_128}%");
+    }
+}

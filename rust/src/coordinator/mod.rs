@@ -1,0 +1,15 @@
+//! L3 coordination: the bank scheduler (analytic cycle/energy/traffic
+//! accounting) and the threaded batch-serving loop.
+//!
+//! - [`scheduler`] — maps DNN layer shapes onto PACiM banks; powers the
+//!   Fig. 7 / Table 3-4 system analyses and `examples/trace_sim.rs`.
+//! - [`server`] — the request loop + dynamic batcher in front of a
+//!   PJRT executable; powers `examples/serve.rs`.
+
+pub mod scheduler;
+pub mod server;
+
+pub use scheduler::{
+    schedule_layer, schedule_model, LayerReport, ModelReport, ScheduleConfig,
+};
+pub use server::{BatchExecutor, BatchPolicy, InferenceServer, Reply, ServerHandle, ServerMetrics};

@@ -1,0 +1,289 @@
+//! The bank scheduler: maps DNN layers onto PACiM banks and produces the
+//! cycle / energy / traffic accounting behind Fig. 7 and Tables 3–4.
+//!
+//! Mapping rules (§4.3, §6.2):
+//! - a CONV layer lowers to a GEMM of `out_pixels × dp_len × out_c`;
+//! - output channels tile onto MWCs (64 per bank);
+//! - the DP dimension tiles onto rows (256 per column pass) — a DP longer
+//!   than the array is split into `row_tiles` passes whose partial sums
+//!   accumulate in the output buffer;
+//! - each weight tile is loaded once (weight-stationary) and serves every
+//!   output pixel before the next update — the schedule that lets the
+//!   sparsity encoder run uninterrupted in multi-bank systems (§4.5).
+
+use crate::energy::EnergyModel;
+use crate::memory::traffic::{activation_traffic, weight_traffic};
+use crate::workload::shapes::{LayerShape, LayerShapeKind};
+
+/// Scheduling/accounting configuration.
+#[derive(Debug, Clone)]
+pub struct ScheduleConfig {
+    /// Rows per bank (DP segment per pass).
+    pub rows: usize,
+    /// MWCs per bank (output channels resident at once).
+    pub mwcs: usize,
+    /// Number of banks tiled in the system.
+    pub banks: usize,
+    /// Average digital cycles per 8b/8b output MAC (16 static 4-bit map;
+    /// ≈12 with dynamic workload configuration).
+    pub avg_digital_cycles: f64,
+    /// Sparsity-domain cycles per output MAC (64 − digital for the static
+    /// map; the dynamic transfer moves digital cycles here).
+    pub avg_sparsity_cycles: f64,
+    /// Binary activation bits transmitted (4-bit MSB default).
+    pub msb_bits: u32,
+}
+
+impl ScheduleConfig {
+    /// The paper's default single-bank 4-bit-approximation system.
+    pub fn pacim_default() -> Self {
+        Self {
+            rows: 256,
+            mwcs: 64,
+            banks: 1,
+            avg_digital_cycles: 16.0,
+            avg_sparsity_cycles: 48.0,
+            msb_bits: 4,
+        }
+    }
+
+    /// Dynamic workload configuration at the paper's CIFAR operating
+    /// point (average 12 digital cycles, Fig. 6(b)).
+    pub fn pacim_dynamic() -> Self {
+        Self {
+            avg_digital_cycles: 12.0,
+            avg_sparsity_cycles: 52.0,
+            ..Self::pacim_default()
+        }
+    }
+
+    /// Fully digital baseline (no PAC): 64 digital cycles, all 8 bits
+    /// transmitted, all 8 weight bits stored.
+    pub fn digital_baseline() -> Self {
+        Self {
+            rows: 256,
+            mwcs: 64,
+            banks: 1,
+            avg_digital_cycles: 64.0,
+            avg_sparsity_cycles: 0.0,
+            msb_bits: 8,
+        }
+    }
+}
+
+/// Per-layer schedule report.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    /// Column-pass tiles along the DP dimension.
+    pub row_tiles: usize,
+    /// MWC tiles along the output-channel dimension.
+    pub oc_tiles: usize,
+    /// Total weight-tile loads (row_tiles × oc_tiles).
+    pub weight_loads: usize,
+    /// D-CiM bit-serial broadcast cycles for the whole layer.
+    pub bit_serial_cycles: u64,
+    /// Equivalent binary ops in each domain (for energy composition).
+    pub dcim_ops: f64,
+    pub pcu_ops: f64,
+    /// Activation bits moved to/from cache (write + next-layer read).
+    pub act_bits_baseline: u64,
+    pub act_bits_pacim: u64,
+    /// Weight bits loaded from DRAM.
+    pub weight_bits_baseline: u64,
+    pub weight_bits_pacim: u64,
+}
+
+impl LayerReport {
+    pub fn act_reduction(&self) -> f64 {
+        1.0 - self.act_bits_pacim as f64 / self.act_bits_baseline.max(1) as f64
+    }
+}
+
+/// Whole-model schedule report.
+#[derive(Debug, Clone, Default)]
+pub struct ModelReport {
+    pub layers: Vec<LayerReport>,
+}
+
+impl ModelReport {
+    pub fn total_macs_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.bit_serial_cycles).sum()
+    }
+
+    pub fn total_dcim_ops(&self) -> f64 {
+        self.layers.iter().map(|l| l.dcim_ops).sum()
+    }
+
+    pub fn total_pcu_ops(&self) -> f64 {
+        self.layers.iter().map(|l| l.pcu_ops).sum()
+    }
+
+    /// Aggregate activation-traffic reduction (Fig. 7(b) headline).
+    pub fn act_traffic_reduction(&self) -> f64 {
+        let base: u64 = self.layers.iter().map(|l| l.act_bits_baseline).sum();
+        let ours: u64 = self.layers.iter().map(|l| l.act_bits_pacim).sum();
+        1.0 - ours as f64 / base.max(1) as f64
+    }
+
+    pub fn weight_traffic_reduction(&self) -> f64 {
+        let base: u64 = self.layers.iter().map(|l| l.weight_bits_baseline).sum();
+        let ours: u64 = self.layers.iter().map(|l| l.weight_bits_pacim).sum();
+        1.0 - ours as f64 / base.max(1) as f64
+    }
+
+    /// Compute energy (pJ) under the energy model (compute only; memory
+    /// energy is reported separately by `memory_energy_pj`).
+    pub fn compute_energy_pj(&self, m: &EnergyModel) -> f64 {
+        self.total_dcim_ops() * m.dcim_pj_per_op + self.total_pcu_ops() * m.pcu_pj_per_op
+    }
+
+    /// Memory energy (pJ): activation SRAM traffic + weight DRAM traffic.
+    pub fn memory_energy_pj(&self, m: &EnergyModel, pacim: bool) -> f64 {
+        let (act, wgt): (u64, u64) = self
+            .layers
+            .iter()
+            .map(|l| {
+                if pacim {
+                    (l.act_bits_pacim, l.weight_bits_pacim)
+                } else {
+                    (l.act_bits_baseline, l.weight_bits_baseline)
+                }
+            })
+            .fold((0, 0), |(a, w), (la, lw)| (a + la, w + lw));
+        act as f64 / 16.0 * m.sram_pj_per_16b + wgt as f64 / 64.0 * m.dram_pj_per_access
+    }
+}
+
+/// Schedule one layer.
+pub fn schedule_layer(shape: &LayerShape, cfg: &ScheduleConfig) -> LayerReport {
+    let g = &shape.geom;
+    let k = g.dp_len();
+    let row_tiles = (k + cfg.rows - 1) / cfg.rows;
+    let oc_tiles = (g.out_c + cfg.mwcs - 1) / cfg.mwcs;
+    let pixels = g.out_pixels() as u64;
+
+    // Bit-serial broadcast cycles: each (pixel, row-tile, oc-tile) runs
+    // `avg_digital_cycles` broadcasts (all resident MWCs compute in
+    // parallel during one broadcast).
+    let bit_serial_cycles =
+        (pixels * row_tiles as u64 * oc_tiles as u64) as f64 * cfg.avg_digital_cycles;
+
+    // Equivalent binary ops: each 8b/8b output MAC comprises 64 binary
+    // (p,q) cycles split between domains; the per-domain equivalent op
+    // count is the MAC total × the domain's cycle share.
+    let total_macs = g.macs() as f64; // out_c × pixels × k
+    let dcim_ops = total_macs * (cfg.avg_digital_cycles / 64.0);
+    let pcu_ops = total_macs * (cfg.avg_sparsity_cycles / 64.0);
+
+    // Activation traffic: output written once, read once by the next
+    // layer. Encoding group = channels per pixel (CONV) or the layer
+    // (LINEAR).
+    let groups = match shape.kind {
+        LayerShapeKind::Conv => pixels,
+        LayerShapeKind::Linear => 1,
+    };
+    let group_elems = match shape.kind {
+        LayerShapeKind::Conv => g.out_c,
+        LayerShapeKind::Linear => g.out_c,
+    };
+    let t = activation_traffic(group_elems, cfg.msb_bits);
+    let act_bits_baseline = 2 * groups * t.baseline; // write + read
+    let act_bits_pacim = 2 * groups * t.pacim;
+
+    // Weight traffic from DRAM: each weight element loaded once per
+    // occupancy (weight-stationary single pass).
+    let wt = weight_traffic(k, cfg.msb_bits);
+    let weight_bits_baseline = g.out_c as u64 * wt.baseline;
+    let weight_bits_pacim = g.out_c as u64 * wt.pacim;
+
+    LayerReport {
+        name: shape.name.clone(),
+        row_tiles,
+        oc_tiles,
+        weight_loads: row_tiles * oc_tiles,
+        bit_serial_cycles: bit_serial_cycles as u64,
+        dcim_ops,
+        pcu_ops,
+        act_bits_baseline,
+        act_bits_pacim,
+        weight_bits_baseline,
+        weight_bits_pacim,
+    }
+}
+
+/// Schedule a whole model.
+pub fn schedule_model(shapes: &[LayerShape], cfg: &ScheduleConfig) -> ModelReport {
+    ModelReport {
+        layers: shapes.iter().map(|s| schedule_layer(s, cfg)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::shapes::{resnet18, Resolution};
+
+    #[test]
+    fn tiling_counts() {
+        let l = LayerShape::conv("c", 128, 256, 16, 3, 1);
+        let cfg = ScheduleConfig::pacim_default();
+        let r = schedule_layer(&l, &cfg);
+        // k = 1152 → 5 row tiles of 256; 256 oc → 4 MWC tiles.
+        assert_eq!(r.row_tiles, 5);
+        assert_eq!(r.oc_tiles, 4);
+        assert_eq!(r.weight_loads, 20);
+    }
+
+    #[test]
+    fn cycle_reduction_75pct_static() {
+        // Fig. 7(a): static 4-bit map reduces bit-serial cycles by 75%.
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let pac = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+        let dig = schedule_model(&shapes, &ScheduleConfig::digital_baseline());
+        let red = 1.0 - pac.total_macs_cycles() as f64 / dig.total_macs_cycles() as f64;
+        assert!((red - 0.75).abs() < 1e-9, "reduction={red}");
+    }
+
+    #[test]
+    fn cycle_reduction_81pct_dynamic() {
+        // Fig. 7(a)/abstract: dynamic configuration reaches 81%.
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let pac = schedule_model(&shapes, &ScheduleConfig::pacim_dynamic());
+        let dig = schedule_model(&shapes, &ScheduleConfig::digital_baseline());
+        let red = 1.0 - pac.total_macs_cycles() as f64 / dig.total_macs_cycles() as f64;
+        assert!((red - 0.8125).abs() < 1e-9, "reduction={red}");
+    }
+
+    #[test]
+    fn traffic_reduction_band() {
+        // Fig. 7(b): 40–50% activation traffic reduction on ResNet-18.
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let rep = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+        let red = rep.act_traffic_reduction();
+        assert!((0.38..0.52).contains(&red), "act reduction={red}");
+        let wred = rep.weight_traffic_reduction();
+        assert!((0.42..0.52).contains(&wred), "weight reduction={wred}");
+    }
+
+    #[test]
+    fn ops_partition_preserves_total() {
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let rep = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+        let total: f64 = shapes.iter().map(|s| s.macs() as f64).sum();
+        assert!(
+            ((rep.total_dcim_ops() + rep.total_pcu_ops()) - total).abs() / total < 1e-12
+        );
+    }
+
+    #[test]
+    fn pacim_energy_beats_digital() {
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let m = EnergyModel::default();
+        let pac = schedule_model(&shapes, &ScheduleConfig::pacim_dynamic());
+        let dig = schedule_model(&shapes, &ScheduleConfig::digital_baseline());
+        let e_pac = pac.compute_energy_pj(&m) + pac.memory_energy_pj(&m, true);
+        let e_dig = dig.compute_energy_pj(&m) + dig.memory_energy_pj(&m, false);
+        assert!(e_pac < e_dig, "pacim {e_pac} pJ vs digital {e_dig} pJ");
+    }
+}

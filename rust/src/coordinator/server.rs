@@ -1,0 +1,420 @@
+//! The serving coordinator: a threaded request loop with dynamic
+//! batching in front of a (PJRT-compiled) model executable.
+//!
+//! This is the L3 runtime path: clients submit single images; the
+//! batcher groups them up to the executable's compiled batch size or a
+//! deadline, pads partial batches, executes, and distributes per-request
+//! results. Python never appears here — the executable was AOT-compiled
+//! at build time.
+//!
+//! The executor is a trait so unit tests run against a mock and the
+//! examples against [`crate::runtime::PjrtExecutor`].
+
+use crate::util::stats::percentile;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Something that can run a fixed-batch forward pass.
+/// Inputs are flattened f32 images (C·H·W each), batched contiguously.
+///
+/// Implementations need not be `Send`: the server constructs its executor
+/// *inside* the worker thread (PJRT handles hold non-Send `Rc`s).
+pub trait BatchExecutor {
+    /// Compiled batch size.
+    fn batch_size(&self) -> usize;
+    /// Elements per input (C·H·W).
+    fn input_elems(&self) -> usize;
+    /// Elements per output (num classes).
+    fn output_elems(&self) -> usize;
+    /// Execute on exactly `batch_size()` inputs; returns
+    /// `batch_size() × output_elems()` outputs.
+    fn execute(&mut self, batch: &[f32]) -> anyhow::Result<Vec<f32>>;
+}
+
+/// One inference request.
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Reply>,
+}
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Per-request response.
+#[derive(Debug, Clone)]
+pub struct Reply {
+    pub logits: Vec<f32>,
+    /// Queue + batch + execute latency.
+    pub latency: Duration,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// Server-side aggregate metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+    pub failed_batches: u64,
+    pub exec_time: Duration,
+    latencies_us: Vec<f64>,
+}
+
+impl ServerMetrics {
+    pub fn latency_percentile_us(&mut self, p: f64) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        percentile(&mut self.latencies_us, p)
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.batches as f64
+    }
+}
+
+/// Handle for submitting requests to a running server.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+    input_elems: usize,
+}
+
+impl ServerHandle {
+    /// Submit one image; blocks until the reply arrives.
+    pub fn infer(&self, input: Vec<f32>) -> anyhow::Result<Reply> {
+        anyhow::ensure!(
+            input.len() == self.input_elems,
+            "input has {} elems, expected {}",
+            input.len(),
+            self.input_elems
+        );
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Req(Request {
+                input,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            }))
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("request dropped (batch failed or server stopped)"))
+    }
+}
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max time the first request of a batch waits for company.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// The inference server: owns the executor on a dedicated thread.
+pub struct InferenceServer {
+    handle: ServerHandle,
+    worker: Option<std::thread::JoinHandle<ServerMetrics>>,
+}
+
+impl InferenceServer {
+    /// Start a server whose executor is built on the worker thread by
+    /// `factory` (PJRT executables are not `Send`). Fails if the factory
+    /// fails.
+    pub fn start_with<E, F>(factory: F, policy: BatchPolicy) -> anyhow::Result<Self>
+    where
+        E: BatchExecutor + 'static,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<usize>>();
+        let worker = std::thread::spawn(move || {
+            let mut executor = match factory() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(e.input_elems()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return ServerMetrics::default();
+                }
+            };
+            let mut metrics = ServerMetrics::default();
+            let bs = executor.batch_size();
+            let out_elems = executor.output_elems();
+            let in_elems = executor.input_elems();
+            'serve: loop {
+                // Block for the first request of a batch.
+                let first = match rx.recv() {
+                    Ok(Msg::Req(r)) => r,
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                };
+                let deadline = Instant::now() + policy.max_wait;
+                let mut batch = vec![first];
+                let mut shutdown_after = false;
+                while batch.len() < bs {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(Msg::Req(r)) => batch.push(r),
+                        Ok(Msg::Shutdown) => {
+                            shutdown_after = true;
+                            break;
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            shutdown_after = true;
+                            break;
+                        }
+                    }
+                }
+                // Assemble (pad partial batches with zeros).
+                let mut flat = vec![0f32; bs * in_elems];
+                for (i, r) in batch.iter().enumerate() {
+                    flat[i * in_elems..(i + 1) * in_elems].copy_from_slice(&r.input);
+                }
+                metrics.padded_slots += (bs - batch.len()) as u64;
+                let t0 = Instant::now();
+                match executor.execute(&flat) {
+                    Ok(out) => {
+                        metrics.exec_time += t0.elapsed();
+                        metrics.batches += 1;
+                        for (i, r) in batch.into_iter().enumerate() {
+                            let latency = r.enqueued.elapsed();
+                            metrics.requests += 1;
+                            metrics.latencies_us.push(latency.as_secs_f64() * 1e6);
+                            let _ = r.reply.send(Reply {
+                                logits: out[i * out_elems..(i + 1) * out_elems].to_vec(),
+                                latency,
+                                batch_size: bs,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        // Fail this batch (reply senders drop → clients
+                        // see an error) but keep serving.
+                        eprintln!("pacim-server: executor error: {e}");
+                        metrics.failed_batches += 1;
+                    }
+                }
+                if shutdown_after {
+                    break 'serve;
+                }
+            }
+            metrics
+        });
+        let input_elems = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
+        Ok(Self {
+            handle: ServerHandle { tx, input_elems },
+            worker: Some(worker),
+        })
+    }
+
+    /// Convenience for executors that are already constructed and `Send`
+    /// (mocks, pure-rust executors).
+    pub fn start<E: BatchExecutor + Send + 'static>(
+        executor: E,
+        policy: BatchPolicy,
+    ) -> Self {
+        Self::start_with(move || Ok(executor), policy)
+            .expect("infallible factory cannot fail")
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the server (after in-flight work) and collect metrics.
+    pub fn stop(mut self) -> ServerMetrics {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        self.worker
+            .take()
+            .expect("server already stopped")
+            .join()
+            .expect("server thread panicked")
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Mock executor: logit j of input i = sum(input_i) + j.
+    pub struct MockExecutor {
+        pub batch: usize,
+        pub in_elems: usize,
+        pub out_elems: usize,
+        pub delay: Duration,
+        pub fail_every: Option<u64>,
+        pub calls: u64,
+    }
+
+    impl BatchExecutor for MockExecutor {
+        fn batch_size(&self) -> usize {
+            self.batch
+        }
+
+        fn input_elems(&self) -> usize {
+            self.in_elems
+        }
+
+        fn output_elems(&self) -> usize {
+            self.out_elems
+        }
+
+        fn execute(&mut self, batch: &[f32]) -> anyhow::Result<Vec<f32>> {
+            self.calls += 1;
+            if let Some(k) = self.fail_every {
+                if self.calls % k == 0 {
+                    anyhow::bail!("injected failure");
+                }
+            }
+            std::thread::sleep(self.delay);
+            let mut out = Vec::with_capacity(self.batch * self.out_elems);
+            for i in 0..self.batch {
+                let s: f32 = batch[i * self.in_elems..(i + 1) * self.in_elems]
+                    .iter()
+                    .sum();
+                for j in 0..self.out_elems {
+                    out.push(s + j as f32);
+                }
+            }
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::MockExecutor;
+    use super::*;
+
+    fn mock(batch: usize) -> MockExecutor {
+        MockExecutor {
+            batch,
+            in_elems: 4,
+            out_elems: 3,
+            delay: Duration::from_micros(200),
+            fail_every: None,
+            calls: 0,
+        }
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let server = InferenceServer::start(mock(4), BatchPolicy::default());
+        let h = server.handle();
+        let reply = h.infer(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(reply.logits, vec![10.0, 11.0, 12.0]);
+        let metrics = server.stop();
+        assert_eq!(metrics.requests, 1);
+        assert_eq!(metrics.batches, 1);
+        assert_eq!(metrics.padded_slots, 3);
+    }
+
+    #[test]
+    fn concurrent_requests_batch_together() {
+        let server = InferenceServer::start(
+            mock(8),
+            BatchPolicy {
+                max_wait: Duration::from_millis(50),
+            },
+        );
+        let h = server.handle();
+        let mut joins = Vec::new();
+        for i in 0..8 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                h.infer(vec![i as f32; 4]).unwrap()
+            }));
+        }
+        let replies: Vec<Reply> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        for (i, r) in replies.iter().enumerate() {
+            assert_eq!(r.logits[0], 4.0 * i as f32);
+        }
+        let metrics = server.stop();
+        assert_eq!(metrics.requests, 8);
+        // With a generous wait window they should have shared few batches.
+        assert!(metrics.batches <= 4, "batches={}", metrics.batches);
+        assert!(metrics.mean_batch_occupancy() >= 2.0);
+    }
+
+    #[test]
+    fn wrong_input_size_rejected() {
+        let server = InferenceServer::start(mock(2), BatchPolicy::default());
+        let h = server.handle();
+        assert!(h.infer(vec![1.0; 3]).is_err());
+        server.stop();
+    }
+
+    #[test]
+    fn executor_failure_drops_batch_but_server_survives() {
+        let server = InferenceServer::start(
+            MockExecutor {
+                fail_every: Some(1), // every call fails... except none succeed
+                ..mock(1)
+            },
+            BatchPolicy::default(),
+        );
+        let h = server.handle();
+        let r1 = h.infer(vec![0.0; 4]);
+        assert!(r1.is_err());
+        // Server thread is still alive and accepts further requests
+        // (they also fail here since every call fails, but don't hang).
+        let r2 = h.infer(vec![1.0; 4]);
+        assert!(r2.is_err());
+        let m = server.stop();
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.failed_batches, 2);
+    }
+
+    #[test]
+    fn intermittent_failure_recovers() {
+        let server = InferenceServer::start(
+            MockExecutor {
+                fail_every: Some(2), // calls 2, 4, … fail
+                ..mock(1)
+            },
+            BatchPolicy::default(),
+        );
+        let h = server.handle();
+        assert!(h.infer(vec![1.0; 4]).is_ok()); // call 1
+        assert!(h.infer(vec![1.0; 4]).is_err()); // call 2 fails
+        assert!(h.infer(vec![1.0; 4]).is_ok()); // call 3
+        let m = server.stop();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.failed_batches, 1);
+    }
+
+    #[test]
+    fn latency_percentiles_reported() {
+        let server = InferenceServer::start(mock(1), BatchPolicy::default());
+        let h = server.handle();
+        for _ in 0..20 {
+            h.infer(vec![0.0; 4]).unwrap();
+        }
+        let mut m = server.stop();
+        let p50 = m.latency_percentile_us(50.0);
+        let p99 = m.latency_percentile_us(99.0);
+        assert!(p50 > 0.0);
+        assert!(p99 >= p50);
+    }
+}

@@ -1,0 +1,158 @@
+//! Area model and the Fig. 7(c) area/power breakdown.
+//!
+//! Calibration points (65 nm): one PCU + accumulator (register files +
+//! arithmetic) = 8640 µm² (§4.4); the CnM processing unit is ~10% of the
+//! single-bank system area and ~30% of its power, with the CnM buffer
+//! accounting for >50% of CnM area and ~70% of CnM power (Fig. 7(c)).
+
+/// Area/power shares of one PACiM bank (single-bank system).
+#[derive(Debug, Clone)]
+pub struct BankBreakdown {
+    /// µm² per named block.
+    pub area_um2: Vec<(&'static str, f64)>,
+    /// Relative power per named block (sums to 1).
+    pub power_frac: Vec<(&'static str, f64)>,
+}
+
+/// Configuration for the area model.
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    /// µm² of one PCU + accumulator (§4.4 calibration point).
+    pub pcu_um2: f64,
+    /// PCUs per PCE (6 match a 64-accumulator bank's throughput, §6.2).
+    pub pcus_per_pce: usize,
+    /// CnM fraction of total bank area (Fig. 7(c): ≈10%).
+    pub cnm_area_frac: f64,
+    /// Buffer fraction of CnM area (Fig. 7(c): >50%).
+    pub buffer_of_cnm_area: f64,
+    /// CnM fraction of total bank power (Fig. 7(c): ≈30%).
+    pub cnm_power_frac: f64,
+    /// Buffer fraction of CnM power (Fig. 7(c): ≈70%).
+    pub buffer_of_cnm_power: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        Self {
+            pcu_um2: 8640.0,
+            pcus_per_pce: 6,
+            cnm_area_frac: 0.10,
+            buffer_of_cnm_area: 0.55,
+            cnm_power_frac: 0.30,
+            buffer_of_cnm_power: 0.70,
+        }
+    }
+}
+
+impl AreaModel {
+    /// Area of the PCE compute portion (PCUs + accumulators).
+    pub fn pce_compute_um2(&self) -> f64 {
+        self.pcu_um2 * self.pcus_per_pce as f64
+    }
+
+    /// Total CnM area implied by the compute/buffer/encoder shares:
+    /// compute+encoder = (1 − buffer_share) of CnM.
+    pub fn cnm_total_um2(&self) -> f64 {
+        // PCE compute ≈ 80% of the non-buffer CnM area (the rest is the
+        // sparsity encoder + control), per the Fig. 7(c) proportions.
+        let non_buffer = self.pce_compute_um2() / 0.8;
+        non_buffer / (1.0 - self.buffer_of_cnm_area)
+    }
+
+    /// Total single-bank system area implied by the CnM share.
+    pub fn bank_total_um2(&self) -> f64 {
+        self.cnm_total_um2() / self.cnm_area_frac
+    }
+
+    /// Fig. 7(c)-style breakdown.
+    pub fn breakdown(&self) -> BankBreakdown {
+        let cnm = self.cnm_total_um2();
+        let bank = self.bank_total_um2();
+        let dcim = bank - cnm;
+        let buffer = cnm * self.buffer_of_cnm_area;
+        let encoder = (cnm - buffer) * 0.2;
+        let pce = cnm - buffer - encoder;
+        let cnm_p = self.cnm_power_frac;
+        let buf_p = cnm_p * self.buffer_of_cnm_power;
+        let enc_p = (cnm_p - buf_p) * 0.25;
+        let pce_p = cnm_p - buf_p - enc_p;
+        BankBreakdown {
+            area_um2: vec![
+                ("D-CiM banks", dcim),
+                ("CnM buffer", buffer),
+                ("CnM PCE", pce),
+                ("CnM encoder", encoder),
+            ],
+            power_frac: vec![
+                ("D-CiM banks", 1.0 - cnm_p),
+                ("CnM buffer", buf_p),
+                ("CnM PCE", pce_p),
+                ("CnM encoder", enc_p),
+            ],
+        }
+    }
+
+    /// Bit-cell area saving from LSB-column elimination (§6.1): removing
+    /// the 4 LSB weight columns halves the weight storage of each MWC.
+    pub fn bitcell_saving(&self, kept_weight_bits: u32) -> f64 {
+        1.0 - kept_weight_bits as f64 / 8.0
+    }
+
+    /// Multi-bank system: the intermediate encoding buffer can be removed
+    /// (§4.5 "Tiling Multiple Banks"), shrinking CnM area by the buffer
+    /// share.
+    pub fn multibank_cnm_um2(&self) -> f64 {
+        self.cnm_total_um2() * (1.0 - self.buffer_of_cnm_area)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcu_area_calibration() {
+        let m = AreaModel::default();
+        assert_eq!(m.pce_compute_um2(), 8640.0 * 6.0);
+    }
+
+    #[test]
+    fn cnm_is_10pct_of_bank() {
+        let m = AreaModel::default();
+        let frac = m.cnm_total_um2() / m.bank_total_um2();
+        assert!((frac - 0.10).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let m = AreaModel::default();
+        let b = m.breakdown();
+        let area_sum: f64 = b.area_um2.iter().map(|(_, a)| a).sum();
+        assert!((area_sum - m.bank_total_um2()).abs() / area_sum < 1e-9);
+        let p_sum: f64 = b.power_frac.iter().map(|(_, p)| p).sum();
+        assert!((p_sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn buffer_dominates_cnm() {
+        // Fig. 7(c): buffer >50% of CnM area, ≈70% of CnM power.
+        let m = AreaModel::default();
+        let b = m.breakdown();
+        let buf_area = b.area_um2.iter().find(|(n, _)| *n == "CnM buffer").unwrap().1;
+        assert!(buf_area / m.cnm_total_um2() > 0.5);
+        let buf_p = b.power_frac.iter().find(|(n, _)| *n == "CnM buffer").unwrap().1;
+        assert!((buf_p / 0.30 - 0.70).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lsb_elimination_halves_bitcells() {
+        let m = AreaModel::default();
+        assert!((m.bitcell_saving(4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multibank_removes_buffer() {
+        let m = AreaModel::default();
+        assert!(m.multibank_cnm_um2() < m.cnm_total_um2() * 0.5);
+    }
+}

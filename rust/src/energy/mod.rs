@@ -1,0 +1,232 @@
+//! Calibrated 65 nm energy / area model (§6.2, Table 3, Table 4, Fig. 7).
+//!
+//! The paper evaluates PACiM by composing per-block numbers: the D-CiM
+//! bank spec is taken from ISSCC'21 [6] normalized to 65 nm, and the CnM
+//! processing unit was synthesized with Design Compiler + IC Compiler.
+//! We cannot re-run a 65 nm flow, so the published per-block constants are
+//! encoded here as the calibration points and every system-level figure is
+//! recomputed *structurally* from them (DESIGN.md §3, §7). Anything that
+//! scales with cycle counts, DP lengths, or traffic is computed — only the
+//! leaf constants are quoted.
+
+pub mod area;
+pub mod timing;
+
+/// Supply voltage operating point. Energy scales with V² (the paper's
+/// 0.6 V / 1.2 V pairs follow this: 235.01/58.72 ≈ 4.00).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Supply {
+    V06,
+    V12,
+}
+
+impl Supply {
+    /// Energy multiplier relative to the 0.6 V calibration point.
+    pub fn energy_scale(self) -> f64 {
+        match self {
+            Supply::V06 => 1.0,
+            Supply::V12 => 4.0, // (1.2/0.6)²
+        }
+    }
+}
+
+/// 1 TOPS/W ⇔ 1 op/pJ. Helper to convert.
+#[inline]
+pub fn tops_per_watt_to_pj_per_op(tops_w: f64) -> f64 {
+    1.0 / tops_w
+}
+
+/// The calibrated energy model. All energies in pJ at 0.6 V, 65 nm.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// D-CiM energy per binary op (1b/1b MAC = 2 ops). Table 3: 235.01
+    /// TOPS/W → 1/235.01 pJ/op.
+    pub dcim_pj_per_op: f64,
+    /// PCU + accumulator energy per *equivalent* binary op (Table 3:
+    /// 2945.92 TOPS/W). One physical PCU multiply-divide covers an entire
+    /// (p,q) cycle over the DP vector, so its energy is amortized n ways;
+    /// the equivalent-op form is what composes across the map.
+    pub pcu_pj_per_op: f64,
+    /// CnM buffer + encoder overhead as a fraction of CnM compute energy
+    /// (Fig. 7(c): the buffer is ~70% of CnM power ⇒ compute is ~30%).
+    pub cnm_buffer_overhead: f64,
+    /// Memory access energies (§2.1).
+    pub sram_pj_per_16b: f64,
+    pub dram_pj_per_access: f64,
+    pub mac16_pj: f64,
+    /// Equivalent 1b cycles per 8b/8b MAC used by the paper's
+    /// normalization (1170.28 / 14.63 = 80 = 64 MAC + 16 shift-acc).
+    pub cycles_per_8b_mac: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            dcim_pj_per_op: 1.0 / 235.01,
+            pcu_pj_per_op: 1.0 / 2945.92,
+            cnm_buffer_overhead: 0.7 / 0.3, // buffer ≈ 70% of CnM power
+            sram_pj_per_16b: 30.375,
+            dram_pj_per_access: 200.0,
+            mac16_pj: 0.075,
+            cycles_per_8b_mac: 80.0,
+        }
+    }
+}
+
+/// Efficiency summary for a computation split across the two domains.
+#[derive(Debug, Clone, Copy)]
+pub struct Efficiency {
+    /// 1b/1b-normalized TOPS/W.
+    pub tops_w_1b: f64,
+    /// 8b/8b TOPS/W (1b value / cycles_per_8b_mac).
+    pub tops_w_8b: f64,
+    /// Total energy per 8b/8b MAC in pJ.
+    pub pj_per_8b_mac: f64,
+}
+
+impl EnergyModel {
+    pub fn at_supply(&self, s: Supply) -> EnergyModel {
+        let k = s.energy_scale();
+        EnergyModel {
+            dcim_pj_per_op: self.dcim_pj_per_op * k,
+            pcu_pj_per_op: self.pcu_pj_per_op * k,
+            ..self.clone()
+        }
+    }
+
+    /// Pure D-CiM 1b/1b efficiency (Table 3 column 1).
+    pub fn dcim_tops_w(&self) -> f64 {
+        1.0 / self.dcim_pj_per_op
+    }
+
+    /// PCU + accumulator 1b/1b efficiency (Table 3 column 2).
+    pub fn pcu_tops_w(&self) -> f64 {
+        1.0 / self.pcu_pj_per_op
+    }
+
+    /// Hybrid efficiency for a computation that executes `digital` cycles
+    /// in the D-CiM domain and `sparsity` cycles in the sparsity domain,
+    /// out of the 64 binary cycles of an 8b/8b MAC. All 64 cycles' worth
+    /// of arithmetic is delivered either way, so the op count is 64 (+16
+    /// shift-acc overhead under the paper's normalization).
+    pub fn hybrid_efficiency(&self, digital_cycles: f64, sparsity_cycles: f64) -> Efficiency {
+        let total_ops = digital_cycles + sparsity_cycles;
+        debug_assert!((total_ops - 64.0).abs() < 1e-9);
+        let energy =
+            digital_cycles * self.dcim_pj_per_op + sparsity_cycles * self.pcu_pj_per_op;
+        let tops_w_1b = total_ops / energy;
+        Efficiency {
+            tops_w_1b,
+            tops_w_8b: tops_w_1b / self.cycles_per_8b_mac,
+            pj_per_8b_mac: energy * self.cycles_per_8b_mac / 64.0,
+        }
+    }
+
+    /// The paper's headline composition: 4-bit operand approximation
+    /// (16 digital / 48 sparsity).
+    pub fn pacim_static(&self) -> Efficiency {
+        self.hybrid_efficiency(16.0, 48.0)
+    }
+
+    /// Peak operating point: dynamic workload configuration at its
+    /// minimum digital budget (10 cycles, §5). This is the configuration
+    /// under which the paper quotes peak TOPS/W.
+    pub fn pacim_peak(&self) -> Efficiency {
+        self.hybrid_efficiency(10.0, 54.0)
+    }
+
+    /// Fully digital 8b/8b baseline (64 digital cycles).
+    pub fn digital_8b(&self) -> Efficiency {
+        self.hybrid_efficiency(64.0, 0.0)
+    }
+
+    /// Energy (pJ) of running a layer given cycle/traffic tallies from the
+    /// architecture simulator. `dcim_ops`/`pcu_ops` are equivalent binary
+    /// op counts; traffic in bits.
+    pub fn layer_energy_pj(
+        &self,
+        dcim_ops: f64,
+        pcu_ops: f64,
+        sram_bits: f64,
+        dram_bits: f64,
+    ) -> f64 {
+        let compute = dcim_ops * self.dcim_pj_per_op
+            + pcu_ops * self.pcu_pj_per_op * (1.0 + self.cnm_buffer_overhead);
+        let mem = sram_bits / 16.0 * self.sram_pj_per_16b
+            + dram_bits / 64.0 * self.dram_pj_per_access;
+        compute + mem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_dcim_and_pcu_match_paper() {
+        let m = EnergyModel::default();
+        assert!((m.dcim_tops_w() - 235.01).abs() < 0.01);
+        assert!((m.pcu_tops_w() - 2945.92).abs() < 0.01);
+        // 12× improvement claim (§4.4).
+        let ratio = m.pcu_tops_w() / m.dcim_tops_w();
+        assert!((ratio - 12.5).abs() < 0.1, "ratio={ratio}");
+    }
+
+    #[test]
+    fn supply_scaling_matches_table3() {
+        let m = EnergyModel::default().at_supply(Supply::V12);
+        assert!((m.dcim_tops_w() - 58.75).abs() < 0.1); // paper: 58.72
+        assert!((m.pcu_tops_w() - 736.48).abs() < 1.0);
+    }
+
+    #[test]
+    fn hybrid_is_about_5x_digital() {
+        // §6.2: the 8b/8b hybrid system is ≈5× a fully digital system.
+        let m = EnergyModel::default();
+        let hybrid = m.pacim_peak().tops_w_1b;
+        let digital = m.digital_8b().tops_w_1b;
+        let ratio = hybrid / digital;
+        assert!(
+            (4.0..5.5).contains(&ratio),
+            "hybrid/digital = {ratio}, paper claims ≈5×"
+        );
+    }
+
+    #[test]
+    fn peak_8b_efficiency_ballpark() {
+        // Paper: 14.63 TOPS/W at 8b/8b (peak). Our structural composition
+        // gives the same order: between the static (9.5) and the paper's
+        // peak — we assert the reproduction band rather than the exact
+        // value (see DESIGN.md §7).
+        let m = EnergyModel::default();
+        let peak = m.pacim_peak().tops_w_8b;
+        let stat = m.pacim_static().tops_w_8b;
+        assert!(stat > 8.0, "static {stat}");
+        assert!(peak > 12.0, "peak {peak}");
+        assert!(peak < 20.0, "peak {peak}");
+    }
+
+    #[test]
+    fn digital_8b_matches_1b_over_80() {
+        let m = EnergyModel::default();
+        let d = m.digital_8b();
+        assert!((d.tops_w_1b - 235.01).abs() < 1e-9);
+        assert!((d.tops_w_8b - 235.01 / 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_dominates_without_reuse() {
+        // §2.1: a 16b MAC is 0.075 pJ vs 30.375 pJ per SRAM access — the
+        // 400× disparity that motivates the sparsity encoding.
+        let m = EnergyModel::default();
+        assert!((m.sram_pj_per_16b / m.mac16_pj - 405.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn layer_energy_monotone_in_traffic() {
+        let m = EnergyModel::default();
+        let base = m.layer_energy_pj(1e6, 1e6, 1e6, 0.0);
+        let more = m.layer_energy_pj(1e6, 1e6, 2e6, 0.0);
+        assert!(more > base);
+    }
+}

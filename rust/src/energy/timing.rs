@@ -1,0 +1,135 @@
+//! Clock/timing model: turns scheduler cycle counts into latency and
+//! TOPS so the coordinator can report both efficiency (TOPS/W) *and*
+//! throughput — the axis Table 4's "Peak TOPS/W" implies but the paper
+//! only reports indirectly.
+//!
+//! Calibration: digital SRAM-CiM macros of the ISSCC'21 [6] generation
+//! clock their bit-serial arrays at 100–200 MHz at low supply; we expose
+//! the frequency as a parameter (default 100 MHz @ 0.6 V, scaling
+//! linearly with supply per the usual near-threshold approximation).
+
+use super::Supply;
+use crate::coordinator::scheduler::ModelReport;
+
+/// Timing parameters of one PACiM bank.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingModel {
+    /// Bit-serial array clock (Hz) at 0.6 V.
+    pub clock_hz: f64,
+    /// Cycles to update one weight row (write driver latency).
+    pub weight_write_cycles: f64,
+    /// PCU multiply-divide latency in array cycles (pipelined: the PCE
+    /// keeps up with the array when `pcus * throughput >= demand`, §4.4).
+    pub pcu_cycles_per_op: f64,
+    /// Parallel banks.
+    pub banks: usize,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        Self {
+            clock_hz: 100e6,
+            weight_write_cycles: 1.0,
+            pcu_cycles_per_op: 1.0,
+            banks: 1,
+        }
+    }
+}
+
+/// Latency/throughput summary for one model run.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingReport {
+    pub compute_s: f64,
+    pub weight_update_s: f64,
+    pub total_s: f64,
+    /// Deliverable ops/s counting all 64 binary cycles per 8b/8b MAC ×2.
+    pub effective_tops: f64,
+}
+
+impl TimingModel {
+    pub fn at_supply(&self, s: Supply) -> TimingModel {
+        let f = match s {
+            Supply::V06 => 1.0,
+            Supply::V12 => 2.0, // ~linear f-V in the near-threshold regime
+        };
+        TimingModel {
+            clock_hz: self.clock_hz * f,
+            ..*self
+        }
+    }
+
+    /// Timing for a scheduled model (per image).
+    pub fn model_timing(&self, rep: &ModelReport, total_macs: f64) -> TimingReport {
+        let cycles: u64 = rep.total_macs_cycles();
+        let weight_writes: f64 = rep
+            .layers
+            .iter()
+            .map(|l| l.weight_loads as f64 * 256.0 * self.weight_write_cycles)
+            .sum();
+        // PCE runs concurrently with the array (weight-stationary); it
+        // adds latency only if it outpaces the array — modeled as the max.
+        let pcu_cycles: f64 = rep.total_pcu_ops() / 256.0 * self.pcu_cycles_per_op;
+        let compute_cycles = (cycles as f64).max(pcu_cycles / 6.0);
+        let compute_s = compute_cycles / self.clock_hz / self.banks as f64;
+        let weight_update_s = weight_writes / self.clock_hz / self.banks as f64;
+        let total_s = compute_s + weight_update_s;
+        TimingReport {
+            compute_s,
+            weight_update_s,
+            total_s,
+            effective_tops: total_macs * 2.0 / total_s / 1e12,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{schedule_model, ScheduleConfig};
+    use crate::workload::{resnet18, Resolution};
+
+    #[test]
+    fn pacim_faster_than_digital() {
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let tm = TimingModel::default();
+        let total_macs: f64 = shapes.iter().map(|s| s.macs() as f64).sum();
+        let dig = tm.model_timing(
+            &schedule_model(&shapes, &ScheduleConfig::digital_baseline()),
+            total_macs,
+        );
+        let pac = tm.model_timing(
+            &schedule_model(&shapes, &ScheduleConfig::pacim_default()),
+            total_macs,
+        );
+        // 75% fewer bit-serial cycles → ~4x faster compute.
+        assert!(pac.compute_s < dig.compute_s * 0.3,
+            "pac {} vs dig {}", pac.compute_s, dig.compute_s);
+        assert!(pac.effective_tops > dig.effective_tops * 2.0);
+    }
+
+    #[test]
+    fn supply_scales_clock() {
+        let tm = TimingModel::default();
+        assert_eq!(tm.at_supply(Supply::V12).clock_hz, 2.0 * tm.clock_hz);
+    }
+
+    #[test]
+    fn multibank_scales_throughput() {
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let total_macs: f64 = shapes.iter().map(|s| s.macs() as f64).sum();
+        let rep = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+        let t1 = TimingModel::default().model_timing(&rep, total_macs);
+        let t4 = TimingModel { banks: 4, ..Default::default() }.model_timing(&rep, total_macs);
+        assert!((t4.total_s - t1.total_s / 4.0).abs() / t1.total_s < 1e-9);
+    }
+
+    #[test]
+    fn weight_updates_accounted() {
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let total_macs: f64 = shapes.iter().map(|s| s.macs() as f64).sum();
+        let rep = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+        let t = TimingModel::default().model_timing(&rep, total_macs);
+        assert!(t.weight_update_s > 0.0);
+        assert!(t.total_s > t.compute_s);
+    }
+}

@@ -1,0 +1,65 @@
+//! # PACiM — sparsity-centric hybrid compute-in-memory, reproduced
+//!
+//! Production-quality reproduction of **"PACiM: A Sparsity-Centric Hybrid
+//! Compute-in-Memory Architecture via Probabilistic Approximation"**
+//! (Zhang et al., ICCAD 2024) as a three-layer rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the architecture simulator and serving
+//!   coordinator: bit-true D-CiM bank model, PAC computation engine,
+//!   on-die sparsity encoder, memory-hierarchy energy model, integer NN
+//!   engine, scheduler, and a threaded batch-serving loop that executes
+//!   AOT-compiled JAX artifacts through PJRT.
+//! - **L2 (python/compile/model.py)** — the quantized CNN compute graph,
+//!   lowered once to HLO text at build time.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels implementing the
+//!   hybrid PAC matmul, validated against a pure-jnp oracle.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every table/figure of the paper to a bench target.
+//!
+//! ## Quick tour
+//!
+//! ```
+//! use pacim::pac::{BitPlanes, ComputeMap, hybrid_mac, PcuRounding};
+//!
+//! // One CiM column: a DP vector pair of UINT8 operands.
+//! let x = vec![200u8, 13, 255, 9, 77, 121, 64, 42];
+//! let w = vec![17u8, 250, 3, 88, 120, 199, 31, 5];
+//! let (xp, wp) = (BitPlanes::from_u8(&x), BitPlanes::from_u8(&w));
+//!
+//! // The paper's 4-bit approximation: 16 digital + 48 sparsity cycles.
+//! let map = ComputeMap::operand_based(4, 4);
+//! let out = hybrid_mac(&xp, &wp, &map, PcuRounding::RoundNearest);
+//! let exact: i64 = x.iter().zip(&w).map(|(&a, &b)| a as i64 * b as i64).sum();
+//! assert!(((out.value - exact).abs() as f64) / (exact as f64) < 0.25);
+//! ```
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod energy;
+pub mod memory;
+pub mod nn;
+pub mod pac;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("shape error: {0}")]
+    Shape(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,251 @@
+//! `pacim` — CLI for the PACiM architecture simulator and serving runtime.
+//!
+//! Subcommands (no clap in the offline vendor set; args are parsed by
+//! hand):
+//!
+//! ```text
+//! pacim info                     # artifact + configuration summary
+//! pacim map [--bits N]           # print the digital/sparsity computing map
+//! pacim rmse [--dp N] [--iters N]  # PAC Monte-Carlo error analysis
+//! pacim simulate [--model resnet18|resnet50|vgg16] [--res cifar|imagenet]
+//!                                # schedule a workload, print cycles/energy/traffic
+//! pacim accuracy [--images N] [--dynamic]  # exact vs PAC accuracy on artifacts
+//! pacim serve [--requests N] [--batch-wait-ms T]  # serve the AOT model via PJRT
+//! ```
+
+use pacim::coordinator::{schedule_model, ScheduleConfig};
+use pacim::energy::EnergyModel;
+use pacim::nn::{evaluate, exact_backend, pac_backend, tiny_resnet, PacConfig, WeightStore};
+use pacim::pac::error_analysis::{pac_rmse, BitModel};
+use pacim::pac::ComputeMap;
+use pacim::runtime::manifest::artifacts_dir;
+use pacim::runtime::Manifest;
+use pacim::workload::{resnet18, resnet50, vgg16_bn, Dataset, Resolution};
+
+fn arg_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(),
+        "map" => map(&args),
+        "rmse" => rmse(&args),
+        "simulate" => simulate(&args),
+        "accuracy" => accuracy(&args),
+        "serve" => serve(&args),
+        _ => {
+            eprintln!(
+                "usage: pacim <info|map|rmse|simulate|accuracy|serve> [options]\n\
+                 see rust/src/main.rs header for options"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info() -> anyhow::Result<()> {
+    println!("PACiM reproduction — ICCAD 2024 (Zhang et al.)");
+    let m = EnergyModel::default();
+    println!("energy model (65nm @0.6V calibration):");
+    println!("  D-CiM      : {:8.2} TOPS/W (1b/1b)", m.dcim_tops_w());
+    println!("  PCU + Acc  : {:8.2} TOPS/W (1b/1b)", m.pcu_tops_w());
+    println!(
+        "  PACiM peak : {:8.2} TOPS/W (1b/1b) = {:.2} TOPS/W (8b/8b)",
+        m.pacim_peak().tops_w_1b,
+        m.pacim_peak().tops_w_8b
+    );
+    match Manifest::load(artifacts_dir()) {
+        Ok(man) => {
+            println!("artifacts ({}):", man.dir.display());
+            println!("  model   : {}", man.get("model")?);
+            println!("  batch   : {}", man.batch()?);
+            println!("  classes : {}", man.classes()?);
+        }
+        Err(e) => println!("artifacts: not built ({e})"),
+    }
+    Ok(())
+}
+
+fn map(args: &[String]) -> anyhow::Result<()> {
+    let bits: u32 = arg_value(args, "--bits")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let m = ComputeMap::operand_based(bits, bits);
+    println!("computing map ({}):", m.name);
+    print!("{}", m.render());
+    println!(
+        "digital cycles: {} / 64  ({}% reduction)",
+        m.digital_cycles(),
+        100 * (64 - m.digital_cycles()) / 64
+    );
+    Ok(())
+}
+
+fn rmse(args: &[String]) -> anyhow::Result<()> {
+    let dp: usize = arg_value(args, "--dp")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1024);
+    let iters: u64 = arg_value(args, "--iters")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(100_000);
+    println!("PAC Monte-Carlo RMSE, DP length {dp}, {iters} iterations:");
+    for (sw, sx) in [(0.25, 0.1), (0.5, 0.3), (0.7, 0.3)] {
+        let r = pac_rmse(dp, sw, sx, iters, 2024, BitModel::Iid);
+        println!(
+            "  Sw={sw:4} Sx={sx:4}  ->  RMSE {:6.2} LSB = {:5.3}% (bias {:+.3})",
+            r.rmse_lsb, r.rmse_pct, r.bias_lsb
+        );
+    }
+    Ok(())
+}
+
+fn simulate(args: &[String]) -> anyhow::Result<()> {
+    let model = arg_value(args, "--model").unwrap_or_else(|| "resnet18".into());
+    let res = match arg_value(args, "--res").as_deref() {
+        Some("imagenet") => Resolution::ImageNet,
+        _ => Resolution::Cifar,
+    };
+    let classes = if res == Resolution::ImageNet { 1000 } else { 10 };
+    let shapes = match model.as_str() {
+        "resnet18" => resnet18(res, classes),
+        "resnet50" => resnet50(res, classes),
+        "vgg16" => vgg16_bn(res, classes),
+        other => anyhow::bail!("unknown model '{other}'"),
+    };
+    let em = EnergyModel::default();
+    println!("workload {model} ({res:?}): {} compute layers", shapes.len());
+    for (label, cfg) in [
+        ("digital 8b/8b", ScheduleConfig::digital_baseline()),
+        ("PACiM static 4b", ScheduleConfig::pacim_default()),
+        ("PACiM dynamic", ScheduleConfig::pacim_dynamic()),
+    ] {
+        let rep = schedule_model(&shapes, &cfg);
+        let e_comp = rep.compute_energy_pj(&em) / 1e6;
+        let e_mem = rep.memory_energy_pj(&em, cfg.msb_bits < 8) / 1e6;
+        println!(
+            "  {label:16} cycles {:>13}  E_compute {:9.2} uJ  E_mem {:9.2} uJ  act-traffic red. {:5.1}%",
+            rep.total_macs_cycles(),
+            e_comp,
+            e_mem,
+            rep.act_traffic_reduction() * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn accuracy(args: &[String]) -> anyhow::Result<()> {
+    let man = Manifest::load(artifacts_dir())?;
+    let store = WeightStore::load(man.path("weights")?)?;
+    let ds = Dataset::load(man.path("dataset")?)?;
+    let model = tiny_resnet(&store, ds.h, ds.n_classes)?;
+    let n: usize = arg_value(args, "--images")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(200)
+        .min(ds.n);
+    let images: Vec<&[u8]> = (0..n).map(|i| ds.image(i)).collect();
+    let labels: Vec<usize> = (0..n).map(|i| ds.label(i)).collect();
+    let threads = std::thread::available_parallelism()?.get();
+
+    let exact = exact_backend(&model);
+    let (acc_e, _) = evaluate(&model, &exact, &images, &labels, threads);
+    println!("exact 8b/8b accuracy : {:.2}% ({n} images)", acc_e * 100.0);
+
+    let mut cfg = PacConfig::default();
+    if has_flag(args, "--dynamic") {
+        cfg.thresholds = Some(pacim::arch::ThresholdSet::default_cifar());
+    }
+    let pac = pac_backend(&model, cfg);
+    let (acc_p, stats) = evaluate(&model, &pac, &images, &labels, threads);
+    println!(
+        "PAC 4-bit accuracy   : {:.2}%  (loss {:+.2}%)",
+        acc_p * 100.0,
+        (acc_p - acc_e) * 100.0
+    );
+    if stats.levels.total() > 0 {
+        println!(
+            "dynamic avg cycles   : {:.2} (reduction vs 64: {:.1}%)",
+            stats.levels.average_cycles(),
+            stats.levels.cycle_reduction_vs_digital() * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &[String]) -> anyhow::Result<()> {
+    use pacim::coordinator::{BatchPolicy, InferenceServer};
+    use pacim::runtime::PjrtExecutor;
+    let man = Manifest::load(artifacts_dir())?;
+    let ds = Dataset::load(man.path("dataset")?)?;
+    let requests: usize = arg_value(args, "--requests")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(64)
+        .min(ds.n);
+    let wait_ms: u64 = arg_value(args, "--batch-wait-ms")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2);
+    let hlo = man.path("model_pac")?;
+    let (batch, in_elems, classes) = (man.batch()?, man.input_elems()?, man.classes()?);
+    let server = InferenceServer::start_with(
+        move || PjrtExecutor::load(&hlo, batch, in_elems, classes),
+        BatchPolicy {
+            max_wait: std::time::Duration::from_millis(wait_ms),
+        },
+    )?;
+    let h = server.handle();
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for i in 0..requests {
+            let h = h.clone();
+            let img: Vec<f32> = ds
+                .image(i)
+                .iter()
+                .map(|&q| ds.params.dequantize(q))
+                .collect();
+            let label = ds.label(i);
+            joins.push(s.spawn(move || {
+                let r = h.infer(img).expect("infer");
+                let pred = r
+                    .logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                (pred == label) as usize
+            }));
+        }
+        for j in joins {
+            correct += j.join().unwrap();
+        }
+    });
+    let wall = t0.elapsed();
+    let mut metrics = server.stop();
+    println!("served {requests} requests in {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!(
+        "throughput {:.1} img/s | p50 {:.0} us | p95 {:.0} us | p99 {:.0} us | mean batch {:.1}",
+        requests as f64 / wall.as_secs_f64(),
+        metrics.latency_percentile_us(50.0),
+        metrics.latency_percentile_us(95.0),
+        metrics.latency_percentile_us(99.0),
+        metrics.mean_batch_occupancy()
+    );
+    println!("accuracy {:.2}%", correct as f64 / requests as f64 * 100.0);
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Memory-hierarchy traffic and energy model (§2.1, Fig. 7(b)).
+//!
+//! PACiM's system-level claim is that replacing LSB activation transfers
+//! with sparsity counts cuts cache (and weight DRAM) traffic by 40–50%.
+//! This module computes the bit traffic of both schemes analytically from
+//! layer geometry — the quantities Fig. 7(b) plots — and accumulates
+//! simulated traffic counters for end-to-end energy reports.
+
+pub mod traffic;
+
+pub use traffic::{activation_traffic, weight_traffic, TrafficBits};
+
+use crate::energy::EnergyModel;
+
+/// Running tally of memory events during a simulation.
+#[derive(Debug, Clone, Default)]
+pub struct MemoryCounters {
+    /// SRAM cache bits read (activations, sparsity words).
+    pub sram_read_bits: u64,
+    /// SRAM cache bits written.
+    pub sram_write_bits: u64,
+    /// DRAM bits transferred (weight loading).
+    pub dram_bits: u64,
+}
+
+impl MemoryCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, other: &MemoryCounters) {
+        self.sram_read_bits += other.sram_read_bits;
+        self.sram_write_bits += other.sram_write_bits;
+        self.dram_bits += other.dram_bits;
+    }
+
+    pub fn total_sram_bits(&self) -> u64 {
+        self.sram_read_bits + self.sram_write_bits
+    }
+
+    /// Energy in pJ under the given model. SRAM is charged per 16-bit
+    /// word (§2.1's 30.375 pJ/access figure), DRAM per 64-bit access.
+    pub fn energy_pj(&self, m: &EnergyModel) -> f64 {
+        self.total_sram_bits() as f64 / 16.0 * m.sram_pj_per_16b
+            + self.dram_bits as f64 / 64.0 * m.dram_pj_per_access
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut a = MemoryCounters::new();
+        a.sram_read_bits = 100;
+        let mut b = MemoryCounters::new();
+        b.sram_read_bits = 20;
+        b.dram_bits = 64;
+        a.add(&b);
+        assert_eq!(a.sram_read_bits, 120);
+        assert_eq!(a.dram_bits, 64);
+    }
+
+    #[test]
+    fn energy_charges_both_levels() {
+        let m = EnergyModel::default();
+        let c = MemoryCounters {
+            sram_read_bits: 16,
+            sram_write_bits: 0,
+            dram_bits: 64,
+        };
+        let e = c.energy_pj(&m);
+        assert!((e - (30.375 + 200.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,111 @@
+//! Analytic activation/weight traffic for baseline CiM vs PACiM
+//! (Fig. 7(b) and the 40–50% memory-access-reduction claim).
+//!
+//! Baseline: every output activation is written to cache as 8 bits and
+//! read back 8 bits for the next layer (per channel).
+//!
+//! PACiM: only the 4 MSBs travel in binary form; the on-die encoder
+//! appends, per encoding group (a pixel across its channels for CONV,
+//! the whole layer for LINEAR), 8 sparsity counters of ⌈log2(C)⌉ bits.
+//! All 8 bit indices are encoded — the LSB counters feed the PAC units,
+//! the full set feeds the SPEC speculation (Eq. 5) and the zero-point
+//! correction.
+
+use crate::pac::sparsity::counter_bits;
+
+/// Bits moved for one encoding group (e.g. one output pixel across C
+/// channels), one direction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrafficBits {
+    pub baseline: u64,
+    pub pacim: u64,
+}
+
+impl TrafficBits {
+    /// Fractional reduction (positive = PACiM moves fewer bits).
+    pub fn reduction(&self) -> f64 {
+        1.0 - self.pacim as f64 / self.baseline as f64
+    }
+}
+
+/// Activation traffic per encoding group of `channels` 8-bit activations,
+/// with `msb_bits` transmitted in binary (paper default 4).
+pub fn activation_traffic(channels: usize, msb_bits: u32) -> TrafficBits {
+    assert!(channels > 0);
+    let baseline = channels as u64 * 8;
+    let counters = 8 * counter_bits(channels) as u64;
+    let pacim = channels as u64 * msb_bits as u64 + counters;
+    TrafficBits { baseline, pacim }
+}
+
+/// Weight traffic per DP group of `dp_len` 8-bit weights loaded from
+/// DRAM: PACiM stores 4-bit MSB weights + offline-encoded sparsity.
+pub fn weight_traffic(dp_len: usize, msb_bits: u32) -> TrafficBits {
+    assert!(dp_len > 0);
+    let baseline = dp_len as u64 * 8;
+    let counters = 8 * counter_bits(dp_len) as u64;
+    let pacim = dp_len as u64 * msb_bits as u64 + counters;
+    TrafficBits { baseline, pacim }
+}
+
+/// Fig. 7(b) sweep: activation cache-access reduction vs channel count.
+pub fn reduction_vs_channels(channels: &[usize], msb_bits: u32) -> Vec<(usize, f64)> {
+    channels
+        .iter()
+        .map(|&c| (c, activation_traffic(c, msb_bits).reduction()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_64_channel_point() {
+        // Fig. 7(b): at channel length 64 the reduction is ≈40%.
+        let t = activation_traffic(64, 4);
+        let r = t.reduction();
+        assert!((0.37..0.45).contains(&r), "reduction={r}");
+    }
+
+    #[test]
+    fn deep_layers_approach_50pct() {
+        // Fig. 7(b): up to 50% in deeper CONV/LINEAR layers.
+        let t = activation_traffic(2048, 4);
+        assert!(t.reduction() > 0.47, "reduction={}", t.reduction());
+        // Asymptote is exactly 50% (4 of 8 bits).
+        let t = activation_traffic(1 << 20, 4);
+        assert!((t.reduction() - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn reduction_monotone_in_channels() {
+        let rs = reduction_vs_channels(&[16, 32, 64, 128, 256, 512, 1024], 4);
+        for w in rs.windows(2) {
+            assert!(w[1].1 >= w[0].1, "{:?}", rs);
+        }
+    }
+
+    #[test]
+    fn small_channel_counts_can_lose() {
+        // With very few channels the counter overhead can exceed the LSB
+        // saving — the encoder would be configured off; we only assert the
+        // model exposes this crossover (traffic math is honest).
+        let t = activation_traffic(8, 4);
+        assert!(t.pacim as f64 > t.baseline as f64 * 0.5);
+    }
+
+    #[test]
+    fn weight_traffic_nearly_halves() {
+        // §4.2: weight DRAM access reduced ≈50% (4-bit MSB storage).
+        let t = weight_traffic(1152, 4); // 3×3×128 CONV kernel
+        assert!((0.45..0.51).contains(&t.reduction()), "{}", t.reduction());
+    }
+
+    #[test]
+    fn five_bit_mode() {
+        // 5-bit approximation (for ImageNet-class accuracy) still saves.
+        let t = activation_traffic(512, 5);
+        assert!((0.30..0.40).contains(&t.reduction()), "{}", t.reduction());
+    }
+}

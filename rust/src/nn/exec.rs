@@ -1,0 +1,409 @@
+//! Bit-true quantized inference engine (the paper's "PyTorch-based
+//! simulation framework that accurately reflects bitwise operations of
+//! CiM", §6.1 — re-implemented in rust).
+//!
+//! The engine interprets the model IR over per-image CHW `u8`
+//! activations. Convolutions/linears run through a [`MacBackend`]: the
+//! exact backend computes the integer GEMM directly; the PAC backend
+//! (`nn::pac_exec`) replays the hybrid digital/sparsity computation of
+//! the PACiM bank. Everything around the MACs (im2col, requantization,
+//! pooling, residual adds) is shared, so accuracy differences between
+//! engines isolate the approximation itself.
+
+use super::layers::{ConvLayer, Model, Op};
+use crate::arch::LevelHistogram;
+use crate::tensor::{im2col, QuantParams, Tensor};
+
+/// Per-run statistics (accuracy benches aggregate these across images).
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Total MACs executed.
+    pub macs: u64,
+    /// Digital bit-serial cycles (per output MAC, summed).
+    pub digital_cycles: u64,
+    /// PCU (sparsity-domain) ops.
+    pub pcu_ops: u64,
+    /// Dynamic-level decisions (empty when dynamic config is off).
+    pub levels: LevelHistogram,
+}
+
+impl RunStats {
+    pub fn merge(&mut self, other: &RunStats) {
+        self.macs += other.macs;
+        self.digital_cycles += other.digital_cycles;
+        self.pcu_ops += other.pcu_ops;
+        self.levels.merge(&other.levels);
+    }
+
+    /// Average digital cycles per 8b/8b MAC (64 would be fully digital).
+    pub fn avg_cycles_per_mac(&self) -> f64 {
+        if self.macs == 0 {
+            return 0.0;
+        }
+        self.digital_cycles as f64 / self.macs as f64
+    }
+}
+
+/// Backend computing signed accumulators `Σ_k (x−zpx)(w−zpw)` for every
+/// output channel of one im2col patch.
+pub trait MacBackend {
+    /// Called once per compute layer in program order; `layer_id` indexes
+    /// subsequent `gemm` calls.
+    fn prepare(&mut self, layer_id: usize, weight: &Tensor<u8>, zpw: i32);
+
+    /// Accumulators for one patch (length = weight rows).
+    fn gemm(&self, layer_id: usize, patch: &[u8], zpx: i32, stats: &mut RunStats) -> Vec<i64>;
+}
+
+/// Exact integer backend (the 8-bit QAT/PTQ reference).
+#[derive(Default)]
+pub struct ExactBackend {
+    /// Per layer: (weights [n, k] as i32-ready u8, zpw, k).
+    layers: Vec<(Tensor<u8>, i32)>,
+}
+
+impl MacBackend for ExactBackend {
+    fn prepare(&mut self, layer_id: usize, weight: &Tensor<u8>, zpw: i32) {
+        assert_eq!(layer_id, self.layers.len(), "layers must prepare in order");
+        self.layers.push((weight.clone(), zpw));
+    }
+
+    fn gemm(&self, layer_id: usize, patch: &[u8], zpx: i32, stats: &mut RunStats) -> Vec<i64> {
+        let (w, zpw) = &self.layers[layer_id];
+        let k = patch.len();
+        let n = w.shape()[0];
+        debug_assert_eq!(w.shape()[1], k);
+        let wd = w.data();
+        let mut out = Vec::with_capacity(n);
+        for oc in 0..n {
+            let row = &wd[oc * k..(oc + 1) * k];
+            let mut acc = 0i64;
+            for (&x, &wv) in patch.iter().zip(row) {
+                acc += (x as i64 - zpx as i64) * (wv as i64 - *zpw as i64);
+            }
+            out.push(acc);
+        }
+        stats.macs += (n * k) as u64;
+        stats.digital_cycles += (n as u64) * 64; // 8b/8b fully digital
+        out
+    }
+}
+
+/// The shared interpreter. Runs `model` on one quantized CHW image.
+pub fn run_model<B: MacBackend>(
+    model: &Model,
+    backend: &B,
+    image: &[u8],
+) -> (Vec<f32>, RunStats) {
+    assert_eq!(
+        image.len(),
+        model.in_c * model.in_hw * model.in_hw,
+        "input size mismatch"
+    );
+    let mut stats = RunStats::default();
+    let mut act = image.to_vec();
+    let mut params = model.input_params;
+    let mut shape = (model.in_c, model.in_hw, model.in_hw);
+    let mut skips: Vec<(Vec<u8>, QuantParams, (usize, usize, usize))> = Vec::new();
+    let mut layer_id = 0usize;
+    let mut logits: Option<Vec<f32>> = None;
+
+    for op in &model.ops {
+        match op {
+            Op::Conv2d(conv) => {
+                let (out, op_params, oshape) =
+                    run_conv(conv, &act, params, layer_id, backend, &mut stats);
+                act = out;
+                params = op_params;
+                shape = oshape;
+                layer_id += 1;
+            }
+            Op::Linear(lin) => {
+                let (c, h, w) = shape;
+                assert_eq!(c * h * w, lin.in_f, "linear input mismatch at {}", lin.name);
+                let accs = backend.gemm(layer_id, &act, params.zero_point, &mut stats);
+                layer_id += 1;
+                let sx = params.scale;
+                let sw = lin.wparams.scale;
+                let reals: Vec<f32> = accs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &a)| a as f32 * sx * sw + lin.bias[i])
+                    .collect();
+                match &lin.out_params {
+                    None => {
+                        logits = Some(reals);
+                        break;
+                    }
+                    Some(oq) => {
+                        act = reals
+                            .iter()
+                            .map(|&r| oq.quantize(if lin.relu { r.max(0.0) } else { r }))
+                            .collect();
+                        params = *oq;
+                        shape = (lin.out_f, 1, 1);
+                    }
+                }
+            }
+            Op::MaxPool2 => {
+                let (c, h, w) = shape;
+                let (oh, ow) = (h / 2, w / 2);
+                let mut out = vec![0u8; c * oh * ow];
+                for ch in 0..c {
+                    for y in 0..oh {
+                        for x in 0..ow {
+                            let mut m = 0u8;
+                            for dy in 0..2 {
+                                for dx in 0..2 {
+                                    m = m.max(act[(ch * h + 2 * y + dy) * w + 2 * x + dx]);
+                                }
+                            }
+                            out[(ch * oh + y) * ow + x] = m;
+                        }
+                    }
+                }
+                act = out;
+                shape = (c, oh, ow);
+            }
+            Op::GlobalAvgPool => {
+                let (c, h, w) = shape;
+                let px = h * w;
+                let mut out = vec![0u8; c];
+                for ch in 0..c {
+                    let sum: u32 = act[ch * px..(ch + 1) * px].iter().map(|&v| v as u32).sum();
+                    out[ch] = ((sum + px as u32 / 2) / px as u32) as u8;
+                }
+                act = out;
+                shape = (c, 1, 1);
+            }
+            Op::SaveSkip => {
+                skips.push((act.clone(), params, shape));
+            }
+            Op::AddSkip { out_params, relu } => {
+                let (skip, skip_params, skip_shape) =
+                    skips.pop().expect("AddSkip without SaveSkip");
+                assert_eq!(skip_shape, shape, "skip shape mismatch");
+                act = act
+                    .iter()
+                    .zip(&skip)
+                    .map(|(&a, &b)| {
+                        let r = params.dequantize(a) + skip_params.dequantize(b);
+                        out_params.quantize(if *relu { r.max(0.0) } else { r })
+                    })
+                    .collect();
+                params = *out_params;
+            }
+        }
+    }
+    (
+        logits.expect("model did not end in a logits layer"),
+        stats,
+    )
+}
+
+fn run_conv<B: MacBackend>(
+    conv: &ConvLayer,
+    act: &[u8],
+    in_params: QuantParams,
+    layer_id: usize,
+    backend: &B,
+    stats: &mut RunStats,
+) -> (Vec<u8>, QuantParams, (usize, usize, usize)) {
+    let g = &conv.geom;
+    let cols = im2col(act, g, in_params.zero_point as u8);
+    let k = g.dp_len();
+    let pixels = g.out_pixels();
+    let sx = in_params.scale;
+    let sw = conv.wparams.scale;
+    // Output is CHW: out[oc][pixel].
+    let mut out = vec![0u8; g.out_c * pixels];
+    for pix in 0..pixels {
+        let patch = &cols[pix * k..(pix + 1) * k];
+        let accs = backend.gemm(layer_id, patch, in_params.zero_point, stats);
+        for (oc, &acc) in accs.iter().enumerate() {
+            let real = acc as f32 * sx * sw + conv.bias[oc];
+            let real = if conv.relu { real.max(0.0) } else { real };
+            out[oc * pixels + pix] = conv.out_params.quantize(real);
+        }
+    }
+    (
+        out,
+        conv.out_params,
+        (g.out_c, g.out_h(), g.out_w()),
+    )
+}
+
+/// Convenience: build an exact backend prepared for `model`.
+pub fn exact_backend(model: &Model) -> ExactBackend {
+    let mut b = ExactBackend::default();
+    let mut id = 0;
+    for op in &model.ops {
+        match op {
+            Op::Conv2d(c) => {
+                b.prepare(id, &c.weight, c.wparams.zero_point);
+                id += 1;
+            }
+            Op::Linear(l) => {
+                b.prepare(id, &l.weight, l.wparams.zero_point);
+                id += 1;
+            }
+            _ => {}
+        }
+    }
+    b
+}
+
+/// Run a whole dataset slice and return top-1 accuracy.
+pub fn evaluate<B: MacBackend + Sync>(
+    model: &Model,
+    backend: &B,
+    images: &[&[u8]],
+    labels: &[usize],
+    threads: usize,
+) -> (f64, RunStats) {
+    assert_eq!(images.len(), labels.len());
+    let n = images.len();
+    let correct = std::sync::atomic::AtomicUsize::new(0);
+    let all_stats = std::sync::Mutex::new(RunStats::default());
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.max(1) {
+            s.spawn(|| {
+                let mut local = RunStats::default();
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let (logits, st) = run_model(model, backend, images[i]);
+                    local.merge(&st);
+                    let pred = logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    if pred == labels[i] {
+                        correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+                all_stats.lock().unwrap().merge(&local);
+            });
+        }
+    });
+    let acc = correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / n.max(1) as f64;
+    (acc, all_stats.into_inner().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::{testutil, tiny_resnet};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_engine_runs_tiny_resnet() {
+        let mut rng = Rng::new(200);
+        let store = testutil::random_store(&mut rng, 8, 10);
+        let model = tiny_resnet(&store, 16, 10).unwrap();
+        let backend = exact_backend(&model);
+        let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
+        let (logits, stats) = run_model(&model, &backend, &img);
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|l| l.is_finite()));
+        assert_eq!(stats.macs, model.macs());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut rng = Rng::new(201);
+        let store = testutil::random_store(&mut rng, 8, 10);
+        let model = tiny_resnet(&store, 16, 10).unwrap();
+        let backend = exact_backend(&model);
+        let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
+        let (a, _) = run_model(&model, &backend, &img);
+        let (b, _) = run_model(&model, &backend, &img);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_images_different_logits() {
+        let mut rng = Rng::new(202);
+        let store = testutil::random_store(&mut rng, 8, 10);
+        let model = tiny_resnet(&store, 16, 10).unwrap();
+        let backend = exact_backend(&model);
+        let img1: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
+        let img2: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
+        let (a, _) = run_model(&model, &backend, &img1);
+        let (b, _) = run_model(&model, &backend, &img2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn evaluate_counts_accuracy() {
+        let mut rng = Rng::new(203);
+        let store = testutil::random_store(&mut rng, 8, 4);
+        let model = tiny_resnet(&store, 16, 4).unwrap();
+        let backend = exact_backend(&model);
+        let imgs: Vec<Vec<u8>> = (0..8)
+            .map(|_| (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+        // Label each image by the model's own prediction → accuracy 1.0.
+        let labels: Vec<usize> = refs
+            .iter()
+            .map(|img| {
+                let (lg, _) = run_model(&model, &backend, img);
+                lg.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        let (acc, stats) = evaluate(&model, &backend, &refs, &labels, 4);
+        assert_eq!(acc, 1.0);
+        assert_eq!(stats.macs, model.macs() * 8);
+    }
+
+    #[test]
+    fn maxpool_and_gap_shapes() {
+        // Covered implicitly by tiny_vgg when artifacts exist; here check
+        // the pure ops via a crafted mini-program.
+        use crate::nn::layers::{LinearLayer, Model, Op};
+        use crate::tensor::{QuantParams, Tensor};
+        let ident = QuantParams::new(1.0, 0);
+        let lin = LinearLayer {
+            name: "fc".into(),
+            in_f: 1,
+            out_f: 2,
+            weight: Tensor::from_vec(&[2, 1], vec![1u8, 3]),
+            wparams: QuantParams::new(1.0, 0),
+            bias: vec![0.0, 0.0],
+            out_params: None,
+            relu: false,
+        };
+        let model = Model {
+            name: "mini".into(),
+            ops: vec![Op::MaxPool2, Op::GlobalAvgPool, Op::Linear(lin)],
+            input_params: ident,
+            in_c: 1,
+            in_hw: 4,
+            num_classes: 2,
+        };
+        let mut backend = ExactBackend::default();
+        if let Op::Linear(l) = &model.ops[2] {
+            backend.prepare(0, &l.weight, 0);
+        }
+        // 4×4 image; maxpool → 2×2 of maxes; GAP → mean.
+        let img = vec![
+            1u8, 2, 3, 4, //
+            5, 6, 7, 8, //
+            9, 10, 11, 12, //
+            13, 14, 15, 16,
+        ];
+        let (logits, _) = run_model(&model, &backend, &img);
+        // maxes = [6, 8, 14, 16] → mean 11 → logits [11, 33].
+        assert_eq!(logits, vec![11.0, 33.0]);
+    }
+}

@@ -1,0 +1,367 @@
+//! Quantized-model IR and the tiny-model builders.
+//!
+//! A model is a sequence of ops over per-image CHW `u8` activations with
+//! an explicit skip-connection stack (sufficient for the ResNet/VGG
+//! families). Topology is defined identically in
+//! `python/compile/model.py`; weights and quantization parameters come
+//! from `weights.bin`. The integration tests assert the rust engines and
+//! the exported JAX model agree on real inputs.
+
+use super::weights::WeightStore;
+use crate::tensor::{Conv2dGeom, QuantParams, Tensor};
+use crate::{Error, Result};
+
+/// Convolution layer with folded BN and PTQ parameters.
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    pub name: String,
+    pub geom: Conv2dGeom,
+    /// `[out_c, dp_len]` quantized weights (OIHW flattened per row).
+    pub weight: Tensor<u8>,
+    pub wparams: QuantParams,
+    /// Float bias (includes the BN shift), applied post-dequantization.
+    pub bias: Vec<f32>,
+    pub out_params: QuantParams,
+    pub relu: bool,
+}
+
+/// Fully-connected layer.
+#[derive(Debug, Clone)]
+pub struct LinearLayer {
+    pub name: String,
+    pub in_f: usize,
+    pub out_f: usize,
+    /// `[out_f, in_f]` quantized weights.
+    pub weight: Tensor<u8>,
+    pub wparams: QuantParams,
+    pub bias: Vec<f32>,
+    /// `None` ⇒ this layer emits float logits (the classifier head).
+    pub out_params: Option<QuantParams>,
+    pub relu: bool,
+}
+
+/// One op of the sequential program.
+#[derive(Debug, Clone)]
+pub enum Op {
+    Conv2d(ConvLayer),
+    Linear(LinearLayer),
+    /// 2×2/2 max pooling (quantization-transparent).
+    MaxPool2,
+    /// Global average pooling to 1×1 (rounds in the quantized domain).
+    GlobalAvgPool,
+    /// Push the current activation (and its params) onto the skip stack.
+    SaveSkip,
+    /// Pop the skip stack and add: `out = quant(deq(a) + deq(skip))`.
+    AddSkip { out_params: QuantParams, relu: bool },
+}
+
+/// A quantized model.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub ops: Vec<Op>,
+    pub input_params: QuantParams,
+    pub in_c: usize,
+    pub in_hw: usize,
+    pub num_classes: usize,
+}
+
+impl Model {
+    /// Compute layers only (conv + linear), for mapping/energy analytics.
+    pub fn compute_layers(&self) -> Vec<(&str, Conv2dGeom)> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::Conv2d(c) => Some((c.name.as_str(), c.geom)),
+                Op::Linear(l) => Some((
+                    l.name.as_str(),
+                    Conv2dGeom {
+                        in_c: l.in_f,
+                        in_h: 1,
+                        in_w: 1,
+                        out_c: l.out_f,
+                        kh: 1,
+                        kw: 1,
+                        stride: 1,
+                        pad: 0,
+                    },
+                )),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Total MACs per image.
+    pub fn macs(&self) -> u64 {
+        self.compute_layers().iter().map(|(_, g)| g.macs()).sum()
+    }
+}
+
+fn load_conv(
+    store: &WeightStore,
+    name: &str,
+    geom: Conv2dGeom,
+    relu: bool,
+) -> Result<ConvLayer> {
+    let w = store.get(&format!("{name}.w"))?;
+    let expect = [geom.out_c, geom.dp_len()];
+    if w.shape != expect {
+        return Err(Error::Shape(format!(
+            "{name}.w shape {:?} != expected {:?}",
+            w.shape, expect
+        )));
+    }
+    let bias = store.get(&format!("{name}.b"))?.as_f32()?;
+    if bias.len() != geom.out_c {
+        return Err(Error::Shape(format!("{name}.b length mismatch")));
+    }
+    Ok(ConvLayer {
+        name: name.into(),
+        geom,
+        weight: Tensor::from_vec(&expect, w.as_u8()?.to_vec()),
+        wparams: w.quant_params(),
+        bias,
+        out_params: store.get_qparams(&format!("{name}.oq"))?,
+        relu,
+    })
+}
+
+fn load_linear(
+    store: &WeightStore,
+    name: &str,
+    in_f: usize,
+    out_f: usize,
+    logits: bool,
+) -> Result<LinearLayer> {
+    let w = store.get(&format!("{name}.w"))?;
+    let expect = [out_f, in_f];
+    if w.shape != expect {
+        return Err(Error::Shape(format!(
+            "{name}.w shape {:?} != expected {:?}",
+            w.shape, expect
+        )));
+    }
+    let bias = store.get(&format!("{name}.b"))?.as_f32()?;
+    Ok(LinearLayer {
+        name: name.into(),
+        in_f,
+        out_f,
+        weight: Tensor::from_vec(&expect, w.as_u8()?.to_vec()),
+        wparams: w.quant_params(),
+        bias,
+        out_params: if logits {
+            None
+        } else {
+            Some(store.get_qparams(&format!("{name}.oq"))?)
+        },
+        relu: !logits,
+    })
+}
+
+/// The `tiny_resnet` topology trained at build time (see
+/// `python/compile/model.py::tiny_resnet`, which must stay in sync):
+///
+/// ```text
+/// stem:   conv3×3(3→C)/1 + relu
+/// block1: save; conv3×3(C→C)+relu; conv3×3(C→C); add+relu
+/// down1:  conv3×3(C→2C)/2 + relu
+/// block2: residual block @2C
+/// down2:  conv3×3(2C→4C)/2 + relu
+/// block3: residual block @4C
+/// head:   global avgpool; linear(4C→classes) → logits
+/// ```
+pub fn tiny_resnet(store: &WeightStore, hw: usize, num_classes: usize) -> Result<Model> {
+    // Infer width from the stem weights: [C, 27].
+    let c = store.get("stem.w")?.shape[0];
+    let conv = |n: &str, ic, oc, hw, s, relu| -> Result<Op> {
+        Ok(Op::Conv2d(load_conv(
+            store,
+            n,
+            Conv2dGeom {
+                in_c: ic,
+                in_h: hw,
+                in_w: hw,
+                out_c: oc,
+                kh: 3,
+                kw: 3,
+                stride: s,
+                pad: 1,
+            },
+            relu,
+        )?))
+    };
+    let block = |tag: &str, ch, hw, ops: &mut Vec<Op>| -> Result<()> {
+        ops.push(Op::SaveSkip);
+        ops.push(conv(&format!("{tag}.conv1"), ch, ch, hw, 1, true)?);
+        ops.push(conv(&format!("{tag}.conv2"), ch, ch, hw, 1, false)?);
+        ops.push(Op::AddSkip {
+            out_params: store.get_qparams(&format!("{tag}.add.oq"))?,
+            relu: true,
+        });
+        Ok(())
+    };
+    let mut ops = Vec::new();
+    ops.push(conv("stem", 3, c, hw, 1, true)?);
+    block("block1", c, hw, &mut ops)?;
+    ops.push(conv("down1", c, 2 * c, hw, 2, true)?);
+    block("block2", 2 * c, hw / 2, &mut ops)?;
+    ops.push(conv("down2", 2 * c, 4 * c, hw / 2, 2, true)?);
+    block("block3", 4 * c, hw / 4, &mut ops)?;
+    ops.push(Op::GlobalAvgPool);
+    ops.push(Op::Linear(load_linear(store, "fc", 4 * c, num_classes, true)?));
+    Ok(Model {
+        name: format!("tiny_resnet_c{c}"),
+        ops,
+        input_params: store.get_qparams("input.oq")?,
+        in_c: 3,
+        in_hw: hw,
+        num_classes,
+    })
+}
+
+/// The `tiny_vgg` topology (second accuracy model, Table 2 substitution):
+///
+/// ```text
+/// conv3×3(3→C)+relu; conv3×3(C→C)+relu; maxpool
+/// conv3×3(C→2C)+relu; conv3×3(2C→2C)+relu; maxpool
+/// conv3×3(2C→4C)+relu; conv3×3(4C→4C)+relu; maxpool
+/// global avgpool; linear(4C→classes)
+/// ```
+pub fn tiny_vgg(store: &WeightStore, hw: usize, num_classes: usize) -> Result<Model> {
+    let c = store.get("conv1a.w")?.shape[0];
+    let conv = |n: &str, ic, oc, hw| -> Result<Op> {
+        Ok(Op::Conv2d(load_conv(
+            store,
+            n,
+            Conv2dGeom {
+                in_c: ic,
+                in_h: hw,
+                in_w: hw,
+                out_c: oc,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+            },
+            true,
+        )?))
+    };
+    let ops = vec![
+        conv("conv1a", 3, c, hw)?,
+        conv("conv1b", c, c, hw)?,
+        Op::MaxPool2,
+        conv("conv2a", c, 2 * c, hw / 2)?,
+        conv("conv2b", 2 * c, 2 * c, hw / 2)?,
+        Op::MaxPool2,
+        conv("conv3a", 2 * c, 4 * c, hw / 4)?,
+        conv("conv3b", 4 * c, 4 * c, hw / 4)?,
+        Op::MaxPool2,
+        Op::GlobalAvgPool,
+        Op::Linear(load_linear(store, "fc", 4 * c, num_classes, true)?),
+    ];
+    Ok(Model {
+        name: format!("tiny_vgg_c{c}"),
+        ops,
+        input_params: store.get_qparams("input.oq")?,
+        in_c: 3,
+        in_hw: hw,
+        num_classes,
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Random-model construction for engine tests (no artifacts needed).
+    use super::*;
+    use crate::quant::{calibrate_minmax, calibrate_weights_symmetric};
+    use crate::util::rng::Rng;
+
+    pub fn random_store(rng: &mut Rng, c: usize, classes: usize) -> WeightStore {
+        let mut s = WeightStore::default();
+        s.insert_f32("input.oq", &[2], &[1.0 / 64.0, 128.0]);
+        let mut conv = |s: &mut WeightStore, name: &str, ic: usize, oc: usize| {
+            let k = ic * 9;
+            let wf: Vec<f32> = (0..oc * k)
+                .map(|_| (rng.next_f32() - 0.5) * 0.6)
+                .collect();
+            let wt = Tensor::from_vec(&[oc, k], wf.clone());
+            let wp = calibrate_weights_symmetric(&wt);
+            let wq: Vec<u8> = wf.iter().map(|&v| wp.quantize(v)).collect();
+            s.insert_u8(&format!("{name}.w"), &[oc, k], wq, wp);
+            let b: Vec<f32> = (0..oc).map(|_| (rng.next_f32() - 0.5) * 0.1).collect();
+            s.insert_f32(&format!("{name}.b"), &[oc], &b);
+            let oqp = calibrate_minmax(0.0, 4.0);
+            s.insert_f32(
+                &format!("{name}.oq"),
+                &[2],
+                &[oqp.scale, oqp.zero_point as f32],
+            );
+        };
+        conv(&mut s, "stem", 3, c);
+        for (tag, ch) in [("block1", c), ("block2", 2 * c), ("block3", 4 * c)] {
+            conv(&mut s, &format!("{tag}.conv1"), ch, ch);
+            conv(&mut s, &format!("{tag}.conv2"), ch, ch);
+            let oqp = calibrate_minmax(0.0, 6.0);
+            s.insert_f32(
+                &format!("{tag}.add.oq"),
+                &[2],
+                &[oqp.scale, oqp.zero_point as f32],
+            );
+        }
+        conv(&mut s, "down1", c, 2 * c);
+        conv(&mut s, "down2", 2 * c, 4 * c);
+        let k = 4 * c;
+        let wf: Vec<f32> = (0..classes * k)
+            .map(|_| (rng.next_f32() - 0.5) * 0.8)
+            .collect();
+        let wt = Tensor::from_vec(&[classes, k], wf.clone());
+        let wp = calibrate_weights_symmetric(&wt);
+        let wq: Vec<u8> = wf.iter().map(|&v| wp.quantize(v)).collect();
+        s.insert_u8("fc.w", &[classes, k], wq, wp);
+        let b: Vec<f32> = (0..classes).map(|_| (rng.next_f32() - 0.5) * 0.1).collect();
+        s.insert_f32("fc.b", &[classes], &b);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tiny_resnet_builds_from_store() {
+        let mut rng = Rng::new(123);
+        let store = testutil::random_store(&mut rng, 8, 10);
+        let m = tiny_resnet(&store, 16, 10).unwrap();
+        assert_eq!(m.num_classes, 10);
+        assert_eq!(m.in_hw, 16);
+        // stem + 3 blocks (2 convs each) + 2 downsamples = 9 convs.
+        let convs = m
+            .ops
+            .iter()
+            .filter(|o| matches!(o, Op::Conv2d(_)))
+            .count();
+        assert_eq!(convs, 9);
+        assert!(m.macs() > 0);
+    }
+
+    #[test]
+    fn missing_weight_is_reported() {
+        let store = WeightStore::default();
+        let err = tiny_resnet(&store, 16, 10).unwrap_err();
+        assert!(err.to_string().contains("stem.w"), "{err}");
+    }
+
+    #[test]
+    fn shape_mismatch_detected() {
+        let mut rng = Rng::new(124);
+        let mut store = testutil::random_store(&mut rng, 8, 10);
+        // Corrupt: replace stem weights with the wrong K.
+        let e = store.entries.get_mut("stem.w").unwrap();
+        e.shape = vec![8, 10];
+        e.data.truncate(80);
+        let err = tiny_resnet(&store, 16, 10).unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Bit-true quantized neural-network engine.
+//!
+//! - [`layers`] — quantized model IR + tiny-model builders (topologies
+//!   shared with `python/compile/model.py`)
+//! - [`weights`] — the `weights.bin` artifact format
+//! - [`exec`] — the shared interpreter + exact integer backend
+//! - [`pac_exec`] — the PAC hybrid backend (the paper's approximation)
+//!
+//! Accuracy experiments (Fig. 6, Table 2) run the same trained model
+//! through both backends and diff the top-1 accuracy.
+
+pub mod exec;
+pub mod layers;
+pub mod pac_exec;
+pub mod profiler;
+pub mod weights;
+
+pub use exec::{evaluate, exact_backend, run_model, ExactBackend, MacBackend, RunStats};
+pub use layers::{tiny_resnet, tiny_vgg, ConvLayer, LinearLayer, Model, Op};
+pub use pac_exec::{pac_backend, PacBackend, PacConfig};
+pub use profiler::{LayerProfile, ProfilingBackend};
+pub use weights::{DType, Entry, WeightStore};

@@ -1,0 +1,412 @@
+//! The PAC execution backend: every convolution/linear MAC runs through
+//! the hybrid digital/sparsity computation of the PACiM bank (Eq. 4),
+//! including the dynamic workload configuration of §5.
+//!
+//! This is the accuracy side of the reproduction: running a trained
+//! quantized network through this backend instead of [`super::exec::ExactBackend`]
+//! measures exactly the degradation the paper reports in Fig. 6 and
+//! Table 2.
+//!
+//! Implementation notes (the "fast path" of DESIGN.md §9-L3):
+//! - weight bit-planes are packed into u64 words once per layer
+//!   (weight-stationary, like the PCU register file);
+//! - a digital cycle is a word-AND + popcount — the software analogue of
+//!   the 256-input adder tree;
+//! - the activation element sum for the zero-point correction is
+//!   reconstructed from the sparsity counts (`Σ_p 2^p·Sx[p]`), never from
+//!   the discarded LSB bits — faithfully mirroring the architecture.
+
+use super::exec::{MacBackend, RunStats};
+use crate::arch::bank_logic::{classify, spec_normalized, ThresholdSet};
+use crate::pac::compute_map::DynamicLevel;
+use crate::pac::sparsity::BitPlanes;
+use crate::pac::mac::sparsity_domain_sum_fast;
+use crate::pac::{zero_point_correct, ComputeMap, PcuRounding};
+use crate::util::fastdiv::FastDiv;
+use crate::tensor::Tensor;
+use crate::util::and_popcount;
+
+/// Configuration of the PAC backend.
+#[derive(Debug, Clone)]
+pub struct PacConfig {
+    /// Base compute map (paper default: operand-based 4×4).
+    pub map: ComputeMap,
+    /// Dynamic workload thresholds; `None` disables speculation.
+    pub thresholds: Option<ThresholdSet>,
+    pub rounding: PcuRounding,
+    /// Run the first compute layer exactly (§6.1: the initial CONV uses
+    /// standard D-CiM for accurate feature extraction).
+    pub first_layer_exact: bool,
+    /// Layers whose DP length is below this run exactly. Default 512 =
+    /// the paper's PAC operating range (Table 1 note d quotes RMSE for
+    /// DP 512–4096) — *every* CONV/LINEAR layer of its benchmarks
+    /// qualifies (3·3·64 = 576 … 4096). Our substitute model has shorter
+    /// early layers, a substitution artifact; they stay digital,
+    /// mirroring `python/compile/model.py::quantized_forward(min_dp=512)`.
+    /// The out-of-range ablation (min_dp_len ∈ {0,150,256,300}) is
+    /// reported in EXPERIMENTS.md §Table2 and confirms the paper's DP
+    /// constraint from the negative side (accuracy collapses exactly
+    /// where Fig. 3(c) predicts the RMSE exceeds competitors').
+    pub min_dp_len: usize,
+}
+
+impl Default for PacConfig {
+    fn default() -> Self {
+        Self {
+            map: ComputeMap::operand_based(4, 4),
+            thresholds: None,
+            rounding: PcuRounding::RoundNearest,
+            first_layer_exact: true,
+            min_dp_len: 512,
+        }
+    }
+}
+
+/// Pre-packed per-layer weight state.
+struct PreparedLayer {
+    /// Weight bit-planes in one contiguous block, laid out
+    /// `[oc][q][word]` (§Perf: per-oc `Vec<Vec<u64>>` scattered the hot
+    /// loop's reads across the heap; contiguous layout streams).
+    planes: Vec<u64>,
+    /// u64 words per plane.
+    words: usize,
+    /// `sw[oc]` = weight sparsity counts.
+    sw: Vec<[u32; 8]>,
+    /// Raw weight element sums (zero-point correction).
+    w_sums: Vec<i64>,
+    zpw: i32,
+    k: usize,
+    /// Reciprocal divider for the PCU divide-by-DP-length (§Perf).
+    div: FastDiv,
+    /// Exact fallback weights when this layer runs digitally.
+    exact: Option<(Tensor<u8>, i32)>,
+}
+
+/// PAC backend implementing [`MacBackend`].
+pub struct PacBackend {
+    pub config: PacConfig,
+    layers: Vec<PreparedLayer>,
+    /// Pre-expanded digital (p,q) sets per dynamic level, and the base map.
+    level_maps: [ComputeMap; 4],
+}
+
+impl PacBackend {
+    pub fn new(config: PacConfig) -> Self {
+        let level_maps = [
+            DynamicLevel::Cycles10.map(),
+            DynamicLevel::Cycles12.map(),
+            DynamicLevel::Cycles14.map(),
+            DynamicLevel::Cycles16.map(),
+        ];
+        Self {
+            config,
+            layers: Vec::new(),
+            level_maps,
+        }
+    }
+
+    fn level_map(&self, level: DynamicLevel) -> &ComputeMap {
+        match level {
+            DynamicLevel::Cycles10 => &self.level_maps[0],
+            DynamicLevel::Cycles12 => &self.level_maps[1],
+            DynamicLevel::Cycles14 => &self.level_maps[2],
+            DynamicLevel::Cycles16 => &self.level_maps[3],
+        }
+    }
+}
+
+impl MacBackend for PacBackend {
+    fn prepare(&mut self, layer_id: usize, weight: &Tensor<u8>, zpw: i32) {
+        assert_eq!(layer_id, self.layers.len(), "layers must prepare in order");
+        let n = weight.shape()[0];
+        let k = weight.shape()[1];
+        let words = crate::util::words_for(k);
+        let wd = weight.data();
+        let mut planes = vec![0u64; n * 8 * words];
+        let mut sw = Vec::with_capacity(n);
+        let mut w_sums = Vec::with_capacity(n);
+        for oc in 0..n {
+            let row = &wd[oc * k..(oc + 1) * k];
+            let bp = BitPlanes::from_u8(row);
+            sw.push(bp.pop);
+            w_sums.push(row.iter().map(|&v| v as i64).sum());
+            for q in 0..8 {
+                let off = (oc * 8 + q) * words;
+                planes[off..off + words].copy_from_slice(&bp.planes[q]);
+            }
+        }
+        let exact = if (self.config.first_layer_exact && layer_id == 0)
+            || k < self.config.min_dp_len
+        {
+            Some((weight.clone(), zpw))
+        } else {
+            None
+        };
+        self.layers.push(PreparedLayer {
+            planes,
+            words,
+            sw,
+            w_sums,
+            zpw,
+            k,
+            div: FastDiv::new(k as u64),
+            exact,
+        });
+    }
+
+    fn gemm(&self, layer_id: usize, patch: &[u8], zpx: i32, stats: &mut RunStats) -> Vec<i64> {
+        let layer = &self.layers[layer_id];
+        let k = layer.k;
+        debug_assert_eq!(patch.len(), k);
+        let n = layer.sw.len();
+
+        // First layer: standard D-CiM (exact).
+        if let Some((w, zpw)) = &layer.exact {
+            let wd = w.data();
+            let mut out = Vec::with_capacity(n);
+            for oc in 0..n {
+                let row = &wd[oc * k..(oc + 1) * k];
+                let mut acc = 0i64;
+                for (&x, &wv) in patch.iter().zip(row) {
+                    acc += (x as i64 - zpx as i64) * (wv as i64 - *zpw as i64);
+                }
+                out.push(acc);
+            }
+            stats.macs += (n * k) as u64;
+            stats.digital_cycles += (n as u64) * 64;
+            return out;
+        }
+
+        let xp = BitPlanes::from_u8(patch);
+
+        // Bank logic: choose the map for this output group (§5).
+        let map = match &self.config.thresholds {
+            Some(th) => {
+                let spec = spec_normalized(&xp.pop, k as u32);
+                let level = classify(spec, th);
+                stats.levels.record(level);
+                self.level_map(level)
+            }
+            None => &self.config.map,
+        };
+        let digital_set = map.digital_set();
+        let dc = digital_set.len() as u64;
+
+        // The raw element sum, reconstructed from sparsity (LSBs never
+        // transmitted).
+        let sum_x = xp.element_sum() as i64;
+
+        let words = layer.words;
+        // §Perf: the static operand-based 4x4 map (the overwhelmingly
+        // common case) gets a fused kernel: for each activation MSB plane
+        // the four weight MSB planes are reduced in one pass over the
+        // words, reloading the x word once instead of four times.
+        let is_static_4x4 = digital_set.len() == 16
+            && digital_set.iter().all(|&(p, q)| p >= 4 && q >= 4);
+        let mut out = Vec::with_capacity(n);
+        for oc in 0..n {
+            let ocbase = oc * 8 * words;
+            let mut raw = 0i64;
+            if is_static_4x4 {
+                for p in 4..8 {
+                    let xpl = &xp.planes[p];
+                    let w4 = &layer.planes[ocbase + 4 * words..ocbase + 5 * words];
+                    let w5 = &layer.planes[ocbase + 5 * words..ocbase + 6 * words];
+                    let w6 = &layer.planes[ocbase + 6 * words..ocbase + 7 * words];
+                    let w7 = &layer.planes[ocbase + 7 * words..ocbase + 8 * words];
+                    let (mut c4, mut c5, mut c6, mut c7) = (0u32, 0u32, 0u32, 0u32);
+                    for i in 0..words {
+                        let xw = xpl[i];
+                        c4 += (xw & w4[i]).count_ones();
+                        c5 += (xw & w5[i]).count_ones();
+                        c6 += (xw & w6[i]).count_ones();
+                        c7 += (xw & w7[i]).count_ones();
+                    }
+                    raw += (c4 as i64) << (p + 4);
+                    raw += (c5 as i64) << (p + 5);
+                    raw += (c6 as i64) << (p + 6);
+                    raw += (c7 as i64) << (p + 7);
+                }
+            } else {
+                for &(p, q) in &digital_set {
+                    let woff = ocbase + q * words;
+                    let dp =
+                        and_popcount(&xp.planes[p], &layer.planes[woff..woff + words]) as i64;
+                    raw += dp << (p + q);
+                }
+            }
+            raw += sparsity_domain_sum_fast(&xp.pop, &layer.sw[oc], &layer.div, map, self.config.rounding);
+            out.push(zero_point_correct(
+                raw,
+                sum_x,
+                layer.w_sums[oc],
+                k as i64,
+                zpx,
+                layer.zpw,
+            ));
+        }
+        stats.macs += (n * k) as u64;
+        stats.digital_cycles += dc * n as u64;
+        stats.pcu_ops += (64 - dc) * n as u64;
+        out
+    }
+}
+
+/// Build a PAC backend prepared for `model`.
+pub fn pac_backend(model: &super::layers::Model, config: PacConfig) -> PacBackend {
+    use super::layers::Op;
+    let mut b = PacBackend::new(config);
+    let mut id = 0;
+    for op in &model.ops {
+        match op {
+            Op::Conv2d(c) => {
+                b.prepare(id, &c.weight, c.wparams.zero_point);
+                id += 1;
+            }
+            Op::Linear(l) => {
+                b.prepare(id, &l.weight, l.wparams.zero_point);
+                id += 1;
+            }
+            _ => {}
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::exec::{exact_backend, run_model};
+    use crate::nn::layers::{testutil, tiny_resnet};
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (crate::nn::layers::Model, Vec<u8>) {
+        let mut rng = Rng::new(seed);
+        let store = testutil::random_store(&mut rng, 8, 10);
+        let model = tiny_resnet(&store, 16, 10).unwrap();
+        let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
+        (model, img)
+    }
+
+    #[test]
+    fn all_digital_pac_matches_exact_engine() {
+        // With an all-digital map and no first-layer special-casing, the
+        // PAC backend must agree with the exact backend bit-for-bit —
+        // the bit-serial identity (Eq. 1) end-to-end through a network.
+        let (model, img) = setup(300);
+        let exact = exact_backend(&model);
+        let cfg = PacConfig {
+            map: ComputeMap::all_digital(),
+            thresholds: None,
+            rounding: PcuRounding::RoundNearest,
+            first_layer_exact: false,
+            min_dp_len: 0,
+        };
+        let pac = pac_backend(&model, cfg);
+        let (a, _) = run_model(&model, &exact, &img);
+        let (b, _) = run_model(&model, &pac, &img);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pac_4x4_stays_close_to_exact() {
+        let (model, img) = setup(301);
+        let exact = exact_backend(&model);
+        let pac = pac_backend(&model, PacConfig::default());
+        let (a, _) = run_model(&model, &exact, &img);
+        let (b, _) = run_model(&model, &pac, &img);
+        // Logits drift but stay correlated; with random (untrained)
+        // weights we only assert boundedness.
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 0.5 * a.iter().fold(0f32, |m, &v| m.max(v.abs())) + 1.0,
+                "exact={x} pac={y}");
+        }
+    }
+
+    #[test]
+    fn cycle_stats_reflect_map() {
+        let (model, img) = setup(302);
+        let pac = pac_backend(
+            &model,
+            PacConfig {
+                first_layer_exact: false,
+                min_dp_len: 0,
+                ..PacConfig::default()
+            },
+        );
+        let (_, stats) = run_model(&model, &pac, &img);
+        // Every MAC ran the 16/48 split: avg cycles per MAC-output is 16,
+        // but stats count per-(patch,oc): digital_cycles/(macs/k)… assert
+        // the ratio digital:pcu = 16:48 exactly.
+        assert_eq!(stats.pcu_ops, stats.digital_cycles * 3);
+    }
+
+    #[test]
+    fn dynamic_config_reduces_cycles() {
+        let (model, img) = setup(303);
+        let static_cfg = PacConfig {
+            first_layer_exact: true,
+            min_dp_len: 0,
+            ..PacConfig::default()
+        };
+        let dynamic_cfg = PacConfig {
+            thresholds: Some(ThresholdSet::new(0.10, 0.20, 0.35)),
+            first_layer_exact: true,
+            min_dp_len: 0,
+            ..PacConfig::default()
+        };
+        let pac_s = pac_backend(&model, static_cfg);
+        let pac_d = pac_backend(&model, dynamic_cfg);
+        let (_, st_s) = run_model(&model, &pac_s, &img);
+        let (_, st_d) = run_model(&model, &pac_d, &img);
+        assert!(st_d.digital_cycles <= st_s.digital_cycles);
+        assert!(st_d.levels.total() > 0);
+        assert!(st_d.levels.average_cycles() <= 16.0);
+    }
+
+    #[test]
+    fn first_layer_exact_by_default() {
+        let (model, img) = setup(304);
+        let pac = pac_backend(&model, PacConfig::default());
+        let exact = exact_backend(&model);
+        // Only the stem differs in backend; run both and compare stem
+        // outputs indirectly: with map=all_digital for non-first layers
+        // the results must match the exact engine entirely.
+        let cfg_all_digital = PacConfig {
+            map: ComputeMap::all_digital(),
+            ..PacConfig::default()
+        };
+        let pac_ad = pac_backend(&model, cfg_all_digital);
+        let (a, _) = run_model(&model, &exact, &img);
+        let (b, _) = run_model(&model, &pac_ad, &img);
+        assert_eq!(a, b);
+        let _ = pac; // silence
+    }
+
+    #[test]
+    fn five_bit_approximation_tighter_than_four() {
+        // §6.1: 5-bit approximation reduces the loss — its logits must be
+        // at least as close to exact as 4-bit's on average.
+        let (model, img) = setup(305);
+        let exact = exact_backend(&model);
+        let (a, _) = run_model(&model, &exact, &img);
+        let mut errs = Vec::new();
+        for bits in [4u32, 5u32] {
+            let cfg = PacConfig {
+                map: ComputeMap::operand_based(bits, bits),
+                min_dp_len: 0,
+                ..PacConfig::default()
+            };
+            let pac = pac_backend(&model, cfg);
+            let (b, _) = run_model(&model, &pac, &img);
+            let err: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+            errs.push(err);
+        }
+        assert!(
+            errs[1] <= errs[0] * 1.1,
+            "5-bit err {} should be ≲ 4-bit err {}",
+            errs[1],
+            errs[0]
+        );
+    }
+}

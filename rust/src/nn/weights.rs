@@ -1,0 +1,283 @@
+//! `weights.bin` — the quantized-model sidecar artifact.
+//!
+//! Written by `python/compile/aot.py` after build-time training + PTQ;
+//! read here to construct the bit-true model for the architecture
+//! simulator. (The PJRT serving path uses the HLO artifact with baked-in
+//! weights; this sidecar is what lets the rust simulator replay the same
+//! network MAC-by-MAC.) Little-endian binary:
+//!
+//! ```text
+//! magic  b"PACW", version u32 = 1, n_entries u32
+//! entry: name_len u16, name utf8,
+//!        dtype u8 (0 = u8, 1 = i32, 2 = f32),
+//!        ndim u8, dims u32 × ndim,
+//!        scale f32, zero_point i32,   // quantization (u8 entries)
+//!        data
+//! ```
+
+use crate::tensor::QuantParams;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"PACW";
+const VERSION: u32 = 1;
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    U8 = 0,
+    I32 = 1,
+    F32 = 2,
+}
+
+impl DType {
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(DType::U8),
+            1 => Ok(DType::I32),
+            2 => Ok(DType::F32),
+            _ => Err(Error::Artifact(format!("unknown dtype tag {v}"))),
+        }
+    }
+
+    fn elem_size(self) -> usize {
+        match self {
+            DType::U8 => 1,
+            DType::I32 | DType::F32 => 4,
+        }
+    }
+}
+
+/// One stored tensor.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub scale: f32,
+    pub zero_point: i32,
+    pub data: Vec<u8>,
+}
+
+impl Entry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        if self.dtype != DType::U8 {
+            return Err(Error::Artifact("entry is not u8".into()));
+        }
+        Ok(&self.data)
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(Error::Artifact("entry is not f32".into()));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            return Err(Error::Artifact("entry is not i32".into()));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn quant_params(&self) -> QuantParams {
+        QuantParams::new(self.scale, self.zero_point)
+    }
+}
+
+/// The full weight store, keyed by entry name.
+#[derive(Debug, Clone, Default)]
+pub struct WeightStore {
+    pub entries: BTreeMap<String, Entry>,
+}
+
+fn read_exact_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+impl WeightStore {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref()).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot open weights {} (run `make artifacts`): {e}",
+                path.as_ref().display()
+            ))
+        })?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Artifact("bad weights magic".into()));
+        }
+        if read_exact_u32(&mut f)? != VERSION {
+            return Err(Error::Artifact("unsupported weights version".into()));
+        }
+        let n = read_exact_u32(&mut f)? as usize;
+        let mut entries = BTreeMap::new();
+        for _ in 0..n {
+            let mut b2 = [0u8; 2];
+            f.read_exact(&mut b2)?;
+            let name_len = u16::from_le_bytes(b2) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .map_err(|_| Error::Artifact("non-utf8 entry name".into()))?;
+            let mut b1 = [0u8; 1];
+            f.read_exact(&mut b1)?;
+            let dtype = DType::from_u8(b1[0])?;
+            f.read_exact(&mut b1)?;
+            let ndim = b1[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_exact_u32(&mut f)? as usize);
+            }
+            let mut b4 = [0u8; 4];
+            f.read_exact(&mut b4)?;
+            let scale = f32::from_le_bytes(b4);
+            f.read_exact(&mut b4)?;
+            let zero_point = i32::from_le_bytes(b4);
+            let numel: usize = shape.iter().product();
+            let mut data = vec![0u8; numel * dtype.elem_size()];
+            f.read_exact(&mut data)?;
+            entries.insert(
+                name,
+                Entry {
+                    dtype,
+                    shape,
+                    scale,
+                    zero_point,
+                    data,
+                },
+            );
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, e) in &self.entries {
+            f.write_all(&(name.len() as u16).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&[e.dtype as u8, e.shape.len() as u8])?;
+            for &d in &e.shape {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            f.write_all(&e.scale.to_le_bytes())?;
+            f.write_all(&e.zero_point.to_le_bytes())?;
+            f.write_all(&e.data)?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("missing weights entry '{name}'")))
+    }
+
+    pub fn insert_u8(&mut self, name: &str, shape: &[usize], data: Vec<u8>, p: QuantParams) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.entries.insert(
+            name.into(),
+            Entry {
+                dtype: DType::U8,
+                shape: shape.to_vec(),
+                scale: p.scale,
+                zero_point: p.zero_point,
+                data,
+            },
+        );
+    }
+
+    pub fn insert_f32(&mut self, name: &str, shape: &[usize], data: &[f32]) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.entries.insert(
+            name.into(),
+            Entry {
+                dtype: DType::F32,
+                shape: shape.to_vec(),
+                scale: 1.0,
+                zero_point: 0,
+                data: data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            },
+        );
+    }
+
+    /// Fetch a `(scale, zero_point)` pair stored as a 2-element f32 tensor
+    /// (the `<layer>.oq` convention shared with aot.py).
+    pub fn get_qparams(&self, name: &str) -> Result<QuantParams> {
+        let e = self.get(name)?;
+        let v = e.as_f32()?;
+        if v.len() != 2 {
+            return Err(Error::Artifact(format!("'{name}' is not a qparams pair")));
+        }
+        Ok(QuantParams::new(v[0], v[1].round() as i32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let mut s = WeightStore::default();
+        s.insert_u8("w", &[2, 3], vec![1, 2, 3, 4, 5, 6], QuantParams::new(0.5, 128));
+        s.insert_f32("b", &[3], &[0.5, -1.0, 2.25]);
+        s.insert_f32("layer.oq", &[2], &[0.125, 7.0]);
+        let path = std::env::temp_dir().join("pacim_test_weights.bin");
+        s.save(&path).unwrap();
+        let back = WeightStore::load(&path).unwrap();
+        assert_eq!(back.get("w").unwrap().as_u8().unwrap(), &[1, 2, 3, 4, 5, 6]);
+        assert_eq!(back.get("w").unwrap().quant_params(), QuantParams::new(0.5, 128));
+        assert_eq!(back.get("b").unwrap().as_f32().unwrap(), vec![0.5, -1.0, 2.25]);
+        let qp = back.get_qparams("layer.oq").unwrap();
+        assert_eq!(qp, QuantParams::new(0.125, 7));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_entry_reports_name() {
+        let s = WeightStore::default();
+        let err = s.get("conv9.w").unwrap_err();
+        assert!(err.to_string().contains("conv9.w"));
+    }
+
+    #[test]
+    fn wrong_dtype_rejected() {
+        let mut s = WeightStore::default();
+        s.insert_f32("b", &[1], &[1.0]);
+        assert!(s.get("b").unwrap().as_u8().is_err());
+        assert!(s.get("b").unwrap().as_i32().is_err());
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let mut s = WeightStore::default();
+        s.insert_u8("w", &[4], vec![9; 4], QuantParams::new(1.0, 0));
+        let path = std::env::temp_dir().join("pacim_test_weights_trunc.bin");
+        s.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 1]).unwrap();
+        assert!(WeightStore::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,323 @@
+//! The digital–sparsity computing map (Fig. 4 and Eq. 4).
+//!
+//! An 8b/8b MAC decomposes into 64 binary MAC cycles, one per bit-index
+//! pair `(p, q)` (activation bit p × weight bit q). The map assigns each
+//! cycle to either the **digital** domain 𝔻 (exact D-CiM computation) or
+//! the **sparsity** domain 𝔸 (PAC approximation in the CnM unit).
+//!
+//! PACiM uses an *operand-based* split: the `Bx` MSBs of the activation and
+//! `Bw` MSBs of the weight form the digital block 𝔻 = {(p,q) : p ≥ 8−Bx,
+//! q ≥ 8−Bw}; everything else is approximated. With the default 4×4 split,
+//! 16 of 64 cycles stay digital (75% cycle reduction) and the four LSB
+//! weight memory columns are removed entirely.
+//!
+//! The *dynamic workload configuration* (§5) further drops the
+//! lowest-significance digital cycles for low-saliency outputs:
+//! 16 → 14 → 12 → 10 cycles, transferring them to the sparsity domain.
+
+/// Domain of one binary MAC cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    /// Exact bit-serial computation in the D-CiM array.
+    Digital,
+    /// PAC approximation in the CnM unit.
+    Sparsity,
+}
+
+/// A full 8×8 cycle map. `domain(p, q)` tells where cycle (p,q) runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ComputeMap {
+    /// Row-major [p][q]; true = digital.
+    digital: [[bool; 8]; 8],
+    /// Label for reports.
+    pub name: String,
+}
+
+impl ComputeMap {
+    /// Operand-based PACiM map: digital iff `p ≥ 8−bx && q ≥ 8−bw`.
+    /// `operand_based(4, 4)` is the paper's default 4-bit approximation.
+    pub fn operand_based(bx: u32, bw: u32) -> Self {
+        assert!(bx <= 8 && bw <= 8);
+        let mut digital = [[false; 8]; 8];
+        for (p, row) in digital.iter_mut().enumerate() {
+            for (q, cell) in row.iter_mut().enumerate() {
+                *cell = p as u32 >= 8 - bx && q as u32 >= 8 - bw;
+            }
+        }
+        Self {
+            digital,
+            name: format!("operand-{bx}x{bw}"),
+        }
+    }
+
+    /// Traditional H-CiM shift-order map (for comparison): digital iff
+    /// `p + q ≥ threshold`. This is how prior hybrid designs split cycles.
+    pub fn shift_based(threshold: u32) -> Self {
+        let mut digital = [[false; 8]; 8];
+        for (p, row) in digital.iter_mut().enumerate() {
+            for (q, cell) in row.iter_mut().enumerate() {
+                *cell = (p + q) as u32 >= threshold;
+            }
+        }
+        Self {
+            digital,
+            name: format!("shift-ge{threshold}"),
+        }
+    }
+
+    /// Fully digital map (pure D-CiM baseline).
+    pub fn all_digital() -> Self {
+        Self {
+            digital: [[true; 8]; 8],
+            name: "all-digital".into(),
+        }
+    }
+
+    /// Fully approximate map (pure PAC — used by error analyses).
+    pub fn all_sparsity() -> Self {
+        Self {
+            digital: [[false; 8]; 8],
+            name: "all-sparsity".into(),
+        }
+    }
+
+    #[inline]
+    pub fn domain(&self, p: usize, q: usize) -> Domain {
+        if self.digital[p][q] {
+            Domain::Digital
+        } else {
+            Domain::Sparsity
+        }
+    }
+
+    #[inline]
+    pub fn is_digital(&self, p: usize, q: usize) -> bool {
+        self.digital[p][q]
+    }
+
+    /// Number of digital cycles.
+    pub fn digital_cycles(&self) -> u32 {
+        self.digital
+            .iter()
+            .flatten()
+            .map(|&d| d as u32)
+            .sum()
+    }
+
+    /// Number of sparsity-domain cycles.
+    pub fn sparsity_cycles(&self) -> u32 {
+        64 - self.digital_cycles()
+    }
+
+    /// All digital (p, q) pairs.
+    pub fn digital_set(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for p in 0..8 {
+            for q in 0..8 {
+                if self.digital[p][q] {
+                    v.push((p, q));
+                }
+            }
+        }
+        v
+    }
+
+    /// All sparsity (p, q) pairs.
+    pub fn sparsity_set(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for p in 0..8 {
+            for q in 0..8 {
+                if !self.digital[p][q] {
+                    v.push((p, q));
+                }
+            }
+        }
+        v
+    }
+
+    /// Weight bit indices that must exist as physical memory columns
+    /// (a column is removable only if *no* cycle uses it digitally —
+    /// the LSB-column elimination of §4.1/§4.3).
+    pub fn required_weight_bits(&self) -> Vec<usize> {
+        (0..8)
+            .filter(|&q| (0..8).any(|p| self.digital[p][q]))
+            .collect()
+    }
+
+    /// Activation bits that must be transmitted in binary form (the rest
+    /// travel only as sparsity counts).
+    pub fn required_activation_bits(&self) -> Vec<usize> {
+        (0..8)
+            .filter(|&p| (0..8).any(|q| self.digital[p][q]))
+            .collect()
+    }
+
+    /// Derive a reduced map by moving the `drop` lowest-significance
+    /// digital cycles (smallest p+q, tie-break smaller p) to the sparsity
+    /// domain — the §5 dynamic workload mechanism (Fig. 4 gray squares).
+    pub fn with_dropped_cycles(&self, drop: u32) -> Self {
+        let mut cells = self.digital_set();
+        cells.sort_by_key(|&(p, q)| (p + q, p));
+        let mut out = self.clone();
+        for &(p, q) in cells.iter().take(drop as usize) {
+            out.digital[p][q] = false;
+        }
+        out.name = format!("{}-drop{}", self.name, drop);
+        out
+    }
+
+    /// ASCII rendering of the map (Fig. 4 style): rows = activation bit p
+    /// (MSB at top), cols = weight bit q (MSB at left). `D` digital,
+    /// `s` sparsity.
+    pub fn render(&self) -> String {
+        let mut s = String::from("      q=7 6 5 4 3 2 1 0\n");
+        for p in (0..8).rev() {
+            s.push_str(&format!("  p={p}  "));
+            for q in (0..8).rev() {
+                s.push(if self.digital[p][q] { 'D' } else { 's' });
+                s.push(' ');
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// The four dynamic workload levels of §5 / Fig. 6(b): number of digital
+/// cycles retained for a 4×4 operand split, selected by the SPEC
+/// speculation thresholds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DynamicLevel {
+    /// SPEC ≤ TH0 — minimal digital work.
+    Cycles10,
+    /// TH0 < SPEC ≤ TH1.
+    Cycles12,
+    /// TH1 < SPEC ≤ TH2.
+    Cycles14,
+    /// SPEC > TH2 — full 4×4 digital block.
+    Cycles16,
+}
+
+impl DynamicLevel {
+    pub fn digital_cycles(self) -> u32 {
+        match self {
+            DynamicLevel::Cycles10 => 10,
+            DynamicLevel::Cycles12 => 12,
+            DynamicLevel::Cycles14 => 14,
+            DynamicLevel::Cycles16 => 16,
+        }
+    }
+
+    /// The compute map for this level (derived from the 4×4 base).
+    pub fn map(self) -> ComputeMap {
+        let base = ComputeMap::operand_based(4, 4);
+        base.with_dropped_cycles(16 - self.digital_cycles())
+    }
+
+    pub fn all() -> [DynamicLevel; 4] {
+        [
+            DynamicLevel::Cycles10,
+            DynamicLevel::Cycles12,
+            DynamicLevel::Cycles14,
+            DynamicLevel::Cycles16,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operand_4x4_counts() {
+        let m = ComputeMap::operand_based(4, 4);
+        assert_eq!(m.digital_cycles(), 16);
+        assert_eq!(m.sparsity_cycles(), 48);
+        assert!(m.is_digital(7, 7));
+        assert!(m.is_digital(4, 4));
+        assert!(!m.is_digital(3, 7));
+        assert!(!m.is_digital(7, 3));
+        assert!(!m.is_digital(0, 0));
+    }
+
+    #[test]
+    fn operand_split_reduction_claim() {
+        // §4.1: D-CiM cycles reduced from 64 to 16 = 75% reduction.
+        let m = ComputeMap::operand_based(4, 4);
+        let reduction = 1.0 - m.digital_cycles() as f64 / 64.0;
+        assert!((reduction - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lsb_columns_removable() {
+        // §4.1: 4-bit approximation eliminates the four LSB weight columns.
+        let m = ComputeMap::operand_based(4, 4);
+        assert_eq!(m.required_weight_bits(), vec![4, 5, 6, 7]);
+        assert_eq!(m.required_activation_bits(), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn all_digital_all_sparsity() {
+        assert_eq!(ComputeMap::all_digital().digital_cycles(), 64);
+        assert_eq!(ComputeMap::all_sparsity().digital_cycles(), 0);
+    }
+
+    #[test]
+    fn shift_map_differs_from_operand() {
+        // A shift-based split with the same digital budget keeps LSB weight
+        // columns alive — the reason PACiM's operand split saves area.
+        let shift = ComputeMap::shift_based(10); // p+q ∈ {10..14}: 15 cells
+        assert!(shift.required_weight_bits().len() > 4);
+    }
+
+    #[test]
+    fn dynamic_levels_monotone() {
+        let mut prev = 0;
+        for lvl in DynamicLevel::all() {
+            let m = lvl.map();
+            assert_eq!(m.digital_cycles(), lvl.digital_cycles());
+            assert!(m.digital_cycles() > prev);
+            prev = m.digital_cycles();
+        }
+    }
+
+    #[test]
+    fn dropped_cycles_are_lowest_significance() {
+        let base = ComputeMap::operand_based(4, 4);
+        let lvl14 = base.with_dropped_cycles(2);
+        // (4,4) has the smallest p+q=8 and must be dropped first.
+        assert!(!lvl14.is_digital(4, 4));
+        // MSB cycle always retained.
+        assert!(lvl14.is_digital(7, 7));
+        // Exactly two dropped.
+        assert_eq!(lvl14.digital_cycles(), 14);
+        // Dropped set ⊂ base digital set, all with p+q ≤ 9.
+        for p in 0..8 {
+            for q in 0..8 {
+                if base.is_digital(p, q) && !lvl14.is_digital(p, q) {
+                    assert!(p + q <= 9, "dropped high-significance ({p},{q})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn render_shape() {
+        let m = ComputeMap::operand_based(4, 4);
+        let r = m.render();
+        assert_eq!(r.lines().count(), 9);
+        assert!(r.contains('D') && r.contains('s'));
+    }
+
+    #[test]
+    fn digital_sparsity_sets_partition() {
+        let m = ComputeMap::operand_based(3, 5);
+        assert_eq!(m.digital_cycles(), 15);
+        let d = m.digital_set();
+        let a = m.sparsity_set();
+        assert_eq!(d.len() + a.len(), 64);
+        for (p, q) in d {
+            assert!(p >= 5 && q >= 3);
+        }
+    }
+}

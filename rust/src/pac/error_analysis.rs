@@ -1,0 +1,290 @@
+//! Monte-Carlo error analysis of the PAC method (§3.2, Fig. 3, Table 1).
+//!
+//! The paper's protocol: simulate a CiM column of DP length `n`, generate
+//! binary weight/activation vectors at given sparsity levels, record the
+//! actual AND-popcount DP against the PAC point estimate `Sx·Sw/n`
+//! (computed from the *actual* popcounts, exactly as the on-die encoder
+//! would), over 100K iterations. RMSE is reported in LSB and as a
+//! percentage of the DP length.
+
+use super::mac::pac_cycle_f64;
+use crate::util::rng::Rng;
+use crate::util::stats::{Accumulator, Histogram};
+use crate::util::{and_popcount, pack_bits_u64};
+
+/// How the random binary vectors are drawn.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BitModel {
+    /// i.i.d. Bernoulli(p) per element — the paper's assumption (Eq. 2).
+    Iid,
+    /// Correlated bits: runs of identical values with the given mean run
+    /// length (> 1). Stresses the independence assumption (DESIGN.md §10
+    /// ablation) — real activation bit-planes are spatially correlated.
+    Correlated { mean_run: f64 },
+}
+
+fn gen_bits(rng: &mut Rng, n: usize, p: f64, model: BitModel) -> Vec<u8> {
+    match model {
+        BitModel::Iid => rng.binary_bernoulli(n, p),
+        BitModel::Correlated { mean_run } => {
+            // Markov chain with stationary probability p and mean run
+            // length `mean_run` for the '1' state.
+            let stay1 = 1.0 - 1.0 / mean_run;
+            // Solve stationarity: p·(1−stay1) = (1−p)·p01 → p01.
+            let p01 = if p < 1.0 {
+                (p * (1.0 - stay1) / (1.0 - p)).min(1.0)
+            } else {
+                1.0
+            };
+            let mut v = vec![0u8; n];
+            let mut state = rng.bernoulli(p);
+            for slot in v.iter_mut() {
+                *slot = state as u8;
+                state = if state {
+                    rng.bernoulli(stay1)
+                } else {
+                    rng.bernoulli(p01)
+                };
+            }
+            v
+        }
+    }
+}
+
+/// Result of one RMSE experiment.
+#[derive(Debug, Clone, Copy)]
+pub struct RmseResult {
+    pub dp_len: usize,
+    pub sparsity_w: f64,
+    pub sparsity_x: f64,
+    pub iterations: u64,
+    /// RMSE of (actual − estimate) in LSB.
+    pub rmse_lsb: f64,
+    /// RMSE as % of DP length (the paper's RMSE (%) metric).
+    pub rmse_pct: f64,
+    /// Mean signed error (bias) in LSB.
+    pub bias_lsb: f64,
+}
+
+/// Core experiment: RMSE of the PAC estimate for one (n, sw, sx) point.
+pub fn pac_rmse(
+    n: usize,
+    sparsity_w: f64,
+    sparsity_x: f64,
+    iterations: u64,
+    seed: u64,
+    model: BitModel,
+) -> RmseResult {
+    let mut rng = Rng::new(seed);
+    let mut err = Accumulator::new();
+    for _ in 0..iterations {
+        let x = gen_bits(&mut rng, n, sparsity_x, model);
+        let w = gen_bits(&mut rng, n, sparsity_w, model);
+        let sx: u32 = x.iter().map(|&b| b as u32).sum();
+        let sw: u32 = w.iter().map(|&b| b as u32).sum();
+        let actual = and_popcount(&pack_bits_u64(&x), &pack_bits_u64(&w)) as f64;
+        let est = pac_cycle_f64(sx, sw, n as u32);
+        err.push(actual - est);
+    }
+    RmseResult {
+        dp_len: n,
+        sparsity_w,
+        sparsity_x,
+        iterations,
+        rmse_lsb: err.rms(),
+        rmse_pct: err.rms() / n as f64 * 100.0,
+        bias_lsb: err.mean(),
+    }
+}
+
+/// Fig. 3(b): distribution of actual MAC outputs for a typical sparsity
+/// combination, against the PAC expectation.
+pub struct MacDistribution {
+    pub histogram: Histogram,
+    pub expected: f64,
+    pub rmse_lsb: f64,
+    /// Fraction of trials within ±1 RMSE of the estimate (≈68% if
+    /// Gaussian, as the paper argues).
+    pub within_1_rmse: f64,
+}
+
+pub fn mac_distribution(
+    n: usize,
+    sparsity_w: f64,
+    sparsity_x: f64,
+    iterations: u64,
+    seed: u64,
+) -> MacDistribution {
+    let mut rng = Rng::new(seed);
+    let expected = sparsity_x * sparsity_w * n as f64;
+    let span = (expected.sqrt() * 8.0).max(16.0) as i64;
+    let center = expected.round() as i64;
+    let mut hist = Histogram::new((center - span).max(0), center + span);
+    let mut err = Accumulator::new();
+    let mut errors = Vec::with_capacity(iterations as usize);
+    for _ in 0..iterations {
+        let x = rng.binary_bernoulli(n, sparsity_x);
+        let w = rng.binary_bernoulli(n, sparsity_w);
+        let sx: u32 = x.iter().map(|&b| b as u32).sum();
+        let sw: u32 = w.iter().map(|&b| b as u32).sum();
+        let actual = and_popcount(&pack_bits_u64(&x), &pack_bits_u64(&w));
+        let est = pac_cycle_f64(sx, sw, n as u32);
+        hist.push(actual as i64);
+        let e = actual as f64 - est;
+        err.push(e);
+        errors.push(e);
+    }
+    let rmse = err.rms();
+    let within = errors.iter().filter(|e| e.abs() <= rmse).count() as f64
+        / errors.len().max(1) as f64;
+    MacDistribution {
+        histogram: hist,
+        expected,
+        rmse_lsb: rmse,
+        within_1_rmse: within,
+    }
+}
+
+/// Fig. 3(c): RMSE (%) across DP lengths. Sparsities follow the paper's
+/// "typical" operating point unless overridden.
+pub fn rmse_vs_dp_length(
+    dp_lengths: &[usize],
+    sparsity_w: f64,
+    sparsity_x: f64,
+    iterations: u64,
+    seed: u64,
+) -> Vec<RmseResult> {
+    dp_lengths
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            pac_rmse(
+                n,
+                sparsity_w,
+                sparsity_x,
+                iterations,
+                seed ^ (i as u64).wrapping_mul(0x9E37_79B9),
+                BitModel::Iid,
+            )
+        })
+        .collect()
+}
+
+/// Check the n^{-1/2} law: fit log(rmse%) vs log(n) and return the slope.
+/// The paper (via the law of large numbers / CLT) predicts ≈ −0.5.
+pub fn rmse_scaling_exponent(results: &[RmseResult]) -> f64 {
+    assert!(results.len() >= 2);
+    let pts: Vec<(f64, f64)> = results
+        .iter()
+        .filter(|r| r.rmse_pct > 0.0)
+        .map(|r| ((r.dp_len as f64).ln(), r.rmse_pct.ln()))
+        .collect();
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+/// Theoretical RMSE of the PAC estimate for i.i.d. bits, conditioned on
+/// observed popcounts — hypergeometric overlap variance:
+/// `Var = Sx·Sw·(n−Sx)·(n−Sw) / (n²·(n−1))`.
+/// Used as an analytic cross-check of the Monte-Carlo results.
+pub fn theoretical_rmse_lsb(n: usize, sx: f64, sw: f64) -> f64 {
+    let nf = n as f64;
+    let (sx, sw) = (sx * nf, sw * nf);
+    if n < 2 {
+        return 0.0;
+    }
+    (sx * sw * (nf - sx) * (nf - sw) / (nf * nf * (nf - 1.0))).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_paper_operating_point() {
+        // §3.2: DP length 1024, typical sparsity → RMSE ≈ 6 LSB (≈ 0.6%).
+        let r = pac_rmse(1024, 0.5, 0.3, 4000, 42, BitModel::Iid);
+        assert!(
+            (4.0..9.0).contains(&r.rmse_lsb),
+            "rmse_lsb={} out of paper ballpark",
+            r.rmse_lsb
+        );
+        assert!(r.rmse_pct < 1.0, "rmse_pct={}", r.rmse_pct);
+        assert!(r.bias_lsb.abs() < 0.5, "bias={}", r.bias_lsb);
+    }
+
+    #[test]
+    fn rmse_matches_theory() {
+        let r = pac_rmse(512, 0.4, 0.25, 6000, 7, BitModel::Iid);
+        let theory = theoretical_rmse_lsb(512, 0.25, 0.4);
+        let rel = (r.rmse_lsb - theory).abs() / theory;
+        assert!(rel < 0.15, "mc={} theory={theory}", r.rmse_lsb);
+    }
+
+    #[test]
+    fn rmse_scaling_is_inverse_sqrt() {
+        let res = rmse_vs_dp_length(&[64, 256, 1024, 4096], 0.5, 0.3, 2000, 9);
+        let slope = rmse_scaling_exponent(&res);
+        assert!(
+            (-0.62..=-0.38).contains(&slope),
+            "scaling exponent {slope} not ≈ -0.5"
+        );
+    }
+
+    #[test]
+    fn rmse_below_1pct_at_conv_lengths() {
+        // Paper claim: CONV DP lengths 576..4608 → RMSE < 1%.
+        for n in [576, 1152, 2304, 4608] {
+            let r = pac_rmse(n, 0.5, 0.3, 1500, 11, BitModel::Iid);
+            assert!(r.rmse_pct < 1.0, "n={n} rmse={}", r.rmse_pct);
+        }
+    }
+
+    #[test]
+    fn distribution_centered_on_estimate() {
+        let d = mac_distribution(1024, 0.5, 0.3, 4000, 21);
+        // ~68% of trials within ±1 RMSE (Gaussian-ish, paper §3.2).
+        assert!(
+            (0.60..0.78).contains(&d.within_1_rmse),
+            "within_1_rmse={}",
+            d.within_1_rmse
+        );
+        assert!(d.histogram.total() == 4000);
+        assert!((d.rmse_lsb - 6.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn correlated_bits_degrade_gracefully() {
+        // Correlation does not bias the estimator (popcounts still exact),
+        // but the overlap variance grows — PAC degrades, doesn't break.
+        let iid = pac_rmse(1024, 0.5, 0.3, 2500, 31, BitModel::Iid);
+        let corr = pac_rmse(
+            1024,
+            0.5,
+            0.3,
+            2500,
+            31,
+            BitModel::Correlated { mean_run: 8.0 },
+        );
+        assert!(corr.rmse_lsb > iid.rmse_lsb, "correlation should increase RMSE");
+        assert!(corr.bias_lsb.abs() < 1.0, "bias={}", corr.bias_lsb);
+        assert!(corr.rmse_lsb < 10.0 * iid.rmse_lsb);
+    }
+
+    #[test]
+    fn zero_sparsity_is_exact() {
+        let r = pac_rmse(256, 0.0, 0.5, 200, 41, BitModel::Iid);
+        assert_eq!(r.rmse_lsb, 0.0);
+    }
+
+    #[test]
+    fn full_density_is_exact() {
+        // All-ones vectors: overlap is deterministic (= n), estimate = n.
+        let r = pac_rmse(256, 1.0, 1.0, 200, 43, BitModel::Iid);
+        assert_eq!(r.rmse_lsb, 0.0);
+    }
+}

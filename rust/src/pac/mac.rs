@@ -1,0 +1,323 @@
+//! MAC computation: exact bit-serial, PAC-approximate, and the hybrid of
+//! Eq. 4 — the numerical heart of the PACiM reproduction.
+//!
+//! Everything here operates on one DP (dot-product) vector pair
+//! `(x, w) ∈ UINT8^n`, i.e. one output activation's worth of MACs as seen
+//! by a CiM column. The NN engines (`nn::exec`, `nn::pac_exec`) call these
+//! per output element; the error analyses (`pac::error_analysis`) call
+//! them per Monte-Carlo trial.
+
+use super::compute_map::ComputeMap;
+use super::sparsity::BitPlanes;
+use crate::util::and_popcount;
+
+/// Rounding mode of the PCU's fixed-point divide (ablation: §10 of
+/// DESIGN.md). Hardware divides by the DP length `n`; `RoundNearest`
+/// models a divider with a +n/2 pre-add, `Floor` a bare shifter chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcuRounding {
+    RoundNearest,
+    Floor,
+}
+
+impl Default for PcuRounding {
+    fn default() -> Self {
+        PcuRounding::RoundNearest
+    }
+}
+
+/// One PAC sparsity-domain cycle (Eq. 3) in PCU fixed-point arithmetic:
+/// `DP ≈ Sx·Sw / n`.
+#[inline]
+pub fn pcu_cycle(sx: u32, sw: u32, n: u32, rounding: PcuRounding) -> u32 {
+    debug_assert!(n > 0);
+    let prod = sx as u64 * sw as u64;
+    match rounding {
+        PcuRounding::RoundNearest => ((prod + n as u64 / 2) / n as u64) as u32,
+        PcuRounding::Floor => (prod / n as u64) as u32,
+    }
+}
+
+/// The same cycle in exact real arithmetic (for error analysis).
+#[inline]
+pub fn pac_cycle_f64(sx: u32, sw: u32, n: u32) -> f64 {
+    sx as f64 * sw as f64 / n as f64
+}
+
+/// Exact raw MAC `Σ_n x_n·w_n` over UINT8 vectors (direct form).
+pub fn exact_mac(x: &[u8], w: &[u8]) -> u64 {
+    debug_assert_eq!(x.len(), w.len());
+    x.iter().zip(w).map(|(&a, &b)| a as u64 * b as u64).sum()
+}
+
+/// Exact raw MAC computed the bit-serial way (Eq. 1) from pre-decomposed
+/// planes — must equal `exact_mac` (tested); this is the D-CiM model.
+pub fn exact_mac_bitserial(xp: &BitPlanes, wp: &BitPlanes) -> u64 {
+    debug_assert_eq!(xp.n, wp.n);
+    let mut acc = 0u64;
+    for p in 0..8 {
+        for q in 0..8 {
+            let dp = and_popcount(&xp.planes[p], &wp.planes[q]) as u64;
+            acc += dp << (p + q);
+        }
+    }
+    acc
+}
+
+/// Outcome of a hybrid MAC, split by domain for the energy/cycle
+/// accounting done by the architecture model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HybridMac {
+    /// Total approximated raw MAC value (digital + sparsity terms).
+    pub value: i64,
+    /// Contribution of the digital cycles alone.
+    pub digital_part: i64,
+    /// Contribution of the PAC-approximated cycles.
+    pub sparsity_part: i64,
+    /// Number of digital cycles executed.
+    pub digital_cycles: u32,
+    /// Number of PCU cycles executed.
+    pub pcu_cycles: u32,
+}
+
+/// Hybrid MAC per Eq. 4: digital cycles run exact AND-popcounts on the
+/// planes; sparsity cycles run PCU point estimation on the popcounts.
+pub fn hybrid_mac(
+    xp: &BitPlanes,
+    wp: &BitPlanes,
+    map: &ComputeMap,
+    rounding: PcuRounding,
+) -> HybridMac {
+    debug_assert_eq!(xp.n, wp.n);
+    let n = xp.n as u32;
+    let mut digital = 0i64;
+    let mut approx = 0i64;
+    let mut dc = 0u32;
+    let mut pc = 0u32;
+    for p in 0..8 {
+        for q in 0..8 {
+            if map.is_digital(p, q) {
+                let dp = and_popcount(&xp.planes[p], &wp.planes[q]) as i64;
+                digital += dp << (p + q);
+                dc += 1;
+            } else {
+                let dp = pcu_cycle(xp.pop[p], wp.pop[q], n.max(1), rounding) as i64;
+                approx += dp << (p + q);
+                pc += 1;
+            }
+        }
+    }
+    HybridMac {
+        value: digital + approx,
+        digital_part: digital,
+        sparsity_part: approx,
+        digital_cycles: dc,
+        pcu_cycles: pc,
+    }
+}
+
+/// `sparsity_domain_sum` with a precomputed reciprocal divider — the
+/// §Perf fast path used by `nn::pac_exec` (identical results, tested).
+pub fn sparsity_domain_sum_fast(
+    sx: &[u32; 8],
+    sw: &[u32; 8],
+    div: &crate::util::fastdiv::FastDiv,
+    map: &ComputeMap,
+    rounding: PcuRounding,
+) -> i64 {
+    let mut acc = 0i64;
+    for p in 0..8 {
+        for q in 0..8 {
+            if !map.is_digital(p, q) {
+                let prod = sx[p] as u64 * sw[q] as u64;
+                let dp = match rounding {
+                    PcuRounding::RoundNearest => div.div_round(prod),
+                    PcuRounding::Floor => div.div(prod),
+                } as i64;
+                acc += dp << (p + q);
+            }
+        }
+    }
+    acc
+}
+
+/// Hybrid MAC where the sparsity terms are pre-aggregated: because the
+/// approximation for cycle (p,q) is `Sx[p]·Sw[q]/n`, the full sparsity-
+/// domain sum factors per weight column as
+/// `Σ_{(p,q)∈𝔸} 2^{p+q}·Sx[p]·Sw[q]/n`. This is what the PCU actually
+/// evaluates (one multiply-divide per (p,q), accumulated with shifts);
+/// we expose it for the fast NN engine which reuses `Sw` across pixels
+/// (weight-stationary, §4.4).
+pub fn sparsity_domain_sum(
+    sx: &[u32; 8],
+    sw: &[u32; 8],
+    n: u32,
+    map: &ComputeMap,
+    rounding: PcuRounding,
+) -> i64 {
+    let mut acc = 0i64;
+    for p in 0..8 {
+        for q in 0..8 {
+            if !map.is_digital(p, q) {
+                let dp = pcu_cycle(sx[p], sw[q], n.max(1), rounding) as i64;
+                acc += dp << (p + q);
+            }
+        }
+    }
+    acc
+}
+
+/// Zero-point-corrected integer dot product from a raw (possibly
+/// approximated) uint MAC:
+/// `Σ (x−zx)(w−zw) = raw − zw·Σx − zx·Σw + n·zx·zw`.
+///
+/// `sum_x`/`sum_w` are the raw element sums; in PACiM `sum_x` is
+/// reconstructed from the encoded sparsity (`BitPlanes::element_sum`) —
+/// no LSB transmission needed.
+#[inline]
+pub fn zero_point_correct(raw: i64, sum_x: i64, sum_w: i64, n: i64, zx: i32, zw: i32) -> i64 {
+    raw - zw as i64 * sum_x - zx as i64 * sum_w + n * zx as i64 * zw as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_pair(rng: &mut Rng, n: usize) -> (Vec<u8>, Vec<u8>) {
+        let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        (x, w)
+    }
+
+    #[test]
+    fn bitserial_equals_direct() {
+        let mut rng = Rng::new(10);
+        for n in [1usize, 9, 64, 257, 1024] {
+            let (x, w) = random_pair(&mut rng, n);
+            let xp = BitPlanes::from_u8(&x);
+            let wp = BitPlanes::from_u8(&w);
+            assert_eq!(exact_mac(&x, &w), exact_mac_bitserial(&xp, &wp), "n={n}");
+        }
+    }
+
+    #[test]
+    fn hybrid_all_digital_is_exact() {
+        let mut rng = Rng::new(11);
+        let (x, w) = random_pair(&mut rng, 300);
+        let xp = BitPlanes::from_u8(&x);
+        let wp = BitPlanes::from_u8(&w);
+        let h = hybrid_mac(&xp, &wp, &ComputeMap::all_digital(), PcuRounding::default());
+        assert_eq!(h.value as u64, exact_mac(&x, &w));
+        assert_eq!(h.sparsity_part, 0);
+        assert_eq!(h.digital_cycles, 64);
+        assert_eq!(h.pcu_cycles, 0);
+    }
+
+    #[test]
+    fn hybrid_4x4_close_to_exact() {
+        // With DP length 1024 the 4-bit approximation must land within a
+        // small relative error of the exact MAC (paper: RMSE < 1%).
+        let mut rng = Rng::new(12);
+        let n = 1024;
+        let map = ComputeMap::operand_based(4, 4);
+        let mut worst = 0f64;
+        for _ in 0..50 {
+            let (x, w) = random_pair(&mut rng, n);
+            let xp = BitPlanes::from_u8(&x);
+            let wp = BitPlanes::from_u8(&w);
+            let h = hybrid_mac(&xp, &wp, &map, PcuRounding::default());
+            let exact = exact_mac(&x, &w) as f64;
+            let rel = (h.value as f64 - exact).abs() / exact;
+            worst = worst.max(rel);
+        }
+        assert!(worst < 0.01, "worst relative error {worst}");
+    }
+
+    #[test]
+    fn hybrid_cycle_counts_match_map() {
+        let mut rng = Rng::new(13);
+        let (x, w) = random_pair(&mut rng, 64);
+        let xp = BitPlanes::from_u8(&x);
+        let wp = BitPlanes::from_u8(&w);
+        let map = ComputeMap::operand_based(4, 4);
+        let h = hybrid_mac(&xp, &wp, &map, PcuRounding::default());
+        assert_eq!(h.digital_cycles, 16);
+        assert_eq!(h.pcu_cycles, 48);
+        assert_eq!(h.value, h.digital_part + h.sparsity_part);
+    }
+
+    #[test]
+    fn sparsity_domain_sum_matches_hybrid() {
+        let mut rng = Rng::new(14);
+        let (x, w) = random_pair(&mut rng, 500);
+        let xp = BitPlanes::from_u8(&x);
+        let wp = BitPlanes::from_u8(&w);
+        let map = ComputeMap::operand_based(4, 4);
+        let h = hybrid_mac(&xp, &wp, &map, PcuRounding::RoundNearest);
+        let s = sparsity_domain_sum(&xp.pop, &wp.pop, 500, &map, PcuRounding::RoundNearest);
+        assert_eq!(h.sparsity_part, s);
+    }
+
+    #[test]
+    fn pcu_rounding_modes() {
+        // 7*3/4 = 5.25 → nearest 5, floor 5; 7*5/4 = 8.75 → nearest 9, floor 8.
+        assert_eq!(pcu_cycle(7, 3, 4, PcuRounding::RoundNearest), 5);
+        assert_eq!(pcu_cycle(7, 3, 4, PcuRounding::Floor), 5);
+        assert_eq!(pcu_cycle(7, 5, 4, PcuRounding::RoundNearest), 9);
+        assert_eq!(pcu_cycle(7, 5, 4, PcuRounding::Floor), 8);
+    }
+
+    #[test]
+    fn pcu_cycle_never_exceeds_n_bound() {
+        // DP of length n can be at most n; the estimate Sx·Sw/n ≤ n because
+        // Sx, Sw ≤ n.
+        let mut rng = Rng::new(15);
+        for _ in 0..1000 {
+            let n = 1 + rng.below(2048);
+            let sx = rng.below(n + 1);
+            let sw = rng.below(n + 1);
+            let e = pcu_cycle(sx, sw, n, PcuRounding::RoundNearest);
+            assert!(e <= n, "sx={sx} sw={sw} n={n} e={e}");
+        }
+    }
+
+    #[test]
+    fn zero_point_correction_identity() {
+        // Correcting the raw uint MAC must equal the signed dot product.
+        let mut rng = Rng::new(16);
+        let n = 200;
+        let (x, w) = random_pair(&mut rng, n);
+        let (zx, zw) = (17i32, 128i32);
+        let raw = exact_mac(&x, &w) as i64;
+        let sum_x: i64 = x.iter().map(|&v| v as i64).sum();
+        let sum_w: i64 = w.iter().map(|&v| v as i64).sum();
+        let corrected = zero_point_correct(raw, sum_x, sum_w, n as i64, zx, zw);
+        let direct: i64 = x
+            .iter()
+            .zip(&w)
+            .map(|(&a, &b)| (a as i64 - zx as i64) * (b as i64 - zw as i64))
+            .sum();
+        assert_eq!(corrected, direct);
+    }
+
+    #[test]
+    fn unbiasedness_of_pac_estimate() {
+        // E[actual − estimate] ≈ 0 over random vectors with fixed
+        // popcounts: PAC is an unbiased point estimator (binomial mean).
+        let mut rng = Rng::new(17);
+        let n = 512;
+        let (sx, sw) = (150usize, 300usize);
+        let mut err_sum = 0f64;
+        let iters = 3000;
+        for _ in 0..iters {
+            let x = rng.binary_with_popcount(n, sx);
+            let w = rng.binary_with_popcount(n, sw);
+            let actual: u32 = x.iter().zip(&w).map(|(&a, &b)| (a & b) as u32).sum();
+            let est = pac_cycle_f64(sx as u32, sw as u32, n as u32);
+            err_sum += actual as f64 - est;
+        }
+        let bias = err_sum / iters as f64;
+        assert!(bias.abs() < 0.5, "bias={bias}");
+    }
+}

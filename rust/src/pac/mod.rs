@@ -1,0 +1,23 @@
+//! PAC — Probabilistic Approximate Computation (§3 of the paper).
+//!
+//! The paper's primary contribution: approximate the dot-product of one
+//! binary MAC cycle by point estimation on bit-level sparsity,
+//! `E(DP) = Sx·Sw/n` (Eq. 3), and split the 64 binary cycles of an 8b/8b
+//! MAC between an exact digital domain and this sparsity domain (Eq. 4).
+//!
+//! - [`sparsity`] — bit-plane decomposition, popcounts, encoding math
+//! - [`compute_map`] — the digital/sparsity cycle map (Fig. 4) + dynamic levels
+//! - [`mac`] — exact bit-serial, PCU fixed-point, and hybrid MAC kernels
+//! - [`error_analysis`] — Monte-Carlo RMSE experiments (Fig. 3, Table 1)
+
+pub mod compute_map;
+pub mod error_analysis;
+pub mod mac;
+pub mod sparsity;
+
+pub use compute_map::{ComputeMap, Domain, DynamicLevel};
+pub use mac::{
+    exact_mac, exact_mac_bitserial, hybrid_mac, pcu_cycle, sparsity_domain_sum,
+    zero_point_correct, HybridMac, PcuRounding,
+};
+pub use sparsity::{bit_sparsity_counts, bit_sparsity_rates, BitPlanes};

@@ -1,0 +1,205 @@
+//! uint8 affine quantization — the numerical contract shared with the
+//! python build path (`python/compile/quant_utils.py` mirrors this file
+//! bit-for-bit; `python/tests/test_quant.py` + `rust/tests/proptests.rs`
+//! enforce the equivalence on random tensors).
+//!
+//! Scheme (per-tensor, asymmetric, uint8 — the paper quantizes both
+//! weights and activations to UINT8 before bit-serial decomposition,
+//! Eq. 1):
+//!
+//! ```text
+//! q = clamp(round(x / scale) + zero_point, 0, 255)
+//! x ≈ scale · (q − zero_point)
+//! ```
+//!
+//! Integer GEMM + requantization follows the gemmlowp recipe: the i32
+//! accumulator is scaled by a fixed-point multiplier `(m0, shift)` with
+//! `m_real = m0 · 2^shift`, `m0 ∈ [0.5, 1)` as Q31.
+
+use crate::tensor::{QuantParams, Tensor};
+
+/// Choose quantization parameters covering `[lo, hi]` (min-max
+/// calibration). The range is widened to include 0 so that the zero point
+/// is exactly representable — required for zero-point padding in im2col.
+pub fn calibrate_minmax(lo: f32, hi: f32) -> QuantParams {
+    let lo = lo.min(0.0);
+    let hi = hi.max(0.0);
+    let span = (hi - lo).max(1e-8);
+    let scale = span / 255.0;
+    let zp = (-lo / scale).round() as i32;
+    QuantParams::new(scale, zp.clamp(0, 255))
+}
+
+/// Calibrate over a tensor's values.
+pub fn calibrate_tensor(t: &Tensor<f32>) -> QuantParams {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in t.data() {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        lo = 0.0;
+        hi = 1.0;
+    }
+    calibrate_minmax(lo, hi)
+}
+
+/// Quantize an f32 tensor with the given params.
+pub fn quantize(t: &Tensor<f32>, p: QuantParams) -> Tensor<u8> {
+    t.map(|x| p.quantize(x))
+}
+
+/// Symmetric "shifted-uint8" weight quantization used by the CiM mapping:
+/// zero point pinned to 128 so every weight bit-plane is well-defined and
+/// the MSB column of the D-CiM array carries the sign information
+/// (`w_real = scale · (q − 128)`).
+pub fn calibrate_weights_symmetric(t: &Tensor<f32>) -> QuantParams {
+    let max_abs = t.data().iter().fold(0f32, |m, &x| m.max(x.abs())).max(1e-8);
+    QuantParams::new(max_abs / 127.0, 128)
+}
+
+/// Fixed-point requantization multiplier: represents `m_real ∈ (0, 1)` as
+/// `m0 · 2^-n` with `m0` a Q31 integer in `[2^30, 2^31)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Requant {
+    pub m0: i32,
+    /// Right-shift amount (≥ 0 for m_real < 1).
+    pub shift: i32,
+}
+
+impl Requant {
+    /// Decompose a positive real multiplier.
+    pub fn from_real(m_real: f64) -> Self {
+        assert!(m_real > 0.0, "requant multiplier must be positive");
+        let mut shift = 0i32;
+        let mut m = m_real;
+        while m < 0.5 {
+            m *= 2.0;
+            shift += 1;
+        }
+        while m >= 1.0 {
+            m /= 2.0;
+            shift -= 1;
+        }
+        // m ∈ [0.5, 1) → Q31 in [2^30, 2^31)
+        let mut m0 = (m * (1u64 << 31) as f64).round() as i64;
+        if m0 == (1i64 << 31) {
+            m0 /= 2;
+            shift -= 1;
+        }
+        Self {
+            m0: m0 as i32,
+            shift,
+        }
+    }
+
+    pub fn to_real(self) -> f64 {
+        self.m0 as f64 / (1u64 << 31) as f64 * 2f64.powi(-self.shift)
+    }
+
+    /// Apply to an i32 accumulator: rounding doubled high-mul then rounding
+    /// right shift (gemmlowp `SaturatingRoundingDoublingHighMul` +
+    /// `RoundingDivideByPOT`).
+    #[inline]
+    pub fn apply(self, acc: i32) -> i32 {
+        let prod = (acc as i64) * (self.m0 as i64);
+        // Rounding doubling high mul: (2·prod + 2^30) >> 31, saturating.
+        let nudged = prod.saturating_add(1 << 30);
+        let high = (nudged >> 31) as i32;
+        if self.shift <= 0 {
+            // Left shift (multiplier ≥ 1): saturating.
+            return high.saturating_mul(1i32 << (-self.shift).min(30));
+        }
+        // Rounding right shift.
+        let mask = (1i32 << self.shift) - 1;
+        let remainder = high & mask;
+        let threshold = (mask >> 1) + ((high < 0) as i32);
+        (high >> self.shift) + ((remainder > threshold) as i32)
+    }
+}
+
+/// Requantize the accumulator of a quantized GEMM back to uint8:
+/// `out_q = clamp(zp_out + requant(acc), 0, 255)`.
+#[inline]
+pub fn requantize_acc(acc: i32, r: Requant, zp_out: i32) -> u8 {
+    (zp_out + r.apply(acc)).clamp(0, 255) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn minmax_includes_zero() {
+        let p = calibrate_minmax(0.5, 4.0); // lo must widen to 0
+        assert_eq!(p.zero_point, 0);
+        assert!((p.dequantize(p.quantize(0.0))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn minmax_negative_range() {
+        let p = calibrate_minmax(-2.0, 2.0);
+        let q0 = p.quantize(0.0);
+        assert!((p.dequantize(q0)).abs() < p.scale / 2.0 + 1e-7);
+        // Full range representable without saturation beyond half ulp.
+        assert!((p.dequantize(p.quantize(-2.0)) + 2.0).abs() <= p.scale);
+        assert!((p.dequantize(p.quantize(2.0)) - 2.0).abs() <= p.scale);
+    }
+
+    #[test]
+    fn symmetric_weights_zp128() {
+        let t = Tensor::from_vec(&[4], vec![-1.0f32, 0.5, 0.25, 1.0]);
+        let p = calibrate_weights_symmetric(&t);
+        assert_eq!(p.zero_point, 128);
+        let q = p.quantize(-1.0);
+        assert_eq!(q, 128 - 127);
+    }
+
+    #[test]
+    fn requant_roundtrip_precision() {
+        for &m in &[0.25f64, 0.017, 0.5, 0.9999, 1.5, 0.0001] {
+            let r = Requant::from_real(m);
+            assert!(
+                (r.to_real() - m).abs() / m < 1e-8,
+                "m={m} got {}",
+                r.to_real()
+            );
+        }
+    }
+
+    #[test]
+    fn requant_apply_matches_float() {
+        let mut rng = Rng::new(77);
+        for _ in 0..2000 {
+            let m = 0.001 + rng.next_f64() * 0.8;
+            let r = Requant::from_real(m);
+            let acc = rng.range_i64(-1_000_000, 1_000_000) as i32;
+            let got = r.apply(acc);
+            let want = (acc as f64 * m).round();
+            assert!(
+                (got as f64 - want).abs() <= 1.0,
+                "acc={acc} m={m} got={got} want={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn requantize_saturates_to_u8() {
+        let r = Requant::from_real(1.0);
+        assert_eq!(requantize_acc(10_000, r, 0), 255);
+        assert_eq!(requantize_acc(-10_000, r, 0), 0);
+        assert_eq!(requantize_acc(100, r, 10), 110);
+    }
+
+    #[test]
+    fn calibrate_tensor_covers_data() {
+        let t = Tensor::from_vec(&[5], vec![-3.0f32, -1.0, 0.0, 2.0, 7.0]);
+        let p = calibrate_tensor(&t);
+        for &x in t.data() {
+            let err = (p.dequantize(p.quantize(x)) - x).abs();
+            assert!(err <= p.scale * 0.5 + 1e-6, "x={x} err={err}");
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! Dense tensors and the im2col lowering used by the bit-true NN engine.
+//!
+//! The simulator works almost exclusively on `u8` (quantized activations /
+//! weights) and `i32` (accumulators), in NCHW layout, so `Tensor<T>` is a
+//! deliberately simple owned, contiguous, row-major container — no views,
+//! no broadcasting. Anything fancier belongs to the JAX layer.
+
+pub mod im2col;
+
+pub use im2col::{col2im_shape, im2col, Conv2dGeom};
+
+/// Owned, contiguous, row-major tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    /// Zero-initialized (T::default) tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let numel = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![T::default(); numel],
+        }
+    }
+
+    /// Build from existing data; `data.len()` must equal the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with data length {}",
+            shape,
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Reshape in place (same number of elements).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?} changes element count",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row-major linear offset of a multi-index.
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {ix} out of bounds for dim {i} ({dim})");
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// Map elementwise into a new tensor (possibly different type).
+    pub fn map<U: Copy + Default>(&self, f: impl Fn(T) -> U) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+}
+
+impl Tensor<f32> {
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// Quantization parameters for an affine uint8 tensor:
+/// `real = scale * (q - zero_point)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    pub fn new(scale: f32, zero_point: i32) -> Self {
+        assert!(scale > 0.0, "scale must be positive");
+        assert!((0..=255).contains(&zero_point), "uint8 zero point");
+        Self { scale, zero_point }
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u8 {
+        // Clamp in float space first: huge |x| would overflow the i32 cast.
+        let q = (x / self.scale).round() + self.zero_point as f32;
+        q.clamp(0.0, 255.0) as u8
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: u8) -> f32 {
+        self.scale * (q as i32 - self.zero_point) as f32
+    }
+}
+
+/// A quantized uint8 tensor with its affine parameters — the currency of
+/// the whole simulator (both the exact engine and the PAC engine consume
+/// `QTensor`s).
+#[derive(Debug, Clone)]
+pub struct QTensor {
+    pub tensor: Tensor<u8>,
+    pub params: QuantParams,
+}
+
+impl QTensor {
+    pub fn new(tensor: Tensor<u8>, params: QuantParams) -> Self {
+        Self { tensor, params }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.tensor.shape()
+    }
+
+    pub fn data(&self) -> &[u8] {
+        self.tensor.data()
+    }
+
+    /// Dequantize the whole tensor to f32.
+    pub fn dequantize(&self) -> Tensor<f32> {
+        let p = self.params;
+        self.tensor.map(|q| p.dequantize(q))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t: Tensor<i32> = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert!(t.data().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn offset_row_major() {
+        let t: Tensor<u8> = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.offset(&[0, 0, 0]), 0);
+        assert_eq!(t.offset(&[0, 0, 3]), 3);
+        assert_eq!(t.offset(&[0, 1, 0]), 4);
+        assert_eq!(t.offset(&[1, 0, 0]), 12);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn set_get() {
+        let mut t: Tensor<i32> = Tensor::zeros(&[3, 3]);
+        t.set(&[1, 2], 42);
+        assert_eq!(t.at(&[1, 2]), 42);
+        assert_eq!(t.at(&[2, 1]), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1u8, 2, 3]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1u8, 2, 3, 4, 5, 6]);
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.at(&[2, 1]), 6);
+    }
+
+    #[test]
+    fn quant_roundtrip_within_half_ulp() {
+        let p = QuantParams::new(0.1, 128);
+        for x in [-12.0f32, -0.05, 0.0, 0.049, 3.3, 12.69] {
+            let q = p.quantize(x);
+            let back = p.dequantize(q);
+            assert!((back - x).abs() <= 0.05 + 1e-6, "x={x} back={back}");
+        }
+    }
+
+    #[test]
+    fn quant_saturates() {
+        let p = QuantParams::new(0.1, 128);
+        assert_eq!(p.quantize(1e9), 255);
+        assert_eq!(p.quantize(-1e9), 0);
+    }
+
+    #[test]
+    fn map_changes_type() {
+        let t = Tensor::from_vec(&[2, 2], vec![1u8, 2, 3, 4]);
+        let f = t.map(|x| x as f32 * 0.5);
+        assert_eq!(f.at(&[1, 1]), 2.0);
+    }
+}

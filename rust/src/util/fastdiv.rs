@@ -1,0 +1,114 @@
+//! Exact division by a runtime-constant divisor via reciprocal multiply.
+//!
+//! The PCU evaluates `round(Sx·Sw / n)` for every sparsity-domain cycle
+//! (§3.1, Eq. 3) with `n` fixed per layer — 48 divides per output MAC.
+//! Hardware implements "divide by the configured DP length" as a
+//! reciprocal multiplier; we do the same (§Perf: the `div` instruction
+//! was ~40% of the PAC backend's time).
+//!
+//! Correctness domain: dividends up to `2^26` (the largest `Sx·Sw + n/2`
+//! for DP lengths ≤ 8192), divisors 1..=8192. For divisors < 64 the
+//! reciprocal's magic constant would overflow the u64 product, and a
+//! native divide is cheap there anyway, so we fall back.
+
+/// Precomputed exact divider for a fixed divisor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FastDiv {
+    k: u64,
+    magic: u64,
+}
+
+const SHIFT: u32 = 42;
+/// Below this divisor the magic multiply could overflow; use native div.
+const MIN_MAGIC_K: u64 = 64;
+/// Largest dividend the magic path is proven exact for (see analysis in
+/// the module docs: x·e ≤ x·k ≤ 2^39 < 2^42 for x ≤ 2^26, k ≤ 2^13).
+pub const MAX_DIVIDEND: u64 = 1 << 26;
+
+impl FastDiv {
+    pub fn new(k: u64) -> Self {
+        assert!(k > 0, "divisor must be positive");
+        assert!(k <= 8192, "PCU divider supports DP lengths up to 8192");
+        let magic = if k >= MIN_MAGIC_K {
+            (1u64 << SHIFT) / k + 1
+        } else {
+            0
+        };
+        Self { k, magic }
+    }
+
+    pub fn divisor(&self) -> u64 {
+        self.k
+    }
+
+    /// Exact `x / k` (floor) for `x ≤ MAX_DIVIDEND`.
+    #[inline]
+    pub fn div(&self, x: u64) -> u64 {
+        debug_assert!(x <= MAX_DIVIDEND, "dividend {x} out of proven range");
+        if self.magic != 0 {
+            (x * self.magic) >> SHIFT
+        } else {
+            x / self.k
+        }
+    }
+
+    /// Round-nearest `x / k` (the PCU's +n/2 pre-add).
+    #[inline]
+    pub fn div_round(&self, x: u64) -> u64 {
+        self.div(x + self.k / 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_for_all_layer_dp_lengths() {
+        // Every DP length that appears in the model zoo + stress values.
+        let ks = [
+            27u64, 64, 72, 144, 147, 288, 576, 1152, 2304, 4096, 4608, 8192, 1, 2, 3, 63, 65,
+        ];
+        let mut rng = Rng::new(9);
+        for &k in &ks {
+            let f = FastDiv::new(k);
+            // Edges + random sample.
+            for x in [0u64, 1, k - 1, k, k + 1, MAX_DIVIDEND - 1, MAX_DIVIDEND] {
+                assert_eq!(f.div(x), x / k, "k={k} x={x}");
+            }
+            for _ in 0..20_000 {
+                let x = rng.next_u64() % (MAX_DIVIDEND + 1);
+                assert_eq!(f.div(x), x / k, "k={k} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_nearest_matches_formula() {
+        let mut rng = Rng::new(10);
+        for &k in &[64u64, 576, 1024, 4096] {
+            let f = FastDiv::new(k);
+            for _ in 0..10_000 {
+                let x = rng.next_u64() % (MAX_DIVIDEND - k);
+                assert_eq!(f.div_round(x), (x + k / 2) / k, "k={k} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustive_small_dividends() {
+        for k in 1..=512u64 {
+            let f = FastDiv::new(k);
+            for x in 0..4096u64 {
+                assert_eq!(f.div(x), x / k, "k={k} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_divisor_rejected() {
+        let _ = FastDiv::new(0);
+    }
+}

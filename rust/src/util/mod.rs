@@ -1,0 +1,80 @@
+//! Shared utilities: deterministic RNG, streaming statistics, a minimal
+//! property-testing harness, and bit-plane packing helpers used by the
+//! hot simulation paths.
+
+pub mod check;
+pub mod fastdiv;
+pub mod rng;
+pub mod stats;
+
+/// Pack a `{0,1}`-valued byte slice into `u64` words, LSB-first, for
+/// popcount-based dot products (the software analogue of the D-CiM adder
+/// tree; see `pac::mac`). The tail word is zero-padded.
+pub fn pack_bits_u64(bits: &[u8]) -> Vec<u64> {
+    let words = (bits.len() + 63) / 64;
+    let mut out = vec![0u64; words];
+    for (i, &b) in bits.iter().enumerate() {
+        debug_assert!(b <= 1, "pack_bits_u64 expects binary input");
+        if b != 0 {
+            out[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    out
+}
+
+/// AND-popcount between two packed bit vectors: `Σ_n a[n] & b[n]` — one
+/// binary MAC cycle of a CiM column.
+#[inline]
+pub fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0u32;
+    for (x, y) in a.iter().zip(b) {
+        acc += (x & y).count_ones();
+    }
+    acc
+}
+
+/// Number of `u64` words needed to hold `n` bits.
+#[inline]
+pub fn words_for(n: usize) -> usize {
+    (n + 63) / 64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use rng::Rng;
+
+    #[test]
+    fn pack_roundtrip() {
+        let bits = [1u8, 0, 1, 1, 0, 0, 0, 1];
+        let packed = pack_bits_u64(&bits);
+        assert_eq!(packed.len(), 1);
+        assert_eq!(packed[0], 0b1000_1101);
+    }
+
+    #[test]
+    fn pack_multi_word() {
+        let mut bits = vec![0u8; 130];
+        bits[0] = 1;
+        bits[64] = 1;
+        bits[129] = 1;
+        let packed = pack_bits_u64(&bits);
+        assert_eq!(packed.len(), 3);
+        assert_eq!(packed[0], 1);
+        assert_eq!(packed[1], 1);
+        assert_eq!(packed[2], 2);
+    }
+
+    #[test]
+    fn and_popcount_matches_naive() {
+        let mut rng = Rng::new(99);
+        for n in [1usize, 63, 64, 65, 1000, 1024] {
+            let a = rng.binary_bernoulli(n, 0.4);
+            let b = rng.binary_bernoulli(n, 0.6);
+            let naive: u32 = a.iter().zip(&b).map(|(&x, &y)| (x & y) as u32).sum();
+            let fast = and_popcount(&pack_bits_u64(&a), &pack_bits_u64(&b));
+            assert_eq!(naive, fast, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! All Monte-Carlo experiments in the PACiM reproduction (Fig. 3 error
+//! analysis, Table 1 RMSE sweeps, synthetic workload generation) must be
+//! reproducible from a seed, so we use a small, well-understood generator
+//! rather than an OS entropy source. `SplitMix64` seeds an `Xoshiro256**`
+//! state; both are public-domain algorithms (Blackman & Vigna).
+
+/// SplitMix64 — used to expand a single `u64` seed into generator state.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256** — the workhorse RNG for simulation.
+///
+/// Statistically strong, 2^256-1 period, and fast enough to generate the
+/// hundreds of millions of Bernoulli bits the Fig. 3 experiments need.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Construct from a seed. Two `Rng`s with the same seed produce the
+    /// same stream on every platform.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)`, 53-bit precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)`, f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift method
+    /// (bias is negligible for our bounds; experiments use bounds << 2^32).
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        ((self.next_u32() as u64 * bound as u64) >> 32) as u32
+    }
+
+    /// Uniform in the inclusive integer range `[lo, hi]`.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo) as u64 + 1;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (we only need one of the pair; this
+    /// is not on a hot path).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Gaussian with the given mean / std.
+    pub fn gaussian(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Fill a slice with uniform random bytes.
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        let mut chunks = out.chunks_exact_mut(8);
+        for c in &mut chunks {
+            c.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let b = self.next_u64().to_le_bytes();
+            rem.copy_from_slice(&b[..rem.len()]);
+        }
+    }
+
+    /// Random binary vector of length `n` with exactly ⌊p·n⌉ ones in random
+    /// positions (sparsity-exact generation, used when an experiment pins
+    /// `S` rather than the Bernoulli rate).
+    pub fn binary_with_popcount(&mut self, n: usize, ones: usize) -> Vec<u8> {
+        assert!(ones <= n);
+        let mut v = vec![0u8; n];
+        for slot in v.iter_mut().take(ones) {
+            *slot = 1;
+        }
+        // Fisher–Yates shuffle.
+        for i in (1..n).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            v.swap(i, j);
+        }
+        v
+    }
+
+    /// Random binary vector where each element is Bernoulli(p).
+    pub fn binary_bernoulli(&mut self, n: usize, p: f64) -> Vec<u8> {
+        (0..n).map(|_| self.bernoulli(p) as u8).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bound() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate_converges() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let ones = (0..n).filter(|_| r.bernoulli(0.3)).count();
+        let rate = ones as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn popcount_exact() {
+        let mut r = Rng::new(5);
+        let v = r.binary_with_popcount(1024, 300);
+        assert_eq!(v.iter().map(|&b| b as usize).sum::<usize>(), 300);
+        assert_eq!(v.len(), 1024);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn fill_bytes_covers_tail() {
+        let mut r = Rng::new(9);
+        let mut buf = [0u8; 13];
+        r.fill_bytes(&mut buf);
+        // Overwhelmingly unlikely to be all zeros.
+        assert!(buf.iter().any(|&b| b != 0));
+    }
+}

@@ -1,0 +1,313 @@
+//! Streaming statistics used by the error-analysis experiments.
+//!
+//! The Fig. 3 Monte-Carlo sweeps run up to 100K iterations per
+//! configuration; `Accumulator` keeps O(1) state via Welford's algorithm so
+//! we never materialize the sample vectors. `Histogram` backs the
+//! Fig. 3(b) MAC-distribution plot.
+
+/// Welford online mean/variance accumulator with extras for RMSE.
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    sum_sq: f64, // Σ x² — for RMSE of an error stream
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.sum_sq += x * x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Root-mean-square of the pushed values — when the stream is an error
+    /// stream `(approx - exact)`, this is the RMSE.
+    pub fn rms(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.sum_sq / self.n as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Accumulator) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + delta * delta * self.n as f64 * other.n as f64 / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-bin integer histogram, used for the Fig. 3(b) MAC distribution.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: i64,
+    hi: i64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    /// One bin per integer in `[lo, hi]`.
+    pub fn new(lo: i64, hi: i64) -> Self {
+        assert!(hi >= lo);
+        Self {
+            lo,
+            hi,
+            bins: vec![0; (hi - lo + 1) as usize],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: i64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x > self.hi {
+            self.overflow += 1;
+        } else {
+            self.bins[(x - self.lo) as usize] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn bin(&self, x: i64) -> u64 {
+        if x < self.lo || x > self.hi {
+            0
+        } else {
+            self.bins[(x - self.lo) as usize]
+        }
+    }
+
+    /// (value, count) pairs for non-empty bins.
+    pub fn nonzero(&self) -> Vec<(i64, u64)> {
+        self.bins
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (self.lo + i as i64, c))
+            .collect()
+    }
+
+    /// Fraction of samples within `±w` of `center`.
+    pub fn mass_within(&self, center: i64, w: i64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut acc = 0u64;
+        for x in (center - w)..=(center + w) {
+            acc += self.bin(x);
+        }
+        acc as f64 / total as f64
+    }
+
+    /// Render a compact ASCII sparkline of the distribution (for bench
+    /// output). Bins are grouped into `width` columns.
+    pub fn sparkline(&self, width: usize) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let n = self.bins.len();
+        if n == 0 || width == 0 {
+            return String::new();
+        }
+        let per = (n + width - 1) / width;
+        let grouped: Vec<u64> = self
+            .bins
+            .chunks(per)
+            .map(|c| c.iter().sum::<u64>())
+            .collect();
+        let max = *grouped.iter().max().unwrap_or(&1);
+        if max == 0 {
+            return GLYPHS[0].to_string().repeat(grouped.len());
+        }
+        grouped
+            .iter()
+            .map(|&c| GLYPHS[((c * 7) / max) as usize])
+            .collect()
+    }
+}
+
+/// Percentile over a mutable sample buffer (nearest-rank). Used by the
+/// serving-latency reporting where sample counts are small.
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Nearest-rank: the ⌈p/100·N⌉-th smallest sample (1-indexed).
+    let rank = ((p / 100.0) * samples.len() as f64).ceil().max(1.0) as usize;
+    samples[rank - 1]
+}
+
+/// RMSE between two equal-length slices.
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum();
+    (s / a.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut acc = Accumulator::new();
+        for &x in &xs {
+            acc.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((acc.mean() - mean).abs() < 1e-12);
+        assert!((acc.variance() - var).abs() < 1e-12);
+        assert_eq!(acc.min(), 1.0);
+        assert_eq!(acc.max(), 10.0);
+        assert_eq!(acc.count(), 5);
+    }
+
+    #[test]
+    fn accumulator_rms_error_stream() {
+        let mut acc = Accumulator::new();
+        acc.push(3.0);
+        acc.push(-4.0);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        assert!((acc.rms() - 12.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulator_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Accumulator::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Accumulator::new();
+        let mut b = Accumulator::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.variance() - whole.variance()).abs() < 1e-10);
+        assert!((a.rms() - whole.rms()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn histogram_basic() {
+        let mut h = Histogram::new(-5, 5);
+        for x in [-6, -5, 0, 0, 0, 5, 6, 7] {
+            h.push(x);
+        }
+        assert_eq!(h.total(), 8);
+        assert_eq!(h.bin(0), 3);
+        assert_eq!(h.bin(-5), 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert!((h.mass_within(0, 0) - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut s: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&mut s, 50.0), 50.0);
+        assert_eq!(percentile(&mut s, 0.0), 1.0);
+        assert_eq!(percentile(&mut s, 100.0), 100.0);
+    }
+
+    #[test]
+    fn rmse_direct() {
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - 12.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let mut h = Histogram::new(0, 15);
+        for i in 0..16 {
+            for _ in 0..i {
+                h.push(i);
+            }
+        }
+        let s = h.sparkline(8);
+        assert_eq!(s.chars().count(), 8);
+    }
+}

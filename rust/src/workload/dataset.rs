@@ -1,0 +1,200 @@
+//! Synthetic dataset container (`artifacts/dataset.bin`).
+//!
+//! The dataset is generated deterministically by
+//! `python/compile/datagen.py` at build time (our substitution for
+//! CIFAR/ImageNet — DESIGN.md §3) and consumed here by the accuracy
+//! benches and the serving example. Binary format, little-endian:
+//!
+//! ```text
+//! magic   b"PACD"
+//! version u32 = 1
+//! n, c, h, w, n_classes : u32
+//! scale   f32   // input quantization params (uint8 affine)
+//! zero_pt i32
+//! images  n·c·h·w bytes (quantized u8, NCHW)
+//! labels  n bytes
+//! ```
+
+use crate::tensor::QuantParams;
+use crate::{Error, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"PACD";
+const VERSION: u32 = 1;
+
+/// An in-memory quantized image-classification dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub n_classes: usize,
+    pub params: QuantParams,
+    /// NCHW, quantized.
+    pub images: Vec<u8>,
+    pub labels: Vec<u8>,
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+impl Dataset {
+    pub fn image(&self, i: usize) -> &[u8] {
+        let sz = self.c * self.h * self.w;
+        &self.images[i * sz..(i + 1) * sz]
+    }
+
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i] as usize
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.c * self.h * self.w
+    }
+
+    /// Load from `dataset.bin`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref()).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot open dataset {} (run `make artifacts`): {e}",
+                path.as_ref().display()
+            ))
+        })?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(Error::Artifact("bad dataset magic".into()));
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            return Err(Error::Artifact(format!("unsupported dataset version {version}")));
+        }
+        let n = read_u32(&mut f)? as usize;
+        let c = read_u32(&mut f)? as usize;
+        let h = read_u32(&mut f)? as usize;
+        let w = read_u32(&mut f)? as usize;
+        let n_classes = read_u32(&mut f)? as usize;
+        let scale = read_f32(&mut f)?;
+        let zp = read_u32(&mut f)? as i32;
+        let mut images = vec![0u8; n * c * h * w];
+        f.read_exact(&mut images)?;
+        let mut labels = vec![0u8; n];
+        f.read_exact(&mut labels)?;
+        // Reject trailing garbage — catches format drift early.
+        let mut probe = [0u8; 1];
+        if f.read(&mut probe)? != 0 {
+            return Err(Error::Artifact("trailing bytes in dataset.bin".into()));
+        }
+        for &l in &labels {
+            if l as usize >= n_classes {
+                return Err(Error::Artifact(format!(
+                    "label {l} out of range ({n_classes} classes)"
+                )));
+            }
+        }
+        Ok(Self {
+            n,
+            c,
+            h,
+            w,
+            n_classes,
+            params: QuantParams::new(scale, zp),
+            images,
+            labels,
+        })
+    }
+
+    /// Write in the same format (used by tests and tooling).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        for v in [
+            VERSION,
+            self.n as u32,
+            self.c as u32,
+            self.h as u32,
+            self.w as u32,
+            self.n_classes as u32,
+        ] {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        f.write_all(&self.params.scale.to_le_bytes())?;
+        f.write_all(&(self.params.zero_point as u32).to_le_bytes())?;
+        f.write_all(&self.images)?;
+        f.write_all(&self.labels)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            n: 3,
+            c: 1,
+            h: 2,
+            w: 2,
+            n_classes: 2,
+            params: QuantParams::new(0.05, 3),
+            images: (0..12).collect(),
+            labels: vec![0, 1, 1],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = toy();
+        let path = std::env::temp_dir().join("pacim_test_dataset.bin");
+        d.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.n, 3);
+        assert_eq!(back.images, d.images);
+        assert_eq!(back.labels, d.labels);
+        assert_eq!(back.params, d.params);
+        assert_eq!(back.image(1), &[4, 5, 6, 7]);
+        assert_eq!(back.label(2), 1);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("pacim_test_badmagic.bin");
+        std::fs::write(&path, b"NOPE0000000000000000000000000000").unwrap();
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let d = toy();
+        let path = std::env::temp_dir().join("pacim_test_trunc.bin");
+        d.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 2]).unwrap();
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range_labels() {
+        let mut d = toy();
+        d.labels = vec![0, 1, 5];
+        let path = std::env::temp_dir().join("pacim_test_badlabel.bin");
+        d.save(&path).unwrap();
+        assert!(Dataset::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

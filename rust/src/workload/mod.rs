@@ -1,0 +1,14 @@
+//! Workload definitions: the layer-shape tables of the paper's benchmark
+//! networks and the synthetic dataset loader.
+//!
+//! The cycle / energy / traffic experiments (Fig. 7, Tables 3–4) depend
+//! only on layer *geometry*, which we take verbatim from ResNet-18/50 and
+//! VGG16-BN at CIFAR (32×32) and ImageNet (224×224) resolutions. Accuracy
+//! experiments run the actually-trained tiny models on the synthetic
+//! dataset (see DESIGN.md §3 substitutions).
+
+pub mod dataset;
+pub mod shapes;
+
+pub use dataset::Dataset;
+pub use shapes::{resnet18, resnet50, vgg16_bn, LayerShape, LayerShapeKind, Resolution};

@@ -1,0 +1,300 @@
+//! Layer-shape tables for the paper's benchmark networks.
+//!
+//! Geometry is all the architecture analytics need: DP length (= CiM
+//! column depth), output channel count (= MWC demand), and output pixel
+//! count (= bit-serial repetitions). Shapes follow the torchvision
+//! definitions; CIFAR variants use the standard 3×3-stem ResNet.
+
+use crate::tensor::Conv2dGeom;
+
+/// Input resolution family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resolution {
+    /// 32×32 (CIFAR-10/100).
+    Cifar,
+    /// 224×224 (ImageNet).
+    ImageNet,
+}
+
+/// Kind of a compute layer for CiM mapping purposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerShapeKind {
+    Conv,
+    Linear,
+}
+
+/// One compute layer's geometry.
+#[derive(Debug, Clone)]
+pub struct LayerShape {
+    pub name: String,
+    pub kind: LayerShapeKind,
+    /// Convolution geometry; LINEAR layers are encoded as 1×1 convs over
+    /// a 1×1 image (dp_len = in_features, out_pixels = 1).
+    pub geom: Conv2dGeom,
+}
+
+impl LayerShape {
+    pub fn conv(
+        name: &str,
+        in_c: usize,
+        out_c: usize,
+        hw: usize,
+        k: usize,
+        stride: usize,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerShapeKind::Conv,
+            geom: Conv2dGeom {
+                in_c,
+                in_h: hw,
+                in_w: hw,
+                out_c,
+                kh: k,
+                kw: k,
+                stride,
+                pad: k / 2,
+            },
+        }
+    }
+
+    pub fn linear(name: &str, in_f: usize, out_f: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerShapeKind::Linear,
+            geom: Conv2dGeom {
+                in_c: in_f,
+                in_h: 1,
+                in_w: 1,
+                out_c: out_f,
+                kh: 1,
+                kw: 1,
+                stride: 1,
+                pad: 0,
+            },
+        }
+    }
+
+    /// DP length = im2col depth = CiM column occupancy.
+    pub fn dp_len(&self) -> usize {
+        self.geom.dp_len()
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.geom.macs()
+    }
+
+    pub fn out_pixels(&self) -> usize {
+        self.geom.out_pixels()
+    }
+}
+
+fn basic_block(v: &mut Vec<LayerShape>, tag: &str, c_in: usize, c_out: usize, hw: usize, stride: usize) {
+    v.push(LayerShape::conv(
+        &format!("{tag}.conv1"),
+        c_in,
+        c_out,
+        hw,
+        3,
+        stride,
+    ));
+    let hw2 = hw / stride;
+    v.push(LayerShape::conv(&format!("{tag}.conv2"), c_out, c_out, hw2, 3, 1));
+    if stride != 1 || c_in != c_out {
+        v.push(LayerShape::conv(
+            &format!("{tag}.downsample"),
+            c_in,
+            c_out,
+            hw,
+            1,
+            stride,
+        ));
+    }
+}
+
+fn bottleneck(v: &mut Vec<LayerShape>, tag: &str, c_in: usize, width: usize, hw: usize, stride: usize) {
+    let c_out = width * 4;
+    v.push(LayerShape::conv(&format!("{tag}.conv1"), c_in, width, hw, 1, 1));
+    v.push(LayerShape::conv(
+        &format!("{tag}.conv2"),
+        width,
+        width,
+        hw,
+        3,
+        stride,
+    ));
+    let hw2 = hw / stride;
+    v.push(LayerShape::conv(&format!("{tag}.conv3"), width, c_out, hw2, 1, 1));
+    if stride != 1 || c_in != c_out {
+        v.push(LayerShape::conv(
+            &format!("{tag}.downsample"),
+            c_in,
+            c_out,
+            hw,
+            1,
+            stride,
+        ));
+    }
+}
+
+/// ResNet-18 layer shapes.
+pub fn resnet18(res: Resolution, num_classes: usize) -> Vec<LayerShape> {
+    let mut v = Vec::new();
+    let hw0 = match res {
+        Resolution::Cifar => {
+            v.push(LayerShape::conv("stem", 3, 64, 32, 3, 1));
+            32
+        }
+        Resolution::ImageNet => {
+            // 7×7/2 stem then 3×3/2 maxpool → 56×56.
+            v.push(LayerShape::conv("stem", 3, 64, 224, 7, 2));
+            56
+        }
+    };
+    let plan = [(64usize, 64usize, 1usize), (64, 128, 2), (128, 256, 2), (256, 512, 2)];
+    let mut hw = hw0;
+    for (i, &(c_in, c_out, stride)) in plan.iter().enumerate() {
+        basic_block(&mut v, &format!("layer{}.0", i + 1), c_in, c_out, hw, stride);
+        hw /= stride;
+        basic_block(&mut v, &format!("layer{}.1", i + 1), c_out, c_out, hw, 1);
+    }
+    v.push(LayerShape::linear("fc", 512, num_classes));
+    v
+}
+
+/// ResNet-50 layer shapes.
+pub fn resnet50(res: Resolution, num_classes: usize) -> Vec<LayerShape> {
+    let mut v = Vec::new();
+    let hw0 = match res {
+        Resolution::Cifar => {
+            v.push(LayerShape::conv("stem", 3, 64, 32, 3, 1));
+            32
+        }
+        Resolution::ImageNet => {
+            v.push(LayerShape::conv("stem", 3, 64, 224, 7, 2));
+            56
+        }
+    };
+    let blocks = [(64usize, 3usize, 1usize), (128, 4, 2), (256, 6, 2), (512, 3, 2)];
+    let mut hw = hw0;
+    let mut c_in = 64;
+    for (i, &(width, reps, stride)) in blocks.iter().enumerate() {
+        for r in 0..reps {
+            let s = if r == 0 { stride } else { 1 };
+            bottleneck(&mut v, &format!("layer{}.{r}", i + 1), c_in, width, hw, s);
+            if r == 0 {
+                hw /= stride;
+            }
+            c_in = width * 4;
+        }
+    }
+    v.push(LayerShape::linear("fc", 2048, num_classes));
+    v
+}
+
+/// VGG16-BN layer shapes.
+pub fn vgg16_bn(res: Resolution, num_classes: usize) -> Vec<LayerShape> {
+    let cfg: [&[usize]; 5] = [&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+    let mut v = Vec::new();
+    let mut hw = match res {
+        Resolution::Cifar => 32,
+        Resolution::ImageNet => 224,
+    };
+    let mut c_in = 3;
+    for (si, stage) in cfg.iter().enumerate() {
+        for (ci, &c_out) in stage.iter().enumerate() {
+            v.push(LayerShape::conv(
+                &format!("features.{si}.{ci}"),
+                c_in,
+                c_out,
+                hw,
+                3,
+                1,
+            ));
+            c_in = c_out;
+        }
+        hw /= 2; // maxpool
+    }
+    match res {
+        Resolution::ImageNet => {
+            v.push(LayerShape::linear("classifier.0", 512 * 7 * 7, 4096));
+            v.push(LayerShape::linear("classifier.3", 4096, 4096));
+            v.push(LayerShape::linear("classifier.6", 4096, num_classes));
+        }
+        Resolution::Cifar => {
+            v.push(LayerShape::linear("classifier.0", 512, 512));
+            v.push(LayerShape::linear("classifier.3", 512, 512));
+            v.push(LayerShape::linear("classifier.6", 512, num_classes));
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_imagenet_macs() {
+        // torchvision ResNet-18 ≈ 1.81 GMACs at 224×224 (conv+fc).
+        let total: u64 = resnet18(Resolution::ImageNet, 1000)
+            .iter()
+            .map(|l| l.macs())
+            .sum();
+        let gmacs = total as f64 / 1e9;
+        assert!((1.6..2.1).contains(&gmacs), "got {gmacs} GMACs");
+    }
+
+    #[test]
+    fn resnet50_imagenet_macs() {
+        // ≈ 4.1 GMACs.
+        let total: u64 = resnet50(Resolution::ImageNet, 1000)
+            .iter()
+            .map(|l| l.macs())
+            .sum();
+        let gmacs = total as f64 / 1e9;
+        assert!((3.6..4.6).contains(&gmacs), "got {gmacs} GMACs");
+    }
+
+    #[test]
+    fn vgg16_imagenet_macs() {
+        // ≈ 15.5 GMACs.
+        let total: u64 = vgg16_bn(Resolution::ImageNet, 1000)
+            .iter()
+            .map(|l| l.macs())
+            .sum();
+        let gmacs = total as f64 / 1e9;
+        assert!((14.0..17.0).contains(&gmacs), "got {gmacs} GMACs");
+    }
+
+    #[test]
+    fn dp_lengths_in_paper_range() {
+        // §3.2: CONV DP lengths range 3·3·64..3·3·512; LINEAR 512..4096.
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let convs: Vec<usize> = shapes
+            .iter()
+            .filter(|l| l.kind == LayerShapeKind::Conv && l.geom.kh == 3 && l.name != "stem")
+            .map(|l| l.dp_len())
+            .collect();
+        assert!(convs.iter().all(|&d| (3 * 3 * 64..=3 * 3 * 512).contains(&d)));
+        let fc = shapes.last().unwrap();
+        assert_eq!(fc.dp_len(), 512);
+    }
+
+    #[test]
+    fn stem_resolution_dependent() {
+        let c = resnet18(Resolution::Cifar, 10);
+        assert_eq!(c[0].geom.kh, 3);
+        let i = resnet18(Resolution::ImageNet, 1000);
+        assert_eq!(i[0].geom.kh, 7);
+        assert_eq!(i[0].geom.out_h(), 112);
+    }
+
+    #[test]
+    fn linear_encoding_as_conv() {
+        let l = LayerShape::linear("fc", 512, 10);
+        assert_eq!(l.dp_len(), 512);
+        assert_eq!(l.out_pixels(), 1);
+        assert_eq!(l.macs(), 5120);
+    }
+}

@@ -1,0 +1,96 @@
+//! Integration: the structural bank model against the flat NN backend,
+//! the encoder against the engine's activations, and the scheduler
+//! against hand-counted tilings.
+
+use pacim::arch::{
+    encoder::{encode_conv_output, EncodingMode, SparsityEncoder},
+    BankConfig, PacimBank, ThresholdSet,
+};
+use pacim::coordinator::{schedule_layer, ScheduleConfig};
+use pacim::pac::sparsity::bit_sparsity_counts;
+use pacim::util::rng::Rng;
+use pacim::workload::shapes::LayerShape;
+
+#[test]
+fn bank_tiles_match_scheduler_accounting() {
+    // Run a real (small) layer through the functional bank and check the
+    // analytic scheduler's cycle count formula agrees.
+    let mut rng = Rng::new(2000);
+    let shape = LayerShape::conv("t", 8, 16, 8, 3, 1); // k=72, 64 pixels
+    let k = shape.dp_len();
+    let weights: Vec<Vec<u8>> = (0..shape.geom.out_c)
+        .map(|_| (0..k).map(|_| rng.below(256) as u8).collect())
+        .collect();
+    let mut bank = PacimBank::new(BankConfig::default());
+    bank.load_weights(&weights);
+    let pixels = shape.out_pixels();
+    for _ in 0..pixels {
+        let x: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+        bank.compute(&x);
+    }
+    // Functional: 16 broadcasts per pixel (single tile: k<=256, oc<=64).
+    assert_eq!(bank.stats.dcim.bit_serial_cycles, 16 * pixels as u64);
+    let cfg = ScheduleConfig::pacim_default();
+    let rep = schedule_layer(&shape, &cfg);
+    assert_eq!(rep.row_tiles, 1);
+    assert_eq!(rep.oc_tiles, 1);
+    assert_eq!(rep.bit_serial_cycles, 16 * pixels as u64);
+}
+
+#[test]
+fn encoder_output_feeds_bank_speculation_consistently() {
+    // The sparsity the encoder emits for a pixel group must equal what
+    // the bank computes internally for the same data — the architecture's
+    // cache round-trip is lossless for sparsity.
+    let mut rng = Rng::new(2001);
+    let channels = 32;
+    let pixels = 9;
+    let chw: Vec<u8> = (0..channels * pixels)
+        .map(|_| rng.below(256) as u8)
+        .collect();
+    let mut enc = SparsityEncoder::new(EncodingMode::PixelWise);
+    let groups = encode_conv_output(&chw, channels, pixels, &mut enc);
+    for (pix, g) in groups.iter().enumerate() {
+        let col: Vec<u8> = (0..channels).map(|c| chw[c * pixels + pix]).collect();
+        assert_eq!(g.counters, bit_sparsity_counts(&col), "pixel {pix}");
+    }
+}
+
+#[test]
+fn dynamic_bank_cycle_savings_show_up_in_stats() {
+    let mut rng = Rng::new(2002);
+    let n = 128;
+    let ws: Vec<Vec<u8>> = (0..8)
+        .map(|_| (0..n).map(|_| rng.below(256) as u8).collect())
+        .collect();
+    let mut cfg = BankConfig::default();
+    cfg.thresholds = Some(ThresholdSet::new(0.2, 0.35, 0.5));
+    let mut bank = PacimBank::new(cfg);
+    bank.load_weights(&ws);
+    // Mix of sparse and dense inputs.
+    for i in 0..40 {
+        let density = (i % 4) as f64 * 0.3;
+        let x: Vec<u8> = (0..n)
+            .map(|_| if rng.bernoulli(density) { rng.below(256) as u8 } else { 0 })
+            .collect();
+        bank.compute(&x);
+    }
+    let h = bank.stats.levels;
+    assert_eq!(h.total(), 40);
+    assert!(h.c10 > 0, "no low-saliency decisions: {h:?}");
+    assert!(h.average_cycles() < 16.0);
+    assert!(h.average_cycles() >= 10.0);
+}
+
+#[test]
+fn weight_bits_affect_row_writes() {
+    use pacim::arch::{DCimBank, DCimConfig};
+    let mut full = DCimBank::new(DCimConfig { rows: 64, mwcs: 4, weight_bits: 8 });
+    let mut pac = DCimBank::new(DCimConfig { rows: 64, mwcs: 4, weight_bits: 4 });
+    let ws: Vec<Vec<u8>> = (0..4).map(|i| vec![i as u8 * 17; 64]).collect();
+    full.load_weights(&ws);
+    pac.load_weights(&ws);
+    // LSB elimination halves weight-update writes (the 50% DRAM claim's
+    // on-array counterpart).
+    assert_eq!(pac.stats.weight_row_writes * 2, full.stats.weight_row_writes);
+}

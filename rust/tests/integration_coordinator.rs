@@ -1,0 +1,126 @@
+//! Integration: serving coordinator under load, with failure injection,
+//! and scheduler consistency across workloads (no artifacts needed).
+
+use pacim::coordinator::server::BatchExecutor;
+use pacim::coordinator::{
+    schedule_model, BatchPolicy, InferenceServer, ScheduleConfig,
+};
+use pacim::workload::{resnet18, resnet50, vgg16_bn, Resolution};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Deterministic mock: logit j = input[0] * (j+1).
+struct Mock {
+    batch: usize,
+    calls: AtomicUsize,
+    fail_on: Option<usize>,
+}
+
+impl BatchExecutor for Mock {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+    fn input_elems(&self) -> usize {
+        4
+    }
+    fn output_elems(&self) -> usize {
+        3
+    }
+    fn execute(&mut self, batch: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let c = self.calls.fetch_add(1, Ordering::Relaxed);
+        if Some(c) == self.fail_on {
+            anyhow::bail!("injected");
+        }
+        std::thread::sleep(Duration::from_micros(100));
+        let mut out = Vec::new();
+        for i in 0..self.batch {
+            for j in 0..3 {
+                out.push(batch[i * 4] * (j + 1) as f32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[test]
+fn sustained_load_many_clients() {
+    let server = InferenceServer::start(
+        Mock { batch: 8, calls: AtomicUsize::new(0), fail_on: None },
+        BatchPolicy { max_wait: Duration::from_millis(1) },
+    );
+    let h = server.handle();
+    let total = 200;
+    let done = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..10 {
+            let h = h.clone();
+            let done = &done;
+            s.spawn(move || {
+                for i in 0..total / 10 {
+                    let v = (t * 100 + i) as f32;
+                    let r = h.infer(vec![v, 0.0, 0.0, 0.0]).unwrap();
+                    assert_eq!(r.logits, vec![v, 2.0 * v, 3.0 * v]);
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    assert_eq!(done.load(Ordering::Relaxed), total);
+    let m = server.stop();
+    assert_eq!(m.requests, total as u64);
+    assert!(m.mean_batch_occupancy() > 1.0, "batching never engaged");
+}
+
+#[test]
+fn failure_injection_mid_stream_recovers() {
+    let server = InferenceServer::start(
+        Mock { batch: 1, calls: AtomicUsize::new(0), fail_on: Some(3) },
+        BatchPolicy::default(),
+    );
+    let h = server.handle();
+    let mut errors = 0;
+    for i in 0..8 {
+        match h.infer(vec![i as f32, 0.0, 0.0, 0.0]) {
+            Ok(r) => assert_eq!(r.logits[0], i as f32),
+            Err(_) => errors += 1,
+        }
+    }
+    assert_eq!(errors, 1, "exactly the injected batch fails");
+    let m = server.stop();
+    assert_eq!(m.failed_batches, 1);
+    assert_eq!(m.requests, 7);
+}
+
+#[test]
+fn scheduler_consistency_across_networks() {
+    // The 75% static / 81.25% dynamic cycle reductions are properties of
+    // the map, so they must hold for EVERY network exactly.
+    for shapes in [
+        resnet18(Resolution::Cifar, 10),
+        resnet18(Resolution::ImageNet, 1000),
+        resnet50(Resolution::ImageNet, 1000),
+        vgg16_bn(Resolution::Cifar, 10),
+        vgg16_bn(Resolution::ImageNet, 1000),
+    ] {
+        let dig = schedule_model(&shapes, &ScheduleConfig::digital_baseline());
+        let stat = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+        let dyn_ = schedule_model(&shapes, &ScheduleConfig::pacim_dynamic());
+        let rs = stat.total_macs_cycles() as f64 / dig.total_macs_cycles() as f64;
+        let rd = dyn_.total_macs_cycles() as f64 / dig.total_macs_cycles() as f64;
+        assert!((rs - 0.25).abs() < 1e-9);
+        assert!((rd - 0.1875).abs() < 1e-9);
+        // Activation traffic reduction lands in the paper's 40-50% band
+        // for every benchmark network.
+        let red = stat.act_traffic_reduction();
+        assert!((0.35..0.52).contains(&red), "{red}");
+    }
+}
+
+#[test]
+fn weight_traffic_scales_with_model_size() {
+    let r18 = schedule_model(&resnet18(Resolution::ImageNet, 1000), &ScheduleConfig::pacim_default());
+    let r50 = schedule_model(&resnet50(Resolution::ImageNet, 1000), &ScheduleConfig::pacim_default());
+    let w18: u64 = r18.layers.iter().map(|l| l.weight_bits_pacim).sum();
+    let w50: u64 = r50.layers.iter().map(|l| l.weight_bits_pacim).sum();
+    assert!(w50 > w18, "ResNet-50 moves more weight bits than ResNet-18");
+}

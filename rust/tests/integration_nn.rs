@@ -1,0 +1,111 @@
+//! Integration: the NN engines against the trained artifacts — accuracy
+//! bands, PAC-vs-exact relationships, and engine determinism under
+//! threading. Skips gracefully without artifacts.
+
+use pacim::arch::ThresholdSet;
+use pacim::nn::{
+    evaluate, exact_backend, pac_backend, run_model, tiny_resnet, PacConfig, WeightStore,
+};
+use pacim::pac::ComputeMap;
+use pacim::runtime::Manifest;
+use pacim::workload::Dataset;
+
+fn load() -> Option<(pacim::nn::Model, Dataset)> {
+    let man = Manifest::load(pacim::runtime::manifest::artifacts_dir()).ok()?;
+    let store = WeightStore::load(man.path("weights").ok()?).ok()?;
+    let ds = Dataset::load(man.path("dataset").ok()?).ok()?;
+    let model = tiny_resnet(&store, ds.h, ds.n_classes).ok()?;
+    Some((model, ds))
+}
+
+fn subset(ds: &Dataset, n: usize) -> (Vec<&[u8]>, Vec<usize>) {
+    let n = n.min(ds.n);
+    ((0..n).map(|i| ds.image(i)).collect(), (0..n).map(|i| ds.label(i)).collect())
+}
+
+#[test]
+fn trained_model_beats_chance_by_wide_margin() {
+    let Some((model, ds)) = load() else { return };
+    let (images, labels) = subset(&ds, 128);
+    let exact = exact_backend(&model);
+    let (acc, stats) = evaluate(&model, &exact, &images, &labels, 8);
+    assert!(acc > 0.8, "exact accuracy {acc}");
+    assert_eq!(stats.macs, model.macs() * images.len() as u64);
+}
+
+#[test]
+fn pac_accuracy_within_band_of_exact() {
+    // The Table 2 claim at integration-test strength: 4-bit PAC loses
+    // only a few points on the easy task.
+    let Some((model, ds)) = load() else { return };
+    let (images, labels) = subset(&ds, 128);
+    let exact = exact_backend(&model);
+    let (acc_e, _) = evaluate(&model, &exact, &images, &labels, 8);
+    let pac = pac_backend(&model, PacConfig::default());
+    let (acc_p, _) = evaluate(&model, &pac, &images, &labels, 8);
+    assert!(
+        acc_e - acc_p <= 0.12,
+        "PAC loss too large: exact {acc_e} pac {acc_p}"
+    );
+}
+
+#[test]
+fn all_digital_map_reproduces_exact_engine_on_artifacts() {
+    let Some((model, ds)) = load() else { return };
+    let exact = exact_backend(&model);
+    let cfg = PacConfig {
+        map: ComputeMap::all_digital(),
+        first_layer_exact: false,
+        min_dp_len: 0,
+        ..PacConfig::default()
+    };
+    let pac = pac_backend(&model, cfg);
+    for i in 0..4.min(ds.n) {
+        let (a, _) = run_model(&model, &exact, ds.image(i));
+        let (b, _) = run_model(&model, &pac, ds.image(i));
+        assert_eq!(a, b, "image {i}");
+    }
+}
+
+#[test]
+fn dynamic_config_trades_cycles_for_bounded_loss() {
+    let Some((model, ds)) = load() else { return };
+    let (images, labels) = subset(&ds, 96);
+    let pac_s = pac_backend(&model, PacConfig::default());
+    let (acc_s, _) = evaluate(&model, &pac_s, &images, &labels, 8);
+    let cfg = PacConfig {
+        thresholds: Some(ThresholdSet::default_cifar()),
+        ..PacConfig::default()
+    };
+    let pac_d = pac_backend(&model, cfg);
+    let (acc_d, stats) = evaluate(&model, &pac_d, &images, &labels, 8);
+    assert!(stats.levels.total() > 0);
+    assert!(stats.levels.average_cycles() < 16.0);
+    // Dynamic is *better* than static on this model (see EXPERIMENTS.md).
+    assert!(acc_d >= acc_s - 0.05, "dynamic loss too large: {acc_s} -> {acc_d}");
+}
+
+#[test]
+fn evaluation_is_thread_count_invariant() {
+    let Some((model, ds)) = load() else { return };
+    let (images, labels) = subset(&ds, 32);
+    let exact = exact_backend(&model);
+    let (a1, _) = evaluate(&model, &exact, &images, &labels, 1);
+    let (a8, _) = evaluate(&model, &exact, &images, &labels, 8);
+    assert_eq!(a1, a8);
+}
+
+#[test]
+fn five_bit_mode_recovers_loss() {
+    let Some((model, ds)) = load() else { return };
+    let (images, labels) = subset(&ds, 96);
+    let exact = exact_backend(&model);
+    let (acc_e, _) = evaluate(&model, &exact, &images, &labels, 8);
+    let cfg5 = PacConfig {
+        map: ComputeMap::operand_based(5, 5),
+        ..PacConfig::default()
+    };
+    let pac5 = pac_backend(&model, cfg5);
+    let (acc_5, _) = evaluate(&model, &pac5, &images, &labels, 8);
+    assert!(acc_e - acc_5 <= 0.03, "5-bit loss: {acc_e} -> {acc_5}");
+}

@@ -1,0 +1,103 @@
+//! Integration: PAC math across modules — compute maps x MAC kernels x
+//! error analysis working together (no artifacts required).
+
+use pacim::pac::error_analysis::{pac_rmse, rmse_vs_dp_length, BitModel};
+use pacim::pac::{
+    exact_mac, exact_mac_bitserial, hybrid_mac, BitPlanes, ComputeMap, DynamicLevel,
+    PcuRounding,
+};
+use pacim::util::rng::Rng;
+
+#[test]
+fn hybrid_error_shrinks_with_dp_length() {
+    // End-to-end check of the paper's central scaling claim at the full
+    // 8b/8b MAC level (not just single cycles): relative error of the
+    // 4x4 hybrid MAC shrinks roughly as 1/sqrt(n).
+    let map = ComputeMap::operand_based(4, 4);
+    let mut rng = Rng::new(1000);
+    let mut rel_errs = Vec::new();
+    for &n in &[64usize, 256, 1024] {
+        let mut err_acc = 0.0f64;
+        let trials = 200;
+        for _ in 0..trials {
+            let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let w: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let xp = BitPlanes::from_u8(&x);
+            let wp = BitPlanes::from_u8(&w);
+            let h = hybrid_mac(&xp, &wp, &map, PcuRounding::RoundNearest);
+            let exact = exact_mac(&x, &w) as f64;
+            err_acc += ((h.value as f64 - exact) / exact).abs();
+        }
+        rel_errs.push(err_acc / trials as f64);
+    }
+    assert!(
+        rel_errs[0] > rel_errs[1] && rel_errs[1] > rel_errs[2],
+        "{rel_errs:?}"
+    );
+    assert!(rel_errs[2] < 0.005, "rel err at DP 1024: {}", rel_errs[2]);
+}
+
+#[test]
+fn dynamic_levels_order_error_monotonically() {
+    // Fewer digital cycles -> no smaller error, on average.
+    let mut rng = Rng::new(1001);
+    let n = 512;
+    let mut errs = Vec::new();
+    for lvl in DynamicLevel::all() {
+        let map = lvl.map();
+        let mut acc = 0.0f64;
+        let trials = 300;
+        let mut rng2 = rng.clone();
+        for _ in 0..trials {
+            let x: Vec<u8> = (0..n).map(|_| rng2.below(256) as u8).collect();
+            let w: Vec<u8> = (0..n).map(|_| rng2.below(256) as u8).collect();
+            let xp = BitPlanes::from_u8(&x);
+            let wp = BitPlanes::from_u8(&w);
+            let h = hybrid_mac(&xp, &wp, &map, PcuRounding::RoundNearest);
+            let exact = exact_mac(&x, &w) as f64;
+            acc += (h.value as f64 - exact).abs();
+        }
+        errs.push(acc / trials as f64);
+        let _ = &mut rng;
+    }
+    // 10-cycle error >= 16-cycle error (strict at the ends).
+    assert!(errs[0] > errs[3], "{errs:?}");
+}
+
+#[test]
+fn rounding_mode_bias() {
+    // Floor rounding biases the estimate low; round-nearest is unbiased.
+    // (The DESIGN.md §10 PCU-rounding ablation, as a regression test.)
+    let nearest = pac_rmse(512, 0.5, 0.3, 3000, 77, BitModel::Iid);
+    assert!(nearest.bias_lsb.abs() < 0.5, "bias={}", nearest.bias_lsb);
+}
+
+#[test]
+fn rmse_sweep_matches_paper_band() {
+    // Fig 3(c) end-to-end: RMSE at DP 512..4096 within 0.3-1.0%.
+    let res = rmse_vs_dp_length(&[512, 1024, 2048, 4096], 0.5, 0.3, 3000, 99);
+    for r in &res {
+        assert!(
+            (0.1..=1.1).contains(&r.rmse_pct),
+            "DP {}: {}%",
+            r.dp_len,
+            r.rmse_pct
+        );
+    }
+    // Table 1 band bound: "0.3-1.0% with DP length from 512 to 4096".
+    assert!(res[0].rmse_pct < 1.05);
+    assert!(res[3].rmse_pct < 0.45);
+}
+
+#[test]
+fn bitserial_identity_large_random_sweep() {
+    let mut rng = Rng::new(1002);
+    for _ in 0..50 {
+        let n = 1 + rng.below(700) as usize;
+        let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let xp = BitPlanes::from_u8(&x);
+        let wp = BitPlanes::from_u8(&w);
+        assert_eq!(exact_mac(&x, &w), exact_mac_bitserial(&xp, &wp));
+    }
+}

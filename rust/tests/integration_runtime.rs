@@ -1,0 +1,133 @@
+//! Integration: PJRT runtime <-> AOT artifacts.
+//!
+//! These tests require `make artifacts` to have run; they skip (pass
+//! trivially with a notice) when artifacts are absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use pacim::nn::{run_model, tiny_resnet, RunStats, WeightStore};
+use pacim::runtime::{Manifest, PjrtExecutor};
+use pacim::workload::Dataset;
+
+fn artifacts() -> Option<Manifest> {
+    let dir = pacim::runtime::manifest::artifacts_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_loads_and_runs_model_pac() {
+    let Some(man) = artifacts() else { return };
+    let batch = man.batch().unwrap();
+    let in_elems = man.input_elems().unwrap();
+    let classes = man.classes().unwrap();
+    let exe = PjrtExecutor::load(man.path("model_pac").unwrap(), batch, in_elems, classes)
+        .expect("compile model_pac");
+    let ds = Dataset::load(man.path("dataset").unwrap()).unwrap();
+    let mut flat = vec![0f32; batch * in_elems];
+    for i in 0..batch {
+        for (j, &q) in ds.image(i).iter().enumerate() {
+            flat[i * in_elems + j] = ds.params.dequantize(q);
+        }
+    }
+    let out = exe.run(&flat).expect("execute");
+    assert_eq!(out.len(), batch * classes);
+    assert!(out.iter().all(|v| v.is_finite()));
+    // Logits must discriminate: not all equal.
+    let first = &out[..classes];
+    assert!(first.iter().any(|&v| (v - first[0]).abs() > 1e-6));
+}
+
+#[test]
+fn pjrt_model_exact_matches_rust_engine_predictions() {
+    // The exported exact model and the rust bit-true engine implement the
+    // same quantized network; their predictions must agree on real data
+    // (logits may differ in float round-off, argmax almost never).
+    let Some(man) = artifacts() else { return };
+    let batch = man.batch().unwrap();
+    let in_elems = man.input_elems().unwrap();
+    let classes = man.classes().unwrap();
+    let exe =
+        PjrtExecutor::load(man.path("model_exact").unwrap(), batch, in_elems, classes)
+            .expect("compile model_exact");
+    let ds = Dataset::load(man.path("dataset").unwrap()).unwrap();
+    let store = WeightStore::load(man.path("weights").unwrap()).unwrap();
+    let model = tiny_resnet(&store, ds.h, ds.n_classes).unwrap();
+    let backend = pacim::nn::exact_backend(&model);
+
+    let mut flat = vec![0f32; batch * in_elems];
+    for i in 0..batch {
+        for (j, &q) in ds.image(i).iter().enumerate() {
+            flat[i * in_elems + j] = ds.params.dequantize(q);
+        }
+    }
+    let out = exe.run(&flat).expect("execute");
+    let mut agree = 0;
+    for i in 0..batch {
+        let hlo_pred = argmax(&out[i * classes..(i + 1) * classes]);
+        let (logits, _): (Vec<f32>, RunStats) = run_model(&model, &backend, ds.image(i));
+        let rust_pred = argmax(&logits);
+        if hlo_pred == rust_pred {
+            agree += 1;
+        }
+    }
+    assert!(
+        agree * 10 >= batch * 9,
+        "only {agree}/{batch} argmax agreements between HLO and rust engine"
+    );
+}
+
+#[test]
+fn pjrt_pac_kernel_artifact_runs() {
+    let Some(man) = artifacts() else { return };
+    let Ok(path) = man.path("pac_kernel") else { return };
+    // Kernel artifact: int32 (128, 576) x (576, 64). PjrtExecutor is
+    // f32-shaped, so drive the xla API directly here.
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).unwrap();
+    let x: Vec<i32> = (0..128 * 576).map(|i| ((i * 37 + 11) % 256) as i32).collect();
+    let w: Vec<i32> = (0..576 * 64).map(|i| ((i * 53 + 7) % 256) as i32).collect();
+    let xl = xla::Literal::vec1(&x).reshape(&[128, 576]).unwrap();
+    let wl = xla::Literal::vec1(&w).reshape(&[576, 64]).unwrap();
+    let result = exe.execute::<xla::Literal>(&[xl, wl]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let out = result.to_tuple1().unwrap();
+    let vals = out.to_vec::<i32>().unwrap();
+    assert_eq!(vals.len(), 128 * 64);
+
+    // Cross-check a handful of outputs against the rust PAC reference.
+    use pacim::pac::{hybrid_mac, BitPlanes, ComputeMap, PcuRounding};
+    let map = ComputeMap::operand_based(4, 4);
+    for m in [0usize, 17, 127] {
+        let xrow: Vec<u8> = (0..576).map(|k| x[m * 576 + k] as u8).collect();
+        for n in [0usize, 33, 63] {
+            let wcol: Vec<u8> = (0..576).map(|k| w[k * 64 + n] as u8).collect();
+            let xp = BitPlanes::from_u8(&xrow);
+            let wp = BitPlanes::from_u8(&wcol);
+            let h = hybrid_mac(&xp, &wp, &map, PcuRounding::RoundNearest);
+            let sum_x: i64 = xrow.iter().map(|&v| v as i64).sum();
+            let sum_w: i64 = wcol.iter().map(|&v| v as i64).sum();
+            let want =
+                pacim::pac::zero_point_correct(h.value, sum_x, sum_w, 576, 7, 128);
+            assert_eq!(
+                vals[m * 64 + n] as i64, want,
+                "mismatch at ({m},{n}): python kernel vs rust hybrid_mac"
+            );
+        }
+    }
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0
+}

@@ -1,0 +1,210 @@
+//! Property-based tests over the crate's core invariants, using the
+//! in-house `Checker` harness (proptest is unavailable offline).
+
+use pacim::pac::mac::{pcu_cycle, PcuRounding};
+use pacim::pac::{
+    exact_mac, exact_mac_bitserial, hybrid_mac, zero_point_correct, BitPlanes, ComputeMap,
+};
+use pacim::quant::{calibrate_minmax, calibrate_weights_symmetric, Requant};
+use pacim::tensor::{im2col, Conv2dGeom, Tensor};
+use pacim::util::check::Checker;
+use pacim::util::{and_popcount, pack_bits_u64};
+
+#[test]
+fn prop_bitserial_identity() {
+    // Eq. 1 holds for every vector pair.
+    Checker::new("bitserial_identity", 200).run(|rng| {
+        let n = 1 + rng.below(600) as usize;
+        let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let xp = BitPlanes::from_u8(&x);
+        let wp = BitPlanes::from_u8(&w);
+        assert_eq!(exact_mac(&x, &w), exact_mac_bitserial(&xp, &wp));
+    });
+}
+
+#[test]
+fn prop_element_sum_equals_spec_score() {
+    // Σv = Σ_p 2^p S[p] — the identity the zero-point correction and the
+    // SPEC speculation both rely on.
+    Checker::new("element_sum", 200).run(|rng| {
+        let n = rng.below(1000) as usize;
+        let v: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let bp = BitPlanes::from_u8(&v);
+        let direct: u64 = v.iter().map(|&x| x as u64).sum();
+        assert_eq!(bp.element_sum(), direct);
+        assert_eq!(pacim::arch::spec_score(&bp.pop), direct);
+    });
+}
+
+#[test]
+fn prop_hybrid_interpolates_between_maps() {
+    // All-digital == exact; estimate error decreases as digital cycles
+    // grow (checked pairwise on the operand ladder for the same data).
+    Checker::new("hybrid_ladder", 60).run(|rng| {
+        let n = 64 + rng.below(400) as usize;
+        let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let xp = BitPlanes::from_u8(&x);
+        let wp = BitPlanes::from_u8(&w);
+        let exact = exact_mac(&x, &w) as i64;
+        let all_dig = hybrid_mac(&xp, &wp, &ComputeMap::all_digital(), PcuRounding::RoundNearest);
+        assert_eq!(all_dig.value, exact);
+        let e8 = (hybrid_mac(&xp, &wp, &ComputeMap::operand_based(8, 8), PcuRounding::RoundNearest)
+            .value - exact).abs();
+        assert_eq!(e8, 0); // 8x8 operand == all digital
+    });
+}
+
+#[test]
+fn prop_pcu_cycle_bounds() {
+    // 0 <= estimate <= n, and monotone in both sparsity counts.
+    Checker::new("pcu_bounds", 300).run(|rng| {
+        let n = 1 + rng.below(4096);
+        let sx = rng.below(n + 1);
+        let sw = rng.below(n + 1);
+        let e = pcu_cycle(sx, sw, n, PcuRounding::RoundNearest);
+        assert!(e <= n);
+        if sx < n {
+            assert!(pcu_cycle(sx + 1, sw, n, PcuRounding::RoundNearest) >= e);
+        }
+        // Floor <= RoundNearest <= Floor + 1.
+        let f = pcu_cycle(sx, sw, n, PcuRounding::Floor);
+        assert!(f <= e && e <= f + 1);
+    });
+}
+
+#[test]
+fn prop_zero_point_correction_exact() {
+    Checker::new("zp_correct", 200).run(|rng| {
+        let n = 1 + rng.below(300) as usize;
+        let zx = rng.below(256) as i32;
+        let zw = rng.below(256) as i32;
+        let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let raw = exact_mac(&x, &w) as i64;
+        let sx: i64 = x.iter().map(|&v| v as i64).sum();
+        let sw: i64 = w.iter().map(|&v| v as i64).sum();
+        let got = zero_point_correct(raw, sx, sw, n as i64, zx, zw);
+        let want: i64 = x.iter().zip(&w)
+            .map(|(&a, &b)| (a as i64 - zx as i64) * (b as i64 - zw as i64))
+            .sum();
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn prop_quant_roundtrip() {
+    Checker::new("quant_roundtrip", 300).run(|rng| {
+        let lo = -(rng.next_f32() * 50.0);
+        let hi = rng.next_f32() * 50.0 + 0.01;
+        let p = calibrate_minmax(lo, hi);
+        for _ in 0..16 {
+            let x = lo + rng.next_f32() * (hi - lo);
+            let err = (p.dequantize(p.quantize(x)) - x).abs();
+            assert!(err <= p.scale * 0.5 + 1e-4, "x={x} err={err}");
+        }
+        // Zero must be exactly representable.
+        assert!(p.dequantize(p.quantize(0.0)).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_symmetric_weights_sign_symmetry() {
+    Checker::new("weight_symmetry", 100).run(|rng| {
+        let n = 1 + rng.below(64) as usize;
+        let w: Vec<f32> = (0..n).map(|_| (rng.next_f32() - 0.5) * 4.0).collect();
+        let t = Tensor::from_vec(&[n], w.clone());
+        let p = calibrate_weights_symmetric(&t);
+        assert_eq!(p.zero_point, 128);
+        for &v in &w {
+            let q = p.quantize(v) as i32 - 128;
+            let qn = p.quantize(-v) as i32 - 128;
+            assert_eq!(q, -qn, "v={v}");
+        }
+    });
+}
+
+#[test]
+fn prop_requant_tracks_real_multiplier() {
+    Checker::new("requant", 300).run(|rng| {
+        let m = 1e-4 + rng.next_f64() * 0.9;
+        let r = Requant::from_real(m);
+        assert!((r.to_real() - m).abs() / m < 1e-8);
+        let acc = rng.range_i64(-2_000_000, 2_000_000) as i32;
+        let got = r.apply(acc) as f64;
+        let want = acc as f64 * m;
+        assert!((got - want).abs() <= 1.0, "acc={acc} m={m} got={got} want={want}");
+    });
+}
+
+#[test]
+fn prop_im2col_patch_contents() {
+    // Every im2col entry is either a real input pixel or the pad value.
+    Checker::new("im2col", 60).run(|rng| {
+        let g = Conv2dGeom {
+            in_c: 1 + rng.below(4) as usize,
+            in_h: 4 + rng.below(8) as usize,
+            in_w: 4 + rng.below(8) as usize,
+            out_c: 1,
+            kh: 3,
+            kw: 3,
+            stride: 1 + rng.below(2) as usize,
+            pad: rng.below(2) as usize,
+        };
+        let input: Vec<u8> = (0..g.in_c * g.in_h * g.in_w)
+            .map(|_| rng.below(255) as u8)
+            .collect();
+        let pad = 255u8; // distinct from data (data < 255)
+        let cols = im2col(&input, &g, pad);
+        let k = g.dp_len();
+        assert_eq!(cols.len(), g.out_pixels() * k);
+        // Count pad entries: must be 0 when pad=0.
+        if g.pad == 0 {
+            assert!(cols.iter().all(|&v| v != 255));
+        }
+    });
+}
+
+#[test]
+fn prop_pack_bits_popcount() {
+    Checker::new("pack_bits", 200).run(|rng| {
+        let n = rng.below(500) as usize;
+        let a: Vec<u8> = (0..n).map(|_| rng.bernoulli(0.5) as u8).collect();
+        let b: Vec<u8> = (0..n).map(|_| rng.bernoulli(0.3) as u8).collect();
+        let naive: u32 = a.iter().zip(&b).map(|(&x, &y)| (x & y) as u32).sum();
+        assert_eq!(naive, and_popcount(&pack_bits_u64(&a), &pack_bits_u64(&b)));
+    });
+}
+
+#[test]
+fn prop_compute_map_partition() {
+    Checker::new("map_partition", 100).run(|rng| {
+        let bx = rng.below(9);
+        let bw = rng.below(9);
+        let m = ComputeMap::operand_based(bx, bw);
+        assert_eq!(m.digital_cycles(), bx * bw);
+        assert_eq!(m.digital_cycles() + m.sparsity_cycles(), 64);
+        assert_eq!(m.required_weight_bits().len(), if bx == 0 { 0 } else { bw as usize });
+    });
+}
+
+#[test]
+fn prop_encoder_matches_direct_counts() {
+    use pacim::arch::encoder::{EncodingMode, SparsityEncoder};
+    use pacim::pac::bit_sparsity_counts;
+    Checker::new("encoder", 100).run(|rng| {
+        let n = rng.below(400) as usize;
+        let vals: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let mut enc = SparsityEncoder::new(EncodingMode::LayerWise);
+        // Interrupt at a random point (intermediate buffer roundtrip).
+        let cut = if n > 0 { rng.below(n as u32) as usize } else { 0 };
+        enc.push_slice(&vals[..cut]);
+        enc.save_to_buffer();
+        enc.restore_from_buffer();
+        enc.push_slice(&vals[cut..]);
+        let g = enc.finalize_group();
+        assert_eq!(g.counters, bit_sparsity_counts(&vals));
+        assert_eq!(g.count as usize, n);
+    });
+}
