@@ -27,7 +27,10 @@ fn main() -> anyhow::Result<()> {
     let (acc8, _) = evaluate(&model, &exact, &images, &labels, threads);
     println!("exact 8b/8b: {:.2}% | digital eff {:.2} TOPS/W (8b/8b)\n",
              acc8 * 100.0, em.digital_8b().tops_w_8b);
-    println!("{:<34} {:>8} {:>10} {:>12} {:>12}", "configuration", "acc %", "loss %", "avg cycles", "TOPS/W 8b");
+    println!(
+        "{:<34} {:>8} {:>10} {:>12} {:>12}",
+        "configuration", "acc %", "loss %", "avg cycles", "TOPS/W 8b"
+    );
 
     let mut frontier: Vec<(f64, f64)> = Vec::new(); // (eff, acc)
     for bits in [3u32, 4, 5] {

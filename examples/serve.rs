@@ -28,8 +28,11 @@ fn main() -> anyhow::Result<()> {
     let (batch, in_elems, classes) = (man.batch()?, man.input_elems()?, man.classes()?);
     let requests = requests.min(ds.n);
 
-    println!("serving {} ({} classes) | compiled batch {batch} | {clients} client threads | {requests} requests",
-             man.get("model")?, classes);
+    println!(
+        "serving {} ({} classes) | batch {batch} | {clients} clients | {requests} requests",
+        man.get("model")?,
+        classes
+    );
 
     let hlo = man.path("model_pac")?;
     let server = InferenceServer::start_with(
@@ -71,9 +74,18 @@ fn main() -> anyhow::Result<()> {
     let mut m = server.stop();
 
     println!("\nresults:");
-    println!("  throughput : {:.1} img/s ({} requests in {:.1} ms)", requests as f64 / wall, requests, wall * 1e3);
-    println!("  latency    : p50 {:.0} us | p95 {:.0} us | p99 {:.0} us",
-             m.latency_percentile_us(50.0), m.latency_percentile_us(95.0), m.latency_percentile_us(99.0));
+    println!(
+        "  throughput : {:.1} img/s ({} requests in {:.1} ms)",
+        requests as f64 / wall,
+        requests,
+        wall * 1e3
+    );
+    println!(
+        "  latency    : p50 {:.0} us | p95 {:.0} us | p99 {:.0} us",
+        m.latency_percentile_us(50.0),
+        m.latency_percentile_us(95.0),
+        m.latency_percentile_us(99.0)
+    );
     println!("  batching   : {} batches, mean occupancy {:.1}, {} padded slots",
              m.batches, m.mean_batch_occupancy(), m.padded_slots);
     println!("  accuracy   : {:.2}% (PAC 4-bit model)",

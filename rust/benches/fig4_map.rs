@@ -19,7 +19,11 @@ fn main() {
         println!("    {line}");
     }
     row("digital cycles (static 4-bit)", "16/64", &format!("{}/64", base.digital_cycles()));
-    row("cycle reduction vs digital", "75%", &format!("{}%", 100 * (64 - base.digital_cycles()) / 64));
+    row(
+        "cycle reduction vs digital",
+        "75%",
+        &format!("{}%", 100 * (64 - base.digital_cycles()) / 64),
+    );
     row(
         "weight memory columns kept",
         "4 MSB (LSB removed)",
@@ -42,7 +46,10 @@ fn main() {
              shift.required_weight_bits().len());
 
     checks.claim(base.digital_cycles() == 16, "4x4 operand split = 16 digital cycles");
-    checks.claim(base.required_weight_bits() == vec![4, 5, 6, 7], "4 LSB weight columns eliminated");
+    checks.claim(
+        base.required_weight_bits() == vec![4, 5, 6, 7],
+        "4 LSB weight columns eliminated",
+    );
     checks.claim(
         DynamicLevel::all().iter().all(|l| l.map().is_digital(7, 7)),
         "MSBxMSB cycle retained at every dynamic level",

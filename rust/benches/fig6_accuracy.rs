@@ -133,7 +133,11 @@ fn main() {
         }
     }
     if let Some((cycles, acc)) = best {
-        row("best <=1%-loss configuration", "12 cycles", &format!("{cycles:.2} cycles @ {:.2}%", acc * 100.0));
+        row(
+            "best <=1%-loss configuration",
+            "12 cycles",
+            &format!("{cycles:.2} cycles @ {:.2}%", acc * 100.0),
+        );
         checks.claim(cycles < 16.0, "dynamic config reduces cycles at <=1% accuracy loss");
         checks.claim(cycles <= 14.5, "reaches <=14.5 avg cycles (paper: 12)");
     } else {

@@ -30,10 +30,17 @@ fn main() {
         dyn_.total_macs_cycles(),
     );
     row("digital 8b/8b cycles", "1.00x", &format!("{cd}"));
-    row("PACiM static 4-bit", "-75%", &format!("{cs} ({:+.1}%)", 100.0 * (cs as f64 / cd as f64 - 1.0)));
+    row(
+        "PACiM static 4-bit",
+        "-75%",
+        &format!("{cs} ({:+.1}%)", 100.0 * (cs as f64 / cd as f64 - 1.0)),
+    );
     row("PACiM dynamic", "-81%", &format!("{cy} ({:+.1}%)", 100.0 * (cy as f64 / cd as f64 - 1.0)));
     checks.claim((cs as f64 / cd as f64 - 0.25).abs() < 1e-9, "static map removes 75% of cycles");
-    checks.claim((cy as f64 / cd as f64 - 0.1875).abs() < 1e-9, "dynamic config removes 81% of cycles");
+    checks.claim(
+        (cy as f64 / cd as f64 - 0.1875).abs() < 1e-9,
+        "dynamic config removes 81% of cycles",
+    );
 
     // ---- (b) memory access vs channel length -----------------------------
     println!("\n  (b) activation cache-access reduction vs channel length (4-bit MSB)");
@@ -66,8 +73,18 @@ fn main() {
             p * 100.0
         );
     }
-    let cnm_area: f64 = b.area_um2.iter().filter(|(n, _)| n.starts_with("CnM")).map(|(_, a)| a).sum();
-    let cnm_power: f64 = b.power_frac.iter().filter(|(n, _)| n.starts_with("CnM")).map(|(_, p)| p).sum();
+    let cnm_area: f64 = b
+        .area_um2
+        .iter()
+        .filter(|(n, _)| n.starts_with("CnM"))
+        .map(|(_, a)| a)
+        .sum();
+    let cnm_power: f64 = b
+        .power_frac
+        .iter()
+        .filter(|(n, _)| n.starts_with("CnM"))
+        .map(|(_, p)| p)
+        .sum();
     row("CnM area share", "10%", &format!("{:.1}%", 100.0 * cnm_area / total_area));
     row("CnM power share", "30%", &format!("{:.1}%", cnm_power * 100.0));
     let buf_area = b.area_um2.iter().find(|(n, _)| *n == "CnM buffer").unwrap().1;

@@ -1,28 +1,68 @@
 //! §Perf — hot-path micro/macro benchmarks (EXPERIMENTS.md §Perf).
 //!
-//! L3 hot paths: BitPlanes decomposition, the digital AND-popcount cycle,
-//! the full hybrid MAC, the PAC conv backend on a realistic layer, and
-//! (when artifacts exist) PJRT end-to-end batch latency + serving
+//! L3 hot paths: BitPlanes decomposition, the full hybrid MAC, the
+//! scalar-vs-rayon batched PAC MAC on real ResNet-18 layer shapes (the
+//! headline comparison, exported to `BENCH_hotpath.json` for CI trend
+//! tracking), the PAC conv backend on a realistic layer, and (with the
+//! `pjrt` feature + artifacts) PJRT end-to-end batch latency + serving
 //! throughput. Hand-rolled timing (criterion unavailable offline).
+//!
+//! Quick mode for CI smoke runs: set `PACIM_BENCH_QUICK=1` to shrink
+//! batch sizes and repetition counts (~seconds instead of minutes).
 
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{banner, rate, timeit};
+use harness::{banner, rate, timeit, Checks};
 use pacim::nn::{MacBackend, PacConfig, RunStats};
-use pacim::pac::{hybrid_mac, BitPlanes, ComputeMap, PcuRounding};
+use pacim::pac::{
+    hybrid_mac, hybrid_mac_batch, par_hybrid_mac_batch, BitPlanes, ComputeMap, PcuRounding,
+};
 use pacim::tensor::Tensor;
 use pacim::util::rng::Rng;
+use pacim::workload::{resnet18, Resolution};
+use serde::Serialize;
+
+/// One scalar-vs-parallel measurement, serialized into BENCH_hotpath.json.
+#[derive(Debug, Serialize)]
+struct LayerBench {
+    layer: String,
+    dp_len: usize,
+    pairs: usize,
+    scalar_macs_per_s: f64,
+    parallel_macs_per_s: f64,
+    speedup: f64,
+    bit_identical: bool,
+}
+
+#[derive(Debug, Serialize)]
+struct BenchReport {
+    bench: &'static str,
+    threads: usize,
+    quick: bool,
+    layers: Vec<LayerBench>,
+}
+
+fn quick_mode() -> bool {
+    std::env::var("PACIM_BENCH_QUICK")
+        .ok()
+        .is_some_and(|v| v != "0" && !v.is_empty())
+}
 
 fn main() {
     banner("§Perf", "hot-path throughput");
+    let quick = quick_mode();
     let mut rng = Rng::new(77);
+    let mut checks = Checks::new();
 
     // --- BitPlanes decomposition -----------------------------------------
     let v: Vec<u8> = (0..4096).map(|_| rng.below(256) as u8).collect();
     let (t, _) = timeit(30, || BitPlanes::from_u8(&v));
-    println!("  BitPlanes::from_u8 (4096 elems):   {:>10.2} us  ({})",
-             t * 1e6, rate(4096.0, t, "elem"));
+    println!(
+        "  BitPlanes::from_u8 (4096 elems):   {:>10.2} us  ({})",
+        t * 1e6,
+        rate(4096.0, t, "elem")
+    );
 
     // --- hybrid MAC (Eq. 4) -----------------------------------------------
     let map = ComputeMap::operand_based(4, 4);
@@ -32,33 +72,137 @@ fn main() {
         let xp = BitPlanes::from_u8(&x);
         let wp = BitPlanes::from_u8(&w);
         let (t, _) = timeit(50, || hybrid_mac(&xp, &wp, &map, PcuRounding::RoundNearest));
-        println!("  hybrid_mac DP={n:<5}:              {:>10.2} us  ({} MAC-equiv)",
-                 t * 1e6, rate(n as f64, t, ""));
+        println!(
+            "  hybrid_mac DP={n:<5}:              {:>10.2} us  ({} MAC-equiv)",
+            t * 1e6,
+            rate(n as f64, t, "")
+        );
+    }
+
+    // --- batched PAC MAC: scalar vs rayon-parallel --------------------------
+    // One DP vector pair per output activation, on real ResNet-18 (CIFAR)
+    // conv layer shapes — the work distribution the multi-bank system
+    // fans out across banks, here work-stolen across cores.
+    let threads = rayon::current_num_threads();
+    println!(
+        "\n  batched PAC MAC, scalar vs parallel ({} rayon threads{}):",
+        threads,
+        if quick { ", quick mode" } else { "" }
+    );
+    let shapes = resnet18(Resolution::Cifar, 10);
+    let wanted = ["layer1.0.conv1", "layer3.0.conv2", "layer4.1.conv2"];
+    let pairs_n = if quick { 96 } else { 1024 };
+    let reps = if quick { 3 } else { 7 };
+    let mut layer_benches = Vec::new();
+    for name in wanted {
+        let shape = shapes
+            .iter()
+            .find(|s| s.name == name)
+            .expect("ResNet-18 layer table changed");
+        let k = shape.dp_len();
+        let pairs: Vec<(BitPlanes, BitPlanes)> = (0..pairs_n)
+            .map(|_| {
+                let x: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+                let w: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+                (BitPlanes::from_u8(&x), BitPlanes::from_u8(&w))
+            })
+            .collect();
+        let (t_seq, out_seq) =
+            timeit(reps, || hybrid_mac_batch(&pairs, &map, PcuRounding::RoundNearest));
+        let (t_par, out_par) =
+            timeit(reps, || par_hybrid_mac_batch(&pairs, &map, PcuRounding::RoundNearest));
+        let identical = out_seq == out_par;
+        let macs = (pairs_n * k) as f64;
+        let speedup = t_seq / t_par;
+        println!(
+            "    {name:<18} DP={k:<5} x{pairs_n}: scalar {:>9} par {:>9} speedup {speedup:.2}x",
+            rate(macs, t_seq, "MAC"),
+            rate(macs, t_par, "MAC"),
+        );
+        checks.claim(
+            identical,
+            &format!("{name}: parallel batch bit-identical to scalar"),
+        );
+        layer_benches.push(LayerBench {
+            layer: name.to_string(),
+            dp_len: k,
+            pairs: pairs_n,
+            scalar_macs_per_s: macs / t_seq,
+            parallel_macs_per_s: macs / t_par,
+            speedup,
+            bit_identical: identical,
+        });
+    }
+    let best = layer_benches
+        .iter()
+        .map(|l| l.speedup)
+        .fold(0.0f64, f64::max);
+    // Throughput is machine-load-dependent, so the >=2x target is
+    // *reported* (here and in BENCH_hotpath.json) rather than asserted —
+    // only the bit-identity claims above can fail this bench.
+    println!("    best speedup {best:.2}x (target: >=2x at >=4 threads)");
+
+    let report = BenchReport {
+        bench: "perf_hotpath",
+        threads,
+        quick,
+        layers: layer_benches,
+    };
+    match serde_json::to_string_pretty(&report)
+        .map_err(anyhow::Error::from)
+        .and_then(|s| std::fs::write("BENCH_hotpath.json", s).map_err(anyhow::Error::from))
+    {
+        Ok(()) => println!("    wrote BENCH_hotpath.json"),
+        Err(e) => println!("    could not write BENCH_hotpath.json: {e}"),
     }
 
     // --- PAC conv backend on a ResNet-ish layer ----------------------------
     // K=1152 (3x3x128), N=64 channels, 256 patches (16x16 output tile).
     let k = 1152;
     let n_oc = 64;
-    let patches = 256;
+    let patches = if quick { 32 } else { 256 };
     let wq: Vec<u8> = (0..n_oc * k).map(|_| rng.below(256) as u8).collect();
     let weight = Tensor::from_vec(&[n_oc, k], wq);
-    let mut backend = pac_backend_for(&weight);
+    let backend = pac_backend_for(&weight);
     let patch_data: Vec<Vec<u8>> = (0..patches)
         .map(|_| (0..k).map(|_| rng.below(256) as u8).collect())
         .collect();
     let mut stats = RunStats::default();
-    let (t, _) = timeit(5, || {
+    let (t, _) = timeit(if quick { 2 } else { 5 }, || {
         for p in &patch_data {
             std::hint::black_box(backend.gemm(0, p, 7, &mut stats));
         }
     });
     let macs = (patches * n_oc * k) as f64;
-    println!("  PAC conv layer (K=1152,N=64,256px): {:>9.2} ms  ({} hybrid-MAC)",
-             t * 1e3, rate(macs, t, ""));
-    let _ = &mut backend;
+    println!(
+        "  PAC conv layer (K=1152,N=64,{patches}px): {:>9.2} ms  ({} hybrid-MAC)",
+        t * 1e3,
+        rate(macs, t, "")
+    );
 
-    // --- PJRT end-to-end (artifacts required) ------------------------------
+    // --- PJRT end-to-end (pjrt feature + artifacts required) ---------------
+    pjrt_section();
+    println!();
+    checks.finish("§Perf");
+}
+
+fn pac_backend_for(weight: &Tensor<u8>) -> pacim::nn::PacBackend {
+    let mut b = pacim::nn::PacBackend::new(PacConfig {
+        first_layer_exact: false,
+        min_dp_len: 0,
+        ..PacConfig::default()
+    });
+    b.prepare(0, weight, 128);
+    b
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section() {
+    println!("  (pjrt feature disabled; skipping PJRT end-to-end rows)");
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_section() {
     if let Some((man, _, ds)) = harness::try_artifacts() {
         use pacim::runtime::PjrtExecutor;
         let batch = man.batch().unwrap();
@@ -74,8 +218,11 @@ fn main() {
         }
         exe.run(&flat).unwrap(); // warm-up
         let (t, _) = timeit(10, || exe.run(&flat).unwrap());
-        println!("  PJRT model_pac batch={batch}:          {:>9.2} ms  ({})",
-                 t * 1e3, rate(batch as f64, t, "img"));
+        println!(
+            "  PJRT model_pac batch={batch}:          {:>9.2} ms  ({})",
+            t * 1e3,
+            rate(batch as f64, t, "img")
+        );
 
         // Serving loop throughput (mock-free, real PJRT).
         use pacim::coordinator::{BatchPolicy, InferenceServer};
@@ -103,19 +250,13 @@ fn main() {
         });
         let serve_t = t0.elapsed().as_secs_f64();
         let mut m = server.stop();
-        println!("  serving {} reqs:                   {:>9.2} ms  ({}, p50 {:.0} us, batch occ {:.1})",
-                 imgs.len(), serve_t * 1e3, rate(imgs.len() as f64, serve_t, "img"),
-                 m.latency_percentile_us(50.0), m.mean_batch_occupancy());
+        println!(
+            "  serving {} reqs:                   {:>9.2} ms  ({}, p50 {:.0} us, batch occ {:.1})",
+            imgs.len(),
+            serve_t * 1e3,
+            rate(imgs.len() as f64, serve_t, "img"),
+            m.latency_percentile_us(50.0),
+            m.mean_batch_occupancy()
+        );
     }
-    println!();
-}
-
-fn pac_backend_for(weight: &Tensor<u8>) -> pacim::nn::PacBackend {
-    let mut b = pacim::nn::PacBackend::new(PacConfig {
-        first_layer_exact: false,
-        min_dp_len: 0,
-        ..PacConfig::default()
-    });
-    b.prepare(0, weight, 128);
-    b
 }

@@ -19,9 +19,15 @@ const EVAL_N: usize = 512;
 
 fn main() {
     banner("Table 2", "Accuracy | loss under 4-bit PAC approximation");
-    println!("  paper (ResNet-18): CIFAR-10 93.85%|-0.62  CIFAR-100 72.36%|-0.62  ImageNet 66.02%|-2.74");
-    println!("  paper (ResNet-50): CIFAR-10 93.21%|-1.02  CIFAR-100 72.65%|-1.04  ImageNet 75.98%|-3.38");
-    println!("  paper (VGG16-BN) : CIFAR-10 94.29%|-0.66  CIFAR-100 75.39%|-0.69  ImageNet 71.59%|-1.31");
+    println!(
+        "  paper (ResNet-18): CIFAR-10 93.85%|-0.62  CIFAR-100 72.36%|-0.62  ImageNet 66.02%|-2.74"
+    );
+    println!(
+        "  paper (ResNet-50): CIFAR-10 93.21%|-1.02  CIFAR-100 72.65%|-1.04  ImageNet 75.98%|-3.38"
+    );
+    println!(
+        "  paper (VGG16-BN) : CIFAR-10 94.29%|-0.66  CIFAR-100 75.39%|-0.69  ImageNet 71.59%|-1.31"
+    );
     println!();
 
     let Some((_, model, ds)) = harness::try_artifacts() else {
@@ -52,8 +58,16 @@ fn main() {
 
     println!("  measured ({} {} images, synthetic-10):", EVAL_N, model.name);
     row("exact 8b/8b", "(baseline)", &format!("{:.2}%", acc8 * 100.0));
-    row("PAC 4-bit", "loss ≈ -0.6..-1%", &format!("{:.2}% ({:+.2}%)", acc4 * 100.0, (acc4 - acc8) * 100.0));
-    row("PAC 5-bit", "loss < 1%", &format!("{:.2}% ({:+.2}%)", acc5 * 100.0, (acc5 - acc8) * 100.0));
+    row(
+        "PAC 4-bit",
+        "loss ≈ -0.6..-1%",
+        &format!("{:.2}% ({:+.2}%)", acc4 * 100.0, (acc4 - acc8) * 100.0),
+    );
+    row(
+        "PAC 5-bit",
+        "loss < 1%",
+        &format!("{:.2}% ({:+.2}%)", acc5 * 100.0, (acc5 - acc8) * 100.0),
+    );
     row(
         "PAC 4-bit + dynamic",
         "additional ~1% loss",

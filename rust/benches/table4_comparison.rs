@@ -34,14 +34,53 @@ fn main() {
     let mem_red = rep.act_traffic_reduction();
 
     let rows = [
-        Row { name: "ISSCC'21 [6]", kind: "Digital", node: "22nm", peak_tops_w: 163.13, mem_red: None },
-        Row { name: "ISSCC'22 [29]", kind: "Approximate", node: "28nm", peak_tops_w: 2219.0, mem_red: None },
-        Row { name: "ISSCC'22 [26]", kind: "Digital-Analog", node: "22nm", peak_tops_w: 74.88, mem_red: None },
-        Row { name: "ASP-DAC'24 [4]", kind: "Digital-Analog", node: "65nm", peak_tops_w: 370.56, mem_red: None },
-        Row { name: "ISSCC'24 [35]", kind: "Analog", node: "65nm", peak_tops_w: 4094.0, mem_red: None },
-        Row { name: "This work (PACiM)", kind: "Digital-Sparsity", node: "65nm", peak_tops_w: ours_peak, mem_red: Some(mem_red) },
+        Row {
+            name: "ISSCC'21 [6]",
+            kind: "Digital",
+            node: "22nm",
+            peak_tops_w: 163.13,
+            mem_red: None,
+        },
+        Row {
+            name: "ISSCC'22 [29]",
+            kind: "Approximate",
+            node: "28nm",
+            peak_tops_w: 2219.0,
+            mem_red: None,
+        },
+        Row {
+            name: "ISSCC'22 [26]",
+            kind: "Digital-Analog",
+            node: "22nm",
+            peak_tops_w: 74.88,
+            mem_red: None,
+        },
+        Row {
+            name: "ASP-DAC'24 [4]",
+            kind: "Digital-Analog",
+            node: "65nm",
+            peak_tops_w: 370.56,
+            mem_red: None,
+        },
+        Row {
+            name: "ISSCC'24 [35]",
+            kind: "Analog",
+            node: "65nm",
+            peak_tops_w: 4094.0,
+            mem_red: None,
+        },
+        Row {
+            name: "This work (PACiM)",
+            kind: "Digital-Sparsity",
+            node: "65nm",
+            peak_tops_w: ours_peak,
+            mem_red: Some(mem_red),
+        },
     ];
-    println!("  {:<20} {:<16} {:<6} {:>14} {:>12}", "design", "type", "node", "peak TOPS/W*", "mem red.");
+    println!(
+        "  {:<20} {:<16} {:<6} {:>14} {:>12}",
+        "design", "type", "node", "peak TOPS/W*", "mem red."
+    );
     for r in &rows {
         println!(
             "  {:<20} {:<16} {:<6} {:>14.2} {:>12}",
@@ -60,8 +99,14 @@ fn main() {
         let (acc8, _) = eval_accuracy(&model, &exact, &ds, 256);
         let pac = pac_backend(&model, PacConfig::default());
         let (acc4, _) = eval_accuracy(&model, &pac, &ds, 256);
-        println!("\n  accuracy (synthetic-10 substitution): exact {:.2}%  PAC {:.2}%", acc8 * 100.0, acc4 * 100.0);
-        println!("  paper accuracy row: CIFAR-10 93.85 / CIFAR-100 72.36 / ImageNet 66.02 (ResNet-18)");
+        println!(
+            "\n  accuracy (synthetic-10 substitution): exact {:.2}%  PAC {:.2}%",
+            acc8 * 100.0,
+            acc4 * 100.0
+        );
+        println!(
+            "  paper accuracy row: CIFAR-10 93.85 / CIFAR-100 72.36 / ImageNet 66.02 (ResNet-18)"
+        );
         checks.claim(acc4 > 0.85, "PACiM accuracy stays high under approximation");
     }
 
@@ -70,7 +115,10 @@ fn main() {
     checks.claim(ours_peak / hcim_best > 2.5, "≈4x over digital-analog H-CiM (ours/370 > 2.5x)");
     checks.claim(ours_peak > 163.13, "beats the all-digital macro");
     checks.claim(ours_peak < 4094.0, "analog macros remain ahead at low precision (as in paper)");
-    checks.claim(rows[..5].iter().all(|r| r.mem_red.is_none()), "PACiM is the only design reducing memory access");
+    checks.claim(
+        rows[..5].iter().all(|r| r.mem_red.is_none()),
+        "PACiM is the only design reducing memory access",
+    );
     checks.claim((0.38..0.52).contains(&mem_red), "memory access reduction in the 40-50% band");
     checks.finish("Table 4");
 }

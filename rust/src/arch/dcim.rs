@@ -136,7 +136,7 @@ impl DCimBank {
     /// the compute map never routes such cycles to the digital domain.
     pub fn bit_serial_cycle(&mut self, x_plane: &[u64], q: usize) -> Vec<u32> {
         assert!(
-            q >= self.min_weight_bit() && q < 8,
+            (self.min_weight_bit()..8).contains(&q),
             "weight bit {q} not stored (columns {}..7 only)",
             self.min_weight_bit()
         );

@@ -21,7 +21,9 @@ pub mod tuner;
 pub use bank_logic::{classify, spec_normalized, spec_score, LevelHistogram, ThresholdSet};
 pub use dcim::{DCimBank, DCimConfig, DCimStats};
 pub use encoder::{EncodingMode, SparsityEncoder};
-pub use multibank::{schedule_network_multibank, MultiBankConfig, MultiBankReport};
+pub use multibank::{
+    schedule_network_multibank, schedule_network_multibank_with, MultiBankConfig, MultiBankReport,
+};
 pub use pcu::{Pce, PceStats, Pcu};
 pub use tuner::{candidate_grid, tune, TunePoint, TuneResult};
 
@@ -250,8 +252,10 @@ mod tests {
     fn dynamic_level_engages_for_sparse_input() {
         let mut rng = Rng::new(92);
         let ws = random_weights(&mut rng, 4, 128);
-        let mut cfg = BankConfig::default();
-        cfg.thresholds = Some(ThresholdSet::new(0.05, 0.15, 0.3));
+        let cfg = BankConfig {
+            thresholds: Some(ThresholdSet::new(0.05, 0.15, 0.3)),
+            ..BankConfig::default()
+        };
         let mut bank = PacimBank::new(cfg);
         bank.load_weights(&ws);
         // Nearly-zero input → SPEC ≈ 0 → minimal level.

@@ -14,6 +14,7 @@
 //! fit the bank set), and quantifies the §4.5 claim that multi-bank tiling
 //! eliminates the intermediate encoding buffer.
 
+use crate::util::Parallelism;
 use crate::workload::shapes::LayerShape;
 
 /// Multi-bank configuration.
@@ -37,7 +38,7 @@ impl Default for MultiBankConfig {
 }
 
 /// Outcome of scheduling one layer onto the bank set.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MultiBankSchedule {
     pub layer: String,
     pub row_tiles: usize,
@@ -96,7 +97,7 @@ pub fn schedule_layer_multibank(shape: &LayerShape, cfg: &MultiBankConfig) -> Mu
 }
 
 /// System-level summary over a whole network.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct MultiBankReport {
     pub schedules: Vec<MultiBankSchedule>,
 }
@@ -122,15 +123,27 @@ impl MultiBankReport {
     }
 }
 
+/// Schedule every layer of a network onto the bank set with the default
+/// parallelism policy (scalar below the fan-out threshold — a ~20-layer
+/// network is cheaper to schedule inline than to fork/join).
 pub fn schedule_network_multibank(
     shapes: &[LayerShape],
     cfg: &MultiBankConfig,
 ) -> MultiBankReport {
+    schedule_network_multibank_with(shapes, cfg, &Parallelism::auto())
+}
+
+/// Schedule with an explicit parallelism policy. Layers are independent
+/// and collected in order, so the report is identical to the sequential
+/// equivalent for any policy; large design-space sweeps pass a permissive
+/// policy to work-steal across the rayon pool.
+pub fn schedule_network_multibank_with(
+    shapes: &[LayerShape],
+    cfg: &MultiBankConfig,
+    par: &Parallelism,
+) -> MultiBankReport {
     MultiBankReport {
-        schedules: shapes
-            .iter()
-            .map(|s| schedule_layer_multibank(s, cfg))
-            .collect(),
+        schedules: par.map_collect(shapes.len(), |i| schedule_layer_multibank(&shapes[i], cfg)),
     }
 }
 
@@ -203,6 +216,23 @@ mod tests {
             last = cp;
         }
         assert_eq!(last, 0, "18 banks hold ResNet-18's deepest DP");
+    }
+
+    #[test]
+    fn parallel_schedule_identical_to_sequential() {
+        let shapes = resnet18(Resolution::ImageNet, 1000);
+        let cfg = MultiBankConfig::default();
+        let seq = schedule_network_multibank_with(&shapes, &cfg, &Parallelism::off());
+        let par = schedule_network_multibank_with(
+            &shapes,
+            &cfg,
+            &Parallelism {
+                enabled: true,
+                min_items: 1,
+            },
+        );
+        assert_eq!(seq, par);
+        assert_eq!(seq, schedule_network_multibank(&shapes, &cfg));
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! at build time.
 //!
 //! The executor is a trait so unit tests run against a mock and the
-//! examples against [`crate::runtime::PjrtExecutor`].
+//! examples against `crate::runtime::PjrtExecutor` (behind the `pjrt`
+//! cargo feature).
 
 use crate::util::stats::percentile;
 use std::sync::mpsc;

@@ -14,8 +14,9 @@
 //! - **L1 (python/compile/kernels/)** — Pallas kernels implementing the
 //!   hybrid PAC matmul, validated against a pure-jnp oracle.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index mapping every table/figure of the paper to a bench target.
+//! See `DESIGN.md` at the repository root for the full system inventory
+//! and the per-experiment index mapping every table/figure of the paper
+//! to a bench target; `README.md` covers build/test/bench usage.
 //!
 //! ## Quick tour
 //!

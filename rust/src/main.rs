@@ -184,6 +184,18 @@ fn accuracy(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn serve(_args: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "this binary was built without the `pjrt` feature. Enabling it is \
+         not just a cargo flag: the feature needs the xla-rs bindings, which \
+         are not on crates.io — vendor xla-rs, add it as the `xla` dependency \
+         in rust/Cargo.toml, then build with `--features pjrt` (see the \
+         [features] notes in rust/Cargo.toml and README.md)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn serve(args: &[String]) -> anyhow::Result<()> {
     use pacim::coordinator::{BatchPolicy, InferenceServer};
     use pacim::runtime::PjrtExecutor;

@@ -13,6 +13,7 @@
 use super::layers::{ConvLayer, Model, Op};
 use crate::arch::LevelHistogram;
 use crate::tensor::{im2col, QuantParams, Tensor};
+use crate::util::Parallelism;
 
 /// Per-run statistics (accuracy benches aggregate these across images).
 #[derive(Debug, Clone, Default)]
@@ -89,11 +90,28 @@ impl MacBackend for ExactBackend {
     }
 }
 
-/// The shared interpreter. Runs `model` on one quantized CHW image.
-pub fn run_model<B: MacBackend>(
+/// The shared interpreter. Runs `model` on one quantized CHW image with
+/// every layer loop scalar (the deterministic reference path).
+pub fn run_model<B: MacBackend + Sync>(
     model: &Model,
     backend: &B,
     image: &[u8],
+) -> (Vec<f32>, RunStats) {
+    run_model_par(model, backend, image, &Parallelism::off())
+}
+
+/// The shared interpreter with an explicit parallelism policy: each
+/// convolution's output pixels (one im2col patch each — the DP columns of
+/// the CiM array) are fanned out over rayon when `par` allows it.
+///
+/// Bit-identical to [`run_model`] for any `par`: patches are independent,
+/// per-patch statistics are integer counters merged in pixel order, and
+/// outputs are written by index.
+pub fn run_model_par<B: MacBackend + Sync>(
+    model: &Model,
+    backend: &B,
+    image: &[u8],
+    par: &Parallelism,
 ) -> (Vec<f32>, RunStats) {
     assert_eq!(
         image.len(),
@@ -112,7 +130,7 @@ pub fn run_model<B: MacBackend>(
         match op {
             Op::Conv2d(conv) => {
                 let (out, op_params, oshape) =
-                    run_conv(conv, &act, params, layer_id, backend, &mut stats);
+                    run_conv(conv, &act, params, layer_id, backend, &mut stats, par);
                 act = out;
                 params = op_params;
                 shape = oshape;
@@ -201,13 +219,14 @@ pub fn run_model<B: MacBackend>(
     )
 }
 
-fn run_conv<B: MacBackend>(
+fn run_conv<B: MacBackend + Sync>(
     conv: &ConvLayer,
     act: &[u8],
     in_params: QuantParams,
     layer_id: usize,
     backend: &B,
     stats: &mut RunStats,
+    par: &Parallelism,
 ) -> (Vec<u8>, QuantParams, (usize, usize, usize)) {
     let g = &conv.geom;
     let cols = im2col(act, g, in_params.zero_point as u8);
@@ -217,13 +236,34 @@ fn run_conv<B: MacBackend>(
     let sw = conv.wparams.scale;
     // Output is CHW: out[oc][pixel].
     let mut out = vec![0u8; g.out_c * pixels];
-    for pix in 0..pixels {
-        let patch = &cols[pix * k..(pix + 1) * k];
-        let accs = backend.gemm(layer_id, patch, in_params.zero_point, stats);
+    let requant = |accs: &[i64], pix: usize, out: &mut [u8]| {
         for (oc, &acc) in accs.iter().enumerate() {
             let real = acc as f32 * sx * sw + conv.bias[oc];
             let real = if conv.relu { real.max(0.0) } else { real };
             out[oc * pixels + pix] = conv.out_params.quantize(real);
+        }
+    };
+    if par.should_parallelize(pixels) {
+        // Work-stolen across output pixels; each task carries its own
+        // RunStats which are merged back in pixel order (integer
+        // counters, so the merge is exact regardless of schedule).
+        let results: Vec<(Vec<i64>, RunStats)> = par.map_collect(pixels, |pix| {
+            let mut local = RunStats::default();
+            let patch = &cols[pix * k..(pix + 1) * k];
+            let accs = backend.gemm(layer_id, patch, in_params.zero_point, &mut local);
+            (accs, local)
+        });
+        for (pix, (accs, local)) in results.into_iter().enumerate() {
+            stats.merge(&local);
+            requant(&accs, pix, &mut out);
+        }
+    } else {
+        // Scalar path streams one patch at a time — no per-pixel
+        // accumulator buffering, stats written directly.
+        for pix in 0..pixels {
+            let patch = &cols[pix * k..(pix + 1) * k];
+            let accs = backend.gemm(layer_id, patch, in_params.zero_point, stats);
+            requant(&accs, pix, &mut out);
         }
     }
     (
@@ -337,6 +377,32 @@ mod tests {
         let (a, _) = run_model(&model, &backend, &img1);
         let (b, _) = run_model(&model, &backend, &img2);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn parallel_run_bit_identical_to_scalar() {
+        // The rayon pixel fan-out must not change a single bit of the
+        // logits or the statistics, at any threshold.
+        let mut rng = Rng::new(210);
+        let store = testutil::random_store(&mut rng, 8, 10);
+        let model = tiny_resnet(&store, 16, 10).unwrap();
+        let backend = exact_backend(&model);
+        let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
+        let (a, sa) = run_model(&model, &backend, &img);
+        for par in [
+            Parallelism::auto(),
+            Parallelism {
+                enabled: true,
+                min_items: 1,
+            },
+        ] {
+            let (b, sb) = run_model_par(&model, &backend, &img, &par);
+            assert_eq!(a, b);
+            assert_eq!(sa.macs, sb.macs);
+            assert_eq!(sa.digital_cycles, sb.digital_cycles);
+            assert_eq!(sa.pcu_ops, sb.pcu_ops);
+            assert_eq!(sa.levels, sb.levels);
+        }
     }
 
     #[test]

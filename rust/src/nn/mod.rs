@@ -15,7 +15,9 @@ pub mod pac_exec;
 pub mod profiler;
 pub mod weights;
 
-pub use exec::{evaluate, exact_backend, run_model, ExactBackend, MacBackend, RunStats};
+pub use exec::{
+    evaluate, exact_backend, run_model, run_model_par, ExactBackend, MacBackend, RunStats,
+};
 pub use layers::{tiny_resnet, tiny_vgg, ConvLayer, LinearLayer, Model, Op};
 pub use pac_exec::{pac_backend, PacBackend, PacConfig};
 pub use profiler::{LayerProfile, ProfilingBackend};

@@ -19,12 +19,13 @@
 use super::exec::{MacBackend, RunStats};
 use crate::arch::bank_logic::{classify, spec_normalized, ThresholdSet};
 use crate::pac::compute_map::DynamicLevel;
-use crate::pac::sparsity::BitPlanes;
 use crate::pac::mac::sparsity_domain_sum_fast;
+use crate::pac::sparsity::BitPlanes;
 use crate::pac::{zero_point_correct, ComputeMap, PcuRounding};
-use crate::util::fastdiv::FastDiv;
 use crate::tensor::Tensor;
 use crate::util::and_popcount;
+use crate::util::fastdiv::FastDiv;
+use crate::util::Parallelism;
 
 /// Configuration of the PAC backend.
 #[derive(Debug, Clone)]
@@ -48,6 +49,10 @@ pub struct PacConfig {
     /// constraint from the negative side (accuracy collapses exactly
     /// where Fig. 3(c) predicts the RMSE exceeds competitors').
     pub min_dp_len: usize,
+    /// Fan the per-output-channel (DP column) loop of `gemm` out over
+    /// rayon. Bit-deterministic — columns are independent and collected
+    /// in order — so this only changes speed, never results.
+    pub par: Parallelism,
 }
 
 impl Default for PacConfig {
@@ -58,6 +63,7 @@ impl Default for PacConfig {
             rounding: PcuRounding::RoundNearest,
             first_layer_exact: true,
             min_dp_len: 512,
+            par: Parallelism::auto(),
         }
     }
 }
@@ -163,15 +169,15 @@ impl MacBackend for PacBackend {
         // First layer: standard D-CiM (exact).
         if let Some((w, zpw)) = &layer.exact {
             let wd = w.data();
-            let mut out = Vec::with_capacity(n);
-            for oc in 0..n {
+            let row_acc = |oc: usize| -> i64 {
                 let row = &wd[oc * k..(oc + 1) * k];
                 let mut acc = 0i64;
                 for (&x, &wv) in patch.iter().zip(row) {
                     acc += (x as i64 - zpx as i64) * (wv as i64 - *zpw as i64);
                 }
-                out.push(acc);
-            }
+                acc
+            };
+            let out = self.config.par.map_collect(n, row_acc);
             stats.macs += (n * k) as u64;
             stats.digital_cycles += (n as u64) * 64;
             return out;
@@ -203,8 +209,10 @@ impl MacBackend for PacBackend {
         // words, reloading the x word once instead of four times.
         let is_static_4x4 = digital_set.len() == 16
             && digital_set.iter().all(|&(p, q)| p >= 4 && q >= 4);
-        let mut out = Vec::with_capacity(n);
-        for oc in 0..n {
+        // One DP column per output channel — independent work items,
+        // work-stolen across the pool when the layer is wide enough
+        // (deterministic: pure integer math, collected in column order).
+        let column = |oc: usize| -> i64 {
             let ocbase = oc * 8 * words;
             let mut raw = 0i64;
             if is_static_4x4 {
@@ -235,16 +243,16 @@ impl MacBackend for PacBackend {
                     raw += dp << (p + q);
                 }
             }
-            raw += sparsity_domain_sum_fast(&xp.pop, &layer.sw[oc], &layer.div, map, self.config.rounding);
-            out.push(zero_point_correct(
-                raw,
-                sum_x,
-                layer.w_sums[oc],
-                k as i64,
-                zpx,
-                layer.zpw,
-            ));
-        }
+            raw += sparsity_domain_sum_fast(
+                &xp.pop,
+                &layer.sw[oc],
+                &layer.div,
+                map,
+                self.config.rounding,
+            );
+            zero_point_correct(raw, sum_x, layer.w_sums[oc], k as i64, zpx, layer.zpw)
+        };
+        let out = self.config.par.map_collect(n, column);
         stats.macs += (n * k) as u64;
         stats.digital_cycles += dc * n as u64;
         stats.pcu_ops += (64 - dc) * n as u64;
@@ -301,6 +309,7 @@ mod tests {
             rounding: PcuRounding::RoundNearest,
             first_layer_exact: false,
             min_dp_len: 0,
+            par: Parallelism::auto(),
         };
         let pac = pac_backend(&model, cfg);
         let (a, _) = run_model(&model, &exact, &img);
@@ -320,6 +329,35 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert!((x - y).abs() < 0.5 * a.iter().fold(0f32, |m, &v| m.max(v.abs())) + 1.0,
                 "exact={x} pac={y}");
+        }
+    }
+
+    #[test]
+    fn parallel_columns_bit_identical_to_scalar() {
+        // Same model, same image: column fan-out at every threshold must
+        // reproduce the scalar backend's logits exactly.
+        let (model, img) = setup(310);
+        let scalar = pac_backend(
+            &model,
+            PacConfig {
+                par: Parallelism::off(),
+                ..PacConfig::default()
+            },
+        );
+        let (a, _) = run_model(&model, &scalar, &img);
+        for min_items in [1usize, 4, 32] {
+            let par = pac_backend(
+                &model,
+                PacConfig {
+                    par: Parallelism {
+                        enabled: true,
+                        min_items,
+                    },
+                    ..PacConfig::default()
+                },
+            );
+            let (b, _) = run_model(&model, &par, &img);
+            assert_eq!(a, b, "min_items={min_items}");
         }
     }
 

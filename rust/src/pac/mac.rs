@@ -10,20 +10,16 @@
 use super::compute_map::ComputeMap;
 use super::sparsity::BitPlanes;
 use crate::util::and_popcount;
+use rayon::prelude::*;
 
 /// Rounding mode of the PCU's fixed-point divide (ablation: §10 of
 /// DESIGN.md). Hardware divides by the DP length `n`; `RoundNearest`
 /// models a divider with a +n/2 pre-add, `Floor` a bare shifter chain.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum PcuRounding {
+    #[default]
     RoundNearest,
     Floor,
-}
-
-impl Default for PcuRounding {
-    fn default() -> Self {
-        PcuRounding::RoundNearest
-    }
 }
 
 /// One PAC sparsity-domain cycle (Eq. 3) in PCU fixed-point arithmetic:
@@ -114,6 +110,40 @@ pub fn hybrid_mac(
         digital_cycles: dc,
         pcu_cycles: pc,
     }
+}
+
+/// Sequential batched hybrid MAC: one [`hybrid_mac`] per `(x, w)` DP
+/// vector pair, in order. The scalar reference for
+/// [`par_hybrid_mac_batch`] (and the scalar side of the
+/// `perf_hotpath` bench).
+pub fn hybrid_mac_batch(
+    pairs: &[(BitPlanes, BitPlanes)],
+    map: &ComputeMap,
+    rounding: PcuRounding,
+) -> Vec<HybridMac> {
+    pairs
+        .iter()
+        .map(|(xp, wp)| hybrid_mac(xp, wp, map, rounding))
+        .collect()
+}
+
+/// Rayon-parallel batched hybrid MAC over independent DP vector pairs —
+/// one output activation per pair, work-stolen across the pool.
+///
+/// **Bit-identical to [`hybrid_mac_batch`]** by construction: each pair
+/// is computed independently in pure integer arithmetic and results are
+/// collected in input order, so neither thread count nor scheduling can
+/// change a single bit of the output (property-tested in
+/// `tests/proptests.rs`).
+pub fn par_hybrid_mac_batch(
+    pairs: &[(BitPlanes, BitPlanes)],
+    map: &ComputeMap,
+    rounding: PcuRounding,
+) -> Vec<HybridMac> {
+    pairs
+        .par_iter()
+        .map(|(xp, wp)| hybrid_mac(xp, wp, map, rounding))
+        .collect()
 }
 
 /// `sparsity_domain_sum` with a precomputed reciprocal divider — the
@@ -299,6 +329,31 @@ mod tests {
             .map(|(&a, &b)| (a as i64 - zx as i64) * (b as i64 - zw as i64))
             .sum();
         assert_eq!(corrected, direct);
+    }
+
+    #[test]
+    fn par_batch_matches_sequential_batch() {
+        let mut rng = Rng::new(18);
+        let map = ComputeMap::operand_based(4, 4);
+        let pairs: Vec<(BitPlanes, BitPlanes)> = (0..64)
+            .map(|_| {
+                let (x, w) = random_pair(&mut rng, 576);
+                (BitPlanes::from_u8(&x), BitPlanes::from_u8(&w))
+            })
+            .collect();
+        let seq = hybrid_mac_batch(&pairs, &map, PcuRounding::RoundNearest);
+        let par = par_hybrid_mac_batch(&pairs, &map, PcuRounding::RoundNearest);
+        assert_eq!(seq, par);
+        for (i, (xp, wp)) in pairs.iter().enumerate() {
+            assert_eq!(seq[i], hybrid_mac(xp, wp, &map, PcuRounding::RoundNearest), "pair {i}");
+        }
+    }
+
+    #[test]
+    fn batch_empty_input() {
+        let map = ComputeMap::operand_based(4, 4);
+        assert!(hybrid_mac_batch(&[], &map, PcuRounding::Floor).is_empty());
+        assert!(par_hybrid_mac_batch(&[], &map, PcuRounding::Floor).is_empty());
     }
 
     #[test]

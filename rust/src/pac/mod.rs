@@ -17,7 +17,7 @@ pub mod sparsity;
 
 pub use compute_map::{ComputeMap, Domain, DynamicLevel};
 pub use mac::{
-    exact_mac, exact_mac_bitserial, hybrid_mac, pcu_cycle, sparsity_domain_sum,
-    zero_point_correct, HybridMac, PcuRounding,
+    exact_mac, exact_mac_bitserial, hybrid_mac, hybrid_mac_batch, par_hybrid_mac_batch,
+    pcu_cycle, sparsity_domain_sum, zero_point_correct, HybridMac, PcuRounding,
 };
 pub use sparsity::{bit_sparsity_counts, bit_sparsity_rates, BitPlanes};

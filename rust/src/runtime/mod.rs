@@ -5,97 +5,20 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids (see
 //! `python/compile/aot.py` and /opt/xla-example/README.md).
+//!
+//! The executor itself lives behind the `pjrt` cargo feature so the crate
+//! builds, tests, and benches with **no JAX/XLA toolchain installed**
+//! (DESIGN.md §8): artifact manifests, weight stores, and datasets load
+//! unconditionally; only `PjrtExecutor` needs the feature. Without it,
+//! the serving coordinator still runs against any other
+//! [`crate::coordinator::server::BatchExecutor`] implementation.
 
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
 pub use manifest::Manifest;
 
-use crate::coordinator::server::BatchExecutor;
-use anyhow::{Context, Result};
-use std::path::Path;
-
-/// A compiled model executable on the PJRT CPU client.
-pub struct PjrtExecutor {
-    exe: xla::PjRtLoadedExecutable,
-    batch: usize,
-    input_elems: usize,
-    output_elems: usize,
-}
-
-impl PjrtExecutor {
-    /// Load HLO text, compile on the CPU client.
-    ///
-    /// The artifact's entry computation must take one f32 parameter of
-    /// shape `[batch, input_elems…]` and return a 1-tuple of f32
-    /// `[batch, output_elems]` (the aot.py convention).
-    pub fn load(
-        hlo_path: impl AsRef<Path>,
-        batch: usize,
-        input_elems: usize,
-        output_elems: usize,
-    ) -> Result<Self> {
-        let path = hlo_path.as_ref();
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", path.display()))?;
-        Ok(Self {
-            exe,
-            batch,
-            input_elems,
-            output_elems,
-        })
-    }
-
-    /// Run one batch (flattened `[batch × input_elems]` f32).
-    pub fn run(&self, flat: &[f32]) -> Result<Vec<f32>> {
-        anyhow::ensure!(
-            flat.len() == self.batch * self.input_elems,
-            "batch buffer has {} elems, expected {}",
-            flat.len(),
-            self.batch * self.input_elems
-        );
-        let lit = xla::Literal::vec1(flat)
-            .reshape(&[self.batch as i64, self.input_elems as i64])
-            .context("reshape input literal")?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
-            .to_literal_sync()
-            .context("fetch result")?;
-        let out = result.to_tuple1().context("unwrap result tuple")?;
-        let values = out.to_vec::<f32>().context("read result values")?;
-        anyhow::ensure!(
-            values.len() == self.batch * self.output_elems,
-            "result has {} elems, expected {}",
-            values.len(),
-            self.batch * self.output_elems
-        );
-        Ok(values)
-    }
-}
-
-impl BatchExecutor for PjrtExecutor {
-    fn batch_size(&self) -> usize {
-        self.batch
-    }
-
-    fn input_elems(&self) -> usize {
-        self.input_elems
-    }
-
-    fn output_elems(&self) -> usize {
-        self.output_elems
-    }
-
-    fn execute(&mut self, batch: &[f32]) -> Result<Vec<f32>> {
-        self.run(batch)
-    }
-}
-
-// No unit tests here: PJRT execution requires artifacts, covered by
-// rust/tests/integration_runtime.rs (skips gracefully when artifacts are
-// missing) and examples/.
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtExecutor;

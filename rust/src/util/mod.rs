@@ -4,8 +4,11 @@
 
 pub mod check;
 pub mod fastdiv;
+pub mod par;
 pub mod rng;
 pub mod stats;
+
+pub use par::Parallelism;
 
 /// Pack a `{0,1}`-valued byte slice into `u64` words, LSB-first, for
 /// popcount-based dot products (the software analogue of the D-CiM adder

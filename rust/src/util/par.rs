@@ -1,0 +1,111 @@
+//! Parallel-execution policy shared by the NN engines and the PAC batch
+//! kernels.
+//!
+//! The per-output-activation work of a PACiM layer (one `hybrid_mac` per
+//! DP column) is embarrassingly parallel, so the engines fan it out over
+//! rayon's work-stealing pool. Every parallel path in this crate is
+//! **bit-deterministic**: items are mapped independently and collected in
+//! index order, and all merged statistics are integer counters, so the
+//! result never depends on thread count or scheduling.
+//!
+//! `Parallelism` is the knob threaded through the engines: it gates
+//! whether a loop fans out at all and below which size it stays scalar
+//! (small layers lose more to fork/join overhead than they gain).
+
+use rayon::prelude::*;
+
+/// Parallel-execution configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Master switch; `false` forces every engine loop scalar.
+    pub enabled: bool,
+    /// Minimum number of independent work items (output pixels, DP
+    /// columns, layer schedules) before a loop fans out.
+    pub min_items: usize,
+}
+
+impl Parallelism {
+    /// Parallel with a fan-out threshold tuned for the NN engines: below
+    /// ~32 items the rayon fork/join overhead exceeds the per-item work of
+    /// even the deepest ResNet DP columns.
+    pub fn auto() -> Self {
+        Self {
+            enabled: true,
+            min_items: 32,
+        }
+    }
+
+    /// Fully scalar execution (the pre-parallel behavior).
+    pub fn off() -> Self {
+        Self {
+            enabled: false,
+            min_items: usize::MAX,
+        }
+    }
+
+    /// Should a loop over `items` independent units fan out?
+    #[inline]
+    pub fn should_parallelize(&self, items: usize) -> bool {
+        self.enabled && items >= self.min_items
+    }
+
+    /// Map `f` over `0..n` and collect in index order, fanning out over
+    /// rayon when the policy allows. This is the single dispatch point the
+    /// engines share, so tuning (thresholds, future chunking) lands in one
+    /// place. Deterministic for pure `f`: both paths collect by index.
+    pub fn map_collect<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync + Send,
+    {
+        if self.should_parallelize(n) {
+            (0..n).into_par_iter().map(f).collect()
+        } else {
+            (0..n).map(f).collect()
+        }
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_gates_on_size() {
+        let p = Parallelism::auto();
+        assert!(p.should_parallelize(1000));
+        assert!(!p.should_parallelize(1));
+    }
+
+    #[test]
+    fn off_never_parallelizes() {
+        let p = Parallelism::off();
+        assert!(!p.should_parallelize(usize::MAX - 1));
+        assert!(!p.should_parallelize(0));
+    }
+
+    #[test]
+    fn default_is_auto() {
+        assert_eq!(Parallelism::default(), Parallelism::auto());
+    }
+
+    #[test]
+    fn map_collect_order_and_identity() {
+        let f = |i: usize| i * i;
+        let seq: Vec<usize> = (0..100).map(f).collect();
+        assert_eq!(Parallelism::off().map_collect(100, f), seq);
+        assert_eq!(Parallelism::auto().map_collect(100, f), seq);
+        let forced = Parallelism {
+            enabled: true,
+            min_items: 1,
+        };
+        assert_eq!(forced.map_collect(100, f), seq);
+        assert!(forced.map_collect(0, f).is_empty());
+    }
+}

@@ -89,7 +89,14 @@ impl LayerShape {
     }
 }
 
-fn basic_block(v: &mut Vec<LayerShape>, tag: &str, c_in: usize, c_out: usize, hw: usize, stride: usize) {
+fn basic_block(
+    v: &mut Vec<LayerShape>,
+    tag: &str,
+    c_in: usize,
+    c_out: usize,
+    hw: usize,
+    stride: usize,
+) {
     v.push(LayerShape::conv(
         &format!("{tag}.conv1"),
         c_in,
@@ -112,7 +119,14 @@ fn basic_block(v: &mut Vec<LayerShape>, tag: &str, c_in: usize, c_out: usize, hw
     }
 }
 
-fn bottleneck(v: &mut Vec<LayerShape>, tag: &str, c_in: usize, width: usize, hw: usize, stride: usize) {
+fn bottleneck(
+    v: &mut Vec<LayerShape>,
+    tag: &str,
+    c_in: usize,
+    width: usize,
+    hw: usize,
+    stride: usize,
+) {
     let c_out = width * 4;
     v.push(LayerShape::conv(&format!("{tag}.conv1"), c_in, width, hw, 1, 1));
     v.push(LayerShape::conv(
@@ -194,7 +208,13 @@ pub fn resnet50(res: Resolution, num_classes: usize) -> Vec<LayerShape> {
 
 /// VGG16-BN layer shapes.
 pub fn vgg16_bn(res: Resolution, num_classes: usize) -> Vec<LayerShape> {
-    let cfg: [&[usize]; 5] = [&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+    let cfg: [&[usize]; 5] = [
+        &[64, 64],
+        &[128, 128],
+        &[256, 256, 256],
+        &[512, 512, 512],
+        &[512, 512, 512],
+    ];
     let mut v = Vec::new();
     let mut hw = match res {
         Resolution::Cifar => 32,

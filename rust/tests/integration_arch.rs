@@ -63,8 +63,10 @@ fn dynamic_bank_cycle_savings_show_up_in_stats() {
     let ws: Vec<Vec<u8>> = (0..8)
         .map(|_| (0..n).map(|_| rng.below(256) as u8).collect())
         .collect();
-    let mut cfg = BankConfig::default();
-    cfg.thresholds = Some(ThresholdSet::new(0.2, 0.35, 0.5));
+    let cfg = BankConfig {
+        thresholds: Some(ThresholdSet::new(0.2, 0.35, 0.5)),
+        ..BankConfig::default()
+    };
     let mut bank = PacimBank::new(cfg);
     bank.load_weights(&ws);
     // Mix of sparse and dense inputs.

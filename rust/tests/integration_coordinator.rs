@@ -118,8 +118,14 @@ fn scheduler_consistency_across_networks() {
 
 #[test]
 fn weight_traffic_scales_with_model_size() {
-    let r18 = schedule_model(&resnet18(Resolution::ImageNet, 1000), &ScheduleConfig::pacim_default());
-    let r50 = schedule_model(&resnet50(Resolution::ImageNet, 1000), &ScheduleConfig::pacim_default());
+    let r18 = schedule_model(
+        &resnet18(Resolution::ImageNet, 1000),
+        &ScheduleConfig::pacim_default(),
+    );
+    let r50 = schedule_model(
+        &resnet50(Resolution::ImageNet, 1000),
+        &ScheduleConfig::pacim_default(),
+    );
     let w18: u64 = r18.layers.iter().map(|l| l.weight_bits_pacim).sum();
     let w50: u64 = r50.layers.iter().map(|l| l.weight_bits_pacim).sum();
     assert!(w50 > w18, "ResNet-50 moves more weight bits than ResNet-18");

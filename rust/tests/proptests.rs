@@ -1,9 +1,10 @@
 //! Property-based tests over the crate's core invariants, using the
 //! in-house `Checker` harness (proptest is unavailable offline).
 
-use pacim::pac::mac::{pcu_cycle, PcuRounding};
+use pacim::pac::mac::{pac_cycle_f64, pcu_cycle, PcuRounding};
 use pacim::pac::{
-    exact_mac, exact_mac_bitserial, hybrid_mac, zero_point_correct, BitPlanes, ComputeMap,
+    exact_mac, exact_mac_bitserial, hybrid_mac, hybrid_mac_batch, par_hybrid_mac_batch,
+    zero_point_correct, BitPlanes, ComputeMap,
 };
 use pacim::quant::{calibrate_minmax, calibrate_weights_symmetric, Requant};
 use pacim::tensor::{im2col, Conv2dGeom, Tensor};
@@ -71,6 +72,64 @@ fn prop_pcu_cycle_bounds() {
         // Floor <= RoundNearest <= Floor + 1.
         let f = pcu_cycle(sx, sw, n, PcuRounding::Floor);
         assert!(f <= e && e <= f + 1);
+    });
+}
+
+#[test]
+fn prop_pcu_cycle_tracks_f64_within_half_ulp() {
+    // The PCU's fixed-point divide against the exact real value
+    // `Sx·Sw/n` (pac_cycle_f64): RoundNearest lands within 0.5 of the
+    // real quotient (an integer result cannot sit closer to a real than
+    // half a unit), Floor within [0, 1) below it. The 1e-9 slack covers
+    // the f64 division's own rounding (the operands are exact: Sx·Sw ≤
+    // 2^26 and n ≤ 2^13 are both exactly representable).
+    Checker::new("pcu_half_ulp", 400).run(|rng| {
+        let n = 1 + rng.below(8192);
+        let sx = rng.below(n + 1);
+        let sw = rng.below(n + 1);
+        let f = pac_cycle_f64(sx, sw, n);
+        let nearest = pcu_cycle(sx, sw, n, PcuRounding::RoundNearest) as f64;
+        assert!(
+            (nearest - f).abs() <= 0.5 + 1e-9,
+            "nearest: sx={sx} sw={sw} n={n} fixed={nearest} real={f}"
+        );
+        let floor = pcu_cycle(sx, sw, n, PcuRounding::Floor) as f64;
+        assert!(
+            floor <= f + 1e-9 && f - floor < 1.0 + 1e-9,
+            "floor: sx={sx} sw={sw} n={n} fixed={floor} real={f}"
+        );
+    });
+}
+
+#[test]
+fn prop_par_hybrid_mac_batch_bit_identical() {
+    // The rayon-parallel batched kernel must reproduce the sequential
+    // per-pair hybrid_mac exactly — every field of every HybridMac, over
+    // random UINT8 DP vectors, lengths, and maps.
+    Checker::new("par_batch_identity", 40).run(|rng| {
+        let batch = 1 + rng.below(48) as usize;
+        let n = 1 + rng.below(800) as usize;
+        let bits = 1 + rng.below(8);
+        let map = ComputeMap::operand_based(bits, bits);
+        let rounding = if rng.bernoulli(0.5) {
+            PcuRounding::RoundNearest
+        } else {
+            PcuRounding::Floor
+        };
+        let pairs: Vec<(BitPlanes, BitPlanes)> = (0..batch)
+            .map(|_| {
+                let x: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                let w: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                (BitPlanes::from_u8(&x), BitPlanes::from_u8(&w))
+            })
+            .collect();
+        let seq = hybrid_mac_batch(&pairs, &map, rounding);
+        let par = par_hybrid_mac_batch(&pairs, &map, rounding);
+        assert_eq!(seq, par);
+        // And both agree with the scalar kernel element-wise.
+        for (i, (xp, wp)) in pairs.iter().enumerate() {
+            assert_eq!(par[i], hybrid_mac(xp, wp, &map, rounding), "pair {i}");
+        }
     });
 }
 
