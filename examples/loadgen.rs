@@ -1,0 +1,338 @@
+//! Load generator for the PAC-native serving pipeline (DESIGN.md §8).
+//!
+//! Drives the multi-worker batching coordinator with two traffic
+//! patterns — open-loop Poisson arrivals (a fixed offered rate,
+//! submissions never wait on replies, overload load-sheds) and
+//! closed-loop clients (a fixed concurrency, each client waits for its
+//! reply) — against three executors:
+//!
+//! - `mock`  — a no-compute executor isolating the batcher itself;
+//! - `pac`   — [`pacim::runtime::PacExecutor`], the hybrid
+//!   digital/sparsity PACiM engine (the real serving path);
+//! - `exact` — the fully digital 8b/8b baseline executor.
+//!
+//! Emits `BENCH_serve.json` (schema: `pacim::util::benchfmt`) with
+//! throughput, latency percentiles, the batch-fill histogram, load-shed
+//! counts, and the modeled PACiM cycles/energy per image — CI uploads it
+//! next to `BENCH_hotpath.json` to track the serving perf trajectory.
+//!
+//! Run: `cargo run --release --example loadgen -- [options]`
+//!
+//! ```text
+//! --executor mock|pac|exact|all   (default all)
+//! --mode     open|closed|both     (default both)
+//! --requests N   --clients N   --workers N   --batch N
+//! --wait-ms T    --queue-cap N --rps R       --seed S
+//! --out PATH     (default BENCH_serve.json)
+//! ```
+//!
+//! Set `PACIM_BENCH_QUICK=1` for a seconds-long smoke run (CI).
+
+use pacim::coordinator::{BatchExecutor, BatchPolicy, CostEstimate, InferenceServer, ServeError};
+use pacim::nn::{Model, PacConfig};
+use pacim::runtime::PacExecutor;
+use pacim::util::benchfmt::{ServeReport, ServeScenario};
+use pacim::util::rng::Rng;
+use pacim::workload::{synthetic_serving_workload, Dataset};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// No-compute executor: isolates batcher/pool overhead. Logit j of lane
+/// i is `sum(lane_i) + j` so clients can verify their own reply.
+struct MockExec {
+    batch: usize,
+    in_elems: usize,
+    out_elems: usize,
+    delay: Duration,
+}
+
+impl BatchExecutor for MockExec {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn input_elems(&self) -> usize {
+        self.in_elems
+    }
+
+    fn output_elems(&self) -> usize {
+        self.out_elems
+    }
+
+    fn execute(&mut self, batch: &[f32], _occupancy: usize) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        let mut out = Vec::with_capacity(self.batch * self.out_elems);
+        for i in 0..self.batch {
+            let s: f32 = batch[i * self.in_elems..(i + 1) * self.in_elems].iter().sum();
+            for j in 0..self.out_elems {
+                out.push(s + j as f32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Exec {
+    Mock,
+    Pac,
+    Exact,
+}
+
+impl Exec {
+    fn name(self) -> &'static str {
+        match self {
+            Exec::Mock => "mock",
+            Exec::Pac => "pac",
+            Exec::Exact => "exact",
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Open,
+    Closed,
+}
+
+impl Mode {
+    fn name(self) -> &'static str {
+        match self {
+            Mode::Open => "open",
+            Mode::Closed => "closed",
+        }
+    }
+}
+
+struct Opts {
+    requests: usize,
+    clients: usize,
+    workers: usize,
+    batch: usize,
+    wait: Duration,
+    queue_cap: usize,
+    rps: f64,
+    seed: u64,
+}
+
+fn arg_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Parse a numeric flag: absent → default, present-but-invalid → error
+/// (a typo must not silently benchmark a different scenario).
+fn parse_num<T: std::str::FromStr>(
+    args: &[String],
+    flag: &str,
+    default: T,
+) -> anyhow::Result<T> {
+    match arg_value(args, flag) {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid value for {flag}: '{s}'")),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = std::env::var("PACIM_BENCH_QUICK")
+        .ok()
+        .is_some_and(|v| v != "0" && !v.is_empty());
+    let opts = Opts {
+        requests: parse_num(&args, "--requests", if quick { 48 } else { 1024 })?,
+        clients: parse_num(&args, "--clients", 8usize)?.max(1),
+        workers: parse_num(&args, "--workers", 2usize)?.max(1),
+        batch: parse_num(&args, "--batch", 8usize)?.max(1),
+        wait: Duration::from_millis(parse_num(&args, "--wait-ms", 2u64)?),
+        queue_cap: parse_num(&args, "--queue-cap", 256usize)?,
+        rps: parse_num(&args, "--rps", if quick { 300.0 } else { 1500.0 })?,
+        seed: parse_num(&args, "--seed", 2024u64)?,
+    };
+    anyhow::ensure!(
+        opts.rps.is_finite() && opts.rps > 0.0,
+        "--rps must be a positive offered rate (got {})",
+        opts.rps
+    );
+    let out_path = arg_value(&args, "--out").unwrap_or_else(|| "BENCH_serve.json".into());
+
+    let execs: Vec<Exec> = match arg_value(&args, "--executor").as_deref() {
+        Some("mock") => vec![Exec::Mock],
+        Some("pac") => vec![Exec::Pac],
+        Some("exact") => vec![Exec::Exact],
+        Some("all") | None => vec![Exec::Mock, Exec::Pac, Exec::Exact],
+        Some(other) => anyhow::bail!("unknown --executor '{other}' (mock|pac|exact|all)"),
+    };
+    let modes: Vec<Mode> = match arg_value(&args, "--mode").as_deref() {
+        Some("open") => vec![Mode::Open],
+        Some("closed") => vec![Mode::Closed],
+        Some("both") | None => vec![Mode::Closed, Mode::Open],
+        Some(other) => anyhow::bail!("unknown --mode '{other}' (open|closed|both)"),
+    };
+
+    // One synthetic workload shared by the pac/exact scenarios (weights
+    // random; the compute and therefore the measured pipeline are real).
+    let (model, ds) = synthetic_serving_workload(opts.seed, 8, 16, 10, 64)?;
+
+    println!(
+        "loadgen: {} requests | {} workers | batch {} | queue cap {} | {}",
+        opts.requests,
+        opts.workers,
+        opts.batch,
+        opts.queue_cap,
+        if quick { "quick mode" } else { "full mode" }
+    );
+    let mut scenarios = Vec::new();
+    for &exec in &execs {
+        for &mode in &modes {
+            let sc = run_scenario(exec, mode, &opts, &model, &ds)?;
+            println!(
+                "  {:<12} {:>7.1} req/s | p50 {:>8.0} us | p95 {:>8.0} us | p99 {:>8.0} us | \
+                 fill {:.2} | shed {}",
+                sc.name, sc.throughput_rps, sc.p50_us, sc.p95_us, sc.p99_us,
+                sc.mean_batch_occupancy, sc.rejected
+            );
+            scenarios.push(sc);
+        }
+    }
+
+    let report = ServeReport {
+        bench: "serve".into(),
+        quick,
+        scenarios,
+    };
+    let json = serde_json::to_string_pretty(&report)?;
+    std::fs::write(&out_path, json)?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+fn run_scenario(
+    exec: Exec,
+    mode: Mode,
+    opts: &Opts,
+    model: &Model,
+    ds: &Dataset,
+) -> anyhow::Result<ServeScenario> {
+    let policy = BatchPolicy {
+        max_wait: opts.wait,
+        workers: opts.workers,
+        queue_cap: opts.queue_cap,
+    };
+    let server = match exec {
+        Exec::Mock => {
+            let (batch, in_elems) = (opts.batch, ds.image_elems());
+            InferenceServer::start_pool(
+                move |_| {
+                    Ok(MockExec {
+                        batch,
+                        in_elems,
+                        out_elems: 10,
+                        delay: Duration::from_micros(300),
+                    })
+                },
+                policy,
+            )?
+        }
+        Exec::Pac => {
+            let e = PacExecutor::new(model.clone(), PacConfig::serving(), opts.batch);
+            InferenceServer::start_pool(move |_| Ok(e.clone()), policy)?
+        }
+        Exec::Exact => {
+            let e = PacExecutor::exact(model.clone(), opts.batch);
+            InferenceServer::start_pool(move |_| Ok(e.clone()), policy)?
+        }
+    };
+
+    let input = |i: usize| -> Vec<f32> {
+        let idx = i % ds.n;
+        ds.image(idx).iter().map(|&q| ds.params.dequantize(q)).collect()
+    };
+
+    let completed = AtomicU64::new(0);
+    let mut sample_cost: Option<CostEstimate> = None;
+    let t0 = Instant::now();
+    match mode {
+        Mode::Closed => {
+            let h = server.handle();
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                let mut joins = Vec::new();
+                for _ in 0..opts.clients {
+                    let h = h.clone();
+                    let completed = &completed;
+                    let next = &next;
+                    let input = &input;
+                    joins.push(s.spawn(move || {
+                        let mut cost = None;
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= opts.requests {
+                                break cost;
+                            }
+                            if let Ok(r) = h.infer(input(i)) {
+                                completed.fetch_add(1, Ordering::Relaxed);
+                                cost = cost.or(r.cost);
+                            }
+                        }
+                    }));
+                }
+                for j in joins {
+                    sample_cost = sample_cost.or(j.join().unwrap());
+                }
+            });
+        }
+        Mode::Open => {
+            let h = server.handle();
+            let mut rng = Rng::new(opts.seed ^ 0x0DE1);
+            let mut pending = Vec::with_capacity(opts.requests);
+            let mut next_at = Instant::now();
+            for i in 0..opts.requests {
+                // Exponential inter-arrival → Poisson process at `rps`.
+                let dt = -(1.0 - rng.next_f64()).ln() / opts.rps;
+                next_at += Duration::from_secs_f64(dt);
+                if let Some(wait) = next_at.checked_duration_since(Instant::now()) {
+                    std::thread::sleep(wait);
+                }
+                match h.submit(input(i)) {
+                    Ok(p) => pending.push(p),
+                    Err(ServeError::QueueFull { .. }) => {} // counted server-side
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            for p in pending {
+                if let Ok(r) = p.wait() {
+                    completed.fetch_add(1, Ordering::Relaxed);
+                    sample_cost = sample_cost.or(r.cost);
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let mut m = server.stop();
+    let completed = completed.load(Ordering::Relaxed);
+    Ok(ServeScenario {
+        name: format!("{}-{}", exec.name(), mode.name()),
+        executor: exec.name().into(),
+        mode: mode.name().into(),
+        workers: opts.workers,
+        batch_size: opts.batch,
+        queue_cap: opts.queue_cap,
+        offered_rps: if mode == Mode::Open { opts.rps } else { 0.0 },
+        requests: opts.requests as u64,
+        completed,
+        rejected: m.rejected,
+        failed_batches: m.failed_batches,
+        wall_s: wall,
+        throughput_rps: if wall > 0.0 { completed as f64 / wall } else { 0.0 },
+        p50_us: m.latency_percentile_us(50.0),
+        p95_us: m.latency_percentile_us(95.0),
+        p99_us: m.latency_percentile_us(99.0),
+        mean_batch_occupancy: m.mean_batch_occupancy(),
+        batch_fill: m.batch_fill.clone(),
+        modeled_cycles_per_image: sample_cost.map_or(0, |c| c.cycles),
+        modeled_energy_uj_per_image: sample_cost.map_or(0.0, |c| c.total_uj()),
+    })
+}

@@ -8,11 +8,12 @@
 //!
 //! Run: `cargo run --release --example serve -- [requests] [clients]`
 
-use pacim::coordinator::{schedule_model, BatchPolicy, InferenceServer, ScheduleConfig};
+use pacim::coordinator::{
+    estimate_image_cost, model_shapes, BatchPolicy, InferenceServer, ScheduleConfig,
+};
 use pacim::energy::EnergyModel;
 use pacim::nn::{tiny_resnet, WeightStore};
 use pacim::runtime::{Manifest, PjrtExecutor};
-use pacim::workload::shapes::LayerShape;
 use pacim::workload::Dataset;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -37,7 +38,10 @@ fn main() -> anyhow::Result<()> {
     let hlo = man.path("model_pac")?;
     let server = InferenceServer::start_with(
         move || PjrtExecutor::load(&hlo, batch, in_elems, classes),
-        BatchPolicy { max_wait: std::time::Duration::from_millis(2) },
+        BatchPolicy {
+            max_wait: std::time::Duration::from_millis(2),
+            ..BatchPolicy::default()
+        },
     )?;
     let handle = server.handle();
 
@@ -92,23 +96,12 @@ fn main() -> anyhow::Result<()> {
              correct.load(Ordering::Relaxed) as f64 / requests as f64 * 100.0);
 
     // Architecture-level energy per request (what the silicon would burn).
-    let shapes: Vec<LayerShape> = model
-        .compute_layers()
-        .iter()
-        .map(|(name, g)| LayerShape {
-            name: name.to_string(),
-            kind: pacim::workload::LayerShapeKind::Conv,
-            geom: *g,
-        })
-        .collect();
+    let shapes = model_shapes(&model);
     let em = EnergyModel::default();
-    let rep = schedule_model(&shapes, &ScheduleConfig::pacim_default());
-    let e_img = (rep.compute_energy_pj(&em) + rep.memory_energy_pj(&em, true)) / 1e6;
+    let pac = estimate_image_cost(&shapes, &ScheduleConfig::pacim_default(), &em);
+    let dig = estimate_image_cost(&shapes, &ScheduleConfig::digital_baseline(), &em);
     println!("  arch energy: {:.2} uJ/image (65nm PACiM estimate; digital would be {:.2} uJ)",
-             e_img,
-             {
-                 let d = schedule_model(&shapes, &ScheduleConfig::digital_baseline());
-                 (d.compute_energy_pj(&em) + d.memory_energy_pj(&em, false)) / 1e6
-             });
+             pac.total_uj(),
+             dig.total_uj());
     Ok(())
 }

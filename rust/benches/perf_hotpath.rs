@@ -19,29 +19,9 @@ use pacim::pac::{
     hybrid_mac, hybrid_mac_batch, par_hybrid_mac_batch, BitPlanes, ComputeMap, PcuRounding,
 };
 use pacim::tensor::Tensor;
+use pacim::util::benchfmt::{HotpathReport, LayerBench};
 use pacim::util::rng::Rng;
 use pacim::workload::{resnet18, Resolution};
-use serde::Serialize;
-
-/// One scalar-vs-parallel measurement, serialized into BENCH_hotpath.json.
-#[derive(Debug, Serialize)]
-struct LayerBench {
-    layer: String,
-    dp_len: usize,
-    pairs: usize,
-    scalar_macs_per_s: f64,
-    parallel_macs_per_s: f64,
-    speedup: f64,
-    bit_identical: bool,
-}
-
-#[derive(Debug, Serialize)]
-struct BenchReport {
-    bench: &'static str,
-    threads: usize,
-    quick: bool,
-    layers: Vec<LayerBench>,
-}
 
 fn quick_mode() -> bool {
     std::env::var("PACIM_BENCH_QUICK")
@@ -142,8 +122,11 @@ fn main() {
     // only the bit-identity claims above can fail this bench.
     println!("    best speedup {best:.2}x (target: >=2x at >=4 threads)");
 
-    let report = BenchReport {
-        bench: "perf_hotpath",
+    // The report serializes through the shared schema
+    // (`pacim::util::benchfmt`); tests/bench_schema.rs re-parses the
+    // emitted file and fails on any drift.
+    let report = HotpathReport {
+        bench: "perf_hotpath".into(),
         threads,
         quick,
         layers: layer_benches,
@@ -180,10 +163,73 @@ fn main() {
         rate(macs, t, "")
     );
 
+    // --- PAC-native serving pipeline (pool + dynamic batcher) ---------------
+    serving_section(quick, &mut checks);
+
     // --- PJRT end-to-end (pjrt feature + artifacts required) ---------------
     pjrt_section();
     println!();
     checks.finish("§Perf");
+}
+
+/// Closed-loop throughput of the worker pool over the PAC executor on
+/// the synthetic workload (no artifacts, no PJRT). The full open/closed
+/// sweep with JSON export lives in `examples/loadgen.rs`; this row keeps
+/// the serving path on the bench dashboard.
+fn serving_section(quick: bool, checks: &mut Checks) {
+    use pacim::coordinator::{BatchPolicy, InferenceServer};
+    use pacim::runtime::PacExecutor;
+    use pacim::workload::synthetic_serving_workload;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let (model, ds) = synthetic_serving_workload(7701, 8, 16, 10, 32)
+        .expect("synthetic workload");
+    let requests = if quick { 24 } else { 128 };
+    let workers = rayon::current_num_threads().clamp(1, 4);
+    let exec = PacExecutor::new(model, PacConfig::serving(), 8);
+    let server = InferenceServer::start_pool(
+        move |_| Ok(exec.clone()),
+        BatchPolicy {
+            workers,
+            ..BatchPolicy::default()
+        },
+    )
+    .expect("pool start");
+    let h = server.handle();
+    let next = AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let h = h.clone();
+            let next = &next;
+            let ds = &ds;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= requests {
+                    break;
+                }
+                let img: Vec<f32> = ds
+                    .image(i % ds.n)
+                    .iter()
+                    .map(|&q| ds.params.dequantize(q))
+                    .collect();
+                h.infer(img).expect("infer");
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let mut m = server.stop();
+    println!(
+        "\n  PAC serving ({workers} workers, batch 8): {:>9.2} ms  ({}, p50 {:.0} us, fill {:.2})",
+        wall * 1e3,
+        rate(requests as f64, wall, "img"),
+        m.latency_percentile_us(50.0),
+        m.mean_batch_occupancy()
+    );
+    checks.claim(
+        m.requests == requests as u64 && m.failed_batches == 0,
+        "serving pool answered every request",
+    );
 }
 
 fn pac_backend_for(weight: &Tensor<u8>) -> pacim::nn::PacBackend {

@@ -1,15 +1,21 @@
 //! L3 coordination: the bank scheduler (analytic cycle/energy/traffic
-//! accounting) and the threaded batch-serving loop.
+//! accounting) and the multi-worker batch-serving pool.
 //!
 //! - [`scheduler`] — maps DNN layer shapes onto PACiM banks; powers the
-//!   Fig. 7 / Table 3-4 system analyses and `examples/trace_sim.rs`.
-//! - [`server`] — the request loop + dynamic batcher in front of a
-//!   PJRT executable; powers `examples/serve.rs`.
+//!   Fig. 7 / Table 3-4 system analyses, `examples/trace_sim.rs`, and the
+//!   per-reply [`CostEstimate`] serving annotation.
+//! - [`server`] — the worker pool + shared dynamic batcher with admission
+//!   control; powers `pacim serve`, `examples/loadgen.rs`, and (with the
+//!   `pjrt` feature) `examples/serve.rs`.
 
 pub mod scheduler;
 pub mod server;
 
 pub use scheduler::{
-    schedule_layer, schedule_model, LayerReport, ModelReport, ScheduleConfig,
+    estimate_image_cost, model_shapes, schedule_layer, schedule_model, CostEstimate,
+    LayerReport, ModelReport, ScheduleConfig,
 };
-pub use server::{BatchExecutor, BatchPolicy, InferenceServer, Reply, ServerHandle, ServerMetrics};
+pub use server::{
+    BatchExecutor, BatchPolicy, InferenceServer, PendingReply, Reply, ServeError,
+    ServerHandle, ServerMetrics, WorkerSummary,
+};

@@ -13,6 +13,7 @@
 
 use crate::energy::EnergyModel;
 use crate::memory::traffic::{activation_traffic, weight_traffic};
+use crate::nn::layers::{Model, Op};
 use crate::workload::shapes::{LayerShape, LayerShapeKind};
 
 /// Scheduling/accounting configuration.
@@ -219,6 +220,61 @@ pub fn schedule_model(shapes: &[LayerShape], cfg: &ScheduleConfig) -> ModelRepor
     }
 }
 
+/// Modeled per-image silicon cost of one inference, derived from the
+/// bank schedule. The serving path attaches this to every reply
+/// ([`crate::coordinator::server::Reply::cost`]) so a load test doubles
+/// as an architecture-exploration scenario: latency percentiles from the
+/// software pipeline, cycles/energy from the PACiM model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostEstimate {
+    /// D-CiM bit-serial broadcast cycles per image.
+    pub cycles: u64,
+    /// Compute energy per image (pJ, 65 nm @ 0.6 V calibration).
+    pub compute_pj: f64,
+    /// Memory energy per image (pJ): activation SRAM + weight DRAM.
+    pub memory_pj: f64,
+}
+
+impl CostEstimate {
+    /// Total modeled energy per image in µJ.
+    pub fn total_uj(&self) -> f64 {
+        (self.compute_pj + self.memory_pj) / 1e6
+    }
+}
+
+/// Extract the schedulable layer shapes of a compiled model (CONV layers
+/// verbatim, LINEAR layers as 1×1 GEMMs), for cost estimation of the
+/// actually-served network rather than a paper benchmark table.
+pub fn model_shapes(model: &Model) -> Vec<LayerShape> {
+    model
+        .ops
+        .iter()
+        .filter_map(|op| match op {
+            Op::Conv2d(c) => Some(LayerShape {
+                name: c.name.clone(),
+                kind: LayerShapeKind::Conv,
+                geom: c.geom,
+            }),
+            Op::Linear(l) => Some(LayerShape::linear(&l.name, l.in_f, l.out_f)),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Per-image cost estimate for serving a workload under `cfg`.
+pub fn estimate_image_cost(
+    shapes: &[LayerShape],
+    cfg: &ScheduleConfig,
+    em: &EnergyModel,
+) -> CostEstimate {
+    let rep = schedule_model(shapes, cfg);
+    CostEstimate {
+        cycles: rep.total_macs_cycles(),
+        compute_pj: rep.compute_energy_pj(em),
+        memory_pj: rep.memory_energy_pj(em, cfg.msb_bits < 8),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +330,37 @@ mod tests {
         assert!(
             ((rep.total_dcim_ops() + rep.total_pcu_ops()) - total).abs() / total < 1e-12
         );
+    }
+
+    #[test]
+    fn model_shapes_cover_every_compute_layer() {
+        use crate::nn::layers::{synthetic, tiny_resnet};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        let store = synthetic::random_store(&mut rng, 8, 10);
+        let model = tiny_resnet(&store, 16, 10).unwrap();
+        let shapes = model_shapes(&model);
+        // 9 convs + 1 linear head.
+        assert_eq!(shapes.len(), 10);
+        assert_eq!(shapes.last().unwrap().kind, LayerShapeKind::Linear);
+        let macs: u64 = shapes.iter().map(|s| s.macs()).sum();
+        assert_eq!(macs, model.macs());
+    }
+
+    #[test]
+    fn image_cost_estimate_orders_configs() {
+        use crate::nn::layers::{synthetic, tiny_resnet};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(78);
+        let store = synthetic::random_store(&mut rng, 8, 10);
+        let model = tiny_resnet(&store, 16, 10).unwrap();
+        let shapes = model_shapes(&model);
+        let em = EnergyModel::default();
+        let pac = estimate_image_cost(&shapes, &ScheduleConfig::pacim_default(), &em);
+        let dig = estimate_image_cost(&shapes, &ScheduleConfig::digital_baseline(), &em);
+        assert!(pac.cycles > 0 && pac.total_uj() > 0.0);
+        assert!(pac.cycles < dig.cycles, "PAC must cut bit-serial cycles");
+        assert!(pac.total_uj() < dig.total_uj());
     }
 
     #[test]

@@ -1,18 +1,31 @@
-//! The serving coordinator: a threaded request loop with dynamic
-//! batching in front of a (PJRT-compiled) model executable.
+//! The serving coordinator: a multi-worker pool behind a shared dynamic
+//! batcher with admission control.
 //!
-//! This is the L3 runtime path: clients submit single images; the
-//! batcher groups them up to the executable's compiled batch size or a
-//! deadline, pads partial batches, executes, and distributes per-request
-//! results. Python never appears here — the executable was AOT-compiled
-//! at build time.
+//! This is the L3 runtime path: clients submit single images into a
+//! bounded queue; N workers (each owning its own [`BatchExecutor`]) pop
+//! up to `batch_size` requests or wait out a deadline, pad partial
+//! batches, execute, and distribute per-request results. When the queue
+//! is full the submission is load-shed with a typed error
+//! ([`ServeError::QueueFull`]) instead of queueing unbounded latency —
+//! the backpressure policy of DESIGN.md §8.
 //!
-//! The executor is a trait so unit tests run against a mock and the
-//! examples against `crate::runtime::PjrtExecutor` (behind the `pjrt`
-//! cargo feature).
+//! The executor is a trait so unit tests run against a mock, the
+//! PAC-native path against [`crate::runtime::PacExecutor`] (pure rust, no
+//! PJRT), and the AOT path against `crate::runtime::PjrtExecutor` (behind
+//! the `pjrt` cargo feature). Executors may annotate every reply with the
+//! modeled silicon cost ([`CostEstimate`]) so serving doubles as an
+//! architecture-exploration scenario.
+//!
+//! Shutdown is a graceful drain: [`InferenceServer::stop`] closes the
+//! queue to new submissions, workers keep flushing batches until the
+//! queue is empty, and the per-worker metrics are merged into the
+//! aggregate [`ServerMetrics`] returned to the caller.
 
+use super::scheduler::CostEstimate;
 use crate::util::stats::percentile;
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Something that can run a fixed-batch forward pass.
@@ -28,8 +41,33 @@ pub trait BatchExecutor {
     /// Elements per output (num classes).
     fn output_elems(&self) -> usize;
     /// Execute on exactly `batch_size()` inputs; returns
-    /// `batch_size() × output_elems()` outputs.
-    fn execute(&mut self, batch: &[f32]) -> anyhow::Result<Vec<f32>>;
+    /// `batch_size() × output_elems()` outputs. The first `occupancy`
+    /// lanes are real requests; the rest are zero padding. Executors
+    /// with a fixed compiled batch (PJRT) ignore the hint; pure-rust
+    /// executors may skip the padded lanes — only the first
+    /// `occupancy × output_elems()` outputs ever reach replies.
+    fn execute(&mut self, batch: &[f32], occupancy: usize) -> anyhow::Result<Vec<f32>>;
+    /// Modeled per-image silicon cost, attached to every reply this
+    /// executor produces. Default: no cost model.
+    fn cost_estimate(&self) -> Option<CostEstimate> {
+        None
+    }
+}
+
+/// Typed submission/serving error (the load-shed and lifecycle states a
+/// client must distinguish).
+#[derive(Debug, thiserror::Error)]
+pub enum ServeError {
+    #[error("input has {got} elems, expected {want}")]
+    BadInput { got: usize, want: usize },
+    /// Admission control fired: the bounded queue already holds
+    /// `capacity` pending requests. Clients should back off and retry.
+    #[error("admission queue full ({capacity} pending requests); load shed")]
+    QueueFull { capacity: usize },
+    #[error("server stopped")]
+    Stopped,
+    #[error("request dropped (batch execution failed)")]
+    Dropped,
 }
 
 /// One inference request.
@@ -39,20 +77,38 @@ struct Request {
     reply: mpsc::Sender<Reply>,
 }
 
-enum Msg {
-    Req(Request),
-    Shutdown,
-}
-
 /// Per-request response.
 #[derive(Debug, Clone)]
 pub struct Reply {
     pub logits: Vec<f32>,
     /// Queue + batch + execute latency.
     pub latency: Duration,
-    /// Size of the batch this request rode in.
+    /// Compiled batch size of the executor this request rode through.
     pub batch_size: usize,
+    /// Real (non-padded) requests in the batch this request rode in.
+    pub occupancy: usize,
+    /// Modeled per-image PACiM cycles/energy, when the executor carries a
+    /// cost model (see [`BatchExecutor::cost_estimate`]).
+    pub cost: Option<CostEstimate>,
 }
+
+/// Per-worker slice of the aggregate metrics (one entry per pool worker
+/// in [`ServerMetrics::per_worker`]).
+#[derive(Debug, Clone)]
+pub struct WorkerSummary {
+    pub worker: usize,
+    pub requests: u64,
+    pub batches: u64,
+    pub failed_batches: u64,
+    pub exec_time: Duration,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+/// Per-worker bound on retained latency samples: beyond this, samples
+/// are reservoir-sampled (Algorithm R) so a long-running server keeps
+/// O(1) memory while the percentiles stay statistically faithful.
+const LATENCY_RESERVOIR: usize = 65_536;
 
 /// Server-side aggregate metrics.
 #[derive(Debug, Clone, Default)]
@@ -61,8 +117,17 @@ pub struct ServerMetrics {
     pub batches: u64,
     pub padded_slots: u64,
     pub failed_batches: u64,
+    /// Submissions load-shed by admission control (queue full).
+    pub rejected: u64,
     pub exec_time: Duration,
+    /// Batch-fill histogram: `batch_fill[i]` = batches that carried
+    /// exactly `i + 1` real requests.
+    pub batch_fill: Vec<u64>,
+    /// Per-worker breakdown (empty until `stop()` merges the pool).
+    pub per_worker: Vec<WorkerSummary>,
+    /// Bounded latency reservoir (≤ [`LATENCY_RESERVOIR`] per worker).
     latencies_us: Vec<f64>,
+    latency_samples_seen: u64,
 }
 
 impl ServerMetrics {
@@ -73,164 +138,332 @@ impl ServerMetrics {
         percentile(&mut self.latencies_us, p)
     }
 
+    fn record_latency(&mut self, us: f64, rng: &mut crate::util::rng::Rng) {
+        self.latency_samples_seen += 1;
+        if self.latencies_us.len() < LATENCY_RESERVOIR {
+            self.latencies_us.push(us);
+        } else {
+            // Algorithm R: keep each of the `seen` samples with equal
+            // probability.
+            let j = (rng.next_u64() % self.latency_samples_seen) as usize;
+            if j < LATENCY_RESERVOIR {
+                self.latencies_us[j] = us;
+            }
+        }
+    }
+
     pub fn mean_batch_occupancy(&self) -> f64 {
         if self.batches == 0 {
             return 0.0;
         }
         self.requests as f64 / self.batches as f64
     }
-}
 
-/// Handle for submitting requests to a running server.
-#[derive(Clone)]
-pub struct ServerHandle {
-    tx: mpsc::Sender<Msg>,
-    input_elems: usize,
-}
-
-impl ServerHandle {
-    /// Submit one image; blocks until the reply arrives.
-    pub fn infer(&self, input: Vec<f32>) -> anyhow::Result<Reply> {
-        anyhow::ensure!(
-            input.len() == self.input_elems,
-            "input has {} elems, expected {}",
-            input.len(),
-            self.input_elems
-        );
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Req(Request {
-                input,
-                enqueued: Instant::now(),
-                reply: reply_tx,
-            }))
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("request dropped (batch failed or server stopped)"))
+    /// Fold one worker's local metrics into the aggregate.
+    fn absorb(&mut self, worker: usize, mut m: ServerMetrics) {
+        let p50 = m.latency_percentile_us(50.0);
+        let p99 = m.latency_percentile_us(99.0);
+        self.per_worker.push(WorkerSummary {
+            worker,
+            requests: m.requests,
+            batches: m.batches,
+            failed_batches: m.failed_batches,
+            exec_time: m.exec_time,
+            p50_us: p50,
+            p99_us: p99,
+        });
+        self.requests += m.requests;
+        self.batches += m.batches;
+        self.padded_slots += m.padded_slots;
+        self.failed_batches += m.failed_batches;
+        self.exec_time += m.exec_time;
+        if self.batch_fill.len() < m.batch_fill.len() {
+            self.batch_fill.resize(m.batch_fill.len(), 0);
+        }
+        for (i, c) in m.batch_fill.iter().enumerate() {
+            self.batch_fill[i] += c;
+        }
+        self.latencies_us.append(&mut m.latencies_us);
+        self.latency_samples_seen += m.latency_samples_seen;
     }
 }
 
-/// Batching policy.
+/// Batching/pool policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
     /// Max time the first request of a batch waits for company.
     pub max_wait: Duration,
+    /// Worker threads in the pool (each owns one executor).
+    pub workers: usize,
+    /// Admission-control bound: pending requests beyond this are
+    /// load-shed with [`ServeError::QueueFull`].
+    pub queue_cap: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
         Self {
             max_wait: Duration::from_millis(2),
+            workers: 1,
+            queue_cap: 1024,
         }
     }
 }
 
-/// The inference server: owns the executor on a dedicated thread.
+/// The shared dynamic batcher: a bounded queue all pool workers pull
+/// from, plus the lifecycle flag for graceful drain.
+struct Shared {
+    state: Mutex<QueueState>,
+    notify: Condvar,
+    capacity: usize,
+    rejected: AtomicU64,
+}
+
+struct QueueState {
+    queue: VecDeque<Request>,
+    /// `false` once shutdown begins: no new submissions, workers drain.
+    open: bool,
+}
+
+impl Shared {
+    fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                open: true,
+            }),
+            notify: Condvar::new(),
+            capacity: capacity.max(1),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    fn submit(&self, req: Request) -> Result<(), ServeError> {
+        {
+            let mut st = self.state.lock().unwrap();
+            if !st.open {
+                return Err(ServeError::Stopped);
+            }
+            if st.queue.len() >= self.capacity {
+                drop(st);
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(ServeError::QueueFull {
+                    capacity: self.capacity,
+                });
+            }
+            st.queue.push_back(req);
+        }
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Pop one request, blocking until one arrives. Returns `None` only
+    /// when the queue is closed *and* fully drained.
+    fn pop_blocking(&self) -> Option<Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.queue.pop_front() {
+                return Some(r);
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.notify.wait(st).unwrap();
+        }
+    }
+
+    /// Pop one request, waiting at most until `deadline`. During drain
+    /// (queue closed) an empty queue returns immediately so partial
+    /// batches flush without waiting out the deadline.
+    fn pop_until(&self, deadline: Instant) -> Option<Request> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.queue.pop_front() {
+                return Some(r);
+            }
+            if !st.open {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.notify.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().open = false;
+        self.notify.notify_all();
+    }
+}
+
+/// A reply that has been submitted but not yet waited on (open-loop
+/// clients submit many, then harvest).
+pub struct PendingReply {
+    rx: mpsc::Receiver<Reply>,
+}
+
+impl PendingReply {
+    /// Block until the reply arrives. Errors if the batch failed or the
+    /// server stopped before this request was served.
+    pub fn wait(self) -> Result<Reply, ServeError> {
+        self.rx.recv().map_err(|_| ServeError::Dropped)
+    }
+}
+
+/// Handle for submitting requests to a running server.
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    input_elems: usize,
+}
+
+impl ServerHandle {
+    /// Enqueue one image without blocking on the result (open-loop
+    /// traffic). Load-sheds with [`ServeError::QueueFull`] when the
+    /// bounded queue is at capacity.
+    pub fn submit(&self, input: Vec<f32>) -> Result<PendingReply, ServeError> {
+        if input.len() != self.input_elems {
+            return Err(ServeError::BadInput {
+                got: input.len(),
+                want: self.input_elems,
+            });
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.shared.submit(Request {
+            input,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        })?;
+        Ok(PendingReply { rx: reply_rx })
+    }
+
+    /// Submit one image; blocks until the reply arrives (closed-loop
+    /// traffic).
+    pub fn infer(&self, input: Vec<f32>) -> Result<Reply, ServeError> {
+        self.submit(input)?.wait()
+    }
+}
+
+/// The inference server: a pool of workers, each owning an executor,
+/// pulling from the shared dynamic batcher.
 pub struct InferenceServer {
+    shared: Arc<Shared>,
     handle: ServerHandle,
-    worker: Option<std::thread::JoinHandle<ServerMetrics>>,
+    workers: Vec<std::thread::JoinHandle<ServerMetrics>>,
 }
 
 impl InferenceServer {
-    /// Start a server whose executor is built on the worker thread by
-    /// `factory` (PJRT executables are not `Send`). Fails if the factory
-    /// fails.
+    /// Start a pool of `policy.workers` workers. `factory(i)` builds
+    /// worker `i`'s executor *on that worker's thread* (PJRT executables
+    /// are not `Send`; pure-rust executors are usually a cheap `clone`).
+    /// Fails if any factory fails or workers disagree on input size.
+    pub fn start_pool<E, F>(factory: F, policy: BatchPolicy) -> anyhow::Result<Self>
+    where
+        E: BatchExecutor + 'static,
+        F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
+    {
+        let factory = Arc::new(factory);
+        let shared = Arc::new(Shared::new(policy.queue_cap));
+        let n = policy.workers.max(1);
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<usize>>();
+        let mut workers = Vec::with_capacity(n);
+        for w in 0..n {
+            let factory = Arc::clone(&factory);
+            let shared = Arc::clone(&shared);
+            let ready_tx = ready_tx.clone();
+            workers.push(std::thread::spawn(move || {
+                let executor = match factory(w) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(e.input_elems()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return ServerMetrics::default();
+                    }
+                };
+                // Release the ready channel before serving: if a sibling
+                // worker's factory panics (sender dropped without a
+                // message), the startup loop below must see the channel
+                // disconnect rather than block on this worker's clone
+                // for its entire serving lifetime.
+                drop(ready_tx);
+                worker_loop(w, executor, &shared, policy)
+            }));
+        }
+        drop(ready_tx);
+
+        let mut input_elems: Option<usize> = None;
+        let mut startup_err: Option<anyhow::Error> = None;
+        for _ in 0..n {
+            match ready_rx.recv() {
+                Ok(Ok(ie)) => match input_elems {
+                    None => input_elems = Some(ie),
+                    Some(prev) if prev != ie => {
+                        startup_err = Some(anyhow::anyhow!(
+                            "pool executors disagree on input size ({prev} vs {ie})"
+                        ));
+                    }
+                    Some(_) => {}
+                },
+                Ok(Err(e)) => startup_err = Some(e),
+                Err(_) => {
+                    startup_err =
+                        Some(anyhow::anyhow!("server worker died during startup"))
+                }
+            }
+        }
+        if let Some(e) = startup_err {
+            shared.close();
+            for w in workers {
+                let _ = w.join();
+            }
+            return Err(e);
+        }
+        let input_elems = input_elems.expect("at least one worker");
+        let handle = ServerHandle {
+            shared: Arc::clone(&shared),
+            input_elems,
+        };
+        Ok(Self {
+            shared,
+            handle,
+            workers,
+        })
+    }
+
+    /// Start a single worker whose executor is built on the worker thread
+    /// by `factory` (PJRT executables are not `Send`). Fails if the
+    /// factory fails. `policy.workers` is ignored (forced to 1); use
+    /// [`Self::start_pool`] for multi-worker serving.
     pub fn start_with<E, F>(factory: F, policy: BatchPolicy) -> anyhow::Result<Self>
     where
         E: BatchExecutor + 'static,
         F: FnOnce() -> anyhow::Result<E> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<usize>>();
-        let worker = std::thread::spawn(move || {
-            let mut executor = match factory() {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok(e.input_elems()));
-                    e
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return ServerMetrics::default();
-                }
-            };
-            let mut metrics = ServerMetrics::default();
-            let bs = executor.batch_size();
-            let out_elems = executor.output_elems();
-            let in_elems = executor.input_elems();
-            'serve: loop {
-                // Block for the first request of a batch.
-                let first = match rx.recv() {
-                    Ok(Msg::Req(r)) => r,
-                    Ok(Msg::Shutdown) | Err(_) => break,
-                };
-                let deadline = Instant::now() + policy.max_wait;
-                let mut batch = vec![first];
-                let mut shutdown_after = false;
-                while batch.len() < bs {
-                    let now = Instant::now();
-                    if now >= deadline {
-                        break;
-                    }
-                    match rx.recv_timeout(deadline - now) {
-                        Ok(Msg::Req(r)) => batch.push(r),
-                        Ok(Msg::Shutdown) => {
-                            shutdown_after = true;
-                            break;
-                        }
-                        Err(mpsc::RecvTimeoutError::Timeout) => break,
-                        Err(mpsc::RecvTimeoutError::Disconnected) => {
-                            shutdown_after = true;
-                            break;
-                        }
-                    }
-                }
-                // Assemble (pad partial batches with zeros).
-                let mut flat = vec![0f32; bs * in_elems];
-                for (i, r) in batch.iter().enumerate() {
-                    flat[i * in_elems..(i + 1) * in_elems].copy_from_slice(&r.input);
-                }
-                metrics.padded_slots += (bs - batch.len()) as u64;
-                let t0 = Instant::now();
-                match executor.execute(&flat) {
-                    Ok(out) => {
-                        metrics.exec_time += t0.elapsed();
-                        metrics.batches += 1;
-                        for (i, r) in batch.into_iter().enumerate() {
-                            let latency = r.enqueued.elapsed();
-                            metrics.requests += 1;
-                            metrics.latencies_us.push(latency.as_secs_f64() * 1e6);
-                            let _ = r.reply.send(Reply {
-                                logits: out[i * out_elems..(i + 1) * out_elems].to_vec(),
-                                latency,
-                                batch_size: bs,
-                            });
-                        }
-                    }
-                    Err(e) => {
-                        // Fail this batch (reply senders drop → clients
-                        // see an error) but keep serving.
-                        eprintln!("pacim-server: executor error: {e}");
-                        metrics.failed_batches += 1;
-                    }
-                }
-                if shutdown_after {
-                    break 'serve;
-                }
-            }
-            metrics
-        });
-        let input_elems = ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
-        Ok(Self {
-            handle: ServerHandle { tx, input_elems },
-            worker: Some(worker),
-        })
+        let cell = Mutex::new(Some(factory));
+        Self::start_pool(
+            move |_| {
+                let f = cell
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("single-worker factory called exactly once");
+                f()
+            },
+            BatchPolicy {
+                workers: 1,
+                ..policy
+            },
+        )
     }
 
     /// Convenience for executors that are already constructed and `Send`
-    /// (mocks, pure-rust executors).
+    /// (mocks, pure-rust executors). Single worker; use
+    /// [`Self::start_pool`] with a cloning factory for a pool.
     pub fn start<E: BatchExecutor + Send + 'static>(
         executor: E,
         policy: BatchPolicy,
@@ -243,15 +476,97 @@ impl InferenceServer {
         self.handle.clone()
     }
 
-    /// Stop the server (after in-flight work) and collect metrics.
+    /// Stop the server: close the queue to new submissions, drain every
+    /// pending request, join the pool, and return the merged metrics.
     pub fn stop(mut self) -> ServerMetrics {
-        let _ = self.handle.tx.send(Msg::Shutdown);
-        self.worker
-            .take()
-            .expect("server already stopped")
-            .join()
-            .expect("server thread panicked")
+        self.shared.close();
+        let mut total = ServerMetrics::default();
+        for (i, w) in self.workers.drain(..).enumerate() {
+            let m = w.join().expect("server worker panicked");
+            total.absorb(i, m);
+        }
+        total.rejected = self.shared.rejected.load(Ordering::Relaxed);
+        total
     }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        // `stop()` drains `workers`, so this only fires on an abandoned
+        // server (e.g. a panicking test): release the pool so threads
+        // drain and exit instead of blocking forever.
+        self.shared.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One pool worker: pop a batch from the shared queue (first request
+/// blocking, companions until the deadline), pad, execute, reply.
+fn worker_loop<E: BatchExecutor>(
+    worker_id: usize,
+    mut executor: E,
+    shared: &Shared,
+    policy: BatchPolicy,
+) -> ServerMetrics {
+    let bs = executor.batch_size().max(1);
+    let in_elems = executor.input_elems();
+    let out_elems = executor.output_elems();
+    let cost = executor.cost_estimate();
+    let mut metrics = ServerMetrics {
+        batch_fill: vec![0; bs],
+        ..ServerMetrics::default()
+    };
+    // Deterministic per-worker stream for the latency reservoir.
+    let mut rng = crate::util::rng::Rng::new(0xC0FF_EE00 ^ worker_id as u64);
+    while let Some(first) = shared.pop_blocking() {
+        let deadline = Instant::now() + policy.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < bs {
+            match shared.pop_until(deadline) {
+                Some(r) => batch.push(r),
+                None => break,
+            }
+        }
+        // Assemble (pad partial batches with zeros).
+        let mut flat = vec![0f32; bs * in_elems];
+        for (i, r) in batch.iter().enumerate() {
+            flat[i * in_elems..(i + 1) * in_elems].copy_from_slice(&r.input);
+        }
+        let t0 = Instant::now();
+        match executor.execute(&flat, batch.len()) {
+            Ok(out) => {
+                metrics.exec_time += t0.elapsed();
+                metrics.batches += 1;
+                metrics.batch_fill[batch.len() - 1] += 1;
+                // Counted on success only, so the conservation identity
+                // `padded_slots == batches·batch_size − requests` holds
+                // even after failed batches.
+                metrics.padded_slots += (bs - batch.len()) as u64;
+                let occupancy = batch.len();
+                for (i, r) in batch.into_iter().enumerate() {
+                    let latency = r.enqueued.elapsed();
+                    metrics.requests += 1;
+                    metrics.record_latency(latency.as_secs_f64() * 1e6, &mut rng);
+                    let _ = r.reply.send(Reply {
+                        logits: out[i * out_elems..(i + 1) * out_elems].to_vec(),
+                        latency,
+                        batch_size: bs,
+                        occupancy,
+                        cost,
+                    });
+                }
+            }
+            Err(e) => {
+                // Fail this batch (reply senders drop → clients see an
+                // error) but keep serving.
+                eprintln!("pacim-server[{worker_id}]: executor error: {e}");
+                metrics.failed_batches += 1;
+            }
+        }
+    }
+    metrics
 }
 
 #[cfg(test)]
@@ -281,7 +596,7 @@ pub(crate) mod testutil {
             self.out_elems
         }
 
-        fn execute(&mut self, batch: &[f32]) -> anyhow::Result<Vec<f32>> {
+        fn execute(&mut self, batch: &[f32], _occupancy: usize) -> anyhow::Result<Vec<f32>> {
             self.calls += 1;
             if let Some(k) = self.fail_every {
                 if self.calls % k == 0 {
@@ -325,10 +640,14 @@ mod tests {
         let h = server.handle();
         let reply = h.infer(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         assert_eq!(reply.logits, vec![10.0, 11.0, 12.0]);
+        assert_eq!(reply.batch_size, 4);
+        assert_eq!(reply.occupancy, 1);
+        assert!(reply.cost.is_none(), "mock has no cost model");
         let metrics = server.stop();
         assert_eq!(metrics.requests, 1);
         assert_eq!(metrics.batches, 1);
         assert_eq!(metrics.padded_slots, 3);
+        assert_eq!(metrics.batch_fill, vec![1, 0, 0, 0]);
     }
 
     #[test]
@@ -337,6 +656,7 @@ mod tests {
             mock(8),
             BatchPolicy {
                 max_wait: Duration::from_millis(50),
+                ..BatchPolicy::default()
             },
         );
         let h = server.handle();
@@ -362,7 +682,8 @@ mod tests {
     fn wrong_input_size_rejected() {
         let server = InferenceServer::start(mock(2), BatchPolicy::default());
         let h = server.handle();
-        assert!(h.infer(vec![1.0; 3]).is_err());
+        let err = h.infer(vec![1.0; 3]).unwrap_err();
+        assert!(matches!(err, ServeError::BadInput { got: 3, want: 4 }));
         server.stop();
     }
 
@@ -377,7 +698,7 @@ mod tests {
         );
         let h = server.handle();
         let r1 = h.infer(vec![0.0; 4]);
-        assert!(r1.is_err());
+        assert!(matches!(r1, Err(ServeError::Dropped)));
         // Server thread is still alive and accepts further requests
         // (they also fail here since every call fails, but don't hang).
         let r2 = h.infer(vec![1.0; 4]);
@@ -417,5 +738,107 @@ mod tests {
         let p99 = m.latency_percentile_us(99.0);
         assert!(p50 > 0.0);
         assert!(p99 >= p50);
+    }
+
+    #[test]
+    fn pool_roundtrip_and_per_worker_merge() {
+        let server = InferenceServer::start_pool(
+            |_| Ok(mock(2)),
+            BatchPolicy {
+                max_wait: Duration::from_millis(1),
+                workers: 3,
+                queue_cap: 64,
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        let mut joins = Vec::new();
+        for i in 0..24 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                h.infer(vec![i as f32; 4]).unwrap()
+            }));
+        }
+        for (i, j) in joins.into_iter().enumerate() {
+            let r = j.join().unwrap();
+            assert_eq!(r.logits[0], 4.0 * i as f32);
+        }
+        let m = server.stop();
+        assert_eq!(m.requests, 24);
+        assert_eq!(m.per_worker.len(), 3);
+        let worker_reqs: u64 = m.per_worker.iter().map(|w| w.requests).sum();
+        assert_eq!(worker_reqs, m.requests);
+        let worker_batches: u64 = m.per_worker.iter().map(|w| w.batches).sum();
+        assert_eq!(worker_batches, m.batches);
+        // Conservation: fills weighted by occupancy recover the requests,
+        // and the padded slots complete every batch to the compiled size.
+        let filled: u64 = m
+            .batch_fill
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as u64 + 1) * c)
+            .sum();
+        assert_eq!(filled, m.requests);
+        assert_eq!(m.padded_slots, m.batches * 2 - m.requests);
+    }
+
+    #[test]
+    fn queue_full_load_sheds_with_typed_error() {
+        // One worker stuck in a slow batch; capacity 2. Fill the queue,
+        // then the next submission must shed.
+        let server = InferenceServer::start(
+            MockExecutor {
+                delay: Duration::from_millis(200),
+                ..mock(1)
+            },
+            BatchPolicy {
+                max_wait: Duration::from_micros(1),
+                workers: 1,
+                queue_cap: 2,
+            },
+        );
+        let h = server.handle();
+        // First request occupies the worker (popped quickly); give it
+        // time to enter execute().
+        let busy = h.submit(vec![0.0; 4]).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let p1 = h.submit(vec![1.0; 4]).unwrap();
+        let p2 = h.submit(vec![2.0; 4]).unwrap();
+        let shed = h.submit(vec![3.0; 4]);
+        assert!(matches!(shed, Err(ServeError::QueueFull { capacity: 2 })));
+        assert!(busy.wait().is_ok());
+        assert!(p1.wait().is_ok());
+        assert!(p2.wait().is_ok());
+        let m = server.stop();
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.rejected, 1);
+    }
+
+    #[test]
+    fn stop_drains_pending_requests() {
+        let server = InferenceServer::start(
+            MockExecutor {
+                delay: Duration::from_millis(5),
+                ..mock(2)
+            },
+            BatchPolicy {
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                queue_cap: 64,
+            },
+        );
+        let h = server.handle();
+        let pending: Vec<PendingReply> =
+            (0..10).map(|i| h.submit(vec![i as f32; 4]).unwrap()).collect();
+        // Stop immediately: every already-admitted request must still be
+        // answered (graceful drain), and later submissions must fail.
+        let stopper = std::thread::spawn(move || server.stop());
+        for (i, p) in pending.into_iter().enumerate() {
+            let r = p.wait().unwrap();
+            assert_eq!(r.logits[0], 4.0 * i as f32);
+        }
+        let m = stopper.join().unwrap();
+        assert_eq!(m.requests, 10);
+        assert!(matches!(h.infer(vec![0.0; 4]), Err(ServeError::Stopped)));
     }
 }

@@ -7,8 +7,9 @@
 //! - **L3 (this crate)** — the architecture simulator and serving
 //!   coordinator: bit-true D-CiM bank model, PAC computation engine,
 //!   on-die sparsity encoder, memory-hierarchy energy model, integer NN
-//!   engine, scheduler, and a threaded batch-serving loop that executes
-//!   AOT-compiled JAX artifacts through PJRT.
+//!   engine, scheduler, and a multi-worker batch-serving pool that runs
+//!   the PAC engine natively (and, behind the `pjrt` feature,
+//!   AOT-compiled JAX artifacts through PJRT).
 //! - **L2 (python/compile/model.py)** — the quantized CNN compute graph,
 //!   lowered once to HLO text at build time.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels implementing the

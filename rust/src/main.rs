@@ -10,7 +10,12 @@
 //! pacim simulate [--model resnet18|resnet50|vgg16] [--res cifar|imagenet]
 //!                                # schedule a workload, print cycles/energy/traffic
 //! pacim accuracy [--images N] [--dynamic]  # exact vs PAC accuracy on artifacts
-//! pacim serve [--requests N] [--batch-wait-ms T]  # serve the AOT model via PJRT
+//! pacim serve [--requests N] [--clients N] [--workers N] [--batch N]
+//!             [--batch-wait-ms T] [--queue-cap N] [--dynamic] [--exact]
+//!             [--pjrt]           # serve via the PAC-native executor pool
+//!                                # (artifacts when built, synthetic
+//!                                # workload otherwise; --pjrt needs the
+//!                                # `pjrt` feature + artifacts)
 //! ```
 
 use pacim::coordinator::{schedule_model, ScheduleConfig};
@@ -184,19 +189,211 @@ fn accuracy(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn serve(args: &[String]) -> anyhow::Result<()> {
+    if has_flag(args, "--pjrt") {
+        return serve_pjrt(args);
+    }
+    serve_pac(args)
+}
+
+/// Load the trained artifact model + dataset, or fall back to the
+/// deterministic synthetic serving workload when `artifacts/` has not
+/// been built (bare containers, CI).
+fn serving_workload() -> (pacim::nn::Model, Dataset, &'static str) {
+    let load = || -> anyhow::Result<(pacim::nn::Model, Dataset)> {
+        let man = Manifest::load(artifacts_dir())?;
+        let ds = Dataset::load(man.path("dataset")?)?;
+        let store = WeightStore::load(man.path("weights")?)?;
+        let model = tiny_resnet(&store, ds.h, ds.n_classes)?;
+        Ok((model, ds))
+    };
+    match load() {
+        Ok((model, ds)) => (model, ds, "artifacts"),
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); serving the synthetic workload");
+            let (model, ds) = pacim::workload::synthetic_serving_workload(2024, 8, 16, 10, 256)
+                .expect("synthetic workload construction is infallible");
+            (model, ds, "synthetic")
+        }
+    }
+}
+
+/// PAC-native serving: a multi-worker pool of [`pacim::runtime::PacExecutor`]s
+/// behind the shared dynamic batcher — no PJRT, no artifacts required.
+fn serve_pac(args: &[String]) -> anyhow::Result<()> {
+    use pacim::coordinator::{BatchPolicy, InferenceServer};
+    use pacim::runtime::PacExecutor;
+
+    let requests: usize = arg_value(args, "--requests")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(128);
+    let clients: usize = arg_value(args, "--clients")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(8)
+        .max(1);
+    let workers: usize = arg_value(args, "--workers")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2)
+        .max(1);
+    let batch: usize = arg_value(args, "--batch")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(8)
+        .max(1);
+    let wait_ms: u64 = arg_value(args, "--batch-wait-ms")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2);
+    let queue_cap: usize = arg_value(args, "--queue-cap")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1024);
+
+    let (model, ds, source) = serving_workload();
+    let mut cfg = PacConfig::serving();
+    if has_flag(args, "--dynamic") {
+        if has_flag(args, "--exact") {
+            eprintln!("--dynamic has no effect with --exact (fully digital baseline)");
+        }
+        cfg.thresholds = Some(pacim::arch::ThresholdSet::default_cifar());
+    }
+    let exec = if has_flag(args, "--exact") {
+        PacExecutor::exact(model, batch)
+    } else {
+        PacExecutor::new(model, cfg, batch)
+    };
+    let backend = if has_flag(args, "--exact") { "exact" } else { "pac" };
+    println!(
+        "serving {} ({source}, {backend} executor) | {workers} workers | batch {batch} | \
+         {clients} clients | {requests} requests",
+        exec.model().name
+    );
+
+    let server = InferenceServer::start_pool(
+        move |_| Ok(exec.clone()),
+        BatchPolicy {
+            max_wait: std::time::Duration::from_millis(wait_ms),
+            workers,
+            queue_cap,
+        },
+    )?;
+    let h = server.handle();
+    let correct = std::sync::atomic::AtomicUsize::new(0);
+    let served = std::sync::atomic::AtomicUsize::new(0);
+    let shed = std::sync::atomic::AtomicUsize::new(0);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut sample_cost = None;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for _ in 0..clients {
+            let h = h.clone();
+            let (correct, served, shed, next) = (&correct, &served, &shed, &next);
+            let ds = &ds;
+            joins.push(s.spawn(move || {
+                use std::sync::atomic::Ordering::Relaxed;
+                let mut cost = None;
+                loop {
+                    let i = next.fetch_add(1, Relaxed);
+                    if i >= requests {
+                        break cost;
+                    }
+                    let idx = i % ds.n;
+                    let img: Vec<f32> = ds
+                        .image(idx)
+                        .iter()
+                        .map(|&q| ds.params.dequantize(q))
+                        .collect();
+                    // Load-shed / dropped batches are counted, not fatal.
+                    let r = match h.infer(img) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            shed.fetch_add(1, Relaxed);
+                            eprintln!("request {i}: {e}");
+                            continue;
+                        }
+                    };
+                    served.fetch_add(1, Relaxed);
+                    cost = cost.or(r.cost);
+                    let pred = r
+                        .logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    if pred == ds.label(idx) {
+                        correct.fetch_add(1, Relaxed);
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            sample_cost = sample_cost.or(j.join().unwrap());
+        }
+    });
+    let wall = t0.elapsed();
+    let mut metrics = server.stop();
+    let served = served.load(std::sync::atomic::Ordering::Relaxed);
+    let shed = shed.load(std::sync::atomic::Ordering::Relaxed);
+    println!(
+        "served {served}/{requests} requests in {:.1} ms ({shed} shed/dropped)",
+        wall.as_secs_f64() * 1e3
+    );
+    println!(
+        "throughput {:.1} img/s | p50 {:.0} us | p95 {:.0} us | p99 {:.0} us | mean batch {:.2}",
+        served as f64 / wall.as_secs_f64(),
+        metrics.latency_percentile_us(50.0),
+        metrics.latency_percentile_us(95.0),
+        metrics.latency_percentile_us(99.0),
+        metrics.mean_batch_occupancy()
+    );
+    println!(
+        "batches {} | padded slots {} | load-shed {} | failed {}",
+        metrics.batches, metrics.padded_slots, metrics.rejected, metrics.failed_batches
+    );
+    for w in &metrics.per_worker {
+        println!(
+            "  worker {}: {} reqs in {} batches, p50 {:.0} us",
+            w.worker, w.requests, w.batches, w.p50_us
+        );
+    }
+    if let Some(c) = sample_cost {
+        println!(
+            "modeled PACiM cost per image: {} bit-serial cycles, {:.2} uJ",
+            c.cycles,
+            c.total_uj()
+        );
+    }
+    println!(
+        "accuracy {:.2}%{}",
+        correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / served.max(1) as f64 * 100.0,
+        if source == "synthetic" {
+            " (random weights — accuracy is noise; latency/cost are real)"
+        } else {
+            ""
+        }
+    );
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
-fn serve(_args: &[String]) -> anyhow::Result<()> {
+fn serve_pjrt(_args: &[String]) -> anyhow::Result<()> {
     anyhow::bail!(
         "this binary was built without the `pjrt` feature. Enabling it is \
          not just a cargo flag: the feature needs the xla-rs bindings, which \
          are not on crates.io — vendor xla-rs, add it as the `xla` dependency \
          in rust/Cargo.toml, then build with `--features pjrt` (see the \
-         [features] notes in rust/Cargo.toml and README.md)"
+         [features] notes in rust/Cargo.toml and README.md). The default \
+         `pacim serve` (no --pjrt) runs the PAC-native executor instead"
     )
 }
 
 #[cfg(feature = "pjrt")]
-fn serve(args: &[String]) -> anyhow::Result<()> {
+fn serve_pjrt(args: &[String]) -> anyhow::Result<()> {
     use pacim::coordinator::{BatchPolicy, InferenceServer};
     use pacim::runtime::PjrtExecutor;
     let man = Manifest::load(artifacts_dir())?;
@@ -216,6 +413,7 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
         move || PjrtExecutor::load(&hlo, batch, in_elems, classes),
         BatchPolicy {
             max_wait: std::time::Duration::from_millis(wait_ms),
+            ..BatchPolicy::default()
         },
     )?;
     let h = server.handle();

@@ -219,6 +219,22 @@ pub fn run_model_par<B: MacBackend + Sync>(
     )
 }
 
+/// Run a batch of images through the interpreter, fanning the *lanes*
+/// out over rayon (the intra-batch parallelism of the serving path:
+/// each lane is one whole forward pass, so the fan-out threshold is
+/// coarse — see [`Parallelism::coarse`]).
+///
+/// Bit-identical to looping [`run_model`] over `images`: lanes are
+/// independent and collected in lane order.
+pub fn run_model_batch<B: MacBackend + Sync>(
+    model: &Model,
+    backend: &B,
+    images: &[&[u8]],
+    par: &Parallelism,
+) -> Vec<(Vec<f32>, RunStats)> {
+    par.map_collect(images.len(), |lane| run_model(model, backend, images[lane]))
+}
+
 fn run_conv<B: MacBackend + Sync>(
     conv: &ConvLayer,
     act: &[u8],
@@ -338,13 +354,13 @@ pub fn evaluate<B: MacBackend + Sync>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::layers::{testutil, tiny_resnet};
+    use crate::nn::layers::{synthetic, tiny_resnet};
     use crate::util::rng::Rng;
 
     #[test]
     fn exact_engine_runs_tiny_resnet() {
         let mut rng = Rng::new(200);
-        let store = testutil::random_store(&mut rng, 8, 10);
+        let store = synthetic::random_store(&mut rng, 8, 10);
         let model = tiny_resnet(&store, 16, 10).unwrap();
         let backend = exact_backend(&model);
         let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
@@ -357,7 +373,7 @@ mod tests {
     #[test]
     fn deterministic_across_runs() {
         let mut rng = Rng::new(201);
-        let store = testutil::random_store(&mut rng, 8, 10);
+        let store = synthetic::random_store(&mut rng, 8, 10);
         let model = tiny_resnet(&store, 16, 10).unwrap();
         let backend = exact_backend(&model);
         let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
@@ -369,7 +385,7 @@ mod tests {
     #[test]
     fn different_images_different_logits() {
         let mut rng = Rng::new(202);
-        let store = testutil::random_store(&mut rng, 8, 10);
+        let store = synthetic::random_store(&mut rng, 8, 10);
         let model = tiny_resnet(&store, 16, 10).unwrap();
         let backend = exact_backend(&model);
         let img1: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
@@ -384,7 +400,7 @@ mod tests {
         // The rayon pixel fan-out must not change a single bit of the
         // logits or the statistics, at any threshold.
         let mut rng = Rng::new(210);
-        let store = testutil::random_store(&mut rng, 8, 10);
+        let store = synthetic::random_store(&mut rng, 8, 10);
         let model = tiny_resnet(&store, 16, 10).unwrap();
         let backend = exact_backend(&model);
         let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
@@ -406,9 +422,32 @@ mod tests {
     }
 
     #[test]
+    fn batch_run_bit_identical_to_sequential() {
+        let mut rng = Rng::new(211);
+        let store = synthetic::random_store(&mut rng, 8, 10);
+        let model = tiny_resnet(&store, 16, 10).unwrap();
+        let backend = exact_backend(&model);
+        let imgs: Vec<Vec<u8>> = (0..5)
+            .map(|_| (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect())
+            .collect();
+        let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let seq: Vec<(Vec<f32>, RunStats)> = refs
+            .iter()
+            .map(|img| run_model(&model, &backend, img))
+            .collect();
+        for par in [Parallelism::off(), Parallelism::coarse()] {
+            let lanes = run_model_batch(&model, &backend, &refs, &par);
+            for ((a, sa), (b, sb)) in seq.iter().zip(&lanes) {
+                assert_eq!(a, b);
+                assert_eq!(sa.macs, sb.macs);
+            }
+        }
+    }
+
+    #[test]
     fn evaluate_counts_accuracy() {
         let mut rng = Rng::new(203);
-        let store = testutil::random_store(&mut rng, 8, 4);
+        let store = synthetic::random_store(&mut rng, 8, 4);
         let model = tiny_resnet(&store, 16, 4).unwrap();
         let backend = exact_backend(&model);
         let imgs: Vec<Vec<u8>> = (0..8)

@@ -269,13 +269,17 @@ pub fn tiny_vgg(store: &WeightStore, hw: usize, num_classes: usize) -> Result<Mo
     })
 }
 
-#[cfg(test)]
-pub(crate) mod testutil {
-    //! Random-model construction for engine tests (no artifacts needed).
+pub mod synthetic {
+    //! Deterministic random-model construction — engine tests, benches,
+    //! and the artifact-free serving path (`workload::synthetic`) all
+    //! build a `tiny_resnet` from this store when `artifacts/` has not
+    //! been compiled.
     use super::*;
     use crate::quant::{calibrate_minmax, calibrate_weights_symmetric};
     use crate::util::rng::Rng;
 
+    /// A fully-populated `tiny_resnet` weight store with width `c` and
+    /// `classes` output classes, deterministic in the `rng` stream.
     pub fn random_store(rng: &mut Rng, c: usize, classes: usize) -> WeightStore {
         let mut s = WeightStore::default();
         s.insert_f32("input.oq", &[2], &[1.0 / 64.0, 128.0]);
@@ -332,7 +336,7 @@ mod tests {
     #[test]
     fn tiny_resnet_builds_from_store() {
         let mut rng = Rng::new(123);
-        let store = testutil::random_store(&mut rng, 8, 10);
+        let store = synthetic::random_store(&mut rng, 8, 10);
         let m = tiny_resnet(&store, 16, 10).unwrap();
         assert_eq!(m.num_classes, 10);
         assert_eq!(m.in_hw, 16);
@@ -356,7 +360,7 @@ mod tests {
     #[test]
     fn shape_mismatch_detected() {
         let mut rng = Rng::new(124);
-        let mut store = testutil::random_store(&mut rng, 8, 10);
+        let mut store = synthetic::random_store(&mut rng, 8, 10);
         // Corrupt: replace stem weights with the wrong K.
         let e = store.entries.get_mut("stem.w").unwrap();
         e.shape = vec![8, 10];

@@ -68,6 +68,20 @@ impl Default for PacConfig {
     }
 }
 
+impl PacConfig {
+    /// Serving preset: identical numerics to the default config, but the
+    /// per-column fan-out is disabled — the serving executor
+    /// (`runtime::PacExecutor`) parallelizes across batch *lanes*
+    /// instead, and nesting both fan-outs wastes fork/join overhead on
+    /// the small per-request layers.
+    pub fn serving() -> Self {
+        Self {
+            par: Parallelism::off(),
+            ..Self::default()
+        }
+    }
+}
+
 /// Pre-packed per-layer weight state.
 struct PreparedLayer {
     /// Weight bit-planes in one contiguous block, laid out
@@ -285,12 +299,12 @@ pub fn pac_backend(model: &super::layers::Model, config: PacConfig) -> PacBacken
 mod tests {
     use super::*;
     use crate::nn::exec::{exact_backend, run_model};
-    use crate::nn::layers::{testutil, tiny_resnet};
+    use crate::nn::layers::{synthetic, tiny_resnet};
     use crate::util::rng::Rng;
 
     fn setup(seed: u64) -> (crate::nn::layers::Model, Vec<u8>) {
         let mut rng = Rng::new(seed);
-        let store = testutil::random_store(&mut rng, 8, 10);
+        let store = synthetic::random_store(&mut rng, 8, 10);
         let model = tiny_resnet(&store, 16, 10).unwrap();
         let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
         (model, img)

@@ -151,13 +151,13 @@ impl<B: MacBackend> MacBackend for ProfilingBackend<B> {
 mod tests {
     use super::*;
     use crate::nn::exec::{exact_backend, run_model, ExactBackend};
-    use crate::nn::layers::{testutil, tiny_resnet};
+    use crate::nn::layers::{synthetic, tiny_resnet};
     use crate::util::rng::Rng;
 
     #[test]
     fn profiles_every_compute_layer() {
         let mut rng = Rng::new(500);
-        let store = testutil::random_store(&mut rng, 8, 10);
+        let store = synthetic::random_store(&mut rng, 8, 10);
         let model = tiny_resnet(&store, 16, 10).unwrap();
         let mut prof = ProfilingBackend::new(ExactBackend::default());
         // Re-prepare through the wrapper so weights are profiled too.
@@ -195,7 +195,7 @@ mod tests {
     #[test]
     fn profiling_does_not_change_results() {
         let mut rng = Rng::new(501);
-        let store = testutil::random_store(&mut rng, 8, 10);
+        let store = synthetic::random_store(&mut rng, 8, 10);
         let model = tiny_resnet(&store, 16, 10).unwrap();
         let plain = exact_backend(&model);
         let mut prof = ProfilingBackend::new(ExactBackend::default());

@@ -1,24 +1,31 @@
-//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them
-//! on the CPU PJRT client — the only place the `xla` crate is touched.
+//! Execution runtimes for the serving coordinator.
 //!
-//! Interchange format is HLO **text**, not serialized `HloModuleProto`:
-//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
-//! 0.5.1 rejects; the text parser reassigns ids (see
-//! `python/compile/aot.py` and /opt/xla-example/README.md).
+//! Two [`crate::coordinator::server::BatchExecutor`] implementations
+//! live here:
 //!
-//! The executor itself lives behind the `pjrt` cargo feature so the crate
+//! - [`PacExecutor`] — the PAC-native path: quantize → im2col →
+//!   bit-plane encode → hybrid MAC, pure rust, always available. This is
+//!   what `pacim serve` and `examples/loadgen.rs` run.
+//! - `PjrtExecutor` — loads AOT-compiled HLO **text** artifacts and
+//!   executes them on the CPU PJRT client; the only place the `xla`
+//!   crate is touched. Interchange is HLO text, not serialized
+//!   `HloModuleProto`: jax ≥ 0.5 emits protos with 64-bit instruction
+//!   ids that xla_extension 0.5.1 rejects; the text parser reassigns ids
+//!   (see `python/compile/aot.py`).
+//!
+//! The PJRT executor lives behind the `pjrt` cargo feature so the crate
 //! builds, tests, and benches with **no JAX/XLA toolchain installed**
-//! (DESIGN.md §8): artifact manifests, weight stores, and datasets load
-//! unconditionally; only `PjrtExecutor` needs the feature. Without it,
-//! the serving coordinator still runs against any other
-//! [`crate::coordinator::server::BatchExecutor`] implementation.
+//! (DESIGN.md §8): artifact manifests, weight stores, datasets, and the
+//! PAC-native serving path all load unconditionally.
 
 pub mod manifest;
+pub mod pac_executor;
 
 #[cfg(feature = "pjrt")]
 mod pjrt;
 
 pub use manifest::Manifest;
+pub use pac_executor::PacExecutor;
 
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtExecutor;

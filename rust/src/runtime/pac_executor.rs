@@ -1,0 +1,253 @@
+//! The PAC-native batch executor: serving without PJRT.
+//!
+//! [`PacExecutor`] implements [`BatchExecutor`] directly on top of the
+//! bit-true engine (`nn::exec` + `nn::pac_exec`): each request lane is
+//! quantized to u8, run through im2col → bit-plane encoding → hybrid
+//! digital/sparsity MAC, and the float logits are returned. Intra-batch
+//! parallelism fans the lanes out over rayon via [`Parallelism::coarse`]
+//! (one lane = one whole forward pass).
+//!
+//! The executor is `Clone` (the prepared backend — packed weight
+//! bit-planes, sparsity counts — is behind an `Arc`), so a worker pool
+//! shares one weight preparation: `InferenceServer::start_pool(move |_|
+//! Ok(exec.clone()), policy)`.
+//!
+//! Every executor carries the modeled PACiM cost of one image
+//! ([`CostEstimate`], from `coordinator::scheduler`), which the server
+//! attaches to each reply — a load test against this executor reports
+//! software latency *and* modeled silicon cycles/energy side by side.
+
+use crate::coordinator::scheduler::{
+    estimate_image_cost, model_shapes, CostEstimate, ScheduleConfig,
+};
+use crate::coordinator::server::BatchExecutor;
+use crate::energy::EnergyModel;
+use crate::nn::exec::{exact_backend, run_model_batch, ExactBackend, RunStats};
+use crate::nn::layers::Model;
+use crate::nn::pac_exec::{pac_backend, PacBackend, PacConfig};
+use crate::util::Parallelism;
+use std::sync::Arc;
+
+/// The prepared compute engine behind an executor.
+enum Engine {
+    /// Hybrid digital/sparsity PAC computation (the paper's architecture).
+    Pac(PacBackend),
+    /// Exact 8b/8b integer baseline (fully digital D-CiM).
+    Exact(ExactBackend),
+}
+
+impl Engine {
+    fn run_batch(
+        &self,
+        model: &Model,
+        images: &[&[u8]],
+        par: &Parallelism,
+    ) -> Vec<(Vec<f32>, RunStats)> {
+        match self {
+            Engine::Pac(b) => run_model_batch(model, b, images, par),
+            Engine::Exact(b) => run_model_batch(model, b, images, par),
+        }
+    }
+}
+
+/// A pure-rust [`BatchExecutor`] over the PAC engine.
+#[derive(Clone)]
+pub struct PacExecutor {
+    model: Arc<Model>,
+    engine: Arc<Engine>,
+    batch: usize,
+    par: Parallelism,
+    cost: CostEstimate,
+    stats: RunStats,
+}
+
+impl PacExecutor {
+    /// Build a PAC executor for `model` at compiled batch size `batch`.
+    /// Weight bit-planes are packed once, here. The cost annotation
+    /// follows the config: dynamic thresholds report the dynamic
+    /// schedule (avg 12 digital cycles), static the 4-bit default.
+    pub fn new(model: Model, config: PacConfig, batch: usize) -> Self {
+        let sched = if config.thresholds.is_some() {
+            ScheduleConfig::pacim_dynamic()
+        } else {
+            ScheduleConfig::pacim_default()
+        };
+        let engine = Engine::Pac(pac_backend(&model, config));
+        Self::build(model, engine, batch, sched)
+    }
+
+    /// Exact 8b/8b baseline executor (for A/B serving comparisons); its
+    /// cost annotation uses the fully digital schedule.
+    pub fn exact(model: Model, batch: usize) -> Self {
+        let engine = Engine::Exact(exact_backend(&model));
+        Self::build(model, engine, batch, ScheduleConfig::digital_baseline())
+    }
+
+    fn build(model: Model, engine: Engine, batch: usize, sched: ScheduleConfig) -> Self {
+        let shapes = model_shapes(&model);
+        let cost = estimate_image_cost(&shapes, &sched, &EnergyModel::default());
+        Self {
+            model: Arc::new(model),
+            engine: Arc::new(engine),
+            batch: batch.max(1),
+            par: Parallelism::coarse(),
+            cost,
+            stats: RunStats::default(),
+        }
+    }
+
+    /// Override the intra-batch (lane) parallelism policy.
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
+    }
+
+    /// Cumulative engine statistics for everything this executor (clone)
+    /// has served.
+    pub fn stats(&self) -> &RunStats {
+        &self.stats
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+}
+
+impl BatchExecutor for PacExecutor {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn input_elems(&self) -> usize {
+        self.model.in_c * self.model.in_hw * self.model.in_hw
+    }
+
+    fn output_elems(&self) -> usize {
+        self.model.num_classes
+    }
+
+    fn execute(&mut self, batch: &[f32], occupancy: usize) -> anyhow::Result<Vec<f32>> {
+        let in_elems = self.input_elems();
+        anyhow::ensure!(
+            batch.len() == self.batch * in_elems,
+            "batch buffer has {} elems, expected {}",
+            batch.len(),
+            self.batch * in_elems
+        );
+        // No fixed compiled batch here: padded lanes would burn a whole
+        // forward pass each and pollute the stats, so only the occupied
+        // lanes run; the rest of the output is zero-filled (the server
+        // never reads it).
+        let occupancy = occupancy.clamp(1, self.batch);
+        let p = self.model.input_params;
+        let quantized: Vec<u8> = batch[..occupancy * in_elems]
+            .iter()
+            .map(|&x| p.quantize(x))
+            .collect();
+        let images: Vec<&[u8]> = quantized.chunks_exact(in_elems).collect();
+        let lanes = self.engine.run_batch(&self.model, &images, &self.par);
+        let mut out = vec![0f32; self.batch * self.model.num_classes];
+        for (lane, (logits, st)) in lanes.iter().enumerate() {
+            self.stats.merge(st);
+            out[lane * self.model.num_classes..(lane + 1) * self.model.num_classes]
+                .copy_from_slice(logits);
+        }
+        Ok(out)
+    }
+
+    fn cost_estimate(&self) -> Option<CostEstimate> {
+        Some(self.cost)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::exec::run_model;
+    use crate::workload::synthetic_serving_workload;
+
+    fn workload() -> (Model, crate::workload::Dataset) {
+        synthetic_serving_workload(900, 8, 16, 10, 8).unwrap()
+    }
+
+    #[test]
+    fn executor_matches_offline_inference_bit_exactly() {
+        let (model, ds) = workload();
+        let offline: Vec<Vec<f32>> = (0..4)
+            .map(|i| {
+                let backend = pac_backend(&model, PacConfig::serving());
+                run_model(&model, &backend, ds.image(i)).0
+            })
+            .collect();
+        let mut exec = PacExecutor::new(model, PacConfig::serving(), 4);
+        let in_elems = exec.input_elems();
+        let mut flat = vec![0f32; 4 * in_elems];
+        for i in 0..4 {
+            for (j, &q) in ds.image(i).iter().enumerate() {
+                flat[i * in_elems + j] = ds.params.dequantize(q);
+            }
+        }
+        let out = exec.execute(&flat, 4).unwrap();
+        for (i, logits) in offline.iter().enumerate() {
+            assert_eq!(&out[i * 10..(i + 1) * 10], logits.as_slice(), "lane {i}");
+        }
+        assert!(exec.stats().macs > 0);
+    }
+
+    #[test]
+    fn padded_lanes_are_not_computed() {
+        let (model, ds) = workload();
+        let mut exec = PacExecutor::new(model, PacConfig::serving(), 4);
+        let in_elems = exec.input_elems();
+        let mut flat = vec![0f32; 4 * in_elems];
+        for (j, &q) in ds.image(0).iter().enumerate() {
+            flat[j] = ds.params.dequantize(q);
+        }
+        let out = exec.execute(&flat, 1).unwrap();
+        let one_lane_macs = exec.stats().macs;
+        // Stats count exactly one forward pass, not four.
+        assert_eq!(one_lane_macs, exec.model().macs());
+        // Output stays full-size; padded lanes are zero-filled.
+        assert_eq!(out.len(), 4 * 10);
+        assert!(out[10..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn lane_parallelism_is_bit_deterministic() {
+        let (model, ds) = workload();
+        let mk = |par: Parallelism| {
+            PacExecutor::new(model.clone(), PacConfig::serving(), 4).with_parallelism(par)
+        };
+        let mut scalar = mk(Parallelism::off());
+        let mut coarse = mk(Parallelism::coarse());
+        let in_elems = scalar.input_elems();
+        let mut flat = vec![0f32; 4 * in_elems];
+        for i in 0..4 {
+            for (j, &q) in ds.image(i).iter().enumerate() {
+                flat[i * in_elems + j] = ds.params.dequantize(q);
+            }
+        }
+        assert_eq!(
+            scalar.execute(&flat, 4).unwrap(),
+            coarse.execute(&flat, 4).unwrap()
+        );
+    }
+
+    #[test]
+    fn cost_annotation_present_and_cheaper_than_exact() {
+        let (model, _) = workload();
+        let pac = PacExecutor::new(model.clone(), PacConfig::serving(), 2);
+        let exact = PacExecutor::exact(model, 2);
+        let cp = pac.cost_estimate().unwrap();
+        let ce = exact.cost_estimate().unwrap();
+        assert!(cp.cycles < ce.cycles);
+        assert!(cp.total_uj() < ce.total_uj());
+    }
+
+    #[test]
+    fn wrong_batch_buffer_rejected() {
+        let (model, _) = workload();
+        let mut exec = PacExecutor::new(model, PacConfig::serving(), 2);
+        assert!(exec.execute(&[0.0; 7], 1).is_err());
+    }
+}

@@ -85,7 +85,9 @@ impl BatchExecutor for PjrtExecutor {
         self.output_elems
     }
 
-    fn execute(&mut self, batch: &[f32]) -> Result<Vec<f32>> {
+    fn execute(&mut self, batch: &[f32], _occupancy: usize) -> Result<Vec<f32>> {
+        // The compiled executable has a fixed batch; padded lanes run
+        // anyway and are discarded by the server.
         self.run(batch)
     }
 }

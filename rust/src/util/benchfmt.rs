@@ -1,0 +1,212 @@
+//! Machine-readable bench-artifact schemas.
+//!
+//! CI uploads two JSON artifacts per run — `BENCH_hotpath.json`
+//! (`benches/perf_hotpath.rs`) and `BENCH_serve.json`
+//! (`examples/loadgen.rs`) — to track the perf trajectory across PRs.
+//! Regression gating only works if the files stay machine-readable, so
+//! the writers serialize *these* structs and `tests/bench_schema.rs`
+//! re-parses the emitted files with `deny_unknown_fields`: any schema
+//! drift (renamed, added, or removed field) fails the build instead of
+//! silently breaking the trend tooling.
+
+use serde::{Deserialize, Serialize};
+
+/// One scalar-vs-parallel PAC MAC measurement (a `BENCH_hotpath.json`
+/// row).
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct LayerBench {
+    pub layer: String,
+    pub dp_len: usize,
+    pub pairs: usize,
+    pub scalar_macs_per_s: f64,
+    pub parallel_macs_per_s: f64,
+    pub speedup: f64,
+    pub bit_identical: bool,
+}
+
+/// `BENCH_hotpath.json` — hot-path throughput report.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct HotpathReport {
+    /// Always `"perf_hotpath"`.
+    pub bench: String,
+    pub threads: usize,
+    pub quick: bool,
+    pub layers: Vec<LayerBench>,
+}
+
+/// One serving scenario (a `BENCH_serve.json` row): an executor driven
+/// by one traffic pattern.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct ServeScenario {
+    /// `"<executor>-<mode>"`, e.g. `"pac-open"`.
+    pub name: String,
+    /// `"mock"`, `"pac"`, or `"exact"`.
+    pub executor: String,
+    /// `"open"` (Poisson arrivals) or `"closed"` (fixed client loop).
+    pub mode: String,
+    pub workers: usize,
+    pub batch_size: usize,
+    pub queue_cap: usize,
+    /// Offered open-loop rate (req/s); 0 for closed-loop scenarios.
+    pub offered_rps: f64,
+    /// Requests attempted (admitted + load-shed).
+    pub requests: u64,
+    pub completed: u64,
+    /// Submissions load-shed by admission control.
+    pub rejected: u64,
+    /// Batches whose execution failed.
+    pub failed_batches: u64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_batch_occupancy: f64,
+    /// `batch_fill[i]` = batches that carried exactly `i + 1` requests.
+    pub batch_fill: Vec<u64>,
+    /// Modeled PACiM bit-serial cycles per image (0 = no cost model).
+    pub modeled_cycles_per_image: u64,
+    /// Modeled PACiM energy per image, µJ (0 = no cost model).
+    pub modeled_energy_uj_per_image: f64,
+}
+
+/// `BENCH_serve.json` — serving-pipeline report.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct ServeReport {
+    /// Always `"serve"`.
+    pub bench: String,
+    pub quick: bool,
+    pub scenarios: Vec<ServeScenario>,
+}
+
+/// Parse + sanity-check a `BENCH_hotpath.json` payload.
+pub fn validate_hotpath(json: &str) -> Result<HotpathReport, String> {
+    let r: HotpathReport = serde_json::from_str(json).map_err(|e| e.to_string())?;
+    if r.bench != "perf_hotpath" {
+        return Err(format!("bench field is '{}', expected 'perf_hotpath'", r.bench));
+    }
+    if r.layers.is_empty() {
+        return Err("no layer rows".into());
+    }
+    for l in &r.layers {
+        if !(l.scalar_macs_per_s.is_finite() && l.scalar_macs_per_s > 0.0) {
+            return Err(format!("layer '{}' has invalid scalar rate", l.layer));
+        }
+        if !(l.parallel_macs_per_s.is_finite() && l.parallel_macs_per_s > 0.0) {
+            return Err(format!("layer '{}' has invalid parallel rate", l.layer));
+        }
+    }
+    Ok(r)
+}
+
+/// Parse + sanity-check a `BENCH_serve.json` payload.
+pub fn validate_serve(json: &str) -> Result<ServeReport, String> {
+    let r: ServeReport = serde_json::from_str(json).map_err(|e| e.to_string())?;
+    if r.bench != "serve" {
+        return Err(format!("bench field is '{}', expected 'serve'", r.bench));
+    }
+    if r.scenarios.is_empty() {
+        return Err("no scenarios".into());
+    }
+    for s in &r.scenarios {
+        if s.completed + s.rejected > s.requests {
+            return Err(format!(
+                "scenario '{}': completed {} + rejected {} exceed requests {}",
+                s.name, s.completed, s.rejected, s.requests
+            ));
+        }
+        if !(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us) {
+            return Err(format!("scenario '{}': percentiles out of order", s.name));
+        }
+        if s.completed > 0 && !(s.throughput_rps.is_finite() && s.throughput_rps > 0.0) {
+            return Err(format!("scenario '{}': invalid throughput", s.name));
+        }
+        let filled: u64 = s
+            .batch_fill
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as u64 + 1) * c)
+            .sum();
+        if filled != s.completed {
+            return Err(format!(
+                "scenario '{}': batch_fill accounts for {} requests, completed {}",
+                s.name, filled, s.completed
+            ));
+        }
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hotpath_roundtrip() {
+        let r = HotpathReport {
+            bench: "perf_hotpath".into(),
+            threads: 4,
+            quick: true,
+            layers: vec![LayerBench {
+                layer: "layer1.0.conv1".into(),
+                dp_len: 576,
+                pairs: 96,
+                scalar_macs_per_s: 1e8,
+                parallel_macs_per_s: 3e8,
+                speedup: 3.0,
+                bit_identical: true,
+            }],
+        };
+        let json = serde_json::to_string_pretty(&r).unwrap();
+        let back = validate_hotpath(&json).unwrap();
+        assert_eq!(back.layers.len(), 1);
+    }
+
+    #[test]
+    fn serve_roundtrip_and_conservation() {
+        let r = ServeReport {
+            bench: "serve".into(),
+            quick: true,
+            scenarios: vec![ServeScenario {
+                name: "mock-closed".into(),
+                executor: "mock".into(),
+                mode: "closed".into(),
+                workers: 2,
+                batch_size: 4,
+                queue_cap: 64,
+                offered_rps: 0.0,
+                requests: 10,
+                completed: 10,
+                rejected: 0,
+                failed_batches: 0,
+                wall_s: 0.5,
+                throughput_rps: 20.0,
+                p50_us: 100.0,
+                p95_us: 200.0,
+                p99_us: 300.0,
+                mean_batch_occupancy: 2.5,
+                batch_fill: vec![2, 1, 2, 0],
+                modeled_cycles_per_image: 0,
+                modeled_energy_uj_per_image: 0.0,
+            }],
+        };
+        let json = serde_json::to_string(&r).unwrap();
+        validate_serve(&json).unwrap();
+    }
+
+    #[test]
+    fn unknown_field_rejected() {
+        let json = r#"{"bench":"serve","quick":true,"scenarios":[],"extra":1}"#;
+        assert!(validate_serve(json).is_err());
+    }
+
+    #[test]
+    fn missing_field_rejected() {
+        let json = r#"{"bench":"perf_hotpath","threads":4,"layers":[]}"#;
+        assert!(validate_hotpath(json).is_err(), "quick field is required");
+    }
+}

@@ -1,7 +1,8 @@
 //! Shared utilities: deterministic RNG, streaming statistics, a minimal
-//! property-testing harness, and bit-plane packing helpers used by the
-//! hot simulation paths.
+//! property-testing harness, bench-artifact schemas, and bit-plane
+//! packing helpers used by the hot simulation paths.
 
+pub mod benchfmt;
 pub mod check;
 pub mod fastdiv;
 pub mod par;

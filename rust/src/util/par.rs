@@ -35,6 +35,17 @@ impl Parallelism {
         }
     }
 
+    /// Parallel with a coarse-grained threshold: fan out from 2 items.
+    /// For loops whose items are whole forward passes (serving lanes in
+    /// `nn::run_model_batch` / `runtime::PacExecutor`), where per-item
+    /// work dwarfs fork/join overhead even at tiny batch sizes.
+    pub fn coarse() -> Self {
+        Self {
+            enabled: true,
+            min_items: 2,
+        }
+    }
+
     /// Fully scalar execution (the pre-parallel behavior).
     pub fn off() -> Self {
         Self {
@@ -93,6 +104,13 @@ mod tests {
     #[test]
     fn default_is_auto() {
         assert_eq!(Parallelism::default(), Parallelism::auto());
+    }
+
+    #[test]
+    fn coarse_fans_out_tiny_batches() {
+        let p = Parallelism::coarse();
+        assert!(p.should_parallelize(2));
+        assert!(!p.should_parallelize(1));
     }
 
     #[test]

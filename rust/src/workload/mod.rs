@@ -9,6 +9,8 @@
 
 pub mod dataset;
 pub mod shapes;
+pub mod synthetic;
 
 pub use dataset::Dataset;
 pub use shapes::{resnet18, resnet50, vgg16_bn, LayerShape, LayerShapeKind, Resolution};
+pub use synthetic::{synthetic_dataset, synthetic_serving_workload};

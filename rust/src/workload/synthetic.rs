@@ -1,0 +1,95 @@
+//! Artifact-free serving workload: a deterministic random `tiny_resnet`
+//! plus a matching random dataset.
+//!
+//! The serving pipeline must run on a bare container (CI, fresh
+//! checkouts) where `artifacts/` has never been compiled. This module
+//! generates the same *shape* of workload the L2 build path would
+//! produce — a quantized tiny-resnet and a u8 image set agreeing on
+//! input quantization — from nothing but a seed, so `pacim serve` and
+//! `examples/loadgen.rs` always have real requests to answer. Weights
+//! are random (accuracy is meaningless); throughput, latency, batching,
+//! and the modeled cycles/energy are exactly as real as with trained
+//! artifacts, because the compute is identical.
+
+use super::dataset::Dataset;
+use crate::nn::layers::{synthetic::random_store, tiny_resnet, Model};
+use crate::tensor::QuantParams;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Input quantization shared by [`random_store`]'s `input.oq` entry and
+/// the datasets generated here (scale 1/64, zero point 128).
+fn input_params() -> QuantParams {
+    QuantParams::new(1.0 / 64.0, 128)
+}
+
+/// A deterministic random dataset of `n` 3×`hw`×`hw` u8 images with
+/// labels in `[0, n_classes)`.
+pub fn synthetic_dataset(seed: u64, n: usize, hw: usize, n_classes: usize) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let images: Vec<u8> = (0..n * 3 * hw * hw).map(|_| rng.below(256) as u8).collect();
+    let labels: Vec<u8> = (0..n).map(|_| rng.below(n_classes as u32) as u8).collect();
+    Dataset {
+        n,
+        c: 3,
+        h: hw,
+        w: hw,
+        n_classes,
+        params: input_params(),
+        images,
+        labels,
+    }
+}
+
+/// The synthetic serving pair: a `tiny_resnet` of width `width` and a
+/// dataset of `n_images`, agreeing on input quantization. Deterministic
+/// in `seed`.
+pub fn synthetic_serving_workload(
+    seed: u64,
+    width: usize,
+    hw: usize,
+    n_classes: usize,
+    n_images: usize,
+) -> Result<(Model, Dataset)> {
+    let mut rng = Rng::new(seed);
+    let store = random_store(&mut rng, width, n_classes);
+    let model = tiny_resnet(&store, hw, n_classes)?;
+    let ds = synthetic_dataset(seed ^ 0xDA7A_5E7, n_images, hw, n_classes);
+    Ok((model, ds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_is_deterministic_and_consistent() {
+        let (m1, d1) = synthetic_serving_workload(42, 8, 16, 10, 4).unwrap();
+        let (m2, d2) = synthetic_serving_workload(42, 8, 16, 10, 4).unwrap();
+        assert_eq!(m1.name, m2.name);
+        assert_eq!(d1.images, d2.images);
+        assert_eq!(d1.labels, d2.labels);
+        // Model and dataset must agree on input quantization, so clients
+        // can dequantize dataset images into server inputs losslessly.
+        assert_eq!(m1.input_params, d1.params);
+        assert_eq!(m1.in_hw, d1.h);
+        assert_eq!(m1.num_classes, d1.n_classes);
+    }
+
+    #[test]
+    fn dequantize_quantize_roundtrips_exactly() {
+        // The serving executor re-quantizes client floats; with the
+        // power-of-two scale this must be lossless for dataset pixels.
+        let ds = synthetic_dataset(7, 2, 8, 10);
+        for &q in ds.images.iter().take(256) {
+            assert_eq!(ds.params.quantize(ds.params.dequantize(q)), q);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let d1 = synthetic_dataset(1, 2, 8, 10);
+        let d2 = synthetic_dataset(2, 2, 8, 10);
+        assert_ne!(d1.images, d2.images);
+    }
+}

@@ -1,0 +1,133 @@
+//! Schema gate for the CI bench artifacts.
+//!
+//! `BENCH_hotpath.json` (benches/perf_hotpath.rs) and `BENCH_serve.json`
+//! (examples/loadgen.rs) are uploaded by CI to track the perf trajectory;
+//! future regression gating parses them, so they must stay
+//! machine-readable. These tests validate golden samples against the
+//! shared schema (`pacim::util::benchfmt`, `deny_unknown_fields`) and —
+//! when the real files exist (CI runs this after the bench/loadgen jobs,
+//! pointing `PACIM_BENCH_HOTPATH_JSON` / `PACIM_BENCH_SERVE_JSON` at the
+//! produced artifacts) — re-parse the actual emitted JSON.
+
+use pacim::util::benchfmt::{validate_hotpath, validate_serve};
+use std::path::PathBuf;
+
+const HOTPATH_GOLDEN: &str = r#"{
+  "bench": "perf_hotpath",
+  "threads": 4,
+  "quick": true,
+  "layers": [
+    {
+      "layer": "layer1.0.conv1",
+      "dp_len": 576,
+      "pairs": 96,
+      "scalar_macs_per_s": 120000000.0,
+      "parallel_macs_per_s": 360000000.0,
+      "speedup": 3.0,
+      "bit_identical": true
+    }
+  ]
+}"#;
+
+const SERVE_GOLDEN: &str = r#"{
+  "bench": "serve",
+  "quick": true,
+  "scenarios": [
+    {
+      "name": "pac-open",
+      "executor": "pac",
+      "mode": "open",
+      "workers": 2,
+      "batch_size": 8,
+      "queue_cap": 256,
+      "offered_rps": 300.0,
+      "requests": 48,
+      "completed": 46,
+      "rejected": 2,
+      "failed_batches": 0,
+      "wall_s": 0.21,
+      "throughput_rps": 219.0,
+      "p50_us": 2100.0,
+      "p95_us": 5400.0,
+      "p99_us": 7600.0,
+      "mean_batch_occupancy": 6.57,
+      "batch_fill": [0, 0, 1, 0, 1, 1, 0, 4],
+      "modeled_cycles_per_image": 934912,
+      "modeled_energy_uj_per_image": 11.8
+    }
+  ]
+}"#;
+
+#[test]
+fn hotpath_golden_passes() {
+    let r = validate_hotpath(HOTPATH_GOLDEN).unwrap();
+    assert_eq!(r.layers.len(), 1);
+}
+
+#[test]
+fn serve_golden_passes() {
+    let r = validate_serve(SERVE_GOLDEN).unwrap();
+    assert_eq!(r.scenarios[0].executor, "pac");
+}
+
+#[test]
+fn renamed_field_is_schema_drift() {
+    // A writer renaming `speedup` → `speed_up` must fail the gate in
+    // both directions: unknown new name, missing old name.
+    let drifted = HOTPATH_GOLDEN.replace("\"speedup\"", "\"speed_up\"");
+    assert!(validate_hotpath(&drifted).is_err());
+}
+
+#[test]
+fn extra_field_is_schema_drift() {
+    let drifted = SERVE_GOLDEN.replace("\"quick\": true,", "\"quick\": true, \"v\": 2,");
+    assert!(validate_serve(&drifted).is_err());
+}
+
+#[test]
+fn inconsistent_batch_fill_rejected() {
+    // 46 completed but the histogram only accounts for 4 requests.
+    let drifted = SERVE_GOLDEN.replace(
+        "\"batch_fill\": [0, 0, 1, 0, 1, 1, 0, 4]",
+        "\"batch_fill\": [4, 0, 0, 0, 0, 0, 0, 0]",
+    );
+    assert!(validate_serve(&drifted).is_err());
+}
+
+/// Resolve a real artifact path: explicit env var wins; otherwise try
+/// the default filename in CWD (bench binaries run with CWD = rust/).
+fn artifact(env: &str, default_name: &str) -> Option<PathBuf> {
+    if let Ok(p) = std::env::var(env) {
+        return Some(PathBuf::from(p));
+    }
+    let p = PathBuf::from(default_name);
+    p.exists().then_some(p)
+}
+
+#[test]
+fn real_hotpath_artifact_if_present() {
+    match artifact("PACIM_BENCH_HOTPATH_JSON", "BENCH_hotpath.json") {
+        Some(p) => {
+            let json = std::fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("cannot read {}: {e}", p.display()));
+            let r = validate_hotpath(&json)
+                .unwrap_or_else(|e| panic!("{} schema drift: {e}", p.display()));
+            println!("validated {} ({} layers)", p.display(), r.layers.len());
+        }
+        None => println!("no BENCH_hotpath.json present; golden-sample checks only"),
+    }
+}
+
+#[test]
+fn real_serve_artifact_if_present() {
+    match artifact("PACIM_BENCH_SERVE_JSON", "BENCH_serve.json") {
+        Some(p) => {
+            let json = std::fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("cannot read {}: {e}", p.display()));
+            let r = validate_serve(&json)
+                .unwrap_or_else(|e| panic!("{} schema drift: {e}", p.display()));
+            println!("validated {} ({} scenarios)", p.display(), r.scenarios.len());
+        }
+        None => println!("no BENCH_serve.json present; golden-sample checks only"),
+    }
+}

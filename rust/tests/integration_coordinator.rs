@@ -1,11 +1,16 @@
 //! Integration: serving coordinator under load, with failure injection,
-//! and scheduler consistency across workloads (no artifacts needed).
+//! the PAC-native executor pool end-to-end, and scheduler consistency
+//! across workloads (no artifacts needed).
 
 use pacim::coordinator::server::BatchExecutor;
 use pacim::coordinator::{
     schedule_model, BatchPolicy, InferenceServer, ScheduleConfig,
 };
-use pacim::workload::{resnet18, resnet50, vgg16_bn, Resolution};
+use pacim::nn::{pac_backend, run_model, PacConfig};
+use pacim::runtime::PacExecutor;
+use pacim::workload::{
+    resnet18, resnet50, synthetic_serving_workload, vgg16_bn, Resolution,
+};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
@@ -26,7 +31,7 @@ impl BatchExecutor for Mock {
     fn output_elems(&self) -> usize {
         3
     }
-    fn execute(&mut self, batch: &[f32]) -> anyhow::Result<Vec<f32>> {
+    fn execute(&mut self, batch: &[f32], _occupancy: usize) -> anyhow::Result<Vec<f32>> {
         let c = self.calls.fetch_add(1, Ordering::Relaxed);
         if Some(c) == self.fail_on {
             anyhow::bail!("injected");
@@ -46,7 +51,10 @@ impl BatchExecutor for Mock {
 fn sustained_load_many_clients() {
     let server = InferenceServer::start(
         Mock { batch: 8, calls: AtomicUsize::new(0), fail_on: None },
-        BatchPolicy { max_wait: Duration::from_millis(1) },
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        },
     );
     let h = server.handle();
     let total = 200;
@@ -89,6 +97,89 @@ fn failure_injection_mid_stream_recovers() {
     let m = server.stop();
     assert_eq!(m.failed_batches, 1);
     assert_eq!(m.requests, 7);
+}
+
+#[test]
+fn pac_pool_serves_bit_identical_to_offline_inference() {
+    // The whole serving pipeline — f32 submission, re-quantization,
+    // dynamic batching across a 2-worker pool, lane fan-out, padding —
+    // must return exactly the logits offline inference produces. The
+    // input scale is a power of two, so dequantize∘quantize is lossless
+    // and the comparison can be bit-exact.
+    let (model, ds) = synthetic_serving_workload(1234, 8, 16, 10, 16).unwrap();
+    let offline_backend = pac_backend(&model, PacConfig::serving());
+    let offline: Vec<Vec<f32>> = (0..16)
+        .map(|i| run_model(&model, &offline_backend, ds.image(i)).0)
+        .collect();
+
+    let exec = PacExecutor::new(model, PacConfig::serving(), 4);
+    let server = InferenceServer::start_pool(
+        move |_| Ok(exec.clone()),
+        BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            queue_cap: 64,
+        },
+    )
+    .unwrap();
+    let h = server.handle();
+    std::thread::scope(|s| {
+        for i in 0..16 {
+            let h = h.clone();
+            let ds = &ds;
+            let want = &offline[i];
+            s.spawn(move || {
+                let img: Vec<f32> = ds
+                    .image(i)
+                    .iter()
+                    .map(|&q| ds.params.dequantize(q))
+                    .collect();
+                let r = h.infer(img).unwrap();
+                assert_eq!(&r.logits, want, "request {i}");
+                let cost = r.cost.expect("PAC executor annotates cost");
+                assert!(cost.cycles > 0);
+                assert!(cost.total_uj() > 0.0);
+            });
+        }
+    });
+    let m = server.stop();
+    assert_eq!(m.requests, 16);
+    assert_eq!(m.failed_batches, 0);
+    assert_eq!(m.per_worker.len(), 2);
+}
+
+#[test]
+fn exact_executor_serves_and_costs_more_than_pac() {
+    // Same model, same image through both executors: each must produce
+    // finite logits of the right arity, and the exact executor's cost
+    // annotation (fully digital schedule) must exceed PAC's hybrid one.
+    let (model, ds) = synthetic_serving_workload(555, 8, 16, 10, 4).unwrap();
+    let img: Vec<f32> = ds
+        .image(0)
+        .iter()
+        .map(|&q| ds.params.dequantize(q))
+        .collect();
+    let mut replies = Vec::new();
+    for exec in [
+        PacExecutor::new(model.clone(), PacConfig::serving(), 2),
+        PacExecutor::exact(model, 2),
+    ] {
+        let server = InferenceServer::start_pool(
+            move |_| Ok(exec.clone()),
+            BatchPolicy::default(),
+        )
+        .unwrap();
+        let r = server.handle().infer(img.clone()).unwrap();
+        assert_eq!(r.logits.len(), 10);
+        assert!(r.logits.iter().all(|l| l.is_finite()));
+        replies.push(r);
+        server.stop();
+    }
+    // The exact executor's modeled cost is the fully digital schedule —
+    // strictly more cycles than PAC's hybrid schedule.
+    let pac_cost = replies[0].cost.unwrap();
+    let exact_cost = replies[1].cost.unwrap();
+    assert!(pac_cost.cycles < exact_cost.cycles);
 }
 
 #[test]
