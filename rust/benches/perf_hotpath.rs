@@ -18,9 +18,10 @@ use pacim::nn::{MacBackend, PacConfig, RunStats};
 use pacim::pac::{
     hybrid_mac, hybrid_mac_batch, par_hybrid_mac_batch, BitPlanes, ComputeMap, PcuRounding,
 };
-use pacim::tensor::Tensor;
-use pacim::util::benchfmt::{HotpathReport, LayerBench};
+use pacim::tensor::{PackedPatches, Tensor};
+use pacim::util::benchfmt::{BlockedBench, HotpathReport, LayerBench};
 use pacim::util::rng::Rng;
+use pacim::util::Parallelism;
 use pacim::workload::{resnet18, Resolution};
 
 fn quick_mode() -> bool {
@@ -122,14 +123,20 @@ fn main() {
     // only the bit-identity claims above can fail this bench.
     println!("    best speedup {best:.2}x (target: >=2x at >=4 threads)");
 
+    // --- blocked vs per-patch layer GEMM (the headline single-thread row) ---
+    let blocked_benches = blocked_section(quick, &mut rng, &mut checks);
+
     // The report serializes through the shared schema
     // (`pacim::util::benchfmt`); tests/bench_schema.rs re-parses the
-    // emitted file and fails on any drift.
+    // emitted file and fails on any drift, and CI's bench-smoke job
+    // additionally gates `speedup_blocked >= 1.0` on every shape
+    // (PACIM_ENFORCE_BLOCKED_SPEEDUP=1 → `benchfmt::enforce_blocked_floor`).
     let report = HotpathReport {
         bench: "perf_hotpath".into(),
         threads,
         quick,
         layers: layer_benches,
+        blocked: blocked_benches,
     };
     match serde_json::to_string_pretty(&report)
         .map_err(anyhow::Error::from)
@@ -140,21 +147,30 @@ fn main() {
     }
 
     // --- PAC conv backend on a ResNet-ish layer ----------------------------
-    // K=1152 (3x3x128), N=64 channels, 256 patches (16x16 output tile).
+    // K=1152 (3x3x128), N=64 channels, 256 patches (16x16 output tile),
+    // through the blocked layer-level GEMM with warm scratch.
     let k = 1152;
     let n_oc = 64;
     let patches = if quick { 32 } else { 256 };
     let wq: Vec<u8> = (0..n_oc * k).map(|_| rng.below(256) as u8).collect();
     let weight = Tensor::from_vec(&[n_oc, k], wq);
-    let backend = pac_backend_for(&weight);
-    let patch_data: Vec<Vec<u8>> = (0..patches)
-        .map(|_| (0..k).map(|_| rng.below(256) as u8).collect())
-        .collect();
+    let backend = pac_backend_for(&weight, Parallelism::auto());
+    let cols: Vec<u8> = (0..patches * k).map(|_| rng.below(256) as u8).collect();
     let mut stats = RunStats::default();
+    let mut planes = PackedPatches::default();
+    let mut acc = Vec::new();
     let (t, _) = timeit(if quick { 2 } else { 5 }, || {
-        for p in &patch_data {
-            std::hint::black_box(backend.gemm(0, p, 7, &mut stats));
-        }
+        backend.gemm_layer(
+            0,
+            &cols,
+            patches,
+            7,
+            &Parallelism::off(),
+            &mut planes,
+            &mut acc,
+            &mut stats,
+        );
+        std::hint::black_box(acc.last().copied())
     });
     let macs = (patches * n_oc * k) as f64;
     println!(
@@ -232,10 +248,98 @@ fn serving_section(quick: bool, checks: &mut Checks) {
     );
 }
 
-fn pac_backend_for(weight: &Tensor<u8>) -> pacim::nn::PacBackend {
+/// Blocked layer-level GEMM vs the frozen per-patch engine
+/// (`gemm_per_patch_reference`), single-thread, on ResNet-18 (CIFAR)
+/// layer shapes: the stem, a stride-1 3×3 mid layer, a deep stride-1
+/// 3×3 layer, and the wide 1×1 downsample. Rows go into
+/// `BENCH_hotpath.json`; CI gates `speedup_blocked >= 1.0` per shape.
+fn blocked_section(quick: bool, rng: &mut Rng, checks: &mut Checks) -> Vec<BlockedBench> {
+    println!("\n  blocked layer GEMM vs per-patch engine (single-thread):");
+    let shapes = resnet18(Resolution::Cifar, 10);
+    let wanted = ["stem", "layer1.0.conv1", "layer3.0.conv2", "layer4.0.downsample"];
+    let pixel_cap = if quick { 48 } else { 192 };
+    let reps = if quick { 3 } else { 7 };
+    let mut rows = Vec::new();
+    for name in wanted {
+        let shape = shapes
+            .iter()
+            .find(|s| s.name == name)
+            .expect("ResNet-18 layer table changed");
+        let k = shape.dp_len();
+        let out_c = shape.geom.out_c;
+        let pixels = shape.out_pixels().min(pixel_cap);
+        let wq: Vec<u8> = (0..out_c * k).map(|_| rng.below(256) as u8).collect();
+        let weight = Tensor::from_vec(&[out_c, k], wq);
+        // Both engines pinned scalar: this row isolates the kernel
+        // restructuring from the rayon fan-out measured above.
+        let backend = pac_backend_for(&weight, Parallelism::off());
+        let cols: Vec<u8> = (0..pixels * k).map(|_| rng.below(256) as u8).collect();
+
+        // Baseline: the pre-blocked engine — BitPlanes::from_u8 + one
+        // accumulator Vec per patch, scalar columns.
+        let (t_pp, reference) = timeit(reps, || {
+            let mut stats = RunStats::default();
+            let mut acc: Vec<i64> = Vec::new();
+            for pix in 0..pixels {
+                let accs = backend.gemm_per_patch_reference(
+                    0,
+                    &cols[pix * k..(pix + 1) * k],
+                    7,
+                    &mut stats,
+                );
+                acc.extend_from_slice(&accs);
+            }
+            acc
+        });
+
+        // Blocked: one layer-level call, warm scratch, scalar tiles.
+        let mut planes = PackedPatches::default();
+        let mut out: Vec<i64> = Vec::new();
+        let (t_bl, _) = timeit(reps, || {
+            let mut stats = RunStats::default();
+            backend.gemm_layer(
+                0,
+                &cols,
+                pixels,
+                7,
+                &Parallelism::off(),
+                &mut planes,
+                &mut out,
+                &mut stats,
+            );
+        });
+        let identical = out == reference;
+        let macs = (pixels * out_c * k) as f64;
+        let speedup = t_pp / t_bl;
+        println!(
+            "    {name:<20} DP={k:<5} OC={out_c:<4} {pixels}px: per-patch {:>9} blocked {:>9} \
+             speedup {speedup:.2}x",
+            rate(macs, t_pp, "MAC"),
+            rate(macs, t_bl, "MAC"),
+        );
+        checks.claim(
+            identical,
+            &format!("{name}: blocked GEMM bit-identical to per-patch engine"),
+        );
+        rows.push(BlockedBench {
+            shape: name.to_string(),
+            dp_len: k,
+            out_c,
+            pixels,
+            per_patch_macs_per_s: macs / t_pp,
+            blocked_macs_per_s: macs / t_bl,
+            speedup_blocked: speedup,
+            bit_identical: identical,
+        });
+    }
+    rows
+}
+
+fn pac_backend_for(weight: &Tensor<u8>, par: Parallelism) -> pacim::nn::PacBackend {
     let mut b = pacim::nn::PacBackend::new(PacConfig {
         first_layer_exact: false,
         min_dp_len: 0,
+        par,
         ..PacConfig::default()
     });
     b.prepare(0, weight, 128);

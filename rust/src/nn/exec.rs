@@ -12,8 +12,15 @@
 
 use super::layers::{ConvLayer, Model, Op};
 use crate::arch::LevelHistogram;
-use crate::tensor::{im2col, QuantParams, Tensor};
+use crate::tensor::{im2col_into, PackedPatches, QuantParams, Tensor};
 use crate::util::Parallelism;
+
+/// Output pixels per GEMM tile: the unit of rayon fan-out *and* of cache
+/// blocking in the blocked backends (a tile's activation planes stay
+/// L1-hot while each weight row streams through exactly once per tile).
+/// 32 pixels × 4 MSB planes × ≤128 words × 8 B ≤ 128 KiB worst-case,
+/// ≤ 9 KiB on the common CIFAR shapes.
+pub(crate) const TILE_PIXELS: usize = 32;
 
 /// Per-run statistics (accuracy benches aggregate these across images).
 #[derive(Debug, Clone, Default)]
@@ -45,15 +52,50 @@ impl RunStats {
     }
 }
 
+/// Reusable per-run working set of the interpreter: the im2col matrix,
+/// the packed activation planes, and the accumulator slab of the layer
+/// in flight. One scratch serves a whole forward pass (buffers grow to
+/// the largest layer once, then every subsequent layer — and, when the
+/// caller reuses the scratch, every subsequent image — runs with zero
+/// per-pixel heap allocation).
+#[derive(Debug, Clone, Default)]
+pub struct ModelScratch {
+    /// `[pixels][k]` im2col patch matrix of the current conv layer.
+    cols: Vec<u8>,
+    /// `[pixel][oc]` accumulator slab filled by [`MacBackend::gemm_layer`].
+    acc: Vec<i64>,
+    /// Packed activation bit-planes (ignored by non-bit-plane backends).
+    planes: PackedPatches,
+}
+
 /// Backend computing signed accumulators `Σ_k (x−zpx)(w−zpw)` for every
-/// output channel of one im2col patch.
+/// output channel of every output pixel of one compute layer.
 pub trait MacBackend {
     /// Called once per compute layer in program order; `layer_id` indexes
-    /// subsequent `gemm` calls.
+    /// subsequent `gemm_layer` calls.
     fn prepare(&mut self, layer_id: usize, weight: &Tensor<u8>, zpw: i32);
 
-    /// Accumulators for one patch (length = weight rows).
-    fn gemm(&self, layer_id: usize, patch: &[u8], zpx: i32, stats: &mut RunStats) -> Vec<i64>;
+    /// Layer-level blocked GEMM. `cols` is the `[pixels][k]` im2col
+    /// matrix (`k` = DP length; a linear layer is `pixels = 1`); `out`
+    /// is resized to `pixels * out_c` and filled `[pixel][oc]`.
+    ///
+    /// `par` is the driver's tile fan-out policy and `planes` the
+    /// reusable packing scratch (backends that don't bit-plane-pack
+    /// ignore it). Implementations must be **bit-deterministic**: the
+    /// same `cols` produce the same `out` and `stats` for every `par`,
+    /// thread count, and schedule.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_layer(
+        &self,
+        layer_id: usize,
+        cols: &[u8],
+        pixels: usize,
+        zpx: i32,
+        par: &Parallelism,
+        planes: &mut PackedPatches,
+        out: &mut Vec<i64>,
+        stats: &mut RunStats,
+    );
 }
 
 /// Exact integer backend (the 8-bit QAT/PTQ reference).
@@ -69,29 +111,73 @@ impl MacBackend for ExactBackend {
         self.layers.push((weight.clone(), zpw));
     }
 
-    fn gemm(&self, layer_id: usize, patch: &[u8], zpx: i32, stats: &mut RunStats) -> Vec<i64> {
+    fn gemm_layer(
+        &self,
+        layer_id: usize,
+        cols: &[u8],
+        pixels: usize,
+        zpx: i32,
+        par: &Parallelism,
+        _planes: &mut PackedPatches,
+        out: &mut Vec<i64>,
+        stats: &mut RunStats,
+    ) {
         let (w, zpw) = &self.layers[layer_id];
-        let k = patch.len();
         let n = w.shape()[0];
-        debug_assert_eq!(w.shape()[1], k);
-        let wd = w.data();
-        let mut out = Vec::with_capacity(n);
-        for oc in 0..n {
-            let row = &wd[oc * k..(oc + 1) * k];
-            let mut acc = 0i64;
-            for (&x, &wv) in patch.iter().zip(row) {
-                acc += (x as i64 - zpx as i64) * (wv as i64 - *zpw as i64);
-            }
-            out.push(acc);
-        }
-        stats.macs += (n * k) as u64;
-        stats.digital_cycles += (n as u64) * 64; // 8b/8b fully digital
-        out
+        let k = w.shape()[1];
+        debug_assert_eq!(cols.len(), pixels * k);
+        out.clear();
+        out.resize(pixels * n, 0);
+        exact_gemm_tiled(w.data(), *zpw, cols, k, n, pixels, zpx, par, out, stats);
     }
 }
 
+/// Tiled exact integer GEMM (the 8b/8b fully digital D-CiM kernel),
+/// shared by [`ExactBackend`] and the PAC backend's first-layer /
+/// short-DP exact fallback. `out` must already be sized `pixels * n`.
+/// Pixel tiles own disjoint `[pixel][oc]` rows of the slab and the
+/// per-(pixel, oc) arithmetic is identical for any schedule, so the
+/// fan-out is bit-deterministic.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn exact_gemm_tiled(
+    wd: &[u8],
+    zpw: i32,
+    cols: &[u8],
+    k: usize,
+    n: usize,
+    pixels: usize,
+    zpx: i32,
+    par: &Parallelism,
+    out: &mut [i64],
+    stats: &mut RunStats,
+) {
+    debug_assert_eq!(out.len(), pixels * n);
+    stats.macs += (pixels * n * k) as u64;
+    stats.digital_cycles += (pixels * n) as u64 * 64; // 8b/8b fully digital
+    if out.is_empty() {
+        return;
+    }
+    let zpw = zpw as i64;
+    let zpx = zpx as i64;
+    par.map_chunks_mut(out, TILE_PIXELS * n, |t, chunk| {
+        let p0 = t * TILE_PIXELS;
+        for (j, row) in chunk.chunks_exact_mut(n).enumerate() {
+            let patch = &cols[(p0 + j) * k..(p0 + j + 1) * k];
+            for (oc, slot) in row.iter_mut().enumerate() {
+                let wrow = &wd[oc * k..(oc + 1) * k];
+                let mut acc = 0i64;
+                for (&x, &wv) in patch.iter().zip(wrow) {
+                    acc += (x as i64 - zpx) * (wv as i64 - zpw);
+                }
+                *slot = acc;
+            }
+        }
+    });
+}
+
 /// The shared interpreter. Runs `model` on one quantized CHW image with
-/// every layer loop scalar (the deterministic reference path).
+/// the driver scalar (the deterministic reference path; a backend's own
+/// configured parallelism, e.g. `PacConfig::par`, still applies).
 pub fn run_model<B: MacBackend + Sync>(
     model: &Model,
     backend: &B,
@@ -100,18 +186,32 @@ pub fn run_model<B: MacBackend + Sync>(
     run_model_par(model, backend, image, &Parallelism::off())
 }
 
-/// The shared interpreter with an explicit parallelism policy: each
-/// convolution's output pixels (one im2col patch each — the DP columns of
-/// the CiM array) are fanned out over rayon when `par` allows it.
+/// The shared interpreter with an explicit parallelism policy, handed to
+/// each layer's blocked GEMM as the tile fan-out policy (tiles of
+/// `TILE_PIXELS` output pixels — coarse enough to amortize rayon
+/// fork/join, unlike the per-pixel fan-out this replaced).
 ///
-/// Bit-identical to [`run_model`] for any `par`: patches are independent,
-/// per-patch statistics are integer counters merged in pixel order, and
-/// outputs are written by index.
+/// Bit-identical to [`run_model`] for any `par`: tiles own disjoint
+/// output rows, per-tile statistics are integer counters merged in tile
+/// order, and backends are required to be bit-deterministic.
 pub fn run_model_par<B: MacBackend + Sync>(
     model: &Model,
     backend: &B,
     image: &[u8],
     par: &Parallelism,
+) -> (Vec<f32>, RunStats) {
+    run_model_with(model, backend, image, par, &mut ModelScratch::default())
+}
+
+/// [`run_model_par`] with a caller-owned scratch arena: serving workers
+/// and evaluation loops thread one [`ModelScratch`] per worker through
+/// every request so steady-state inference allocates nothing per pixel.
+pub fn run_model_with<B: MacBackend + Sync>(
+    model: &Model,
+    backend: &B,
+    image: &[u8],
+    par: &Parallelism,
+    scratch: &mut ModelScratch,
 ) -> (Vec<f32>, RunStats) {
     assert_eq!(
         image.len(),
@@ -130,7 +230,7 @@ pub fn run_model_par<B: MacBackend + Sync>(
         match op {
             Op::Conv2d(conv) => {
                 let (out, op_params, oshape) =
-                    run_conv(conv, &act, params, layer_id, backend, &mut stats, par);
+                    run_conv(conv, &act, params, layer_id, backend, &mut stats, par, scratch);
                 act = out;
                 params = op_params;
                 shape = oshape;
@@ -139,11 +239,21 @@ pub fn run_model_par<B: MacBackend + Sync>(
             Op::Linear(lin) => {
                 let (c, h, w) = shape;
                 assert_eq!(c * h * w, lin.in_f, "linear input mismatch at {}", lin.name);
-                let accs = backend.gemm(layer_id, &act, params.zero_point, &mut stats);
+                backend.gemm_layer(
+                    layer_id,
+                    &act,
+                    1,
+                    params.zero_point,
+                    par,
+                    &mut scratch.planes,
+                    &mut scratch.acc,
+                    &mut stats,
+                );
                 layer_id += 1;
                 let sx = params.scale;
                 let sw = lin.wparams.scale;
-                let reals: Vec<f32> = accs
+                let reals: Vec<f32> = scratch
+                    .acc
                     .iter()
                     .enumerate()
                     .map(|(i, &a)| a as f32 * sx * sw + lin.bias[i])
@@ -232,9 +342,35 @@ pub fn run_model_batch<B: MacBackend + Sync>(
     images: &[&[u8]],
     par: &Parallelism,
 ) -> Vec<(Vec<f32>, RunStats)> {
-    par.map_collect(images.len(), |lane| run_model(model, backend, images[lane]))
+    let mut scratches = vec![ModelScratch::default(); images.len()];
+    run_model_batch_with(model, backend, images, par, &mut scratches)
 }
 
+/// [`run_model_batch`] with caller-owned per-lane scratch arenas
+/// (`scratches.len() >= images.len()`): the serving executor keeps its
+/// arenas across requests, so a warm worker's whole forward pass runs
+/// out of reused buffers. Each lane's driver is scalar (the lanes *are*
+/// the parallel grain); a backend's configured parallelism still applies.
+pub fn run_model_batch_with<B: MacBackend + Sync>(
+    model: &Model,
+    backend: &B,
+    images: &[&[u8]],
+    par: &Parallelism,
+    scratches: &mut [ModelScratch],
+) -> Vec<(Vec<f32>, RunStats)> {
+    assert!(
+        scratches.len() >= images.len(),
+        "need one scratch per lane: {} < {}",
+        scratches.len(),
+        images.len()
+    );
+    let lanes = images.len();
+    par.map_chunks_mut(&mut scratches[..lanes], 1, |lane, s| {
+        run_model_with(model, backend, images[lane], &Parallelism::off(), &mut s[0])
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_conv<B: MacBackend + Sync>(
     conv: &ConvLayer,
     act: &[u8],
@@ -243,43 +379,31 @@ fn run_conv<B: MacBackend + Sync>(
     backend: &B,
     stats: &mut RunStats,
     par: &Parallelism,
+    scratch: &mut ModelScratch,
 ) -> (Vec<u8>, QuantParams, (usize, usize, usize)) {
     let g = &conv.geom;
-    let cols = im2col(act, g, in_params.zero_point as u8);
-    let k = g.dp_len();
+    im2col_into(act, g, in_params.zero_point as u8, &mut scratch.cols);
     let pixels = g.out_pixels();
+    backend.gemm_layer(
+        layer_id,
+        &scratch.cols,
+        pixels,
+        in_params.zero_point,
+        par,
+        &mut scratch.planes,
+        &mut scratch.acc,
+        stats,
+    );
     let sx = in_params.scale;
     let sw = conv.wparams.scale;
-    // Output is CHW: out[oc][pixel].
+    // Output is CHW: out[oc][pixel]; accumulators arrive [pixel][oc].
     let mut out = vec![0u8; g.out_c * pixels];
-    let requant = |accs: &[i64], pix: usize, out: &mut [u8]| {
+    for pix in 0..pixels {
+        let accs = &scratch.acc[pix * g.out_c..(pix + 1) * g.out_c];
         for (oc, &acc) in accs.iter().enumerate() {
             let real = acc as f32 * sx * sw + conv.bias[oc];
             let real = if conv.relu { real.max(0.0) } else { real };
             out[oc * pixels + pix] = conv.out_params.quantize(real);
-        }
-    };
-    if par.should_parallelize(pixels) {
-        // Work-stolen across output pixels; each task carries its own
-        // RunStats which are merged back in pixel order (integer
-        // counters, so the merge is exact regardless of schedule).
-        let results: Vec<(Vec<i64>, RunStats)> = par.map_collect(pixels, |pix| {
-            let mut local = RunStats::default();
-            let patch = &cols[pix * k..(pix + 1) * k];
-            let accs = backend.gemm(layer_id, patch, in_params.zero_point, &mut local);
-            (accs, local)
-        });
-        for (pix, (accs, local)) in results.into_iter().enumerate() {
-            stats.merge(&local);
-            requant(&accs, pix, &mut out);
-        }
-    } else {
-        // Scalar path streams one patch at a time — no per-pixel
-        // accumulator buffering, stats written directly.
-        for pix in 0..pixels {
-            let patch = &cols[pix * k..(pix + 1) * k];
-            let accs = backend.gemm(layer_id, patch, in_params.zero_point, stats);
-            requant(&accs, pix, &mut out);
         }
     }
     (
@@ -326,12 +450,17 @@ pub fn evaluate<B: MacBackend + Sync>(
         for _ in 0..threads.max(1) {
             s.spawn(|| {
                 let mut local = RunStats::default();
+                // Per-worker scratch arena, reused across every image this
+                // worker claims (steady-state: zero allocation per pixel).
+                let mut scratch = ModelScratch::default();
+                let par = Parallelism::off();
                 loop {
                     let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    let (logits, st) = run_model(model, backend, images[i]);
+                    let (logits, st) =
+                        run_model_with(model, backend, images[i], &par, &mut scratch);
                     local.merge(&st);
                     let pred = logits
                         .iter()
@@ -441,6 +570,26 @@ mod tests {
                 assert_eq!(a, b);
                 assert_eq!(sa.macs, sb.macs);
             }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_images_bit_identical() {
+        // One warm ModelScratch threaded through several images (the
+        // serving worker pattern) must reproduce fresh-scratch runs
+        // exactly — no stale cols/planes/accumulator state may leak.
+        let mut rng = Rng::new(212);
+        let store = synthetic::random_store(&mut rng, 8, 10);
+        let model = tiny_resnet(&store, 16, 10).unwrap();
+        let backend = exact_backend(&model);
+        let mut scratch = ModelScratch::default();
+        for _ in 0..3 {
+            let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
+            let (fresh, sf) = run_model(&model, &backend, &img);
+            let (warm, sw) =
+                run_model_with(&model, &backend, &img, &Parallelism::off(), &mut scratch);
+            assert_eq!(fresh, warm);
+            assert_eq!(sf.macs, sw.macs);
         }
     }
 

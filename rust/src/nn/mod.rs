@@ -16,8 +16,8 @@ pub mod profiler;
 pub mod weights;
 
 pub use exec::{
-    evaluate, exact_backend, run_model, run_model_batch, run_model_par, ExactBackend,
-    MacBackend, RunStats,
+    evaluate, exact_backend, run_model, run_model_batch, run_model_batch_with, run_model_par,
+    run_model_with, ExactBackend, MacBackend, ModelScratch, RunStats,
 };
 pub use layers::{tiny_resnet, tiny_vgg, ConvLayer, LinearLayer, Model, Op};
 pub use pac_exec::{pac_backend, PacBackend, PacConfig};

@@ -10,19 +10,29 @@
 //! Implementation notes (the "fast path" of DESIGN.md §9-L3):
 //! - weight bit-planes are packed into u64 words once per layer
 //!   (weight-stationary, like the PCU register file);
+//! - activations are packed once per **layer** too: the blocked GEMM
+//!   ([`MacBackend::gemm_layer`]) lowers the whole im2col matrix into a
+//!   contiguous `[pixel][p][word]` slab (`tensor::PackedPatches`), then
+//!   sweeps it in tiles of `TILE_PIXELS` pixels × all weight columns —
+//!   each weight row is loaded exactly once per tile and each inner
+//!   word-pass feeds two pixels' popcount lanes. The per-patch engine
+//!   this replaced re-ran `BitPlanes::from_u8` per output pixel and
+//!   allocated a fresh accumulator `Vec` per patch; it survives verbatim
+//!   as [`PacBackend::gemm_per_patch_reference`], the baseline the bench
+//!   harness and the property tests hold the blocked kernel against;
 //! - a digital cycle is a word-AND + popcount — the software analogue of
 //!   the 256-input adder tree;
 //! - the activation element sum for the zero-point correction is
 //!   reconstructed from the sparsity counts (`Σ_p 2^p·Sx[p]`), never from
 //!   the discarded LSB bits — faithfully mirroring the architecture.
 
-use super::exec::{MacBackend, RunStats};
+use super::exec::{exact_gemm_tiled, MacBackend, RunStats, TILE_PIXELS};
 use crate::arch::bank_logic::{classify, spec_normalized, ThresholdSet};
 use crate::pac::compute_map::DynamicLevel;
 use crate::pac::mac::sparsity_domain_sum_fast;
 use crate::pac::sparsity::BitPlanes;
 use crate::pac::{zero_point_correct, ComputeMap, PcuRounding};
-use crate::tensor::Tensor;
+use crate::tensor::{PackedPatches, Tensor};
 use crate::util::and_popcount;
 use crate::util::fastdiv::FastDiv;
 use crate::util::Parallelism;
@@ -49,9 +59,11 @@ pub struct PacConfig {
     /// constraint from the negative side (accuracy collapses exactly
     /// where Fig. 3(c) predicts the RMSE exceeds competitors').
     pub min_dp_len: usize,
-    /// Fan the per-output-channel (DP column) loop of `gemm` out over
-    /// rayon. Bit-deterministic — columns are independent and collected
-    /// in order — so this only changes speed, never results.
+    /// The backend's own tile fan-out policy, used whenever the driver
+    /// runs scalar (`run_model`); an enabled driver policy takes
+    /// precedence (`Parallelism::or`). Bit-deterministic either way —
+    /// tiles are independent and collected in order — so this only
+    /// changes speed, never results.
     pub par: Parallelism,
 }
 
@@ -70,7 +82,7 @@ impl Default for PacConfig {
 
 impl PacConfig {
     /// Serving preset: identical numerics to the default config, but the
-    /// per-column fan-out is disabled — the serving executor
+    /// per-tile fan-out is disabled — the serving executor
     /// (`runtime::PacExecutor`) parallelizes across batch *lanes*
     /// instead, and nesting both fan-outs wastes fork/join overhead on
     /// the small per-request layers.
@@ -108,6 +120,9 @@ pub struct PacBackend {
     layers: Vec<PreparedLayer>,
     /// Pre-expanded digital (p,q) sets per dynamic level, and the base map.
     level_maps: [ComputeMap; 4],
+    /// `digital_set()` of each level map, expanded once so the per-pixel
+    /// classification inside the tile loop allocates nothing.
+    level_sets: [Vec<(usize, usize)>; 4],
 }
 
 impl PacBackend {
@@ -118,63 +133,46 @@ impl PacBackend {
             DynamicLevel::Cycles14.map(),
             DynamicLevel::Cycles16.map(),
         ];
+        let level_sets = [
+            level_maps[0].digital_set(),
+            level_maps[1].digital_set(),
+            level_maps[2].digital_set(),
+            level_maps[3].digital_set(),
+        ];
         Self {
             config,
             layers: Vec::new(),
             level_maps,
+            level_sets,
+        }
+    }
+
+    fn level_index(level: DynamicLevel) -> usize {
+        match level {
+            DynamicLevel::Cycles10 => 0,
+            DynamicLevel::Cycles12 => 1,
+            DynamicLevel::Cycles14 => 2,
+            DynamicLevel::Cycles16 => 3,
         }
     }
 
     fn level_map(&self, level: DynamicLevel) -> &ComputeMap {
-        match level {
-            DynamicLevel::Cycles10 => &self.level_maps[0],
-            DynamicLevel::Cycles12 => &self.level_maps[1],
-            DynamicLevel::Cycles14 => &self.level_maps[2],
-            DynamicLevel::Cycles16 => &self.level_maps[3],
-        }
-    }
-}
-
-impl MacBackend for PacBackend {
-    fn prepare(&mut self, layer_id: usize, weight: &Tensor<u8>, zpw: i32) {
-        assert_eq!(layer_id, self.layers.len(), "layers must prepare in order");
-        let n = weight.shape()[0];
-        let k = weight.shape()[1];
-        let words = crate::util::words_for(k);
-        let wd = weight.data();
-        let mut planes = vec![0u64; n * 8 * words];
-        let mut sw = Vec::with_capacity(n);
-        let mut w_sums = Vec::with_capacity(n);
-        for oc in 0..n {
-            let row = &wd[oc * k..(oc + 1) * k];
-            let bp = BitPlanes::from_u8(row);
-            sw.push(bp.pop);
-            w_sums.push(row.iter().map(|&v| v as i64).sum());
-            for q in 0..8 {
-                let off = (oc * 8 + q) * words;
-                planes[off..off + words].copy_from_slice(&bp.planes[q]);
-            }
-        }
-        let exact = if (self.config.first_layer_exact && layer_id == 0)
-            || k < self.config.min_dp_len
-        {
-            Some((weight.clone(), zpw))
-        } else {
-            None
-        };
-        self.layers.push(PreparedLayer {
-            planes,
-            words,
-            sw,
-            w_sums,
-            zpw,
-            k,
-            div: FastDiv::new(k as u64),
-            exact,
-        });
+        &self.level_maps[Self::level_index(level)]
     }
 
-    fn gemm(&self, layer_id: usize, patch: &[u8], zpx: i32, stats: &mut RunStats) -> Vec<i64> {
+    /// The pre-blocked per-patch engine, kept **verbatim** as the
+    /// baseline: one `BitPlanes::from_u8` + one accumulator `Vec` per
+    /// patch, columns fanned out per `config.par`. `benches/perf_hotpath`
+    /// benchmarks the blocked GEMM against this and CI gates the ratio;
+    /// `tests/proptests.rs` asserts end-to-end bit-identity between the
+    /// two engines.
+    pub fn gemm_per_patch_reference(
+        &self,
+        layer_id: usize,
+        patch: &[u8],
+        zpx: i32,
+        stats: &mut RunStats,
+    ) -> Vec<i64> {
         let layer = &self.layers[layer_id];
         let k = layer.k;
         debug_assert_eq!(patch.len(), k);
@@ -217,15 +215,8 @@ impl MacBackend for PacBackend {
         let sum_x = xp.element_sum() as i64;
 
         let words = layer.words;
-        // §Perf: the static operand-based 4x4 map (the overwhelmingly
-        // common case) gets a fused kernel: for each activation MSB plane
-        // the four weight MSB planes are reduced in one pass over the
-        // words, reloading the x word once instead of four times.
         let is_static_4x4 = digital_set.len() == 16
             && digital_set.iter().all(|&(p, q)| p >= 4 && q >= 4);
-        // One DP column per output channel — independent work items,
-        // work-stolen across the pool when the layer is wide enough
-        // (deterministic: pure integer math, collected in column order).
         let column = |oc: usize| -> i64 {
             let ocbase = oc * 8 * words;
             let mut raw = 0i64;
@@ -271,6 +262,353 @@ impl MacBackend for PacBackend {
         stats.digital_cycles += dc * n as u64;
         stats.pcu_ops += (64 - dc) * n as u64;
         out
+    }
+
+    /// Dynamic-threshold tile body: classify **per pixel inside the tile
+    /// loop** (§5 speculation), then run that pixel's digital set and
+    /// epilogue. The 16-cycle level *is* the static 4×4 block, so those
+    /// pixels take the fused kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn tile_dynamic(
+        &self,
+        layer: &PreparedLayer,
+        x: &PackedPatches,
+        th: &ThresholdSet,
+        p0: usize,
+        pt: usize,
+        zpx: i32,
+        chunk: &mut [i64],
+        local: &mut RunStats,
+    ) {
+        let n = layer.sw.len();
+        let k = layer.k;
+        let words = layer.words;
+        let pstride = 8 * words;
+        let xplanes = x.planes();
+        for j in 0..pt {
+            let pix = p0 + j;
+            let pop = x.pop(pix);
+            let spec = spec_normalized(pop, k as u32);
+            let level = classify(spec, th);
+            local.levels.record(level);
+            let idx = Self::level_index(level);
+            let map = &self.level_maps[idx];
+            let set = &self.level_sets[idx];
+            let row = &mut chunk[j * n..(j + 1) * n];
+            if words > 0 {
+                let xp = &xplanes[pix * pstride..(pix + 1) * pstride];
+                if level == DynamicLevel::Cycles16 {
+                    for (oc, slot) in row.iter_mut().enumerate() {
+                        let wp = &layer.planes[oc * pstride..(oc + 1) * pstride];
+                        *slot = pixel_digital_4x4(xp, wp, words);
+                    }
+                } else {
+                    for (oc, slot) in row.iter_mut().enumerate() {
+                        let wp = &layer.planes[oc * pstride..(oc + 1) * pstride];
+                        let mut raw = 0i64;
+                        for &(p, q) in set {
+                            let dp = and_popcount(
+                                &xp[p * words..(p + 1) * words],
+                                &wp[q * words..(q + 1) * words],
+                            );
+                            raw += (dp as i64) << (p + q);
+                        }
+                        *slot = raw;
+                    }
+                }
+            }
+            let sum_x = x.element_sum(pix);
+            for (oc, slot) in row.iter_mut().enumerate() {
+                let raw = *slot
+                    + sparsity_domain_sum_fast(
+                        pop,
+                        &layer.sw[oc],
+                        &layer.div,
+                        map,
+                        self.config.rounding,
+                    );
+                *slot = zero_point_correct(raw, sum_x, layer.w_sums[oc], k as i64, zpx, layer.zpw);
+            }
+            let dc = set.len() as u64;
+            local.digital_cycles += dc * n as u64;
+            local.pcu_ops += (64 - dc) * n as u64;
+        }
+    }
+}
+
+/// Fused single-pixel static-4×4 digital kernel: the four weight MSB
+/// planes reduced in one pass per activation MSB plane (the activation
+/// word is loaded once per four AND-popcounts).
+fn pixel_digital_4x4(xp: &[u64], wp: &[u64], words: usize) -> i64 {
+    let w4 = &wp[4 * words..5 * words];
+    let w5 = &wp[5 * words..6 * words];
+    let w6 = &wp[6 * words..7 * words];
+    let w7 = &wp[7 * words..8 * words];
+    let mut raw = 0i64;
+    for p in 4..8 {
+        let x0 = &xp[p * words..(p + 1) * words];
+        let (mut c4, mut c5, mut c6, mut c7) = (0u32, 0u32, 0u32, 0u32);
+        for i in 0..words {
+            let xv = x0[i];
+            c4 += (xv & w4[i]).count_ones();
+            c5 += (xv & w5[i]).count_ones();
+            c6 += (xv & w6[i]).count_ones();
+            c7 += (xv & w7[i]).count_ones();
+        }
+        raw += ((c4 as i64) << (p + 4))
+            + ((c5 as i64) << (p + 5))
+            + ((c6 as i64) << (p + 6))
+            + ((c7 as i64) << (p + 7));
+    }
+    raw
+}
+
+/// Static-4×4 digital kernel over one tile: weight-column outer loop
+/// (each weight row streams through the tile exactly once, the tile's
+/// activation planes stay L1-hot), pixel-**pair** inner loop (each
+/// weight-word load feeds two pixels' popcount lanes — the register
+/// tiling that generalizes the old single-pixel fused kernel).
+fn tile_digital_4x4(
+    layer: &PreparedLayer,
+    x: &PackedPatches,
+    p0: usize,
+    pt: usize,
+    chunk: &mut [i64],
+) {
+    let n = layer.sw.len();
+    let words = layer.words;
+    if words == 0 {
+        return;
+    }
+    let pstride = 8 * words;
+    let xplanes = x.planes();
+    for oc in 0..n {
+        let wp = &layer.planes[oc * pstride..(oc + 1) * pstride];
+        let w4 = &wp[4 * words..5 * words];
+        let w5 = &wp[5 * words..6 * words];
+        let w6 = &wp[6 * words..7 * words];
+        let w7 = &wp[7 * words..8 * words];
+        let mut j = 0;
+        while j + 2 <= pt {
+            let xa = &xplanes[(p0 + j) * pstride..(p0 + j + 1) * pstride];
+            let xb = &xplanes[(p0 + j + 1) * pstride..(p0 + j + 2) * pstride];
+            let (mut ra, mut rb) = (0i64, 0i64);
+            for p in 4..8 {
+                let x0 = &xa[p * words..(p + 1) * words];
+                let x1 = &xb[p * words..(p + 1) * words];
+                let (mut a4, mut a5, mut a6, mut a7) = (0u32, 0u32, 0u32, 0u32);
+                let (mut b4, mut b5, mut b6, mut b7) = (0u32, 0u32, 0u32, 0u32);
+                for i in 0..words {
+                    let (wv4, wv5, wv6, wv7) = (w4[i], w5[i], w6[i], w7[i]);
+                    let xv0 = x0[i];
+                    let xv1 = x1[i];
+                    a4 += (xv0 & wv4).count_ones();
+                    b4 += (xv1 & wv4).count_ones();
+                    a5 += (xv0 & wv5).count_ones();
+                    b5 += (xv1 & wv5).count_ones();
+                    a6 += (xv0 & wv6).count_ones();
+                    b6 += (xv1 & wv6).count_ones();
+                    a7 += (xv0 & wv7).count_ones();
+                    b7 += (xv1 & wv7).count_ones();
+                }
+                ra += ((a4 as i64) << (p + 4))
+                    + ((a5 as i64) << (p + 5))
+                    + ((a6 as i64) << (p + 6))
+                    + ((a7 as i64) << (p + 7));
+                rb += ((b4 as i64) << (p + 4))
+                    + ((b5 as i64) << (p + 5))
+                    + ((b6 as i64) << (p + 6))
+                    + ((b7 as i64) << (p + 7));
+            }
+            chunk[j * n + oc] = ra;
+            chunk[(j + 1) * n + oc] = rb;
+            j += 2;
+        }
+        if j < pt {
+            let xp = &xplanes[(p0 + j) * pstride..(p0 + j + 1) * pstride];
+            chunk[j * n + oc] = pixel_digital_4x4(xp, wp, words);
+        }
+    }
+}
+
+/// Generic digital kernel over one tile for an arbitrary (static)
+/// digital set — same weight-outer / pixel-inner geometry, no pairing.
+fn tile_digital_generic(
+    layer: &PreparedLayer,
+    x: &PackedPatches,
+    set: &[(usize, usize)],
+    p0: usize,
+    pt: usize,
+    chunk: &mut [i64],
+) {
+    let n = layer.sw.len();
+    let words = layer.words;
+    if words == 0 {
+        return;
+    }
+    let pstride = 8 * words;
+    let xplanes = x.planes();
+    for oc in 0..n {
+        let wp = &layer.planes[oc * pstride..(oc + 1) * pstride];
+        for j in 0..pt {
+            let xp = &xplanes[(p0 + j) * pstride..(p0 + j + 1) * pstride];
+            let mut raw = 0i64;
+            for &(p, q) in set {
+                let dp = and_popcount(
+                    &xp[p * words..(p + 1) * words],
+                    &wp[q * words..(q + 1) * words],
+                );
+                raw += (dp as i64) << (p + q);
+            }
+            chunk[j * n + oc] = raw;
+        }
+    }
+}
+
+/// Static-map epilogue over one tile: add the PCU sparsity-domain sum
+/// and apply the zero-point correction for every (pixel, column).
+#[allow(clippy::too_many_arguments)]
+fn tile_epilogue(
+    layer: &PreparedLayer,
+    x: &PackedPatches,
+    map: &ComputeMap,
+    rounding: PcuRounding,
+    p0: usize,
+    pt: usize,
+    zpx: i32,
+    chunk: &mut [i64],
+) {
+    let n = layer.sw.len();
+    let k = layer.k as i64;
+    for j in 0..pt {
+        let pop = x.pop(p0 + j);
+        let sum_x = x.element_sum(p0 + j);
+        let row = &mut chunk[j * n..(j + 1) * n];
+        for (oc, slot) in row.iter_mut().enumerate() {
+            let raw = *slot
+                + sparsity_domain_sum_fast(pop, &layer.sw[oc], &layer.div, map, rounding);
+            *slot = zero_point_correct(raw, sum_x, layer.w_sums[oc], k, zpx, layer.zpw);
+        }
+    }
+}
+
+impl MacBackend for PacBackend {
+    fn prepare(&mut self, layer_id: usize, weight: &Tensor<u8>, zpw: i32) {
+        assert_eq!(layer_id, self.layers.len(), "layers must prepare in order");
+        let n = weight.shape()[0];
+        let k = weight.shape()[1];
+        let words = crate::util::words_for(k);
+        let wd = weight.data();
+        let mut planes = vec![0u64; n * 8 * words];
+        let mut sw = Vec::with_capacity(n);
+        let mut w_sums = Vec::with_capacity(n);
+        for oc in 0..n {
+            let row = &wd[oc * k..(oc + 1) * k];
+            let bp = BitPlanes::from_u8(row);
+            sw.push(bp.pop);
+            w_sums.push(row.iter().map(|&v| v as i64).sum());
+            for q in 0..8 {
+                let off = (oc * 8 + q) * words;
+                planes[off..off + words].copy_from_slice(&bp.planes[q]);
+            }
+        }
+        let exact = if (self.config.first_layer_exact && layer_id == 0)
+            || k < self.config.min_dp_len
+        {
+            Some((weight.clone(), zpw))
+        } else {
+            None
+        };
+        self.layers.push(PreparedLayer {
+            planes,
+            words,
+            sw,
+            w_sums,
+            zpw,
+            k,
+            div: FastDiv::for_dp_len(k as u64),
+            exact,
+        });
+    }
+
+    fn gemm_layer(
+        &self,
+        layer_id: usize,
+        cols: &[u8],
+        pixels: usize,
+        zpx: i32,
+        par: &Parallelism,
+        planes: &mut PackedPatches,
+        out: &mut Vec<i64>,
+        stats: &mut RunStats,
+    ) {
+        let layer = &self.layers[layer_id];
+        let k = layer.k;
+        debug_assert_eq!(cols.len(), pixels * k);
+        let n = layer.sw.len();
+        out.clear();
+        out.resize(pixels * n, 0);
+        if pixels == 0 || n == 0 {
+            return;
+        }
+        let par = par.or(&self.config.par);
+
+        // First layer / short-DP fallback: standard D-CiM — the same
+        // tiled exact kernel the exact backend runs.
+        if let Some((w, zpw)) = &layer.exact {
+            exact_gemm_tiled(w.data(), *zpw, cols, k, n, pixels, zpx, &par, out, stats);
+            return;
+        }
+
+        // (1) Fused lowering: transpose the layer's whole im2col matrix
+        // into contiguous [pixel][p][word] planes + per-pixel sparsity
+        // counts, once — not once per output pixel.
+        planes.pack(cols, k, pixels, &par);
+        let x: &PackedPatches = planes;
+
+        // (2) Static-map precomputation (the dynamic path classifies per
+        // pixel inside the tile loop instead).
+        let digital_set = self.config.map.digital_set();
+        let is4x4 = digital_set.len() == 16
+            && digital_set.iter().all(|&(p, q)| p >= 4 && q >= 4);
+
+        // (3) Blocked sweep: tiles of TILE_PIXELS pixels × the full
+        // weight-column block per pass, fanned out over rayon per tile.
+        // Each tile owns a disjoint [pixel][oc] slab range and pure
+        // integer arithmetic, so any schedule is bit-identical.
+        let locals = par.map_chunks_mut(out, TILE_PIXELS * n, |t, chunk| {
+            let p0 = t * TILE_PIXELS;
+            let pt = chunk.len() / n;
+            let mut local = RunStats::default();
+            match &self.config.thresholds {
+                None => {
+                    if is4x4 {
+                        tile_digital_4x4(layer, x, p0, pt, chunk);
+                    } else {
+                        tile_digital_generic(layer, x, &digital_set, p0, pt, chunk);
+                    }
+                    tile_epilogue(
+                        layer,
+                        x,
+                        &self.config.map,
+                        self.config.rounding,
+                        p0,
+                        pt,
+                        zpx,
+                        chunk,
+                    );
+                    let dc = digital_set.len() as u64;
+                    local.digital_cycles += dc * (pt * n) as u64;
+                    local.pcu_ops += (64 - dc) * (pt * n) as u64;
+                }
+                Some(th) => self.tile_dynamic(layer, x, th, p0, pt, zpx, chunk, &mut local),
+            }
+            local
+        });
+        for l in &locals {
+            stats.merge(l);
+        }
+        stats.macs += (pixels * n * k) as u64;
     }
 }
 
@@ -347,8 +685,8 @@ mod tests {
     }
 
     #[test]
-    fn parallel_columns_bit_identical_to_scalar() {
-        // Same model, same image: column fan-out at every threshold must
+    fn parallel_tiles_bit_identical_to_scalar() {
+        // Same model, same image: tile fan-out at every threshold must
         // reproduce the scalar backend's logits exactly.
         let (model, img) = setup(310);
         let scalar = pac_backend(
@@ -373,6 +711,101 @@ mod tests {
             let (b, _) = run_model(&model, &par, &img);
             assert_eq!(a, b, "min_items={min_items}");
         }
+    }
+
+    #[test]
+    fn blocked_matches_per_patch_reference_kernel_level() {
+        // Direct kernel-level identity: gemm_layer vs the frozen
+        // per-patch reference on one prepared layer, across maps,
+        // thresholds, roundings, and non-tile-multiple pixel counts.
+        let mut rng = Rng::new(320);
+        let (n_oc, k) = (13, 150);
+        let wq: Vec<u8> = (0..n_oc * k).map(|_| rng.below(256) as u8).collect();
+        let weight = Tensor::from_vec(&[n_oc, k], wq);
+        let configs = [
+            PacConfig {
+                first_layer_exact: false,
+                min_dp_len: 0,
+                par: Parallelism::off(),
+                ..PacConfig::default()
+            },
+            PacConfig {
+                first_layer_exact: false,
+                min_dp_len: 0,
+                par: Parallelism::off(),
+                rounding: PcuRounding::Floor,
+                map: ComputeMap::operand_based(5, 3),
+                ..PacConfig::default()
+            },
+            PacConfig {
+                first_layer_exact: false,
+                min_dp_len: 0,
+                par: Parallelism::off(),
+                thresholds: Some(ThresholdSet::new(0.10, 0.20, 0.35)),
+                ..PacConfig::default()
+            },
+            PacConfig {
+                first_layer_exact: true, // exact fallback path
+                min_dp_len: 0,
+                par: Parallelism::off(),
+                ..PacConfig::default()
+            },
+        ];
+        for (ci, cfg) in configs.into_iter().enumerate() {
+            let mut b = PacBackend::new(cfg);
+            b.prepare(0, &weight, 128);
+            for pixels in [1usize, 31, 32, 33, 77] {
+                let cols: Vec<u8> =
+                    (0..pixels * k).map(|_| rng.below(256) as u8).collect();
+                let mut ref_stats = RunStats::default();
+                let mut reference = Vec::new();
+                for pix in 0..pixels {
+                    reference.extend_from_slice(&b.gemm_per_patch_reference(
+                        0,
+                        &cols[pix * k..(pix + 1) * k],
+                        7,
+                        &mut ref_stats,
+                    ));
+                }
+                for par in [
+                    Parallelism::off(),
+                    Parallelism {
+                        enabled: true,
+                        min_items: 1,
+                    },
+                ] {
+                    let mut stats = RunStats::default();
+                    let mut planes = PackedPatches::default();
+                    let mut out = Vec::new();
+                    b.gemm_layer(0, &cols, pixels, 7, &par, &mut planes, &mut out, &mut stats);
+                    assert_eq!(out, reference, "cfg {ci} pixels {pixels}");
+                    assert_eq!(stats.macs, ref_stats.macs, "cfg {ci} pixels {pixels}");
+                    assert_eq!(stats.digital_cycles, ref_stats.digital_cycles);
+                    assert_eq!(stats.pcu_ops, ref_stats.pcu_ops);
+                    assert_eq!(stats.levels, ref_stats.levels);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_layer_k0_is_all_zero_and_does_not_panic() {
+        // k = 0 (empty DP): the guarded divider (`FastDiv::for_dp_len`)
+        // and the packing path both tolerate it; accumulators are zero.
+        let weight = Tensor::from_vec(&[2, 0], Vec::new());
+        let mut b = PacBackend::new(PacConfig {
+            first_layer_exact: false,
+            min_dp_len: 0,
+            par: Parallelism::off(),
+            ..PacConfig::default()
+        });
+        b.prepare(0, &weight, 3);
+        let mut stats = RunStats::default();
+        let mut planes = PackedPatches::default();
+        let mut out = Vec::new();
+        b.gemm_layer(0, &[], 4, 5, &Parallelism::off(), &mut planes, &mut out, &mut stats);
+        assert_eq!(out, vec![0i64; 8]);
+        assert_eq!(stats.macs, 0);
     }
 
     #[test]

@@ -10,7 +10,8 @@
 use super::exec::{MacBackend, RunStats};
 use super::layers::{Model, Op};
 use crate::pac::sparsity::bit_sparsity_counts;
-use crate::tensor::Tensor;
+use crate::tensor::{PackedPatches, Tensor};
+use crate::util::Parallelism;
 use std::sync::Mutex;
 
 /// Accumulated per-layer sparsity statistics.
@@ -133,17 +134,31 @@ impl<B: MacBackend> MacBackend for ProfilingBackend<B> {
         self.inner.prepare(layer_id, weight, zpw);
     }
 
-    fn gemm(&self, layer_id: usize, patch: &[u8], zpx: i32, stats: &mut RunStats) -> Vec<i64> {
-        let counts = bit_sparsity_counts(patch);
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_layer(
+        &self,
+        layer_id: usize,
+        cols: &[u8],
+        pixels: usize,
+        zpx: i32,
+        par: &Parallelism,
+        planes: &mut PackedPatches,
+        out: &mut Vec<i64>,
+        stats: &mut RunStats,
+    ) {
+        // Per-bit counts over the whole patch matrix equal the sum of the
+        // per-patch counts the pre-blocked profiler accumulated — one
+        // pass, same profile.
+        let counts = bit_sparsity_counts(cols);
         {
             let mut profiles = self.profiles.lock().unwrap();
             let p = &mut profiles[layer_id];
             for b in 0..8 {
                 p.x_bit_counts[b] += counts[b] as u64;
             }
-            p.x_elems += patch.len() as u64;
+            p.x_elems += cols.len() as u64;
         }
-        self.inner.gemm(layer_id, patch, zpx, stats)
+        self.inner.gemm_layer(layer_id, cols, pixels, zpx, par, planes, out, stats)
     }
 }
 
@@ -229,7 +244,16 @@ mod tests {
         prof.prepare(0, &w, 128);
         let mut stats = RunStats::default();
         // All-ones patch: every bit set.
-        prof.gemm(0, &[255, 255, 255, 255], 0, &mut stats);
+        prof.gemm_layer(
+            0,
+            &[255, 255, 255, 255],
+            1,
+            0,
+            &Parallelism::off(),
+            &mut PackedPatches::default(),
+            &mut Vec::new(),
+            &mut stats,
+        );
         let x = prof.aggregate_x_rates();
         assert!(x.iter().all(|&r| (r - 1.0).abs() < 1e-12));
         let wr = prof.aggregate_w_rates();

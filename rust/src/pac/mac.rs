@@ -24,9 +24,14 @@ pub enum PcuRounding {
 
 /// One PAC sparsity-domain cycle (Eq. 3) in PCU fixed-point arithmetic:
 /// `DP ≈ Sx·Sw / n`.
+///
+/// A degenerate empty DP (`n = 0`) divides by 1 — the same guarded rule
+/// as `util::fastdiv::FastDiv::for_dp_len`, so the native and
+/// reciprocal-multiply divide paths agree on every input (unit-tested in
+/// both modules; the guard used to be duplicated at call sites).
 #[inline]
 pub fn pcu_cycle(sx: u32, sw: u32, n: u32, rounding: PcuRounding) -> u32 {
-    debug_assert!(n > 0);
+    let n = n.max(1);
     let prod = sx as u64 * sw as u64;
     match rounding {
         PcuRounding::RoundNearest => ((prod + n as u64 / 2) / n as u64) as u32,
@@ -97,7 +102,7 @@ pub fn hybrid_mac(
                 digital += dp << (p + q);
                 dc += 1;
             } else {
-                let dp = pcu_cycle(xp.pop[p], wp.pop[q], n.max(1), rounding) as i64;
+                let dp = pcu_cycle(xp.pop[p], wp.pop[q], n, rounding) as i64;
                 approx += dp << (p + q);
                 pc += 1;
             }
@@ -189,7 +194,7 @@ pub fn sparsity_domain_sum(
     for p in 0..8 {
         for q in 0..8 {
             if !map.is_digital(p, q) {
-                let dp = pcu_cycle(sx[p], sw[q], n.max(1), rounding) as i64;
+                let dp = pcu_cycle(sx[p], sw[q], n, rounding) as i64;
                 acc += dp << (p + q);
             }
         }
@@ -310,6 +315,31 @@ mod tests {
             let e = pcu_cycle(sx, sw, n, PcuRounding::RoundNearest);
             assert!(e <= n, "sx={sx} sw={sw} n={n} e={e}");
         }
+    }
+
+    #[test]
+    fn empty_dp_divide_guard_consistent() {
+        // k = 0: both divide paths follow the divide-by-1 rule, so an
+        // empty layer cannot make them diverge.
+        use crate::util::fastdiv::FastDiv;
+        let f = FastDiv::for_dp_len(0);
+        for (sx, sw) in [(0u32, 0u32), (5, 7), (255, 1)] {
+            let prod = sx as u64 * sw as u64;
+            assert_eq!(pcu_cycle(sx, sw, 0, PcuRounding::Floor) as u64, f.div(prod));
+            assert_eq!(
+                pcu_cycle(sx, sw, 0, PcuRounding::RoundNearest) as u64,
+                f.div_round(prod)
+            );
+            assert_eq!(
+                pcu_cycle(sx, sw, 0, PcuRounding::Floor),
+                pcu_cycle(sx, sw, 1, PcuRounding::Floor)
+            );
+        }
+        // And the aggregated sparsity-domain sum inherits the guard.
+        let map = ComputeMap::operand_based(4, 4);
+        let s0 = sparsity_domain_sum(&[3; 8], &[2; 8], 0, &map, PcuRounding::RoundNearest);
+        let s1 = sparsity_domain_sum(&[3; 8], &[2; 8], 1, &map, PcuRounding::RoundNearest);
+        assert_eq!(s0, s1);
     }
 
     #[test]

@@ -22,7 +22,9 @@ use crate::coordinator::scheduler::{
 };
 use crate::coordinator::server::BatchExecutor;
 use crate::energy::EnergyModel;
-use crate::nn::exec::{exact_backend, run_model_batch, ExactBackend, RunStats};
+use crate::nn::exec::{
+    exact_backend, run_model_batch_with, ExactBackend, ModelScratch, RunStats,
+};
 use crate::nn::layers::Model;
 use crate::nn::pac_exec::{pac_backend, PacBackend, PacConfig};
 use crate::util::Parallelism;
@@ -42,10 +44,11 @@ impl Engine {
         model: &Model,
         images: &[&[u8]],
         par: &Parallelism,
+        scratches: &mut [ModelScratch],
     ) -> Vec<(Vec<f32>, RunStats)> {
         match self {
-            Engine::Pac(b) => run_model_batch(model, b, images, par),
-            Engine::Exact(b) => run_model_batch(model, b, images, par),
+            Engine::Pac(b) => run_model_batch_with(model, b, images, par, scratches),
+            Engine::Exact(b) => run_model_batch_with(model, b, images, par, scratches),
         }
     }
 }
@@ -59,6 +62,11 @@ pub struct PacExecutor {
     par: Parallelism,
     cost: CostEstimate,
     stats: RunStats,
+    /// Per-lane scratch arenas, kept across `execute` calls: a warm
+    /// worker's forward passes reuse the im2col / packed-plane /
+    /// accumulator buffers — zero steady-state allocation per pixel.
+    /// (Each worker clones the executor, so arenas are per-worker.)
+    scratch: Vec<ModelScratch>,
 }
 
 impl PacExecutor {
@@ -86,13 +94,15 @@ impl PacExecutor {
     fn build(model: Model, engine: Engine, batch: usize, sched: ScheduleConfig) -> Self {
         let shapes = model_shapes(&model);
         let cost = estimate_image_cost(&shapes, &sched, &EnergyModel::default());
+        let batch = batch.max(1);
         Self {
             model: Arc::new(model),
             engine: Arc::new(engine),
-            batch: batch.max(1),
+            batch,
             par: Parallelism::coarse(),
             cost,
             stats: RunStats::default(),
+            scratch: vec![ModelScratch::default(); batch],
         }
     }
 
@@ -145,7 +155,9 @@ impl BatchExecutor for PacExecutor {
             .map(|&x| p.quantize(x))
             .collect();
         let images: Vec<&[u8]> = quantized.chunks_exact(in_elems).collect();
-        let lanes = self.engine.run_batch(&self.model, &images, &self.par);
+        let lanes =
+            self.engine
+                .run_batch(&self.model, &images, &self.par, &mut self.scratch);
         let mut out = vec![0f32; self.batch * self.model.num_classes];
         for (lane, (logits, st)) in lanes.iter().enumerate() {
             self.stats.merge(st);

@@ -1,0 +1,240 @@
+//! Layer-level bit-plane packing: the im2col patch matrix transposed
+//! into contiguous per-pixel planes, **once per layer**.
+//!
+//! The pre-blocked engine decomposed every im2col patch independently
+//! (`pac::sparsity::BitPlanes::from_u8` per output pixel), paying eight
+//! heap allocations and a scattered plane layout per pixel. Packing the
+//! whole `[pixels][k]` matrix into one `[pixel][p][word]` slab fuses the
+//! lowering with the bit-plane transposition: one pass over the layer's
+//! activations produces every plane word, every per-pixel sparsity count
+//! `S_x[p]`, and (via the `Σv = Σ_p 2^p·S[p]` identity) every element
+//! sum the zero-point correction needs — no LSB re-reads, no per-pixel
+//! allocation. The slab is reusable scratch: steady-state inference
+//! packs every layer of every image into the same buffers.
+
+use crate::util::{words_for, Parallelism};
+use rayon::prelude::*;
+
+/// Pixels per packing tile when the fan-out is parallel (disjoint slab
+/// ranges per tile, so the parallel pack is bit-identical to scalar).
+const PACK_TILE: usize = 32;
+
+/// A layer's activation matrix as packed bit-planes plus per-pixel
+/// sparsity metadata. Reusable: [`PackedPatches::pack`] grows the
+/// buffers on first use and overwrites them thereafter.
+#[derive(Debug, Clone, Default)]
+pub struct PackedPatches {
+    pixels: usize,
+    words: usize,
+    /// `[pixel][p][word]` plane slab, `8 * words` words per pixel.
+    planes: Vec<u64>,
+    /// `pop[pix][p]` = S_x[p] of pixel `pix`'s patch.
+    pop: Vec<[u32; 8]>,
+    /// Per-pixel raw element sums (`Σ_p 2^p·S[p]`, Eq. 5 / zero-point).
+    sums: Vec<i64>,
+}
+
+/// Pack one patch into `planes` (exactly `8 * words` words, all written)
+/// and return its per-plane popcounts. Same block decomposition as
+/// `BitPlanes::from_u8`, minus the allocations.
+fn pack_patch(patch: &[u8], words: usize, planes: &mut [u64]) -> [u32; 8] {
+    debug_assert_eq!(planes.len(), 8 * words);
+    let mut pop = [0u32; 8];
+    for (w, chunk) in patch.chunks(64).enumerate() {
+        let mut acc = [0u64; 8];
+        for (b, &x) in chunk.iter().enumerate() {
+            let x = x as u64;
+            acc[0] |= (x & 1) << b;
+            acc[1] |= ((x >> 1) & 1) << b;
+            acc[2] |= ((x >> 2) & 1) << b;
+            acc[3] |= ((x >> 3) & 1) << b;
+            acc[4] |= ((x >> 4) & 1) << b;
+            acc[5] |= ((x >> 5) & 1) << b;
+            acc[6] |= ((x >> 6) & 1) << b;
+            acc[7] |= ((x >> 7) & 1) << b;
+        }
+        for p in 0..8 {
+            planes[p * words + w] = acc[p];
+            pop[p] += acc[p].count_ones();
+        }
+    }
+    pop
+}
+
+impl PackedPatches {
+    /// Pack the `[pixels][k]` matrix `cols`. Tiles of `PACK_TILE`
+    /// pixels fan out over rayon when `par` allows (each tile writes a
+    /// disjoint slab range — deterministic for any schedule).
+    pub fn pack(&mut self, cols: &[u8], k: usize, pixels: usize, par: &Parallelism) {
+        assert_eq!(cols.len(), pixels * k, "im2col matrix shape mismatch");
+        let words = words_for(k);
+        self.pixels = pixels;
+        self.words = words;
+        // Every slab word is overwritten below, so stale contents from a
+        // previous (larger) layer are harmless; resize only zero-fills
+        // growth.
+        self.planes.resize(pixels * 8 * words, 0);
+        self.pop.resize(pixels, [0; 8]);
+        self.sums.resize(pixels, 0);
+        if pixels == 0 {
+            return;
+        }
+        if words == 0 {
+            // k = 0 (empty DP): no planes; counts and sums are all zero.
+            self.pop.fill([0; 8]);
+            self.sums.fill(0);
+            return;
+        }
+        let pstride = 8 * words;
+        let pack_tile = |t: usize, planes: &mut [u64], pop: &mut [[u32; 8]], sums: &mut [i64]| {
+            let base = t * PACK_TILE;
+            for (j, pl) in planes.chunks_exact_mut(pstride).enumerate() {
+                let pix = base + j;
+                let p = pack_patch(&cols[pix * k..(pix + 1) * k], words, pl);
+                pop[j] = p;
+                sums[j] = (0..8).map(|b| (p[b] as i64) << b).sum();
+            }
+        };
+        let tiles = pixels.div_ceil(PACK_TILE);
+        if par.should_parallelize_tiles(tiles, pixels) {
+            self.planes
+                .par_chunks_mut(PACK_TILE * pstride)
+                .zip(self.pop.par_chunks_mut(PACK_TILE))
+                .zip(self.sums.par_chunks_mut(PACK_TILE))
+                .enumerate()
+                .for_each(|(t, ((planes, pop), sums))| pack_tile(t, planes, pop, sums));
+        } else {
+            for t in 0..tiles {
+                let lo = t * PACK_TILE;
+                let hi = (lo + PACK_TILE).min(pixels);
+                pack_tile(
+                    t,
+                    &mut self.planes[lo * pstride..hi * pstride],
+                    &mut self.pop[lo..hi],
+                    &mut self.sums[lo..hi],
+                );
+            }
+        }
+    }
+
+    /// Number of packed pixels (patch rows).
+    pub fn pixels(&self) -> usize {
+        self.pixels
+    }
+
+    /// `u64` words per plane.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// The raw plane slab, `[pixel][p][word]`; pixel `pix`'s plane `p`
+    /// occupies `pix * 8 * words + p * words ..` for `words` words.
+    pub fn planes(&self) -> &[u64] {
+        &self.planes
+    }
+
+    /// Plane `p` of pixel `pix`.
+    pub fn plane(&self, pix: usize, p: usize) -> &[u64] {
+        let base = (pix * 8 + p) * self.words;
+        &self.planes[base..base + self.words]
+    }
+
+    /// Sparsity counts `S_x[0..8]` of pixel `pix`.
+    pub fn pop(&self, pix: usize) -> &[u32; 8] {
+        &self.pop[pix]
+    }
+
+    /// Raw element sum of pixel `pix`'s patch (reconstructed from the
+    /// sparsity counts — LSB bits are never re-read).
+    pub fn element_sum(&self, pix: usize) -> i64 {
+        self.sums[pix]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_cols(rng: &mut Rng, pixels: usize, k: usize) -> Vec<u8> {
+        (0..pixels * k).map(|_| rng.below(256) as u8).collect()
+    }
+
+    #[test]
+    fn matches_per_patch_bitplanes() {
+        use crate::pac::sparsity::BitPlanes;
+        let mut rng = Rng::new(42);
+        for (pixels, k) in [(1usize, 64usize), (7, 27), (40, 130), (3, 1)] {
+            let cols = random_cols(&mut rng, pixels, k);
+            let mut packed = PackedPatches::default();
+            packed.pack(&cols, k, pixels, &Parallelism::off());
+            assert_eq!(packed.pixels(), pixels);
+            assert_eq!(packed.words(), crate::util::words_for(k));
+            for pix in 0..pixels {
+                let bp = BitPlanes::from_u8(&cols[pix * k..(pix + 1) * k]);
+                assert_eq!(packed.pop(pix), &bp.pop, "pix {pix}");
+                assert_eq!(packed.element_sum(pix), bp.element_sum() as i64);
+                for p in 0..8 {
+                    assert_eq!(packed.plane(pix, p), &bp.planes[p][..], "pix {pix} p {p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_pack_bit_identical() {
+        let mut rng = Rng::new(43);
+        let (pixels, k) = (101, 90);
+        let cols = random_cols(&mut rng, pixels, k);
+        let mut scalar = PackedPatches::default();
+        scalar.pack(&cols, k, pixels, &Parallelism::off());
+        let mut par = PackedPatches::default();
+        par.pack(
+            &cols,
+            k,
+            pixels,
+            &Parallelism {
+                enabled: true,
+                min_items: 1,
+            },
+        );
+        assert_eq!(scalar.planes(), par.planes());
+        for pix in 0..pixels {
+            assert_eq!(scalar.pop(pix), par.pop(pix));
+            assert_eq!(scalar.element_sum(pix), par.element_sum(pix));
+        }
+    }
+
+    #[test]
+    fn reuse_shrinks_and_overwrites() {
+        // Pack a big layer, then a smaller one into the same scratch: no
+        // stale state may leak.
+        let mut rng = Rng::new(44);
+        let big = random_cols(&mut rng, 50, 200);
+        let small = random_cols(&mut rng, 4, 9);
+        let mut reused = PackedPatches::default();
+        reused.pack(&big, 200, 50, &Parallelism::off());
+        reused.pack(&small, 9, 4, &Parallelism::off());
+        let mut fresh = PackedPatches::default();
+        fresh.pack(&small, 9, 4, &Parallelism::off());
+        assert_eq!(reused.planes(), fresh.planes());
+        assert_eq!(reused.pixels(), 4);
+        for pix in 0..4 {
+            assert_eq!(reused.pop(pix), fresh.pop(pix));
+            assert_eq!(reused.element_sum(pix), fresh.element_sum(pix));
+        }
+    }
+
+    #[test]
+    fn empty_dp_and_empty_layer() {
+        let mut packed = PackedPatches::default();
+        packed.pack(&[], 0, 3, &Parallelism::off());
+        assert_eq!(packed.pixels(), 3);
+        assert_eq!(packed.words(), 0);
+        assert_eq!(packed.pop(2), &[0; 8]);
+        assert_eq!(packed.element_sum(0), 0);
+        packed.pack(&[], 5, 0, &Parallelism::off());
+        assert_eq!(packed.pixels(), 0);
+        assert!(packed.planes().is_empty());
+    }
+}

@@ -51,9 +51,20 @@ impl Conv2dGeom {
 /// Row layout: patch for output pixel (oh, ow); column layout: (c, kh, kw)
 /// — the same ordering `weights.reshape(out_c, dp_len)` produces from OIHW.
 pub fn im2col(input: &[u8], g: &Conv2dGeom, pad_value: u8) -> Vec<u8> {
+    let mut out = Vec::new();
+    im2col_into(input, g, pad_value, &mut out);
+    out
+}
+
+/// [`im2col`] into a caller-owned buffer (cleared and refilled) — the
+/// engines thread one buffer through every layer of a run so the
+/// steady-state lowering allocates nothing.
+pub fn im2col_into(input: &[u8], g: &Conv2dGeom, pad_value: u8, out: &mut Vec<u8>) {
     assert_eq!(input.len(), g.in_c * g.in_h * g.in_w);
     let (oh, ow, k) = (g.out_h(), g.out_w(), g.dp_len());
-    let mut out = vec![pad_value; oh * ow * k];
+    // clear + resize pad-fills every element while keeping capacity.
+    out.clear();
+    out.resize(oh * ow * k, pad_value);
     for oy in 0..oh {
         for ox in 0..ow {
             let row = (oy * ow + ox) * k;
@@ -75,7 +86,6 @@ pub fn im2col(input: &[u8], g: &Conv2dGeom, pad_value: u8) -> Vec<u8> {
             }
         }
     }
-    out
 }
 
 /// Shape of the im2col output for `g`: (rows = out pixels, cols = DP len).
@@ -201,6 +211,28 @@ mod tests {
             let naive = naive_conv(&input, &weight, &g, zp as i32);
             assert_eq!(gemm, naive, "stride={stride} pad={pad}");
         }
+    }
+
+    #[test]
+    fn into_reuses_buffer_without_stale_pads() {
+        // A buffer warm from a layer with a *different* pad value must be
+        // fully re-padded, not left with stale bytes.
+        let g = Conv2dGeom {
+            in_c: 1,
+            in_h: 2,
+            in_w: 2,
+            out_c: 1,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let input = [10u8, 20, 30, 40];
+        let mut buf = Vec::new();
+        im2col_into(&input, &g, 99, &mut buf);
+        let fresh = im2col(&input, &g, 7);
+        im2col_into(&input, &g, 7, &mut buf);
+        assert_eq!(buf, fresh);
     }
 
     #[test]

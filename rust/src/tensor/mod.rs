@@ -5,9 +5,11 @@
 //! deliberately simple owned, contiguous, row-major container — no views,
 //! no broadcasting. Anything fancier belongs to the JAX layer.
 
+pub mod bitplane;
 pub mod im2col;
 
-pub use im2col::{col2im_shape, im2col, Conv2dGeom};
+pub use bitplane::PackedPatches;
+pub use im2col::{col2im_shape, im2col, im2col_into, Conv2dGeom};
 
 /// Owned, contiguous, row-major tensor.
 #[derive(Debug, Clone, PartialEq)]

@@ -25,6 +25,27 @@ pub struct LayerBench {
     pub bit_identical: bool,
 }
 
+/// One blocked-vs-per-patch layer GEMM measurement (a
+/// `BENCH_hotpath.json` row): the layer-level blocked bit-plane kernel
+/// (`PacBackend::gemm_layer`, single-thread) against the frozen
+/// per-patch engine it replaced (`gemm_per_patch_reference`).
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct BlockedBench {
+    /// Layer name from the ResNet-18 shape table.
+    pub shape: String,
+    pub dp_len: usize,
+    pub out_c: usize,
+    /// Output pixels fed to one layer-level GEMM call.
+    pub pixels: usize,
+    pub per_patch_macs_per_s: f64,
+    pub blocked_macs_per_s: f64,
+    /// `blocked / per_patch` throughput ratio; CI gates this ≥ 1.0 on
+    /// every shape ([`enforce_blocked_floor`]).
+    pub speedup_blocked: f64,
+    pub bit_identical: bool,
+}
+
 /// `BENCH_hotpath.json` — hot-path throughput report.
 #[derive(Debug, Clone, Serialize, Deserialize)]
 #[serde(deny_unknown_fields)]
@@ -34,6 +55,8 @@ pub struct HotpathReport {
     pub threads: usize,
     pub quick: bool,
     pub layers: Vec<LayerBench>,
+    /// Blocked-vs-per-patch layer GEMM rows (single-thread).
+    pub blocked: Vec<BlockedBench>,
 }
 
 /// One serving scenario (a `BENCH_serve.json` row): an executor driven
@@ -100,7 +123,36 @@ pub fn validate_hotpath(json: &str) -> Result<HotpathReport, String> {
             return Err(format!("layer '{}' has invalid parallel rate", l.layer));
         }
     }
+    for b in &r.blocked {
+        if !(b.per_patch_macs_per_s.is_finite() && b.per_patch_macs_per_s > 0.0) {
+            return Err(format!("shape '{}' has invalid per-patch rate", b.shape));
+        }
+        if !(b.blocked_macs_per_s.is_finite() && b.blocked_macs_per_s > 0.0) {
+            return Err(format!("shape '{}' has invalid blocked rate", b.shape));
+        }
+    }
     Ok(r)
+}
+
+/// The blocked-GEMM regression gate (CI bench-smoke): the blocked kernel
+/// must stay bit-identical to the per-patch baseline and at least as
+/// fast (`speedup_blocked >= 1.0`) on **every** measured shape.
+pub fn enforce_blocked_floor(r: &HotpathReport) -> Result<(), String> {
+    if r.blocked.is_empty() {
+        return Err("no blocked GEMM rows to gate".into());
+    }
+    for b in &r.blocked {
+        if !b.bit_identical {
+            return Err(format!("shape '{}': blocked kernel diverged from baseline", b.shape));
+        }
+        if !(b.speedup_blocked.is_finite() && b.speedup_blocked >= 1.0) {
+            return Err(format!(
+                "shape '{}': blocked GEMM regressed vs per-patch baseline (speedup {:.3} < 1.0)",
+                b.shape, b.speedup_blocked
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// Parse + sanity-check a `BENCH_serve.json` payload.
@@ -145,9 +197,8 @@ pub fn validate_serve(json: &str) -> Result<ServeReport, String> {
 mod tests {
     use super::*;
 
-    #[test]
-    fn hotpath_roundtrip() {
-        let r = HotpathReport {
+    fn sample_hotpath() -> HotpathReport {
+        HotpathReport {
             bench: "perf_hotpath".into(),
             threads: 4,
             quick: true,
@@ -160,10 +211,43 @@ mod tests {
                 speedup: 3.0,
                 bit_identical: true,
             }],
-        };
+            blocked: vec![BlockedBench {
+                shape: "layer1.0.conv1".into(),
+                dp_len: 576,
+                out_c: 64,
+                pixels: 256,
+                per_patch_macs_per_s: 1e8,
+                blocked_macs_per_s: 2e8,
+                speedup_blocked: 2.0,
+                bit_identical: true,
+            }],
+        }
+    }
+
+    #[test]
+    fn hotpath_roundtrip() {
+        let r = sample_hotpath();
         let json = serde_json::to_string_pretty(&r).unwrap();
         let back = validate_hotpath(&json).unwrap();
         assert_eq!(back.layers.len(), 1);
+        assert_eq!(back.blocked.len(), 1);
+    }
+
+    #[test]
+    fn blocked_floor_gate() {
+        let mut r = sample_hotpath();
+        enforce_blocked_floor(&r).unwrap();
+        // Regression: blocked slower than the per-patch baseline.
+        r.blocked[0].speedup_blocked = 0.93;
+        let err = enforce_blocked_floor(&r).unwrap_err();
+        assert!(err.contains("regressed"), "{err}");
+        // Divergence outranks speed.
+        r.blocked[0].speedup_blocked = 2.0;
+        r.blocked[0].bit_identical = false;
+        assert!(enforce_blocked_floor(&r).unwrap_err().contains("diverged"));
+        // A report with no blocked rows cannot pass the gate.
+        r.blocked.clear();
+        assert!(enforce_blocked_floor(&r).is_err());
     }
 
     #[test]

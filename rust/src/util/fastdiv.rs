@@ -37,6 +37,17 @@ impl FastDiv {
         Self { k, magic }
     }
 
+    /// Guarded constructor for DP-length divisors: a degenerate empty DP
+    /// (`k = 0` — an empty layer or zero-length patch) divides by 1.
+    ///
+    /// This is the *same* convention `pac::mac::pcu_cycle` applies to its
+    /// native divide (`n.max(1)`), so the reciprocal path and the native
+    /// path cannot diverge on degenerate shapes — previously the guard
+    /// lived at scattered call sites while `FastDiv::new(0)` panicked.
+    pub fn for_dp_len(k: u64) -> Self {
+        Self::new(k.max(1))
+    }
+
     pub fn divisor(&self) -> u64 {
         self.k
     }
@@ -110,5 +121,19 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_divisor_rejected() {
         let _ = FastDiv::new(0);
+    }
+
+    #[test]
+    fn dp_len_constructor_guards_empty_layers() {
+        // k = 0 (empty DP) behaves as divide-by-1, matching the `n.max(1)`
+        // guard in `pcu_cycle` — the two divide paths share one rule.
+        let f = FastDiv::for_dp_len(0);
+        assert_eq!(f.divisor(), 1);
+        for x in [0u64, 1, 7, MAX_DIVIDEND] {
+            assert_eq!(f.div(x), x);
+        }
+        // Non-degenerate lengths are unchanged.
+        assert_eq!(FastDiv::for_dp_len(576).divisor(), 576);
+        assert_eq!(FastDiv::for_dp_len(576).div_round(575), 1);
     }
 }

@@ -60,6 +60,20 @@ impl Parallelism {
         self.enabled && items >= self.min_items
     }
 
+    /// Combine two policies: `self` when it is enabled, else `fallback`.
+    /// Backends use this to merge the driver's policy (authoritative when
+    /// it asks for parallelism) with their own configured default (the
+    /// fallback when the driver runs scalar, e.g. `nn::run_model` driving
+    /// a backend whose `PacConfig::par` is enabled).
+    #[inline]
+    pub fn or(&self, fallback: &Parallelism) -> Parallelism {
+        if self.enabled {
+            *self
+        } else {
+            *fallback
+        }
+    }
+
     /// Map `f` over `0..n` and collect in index order, fanning out over
     /// rayon when the policy allows. This is the single dispatch point the
     /// engines share, so tuning (thresholds, future chunking) lands in one
@@ -73,6 +87,43 @@ impl Parallelism {
             (0..n).into_par_iter().map(f).collect()
         } else {
             (0..n).map(f).collect()
+        }
+    }
+
+    /// Gate for *tiled* loops: fan out only when there are at least two
+    /// tiles to steal **and** the underlying element count meets
+    /// `min_items`. Tiles are coarse bundles (often ~32 work items
+    /// each), so comparing the tile count against `min_items` — which is
+    /// tuned in per-item units — would silently disable fan-out for
+    /// most layers; `min_items` keeps its per-item meaning here.
+    #[inline]
+    pub fn should_parallelize_tiles(&self, tiles: usize, items: usize) -> bool {
+        self.enabled && tiles >= 2 && items >= self.min_items
+    }
+
+    /// Split `data` into `chunk`-sized tiles and map `f(tile_index, tile)`
+    /// over them, fanning the tiles out over rayon when the policy allows
+    /// (see [`Parallelism::should_parallelize_tiles`]); per-tile results
+    /// are collected in tile order. This is the engines' blocked-GEMM
+    /// dispatch point: tiles own disjoint slices of the output slab, so
+    /// the fan-out is bit-deterministic for pure `f` (same tiling, same
+    /// per-tile arithmetic, index-ordered collect — identical to the
+    /// sequential path by construction).
+    pub fn map_chunks_mut<T, R, F>(&self, data: &mut [T], chunk: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut [T]) -> R + Sync + Send,
+    {
+        assert!(chunk > 0, "tile size must be positive");
+        let tiles = data.len().div_ceil(chunk);
+        if self.should_parallelize_tiles(tiles, data.len()) {
+            data.par_chunks_mut(chunk)
+                .enumerate()
+                .map(|(t, c)| f(t, c))
+                .collect()
+        } else {
+            data.chunks_mut(chunk).enumerate().map(|(t, c)| f(t, c)).collect()
         }
     }
 }
@@ -111,6 +162,59 @@ mod tests {
         let p = Parallelism::coarse();
         assert!(p.should_parallelize(2));
         assert!(!p.should_parallelize(1));
+    }
+
+    #[test]
+    fn or_prefers_enabled_self() {
+        let auto = Parallelism::auto();
+        let coarse = Parallelism::coarse();
+        assert_eq!(Parallelism::off().or(&auto), auto);
+        assert_eq!(coarse.or(&auto), coarse);
+        assert_eq!(Parallelism::off().or(&Parallelism::off()), Parallelism::off());
+    }
+
+    #[test]
+    fn tile_gate_compares_items_not_tiles() {
+        // 256 pixels in 32-pixel tiles = 8 tiles: far under a per-item
+        // min_items of 32, but the *items* clear it — must fan out.
+        let p = Parallelism::auto();
+        assert!(p.should_parallelize_tiles(8, 256));
+        // A single tile has nothing to steal.
+        assert!(!p.should_parallelize_tiles(1, 4096));
+        // Too little total work stays scalar.
+        assert!(!p.should_parallelize_tiles(2, 8));
+        assert!(!Parallelism::off().should_parallelize_tiles(100, 10_000));
+    }
+
+    #[test]
+    fn map_chunks_mut_tiles_disjoint_and_ordered() {
+        // Every element written exactly once, tile results in tile order,
+        // identical across policies (including a forced fan-out).
+        for par in [
+            Parallelism::off(),
+            Parallelism::auto(),
+            Parallelism {
+                enabled: true,
+                min_items: 1,
+            },
+        ] {
+            let mut data = vec![0usize; 103]; // non-multiple of the tile
+            let sums = par.map_chunks_mut(&mut data, 10, |t, tile| {
+                for (i, v) in tile.iter_mut().enumerate() {
+                    *v = t * 10 + i;
+                }
+                tile.len()
+            });
+            assert_eq!(sums.len(), 11);
+            assert_eq!(sums.iter().sum::<usize>(), 103);
+            assert_eq!(*sums.last().unwrap(), 3);
+            let expect: Vec<usize> = (0..103).collect();
+            assert_eq!(data, expect);
+        }
+        // Empty input: no tiles, no calls.
+        let mut empty: Vec<usize> = Vec::new();
+        let r = Parallelism::auto().map_chunks_mut(&mut empty, 4, |_, _| 1);
+        assert!(r.is_empty());
     }
 
     #[test]

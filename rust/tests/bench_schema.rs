@@ -9,7 +9,7 @@
 //! pointing `PACIM_BENCH_HOTPATH_JSON` / `PACIM_BENCH_SERVE_JSON` at the
 //! produced artifacts) — re-parse the actual emitted JSON.
 
-use pacim::util::benchfmt::{validate_hotpath, validate_serve};
+use pacim::util::benchfmt::{enforce_blocked_floor, validate_hotpath, validate_serve};
 use std::path::PathBuf;
 
 const HOTPATH_GOLDEN: &str = r#"{
@@ -24,6 +24,18 @@ const HOTPATH_GOLDEN: &str = r#"{
       "scalar_macs_per_s": 120000000.0,
       "parallel_macs_per_s": 360000000.0,
       "speedup": 3.0,
+      "bit_identical": true
+    }
+  ],
+  "blocked": [
+    {
+      "shape": "layer1.0.conv1",
+      "dp_len": 576,
+      "out_c": 64,
+      "pixels": 192,
+      "per_patch_macs_per_s": 120000000.0,
+      "blocked_macs_per_s": 250000000.0,
+      "speedup_blocked": 2.08,
       "bit_identical": true
     }
   ]
@@ -76,6 +88,21 @@ fn renamed_field_is_schema_drift() {
     // both directions: unknown new name, missing old name.
     let drifted = HOTPATH_GOLDEN.replace("\"speedup\"", "\"speed_up\"");
     assert!(validate_hotpath(&drifted).is_err());
+    // Same for the blocked-GEMM rows.
+    let drifted = HOTPATH_GOLDEN.replace("\"speedup_blocked\"", "\"blocked_speedup\"");
+    assert!(validate_hotpath(&drifted).is_err());
+    // Dropping the blocked section entirely is drift, not a pass.
+    let drifted = HOTPATH_GOLDEN.replace("\"blocked\":", "\"blocked_rows\":");
+    assert!(validate_hotpath(&drifted).is_err());
+}
+
+#[test]
+fn blocked_regression_gate_catches_slowdown() {
+    let r = validate_hotpath(HOTPATH_GOLDEN).unwrap();
+    enforce_blocked_floor(&r).unwrap();
+    let slowed = HOTPATH_GOLDEN.replace("\"speedup_blocked\": 2.08", "\"speedup_blocked\": 0.97");
+    let r = validate_hotpath(&slowed).unwrap();
+    assert!(enforce_blocked_floor(&r).unwrap_err().contains("regressed"));
 }
 
 #[test]
@@ -106,14 +133,35 @@ fn artifact(env: &str, default_name: &str) -> Option<PathBuf> {
 
 #[test]
 fn real_hotpath_artifact_if_present() {
+    // CI's bench-smoke job sets this env var after running the bench:
+    // the blocked kernel must beat (or tie) the per-patch baseline on
+    // every measured shape, or the job fails.
+    let enforce = std::env::var("PACIM_ENFORCE_BLOCKED_SPEEDUP")
+        .is_ok_and(|v| v != "0" && !v.is_empty());
     match artifact("PACIM_BENCH_HOTPATH_JSON", "BENCH_hotpath.json") {
         Some(p) => {
             let json = std::fs::read_to_string(&p)
                 .unwrap_or_else(|e| panic!("cannot read {}: {e}", p.display()));
             let r = validate_hotpath(&json)
                 .unwrap_or_else(|e| panic!("{} schema drift: {e}", p.display()));
-            println!("validated {} ({} layers)", p.display(), r.layers.len());
+            println!(
+                "validated {} ({} layers, {} blocked rows)",
+                p.display(),
+                r.layers.len(),
+                r.blocked.len()
+            );
+            if enforce {
+                enforce_blocked_floor(&r)
+                    .unwrap_or_else(|e| panic!("{} blocked-GEMM regression: {e}", p.display()));
+                println!("blocked-GEMM floor enforced: all shapes >= 1.0x");
+            }
         }
+        // Enforcement with no artifact must be a hard failure — a green
+        // gate that never parsed a report is worse than a red one.
+        None if enforce => panic!(
+            "PACIM_ENFORCE_BLOCKED_SPEEDUP is set but no BENCH_hotpath.json was found \
+             (checked PACIM_BENCH_HOTPATH_JSON and the default CWD path)"
+        ),
         None => println!("no BENCH_hotpath.json present; golden-sample checks only"),
     }
 }

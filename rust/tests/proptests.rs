@@ -1,15 +1,21 @@
 //! Property-based tests over the crate's core invariants, using the
 //! in-house `Checker` harness (proptest is unavailable offline).
 
+use pacim::arch::ThresholdSet;
+use pacim::nn::{
+    pac_backend, run_model, run_model_par, ConvLayer, LinearLayer, MacBackend, Model, Op,
+    PacBackend, PacConfig, RunStats,
+};
 use pacim::pac::mac::{pac_cycle_f64, pcu_cycle, PcuRounding};
 use pacim::pac::{
     exact_mac, exact_mac_bitserial, hybrid_mac, hybrid_mac_batch, par_hybrid_mac_batch,
-    zero_point_correct, BitPlanes, ComputeMap,
+    zero_point_correct, BitPlanes, ComputeMap, DynamicLevel,
 };
 use pacim::quant::{calibrate_minmax, calibrate_weights_symmetric, Requant};
-use pacim::tensor::{im2col, Conv2dGeom, Tensor};
+use pacim::tensor::{im2col, Conv2dGeom, PackedPatches, QuantParams, Tensor};
 use pacim::util::check::Checker;
-use pacim::util::{and_popcount, pack_bits_u64};
+use pacim::util::rng::Rng;
+use pacim::util::{and_popcount, pack_bits_u64, Parallelism};
 
 #[test]
 fn prop_bitserial_identity() {
@@ -245,6 +251,148 @@ fn prop_compute_map_partition() {
         assert_eq!(m.digital_cycles(), bx * bw);
         assert_eq!(m.digital_cycles() + m.sparsity_cycles(), 64);
         assert_eq!(m.required_weight_bits().len(), if bx == 0 { 0 } else { bw as usize });
+    });
+}
+
+/// The pre-blocked per-patch engine as a [`MacBackend`]: drives
+/// `PacBackend::gemm_per_patch_reference` one im2col patch at a time —
+/// exactly the contract the engine had before the blocked GEMM refactor.
+struct PerPatchEngine(PacBackend);
+
+impl MacBackend for PerPatchEngine {
+    fn prepare(&mut self, layer_id: usize, weight: &Tensor<u8>, zpw: i32) {
+        self.0.prepare(layer_id, weight, zpw);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_layer(
+        &self,
+        layer_id: usize,
+        cols: &[u8],
+        pixels: usize,
+        zpx: i32,
+        _par: &Parallelism,
+        _planes: &mut PackedPatches,
+        out: &mut Vec<i64>,
+        stats: &mut RunStats,
+    ) {
+        out.clear();
+        if pixels == 0 {
+            return;
+        }
+        let k = cols.len() / pixels;
+        for pix in 0..pixels {
+            let accs = self.0.gemm_per_patch_reference(
+                layer_id,
+                &cols[pix * k..(pix + 1) * k],
+                zpx,
+                stats,
+            );
+            out.extend_from_slice(&accs);
+        }
+    }
+}
+
+/// One random single-conv model (conv → GAP → logits) over a random
+/// geometry: kernel ∈ {1,3}, stride ∈ {1,2}, padding ∈ {0,1}.
+fn random_conv_model(rng: &mut Rng) -> (Model, Vec<u8>) {
+    let kernel = if rng.bernoulli(0.5) { 1 } else { 3 };
+    let stride = 1 + rng.below(2) as usize;
+    let pad = rng.below(2) as usize;
+    let in_c = 1 + rng.below(4) as usize;
+    let out_c = 1 + rng.below(12) as usize;
+    let hw = 6 + rng.below(6) as usize;
+    let geom = Conv2dGeom {
+        in_c,
+        in_h: hw,
+        in_w: hw,
+        out_c,
+        kh: kernel,
+        kw: kernel,
+        stride,
+        pad,
+    };
+    let k = geom.dp_len();
+    let weight: Vec<u8> = (0..out_c * k).map(|_| rng.below(256) as u8).collect();
+    let conv = ConvLayer {
+        name: "c0".into(),
+        geom,
+        weight: Tensor::from_vec(&[out_c, k], weight),
+        wparams: QuantParams::new(0.02, 128),
+        bias: (0..out_c).map(|_| (rng.next_f32() - 0.5) * 0.1).collect(),
+        out_params: QuantParams::new(0.05, 32),
+        relu: true,
+    };
+    let fc_w: Vec<u8> = (0..3 * out_c).map(|_| rng.below(256) as u8).collect();
+    let lin = LinearLayer {
+        name: "fc".into(),
+        in_f: out_c,
+        out_f: 3,
+        weight: Tensor::from_vec(&[3, out_c], fc_w),
+        wparams: QuantParams::new(0.03, 128),
+        bias: vec![0.0; 3],
+        out_params: None,
+        relu: false,
+    };
+    let model = Model {
+        name: "prop_conv".into(),
+        ops: vec![Op::Conv2d(conv), Op::GlobalAvgPool, Op::Linear(lin)],
+        input_params: QuantParams::new(1.0 / 64.0, 128),
+        in_c,
+        in_hw: hw,
+        num_classes: 3,
+    };
+    let img: Vec<u8> = (0..in_c * hw * hw).map(|_| rng.below(256) as u8).collect();
+    (model, img)
+}
+
+#[test]
+fn prop_blocked_engine_matches_per_patch_engine() {
+    // The tentpole invariant: the blocked layer-level GEMM is bit-
+    // identical (logits *and* statistics) to the sequential per-patch
+    // engine it replaced, across random geometries, all four dynamic-
+    // level maps, thresholds on/off, both roundings, the exact-fallback
+    // path, and tile fan-out on/off.
+    Checker::new("blocked_vs_per_patch", 48).run(|rng| {
+        let (model, img) = random_conv_model(rng);
+        let variant = rng.below(6);
+        let (map, thresholds) = match variant {
+            0..=3 => (DynamicLevel::all()[variant as usize].map(), None),
+            4 => (ComputeMap::operand_based(4, 4), None),
+            _ => (
+                ComputeMap::operand_based(4, 4),
+                Some(ThresholdSet::new(0.08, 0.16, 0.30)),
+            ),
+        };
+        let cfg = PacConfig {
+            map,
+            thresholds,
+            rounding: if rng.bernoulli(0.5) {
+                PcuRounding::RoundNearest
+            } else {
+                PcuRounding::Floor
+            },
+            first_layer_exact: rng.bernoulli(0.25),
+            min_dp_len: 0,
+            par: Parallelism::off(),
+        };
+        let blocked = pac_backend(&model, cfg.clone());
+        let reference = PerPatchEngine(pac_backend(&model, cfg));
+        let (b_ref, s_ref) = run_model(&model, &reference, &img);
+        for par in [
+            Parallelism::off(),
+            Parallelism {
+                enabled: true,
+                min_items: 1,
+            },
+        ] {
+            let (b, s) = run_model_par(&model, &blocked, &img, &par);
+            assert_eq!(b, b_ref, "logits diverged (variant {variant})");
+            assert_eq!(s.macs, s_ref.macs);
+            assert_eq!(s.digital_cycles, s_ref.digital_cycles);
+            assert_eq!(s.pcu_ops, s_ref.pcu_ops);
+            assert_eq!(s.levels, s_ref.levels);
+        }
     });
 }
 
