@@ -1,12 +1,13 @@
 //! Design-space exploration: the accuracy/energy Pareto of the PACiM
 //! configuration space (operand width x dynamic thresholds) — the
-//! DESIGN.md §10 ablation harness.
+//! DESIGN.md §11 ablation harness.
 //!
 //! Run: `cargo run --release --example design_space -- [images]`
 
 use pacim::arch::ThresholdSet;
 use pacim::energy::EnergyModel;
-use pacim::nn::{evaluate, exact_backend, pac_backend, tiny_resnet, PacConfig, WeightStore};
+use pacim::engine::{Engine, EngineBuilder};
+use pacim::nn::{tiny_resnet, PacConfig, WeightStore};
 use pacim::pac::{ComputeMap, PcuRounding};
 use pacim::runtime::Manifest;
 use pacim::workload::Dataset;
@@ -23,8 +24,8 @@ fn main() -> anyhow::Result<()> {
     let threads = std::thread::available_parallelism()?.get();
     let em = EnergyModel::default();
 
-    let exact = exact_backend(&model);
-    let (acc8, _) = evaluate(&model, &exact, &images, &labels, threads);
+    let exact: Engine = EngineBuilder::new(model.clone()).exact().build()?;
+    let acc8 = exact.evaluate(&images, &labels, threads)?.accuracy;
     println!("exact 8b/8b: {:.2}% | digital eff {:.2} TOPS/W (8b/8b)\n",
              acc8 * 100.0, em.digital_8b().tops_w_8b);
     println!(
@@ -49,8 +50,9 @@ fn main() -> anyhow::Result<()> {
                 rounding: PcuRounding::RoundNearest,
                 ..PacConfig::default()
             };
-            let pac = pac_backend(&model, cfg);
-            let (acc, stats) = evaluate(&model, &pac, &images, &labels, threads);
+            let pac = EngineBuilder::new(model.clone()).pac(cfg).build()?;
+            let ev = pac.evaluate(&images, &labels, threads)?;
+            let (acc, stats) = (ev.accuracy, ev.stats);
             let cycles = if stats.levels.total() > 0 {
                 stats.levels.average_cycles()
             } else {
@@ -69,12 +71,12 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // PCU rounding ablation (DESIGN.md §10).
+    // PCU rounding ablation (DESIGN.md §11).
     println!("\nPCU rounding ablation (4x4 static):");
     for (r, name) in [(PcuRounding::RoundNearest, "round-nearest"), (PcuRounding::Floor, "floor")] {
         let cfg = PacConfig { rounding: r, ..PacConfig::default() };
-        let pac = pac_backend(&model, cfg);
-        let (acc, _) = evaluate(&model, &pac, &images, &labels, threads);
+        let pac = EngineBuilder::new(model.clone()).pac(cfg).build()?;
+        let acc = pac.evaluate(&images, &labels, threads)?.accuracy;
         println!("  {name:<16} acc {:.2}%", acc * 100.0);
     }
 

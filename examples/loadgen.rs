@@ -7,8 +7,9 @@
 //! reply) — against three executors:
 //!
 //! - `mock`  — a no-compute executor isolating the batcher itself;
-//! - `pac`   — [`pacim::runtime::PacExecutor`], the hybrid
-//!   digital/sparsity PACiM engine (the real serving path);
+//! - `pac`   — [`pacim::runtime::PacExecutor`], the thin serving
+//!   adapter over the `pacim::engine` front door running the hybrid
+//!   digital/sparsity PACiM computation (the real serving path);
 //! - `exact` — the fully digital 8b/8b baseline executor.
 //!
 //! Emits `BENCH_serve.json` (schema: `pacim::util::benchfmt`) with
@@ -237,11 +238,11 @@ fn run_scenario(
             )?
         }
         Exec::Pac => {
-            let e = PacExecutor::new(model.clone(), PacConfig::serving(), opts.batch);
+            let e = PacExecutor::new(model.clone(), PacConfig::serving(), opts.batch)?;
             InferenceServer::start_pool(move |_| Ok(e.clone()), policy)?
         }
         Exec::Exact => {
-            let e = PacExecutor::exact(model.clone(), opts.batch);
+            let e = PacExecutor::exact(model.clone(), opts.batch)?;
             InferenceServer::start_pool(move |_| Ok(e.clone()), policy)?
         }
     };
@@ -311,7 +312,7 @@ fn run_scenario(
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    let mut m = server.stop();
+    let m = server.stop();
     let completed = completed.load(Ordering::Relaxed);
     Ok(ServeScenario {
         name: format!("{}-{}", exec.name(), mode.name()),

@@ -1,77 +1,90 @@
-//! Quickstart: the three-layer stack in one page.
+//! Quickstart: the typed engine front door in one page.
 //!
-//! 1. Load the AOT artifacts (trained quantized tiny_resnet).
-//! 2. Classify a few images with the bit-true rust engine — once exactly,
-//!    once through the PAC hybrid backend.
-//! 3. Print the architecture-level cycle/energy/traffic estimate for the
-//!    same inference.
+//! 1. Load the trained artifacts when they exist, or fall back to the
+//!    deterministic synthetic workload (so this runs on a bare checkout
+//!    — CI exercises exactly that path).
+//! 2. Build two engines through `pacim::engine` — the exact 8b/8b
+//!    reference and the PAC hybrid backend — and classify a few images.
+//! 3. Print the modeled per-image silicon cost that every engine
+//!    carries (cycles + energy under the matching bank schedule).
 //!
-//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+//! Run: `cargo run --release --example quickstart`
+//! (ends with a `quickstart: OK …` sentinel line; CI greps for it).
 
-use pacim::coordinator::{schedule_model, ScheduleConfig};
-use pacim::energy::EnergyModel;
-use pacim::nn::{exact_backend, pac_backend, run_model, tiny_resnet, PacConfig, WeightStore};
+use pacim::engine::EngineBuilder;
+use pacim::nn::{tiny_resnet, PacConfig, WeightStore};
 use pacim::runtime::Manifest;
-use pacim::workload::shapes::LayerShape;
 use pacim::workload::Dataset;
 
-fn main() -> anyhow::Result<()> {
-    // ---- artifacts --------------------------------------------------------
-    let man = Manifest::load(pacim::runtime::manifest::artifacts_dir())?;
-    let store = WeightStore::load(man.path("weights")?)?;
-    let ds = Dataset::load(man.path("dataset")?)?;
-    let model = tiny_resnet(&store, ds.h, ds.n_classes)?;
-    println!("model {} | {} MACs/image | {} test images", model.name, model.macs(), ds.n);
+/// Artifacts when built, synthetic workload otherwise.
+fn workload() -> anyhow::Result<(pacim::nn::Model, Dataset, &'static str)> {
+    let load = || -> anyhow::Result<(pacim::nn::Model, Dataset)> {
+        let man = Manifest::load(pacim::runtime::manifest::artifacts_dir())?;
+        let store = WeightStore::load(man.path("weights")?)?;
+        let ds = Dataset::load(man.path("dataset")?)?;
+        let model = tiny_resnet(&store, ds.h, ds.n_classes)?;
+        Ok((model, ds))
+    };
+    match load() {
+        Ok((model, ds)) => Ok((model, ds, "artifacts")),
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); using the synthetic workload");
+            let (model, ds) = pacim::workload::synthetic_serving_workload(2024, 8, 16, 10, 64)?;
+            Ok((model, ds, "synthetic"))
+        }
+    }
+}
 
-    // ---- bit-true inference: exact vs PAC ---------------------------------
-    let exact = exact_backend(&model);
-    let pac = pac_backend(&model, PacConfig::default());
+fn main() -> anyhow::Result<()> {
+    let (model, ds, source) = workload()?;
+    println!(
+        "model {} ({source}) | {} MACs/image | {} test images",
+        model.name,
+        model.macs(),
+        ds.n
+    );
+
+    // ---- one front door, two backends -------------------------------------
+    let exact = EngineBuilder::new(model.clone()).exact().build()?;
+    let pac = EngineBuilder::new(model).pac(PacConfig::default()).build()?;
+    let mut exact_session = exact.session();
+    let mut pac_session = pac.session();
+
+    let n = 8.min(ds.n);
     let mut agree = 0;
-    let n = 8;
     for i in 0..n {
-        let (le, _) = run_model(&model, &exact, ds.image(i));
-        let (lp, stats) = run_model(&model, &pac, ds.image(i));
-        let pe = argmax(&le);
-        let pp = argmax(&lp);
-        agree += (pe == pp) as usize;
+        let e = exact_session.infer(ds.image(i))?;
+        let p = pac_session.infer(ds.image(i))?;
+        agree += (e.argmax() == p.argmax()) as usize;
         println!(
-            "image {i}: label {} | exact -> {pe} | PAC -> {pp} | digital cycles/MAC {:.1}",
+            "image {i}: label {} | exact -> {} | PAC -> {} | digital cycles/MAC {:.1}",
             ds.label(i),
-            stats.avg_cycles_per_mac()
+            e.argmax(),
+            p.argmax(),
+            p.stats.avg_cycles_per_mac()
         );
     }
     println!("exact/PAC argmax agreement: {agree}/{n}");
 
-    // ---- architecture estimate for this model -----------------------------
-    let shapes: Vec<LayerShape> = model
-        .compute_layers()
-        .iter()
-        .map(|(name, g)| LayerShape {
-            name: name.to_string(),
-            kind: pacim::workload::LayerShapeKind::Conv,
-            geom: *g,
-        })
-        .collect();
-    let em = EnergyModel::default();
-    let dig = schedule_model(&shapes, &ScheduleConfig::digital_baseline());
-    let pacs = schedule_model(&shapes, &ScheduleConfig::pacim_default());
+    // ---- the modeled silicon cost every engine carries ---------------------
     println!("\narchitecture estimate (per image):");
-    for (label, rep, is_pac) in [("digital 8b/8b", &dig, false), ("PACiM 4-bit", &pacs, true)] {
+    for (label, engine) in [("digital 8b/8b", &exact), ("PACiM 4-bit", &pac)] {
+        let c = engine.cost_estimate();
         println!(
             "  {label:<14} {:>12} bit-serial cycles | compute {:>8.2} uJ | memory {:>8.2} uJ",
-            rep.total_macs_cycles(),
-            rep.compute_energy_pj(&em) / 1e6,
-            rep.memory_energy_pj(&em, is_pac) / 1e6,
+            c.cycles,
+            c.compute_pj / 1e6,
+            c.memory_pj / 1e6,
         );
     }
+    let (ce, cp) = (exact.cost_estimate(), pac.cost_estimate());
     println!(
-        "  -> cycle reduction {:.0}% | activation-traffic reduction {:.0}%",
-        100.0 * (1.0 - pacs.total_macs_cycles() as f64 / dig.total_macs_cycles() as f64),
-        pacs.act_traffic_reduction() * 100.0
+        "  -> cycle reduction {:.0}%",
+        100.0 * (1.0 - cp.cycles as f64 / ce.cycles as f64)
     );
-    Ok(())
-}
 
-fn argmax(v: &[f32]) -> usize {
-    v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+    // Sentinel for the CI quickstart-smoke job: the zero-artifact engine
+    // path produced real logits through both backends.
+    println!("quickstart: OK ({source}, agreement {agree}/{n})");
+    Ok(())
 }

@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         }
     });
     let wall = t0.elapsed().as_secs_f64();
-    let mut m = server.stop();
+    let m = server.stop();
 
     println!("\nresults:");
     println!(

@@ -12,10 +12,11 @@
 mod harness;
 
 use harness::{banner, row, try_artifacts, Checks};
-use pacim::nn::{run_model, ExactBackend, MacBackend, Op, ProfilingBackend};
+use pacim::nn::{run_model_with, ExactBackend, MacBackend, ModelScratch, Op, ProfilingBackend};
 use pacim::pac::error_analysis::{
     mac_distribution, rmse_scaling_exponent, rmse_vs_dp_length, theoretical_rmse_lsb,
 };
+use pacim::util::Parallelism;
 
 fn main() {
     banner("Fig. 3", "PAC approximate error analysis");
@@ -45,8 +46,10 @@ fn main() {
             }
         }
         prof.name_layers(&model);
+        let mut scratch = ModelScratch::default();
         for i in 0..16.min(ds.n) {
-            let _ = run_model(&model, &prof, ds.image(i));
+            let _ =
+                run_model_with(&model, &prof, ds.image(i), &Parallelism::off(), &mut scratch);
         }
         let wr = prof.aggregate_w_rates();
         let xr = prof.aggregate_x_rates();

@@ -11,9 +11,9 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{banner, eval_accuracy, row, Checks};
+use harness::{banner, engine_exact, engine_pac, eval_accuracy, row, Checks};
 use pacim::arch::ThresholdSet;
-use pacim::nn::{exact_backend, pac_backend, Model, Op, PacConfig};
+use pacim::nn::{Model, Op, PacConfig};
 use pacim::pac::ComputeMap;
 
 const EVAL_N: usize = 256;
@@ -58,8 +58,8 @@ fn main() {
     };
     let mut checks = Checks::new();
 
-    let exact = exact_backend(&model);
-    let (acc8, _) = eval_accuracy(&model, &exact, &ds, EVAL_N);
+    let exact = engine_exact(&model);
+    let (acc8, _) = eval_accuracy(&exact, &ds, EVAL_N);
     println!("  baseline exact 8b/8b accuracy: {:.2}%  ({} images)", acc8 * 100.0, EVAL_N);
 
     // ---- (a) operand-width sweep ----------------------------------------
@@ -72,11 +72,11 @@ fn main() {
             map: ComputeMap::operand_based(bits, bits),
             ..PacConfig::default()
         };
-        let pac = pac_backend(&model, cfg);
-        let (acc_pac, _) = eval_accuracy(&model, &pac, &ds, EVAL_N);
+        let pac = engine_pac(&model, cfg);
+        let (acc_pac, _) = eval_accuracy(&pac, &ds, EVAL_N);
         let low = low_bit_model(&model, bits);
-        let lb = exact_backend(&low);
-        let (acc_ptq, _) = eval_accuracy(&low, &lb, &ds, EVAL_N);
+        let lb = engine_exact(&low);
+        let (acc_ptq, _) = eval_accuracy(&lb, &ds, EVAL_N);
         pac_accs.push(acc_pac);
         ptq_accs.push(acc_ptq);
         println!(
@@ -99,8 +99,8 @@ fn main() {
     // ---- (b) dynamic workload configuration ------------------------------
     println!("\n  (b) dynamic workload configuration (paper: avg 12 cycles at <=1% loss)");
     let cfg4 = PacConfig::default();
-    let pac4b = pac_backend(&model, cfg4);
-    let (acc_static, _) = eval_accuracy(&model, &pac4b, &ds, EVAL_N);
+    let pac4b = engine_pac(&model, cfg4);
+    let (acc_static, _) = eval_accuracy(&pac4b, &ds, EVAL_N);
     println!("      static 16-cycle:       acc {:6.2}%", acc_static * 100.0);
     let mut best: Option<(f64, f64)> = None;
     for (th, label) in [
@@ -113,8 +113,8 @@ fn main() {
             thresholds: Some(th),
             ..PacConfig::default()
         };
-        let pac = pac_backend(&model, cfg);
-        let (acc, stats) = eval_accuracy(&model, &pac, &ds, EVAL_N);
+        let pac = engine_pac(&model, cfg);
+        let (acc, stats) = eval_accuracy(&pac, &ds, EVAL_N);
         let cycles = stats.levels.average_cycles();
         println!(
             "      {label:<16} acc {:6.2}%  avg digital cycles {:5.2}  (loss {:+.2}%)",

@@ -99,10 +99,27 @@ pub fn try_artifacts() -> Option<(
     Some((man, model, ds))
 }
 
-/// Evaluate accuracy over the first `n` dataset images.
-pub fn eval_accuracy<B: pacim::nn::MacBackend + Sync>(
-    model: &pacim::nn::Model,
-    backend: &B,
+/// Build an exact-backend engine for `model` (benches abort on the
+/// typed error — a bench target has no caller to hand it to).
+pub fn engine_exact(model: &pacim::nn::Model) -> pacim::engine::Engine {
+    pacim::engine::EngineBuilder::new(model.clone())
+        .exact()
+        .build()
+        .expect("bench model is valid")
+}
+
+/// Build a PAC-backend engine for `model` under `cfg`.
+pub fn engine_pac(model: &pacim::nn::Model, cfg: pacim::nn::PacConfig) -> pacim::engine::Engine {
+    pacim::engine::EngineBuilder::new(model.clone())
+        .pac(cfg)
+        .build()
+        .expect("bench model/config is valid")
+}
+
+/// Evaluate accuracy over the first `n` dataset images through the
+/// engine front door.
+pub fn eval_accuracy(
+    engine: &pacim::engine::Engine,
     ds: &pacim::workload::Dataset,
     n: usize,
 ) -> (f64, pacim::nn::RunStats) {
@@ -110,5 +127,8 @@ pub fn eval_accuracy<B: pacim::nn::MacBackend + Sync>(
     let images: Vec<&[u8]> = (0..n).map(|i| ds.image(i)).collect();
     let labels: Vec<usize> = (0..n).map(|i| ds.label(i)).collect();
     let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
-    pacim::nn::evaluate(model, backend, &images, &labels, threads)
+    let ev = engine
+        .evaluate(&images, &labels, threads)
+        .expect("bench inputs are pre-validated");
+    (ev.accuracy, ev.stats)
 }

@@ -202,7 +202,8 @@ fn serving_section(quick: bool, checks: &mut Checks) {
         .expect("synthetic workload");
     let requests = if quick { 24 } else { 128 };
     let workers = rayon::current_num_threads().clamp(1, 4);
-    let exec = PacExecutor::new(model, PacConfig::serving(), 8);
+    let exec =
+        PacExecutor::new(model, PacConfig::serving(), 8).expect("valid serving engine");
     let server = InferenceServer::start_pool(
         move |_| Ok(exec.clone()),
         BatchPolicy {
@@ -234,7 +235,7 @@ fn serving_section(quick: bool, checks: &mut Checks) {
         }
     });
     let wall = t0.elapsed().as_secs_f64();
-    let mut m = server.stop();
+    let m = server.stop();
     println!(
         "\n  PAC serving ({workers} workers, batch 8): {:>9.2} ms  ({}, p50 {:.0} us, fill {:.2})",
         wall * 1e3,
@@ -399,7 +400,7 @@ fn pjrt_section() {
             }
         });
         let serve_t = t0.elapsed().as_secs_f64();
-        let mut m = server.stop();
+        let m = server.stop();
         println!(
             "  serving {} reqs:                   {:>9.2} ms  ({}, p50 {:.0} us, batch occ {:.1})",
             imgs.len(),

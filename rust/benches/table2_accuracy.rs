@@ -10,9 +10,9 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{banner, eval_accuracy, row, Checks};
+use harness::{banner, engine_exact, engine_pac, eval_accuracy, row, Checks};
 use pacim::arch::ThresholdSet;
-use pacim::nn::{exact_backend, pac_backend, PacConfig};
+use pacim::nn::PacConfig;
 use pacim::pac::ComputeMap;
 
 const EVAL_N: usize = 512;
@@ -36,25 +36,25 @@ fn main() {
     };
     let mut checks = Checks::new();
 
-    let exact = exact_backend(&model);
-    let (acc8, _) = eval_accuracy(&model, &exact, &ds, EVAL_N);
+    let exact = engine_exact(&model);
+    let (acc8, _) = eval_accuracy(&exact, &ds, EVAL_N);
 
-    let pac4 = pac_backend(&model, PacConfig::default());
-    let (acc4, _) = eval_accuracy(&model, &pac4, &ds, EVAL_N);
+    let pac4 = engine_pac(&model, PacConfig::default());
+    let (acc4, _) = eval_accuracy(&pac4, &ds, EVAL_N);
 
     let cfg5 = PacConfig {
         map: ComputeMap::operand_based(5, 5),
         ..PacConfig::default()
     };
-    let pac5 = pac_backend(&model, cfg5);
-    let (acc5, _) = eval_accuracy(&model, &pac5, &ds, EVAL_N);
+    let pac5 = engine_pac(&model, cfg5);
+    let (acc5, _) = eval_accuracy(&pac5, &ds, EVAL_N);
 
     let cfg_dyn = PacConfig {
         thresholds: Some(ThresholdSet::default_cifar()),
         ..PacConfig::default()
     };
-    let pacd = pac_backend(&model, cfg_dyn);
-    let (accd, stats_d) = eval_accuracy(&model, &pacd, &ds, EVAL_N);
+    let pacd = engine_pac(&model, cfg_dyn);
+    let (accd, stats_d) = eval_accuracy(&pacd, &ds, EVAL_N);
 
     println!("  measured ({} {} images, synthetic-10):", EVAL_N, model.name);
     row("exact 8b/8b", "(baseline)", &format!("{:.2}%", acc8 * 100.0));

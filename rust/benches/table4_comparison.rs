@@ -12,7 +12,7 @@ mod harness;
 use harness::{banner, eval_accuracy, Checks};
 use pacim::coordinator::{schedule_model, ScheduleConfig};
 use pacim::energy::EnergyModel;
-use pacim::nn::{exact_backend, pac_backend, PacConfig};
+use pacim::nn::PacConfig;
 use pacim::workload::{resnet18, Resolution};
 
 struct Row {
@@ -95,10 +95,10 @@ fn main() {
 
     // Accuracy rows (ours measured on the synthetic substitution).
     if let Some((_, model, ds)) = harness::try_artifacts() {
-        let exact = exact_backend(&model);
-        let (acc8, _) = eval_accuracy(&model, &exact, &ds, 256);
-        let pac = pac_backend(&model, PacConfig::default());
-        let (acc4, _) = eval_accuracy(&model, &pac, &ds, 256);
+        let exact = harness::engine_exact(&model);
+        let (acc8, _) = eval_accuracy(&exact, &ds, 256);
+        let pac = harness::engine_pac(&model, PacConfig::default());
+        let (acc4, _) = eval_accuracy(&pac, &ds, 256);
         println!(
             "\n  accuracy (synthetic-10 substitution): exact {:.2}%  PAC {:.2}%",
             acc8 * 100.0,

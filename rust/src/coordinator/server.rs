@@ -22,7 +22,7 @@
 //! aggregate [`ServerMetrics`] returned to the caller.
 
 use super::scheduler::CostEstimate;
-use crate::util::stats::percentile;
+use crate::util::stats::percentile_sorted;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -126,16 +126,24 @@ pub struct ServerMetrics {
     /// Per-worker breakdown (empty until `stop()` merges the pool).
     pub per_worker: Vec<WorkerSummary>,
     /// Bounded latency reservoir (≤ [`LATENCY_RESERVOIR`] per worker).
+    /// Finalized (sorted ascending) exactly once, in
+    /// [`InferenceServer::stop`], so percentile queries are `&self`.
     latencies_us: Vec<f64>,
     latency_samples_seen: u64,
 }
 
 impl ServerMetrics {
-    pub fn latency_percentile_us(&mut self, p: f64) -> f64 {
-        if self.latencies_us.is_empty() {
-            return 0.0;
-        }
-        percentile(&mut self.latencies_us, p)
+    /// Latency percentile in µs over the finalized reservoir. Metrics
+    /// handed out by [`InferenceServer::stop`] are finalized (sorted);
+    /// queries are read-only and O(1).
+    pub fn latency_percentile_us(&self, p: f64) -> f64 {
+        percentile_sorted(&self.latencies_us, p)
+    }
+
+    /// Sort the merged reservoir once so every subsequent percentile
+    /// query is a read-only rank lookup.
+    fn finalize(&mut self) {
+        self.latencies_us.sort_by(|a, b| a.total_cmp(b));
     }
 
     fn record_latency(&mut self, us: f64, rng: &mut crate::util::rng::Rng) {
@@ -159,8 +167,12 @@ impl ServerMetrics {
         self.requests as f64 / self.batches as f64
     }
 
-    /// Fold one worker's local metrics into the aggregate.
+    /// Fold one worker's local metrics into the aggregate (sorting the
+    /// worker's reservoir first, so its summary percentiles read from
+    /// finalized data; the aggregate is re-finalized after the last
+    /// absorb, since appending breaks sortedness).
     fn absorb(&mut self, worker: usize, mut m: ServerMetrics) {
+        m.finalize();
         let p50 = m.latency_percentile_us(50.0);
         let p99 = m.latency_percentile_us(99.0);
         self.per_worker.push(WorkerSummary {
@@ -486,6 +498,7 @@ impl InferenceServer {
             total.absorb(i, m);
         }
         total.rejected = self.shared.rejected.load(Ordering::Relaxed);
+        total.finalize();
         total
     }
 }
@@ -733,11 +746,13 @@ mod tests {
         for _ in 0..20 {
             h.infer(vec![0.0; 4]).unwrap();
         }
-        let mut m = server.stop();
+        let m = server.stop();
+        // Queries are `&self`: the reservoir was finalized at stop().
         let p50 = m.latency_percentile_us(50.0);
         let p99 = m.latency_percentile_us(99.0);
         assert!(p50 > 0.0);
         assert!(p99 >= p50);
+        assert_eq!(m.latency_percentile_us(50.0), p50, "read-only and stable");
     }
 
     #[test]

@@ -1,0 +1,379 @@
+//! [`EngineBuilder`] — the validated construction path of an
+//! [`Engine`](super::Engine).
+//!
+//! The builder is the one place where configuration mistakes surface as
+//! typed errors instead of aborts deep inside a kernel: the model
+//! program is shape-walked end to end (every conv/linear/skip checked
+//! against the activation shape it will actually receive), the PAC
+//! configuration is validated (operand split within the 8-bit planes,
+//! dynamic thresholds only on the 16-cycle 4×4 base map), and only a
+//! fully-consistent engine is ever handed back. After `build()`, the
+//! interpreter's internal invariants are guaranteed, so the hot loops
+//! stay branch-free.
+
+use crate::coordinator::scheduler::{estimate_image_cost, model_shapes, ScheduleConfig};
+use crate::energy::EnergyModel;
+use crate::nn::exec::exact_backend;
+use crate::nn::layers::{Model, Op};
+use crate::nn::pac_exec::{pac_backend, PacConfig};
+use crate::pac::ComputeMap;
+use crate::util::Parallelism;
+use std::sync::Arc;
+
+use super::error::{EngineResult, PacimError};
+use super::session::{Engine, EngineBackend, EngineInner};
+
+/// Which compute backend the engine will prepare.
+enum Mode {
+    /// Fully digital 8b/8b integer reference.
+    Exact,
+    /// Hybrid digital/sparsity PAC computation.
+    Pac(PacConfig),
+}
+
+/// Builder for [`Engine`]: pick a backend, tune policies, `build()`.
+///
+/// Defaults: PAC backend with the paper-default [`PacConfig`] (static
+/// 4×4 operand map, first layer exact), [`Parallelism::auto`] tile
+/// fan-out for single-image inference, [`Parallelism::coarse`] lane
+/// fan-out for batches, and the cost schedule matching the backend mode.
+///
+/// ```
+/// use pacim::engine::EngineBuilder;
+/// use pacim::nn::layers::synthetic::random_store;
+/// use pacim::nn::tiny_resnet;
+/// use pacim::util::rng::Rng;
+///
+/// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+/// let mut rng = Rng::new(3);
+/// let model = tiny_resnet(&random_store(&mut rng, 8, 10), 16, 10)?;
+///
+/// // An invalid cycle split is a typed error, not an abort:
+/// assert!(EngineBuilder::new(model.clone()).approx_bits(9, 4).build().is_err());
+///
+/// let engine = EngineBuilder::new(model).approx_bits(4, 4).build()?;
+/// assert_eq!(engine.mode(), "pac");
+/// # Ok(()) }
+/// ```
+pub struct EngineBuilder {
+    model: Model,
+    mode: Mode,
+    approx_bits: Option<(u32, u32)>,
+    thresholds: Option<crate::arch::ThresholdSet>,
+    par: Parallelism,
+    lane_par: Parallelism,
+    schedule: Option<ScheduleConfig>,
+}
+
+impl EngineBuilder {
+    /// Start building an engine for `model`.
+    pub fn new(model: Model) -> Self {
+        Self {
+            model,
+            mode: Mode::Pac(PacConfig::default()),
+            approx_bits: None,
+            thresholds: None,
+            par: Parallelism::auto(),
+            lane_par: Parallelism::coarse(),
+            schedule: None,
+        }
+    }
+
+    /// Use the exact 8b/8b integer backend (fully digital D-CiM).
+    pub fn exact(mut self) -> Self {
+        self.mode = Mode::Exact;
+        self
+    }
+
+    /// Use the PAC hybrid backend with an explicit configuration.
+    pub fn pac(mut self, config: PacConfig) -> Self {
+        self.mode = Mode::Pac(config);
+        self
+    }
+
+    /// Shorthand for the operand-based split: keep the `bx` activation
+    /// MSBs × `bw` weight MSBs digital (`bx·bw` of the 64 cycles) and
+    /// approximate the rest. Validated at `build()`: each operand width
+    /// must fit the 8 bit-planes.
+    pub fn approx_bits(mut self, bx: u32, bw: u32) -> Self {
+        self.approx_bits = Some((bx, bw));
+        self
+    }
+
+    /// Enable the dynamic workload configuration (§5) with the given
+    /// speculation thresholds. Requires the PAC backend on the 4×4 base
+    /// map (validated at `build()`).
+    pub fn dynamic(mut self, thresholds: crate::arch::ThresholdSet) -> Self {
+        self.thresholds = Some(thresholds);
+        self
+    }
+
+    /// Tile fan-out policy for single-image inference (default
+    /// [`Parallelism::auto`]). Bit-deterministic at any setting.
+    pub fn parallelism(mut self, par: Parallelism) -> Self {
+        self.par = par;
+        self
+    }
+
+    /// Lane fan-out policy for batched inference (default
+    /// [`Parallelism::coarse`]). Bit-deterministic at any setting.
+    pub fn lane_parallelism(mut self, par: Parallelism) -> Self {
+        self.lane_par = par;
+        self
+    }
+
+    /// Override the bank schedule used for the modeled per-image cost
+    /// (default: the schedule matching the backend mode).
+    pub fn schedule(mut self, schedule: ScheduleConfig) -> Self {
+        self.schedule = Some(schedule);
+        self
+    }
+
+    /// Validate everything and prepare the engine (packs weight
+    /// bit-planes once, computes the per-image cost model).
+    pub fn build(self) -> EngineResult<Engine> {
+        validate_model(&self.model)?;
+        let (backend, mode, default_sched) = match self.mode {
+            Mode::Exact => {
+                if self.thresholds.is_some() {
+                    return Err(PacimError::InvalidConfig(
+                        "dynamic thresholds require the PAC backend; \
+                         the exact backend is fully digital"
+                            .into(),
+                    ));
+                }
+                if self.approx_bits.is_some() {
+                    return Err(PacimError::InvalidConfig(
+                        "approx_bits requires the PAC backend; \
+                         the exact backend runs all 64 cycles digitally"
+                            .into(),
+                    ));
+                }
+                (
+                    EngineBackend::Exact(exact_backend(&self.model)),
+                    "exact",
+                    ScheduleConfig::digital_baseline(),
+                )
+            }
+            Mode::Pac(mut cfg) => {
+                if let Some((bx, bw)) = self.approx_bits {
+                    if bx > 8 || bw > 8 {
+                        return Err(PacimError::InvalidConfig(format!(
+                            "invalid cycle split: operand widths {bx}×{bw} exceed the 8 \
+                             bit-planes (the digital block covers bx·bw of the 64 cycles, \
+                             so bx ≤ 8 and bw ≤ 8)"
+                        )));
+                    }
+                    cfg.map = ComputeMap::operand_based(bx, bw);
+                }
+                if let Some(th) = self.thresholds {
+                    cfg.thresholds = Some(th);
+                }
+                validate_pac_config(&cfg)?;
+                let sched = if cfg.thresholds.is_some() {
+                    ScheduleConfig::pacim_dynamic()
+                } else {
+                    ScheduleConfig::pacim_default()
+                };
+                (
+                    EngineBackend::Pac(pac_backend(&self.model, cfg)),
+                    "pac",
+                    sched,
+                )
+            }
+        };
+        let sched = self.schedule.unwrap_or(default_sched);
+        let cost = estimate_image_cost(
+            &model_shapes(&self.model),
+            &sched,
+            &EnergyModel::default(),
+        );
+        Ok(Engine {
+            inner: Arc::new(EngineInner {
+                model: self.model,
+                backend,
+                par: self.par,
+                lane_par: self.lane_par,
+                cost,
+                mode,
+            }),
+        })
+    }
+}
+
+/// Validate a PAC configuration independent of any model (also used for
+/// executor construction): the dynamic-threshold ladder is defined on
+/// the 16-cycle 4×4 operand base map only.
+pub(crate) fn validate_pac_config(cfg: &PacConfig) -> EngineResult<()> {
+    if cfg.thresholds.is_some() {
+        let base = ComputeMap::operand_based(4, 4);
+        if cfg.map.digital_set() != base.digital_set() {
+            return Err(PacimError::InvalidConfig(format!(
+                "dynamic workload configuration requires the operand 4×4 base map \
+                 (16 digital + 48 sparsity cycles); map '{}' has {} digital cycles",
+                cfg.map.name,
+                cfg.map.digital_cycles()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Shape-walk the model program end to end, so every invariant the
+/// interpreter relies on is established before the first inference:
+/// conv/linear geometry vs the incoming activation shape, weight/bias
+/// arities, balanced skip stack, a terminal logits layer, and no
+/// unreachable ops behind it.
+fn validate_model(model: &Model) -> EngineResult<()> {
+    if model.in_c == 0 || model.in_hw == 0 {
+        return Err(PacimError::Model(format!(
+            "model '{}' declares an empty input ({}×{}×{})",
+            model.name, model.in_c, model.in_hw, model.in_hw
+        )));
+    }
+    let mut shape = (model.in_c, model.in_hw, model.in_hw);
+    let mut skips: Vec<(usize, usize, usize)> = Vec::new();
+    let mut compute_layers = 0usize;
+    let mut finished = false;
+    for (i, op) in model.ops.iter().enumerate() {
+        if finished {
+            return Err(PacimError::Model(format!(
+                "model '{}': op {i} is unreachable (the logits layer already ended \
+                 the program)",
+                model.name
+            )));
+        }
+        match op {
+            Op::Conv2d(c) => {
+                let g = &c.geom;
+                if g.stride == 0 {
+                    return Err(PacimError::Model(format!(
+                        "conv '{}' declares stride 0",
+                        c.name
+                    )));
+                }
+                if g.in_h + 2 * g.pad < g.kh || g.in_w + 2 * g.pad < g.kw {
+                    return Err(PacimError::Model(format!(
+                        "conv '{}' kernel {}×{} exceeds its padded input \
+                         ({}+2·{})×({}+2·{})",
+                        c.name, g.kh, g.kw, g.in_h, g.pad, g.in_w, g.pad
+                    )));
+                }
+                if (g.in_c, g.in_h, g.in_w) != shape {
+                    return Err(PacimError::Model(format!(
+                        "conv '{}' declares input {}×{}×{} but receives {}×{}×{}",
+                        c.name, g.in_c, g.in_h, g.in_w, shape.0, shape.1, shape.2
+                    )));
+                }
+                if c.weight.shape() != [g.out_c, g.dp_len()] {
+                    return Err(PacimError::Model(format!(
+                        "conv '{}' weight shape {:?} != [{}, {}]",
+                        c.name,
+                        c.weight.shape(),
+                        g.out_c,
+                        g.dp_len()
+                    )));
+                }
+                if c.bias.len() != g.out_c {
+                    return Err(PacimError::Model(format!(
+                        "conv '{}' bias length {} != {} output channels",
+                        c.name,
+                        c.bias.len(),
+                        g.out_c
+                    )));
+                }
+                shape = (g.out_c, g.out_h(), g.out_w());
+                if shape.0 == 0 || shape.1 == 0 || shape.2 == 0 {
+                    return Err(PacimError::Model(format!(
+                        "conv '{}' produces an empty output ({}×{}×{})",
+                        c.name, shape.0, shape.1, shape.2
+                    )));
+                }
+                compute_layers += 1;
+            }
+            Op::Linear(l) => {
+                let elems = shape.0 * shape.1 * shape.2;
+                if elems != l.in_f {
+                    return Err(PacimError::Model(format!(
+                        "linear '{}' declares {} input features but receives {} \
+                         ({}×{}×{})",
+                        l.name, l.in_f, elems, shape.0, shape.1, shape.2
+                    )));
+                }
+                if l.weight.shape() != [l.out_f, l.in_f] {
+                    return Err(PacimError::Model(format!(
+                        "linear '{}' weight shape {:?} != [{}, {}]",
+                        l.name,
+                        l.weight.shape(),
+                        l.out_f,
+                        l.in_f
+                    )));
+                }
+                if l.bias.len() != l.out_f {
+                    return Err(PacimError::Model(format!(
+                        "linear '{}' bias length {} != {} output features",
+                        l.name,
+                        l.bias.len(),
+                        l.out_f
+                    )));
+                }
+                compute_layers += 1;
+                match &l.out_params {
+                    None => finished = true,
+                    Some(_) => shape = (l.out_f, 1, 1),
+                }
+            }
+            Op::MaxPool2 => {
+                if shape.1 < 2 || shape.2 < 2 {
+                    return Err(PacimError::Model(format!(
+                        "MaxPool2 over a {}×{}×{} activation would produce an empty \
+                         output",
+                        shape.0, shape.1, shape.2
+                    )));
+                }
+                shape = (shape.0, shape.1 / 2, shape.2 / 2);
+            }
+            Op::GlobalAvgPool => {
+                shape = (shape.0, 1, 1);
+            }
+            Op::SaveSkip => {
+                skips.push(shape);
+            }
+            Op::AddSkip { .. } => match skips.pop() {
+                Some(saved) if saved == shape => {}
+                Some(saved) => {
+                    return Err(PacimError::Model(format!(
+                        "AddSkip shape mismatch: saved {}×{}×{}, current {}×{}×{}",
+                        saved.0, saved.1, saved.2, shape.0, shape.1, shape.2
+                    )));
+                }
+                None => {
+                    return Err(PacimError::Model(
+                        "AddSkip without a matching SaveSkip".into(),
+                    ));
+                }
+            },
+        }
+    }
+    if !skips.is_empty() {
+        return Err(PacimError::Model(format!(
+            "model '{}' leaves {} SaveSkip activation(s) unconsumed \
+             (every SaveSkip needs a matching AddSkip)",
+            model.name,
+            skips.len()
+        )));
+    }
+    if compute_layers == 0 {
+        return Err(PacimError::Model(format!(
+            "model '{}' has no compute layers",
+            model.name
+        )));
+    }
+    if !finished {
+        return Err(PacimError::Model(format!(
+            "model '{}' does not end in a logits layer (a Linear with out_params = None)",
+            model.name
+        )));
+    }
+    Ok(())
+}

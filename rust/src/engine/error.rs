@@ -1,0 +1,94 @@
+//! The crate-wide typed error of the engine front door.
+//!
+//! Every fallible operation reachable from [`crate::engine`] returns
+//! [`PacimError`] — one enum a caller can match on instead of fishing
+//! through stringly-typed `anyhow` chains or catching aborts. The
+//! variants cover the four failure families of the system:
+//!
+//! - **shapes** — an input buffer whose element count disagrees with the
+//!   model ([`PacimError::ShapeMismatch`]);
+//! - **configuration** — an invalid [`crate::nn::PacConfig`] or builder
+//!   state, e.g. a dynamic-threshold request on a base map whose digital
+//!   block is not the 16-cycle 4×4 split ([`PacimError::InvalidConfig`]);
+//! - **model/artifact** — malformed programs, weight stores, or
+//!   manifests ([`PacimError::Model`], converted from [`crate::Error`]);
+//! - **serving** — the admission-control and lifecycle states of the
+//!   coordinator pool, converted losslessly from
+//!   [`crate::coordinator::ServeError`] so load-shed signals
+//!   ([`PacimError::QueueFull`]) pass through typed.
+
+use crate::coordinator::ServeError;
+
+/// Typed error for every engine-facing operation.
+#[derive(Debug, thiserror::Error)]
+pub enum PacimError {
+    /// An input/output buffer has the wrong number of elements.
+    #[error("{context}: got {got} elements, expected {want}")]
+    ShapeMismatch {
+        /// Which boundary was violated (e.g. `"Session::infer input"`).
+        context: String,
+        got: usize,
+        want: usize,
+    },
+
+    /// The requested engine configuration is invalid (bad cycle split,
+    /// zero-lane executor, thresholds on a non-4×4 base map, …).
+    #[error("invalid configuration: {0}")]
+    InvalidConfig(String),
+
+    /// The model program, weight store, or artifact manifest is broken
+    /// (missing tensors, shape disagreements, unreachable ops, no logits
+    /// layer).
+    #[error("model error: {0}")]
+    Model(String),
+
+    /// Serving admission control fired: the bounded queue already holds
+    /// `capacity` pending requests. Clients should back off and retry.
+    #[error("admission queue full ({capacity} pending requests); load shed")]
+    QueueFull { capacity: usize },
+
+    /// The serving pool has stopped accepting submissions.
+    #[error("server stopped")]
+    ServerStopped,
+
+    /// The request was admitted but its batch failed to execute.
+    #[error("request dropped (batch execution failed)")]
+    RequestDropped,
+
+    /// An internal invariant failed (e.g. an evaluation worker died).
+    #[error("internal error: {0}")]
+    Internal(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<crate::Error> for PacimError {
+    fn from(e: crate::Error) -> Self {
+        match e {
+            crate::Error::Artifact(m) => PacimError::Model(format!("artifact: {m}")),
+            crate::Error::Shape(m) => PacimError::Model(format!("shape: {m}")),
+            crate::Error::Config(m) => PacimError::InvalidConfig(m),
+            crate::Error::Runtime(m) => PacimError::Internal(m),
+            crate::Error::Io(e) => PacimError::Io(e),
+        }
+    }
+}
+
+impl From<ServeError> for PacimError {
+    fn from(e: ServeError) -> Self {
+        match e {
+            ServeError::BadInput { got, want } => PacimError::ShapeMismatch {
+                context: "serve request input".into(),
+                got,
+                want,
+            },
+            ServeError::QueueFull { capacity } => PacimError::QueueFull { capacity },
+            ServeError::Stopped => PacimError::ServerStopped,
+            ServeError::Dropped => PacimError::RequestDropped,
+        }
+    }
+}
+
+/// Crate-wide shorthand for engine results.
+pub type EngineResult<T> = std::result::Result<T, PacimError>;

@@ -1,0 +1,40 @@
+//! One front door: the typed `Session` API over the bit-true PACiM
+//! pipeline.
+//!
+//! Every consumer surface of this crate — the `pacim` CLI, the bench
+//! harness, the examples, and the serving executor
+//! ([`crate::runtime::PacExecutor`]) — constructs inference through this
+//! module instead of wiring quantize → im2col → backend by hand:
+//!
+//! ```text
+//! EngineBuilder ── build() ──▶ Engine ── session() ──▶ Session
+//!   model               validated, Arc-shared:        per-caller scratch:
+//!   backend mode        model + packed backend        infer / infer_f32 /
+//!   policies            + cost model                  infer_batch / evaluate
+//! ```
+//!
+//! - [`EngineBuilder`] validates the model program and configuration and
+//!   prepares the backend exactly once (typed errors, no aborts);
+//! - [`Engine`] is the immutable, cheaply-clonable result: share one per
+//!   process, clone per worker;
+//! - [`Session`] owns the mutable scratch arenas: one per thread, every
+//!   call steady-state allocation-free per pixel;
+//! - [`PacimError`] is the crate-wide error taxonomy (shape /
+//!   configuration / model / serving), with lossless conversions from
+//!   [`crate::Error`] and [`crate::coordinator::ServeError`] so
+//!   queue-full load-shed signals pass through typed.
+//!
+//! The engine is a pure facade: results are bit-identical to the
+//! low-level reference path (`nn::run_model_with` over an explicitly
+//! constructed backend) — property-tested in `tests/engine_api.rs` for
+//! both backends, with parallelism on and off, over logits *and*
+//! statistics. See DESIGN.md §10 for the builder states, the error
+//! taxonomy, and the old→new migration table.
+
+mod builder;
+mod error;
+mod session;
+
+pub use builder::EngineBuilder;
+pub use error::{EngineResult, PacimError};
+pub use session::{Engine, Evaluation, Inference, Session};

@@ -1,0 +1,436 @@
+//! The [`Engine`] (prepared model + backend) and its per-caller
+//! [`Session`] (scratch-owning inference handle).
+//!
+//! An `Engine` is immutable and cheap to clone (`Arc`-shared): the model
+//! program, the prepared MAC backend (packed weight bit-planes, sparsity
+//! counts), the parallelism policies, and the modeled per-image silicon
+//! cost are all built exactly once by [`super::EngineBuilder`]. A
+//! `Session` adds the mutable per-caller state — the im2col / packed
+//! activation-plane / accumulator arenas — so steady-state inference
+//! allocates nothing per pixel while concurrent callers never contend:
+//! one session per thread, all sharing one engine.
+//!
+//! Every entry point validates its inputs and returns
+//! [`PacimError`](super::PacimError) instead of aborting; the inner
+//! tiled kernels stay branch-free because the validation happens once,
+//! at the boundary.
+
+use crate::coordinator::scheduler::CostEstimate;
+use crate::nn::exec::{run_model_batch_with, run_model_with, ExactBackend, ModelScratch, RunStats};
+use crate::nn::layers::Model;
+use crate::nn::pac_exec::PacBackend;
+use crate::util::Parallelism;
+use std::sync::Arc;
+
+use super::error::{EngineResult, PacimError};
+
+/// One inference result: float logits plus the engine statistics of the
+/// forward pass that produced them.
+#[derive(Debug, Clone)]
+pub struct Inference {
+    pub logits: Vec<f32>,
+    pub stats: RunStats,
+}
+
+impl Inference {
+    /// Index of the largest logit (ties resolve to the last maximum,
+    /// matching the legacy evaluation loop bit-for-bit). `0` when the
+    /// logit vector is empty.
+    pub fn argmax(&self) -> usize {
+        argmax(&self.logits)
+    }
+}
+
+/// Aggregate result of [`Engine::evaluate`] over a labeled image set.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// Top-1 accuracy in `[0, 1]`.
+    pub accuracy: f64,
+    /// Engine statistics summed over every image.
+    pub stats: RunStats,
+    /// Number of images evaluated.
+    pub images: usize,
+}
+
+/// Largest-logit index with last-wins tie-breaking (the semantics of
+/// `Iterator::max_by` over `partial_cmp`, which the legacy evaluate loop
+/// used — preserved so accuracy counts stay bit-identical).
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in v.iter().enumerate() {
+        if x >= best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// The prepared compute backend behind an engine.
+pub(crate) enum EngineBackend {
+    /// Exact 8b/8b integer baseline (fully digital D-CiM).
+    Exact(ExactBackend),
+    /// Hybrid digital/sparsity PAC computation (the paper's architecture).
+    Pac(PacBackend),
+}
+
+impl EngineBackend {
+    fn run(
+        &self,
+        model: &Model,
+        image: &[u8],
+        par: &Parallelism,
+        scratch: &mut ModelScratch,
+    ) -> (Vec<f32>, RunStats) {
+        match self {
+            EngineBackend::Exact(b) => run_model_with(model, b, image, par, scratch),
+            EngineBackend::Pac(b) => run_model_with(model, b, image, par, scratch),
+        }
+    }
+
+    fn run_batch(
+        &self,
+        model: &Model,
+        images: &[&[u8]],
+        par: &Parallelism,
+        scratches: &mut [ModelScratch],
+    ) -> Vec<(Vec<f32>, RunStats)> {
+        match self {
+            EngineBackend::Exact(b) => run_model_batch_with(model, b, images, par, scratches),
+            EngineBackend::Pac(b) => run_model_batch_with(model, b, images, par, scratches),
+        }
+    }
+}
+
+/// Everything immutable about a built engine, shared by every clone and
+/// session via one `Arc`.
+pub(crate) struct EngineInner {
+    pub(crate) model: Model,
+    pub(crate) backend: EngineBackend,
+    /// Tile fan-out policy for single-image inference.
+    pub(crate) par: Parallelism,
+    /// Lane fan-out policy for batched inference (each lane is a whole
+    /// forward pass, so the default threshold is coarse).
+    pub(crate) lane_par: Parallelism,
+    /// Modeled per-image silicon cost under the schedule matching the
+    /// backend mode (digital baseline / PACiM static / PACiM dynamic).
+    pub(crate) cost: CostEstimate,
+    /// `"exact"` or `"pac"`, for reports.
+    pub(crate) mode: &'static str,
+}
+
+/// A prepared inference engine: the single typed front door to the
+/// bit-true PACiM pipeline (validated model + packed backend + cost
+/// model). Build one with [`super::EngineBuilder`]; clone it freely
+/// (clones share all preparation); open a [`Session`] per thread to run.
+///
+/// ```
+/// use pacim::engine::EngineBuilder;
+/// use pacim::nn::layers::synthetic::random_store;
+/// use pacim::nn::tiny_resnet;
+/// use pacim::util::rng::Rng;
+///
+/// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+/// let mut rng = Rng::new(7);
+/// let model = tiny_resnet(&random_store(&mut rng, 8, 10), 16, 10)?;
+/// let engine = EngineBuilder::new(model).exact().build()?;
+/// let out = engine.session().infer(&vec![0u8; engine.input_elems()])?;
+/// assert_eq!(out.logits.len(), engine.output_elems());
+/// # Ok(()) }
+/// ```
+#[derive(Clone)]
+pub struct Engine {
+    pub(crate) inner: Arc<EngineInner>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("model", &self.inner.model.name)
+            .field("mode", &self.inner.mode)
+            .field("input_elems", &self.input_elems())
+            .field("output_elems", &self.output_elems())
+            .field("modeled_cycles", &self.inner.cost.cycles)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Engine {
+    /// Start building an engine for `model` (PAC backend with the
+    /// paper-default configuration unless overridden).
+    pub fn builder(model: Model) -> super::EngineBuilder {
+        super::EngineBuilder::new(model)
+    }
+
+    /// The validated model program this engine runs.
+    pub fn model(&self) -> &Model {
+        &self.inner.model
+    }
+
+    /// `"exact"` or `"pac"`.
+    pub fn mode(&self) -> &'static str {
+        self.inner.mode
+    }
+
+    /// Elements per input image (C·H·W).
+    pub fn input_elems(&self) -> usize {
+        let m = &self.inner.model;
+        m.in_c * m.in_hw * m.in_hw
+    }
+
+    /// Elements per output (number of classes).
+    pub fn output_elems(&self) -> usize {
+        self.inner.model.num_classes
+    }
+
+    /// Modeled per-image PACiM cycles/energy under the schedule matching
+    /// this engine's backend mode.
+    pub fn cost_estimate(&self) -> CostEstimate {
+        self.inner.cost
+    }
+
+    /// Open a session: a mutable inference handle owning its scratch
+    /// arenas. Sessions are independent; open one per thread.
+    pub fn session(&self) -> Session {
+        Session {
+            engine: self.clone(),
+            scratches: vec![ModelScratch::default()],
+            lane_par: self.inner.lane_par,
+        }
+    }
+
+    fn check_image(&self, image: &[u8], context: &str) -> EngineResult<()> {
+        let want = self.input_elems();
+        if image.len() != want {
+            return Err(PacimError::ShapeMismatch {
+                context: context.into(),
+                got: image.len(),
+                want,
+            });
+        }
+        Ok(())
+    }
+
+    /// Run one validated image (internal: callers have already checked
+    /// the input length, so the interpreter's invariants hold).
+    pub(crate) fn run_validated(
+        &self,
+        image: &[u8],
+        par: &Parallelism,
+        scratch: &mut ModelScratch,
+    ) -> (Vec<f32>, RunStats) {
+        self.inner.backend.run(&self.inner.model, image, par, scratch)
+    }
+
+    /// Top-1 accuracy of this engine over a labeled image set, fanned out
+    /// over `threads` workers (each with its own warm scratch arena).
+    /// Bit-identical to evaluating the images one by one in a session:
+    /// per-image work is independent and all merged statistics are
+    /// integer counters.
+    pub fn evaluate(
+        &self,
+        images: &[&[u8]],
+        labels: &[usize],
+        threads: usize,
+    ) -> EngineResult<Evaluation> {
+        if images.len() != labels.len() {
+            return Err(PacimError::ShapeMismatch {
+                context: "evaluate labels".into(),
+                got: labels.len(),
+                want: images.len(),
+            });
+        }
+        let want = self.input_elems();
+        for (i, img) in images.iter().enumerate() {
+            // Context built only on the error path (no per-image allocation).
+            if img.len() != want {
+                return Err(PacimError::ShapeMismatch {
+                    context: format!("evaluate image {i}"),
+                    got: img.len(),
+                    want,
+                });
+            }
+        }
+        let n = images.len();
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let mut correct = 0usize;
+        let mut stats = RunStats::default();
+        let mut worker_died = false;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for _ in 0..threads.max(1) {
+                let next = &next;
+                handles.push(s.spawn(move || {
+                    let mut local_correct = 0usize;
+                    let mut local = RunStats::default();
+                    // Per-worker scratch arena, reused across every image
+                    // this worker claims (zero allocation per pixel).
+                    let mut scratch = ModelScratch::default();
+                    let par = Parallelism::off();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let (logits, st) = self.run_validated(images[i], &par, &mut scratch);
+                        local.merge(&st);
+                        if argmax(&logits) == labels[i] {
+                            local_correct += 1;
+                        }
+                    }
+                    (local_correct, local)
+                }));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok((c, st)) => {
+                        correct += c;
+                        stats.merge(&st);
+                    }
+                    Err(_) => worker_died = true,
+                }
+            }
+        });
+        if worker_died {
+            return Err(PacimError::Internal("an evaluation worker died".into()));
+        }
+        Ok(Evaluation {
+            accuracy: correct as f64 / n.max(1) as f64,
+            stats,
+            images: n,
+        })
+    }
+}
+
+/// A mutable inference handle over a shared [`Engine`]: owns the scratch
+/// arenas (im2col buffer, packed activation planes, accumulator slab, one
+/// set per batch lane) so repeated calls run out of warm buffers.
+///
+/// ```
+/// use pacim::engine::{EngineBuilder, PacimError};
+/// use pacim::nn::layers::synthetic::random_store;
+/// use pacim::nn::{tiny_resnet, PacConfig};
+/// use pacim::util::rng::Rng;
+///
+/// # fn main() -> Result<(), Box<dyn std::error::Error>> {
+/// let mut rng = Rng::new(11);
+/// let model = tiny_resnet(&random_store(&mut rng, 8, 10), 16, 10)?;
+/// let engine = EngineBuilder::new(model).pac(PacConfig::default()).build()?;
+/// let mut session = engine.session();
+///
+/// // Typed errors instead of aborts on every boundary:
+/// match session.infer(&[0u8; 3]) {
+///     Err(PacimError::ShapeMismatch { got: 3, .. }) => {}
+///     other => return Err(format!("wanted ShapeMismatch, got {other:?}").into()),
+/// }
+///
+/// let img = vec![128u8; engine.input_elems()];
+/// let out = session.infer(&img)?;
+/// assert_eq!(out.logits.len(), 10);
+/// assert!(out.stats.macs > 0);
+/// # Ok(()) }
+/// ```
+#[derive(Clone, Debug)]
+pub struct Session {
+    engine: Engine,
+    /// Lane-indexed scratch arenas; grown on demand, never shrunk, always
+    /// at least one (the single-image lane).
+    scratches: Vec<ModelScratch>,
+    lane_par: Parallelism,
+}
+
+impl Session {
+    /// The shared engine behind this session.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Modeled per-image silicon cost (see [`Engine::cost_estimate`]).
+    pub fn cost_estimate(&self) -> CostEstimate {
+        self.engine.cost_estimate()
+    }
+
+    /// Override the lane fan-out policy for [`Session::infer_batch`]
+    /// (bit-deterministic either way; this only changes speed).
+    pub fn set_lane_parallelism(&mut self, par: Parallelism) {
+        self.lane_par = par;
+    }
+
+    /// Pre-grow the per-lane scratch arenas to `lanes` (optional: batched
+    /// inference grows them on demand; serving executors pre-grow to the
+    /// compiled batch size so the first request pays no setup).
+    pub fn reserve_lanes(&mut self, lanes: usize) {
+        if self.scratches.len() < lanes {
+            self.scratches.resize_with(lanes, ModelScratch::default);
+        }
+    }
+
+    /// Classify one quantized CHW u8 image.
+    pub fn infer(&mut self, image: &[u8]) -> EngineResult<Inference> {
+        self.engine.check_image(image, "Session::infer input")?;
+        let par = self.engine.inner.par;
+        let (logits, stats) = self.engine.run_validated(image, &par, &mut self.scratches[0]);
+        Ok(Inference { logits, stats })
+    }
+
+    /// Classify one float CHW image, quantizing through the model's input
+    /// parameters first (the serving submission path).
+    pub fn infer_f32(&mut self, image: &[f32]) -> EngineResult<Inference> {
+        let want = self.engine.input_elems();
+        if image.len() != want {
+            return Err(PacimError::ShapeMismatch {
+                context: "Session::infer_f32 input".into(),
+                got: image.len(),
+                want,
+            });
+        }
+        let p = self.engine.inner.model.input_params;
+        let q: Vec<u8> = image.iter().map(|&x| p.quantize(x)).collect();
+        self.infer(&q)
+    }
+
+    /// Classify a batch of quantized images, fanning the lanes out per
+    /// the session's lane policy (each lane is one whole forward pass in
+    /// its own warm arena). Bit-identical to calling [`Session::infer`]
+    /// per image, in order.
+    pub fn infer_batch(&mut self, images: &[&[u8]]) -> EngineResult<Vec<Inference>> {
+        let want = self.engine.input_elems();
+        for (i, img) in images.iter().enumerate() {
+            // Inline length check: the context string is built only on the
+            // error path, so a valid serving batch allocates nothing here.
+            if img.len() != want {
+                return Err(PacimError::ShapeMismatch {
+                    context: format!("Session::infer_batch lane {i} input"),
+                    got: img.len(),
+                    want,
+                });
+            }
+        }
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.reserve_lanes(images.len());
+        let lanes = self.engine.inner.backend.run_batch(
+            &self.engine.inner.model,
+            images,
+            &self.lane_par,
+            &mut self.scratches[..images.len()],
+        );
+        Ok(lanes
+            .into_iter()
+            .map(|(logits, stats)| Inference { logits, stats })
+            .collect())
+    }
+
+    /// Labeled-set accuracy (delegates to [`Engine::evaluate`]; the
+    /// multi-threaded sweep uses per-worker arenas, not this session's).
+    pub fn evaluate(
+        &self,
+        images: &[&[u8]],
+        labels: &[usize],
+        threads: usize,
+    ) -> EngineResult<Evaluation> {
+        self.engine.evaluate(images, labels, threads)
+    }
+}

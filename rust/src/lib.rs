@@ -19,6 +19,11 @@
 //! and the per-experiment index mapping every table/figure of the paper
 //! to a bench target; `README.md` covers build/test/bench usage.
 //!
+//! The front door for running inference is [`engine`]: an
+//! [`engine::EngineBuilder`] → [`engine::Engine`] → [`engine::Session`]
+//! facade returning typed [`engine::PacimError`]s, used by the CLI, the
+//! benches, the examples, and the serving executor alike.
+//!
 //! ## Quick tour
 //!
 //! ```
@@ -40,6 +45,7 @@ pub mod arch;
 pub mod baselines;
 pub mod coordinator;
 pub mod energy;
+pub mod engine;
 pub mod memory;
 pub mod nn;
 pub mod pac;

@@ -20,7 +20,8 @@
 
 use pacim::coordinator::{schedule_model, ScheduleConfig};
 use pacim::energy::EnergyModel;
-use pacim::nn::{evaluate, exact_backend, pac_backend, tiny_resnet, PacConfig, WeightStore};
+use pacim::engine::EngineBuilder;
+use pacim::nn::{tiny_resnet, PacConfig, WeightStore};
 use pacim::pac::error_analysis::{pac_rmse, BitModel};
 use pacim::pac::ComputeMap;
 use pacim::runtime::manifest::artifacts_dir;
@@ -164,26 +165,29 @@ fn accuracy(args: &[String]) -> anyhow::Result<()> {
     let labels: Vec<usize> = (0..n).map(|i| ds.label(i)).collect();
     let threads = std::thread::available_parallelism()?.get();
 
-    let exact = exact_backend(&model);
-    let (acc_e, _) = evaluate(&model, &exact, &images, &labels, threads);
-    println!("exact 8b/8b accuracy : {:.2}% ({n} images)", acc_e * 100.0);
+    let exact = EngineBuilder::new(model.clone()).exact().build()?;
+    let ev_e = exact.evaluate(&images, &labels, threads)?;
+    println!(
+        "exact 8b/8b accuracy : {:.2}% ({n} images)",
+        ev_e.accuracy * 100.0
+    );
 
-    let mut cfg = PacConfig::default();
+    let mut builder = EngineBuilder::new(model).pac(PacConfig::default());
     if has_flag(args, "--dynamic") {
-        cfg.thresholds = Some(pacim::arch::ThresholdSet::default_cifar());
+        builder = builder.dynamic(pacim::arch::ThresholdSet::default_cifar());
     }
-    let pac = pac_backend(&model, cfg);
-    let (acc_p, stats) = evaluate(&model, &pac, &images, &labels, threads);
+    let pac = builder.build()?;
+    let ev_p = pac.evaluate(&images, &labels, threads)?;
     println!(
         "PAC 4-bit accuracy   : {:.2}%  (loss {:+.2}%)",
-        acc_p * 100.0,
-        (acc_p - acc_e) * 100.0
+        ev_p.accuracy * 100.0,
+        (ev_p.accuracy - ev_e.accuracy) * 100.0
     );
-    if stats.levels.total() > 0 {
+    if ev_p.stats.levels.total() > 0 {
         println!(
             "dynamic avg cycles   : {:.2} (reduction vs 64: {:.1}%)",
-            stats.levels.average_cycles(),
-            stats.levels.cycle_reduction_vs_digital() * 100.0
+            ev_p.stats.levels.average_cycles(),
+            ev_p.stats.levels.cycle_reduction_vs_digital() * 100.0
         );
     }
     Ok(())
@@ -253,23 +257,28 @@ fn serve_pac(args: &[String]) -> anyhow::Result<()> {
         .unwrap_or(1024);
 
     let (model, ds, source) = serving_workload();
-    let mut cfg = PacConfig::serving();
-    if has_flag(args, "--dynamic") {
-        if has_flag(args, "--exact") {
+    // One typed front door for every serving mode: the CLI builds an
+    // Engine, and the executor pool is a thin adapter over it.
+    let builder = EngineBuilder::new(model).parallelism(pacim::util::Parallelism::off());
+    let engine = if has_flag(args, "--exact") {
+        if has_flag(args, "--dynamic") {
             eprintln!("--dynamic has no effect with --exact (fully digital baseline)");
         }
-        cfg.thresholds = Some(pacim::arch::ThresholdSet::default_cifar());
-    }
-    let exec = if has_flag(args, "--exact") {
-        PacExecutor::exact(model, batch)
+        builder.exact().build()?
+    } else if has_flag(args, "--dynamic") {
+        builder
+            .pac(PacConfig::serving())
+            .dynamic(pacim::arch::ThresholdSet::default_cifar())
+            .build()?
     } else {
-        PacExecutor::new(model, cfg, batch)
+        builder.pac(PacConfig::serving()).build()?
     };
-    let backend = if has_flag(args, "--exact") { "exact" } else { "pac" };
+    let exec = PacExecutor::from_engine(engine, batch)?;
     println!(
-        "serving {} ({source}, {backend} executor) | {workers} workers | batch {batch} | \
+        "serving {} ({source}, {} executor) | {workers} workers | batch {batch} | \
          {clients} clients | {requests} requests",
-        exec.model().name
+        exec.model().name,
+        exec.engine().mode()
     );
 
     let server = InferenceServer::start_pool(
@@ -336,7 +345,7 @@ fn serve_pac(args: &[String]) -> anyhow::Result<()> {
         }
     });
     let wall = t0.elapsed();
-    let mut metrics = server.stop();
+    let metrics = server.stop();
     let served = served.load(std::sync::atomic::Ordering::Relaxed);
     let shed = shed.load(std::sync::atomic::Ordering::Relaxed);
     println!(
@@ -446,7 +455,7 @@ fn serve_pjrt(args: &[String]) -> anyhow::Result<()> {
         }
     });
     let wall = t0.elapsed();
-    let mut metrics = server.stop();
+    let metrics = server.stop();
     println!("served {requests} requests in {:.1} ms", wall.as_secs_f64() * 1e3);
     println!(
         "throughput {:.1} img/s | p50 {:.0} us | p95 {:.0} us | p99 {:.0} us | mean batch {:.1}",

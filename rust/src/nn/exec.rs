@@ -178,12 +178,24 @@ pub(crate) fn exact_gemm_tiled(
 /// The shared interpreter. Runs `model` on one quantized CHW image with
 /// the driver scalar (the deterministic reference path; a backend's own
 /// configured parallelism, e.g. `PacConfig::par`, still applies).
+#[deprecated(
+    since = "0.1.0",
+    note = "construct inference through `pacim::engine` \
+            (`EngineBuilder::new(model).build()?.session().infer(&img)?`); \
+            `run_model_with` remains the low-level reference entry point"
+)]
 pub fn run_model<B: MacBackend + Sync>(
     model: &Model,
     backend: &B,
     image: &[u8],
 ) -> (Vec<f32>, RunStats) {
-    run_model_par(model, backend, image, &Parallelism::off())
+    run_model_with(
+        model,
+        backend,
+        image,
+        &Parallelism::off(),
+        &mut ModelScratch::default(),
+    )
 }
 
 /// The shared interpreter with an explicit parallelism policy, handed to
@@ -194,6 +206,12 @@ pub fn run_model<B: MacBackend + Sync>(
 /// Bit-identical to [`run_model`] for any `par`: tiles own disjoint
 /// output rows, per-tile statistics are integer counters merged in tile
 /// order, and backends are required to be bit-deterministic.
+#[deprecated(
+    since = "0.1.0",
+    note = "construct inference through `pacim::engine` \
+            (`EngineBuilder::new(model).parallelism(par).build()?`); \
+            `run_model_with` remains the low-level reference entry point"
+)]
 pub fn run_model_par<B: MacBackend + Sync>(
     model: &Model,
     backend: &B,
@@ -336,6 +354,12 @@ pub fn run_model_with<B: MacBackend + Sync>(
 ///
 /// Bit-identical to looping [`run_model`] over `images`: lanes are
 /// independent and collected in lane order.
+#[deprecated(
+    since = "0.1.0",
+    note = "construct inference through `pacim::engine` \
+            (`Session::infer_batch`); `run_model_batch_with` remains the \
+            low-level reference entry point"
+)]
 pub fn run_model_batch<B: MacBackend + Sync>(
     model: &Model,
     backend: &B,
@@ -434,6 +458,11 @@ pub fn exact_backend(model: &Model) -> ExactBackend {
 }
 
 /// Run a whole dataset slice and return top-1 accuracy.
+#[deprecated(
+    since = "0.1.0",
+    note = "construct inference through `pacim::engine` \
+            (`Engine::evaluate` returns a typed `Evaluation` and never aborts)"
+)]
 pub fn evaluate<B: MacBackend + Sync>(
     model: &Model,
     backend: &B,
@@ -482,6 +511,10 @@ pub fn evaluate<B: MacBackend + Sync>(
 
 #[cfg(test)]
 mod tests {
+    // The deprecated convenience wrappers stay covered until the shims
+    // are deleted; new code goes through `pacim::engine`.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::nn::layers::{synthetic, tiny_resnet};
     use crate::util::rng::Rng;

@@ -8,6 +8,11 @@
 //!
 //! Accuracy experiments (Fig. 6, Table 2) run the same trained model
 //! through both backends and diff the top-1 accuracy.
+//!
+//! Construct inference through [`crate::engine`] (the typed Session
+//! front door); the free functions re-exported here are the low-level
+//! reference path (`run_model_with`, `run_model_batch_with`) plus
+//! deprecated convenience shims kept for migration.
 
 pub mod exec;
 pub mod layers;
@@ -16,9 +21,13 @@ pub mod profiler;
 pub mod weights;
 
 pub use exec::{
-    evaluate, exact_backend, run_model, run_model_batch, run_model_batch_with, run_model_par,
-    run_model_with, ExactBackend, MacBackend, ModelScratch, RunStats,
+    exact_backend, run_model_batch_with, run_model_with, ExactBackend, MacBackend, ModelScratch,
+    RunStats,
 };
+// Deprecated convenience wrappers, kept as shims while call sites move to
+// `pacim::engine` (the typed Session front door).
+#[allow(deprecated)]
+pub use exec::{evaluate, run_model, run_model_batch, run_model_par};
 pub use layers::{tiny_resnet, tiny_vgg, ConvLayer, LinearLayer, Model, Op};
 pub use pac_exec::{pac_backend, PacBackend, PacConfig};
 pub use profiler::{LayerProfile, ProfilingBackend};

@@ -635,6 +635,10 @@ pub fn pac_backend(model: &super::layers::Model, config: PacConfig) -> PacBacken
 
 #[cfg(test)]
 mod tests {
+    // These tests exercise the deprecated convenience wrappers on purpose
+    // (the shims stay covered until deletion); new code uses the engine.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::nn::exec::{exact_backend, run_model};
     use crate::nn::layers::{synthetic, tiny_resnet};

@@ -164,6 +164,10 @@ impl<B: MacBackend> MacBackend for ProfilingBackend<B> {
 
 #[cfg(test)]
 mod tests {
+    // run_model is deprecated in favor of `pacim::engine`; the profiler
+    // tests drive the raw interpreter on purpose.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::nn::exec::{exact_backend, run_model, ExactBackend};
     use crate::nn::layers::{synthetic, tiny_resnet};

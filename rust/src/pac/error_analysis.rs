@@ -18,7 +18,7 @@ pub enum BitModel {
     /// i.i.d. Bernoulli(p) per element — the paper's assumption (Eq. 2).
     Iid,
     /// Correlated bits: runs of identical values with the given mean run
-    /// length (> 1). Stresses the independence assumption (DESIGN.md §10
+    /// length (> 1). Stresses the independence assumption (DESIGN.md §11
     /// ablation) — real activation bit-planes are spatially correlated.
     Correlated { mean_run: f64 },
 }

@@ -12,7 +12,7 @@ use super::sparsity::BitPlanes;
 use crate::util::and_popcount;
 use rayon::prelude::*;
 
-/// Rounding mode of the PCU's fixed-point divide (ablation: §10 of
+/// Rounding mode of the PCU's fixed-point divide (ablation: §11 of
 /// DESIGN.md). Hardware divides by the DP length `n`; `RoundNearest`
 /// models a divider with a +n/2 pre-add, `Floor` a bare shifter chain.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

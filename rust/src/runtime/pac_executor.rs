@@ -1,114 +1,89 @@
 //! The PAC-native batch executor: serving without PJRT.
 //!
-//! [`PacExecutor`] implements [`BatchExecutor`] directly on top of the
-//! bit-true engine (`nn::exec` + `nn::pac_exec`): each request lane is
-//! quantized to u8, run through im2col → bit-plane encoding → hybrid
-//! digital/sparsity MAC, and the float logits are returned. Intra-batch
+//! [`PacExecutor`] is a thin [`BatchExecutor`] adapter over the typed
+//! engine front door ([`crate::engine::Engine`]): each request lane is
+//! quantized to u8 and run through one [`Session`] whose per-lane
+//! scratch arenas persist across `execute` calls, so a warm worker's
+//! whole forward pass allocates nothing per pixel. Intra-batch
 //! parallelism fans the lanes out over rayon via [`Parallelism::coarse`]
 //! (one lane = one whole forward pass).
 //!
-//! The executor is `Clone` (the prepared backend — packed weight
-//! bit-planes, sparsity counts — is behind an `Arc`), so a worker pool
-//! shares one weight preparation: `InferenceServer::start_pool(move |_|
-//! Ok(exec.clone()), policy)`.
+//! The executor is `Clone` (the engine — packed weight bit-planes,
+//! sparsity counts, cost model — is `Arc`-shared; each clone gets its
+//! own session arenas), so a worker pool shares one weight preparation:
+//! `InferenceServer::start_pool(move |_| Ok(exec.clone()), policy)`.
 //!
 //! Every executor carries the modeled PACiM cost of one image
-//! ([`CostEstimate`], from `coordinator::scheduler`), which the server
+//! ([`CostEstimate`], computed by the engine builder), which the server
 //! attaches to each reply — a load test against this executor reports
 //! software latency *and* modeled silicon cycles/energy side by side.
 
-use crate::coordinator::scheduler::{
-    estimate_image_cost, model_shapes, CostEstimate, ScheduleConfig,
-};
+use crate::coordinator::scheduler::CostEstimate;
 use crate::coordinator::server::BatchExecutor;
-use crate::energy::EnergyModel;
-use crate::nn::exec::{
-    exact_backend, run_model_batch_with, ExactBackend, ModelScratch, RunStats,
-};
+use crate::engine::{Engine, EngineBuilder, PacimError, Session};
+use crate::nn::exec::RunStats;
 use crate::nn::layers::Model;
-use crate::nn::pac_exec::{pac_backend, PacBackend, PacConfig};
+use crate::nn::pac_exec::PacConfig;
 use crate::util::Parallelism;
-use std::sync::Arc;
 
-/// The prepared compute engine behind an executor.
-enum Engine {
-    /// Hybrid digital/sparsity PAC computation (the paper's architecture).
-    Pac(PacBackend),
-    /// Exact 8b/8b integer baseline (fully digital D-CiM).
-    Exact(ExactBackend),
-}
-
-impl Engine {
-    fn run_batch(
-        &self,
-        model: &Model,
-        images: &[&[u8]],
-        par: &Parallelism,
-        scratches: &mut [ModelScratch],
-    ) -> Vec<(Vec<f32>, RunStats)> {
-        match self {
-            Engine::Pac(b) => run_model_batch_with(model, b, images, par, scratches),
-            Engine::Exact(b) => run_model_batch_with(model, b, images, par, scratches),
-        }
-    }
-}
-
-/// A pure-rust [`BatchExecutor`] over the PAC engine.
-#[derive(Clone)]
+/// A pure-rust [`BatchExecutor`] adapter over [`Engine`].
+#[derive(Clone, Debug)]
 pub struct PacExecutor {
-    model: Arc<Model>,
-    engine: Arc<Engine>,
+    engine: Engine,
+    /// Per-executor session: lane-indexed scratch arenas kept across
+    /// `execute` calls (each pool worker clones the executor, so arenas
+    /// are per-worker).
+    session: Session,
     batch: usize,
-    par: Parallelism,
-    cost: CostEstimate,
     stats: RunStats,
-    /// Per-lane scratch arenas, kept across `execute` calls: a warm
-    /// worker's forward passes reuse the im2col / packed-plane /
-    /// accumulator buffers — zero steady-state allocation per pixel.
-    /// (Each worker clones the executor, so arenas are per-worker.)
-    scratch: Vec<ModelScratch>,
 }
 
 impl PacExecutor {
-    /// Build a PAC executor for `model` at compiled batch size `batch`.
-    /// Weight bit-planes are packed once, here. The cost annotation
-    /// follows the config: dynamic thresholds report the dynamic
-    /// schedule (avg 12 digital cycles), static the 4-bit default.
-    pub fn new(model: Model, config: PacConfig, batch: usize) -> Self {
-        let sched = if config.thresholds.is_some() {
-            ScheduleConfig::pacim_dynamic()
-        } else {
-            ScheduleConfig::pacim_default()
-        };
-        let engine = Engine::Pac(pac_backend(&model, config));
-        Self::build(model, engine, batch, sched)
+    /// Adapt a built engine to the serving trait at batch size `batch`
+    /// (≥ 1; a zero-lane executor tile can serve no requests).
+    pub fn from_engine(engine: Engine, batch: usize) -> Result<Self, PacimError> {
+        if batch == 0 {
+            return Err(PacimError::InvalidConfig(
+                "executor batch size must be ≥ 1 (got 0)".into(),
+            ));
+        }
+        // The session inherits the engine's lane policy (default
+        // `Parallelism::coarse`); `with_parallelism` overrides per clone.
+        let mut session = engine.session();
+        session.reserve_lanes(batch);
+        Ok(Self {
+            engine,
+            session,
+            batch,
+            stats: RunStats::default(),
+        })
+    }
+
+    /// Build a PAC executor for `model` at batch size `batch`. Weight
+    /// bit-planes are packed once, by the engine builder; the cost
+    /// annotation follows the config (dynamic thresholds report the
+    /// dynamic schedule, static the 4-bit default).
+    pub fn new(model: Model, config: PacConfig, batch: usize) -> Result<Self, PacimError> {
+        let engine = EngineBuilder::new(model)
+            .pac(config)
+            .parallelism(Parallelism::off())
+            .build()?;
+        Self::from_engine(engine, batch)
     }
 
     /// Exact 8b/8b baseline executor (for A/B serving comparisons); its
     /// cost annotation uses the fully digital schedule.
-    pub fn exact(model: Model, batch: usize) -> Self {
-        let engine = Engine::Exact(exact_backend(&model));
-        Self::build(model, engine, batch, ScheduleConfig::digital_baseline())
-    }
-
-    fn build(model: Model, engine: Engine, batch: usize, sched: ScheduleConfig) -> Self {
-        let shapes = model_shapes(&model);
-        let cost = estimate_image_cost(&shapes, &sched, &EnergyModel::default());
-        let batch = batch.max(1);
-        Self {
-            model: Arc::new(model),
-            engine: Arc::new(engine),
-            batch,
-            par: Parallelism::coarse(),
-            cost,
-            stats: RunStats::default(),
-            scratch: vec![ModelScratch::default(); batch],
-        }
+    pub fn exact(model: Model, batch: usize) -> Result<Self, PacimError> {
+        let engine = EngineBuilder::new(model)
+            .exact()
+            .parallelism(Parallelism::off())
+            .build()?;
+        Self::from_engine(engine, batch)
     }
 
     /// Override the intra-batch (lane) parallelism policy.
     pub fn with_parallelism(mut self, par: Parallelism) -> Self {
-        self.par = par;
+        self.session.set_lane_parallelism(par);
         self
     }
 
@@ -119,7 +94,12 @@ impl PacExecutor {
     }
 
     pub fn model(&self) -> &Model {
-        &self.model
+        self.engine.model()
+    }
+
+    /// The shared engine behind this executor.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 }
 
@@ -129,53 +109,52 @@ impl BatchExecutor for PacExecutor {
     }
 
     fn input_elems(&self) -> usize {
-        self.model.in_c * self.model.in_hw * self.model.in_hw
+        self.engine.input_elems()
     }
 
     fn output_elems(&self) -> usize {
-        self.model.num_classes
+        self.engine.output_elems()
     }
 
     fn execute(&mut self, batch: &[f32], occupancy: usize) -> anyhow::Result<Vec<f32>> {
         let in_elems = self.input_elems();
-        anyhow::ensure!(
-            batch.len() == self.batch * in_elems,
-            "batch buffer has {} elems, expected {}",
-            batch.len(),
-            self.batch * in_elems
-        );
+        let out_elems = self.output_elems();
+        if batch.len() != self.batch * in_elems {
+            return Err(PacimError::ShapeMismatch {
+                context: "PacExecutor::execute batch buffer".into(),
+                got: batch.len(),
+                want: self.batch * in_elems,
+            }
+            .into());
+        }
         // No fixed compiled batch here: padded lanes would burn a whole
         // forward pass each and pollute the stats, so only the occupied
         // lanes run; the rest of the output is zero-filled (the server
         // never reads it).
         let occupancy = occupancy.clamp(1, self.batch);
-        let p = self.model.input_params;
+        let p = self.engine.model().input_params;
         let quantized: Vec<u8> = batch[..occupancy * in_elems]
             .iter()
             .map(|&x| p.quantize(x))
             .collect();
         let images: Vec<&[u8]> = quantized.chunks_exact(in_elems).collect();
-        let lanes =
-            self.engine
-                .run_batch(&self.model, &images, &self.par, &mut self.scratch);
-        let mut out = vec![0f32; self.batch * self.model.num_classes];
-        for (lane, (logits, st)) in lanes.iter().enumerate() {
-            self.stats.merge(st);
-            out[lane * self.model.num_classes..(lane + 1) * self.model.num_classes]
-                .copy_from_slice(logits);
+        let lanes = self.session.infer_batch(&images)?;
+        let mut out = vec![0f32; self.batch * out_elems];
+        for (lane, inf) in lanes.iter().enumerate() {
+            self.stats.merge(&inf.stats);
+            out[lane * out_elems..(lane + 1) * out_elems].copy_from_slice(&inf.logits);
         }
         Ok(out)
     }
 
     fn cost_estimate(&self) -> Option<CostEstimate> {
-        Some(self.cost)
+        Some(self.engine.cost_estimate())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::exec::run_model;
     use crate::workload::synthetic_serving_workload;
 
     fn workload() -> (Model, crate::workload::Dataset) {
@@ -185,13 +164,15 @@ mod tests {
     #[test]
     fn executor_matches_offline_inference_bit_exactly() {
         let (model, ds) = workload();
+        let offline_engine = EngineBuilder::new(model.clone())
+            .pac(PacConfig::serving())
+            .build()
+            .unwrap();
+        let mut offline_session = offline_engine.session();
         let offline: Vec<Vec<f32>> = (0..4)
-            .map(|i| {
-                let backend = pac_backend(&model, PacConfig::serving());
-                run_model(&model, &backend, ds.image(i)).0
-            })
+            .map(|i| offline_session.infer(ds.image(i)).unwrap().logits)
             .collect();
-        let mut exec = PacExecutor::new(model, PacConfig::serving(), 4);
+        let mut exec = PacExecutor::new(model, PacConfig::serving(), 4).unwrap();
         let in_elems = exec.input_elems();
         let mut flat = vec![0f32; 4 * in_elems];
         for i in 0..4 {
@@ -209,7 +190,7 @@ mod tests {
     #[test]
     fn padded_lanes_are_not_computed() {
         let (model, ds) = workload();
-        let mut exec = PacExecutor::new(model, PacConfig::serving(), 4);
+        let mut exec = PacExecutor::new(model, PacConfig::serving(), 4).unwrap();
         let in_elems = exec.input_elems();
         let mut flat = vec![0f32; 4 * in_elems];
         for (j, &q) in ds.image(0).iter().enumerate() {
@@ -228,7 +209,9 @@ mod tests {
     fn lane_parallelism_is_bit_deterministic() {
         let (model, ds) = workload();
         let mk = |par: Parallelism| {
-            PacExecutor::new(model.clone(), PacConfig::serving(), 4).with_parallelism(par)
+            PacExecutor::new(model.clone(), PacConfig::serving(), 4)
+                .unwrap()
+                .with_parallelism(par)
         };
         let mut scalar = mk(Parallelism::off());
         let mut coarse = mk(Parallelism::coarse());
@@ -248,8 +231,8 @@ mod tests {
     #[test]
     fn cost_annotation_present_and_cheaper_than_exact() {
         let (model, _) = workload();
-        let pac = PacExecutor::new(model.clone(), PacConfig::serving(), 2);
-        let exact = PacExecutor::exact(model, 2);
+        let pac = PacExecutor::new(model.clone(), PacConfig::serving(), 2).unwrap();
+        let exact = PacExecutor::exact(model, 2).unwrap();
         let cp = pac.cost_estimate().unwrap();
         let ce = exact.cost_estimate().unwrap();
         assert!(cp.cycles < ce.cycles);
@@ -259,7 +242,14 @@ mod tests {
     #[test]
     fn wrong_batch_buffer_rejected() {
         let (model, _) = workload();
-        let mut exec = PacExecutor::new(model, PacConfig::serving(), 2);
+        let mut exec = PacExecutor::new(model, PacConfig::serving(), 2).unwrap();
         assert!(exec.execute(&[0.0; 7], 1).is_err());
+    }
+
+    #[test]
+    fn zero_batch_is_a_typed_config_error() {
+        let (model, _) = workload();
+        let err = PacExecutor::new(model, PacConfig::serving(), 0).unwrap_err();
+        assert!(matches!(err, PacimError::InvalidConfig(_)), "{err}");
     }
 }

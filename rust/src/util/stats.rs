@@ -199,15 +199,27 @@ impl Histogram {
     }
 }
 
-/// Percentile over a mutable sample buffer (nearest-rank). Used by the
-/// serving-latency reporting where sample counts are small.
+/// Percentile over a mutable sample buffer (nearest-rank): sorts, then
+/// delegates to [`percentile_sorted`].
 pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
     assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(samples, p)
+}
+
+/// Percentile over an **ascending-sorted** sample buffer (nearest-rank);
+/// `0.0` on an empty buffer. The serving metrics sort their latency
+/// reservoir once at `stop()` and answer every percentile query through
+/// this read-only path.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     assert!((0.0..=100.0).contains(&p));
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input not sorted");
+    if sorted.is_empty() {
+        return 0.0;
+    }
     // Nearest-rank: the ⌈p/100·N⌉-th smallest sample (1-indexed).
-    let rank = ((p / 100.0) * samples.len() as f64).ceil().max(1.0) as usize;
-    samples[rank - 1]
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank - 1]
 }
 
 /// RMSE between two equal-length slices.
@@ -292,6 +304,18 @@ mod tests {
         assert_eq!(percentile(&mut s, 50.0), 50.0);
         assert_eq!(percentile(&mut s, 0.0), 1.0);
         assert_eq!(percentile(&mut s, 100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_sorting_path() {
+        let mut unsorted = vec![9.0, 1.0, 5.0, 3.0, 7.0];
+        let mut sorted = unsorted.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for p in [0.0, 10.0, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile(&mut unsorted, p), percentile_sorted(&sorted, p));
+        }
+        // Empty reservoir: a defined zero, not an abort.
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
     }
 
     #[test]

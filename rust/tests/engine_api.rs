@@ -1,0 +1,498 @@
+//! The `pacim::engine` front door: typed error paths (unit tests) and
+//! the facade invariant (property tests) — `Engine`/`Session` output is
+//! **bit-identical** (logits *and* `RunStats`) to the retained low-level
+//! reference path (`nn::run_model_with` over an explicitly constructed
+//! backend), for both backends, with parallelism on and off.
+
+use pacim::arch::ThresholdSet;
+use pacim::coordinator::{BatchPolicy, InferenceServer, ServeError};
+use pacim::engine::{EngineBuilder, PacimError};
+use pacim::nn::layers::synthetic::random_store;
+use pacim::nn::{
+    exact_backend, pac_backend, run_model_with, tiny_resnet, ConvLayer, LinearLayer, Model,
+    ModelScratch, Op, PacConfig, RunStats,
+};
+use pacim::pac::{ComputeMap, PcuRounding};
+use pacim::runtime::PacExecutor;
+use pacim::tensor::{Conv2dGeom, QuantParams, Tensor};
+use pacim::util::check::Checker;
+use pacim::util::rng::Rng;
+use pacim::util::Parallelism;
+
+fn small_model(seed: u64, c: usize, classes: usize, hw: usize) -> Model {
+    let mut rng = Rng::new(seed);
+    tiny_resnet(&random_store(&mut rng, c, classes), hw, classes).unwrap()
+}
+
+fn image_for(model: &Model, rng: &mut Rng) -> Vec<u8> {
+    (0..model.in_c * model.in_hw * model.in_hw)
+        .map(|_| rng.below(256) as u8)
+        .collect()
+}
+
+fn assert_stats_eq(a: &RunStats, b: &RunStats) {
+    assert_eq!(a.macs, b.macs);
+    assert_eq!(a.digital_cycles, b.digital_cycles);
+    assert_eq!(a.pcu_ops, b.pcu_ops);
+    assert_eq!(a.levels, b.levels);
+}
+
+// ---------------------------------------------------------------------------
+// Facade invariant: Engine ≡ legacy reference path, bit for bit.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_engine_bit_identical_to_legacy_reference() {
+    // The acceptance invariant of the API redesign: for random models,
+    // images, backend modes, configurations, and parallelism policies,
+    // the engine façade reproduces the reference path exactly — logits
+    // and statistics. A pure refactor: zero numeric drift.
+    Checker::new("engine_vs_reference", 24).run(|rng| {
+        let classes = 2 + rng.below(6) as usize;
+        let model = small_model(rng.next_u64(), 4, classes, 8);
+        let img = image_for(&model, rng);
+        let par = if rng.bernoulli(0.5) {
+            Parallelism::off()
+        } else {
+            Parallelism {
+                enabled: true,
+                min_items: 1,
+            }
+        };
+        let exact_mode = rng.bernoulli(0.4);
+        let cfg = PacConfig {
+            map: if rng.bernoulli(0.5) {
+                ComputeMap::operand_based(4, 4)
+            } else {
+                ComputeMap::operand_based(5, 3)
+            },
+            thresholds: None,
+            rounding: if rng.bernoulli(0.5) {
+                PcuRounding::RoundNearest
+            } else {
+                PcuRounding::Floor
+            },
+            first_layer_exact: rng.bernoulli(0.5),
+            min_dp_len: if rng.bernoulli(0.5) { 0 } else { 512 },
+            par: Parallelism::off(),
+        };
+
+        // Reference: explicit backend + the low-level interpreter entry.
+        let (ref_logits, ref_stats) = if exact_mode {
+            let b = exact_backend(&model);
+            run_model_with(&model, &b, &img, &par, &mut ModelScratch::default())
+        } else {
+            let b = pac_backend(&model, cfg.clone());
+            run_model_with(&model, &b, &img, &par, &mut ModelScratch::default())
+        };
+
+        // Façade: the same computation through the one front door.
+        let builder = EngineBuilder::new(model).parallelism(par);
+        let engine = if exact_mode {
+            builder.exact().build().unwrap()
+        } else {
+            builder.pac(cfg).build().unwrap()
+        };
+        let mut session = engine.session();
+        let out = session.infer(&img).unwrap();
+        assert_eq!(out.logits, ref_logits, "engine logits diverged");
+        assert_stats_eq(&out.stats, &ref_stats);
+
+        // Warm-scratch repeat: same result out of reused arenas.
+        let again = session.infer(&img).unwrap();
+        assert_eq!(again.logits, ref_logits);
+        assert_stats_eq(&again.stats, &ref_stats);
+    });
+}
+
+#[test]
+fn prop_engine_dynamic_thresholds_match_reference() {
+    // Same invariant on the dynamic-workload path (per-pixel level
+    // classification), including the level histogram.
+    Checker::new("engine_dynamic_vs_reference", 12).run(|rng| {
+        let model = small_model(rng.next_u64(), 4, 4, 8);
+        let img = image_for(&model, rng);
+        let th = ThresholdSet::new(0.08, 0.16, 0.30);
+        let cfg = PacConfig {
+            thresholds: Some(th),
+            ..PacConfig::default()
+        };
+        let b = pac_backend(&model, cfg);
+        let (ref_logits, ref_stats) =
+            run_model_with(&model, &b, &img, &Parallelism::off(), &mut ModelScratch::default());
+        let engine = EngineBuilder::new(model)
+            .pac(PacConfig::default())
+            .dynamic(th)
+            .parallelism(Parallelism::off())
+            .build()
+            .unwrap();
+        let out = engine.session().infer(&img).unwrap();
+        assert_eq!(out.logits, ref_logits);
+        assert_stats_eq(&out.stats, &ref_stats);
+        assert!(out.stats.levels.total() > 0, "dynamic path must classify");
+    });
+}
+
+#[test]
+fn prop_infer_batch_matches_sequential_infer() {
+    Checker::new("engine_batch_vs_sequential", 12).run(|rng| {
+        let model = small_model(rng.next_u64(), 4, 4, 8);
+        let engine = EngineBuilder::new(model.clone())
+            .pac(PacConfig::default())
+            .build()
+            .unwrap();
+        let lanes = 1 + rng.below(5) as usize;
+        let imgs: Vec<Vec<u8>> = (0..lanes).map(|_| image_for(&model, rng)).collect();
+        let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let mut session = engine.session();
+        let seq: Vec<_> = refs.iter().map(|i| session.infer(i).unwrap()).collect();
+        for lane_par in [Parallelism::off(), Parallelism::coarse()] {
+            let mut batch_session = engine.session();
+            batch_session.set_lane_parallelism(lane_par);
+            let batch = batch_session.infer_batch(&refs).unwrap();
+            assert_eq!(batch.len(), seq.len());
+            for (a, b) in batch.iter().zip(&seq) {
+                assert_eq!(a.logits, b.logits);
+                assert_stats_eq(&a.stats, &b.stats);
+            }
+        }
+    });
+}
+
+#[test]
+#[allow(deprecated)]
+fn engine_evaluate_matches_legacy_evaluate() {
+    // Same accuracy, same aggregate statistics, including argmax
+    // tie-breaking, vs the deprecated free-function evaluate.
+    let model = small_model(4242, 8, 10, 16);
+    let mut rng = Rng::new(77);
+    let imgs: Vec<Vec<u8>> = (0..12).map(|_| image_for(&model, &mut rng)).collect();
+    let images: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let labels: Vec<usize> = (0..12).map(|_| rng.below(10) as usize).collect();
+    for threads in [1usize, 4] {
+        let backend = pac_backend(&model, PacConfig::default());
+        let (legacy_acc, legacy_stats) =
+            pacim::nn::evaluate(&model, &backend, &images, &labels, threads);
+        let engine = EngineBuilder::new(model.clone())
+            .pac(PacConfig::default())
+            .build()
+            .unwrap();
+        let ev = engine.evaluate(&images, &labels, threads).unwrap();
+        assert_eq!(ev.accuracy, legacy_acc, "threads={threads}");
+        assert_stats_eq(&ev.stats, &legacy_stats);
+        assert_eq!(ev.images, 12);
+    }
+}
+
+#[test]
+fn cost_estimates_follow_backend_mode() {
+    let model = small_model(5555, 4, 4, 8);
+    let exact = EngineBuilder::new(model.clone()).exact().build().unwrap();
+    let pac = EngineBuilder::new(model.clone())
+        .pac(PacConfig::default())
+        .build()
+        .unwrap();
+    let dynamic = EngineBuilder::new(model)
+        .pac(PacConfig::default())
+        .dynamic(ThresholdSet::default_cifar())
+        .build()
+        .unwrap();
+    let (ce, cp, cd) = (
+        exact.cost_estimate(),
+        pac.cost_estimate(),
+        dynamic.cost_estimate(),
+    );
+    assert!(cp.cycles < ce.cycles, "PAC must model fewer cycles");
+    assert!(cd.cycles < cp.cycles, "dynamic must model fewer still");
+    // Sessions expose the same annotation.
+    assert_eq!(pac.session().cost_estimate().cycles, cp.cycles);
+}
+
+// ---------------------------------------------------------------------------
+// Typed error paths: shapes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_wrong_input_length_is_typed_never_fatal() {
+    Checker::new("engine_bad_input_lengths", 48).run(|rng| {
+        let model = small_model(rng.next_u64(), 4, 4, 8);
+        let engine = EngineBuilder::new(model).exact().build().unwrap();
+        let want = engine.input_elems();
+        let mut got = rng.below(2 * want as u32 + 7) as usize;
+        if got == want {
+            got += 1;
+        }
+        let mut session = engine.session();
+        match session.infer(&vec![0u8; got]) {
+            Err(PacimError::ShapeMismatch { got: g, want: w, .. }) => {
+                assert_eq!((g, w), (got, want));
+            }
+            other => panic!("wanted ShapeMismatch, got {other:?}"),
+        }
+        match session.infer_f32(&vec![0.0f32; got]) {
+            Err(PacimError::ShapeMismatch { got: g, .. }) => assert_eq!(g, got),
+            other => panic!("wanted ShapeMismatch, got {other:?}"),
+        }
+        let good = vec![0u8; want];
+        let bad = vec![0u8; got];
+        match session.infer_batch(&[good.as_slice(), bad.as_slice()]) {
+            Err(PacimError::ShapeMismatch { context, .. }) => {
+                assert!(context.contains("lane 1"), "{context}");
+            }
+            other => panic!("wanted ShapeMismatch, got {other:?}"),
+        }
+        // The session stays usable after every rejection.
+        assert!(session.infer(&good).is_ok());
+    });
+}
+
+#[test]
+fn evaluate_label_arity_mismatch_is_typed() {
+    let model = small_model(99, 4, 4, 8);
+    let engine = EngineBuilder::new(model).exact().build().unwrap();
+    let img = vec![0u8; engine.input_elems()];
+    let err = engine.evaluate(&[img.as_slice()], &[0, 1], 2).unwrap_err();
+    assert!(matches!(err, PacimError::ShapeMismatch { .. }), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Typed error paths: configuration.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn invalid_cycle_split_rejected() {
+    let model = small_model(100, 4, 4, 8);
+    for (bx, bw) in [(9u32, 4u32), (4, 9), (200, 200)] {
+        let err = EngineBuilder::new(model.clone())
+            .approx_bits(bx, bw)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, PacimError::InvalidConfig(_)), "{bx}x{bw}: {err}");
+    }
+    // In-range splits build fine, including the degenerate all-sparsity 0×0.
+    for (bx, bw) in [(0u32, 0u32), (8, 8), (4, 4)] {
+        assert!(EngineBuilder::new(model.clone()).approx_bits(bx, bw).build().is_ok());
+    }
+}
+
+#[test]
+fn dynamic_thresholds_require_4x4_base_map() {
+    let model = small_model(101, 4, 4, 8);
+    let cfg = PacConfig {
+        map: ComputeMap::operand_based(5, 5),
+        thresholds: Some(ThresholdSet::default_cifar()),
+        ..PacConfig::default()
+    };
+    let err = EngineBuilder::new(model.clone()).pac(cfg).build().unwrap_err();
+    match err {
+        PacimError::InvalidConfig(msg) => {
+            assert!(msg.contains("4×4"), "{msg}");
+            assert!(msg.contains("16 digital"), "{msg}");
+        }
+        other => panic!("wanted InvalidConfig, got {other:?}"),
+    }
+    // On the 4×4 base the same thresholds are accepted.
+    let ok = PacConfig {
+        thresholds: Some(ThresholdSet::default_cifar()),
+        ..PacConfig::default()
+    };
+    assert!(EngineBuilder::new(model).pac(ok).build().is_ok());
+}
+
+#[test]
+fn exact_backend_rejects_pac_only_options() {
+    let model = small_model(102, 4, 4, 8);
+    let e1 = EngineBuilder::new(model.clone())
+        .exact()
+        .dynamic(ThresholdSet::default_cifar())
+        .build()
+        .unwrap_err();
+    assert!(matches!(e1, PacimError::InvalidConfig(_)), "{e1}");
+    let e2 = EngineBuilder::new(model)
+        .exact()
+        .approx_bits(4, 4)
+        .build()
+        .unwrap_err();
+    assert!(matches!(e2, PacimError::InvalidConfig(_)), "{e2}");
+}
+
+// ---------------------------------------------------------------------------
+// Typed error paths: model validation.
+// ---------------------------------------------------------------------------
+
+fn logits_linear(in_f: usize, out_f: usize) -> LinearLayer {
+    LinearLayer {
+        name: "fc".into(),
+        in_f,
+        out_f,
+        weight: Tensor::from_vec(&[out_f, in_f], vec![1u8; out_f * in_f]),
+        wparams: QuantParams::new(1.0, 0),
+        bias: vec![0.0; out_f],
+        out_params: None,
+        relu: false,
+    }
+}
+
+fn mini_model(ops: Vec<Op>, in_c: usize, in_hw: usize) -> Model {
+    Model {
+        name: "mini".into(),
+        ops,
+        input_params: QuantParams::new(1.0, 0),
+        in_c,
+        in_hw,
+        num_classes: 2,
+    }
+}
+
+#[test]
+fn empty_model_is_a_typed_error() {
+    let err = EngineBuilder::new(mini_model(vec![], 1, 4)).exact().build().unwrap_err();
+    match err {
+        PacimError::Model(msg) => assert!(msg.contains("no compute layers"), "{msg}"),
+        other => panic!("wanted Model error, got {other:?}"),
+    }
+}
+
+#[test]
+fn model_without_logits_layer_is_a_typed_error() {
+    // A pooling-only program never produces logits.
+    let err = EngineBuilder::new(mini_model(vec![Op::MaxPool2, Op::GlobalAvgPool], 1, 4))
+        .exact()
+        .build()
+        .unwrap_err();
+    assert!(matches!(err, PacimError::Model(_)), "{err}");
+}
+
+#[test]
+fn unbalanced_skip_stack_is_a_typed_error() {
+    let ops = vec![
+        Op::AddSkip {
+            out_params: QuantParams::new(1.0, 0),
+            relu: false,
+        },
+        Op::Linear(logits_linear(16, 2)),
+    ];
+    let err = EngineBuilder::new(mini_model(ops, 1, 4)).exact().build().unwrap_err();
+    match err {
+        PacimError::Model(msg) => assert!(msg.contains("SaveSkip"), "{msg}"),
+        other => panic!("wanted Model error, got {other:?}"),
+    }
+}
+
+#[test]
+fn leftover_save_skip_is_a_typed_error() {
+    // The other direction of skip-stack balance: a pushed activation
+    // that no AddSkip ever consumes (a silently dropped residual).
+    let ops = vec![Op::SaveSkip, Op::GlobalAvgPool, Op::Linear(logits_linear(1, 2))];
+    let err = EngineBuilder::new(mini_model(ops, 1, 4)).exact().build().unwrap_err();
+    match err {
+        PacimError::Model(msg) => assert!(msg.contains("unconsumed"), "{msg}"),
+        other => panic!("wanted Model error, got {other:?}"),
+    }
+}
+
+#[test]
+fn unreachable_ops_after_logits_are_a_typed_error() {
+    let ops = vec![
+        Op::GlobalAvgPool,
+        Op::Linear(logits_linear(1, 2)),
+        Op::MaxPool2, // dead: the logits layer ended the program
+    ];
+    let err = EngineBuilder::new(mini_model(ops, 1, 4)).exact().build().unwrap_err();
+    match err {
+        PacimError::Model(msg) => assert!(msg.contains("unreachable"), "{msg}"),
+        other => panic!("wanted Model error, got {other:?}"),
+    }
+}
+
+#[test]
+fn conv_geometry_mismatch_is_a_typed_error() {
+    // Conv declares 3 input channels; the program hands it 1.
+    let geom = Conv2dGeom {
+        in_c: 3,
+        in_h: 4,
+        in_w: 4,
+        out_c: 2,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+    };
+    let conv = ConvLayer {
+        name: "bad".into(),
+        geom,
+        weight: Tensor::from_vec(&[2, geom.dp_len()], vec![0u8; 2 * geom.dp_len()]),
+        wparams: QuantParams::new(1.0, 0),
+        bias: vec![0.0; 2],
+        out_params: QuantParams::new(1.0, 0),
+        relu: true,
+    };
+    let ops = vec![Op::Conv2d(conv), Op::GlobalAvgPool, Op::Linear(logits_linear(2, 2))];
+    let err = EngineBuilder::new(mini_model(ops, 1, 4)).exact().build().unwrap_err();
+    assert!(matches!(err, PacimError::Model(_)), "{err}");
+}
+
+#[test]
+fn linear_arity_mismatch_is_a_typed_error() {
+    // 1×4×4 input flattens to 16 features; the linear declares 8.
+    let ops = vec![Op::Linear(logits_linear(8, 2))];
+    let err = EngineBuilder::new(mini_model(ops, 1, 4)).exact().build().unwrap_err();
+    assert!(matches!(err, PacimError::Model(_)), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Typed error paths: serving passthrough.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_bad_input_converts_to_shape_mismatch() {
+    let model = small_model(103, 4, 4, 8);
+    let exec = PacExecutor::new(model, PacConfig::serving(), 2).unwrap();
+    let want = exec.engine().input_elems();
+    let server = InferenceServer::start_pool(
+        move |_| Ok(exec.clone()),
+        BatchPolicy::default(),
+    )
+    .unwrap();
+    let h = server.handle();
+    let serve_err = match h.submit(vec![0.0; 3]) {
+        Err(e) => e,
+        Ok(_) => panic!("a 3-element submission must be rejected"),
+    };
+    assert!(matches!(serve_err, ServeError::BadInput { got: 3, .. }));
+    // Queue-full and shape errors pass through the typed taxonomy.
+    let typed: PacimError = serve_err.into();
+    match typed {
+        PacimError::ShapeMismatch { got, want: w, .. } => {
+            assert_eq!(got, 3);
+            assert_eq!(w, want);
+        }
+        other => panic!("wanted ShapeMismatch, got {other:?}"),
+    }
+    server.stop();
+}
+
+#[test]
+fn queue_full_and_lifecycle_errors_pass_through_typed() {
+    let full: PacimError = ServeError::QueueFull { capacity: 7 }.into();
+    assert!(matches!(full, PacimError::QueueFull { capacity: 7 }), "{full}");
+    let stopped: PacimError = ServeError::Stopped.into();
+    assert!(matches!(stopped, PacimError::ServerStopped));
+    let dropped: PacimError = ServeError::Dropped.into();
+    assert!(matches!(dropped, PacimError::RequestDropped));
+}
+
+#[test]
+fn crate_error_converts_losslessly() {
+    let e: PacimError = pacim::Error::Shape("weights.bin stem.w".into()).into();
+    assert!(matches!(e, PacimError::Model(_)), "{e}");
+    let c: PacimError = pacim::Error::Config("bad".into()).into();
+    assert!(matches!(c, PacimError::InvalidConfig(_)), "{c}");
+}
+
+#[test]
+fn empty_batch_is_ok_and_empty() {
+    let model = small_model(104, 4, 4, 8);
+    let engine = EngineBuilder::new(model).exact().build().unwrap();
+    assert!(engine.session().infer_batch(&[]).unwrap().is_empty());
+}

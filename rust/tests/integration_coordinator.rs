@@ -6,7 +6,8 @@ use pacim::coordinator::server::BatchExecutor;
 use pacim::coordinator::{
     schedule_model, BatchPolicy, InferenceServer, ScheduleConfig,
 };
-use pacim::nn::{pac_backend, run_model, PacConfig};
+use pacim::engine::EngineBuilder;
+use pacim::nn::PacConfig;
 use pacim::runtime::PacExecutor;
 use pacim::workload::{
     resnet18, resnet50, synthetic_serving_workload, vgg16_bn, Resolution,
@@ -107,12 +108,16 @@ fn pac_pool_serves_bit_identical_to_offline_inference() {
     // input scale is a power of two, so dequantize∘quantize is lossless
     // and the comparison can be bit-exact.
     let (model, ds) = synthetic_serving_workload(1234, 8, 16, 10, 16).unwrap();
-    let offline_backend = pac_backend(&model, PacConfig::serving());
+    let offline_engine = EngineBuilder::new(model.clone())
+        .pac(PacConfig::serving())
+        .build()
+        .unwrap();
+    let mut offline_session = offline_engine.session();
     let offline: Vec<Vec<f32>> = (0..16)
-        .map(|i| run_model(&model, &offline_backend, ds.image(i)).0)
+        .map(|i| offline_session.infer(ds.image(i)).unwrap().logits)
         .collect();
 
-    let exec = PacExecutor::new(model, PacConfig::serving(), 4);
+    let exec = PacExecutor::new(model, PacConfig::serving(), 4).unwrap();
     let server = InferenceServer::start_pool(
         move |_| Ok(exec.clone()),
         BatchPolicy {
@@ -161,8 +166,8 @@ fn exact_executor_serves_and_costs_more_than_pac() {
         .collect();
     let mut replies = Vec::new();
     for exec in [
-        PacExecutor::new(model.clone(), PacConfig::serving(), 2),
-        PacExecutor::exact(model, 2),
+        PacExecutor::new(model.clone(), PacConfig::serving(), 2).unwrap(),
+        PacExecutor::exact(model, 2).unwrap(),
     ] {
         let server = InferenceServer::start_pool(
             move |_| Ok(exec.clone()),

@@ -1,11 +1,11 @@
 //! Integration: the NN engines against the trained artifacts — accuracy
 //! bands, PAC-vs-exact relationships, and engine determinism under
-//! threading. Skips gracefully without artifacts.
+//! threading — all through the `pacim::engine` front door. Skips
+//! gracefully without artifacts.
 
 use pacim::arch::ThresholdSet;
-use pacim::nn::{
-    evaluate, exact_backend, pac_backend, run_model, tiny_resnet, PacConfig, WeightStore,
-};
+use pacim::engine::{Engine, EngineBuilder};
+use pacim::nn::{tiny_resnet, PacConfig, WeightStore};
 use pacim::pac::ComputeMap;
 use pacim::runtime::Manifest;
 use pacim::workload::Dataset;
@@ -23,14 +23,21 @@ fn subset(ds: &Dataset, n: usize) -> (Vec<&[u8]>, Vec<usize>) {
     ((0..n).map(|i| ds.image(i)).collect(), (0..n).map(|i| ds.label(i)).collect())
 }
 
+fn exact(model: &pacim::nn::Model) -> Engine {
+    EngineBuilder::new(model.clone()).exact().build().unwrap()
+}
+
+fn pac(model: &pacim::nn::Model, cfg: PacConfig) -> Engine {
+    EngineBuilder::new(model.clone()).pac(cfg).build().unwrap()
+}
+
 #[test]
 fn trained_model_beats_chance_by_wide_margin() {
     let Some((model, ds)) = load() else { return };
     let (images, labels) = subset(&ds, 128);
-    let exact = exact_backend(&model);
-    let (acc, stats) = evaluate(&model, &exact, &images, &labels, 8);
-    assert!(acc > 0.8, "exact accuracy {acc}");
-    assert_eq!(stats.macs, model.macs() * images.len() as u64);
+    let ev = exact(&model).evaluate(&images, &labels, 8).unwrap();
+    assert!(ev.accuracy > 0.8, "exact accuracy {}", ev.accuracy);
+    assert_eq!(ev.stats.macs, model.macs() * images.len() as u64);
 }
 
 #[test]
@@ -39,10 +46,11 @@ fn pac_accuracy_within_band_of_exact() {
     // only a few points on the easy task.
     let Some((model, ds)) = load() else { return };
     let (images, labels) = subset(&ds, 128);
-    let exact = exact_backend(&model);
-    let (acc_e, _) = evaluate(&model, &exact, &images, &labels, 8);
-    let pac = pac_backend(&model, PacConfig::default());
-    let (acc_p, _) = evaluate(&model, &pac, &images, &labels, 8);
+    let acc_e = exact(&model).evaluate(&images, &labels, 8).unwrap().accuracy;
+    let acc_p = pac(&model, PacConfig::default())
+        .evaluate(&images, &labels, 8)
+        .unwrap()
+        .accuracy;
     assert!(
         acc_e - acc_p <= 0.12,
         "PAC loss too large: exact {acc_e} pac {acc_p}"
@@ -52,18 +60,18 @@ fn pac_accuracy_within_band_of_exact() {
 #[test]
 fn all_digital_map_reproduces_exact_engine_on_artifacts() {
     let Some((model, ds)) = load() else { return };
-    let exact = exact_backend(&model);
+    let mut exact_session = exact(&model).session();
     let cfg = PacConfig {
         map: ComputeMap::all_digital(),
         first_layer_exact: false,
         min_dp_len: 0,
         ..PacConfig::default()
     };
-    let pac = pac_backend(&model, cfg);
+    let mut pac_session = pac(&model, cfg).session();
     for i in 0..4.min(ds.n) {
-        let (a, _) = run_model(&model, &exact, ds.image(i));
-        let (b, _) = run_model(&model, &pac, ds.image(i));
-        assert_eq!(a, b, "image {i}");
+        let a = exact_session.infer(ds.image(i)).unwrap();
+        let b = pac_session.infer(ds.image(i)).unwrap();
+        assert_eq!(a.logits, b.logits, "image {i}");
     }
 }
 
@@ -71,27 +79,33 @@ fn all_digital_map_reproduces_exact_engine_on_artifacts() {
 fn dynamic_config_trades_cycles_for_bounded_loss() {
     let Some((model, ds)) = load() else { return };
     let (images, labels) = subset(&ds, 96);
-    let pac_s = pac_backend(&model, PacConfig::default());
-    let (acc_s, _) = evaluate(&model, &pac_s, &images, &labels, 8);
-    let cfg = PacConfig {
-        thresholds: Some(ThresholdSet::default_cifar()),
-        ..PacConfig::default()
-    };
-    let pac_d = pac_backend(&model, cfg);
-    let (acc_d, stats) = evaluate(&model, &pac_d, &images, &labels, 8);
-    assert!(stats.levels.total() > 0);
-    assert!(stats.levels.average_cycles() < 16.0);
+    let acc_s = pac(&model, PacConfig::default())
+        .evaluate(&images, &labels, 8)
+        .unwrap()
+        .accuracy;
+    let dynamic = EngineBuilder::new(model.clone())
+        .pac(PacConfig::default())
+        .dynamic(ThresholdSet::default_cifar())
+        .build()
+        .unwrap();
+    let ev = dynamic.evaluate(&images, &labels, 8).unwrap();
+    assert!(ev.stats.levels.total() > 0);
+    assert!(ev.stats.levels.average_cycles() < 16.0);
     // Dynamic is *better* than static on this model (see EXPERIMENTS.md).
-    assert!(acc_d >= acc_s - 0.05, "dynamic loss too large: {acc_s} -> {acc_d}");
+    assert!(
+        ev.accuracy >= acc_s - 0.05,
+        "dynamic loss too large: {acc_s} -> {}",
+        ev.accuracy
+    );
 }
 
 #[test]
 fn evaluation_is_thread_count_invariant() {
     let Some((model, ds)) = load() else { return };
     let (images, labels) = subset(&ds, 32);
-    let exact = exact_backend(&model);
-    let (a1, _) = evaluate(&model, &exact, &images, &labels, 1);
-    let (a8, _) = evaluate(&model, &exact, &images, &labels, 8);
+    let engine = exact(&model);
+    let a1 = engine.evaluate(&images, &labels, 1).unwrap().accuracy;
+    let a8 = engine.evaluate(&images, &labels, 8).unwrap().accuracy;
     assert_eq!(a1, a8);
 }
 
@@ -99,13 +113,13 @@ fn evaluation_is_thread_count_invariant() {
 fn five_bit_mode_recovers_loss() {
     let Some((model, ds)) = load() else { return };
     let (images, labels) = subset(&ds, 96);
-    let exact = exact_backend(&model);
-    let (acc_e, _) = evaluate(&model, &exact, &images, &labels, 8);
-    let cfg5 = PacConfig {
-        map: ComputeMap::operand_based(5, 5),
-        ..PacConfig::default()
-    };
-    let pac5 = pac_backend(&model, cfg5);
-    let (acc_5, _) = evaluate(&model, &pac5, &images, &labels, 8);
+    let acc_e = exact(&model).evaluate(&images, &labels, 8).unwrap().accuracy;
+    // approx_bits(5, 5) is the builder shorthand for the 5×5 operand map.
+    let pac5 = EngineBuilder::new(model.clone())
+        .pac(PacConfig::default())
+        .approx_bits(5, 5)
+        .build()
+        .unwrap();
+    let acc_5 = pac5.evaluate(&images, &labels, 8).unwrap().accuracy;
     assert!(acc_e - acc_5 <= 0.03, "5-bit loss: {acc_e} -> {acc_5}");
 }

@@ -67,7 +67,7 @@ fn dynamic_levels_order_error_monotonically() {
 #[test]
 fn rounding_mode_bias() {
     // Floor rounding biases the estimate low; round-nearest is unbiased.
-    // (The DESIGN.md §10 PCU-rounding ablation, as a regression test.)
+    // (The DESIGN.md §11 PCU-rounding ablation, as a regression test.)
     let nearest = pac_rmse(512, 0.5, 0.3, 3000, 77, BitModel::Iid);
     assert!(nearest.bias_lsb.abs() < 0.5, "bias={}", nearest.bias_lsb);
 }

@@ -8,7 +8,8 @@
 
 #![cfg(feature = "pjrt")]
 
-use pacim::nn::{run_model, tiny_resnet, RunStats, WeightStore};
+use pacim::engine::EngineBuilder;
+use pacim::nn::{tiny_resnet, WeightStore};
 use pacim::runtime::{Manifest, PjrtExecutor};
 use pacim::workload::Dataset;
 
@@ -61,7 +62,8 @@ fn pjrt_model_exact_matches_rust_engine_predictions() {
     let ds = Dataset::load(man.path("dataset").unwrap()).unwrap();
     let store = WeightStore::load(man.path("weights").unwrap()).unwrap();
     let model = tiny_resnet(&store, ds.h, ds.n_classes).unwrap();
-    let backend = pacim::nn::exact_backend(&model);
+    let engine = EngineBuilder::new(model).exact().build().unwrap();
+    let mut session = engine.session();
 
     let mut flat = vec![0f32; batch * in_elems];
     for i in 0..batch {
@@ -73,8 +75,7 @@ fn pjrt_model_exact_matches_rust_engine_predictions() {
     let mut agree = 0;
     for i in 0..batch {
         let hlo_pred = argmax(&out[i * classes..(i + 1) * classes]);
-        let (logits, _): (Vec<f32>, RunStats) = run_model(&model, &backend, ds.image(i));
-        let rust_pred = argmax(&logits);
+        let rust_pred = session.infer(ds.image(i)).unwrap().argmax();
         if hlo_pred == rust_pred {
             agree += 1;
         }

@@ -3,7 +3,7 @@
 
 use pacim::arch::ThresholdSet;
 use pacim::nn::{
-    pac_backend, run_model, run_model_par, ConvLayer, LinearLayer, MacBackend, Model, Op,
+    pac_backend, run_model_with, ConvLayer, LinearLayer, MacBackend, Model, ModelScratch, Op,
     PacBackend, PacConfig, RunStats,
 };
 use pacim::pac::mac::{pac_cycle_f64, pcu_cycle, PcuRounding};
@@ -378,7 +378,13 @@ fn prop_blocked_engine_matches_per_patch_engine() {
         };
         let blocked = pac_backend(&model, cfg.clone());
         let reference = PerPatchEngine(pac_backend(&model, cfg));
-        let (b_ref, s_ref) = run_model(&model, &reference, &img);
+        let (b_ref, s_ref) = run_model_with(
+            &model,
+            &reference,
+            &img,
+            &Parallelism::off(),
+            &mut ModelScratch::default(),
+        );
         for par in [
             Parallelism::off(),
             Parallelism {
@@ -386,7 +392,8 @@ fn prop_blocked_engine_matches_per_patch_engine() {
                 min_items: 1,
             },
         ] {
-            let (b, s) = run_model_par(&model, &blocked, &img, &par);
+            let (b, s) =
+                run_model_with(&model, &blocked, &img, &par, &mut ModelScratch::default());
             assert_eq!(b, b_ref, "logits diverged (variant {variant})");
             assert_eq!(s.macs, s_ref.macs);
             assert_eq!(s.digital_cycles, s_ref.digital_cycles);
