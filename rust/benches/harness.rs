@@ -51,6 +51,15 @@ impl Checks {
     }
 }
 
+/// Quick-mode flag for CI smoke runs (`PACIM_BENCH_QUICK=1` shrinks
+/// image counts and repetitions to seconds) — shared by every bench
+/// that offers a reduced sweep.
+pub fn quick_mode() -> bool {
+    std::env::var("PACIM_BENCH_QUICK")
+        .ok()
+        .is_some_and(|v| v != "0" && !v.is_empty())
+}
+
 /// Micro-timing: median of `reps` runs of `f`, returning (median_s, out).
 pub fn timeit<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, T) {
     assert!(reps >= 1);

@@ -13,22 +13,16 @@
 #[path = "harness.rs"]
 mod harness;
 
-use harness::{banner, rate, timeit, Checks};
-use pacim::nn::{MacBackend, PacConfig, RunStats};
+use harness::{banner, quick_mode, rate, timeit, Checks};
+use pacim::nn::{GemmInput, MacBackend, PacConfig, RunStats};
 use pacim::pac::{
     hybrid_mac, hybrid_mac_batch, par_hybrid_mac_batch, BitPlanes, ComputeMap, PcuRounding,
 };
 use pacim::tensor::{PackedPatches, Tensor};
-use pacim::util::benchfmt::{BlockedBench, HotpathReport, LayerBench};
+use pacim::util::benchfmt::{BlockedBench, FusedBench, HotpathReport, LayerBench};
 use pacim::util::rng::Rng;
 use pacim::util::Parallelism;
 use pacim::workload::{resnet18, Resolution};
-
-fn quick_mode() -> bool {
-    std::env::var("PACIM_BENCH_QUICK")
-        .ok()
-        .is_some_and(|v| v != "0" && !v.is_empty())
-}
 
 fn main() {
     banner("§Perf", "hot-path throughput");
@@ -126,6 +120,9 @@ fn main() {
     // --- blocked vs per-patch layer GEMM (the headline single-thread row) ---
     let blocked_benches = blocked_section(quick, &mut rng, &mut checks);
 
+    // --- fused dataplane vs dense round-trip (multi-layer, end to end) ---
+    let fused_benches = fused_section(quick, &mut checks);
+
     // The report serializes through the shared schema
     // (`pacim::util::benchfmt`); tests/bench_schema.rs re-parses the
     // emitted file and fails on any drift, and CI's bench-smoke job
@@ -137,6 +134,7 @@ fn main() {
         quick,
         layers: layer_benches,
         blocked: blocked_benches,
+        fused: fused_benches,
     };
     match serde_json::to_string_pretty(&report)
         .map_err(anyhow::Error::from)
@@ -162,7 +160,7 @@ fn main() {
     let (t, _) = timeit(if quick { 2 } else { 5 }, || {
         backend.gemm_layer(
             0,
-            &cols,
+            GemmInput::Dense(&cols),
             patches,
             7,
             &Parallelism::off(),
@@ -300,7 +298,7 @@ fn blocked_section(quick: bool, rng: &mut Rng, checks: &mut Checks) -> Vec<Block
             let mut stats = RunStats::default();
             backend.gemm_layer(
                 0,
-                &cols,
+                GemmInput::Dense(&cols),
                 pixels,
                 7,
                 &Parallelism::off(),
@@ -334,6 +332,71 @@ fn blocked_section(quick: bool, rng: &mut Rng, checks: &mut Checks) -> Vec<Block
         });
     }
     rows
+}
+
+/// Fused dataplane vs dense round-trip: the same multi-layer PAC
+/// forward passes with producer-side encoding on (requantize→scatter→
+/// pack straight into the consumer's slab) vs off (dense u8 activation
+/// + consumer-side im2col + re-pack). Single-thread, warm scratch; the
+/// logits must match bit for bit — the speedup is the deleted
+/// dequant/requant/re-pack steady-state work.
+fn fused_section(quick: bool, checks: &mut Checks) -> Vec<FusedBench> {
+    use pacim::nn::layers::synthetic::random_store;
+    use pacim::nn::{pac_backend, run_model_with, tiny_resnet, ModelScratch};
+
+    println!("\n  fused dataplane vs dense round-trip (single-thread, multi-layer):");
+    let mut rng = Rng::new(909);
+    let (c, hw) = if quick { (16, 16) } else { (16, 32) };
+    let model = tiny_resnet(&random_store(&mut rng, c, 10), hw, 10)
+        .expect("synthetic model is valid");
+    let images: Vec<Vec<u8>> = (0..if quick { 2 } else { 8 })
+        .map(|_| (0..3 * hw * hw).map(|_| rng.below(256) as u8).collect())
+        .collect();
+    let cfg = |fuse| PacConfig {
+        min_dp_len: 0,
+        par: Parallelism::off(),
+        fuse_dataplane: fuse,
+        ..PacConfig::default()
+    };
+    let roundtrip = pac_backend(&model, cfg(false));
+    let fused = pac_backend(&model, cfg(true));
+    let reps = if quick { 3 } else { 7 };
+    let par = Parallelism::off();
+    let mut scratch = ModelScratch::default();
+    let run_all = |backend: &pacim::nn::PacBackend, scratch: &mut ModelScratch| {
+        let mut logits = Vec::new();
+        let mut encoded = 0usize;
+        for img in &images {
+            let (lg, st) = run_model_with(&model, backend, img, &par, scratch);
+            encoded = st.traffic.encoded_layer_count();
+            logits.push(lg);
+        }
+        (logits, encoded)
+    };
+    let (t_rt, (ref_logits, rt_encoded)) = timeit(reps, || run_all(&roundtrip, &mut scratch));
+    let (t_fu, (fu_logits, fu_encoded)) = timeit(reps, || run_all(&fused, &mut scratch));
+    let identical = ref_logits == fu_logits;
+    let speedup = t_rt / t_fu;
+    let n = images.len() as f64;
+    println!(
+        "    {:<20} {} imgs: roundtrip {:>9} fused {:>9} speedup {speedup:.2}x \
+         ({fu_encoded} encoded edges)",
+        model.name,
+        images.len(),
+        rate(n, t_rt, "img"),
+        rate(n, t_fu, "img"),
+    );
+    checks.claim(identical, "fused dataplane bit-identical to dense round-trip");
+    checks.claim(rt_encoded == 0 && fu_encoded > 0, "fusion toggles the encoded edges");
+    vec![FusedBench {
+        model: model.name.clone(),
+        images: images.len(),
+        encoded_layers: fu_encoded,
+        roundtrip_images_per_s: n / t_rt,
+        fused_images_per_s: n / t_fu,
+        speedup_fused: speedup,
+        bit_identical: identical,
+    }]
 }
 
 fn pac_backend_for(weight: &Tensor<u8>, par: Parallelism) -> pacim::nn::PacBackend {

@@ -16,6 +16,7 @@
 //! at the boundary.
 
 use crate::coordinator::scheduler::CostEstimate;
+use crate::memory::{LayerTraffic, TrafficLedger};
 use crate::nn::exec::{run_model_batch_with, run_model_with, ExactBackend, ModelScratch, RunStats};
 use crate::nn::layers::Model;
 use crate::nn::pac_exec::PacBackend;
@@ -188,6 +189,23 @@ impl Engine {
     /// this engine's backend mode.
     pub fn cost_estimate(&self) -> CostEstimate {
         self.inner.cost
+    }
+
+    /// Join a measured [`TrafficLedger`] (from
+    /// [`RunStats::traffic`](crate::nn::RunStats)) with this engine's
+    /// compute-layer names: one `(name, entry)` row per inter-layer
+    /// activation edge, in program order. The measured counterpart of
+    /// the analytic traffic columns in [`Engine::cost_estimate`].
+    pub fn traffic_rows<'a>(
+        &'a self,
+        ledger: &'a TrafficLedger,
+    ) -> Vec<(&'a str, &'a LayerTraffic)> {
+        let names = self.inner.model.compute_layers();
+        ledger
+            .layers()
+            .iter()
+            .filter_map(|e| names.get(e.layer_id).map(|&(n, _)| (n, e)))
+            .collect()
     }
 
     /// Open a session: a mutable inference handle owning its scratch

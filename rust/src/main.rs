@@ -183,6 +183,24 @@ fn accuracy(args: &[String]) -> anyhow::Result<()> {
         ev_p.accuracy * 100.0,
         (ev_p.accuracy - ev_e.accuracy) * 100.0
     );
+    let t = &ev_p.stats.traffic;
+    println!(
+        "measured act traffic : {:.1}% reduction vs 8-bit dense \
+         ({} of {} edges sparsity-encoded)",
+        t.reduction() * 100.0,
+        t.encoded_layer_count(),
+        t.layers().len()
+    );
+    for (name, e) in pac.traffic_rows(t) {
+        println!(
+            "  {name:<16} {:>4} ch  {:>10} -> {:>10} bits  {}{:5.1}%",
+            e.group_elems,
+            e.baseline_bits,
+            e.bits,
+            if e.encoded { "encoded " } else { "dense   " },
+            e.reduction() * 100.0
+        );
+    }
     if ev_p.stats.levels.total() > 0 {
         println!(
             "dynamic avg cycles   : {:.2} (reduction vs 64: {:.1}%)",
@@ -375,6 +393,11 @@ fn serve_pac(args: &[String]) -> anyhow::Result<()> {
             "modeled PACiM cost per image: {} bit-serial cycles, {:.2} uJ",
             c.cycles,
             c.total_uj()
+        );
+        println!(
+            "modeled activation traffic per image: {} bits ({:.1}% below 8-bit dense)",
+            c.act_bits,
+            c.act_traffic_reduction() * 100.0
         );
     }
     println!(

@@ -1,0 +1,233 @@
+//! Measured activation-traffic ledger — the workload-measured
+//! counterpart of the analytic [`super::traffic`] model.
+//!
+//! The analytic model (Fig. 7(b)) predicts the traffic of an encoding
+//! scheme from layer geometry alone, assuming every edge is encoded.
+//! The ledger instead records what the executor *actually moved* while
+//! running a network: the interpreter appends one entry per inter-layer
+//! activation edge as it emits it, tagged with the real encode decision
+//! (producer-packed MSB+counter form vs dense u8), the real group count
+//! (output pixels), and the real channel width. Exact-mode layers,
+//! first-layer and short-DP digital fallbacks, and unfusable program
+//! points (pooling, residual adds) therefore show up as the dense edges
+//! they are — the honesty that closed-form traffic claims lack.
+//!
+//! Units: one entry's `bits` is the producer's write; the consumer read
+//! mirrors it under the paper's write-once/read-once cache model, so
+//! total cache traffic is `2 × bits` (the convention
+//! `coordinator::scheduler::LayerReport` also uses). The final logits
+//! layer is delivered to the host, not written back to the activation
+//! cache, and is not recorded.
+
+use super::traffic::activation_traffic;
+
+/// Measured traffic of one inter-layer activation edge, accumulated
+/// over every forward pass merged into the owning ledger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerTraffic {
+    /// Producer compute-layer id (prepare order); join with
+    /// `Model::compute_layers()` for names.
+    pub layer_id: usize,
+    /// Forward passes accumulated into this entry.
+    pub runs: u64,
+    /// Encoding groups moved (one output pixel per group for CONV, one
+    /// per layer for LINEAR), summed over runs.
+    pub groups: u64,
+    /// Channels per encoding group (constant per layer).
+    pub group_elems: u64,
+    /// Binary MSB planes transmitted per element when encoded (0 on
+    /// dense edges).
+    pub msb_bits: u32,
+    /// Whether this edge moved in MSB+counter form.
+    pub encoded: bool,
+    /// Measured bits moved, one direction (producer write).
+    pub bits: u64,
+    /// 8-bit dense equivalent of the same elements.
+    pub baseline_bits: u64,
+}
+
+impl LayerTraffic {
+    /// Activation elements moved (groups × channels).
+    pub fn elems(&self) -> u64 {
+        self.groups * self.group_elems
+    }
+
+    /// Fractional reduction vs the 8-bit dense baseline (0 on dense
+    /// edges; can be negative when counter overhead exceeds the LSB
+    /// saving — the crossover the analytic model also exposes).
+    pub fn reduction(&self) -> f64 {
+        1.0 - self.bits as f64 / self.baseline_bits.max(1) as f64
+    }
+}
+
+/// Running per-layer tally of measured activation traffic; lives in
+/// [`crate::nn::RunStats`] and merges like the other counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TrafficLedger {
+    layers: Vec<LayerTraffic>,
+}
+
+impl TrafficLedger {
+    /// Record a dense u8 edge: `groups × group_elems` activations moved
+    /// at 8 bits each.
+    pub fn record_dense(&mut self, layer_id: usize, groups: u64, group_elems: u64) {
+        let bits = groups * group_elems * 8;
+        self.record(LayerTraffic {
+            layer_id,
+            runs: 1,
+            groups,
+            group_elems,
+            msb_bits: 0,
+            encoded: false,
+            bits,
+            baseline_bits: bits,
+        });
+    }
+
+    /// Record a sparsity-encoded edge: per group, `group_elems`
+    /// activations travel as `msb_bits` binary planes plus 8 sparsity
+    /// counters of `⌈log2(group_elems)⌉` bits (§3.1 data encoding).
+    pub fn record_encoded(
+        &mut self,
+        layer_id: usize,
+        groups: u64,
+        group_elems: u64,
+        msb_bits: u32,
+    ) {
+        let (bits, baseline_bits) = if groups == 0 || group_elems == 0 {
+            (0, 0)
+        } else {
+            let t = activation_traffic(group_elems as usize, msb_bits);
+            (groups * t.pacim, groups * t.baseline)
+        };
+        self.record(LayerTraffic {
+            layer_id,
+            runs: 1,
+            groups,
+            group_elems,
+            msb_bits,
+            encoded: true,
+            bits,
+            baseline_bits,
+        });
+    }
+
+    fn record(&mut self, e: LayerTraffic) {
+        if let Some(cur) = self.layers.iter_mut().find(|l| l.layer_id == e.layer_id) {
+            debug_assert_eq!(
+                (cur.encoded, cur.msb_bits, cur.group_elems),
+                (e.encoded, e.msb_bits, e.group_elems),
+                "layer {} changed encoding between runs",
+                e.layer_id
+            );
+            cur.runs += e.runs;
+            cur.groups += e.groups;
+            cur.bits += e.bits;
+            cur.baseline_bits += e.baseline_bits;
+        } else {
+            self.layers.push(e);
+        }
+    }
+
+    /// Fold another ledger in (same program ⇒ entries align by layer id;
+    /// per-layer counters sum).
+    pub fn merge(&mut self, other: &TrafficLedger) {
+        for e in &other.layers {
+            self.record(*e);
+        }
+    }
+
+    /// Entries in first-recorded (= program) order.
+    pub fn layers(&self) -> &[LayerTraffic] {
+        &self.layers
+    }
+
+    /// The entry for one compute layer, if it moved activations.
+    pub fn layer(&self, layer_id: usize) -> Option<&LayerTraffic> {
+        self.layers.iter().find(|l| l.layer_id == layer_id)
+    }
+
+    /// Edges that moved in MSB+counter form.
+    pub fn encoded_layer_count(&self) -> usize {
+        self.layers.iter().filter(|l| l.encoded).count()
+    }
+
+    /// Total measured bits moved, one direction.
+    pub fn total_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.bits).sum()
+    }
+
+    /// Total 8-bit dense-equivalent bits.
+    pub fn total_baseline_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.baseline_bits).sum()
+    }
+
+    /// Whole-network measured reduction vs the 8-bit dense baseline.
+    pub fn reduction(&self) -> f64 {
+        1.0 - self.total_bits() as f64 / self.total_baseline_bits().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pac::sparsity::counter_bits;
+
+    #[test]
+    fn dense_edge_is_8_bits_per_element() {
+        let mut t = TrafficLedger::default();
+        t.record_dense(0, 16, 64);
+        let e = t.layer(0).unwrap();
+        assert!(!e.encoded);
+        assert_eq!(e.bits, 16 * 64 * 8);
+        assert_eq!(e.baseline_bits, e.bits);
+        assert_eq!(e.reduction(), 0.0);
+    }
+
+    #[test]
+    fn encoded_edge_matches_analytic_formula() {
+        let mut t = TrafficLedger::default();
+        t.record_encoded(3, 16, 256, 4);
+        let e = t.layer(3).unwrap();
+        assert!(e.encoded);
+        assert_eq!(e.baseline_bits, 16 * 256 * 8);
+        assert_eq!(e.bits, 16 * (256 * 4 + 8 * counter_bits(256) as u64));
+        // 256-channel groups sit in the paper's deep-layer band.
+        assert!((0.40..0.52).contains(&e.reduction()), "{}", e.reduction());
+    }
+
+    #[test]
+    fn merge_accumulates_per_layer() {
+        let mut a = TrafficLedger::default();
+        a.record_dense(0, 4, 8);
+        a.record_encoded(1, 4, 64, 4);
+        let mut b = TrafficLedger::default();
+        b.record_dense(0, 4, 8);
+        b.record_encoded(1, 4, 64, 4);
+        a.merge(&b);
+        assert_eq!(a.layers().len(), 2);
+        assert_eq!(a.layer(0).unwrap().runs, 2);
+        assert_eq!(a.layer(0).unwrap().groups, 8);
+        assert_eq!(a.layer(1).unwrap().bits, 2 * 4 * (64 * 4 + 8 * 6));
+        assert_eq!(a.encoded_layer_count(), 1);
+    }
+
+    #[test]
+    fn network_reduction_weights_by_bits() {
+        let mut t = TrafficLedger::default();
+        t.record_dense(0, 1, 1000); // 8000 bits both
+        t.record_encoded(1, 1, 1000, 4); // 4000 + 80 bits vs 8000
+        let red = t.reduction();
+        let want = 1.0 - (8000.0 + 4080.0) / 16000.0;
+        assert!((red - want).abs() < 1e-12, "{red} vs {want}");
+    }
+
+    #[test]
+    fn degenerate_groups_record_zero_bits() {
+        let mut t = TrafficLedger::default();
+        t.record_encoded(0, 0, 64, 4);
+        t.record_encoded(1, 4, 0, 4);
+        assert_eq!(t.total_bits(), 0);
+        assert_eq!(t.total_baseline_bits(), 0);
+    }
+}

@@ -2,12 +2,16 @@
 //!
 //! PACiM's system-level claim is that replacing LSB activation transfers
 //! with sparsity counts cuts cache (and weight DRAM) traffic by 40–50%.
-//! This module computes the bit traffic of both schemes analytically from
-//! layer geometry — the quantities Fig. 7(b) plots — and accumulates
-//! simulated traffic counters for end-to-end energy reports.
+//! [`traffic`] computes the bit traffic of both schemes analytically from
+//! layer geometry — the quantities Fig. 7(b) plots — while [`ledger`]
+//! records what the executor *measured* as it ran (the sparsity-encoded
+//! dataplane's per-edge accounting, carried in `nn::RunStats::traffic`);
+//! [`MemoryCounters`] accumulates simulated traffic for energy reports.
 
+pub mod ledger;
 pub mod traffic;
 
+pub use ledger::{LayerTraffic, TrafficLedger};
 pub use traffic::{activation_traffic, weight_traffic, TrafficBits};
 
 use crate::energy::EnergyModel;

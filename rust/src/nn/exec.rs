@@ -9,10 +9,25 @@
 //! the PACiM bank. Everything around the MACs (im2col, requantization,
 //! pooling, residual adds) is shared, so accuracy differences between
 //! engines isolate the approximation itself.
+//!
+//! **Sparsity-encoded dataplane** (§3.1/§4.5): when a conv's output
+//! flows directly into another conv whose backend consumes packed
+//! planes ([`MacBackend::packed_input_bits`]), the producer requantizes
+//! each accumulator once and scatters it straight into the consumer's
+//! im2col slab, bit-plane-packs it, and hands the planes over — no
+//! dense u8 activation tensor exists on that edge and the consumer
+//! never re-packs. Numerically inert (the packed planes are
+//! byte-identical to packing the dense matrix), so logits and cycle
+//! statistics match the dense round-trip bit for bit; only the measured
+//! [`TrafficLedger`] (and speed) differ. Exact mode keeps the dense
+//! path end to end and stays the bit-identity reference.
 
 use super::layers::{ConvLayer, Model, Op};
 use crate::arch::LevelHistogram;
-use crate::tensor::{im2col_into, PackedPatches, QuantParams, Tensor};
+use crate::memory::TrafficLedger;
+use crate::tensor::{
+    im2col_into, im2col_scatter_into, Conv2dGeom, PackedPatches, QuantParams, Tensor,
+};
 use crate::util::Parallelism;
 
 /// Output pixels per GEMM tile: the unit of rayon fan-out *and* of cache
@@ -33,6 +48,10 @@ pub struct RunStats {
     pub pcu_ops: u64,
     /// Dynamic-level decisions (empty when dynamic config is off).
     pub levels: LevelHistogram,
+    /// Measured inter-layer activation traffic (bits actually moved, per
+    /// edge, tagged encoded vs dense) — the workload-measured
+    /// counterpart of the analytic `memory::traffic` model.
+    pub traffic: TrafficLedger,
 }
 
 impl RunStats {
@@ -41,6 +60,7 @@ impl RunStats {
         self.digital_cycles += other.digital_cycles;
         self.pcu_ops += other.pcu_ops;
         self.levels.merge(&other.levels);
+        self.traffic.merge(&other.traffic);
     }
 
     /// Average digital cycles per 8b/8b MAC (64 would be fully digital).
@@ -66,6 +86,25 @@ pub struct ModelScratch {
     acc: Vec<i64>,
     /// Packed activation bit-planes (ignored by non-bit-plane backends).
     planes: PackedPatches,
+    /// Producer-packed planes for the *next* compute layer: the
+    /// sparsity-encoded dataplane inbox. A fusing producer requantizes
+    /// its accumulators straight into `cols` (inverse-im2col scatter)
+    /// and packs them here; the consumer then runs from this slab and
+    /// never re-packs.
+    inbox: PackedPatches,
+}
+
+/// One compute layer's input as handed to [`MacBackend::gemm_layer`]:
+/// the dense `[pixels][k]` im2col matrix, or the same matrix already
+/// bit-plane-packed by the *producing* layer (the sparsity-encoded
+/// dataplane handoff). The interpreter only passes `Packed` to layers
+/// that advertise it via [`MacBackend::packed_input_bits`].
+#[derive(Debug, Clone, Copy)]
+pub enum GemmInput<'a> {
+    /// Dense im2col matrix, `[pixels][k]` row-major u8.
+    Dense(&'a [u8]),
+    /// Producer-packed bit-planes + sparsity counters of that matrix.
+    Packed(&'a PackedPatches),
 }
 
 /// Backend computing signed accumulators `Σ_k (x−zpx)(w−zpw)` for every
@@ -75,20 +114,32 @@ pub trait MacBackend {
     /// subsequent `gemm_layer` calls.
     fn prepare(&mut self, layer_id: usize, weight: &Tensor<u8>, zpw: i32);
 
-    /// Layer-level blocked GEMM. `cols` is the `[pixels][k]` im2col
-    /// matrix (`k` = DP length; a linear layer is `pixels = 1`); `out`
-    /// is resized to `pixels * out_c` and filled `[pixel][oc]`.
+    /// Binary activation bit-planes this backend actually reads for
+    /// `layer_id` when its input arrives pre-packed — the MSB width of
+    /// the sparsity-encoded dataplane (paper default 4). `None` (the
+    /// default) ⇒ the layer consumes a dense u8 im2col matrix and the
+    /// interpreter must not fuse into it (exact backends, digital
+    /// fallback layers, fusion disabled).
+    fn packed_input_bits(&self, _layer_id: usize) -> Option<u32> {
+        None
+    }
+
+    /// Layer-level blocked GEMM. `input` is the `[pixels][k]` im2col
+    /// matrix, dense or producer-packed (`k` = DP length; a linear layer
+    /// is `pixels = 1`); `out` is resized to `pixels * out_c` and filled
+    /// `[pixel][oc]`.
     ///
     /// `par` is the driver's tile fan-out policy and `planes` the
-    /// reusable packing scratch (backends that don't bit-plane-pack
-    /// ignore it). Implementations must be **bit-deterministic**: the
-    /// same `cols` produce the same `out` and `stats` for every `par`,
-    /// thread count, and schedule.
+    /// reusable packing scratch for dense inputs (backends that don't
+    /// bit-plane-pack ignore it). Implementations must be
+    /// **bit-deterministic**: the same input produces the same `out` and
+    /// `stats` for every `par`, thread count, schedule, and input form
+    /// (`Packed` planes are byte-identical to packing the dense matrix).
     #[allow(clippy::too_many_arguments)]
     fn gemm_layer(
         &self,
         layer_id: usize,
-        cols: &[u8],
+        input: GemmInput<'_>,
         pixels: usize,
         zpx: i32,
         par: &Parallelism,
@@ -114,7 +165,7 @@ impl MacBackend for ExactBackend {
     fn gemm_layer(
         &self,
         layer_id: usize,
-        cols: &[u8],
+        input: GemmInput<'_>,
         pixels: usize,
         zpx: i32,
         par: &Parallelism,
@@ -122,6 +173,12 @@ impl MacBackend for ExactBackend {
         out: &mut Vec<i64>,
         stats: &mut RunStats,
     ) {
+        let cols = match input {
+            GemmInput::Dense(c) => c,
+            // Contract: the interpreter fuses only into layers whose
+            // `packed_input_bits` is Some; this backend never opts in.
+            GemmInput::Packed(_) => panic!("exact backend cannot consume packed input"),
+        };
         let (w, zpw) = &self.layers[layer_id];
         let n = w.shape()[0];
         let k = w.shape()[1];
@@ -243,23 +300,48 @@ pub fn run_model_with<B: MacBackend + Sync>(
     let mut skips: Vec<(Vec<u8>, QuantParams, (usize, usize, usize))> = Vec::new();
     let mut layer_id = 0usize;
     let mut logits: Option<Vec<f32>> = None;
+    // When true, the previous conv emitted its output in encoded form
+    // straight into `scratch` (cols scattered + inbox packed): the
+    // sparsity-encoded dataplane handoff. `act` is stale and the fusion
+    // condition guarantees the very next op is the consuming conv.
+    let mut packed_ready = false;
 
-    for op in &model.ops {
+    for (i, op) in model.ops.iter().enumerate() {
         match op {
             Op::Conv2d(conv) => {
-                let (out, op_params, oshape) =
-                    run_conv(conv, &act, params, layer_id, backend, &mut stats, par, scratch);
-                act = out;
+                // Fuse the producer-side emit when the output flows
+                // directly into another conv that consumes packed planes.
+                let fuse_next = match model.ops.get(i + 1) {
+                    Some(Op::Conv2d(next)) => backend
+                        .packed_input_bits(layer_id + 1)
+                        .map(|bits| (&next.geom, bits)),
+                    _ => None,
+                };
+                let (out, op_params, oshape) = run_conv(
+                    conv,
+                    &act,
+                    params,
+                    layer_id,
+                    backend,
+                    &mut stats,
+                    par,
+                    scratch,
+                    packed_ready,
+                    fuse_next,
+                );
+                packed_ready = out.is_none();
+                act = out.unwrap_or_default();
                 params = op_params;
                 shape = oshape;
                 layer_id += 1;
             }
             Op::Linear(lin) => {
+                debug_assert!(!packed_ready, "fusion never targets a linear layer");
                 let (c, h, w) = shape;
                 assert_eq!(c * h * w, lin.in_f, "linear input mismatch at {}", lin.name);
                 backend.gemm_layer(
                     layer_id,
-                    &act,
+                    GemmInput::Dense(&act[..]),
                     1,
                     params.zero_point,
                     par,
@@ -267,7 +349,6 @@ pub fn run_model_with<B: MacBackend + Sync>(
                     &mut scratch.acc,
                     &mut stats,
                 );
-                layer_id += 1;
                 let sx = params.scale;
                 let sw = lin.wparams.scale;
                 let reals: Vec<f32> = scratch
@@ -278,6 +359,8 @@ pub fn run_model_with<B: MacBackend + Sync>(
                     .collect();
                 match &lin.out_params {
                     None => {
+                        // Terminal logits go to the host, not the
+                        // activation cache: no traffic edge.
                         logits = Some(reals);
                         break;
                     }
@@ -286,10 +369,13 @@ pub fn run_model_with<B: MacBackend + Sync>(
                             .iter()
                             .map(|&r| oq.quantize(if lin.relu { r.max(0.0) } else { r }))
                             .collect();
+                        // Hidden FC output: one layer-wise group, dense.
+                        stats.traffic.record_dense(layer_id, 1, lin.out_f as u64);
                         params = *oq;
                         shape = (lin.out_f, 1, 1);
                     }
                 }
+                layer_id += 1;
             }
             Op::MaxPool2 => {
                 let (c, h, w) = shape;
@@ -394,6 +480,13 @@ pub fn run_model_batch_with<B: MacBackend + Sync>(
     })
 }
 
+/// Run one conv layer. `packed_input` means the producer already
+/// scattered + packed this layer's im2col matrix into `scratch`
+/// (`cols`/`inbox`); `fuse_next` asks this layer to do the same for the
+/// next one — requantize each accumulator **once**, scatter the u8
+/// straight into the next layer's im2col slab (no dense CHW tensor ever
+/// exists), bit-plane-pack it, and record the edge as encoded traffic.
+/// Returns `None` for the dense output in that case.
 #[allow(clippy::too_many_arguments)]
 fn run_conv<B: MacBackend + Sync>(
     conv: &ConvLayer,
@@ -404,37 +497,69 @@ fn run_conv<B: MacBackend + Sync>(
     stats: &mut RunStats,
     par: &Parallelism,
     scratch: &mut ModelScratch,
-) -> (Vec<u8>, QuantParams, (usize, usize, usize)) {
+    packed_input: bool,
+    fuse_next: Option<(&Conv2dGeom, u32)>,
+) -> (Option<Vec<u8>>, QuantParams, (usize, usize, usize)) {
     let g = &conv.geom;
-    im2col_into(act, g, in_params.zero_point as u8, &mut scratch.cols);
     let pixels = g.out_pixels();
-    backend.gemm_layer(
-        layer_id,
-        &scratch.cols,
-        pixels,
-        in_params.zero_point,
-        par,
-        &mut scratch.planes,
-        &mut scratch.acc,
-        stats,
-    );
+    let ModelScratch { cols, acc, planes, inbox } = scratch;
+    if packed_input {
+        backend.gemm_layer(
+            layer_id,
+            GemmInput::Packed(&*inbox),
+            pixels,
+            in_params.zero_point,
+            par,
+            planes,
+            acc,
+            stats,
+        );
+    } else {
+        im2col_into(act, g, in_params.zero_point as u8, cols);
+        backend.gemm_layer(
+            layer_id,
+            GemmInput::Dense(&cols[..]),
+            pixels,
+            in_params.zero_point,
+            par,
+            planes,
+            acc,
+            stats,
+        );
+    }
     let sx = in_params.scale;
     let sw = conv.wparams.scale;
-    // Output is CHW: out[oc][pixel]; accumulators arrive [pixel][oc].
-    let mut out = vec![0u8; g.out_c * pixels];
-    for pix in 0..pixels {
-        let accs = &scratch.acc[pix * g.out_c..(pix + 1) * g.out_c];
-        for (oc, &acc) in accs.iter().enumerate() {
-            let real = acc as f32 * sx * sw + conv.bias[oc];
-            let real = if conv.relu { real.max(0.0) } else { real };
-            out[oc * pixels + pix] = conv.out_params.quantize(real);
+    let oshape = (g.out_c, g.out_h(), g.out_w());
+    let (groups, ch) = (pixels as u64, g.out_c as u64);
+    match fuse_next {
+        Some((gnext, msb_bits)) => {
+            debug_assert_eq!((gnext.in_c, gnext.in_h, gnext.in_w), oshape);
+            let oq = conv.out_params;
+            let (out_c, relu, bias) = (g.out_c, conv.relu, &conv.bias);
+            let acc_ref: &[i64] = acc;
+            im2col_scatter_into(gnext, oq.zero_point as u8, cols, |c, pix| {
+                let real = acc_ref[pix * out_c + c] as f32 * sx * sw + bias[c];
+                oq.quantize(if relu { real.max(0.0) } else { real })
+            });
+            inbox.pack(&cols[..], gnext.dp_len(), gnext.out_pixels(), par);
+            stats.traffic.record_encoded(layer_id, groups, ch, msb_bits);
+            (None, oq, oshape)
+        }
+        None => {
+            // Output is CHW: out[oc][pixel]; accumulators arrive [pixel][oc].
+            let mut out = vec![0u8; g.out_c * pixels];
+            for pix in 0..pixels {
+                let accs = &acc[pix * g.out_c..(pix + 1) * g.out_c];
+                for (oc, &a) in accs.iter().enumerate() {
+                    let real = a as f32 * sx * sw + conv.bias[oc];
+                    let real = if conv.relu { real.max(0.0) } else { real };
+                    out[oc * pixels + pix] = conv.out_params.quantize(real);
+                }
+            }
+            stats.traffic.record_dense(layer_id, groups, ch);
+            (Some(out), conv.out_params, oshape)
         }
     }
-    (
-        out,
-        conv.out_params,
-        (g.out_c, g.out_h(), g.out_w()),
-    )
 }
 
 /// Convenience: build an exact backend prepared for `model`.

@@ -21,8 +21,8 @@ pub mod profiler;
 pub mod weights;
 
 pub use exec::{
-    exact_backend, run_model_batch_with, run_model_with, ExactBackend, MacBackend, ModelScratch,
-    RunStats,
+    exact_backend, run_model_batch_with, run_model_with, ExactBackend, GemmInput, MacBackend,
+    ModelScratch, RunStats,
 };
 // Deprecated convenience wrappers, kept as shims while call sites move to
 // `pacim::engine` (the typed Session front door).

@@ -26,7 +26,7 @@
 //!   reconstructed from the sparsity counts (`Σ_p 2^p·Sx[p]`), never from
 //!   the discarded LSB bits — faithfully mirroring the architecture.
 
-use super::exec::{exact_gemm_tiled, MacBackend, RunStats, TILE_PIXELS};
+use super::exec::{exact_gemm_tiled, GemmInput, MacBackend, RunStats, TILE_PIXELS};
 use crate::arch::bank_logic::{classify, spec_normalized, ThresholdSet};
 use crate::pac::compute_map::DynamicLevel;
 use crate::pac::mac::sparsity_domain_sum_fast;
@@ -65,6 +65,14 @@ pub struct PacConfig {
     /// tiles are independent and collected in order — so this only
     /// changes speed, never results.
     pub par: Parallelism,
+    /// Let producers hand this backend's PAC layers their activations in
+    /// sparsity-encoded form (MSB bit-planes + counters packed straight
+    /// into the consumer's scratch slab) wherever the program allows it
+    /// (conv→conv adjacency) — the §3.1/§4.5 inter-layer dataplane.
+    /// Numerically inert: logits and cycle statistics are bit-identical
+    /// either way; only the measured traffic ledger (and speed) change.
+    /// Disable to force the dense-u8 round-trip on every edge.
+    pub fuse_dataplane: bool,
 }
 
 impl Default for PacConfig {
@@ -76,6 +84,7 @@ impl Default for PacConfig {
             first_layer_exact: true,
             min_dp_len: 512,
             par: Parallelism::auto(),
+            fuse_dataplane: true,
         }
     }
 }
@@ -493,6 +502,28 @@ fn tile_epilogue(
 }
 
 impl MacBackend for PacBackend {
+    /// PAC layers consume the encoded dataplane: the digital block reads
+    /// only the map's required activation planes (4 MSBs on the paper
+    /// default; the §5 dynamic ladder is derived from the 4×4 base, so 4
+    /// planes cover every level), the PCU and zero-point epilogue read
+    /// only the counters. Digital-fallback layers (first layer, short
+    /// DP) need the dense matrix and stay un-fused.
+    fn packed_input_bits(&self, layer_id: usize) -> Option<u32> {
+        if !self.config.fuse_dataplane {
+            return None;
+        }
+        let layer = self.layers.get(layer_id)?;
+        if layer.exact.is_some() || layer.k == 0 || layer.sw.is_empty() {
+            return None;
+        }
+        let bits = if self.config.thresholds.is_some() {
+            4
+        } else {
+            self.config.map.required_activation_bits().len() as u32
+        };
+        Some(bits)
+    }
+
     fn prepare(&mut self, layer_id: usize, weight: &Tensor<u8>, zpw: i32) {
         assert_eq!(layer_id, self.layers.len(), "layers must prepare in order");
         let n = weight.shape()[0];
@@ -534,7 +565,7 @@ impl MacBackend for PacBackend {
     fn gemm_layer(
         &self,
         layer_id: usize,
-        cols: &[u8],
+        input: GemmInput<'_>,
         pixels: usize,
         zpx: i32,
         par: &Parallelism,
@@ -544,7 +575,6 @@ impl MacBackend for PacBackend {
     ) {
         let layer = &self.layers[layer_id];
         let k = layer.k;
-        debug_assert_eq!(cols.len(), pixels * k);
         let n = layer.sw.len();
         out.clear();
         out.resize(pixels * n, 0);
@@ -554,17 +584,36 @@ impl MacBackend for PacBackend {
         let par = par.or(&self.config.par);
 
         // First layer / short-DP fallback: standard D-CiM — the same
-        // tiled exact kernel the exact backend runs.
+        // tiled exact kernel the exact backend runs. Such layers never
+        // advertise `packed_input_bits`, so their input is always dense.
         if let Some((w, zpw)) = &layer.exact {
+            let cols = match input {
+                GemmInput::Dense(c) => c,
+                GemmInput::Packed(_) => {
+                    panic!("digital-fallback layer {layer_id} cannot consume packed input")
+                }
+            };
+            debug_assert_eq!(cols.len(), pixels * k);
             exact_gemm_tiled(w.data(), *zpw, cols, k, n, pixels, zpx, &par, out, stats);
             return;
         }
 
-        // (1) Fused lowering: transpose the layer's whole im2col matrix
-        // into contiguous [pixel][p][word] planes + per-pixel sparsity
-        // counts, once — not once per output pixel.
-        planes.pack(cols, k, pixels, &par);
-        let x: &PackedPatches = planes;
+        // (1) Lowering: either the producer already packed this layer's
+        // im2col matrix (sparsity-encoded dataplane — zero work here),
+        // or transpose the dense matrix into contiguous [pixel][p][word]
+        // planes + per-pixel sparsity counts, once — not once per pixel.
+        let x: &PackedPatches = match input {
+            GemmInput::Packed(p) => {
+                debug_assert_eq!(p.pixels(), pixels);
+                debug_assert_eq!(p.k(), k);
+                p
+            }
+            GemmInput::Dense(cols) => {
+                debug_assert_eq!(cols.len(), pixels * k);
+                planes.pack(cols, k, pixels, &par);
+                planes
+            }
+        };
 
         // (2) Static-map precomputation (the dynamic path classifies per
         // pixel inside the tile loop instead).
@@ -635,16 +684,22 @@ pub fn pac_backend(model: &super::layers::Model, config: PacConfig) -> PacBacken
 
 #[cfg(test)]
 mod tests {
-    // These tests exercise the deprecated convenience wrappers on purpose
-    // (the shims stay covered until deletion); new code uses the engine.
-    #![allow(deprecated)]
-
     use super::*;
-    use crate::nn::exec::{exact_backend, run_model};
-    use crate::nn::layers::{synthetic, tiny_resnet};
+    use crate::nn::exec::{exact_backend, run_model_with, ModelScratch};
+    use crate::nn::layers::{synthetic, tiny_resnet, Model};
     use crate::util::rng::Rng;
 
-    fn setup(seed: u64) -> (crate::nn::layers::Model, Vec<u8>) {
+    /// Scalar-driver reference run (the low-level entry the engine
+    /// facade is property-tested against in `tests/engine_api.rs`).
+    fn run_model<B: MacBackend + Sync>(
+        model: &Model,
+        backend: &B,
+        img: &[u8],
+    ) -> (Vec<f32>, RunStats) {
+        run_model_with(model, backend, img, &Parallelism::off(), &mut ModelScratch::default())
+    }
+
+    fn setup(seed: u64) -> (Model, Vec<u8>) {
         let mut rng = Rng::new(seed);
         let store = synthetic::random_store(&mut rng, 8, 10);
         let model = tiny_resnet(&store, 16, 10).unwrap();
@@ -661,11 +716,9 @@ mod tests {
         let exact = exact_backend(&model);
         let cfg = PacConfig {
             map: ComputeMap::all_digital(),
-            thresholds: None,
-            rounding: PcuRounding::RoundNearest,
             first_layer_exact: false,
             min_dp_len: 0,
-            par: Parallelism::auto(),
+            ..PacConfig::default()
         };
         let pac = pac_backend(&model, cfg);
         let (a, _) = run_model(&model, &exact, &img);
@@ -714,6 +767,38 @@ mod tests {
             );
             let (b, _) = run_model(&model, &par, &img);
             assert_eq!(a, b, "min_items={min_items}");
+        }
+    }
+
+    #[test]
+    fn fused_dataplane_bit_identical_to_dense_roundtrip() {
+        // The sparsity-encoded handoff (producer requantize→scatter→pack)
+        // must reproduce the dense-u8 round-trip exactly: same logits,
+        // same cycle/op counters, same dynamic-level histogram — only
+        // the measured traffic ledger may differ (encoded vs dense).
+        let (model, img) = setup(320);
+        for thresholds in [None, Some(ThresholdSet::new(0.10, 0.20, 0.35))] {
+            let cfg = |fuse| PacConfig {
+                thresholds,
+                first_layer_exact: true,
+                min_dp_len: 0,
+                par: Parallelism::off(),
+                fuse_dataplane: fuse,
+                ..PacConfig::default()
+            };
+            let (a, sa) = run_model(&model, &pac_backend(&model, cfg(false)), &img);
+            let (b, sb) = run_model(&model, &pac_backend(&model, cfg(true)), &img);
+            assert_eq!(a, b);
+            assert_eq!(sa.macs, sb.macs);
+            assert_eq!(sa.digital_cycles, sb.digital_cycles);
+            assert_eq!(sa.pcu_ops, sb.pcu_ops);
+            assert_eq!(sa.levels, sb.levels);
+            // tiny_resnet fuses exactly the three in-block conv1→conv2
+            // edges; the round-trip run encodes nothing.
+            assert_eq!(sa.traffic.encoded_layer_count(), 0);
+            assert_eq!(sb.traffic.encoded_layer_count(), 3);
+            assert_eq!(sa.traffic.total_baseline_bits(), sb.traffic.total_baseline_bits());
+            assert!(sb.traffic.total_bits() < sa.traffic.total_bits());
         }
     }
 
@@ -781,7 +866,16 @@ mod tests {
                     let mut stats = RunStats::default();
                     let mut planes = PackedPatches::default();
                     let mut out = Vec::new();
-                    b.gemm_layer(0, &cols, pixels, 7, &par, &mut planes, &mut out, &mut stats);
+                    b.gemm_layer(
+                        0,
+                        GemmInput::Dense(&cols),
+                        pixels,
+                        7,
+                        &par,
+                        &mut planes,
+                        &mut out,
+                        &mut stats,
+                    );
                     assert_eq!(out, reference, "cfg {ci} pixels {pixels}");
                     assert_eq!(stats.macs, ref_stats.macs, "cfg {ci} pixels {pixels}");
                     assert_eq!(stats.digital_cycles, ref_stats.digital_cycles);
@@ -807,7 +901,16 @@ mod tests {
         let mut stats = RunStats::default();
         let mut planes = PackedPatches::default();
         let mut out = Vec::new();
-        b.gemm_layer(0, &[], 4, 5, &Parallelism::off(), &mut planes, &mut out, &mut stats);
+        b.gemm_layer(
+            0,
+            GemmInput::Dense(&[]),
+            4,
+            5,
+            &Parallelism::off(),
+            &mut planes,
+            &mut out,
+            &mut stats,
+        );
         assert_eq!(out, vec![0i64; 8]);
         assert_eq!(stats.macs, 0);
     }

@@ -7,7 +7,7 @@
 //! profile as the CiM array sees it (im2col patches, zero-point padding
 //! included — exactly the DP vectors of Eq. 1).
 
-use super::exec::{MacBackend, RunStats};
+use super::exec::{GemmInput, MacBackend, RunStats};
 use super::layers::{Model, Op};
 use crate::pac::sparsity::bit_sparsity_counts;
 use crate::tensor::{PackedPatches, Tensor};
@@ -134,11 +134,17 @@ impl<B: MacBackend> MacBackend for ProfilingBackend<B> {
         self.inner.prepare(layer_id, weight, zpw);
     }
 
+    /// The profiler is transparent to the encoded dataplane: fusion
+    /// decisions are the wrapped backend's.
+    fn packed_input_bits(&self, layer_id: usize) -> Option<u32> {
+        self.inner.packed_input_bits(layer_id)
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn gemm_layer(
         &self,
         layer_id: usize,
-        cols: &[u8],
+        input: GemmInput<'_>,
         pixels: usize,
         zpx: i32,
         par: &Parallelism,
@@ -148,30 +154,71 @@ impl<B: MacBackend> MacBackend for ProfilingBackend<B> {
     ) {
         // Per-bit counts over the whole patch matrix equal the sum of the
         // per-patch counts the pre-blocked profiler accumulated — one
-        // pass, same profile.
-        let counts = bit_sparsity_counts(cols);
+        // pass, same profile. A producer-packed input already carries its
+        // per-pixel sparsity counters, so the profiler reads those
+        // instead of re-scanning bytes (identical totals by the packing
+        // identity, property-tested in `tests/traffic.rs`).
+        let (counts, elems) = match input {
+            GemmInput::Dense(cols) => {
+                let c = bit_sparsity_counts(cols);
+                let mut counts = [0u64; 8];
+                for b in 0..8 {
+                    counts[b] = c[b] as u64;
+                }
+                (counts, cols.len() as u64)
+            }
+            GemmInput::Packed(x) => {
+                let mut counts = [0u64; 8];
+                for pix in 0..x.pixels() {
+                    let pop = x.pop(pix);
+                    for b in 0..8 {
+                        counts[b] += pop[b] as u64;
+                    }
+                }
+                (counts, (x.pixels() * x.k()) as u64)
+            }
+        };
         {
             let mut profiles = self.profiles.lock().unwrap();
             let p = &mut profiles[layer_id];
             for b in 0..8 {
-                p.x_bit_counts[b] += counts[b] as u64;
+                p.x_bit_counts[b] += counts[b];
             }
-            p.x_elems += cols.len() as u64;
+            p.x_elems += elems;
         }
-        self.inner.gemm_layer(layer_id, cols, pixels, zpx, par, planes, out, stats)
+        self.inner.gemm_layer(layer_id, input, pixels, zpx, par, planes, out, stats)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    // run_model is deprecated in favor of `pacim::engine`; the profiler
-    // tests drive the raw interpreter on purpose.
-    #![allow(deprecated)]
-
     use super::*;
-    use crate::nn::exec::{exact_backend, run_model, ExactBackend};
+    use crate::nn::exec::{exact_backend, run_model_with, ExactBackend, ModelScratch};
     use crate::nn::layers::{synthetic, tiny_resnet};
+    use crate::nn::pac_exec::{PacBackend, PacConfig};
     use crate::util::rng::Rng;
+
+    fn run<B: MacBackend + Sync>(model: &Model, backend: &B, img: &[u8]) -> (Vec<f32>, RunStats) {
+        run_model_with(model, backend, img, &Parallelism::off(), &mut ModelScratch::default())
+    }
+
+    fn prepare_wrapped<B: MacBackend>(prof: &mut ProfilingBackend<B>, model: &Model) {
+        // Re-prepare through the wrapper so weights are profiled too.
+        let mut id = 0;
+        for op in &model.ops {
+            match op {
+                Op::Conv2d(c) => {
+                    prof.prepare(id, &c.weight, c.wparams.zero_point);
+                    id += 1;
+                }
+                Op::Linear(l) => {
+                    prof.prepare(id, &l.weight, l.wparams.zero_point);
+                    id += 1;
+                }
+                _ => {}
+            }
+        }
+    }
 
     #[test]
     fn profiles_every_compute_layer() {
@@ -179,27 +226,10 @@ mod tests {
         let store = synthetic::random_store(&mut rng, 8, 10);
         let model = tiny_resnet(&store, 16, 10).unwrap();
         let mut prof = ProfilingBackend::new(ExactBackend::default());
-        // Re-prepare through the wrapper so weights are profiled too.
-        {
-            use crate::nn::layers::Op;
-            let mut id = 0;
-            for op in &model.ops {
-                match op {
-                    Op::Conv2d(c) => {
-                        prof.prepare(id, &c.weight, c.wparams.zero_point);
-                        id += 1;
-                    }
-                    Op::Linear(l) => {
-                        prof.prepare(id, &l.weight, l.wparams.zero_point);
-                        id += 1;
-                    }
-                    _ => {}
-                }
-            }
-        }
+        prepare_wrapped(&mut prof, &model);
         prof.name_layers(&model);
         let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
-        let (_, _) = run_model(&model, &prof, &img);
+        let (_, _) = run(&model, &prof, &img);
         let profiles = prof.profiles();
         assert_eq!(profiles.len(), 10); // 9 convs + fc
         assert_eq!(profiles[0].name, "stem");
@@ -218,27 +248,46 @@ mod tests {
         let model = tiny_resnet(&store, 16, 10).unwrap();
         let plain = exact_backend(&model);
         let mut prof = ProfilingBackend::new(ExactBackend::default());
-        {
-            use crate::nn::layers::Op;
-            let mut id = 0;
-            for op in &model.ops {
-                match op {
-                    Op::Conv2d(c) => {
-                        prof.prepare(id, &c.weight, c.wparams.zero_point);
-                        id += 1;
-                    }
-                    Op::Linear(l) => {
-                        prof.prepare(id, &l.weight, l.wparams.zero_point);
-                        id += 1;
-                    }
-                    _ => {}
-                }
-            }
-        }
+        prepare_wrapped(&mut prof, &model);
         let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
-        let (a, _) = run_model(&model, &plain, &img);
-        let (b, _) = run_model(&model, &prof, &img);
+        let (a, _) = run(&model, &plain, &img);
+        let (b, _) = run(&model, &prof, &img);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn packed_input_profiles_identically_to_dense() {
+        // The encoded dataplane hands the profiler packed planes instead
+        // of bytes; the sparsity counters must yield the exact same
+        // per-layer profile (and the same logits) as the dense path.
+        let mut rng = Rng::new(502);
+        let store = synthetic::random_store(&mut rng, 8, 10);
+        let model = tiny_resnet(&store, 16, 10).unwrap();
+        let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
+        let cfg = |fuse| PacConfig {
+            min_dp_len: 0,
+            first_layer_exact: false,
+            par: Parallelism::off(),
+            fuse_dataplane: fuse,
+            ..PacConfig::default()
+        };
+        let mut results = Vec::new();
+        for fuse in [false, true] {
+            let mut prof = ProfilingBackend::new(PacBackend::new(cfg(fuse)));
+            prepare_wrapped(&mut prof, &model);
+            let (logits, stats) = run(&model, &prof, &img);
+            let encoded = stats.traffic.encoded_layer_count();
+            assert_eq!(encoded > 0, fuse, "fuse={fuse} encoded={encoded}");
+            results.push((logits, prof.profiles()));
+        }
+        let (a_logits, a_prof) = &results[0];
+        let (b_logits, b_prof) = &results[1];
+        assert_eq!(a_logits, b_logits);
+        assert_eq!(a_prof.len(), b_prof.len());
+        for (a, b) in a_prof.iter().zip(b_prof) {
+            assert_eq!(a.x_bit_counts, b.x_bit_counts, "{}", a.name);
+            assert_eq!(a.x_elems, b.x_elems);
+        }
     }
 
     #[test]
@@ -250,7 +299,7 @@ mod tests {
         // All-ones patch: every bit set.
         prof.gemm_layer(
             0,
-            &[255, 255, 255, 255],
+            GemmInput::Dense(&[255, 255, 255, 255]),
             1,
             0,
             &Parallelism::off(),

@@ -25,6 +25,8 @@ const PACK_TILE: usize = 32;
 #[derive(Debug, Clone, Default)]
 pub struct PackedPatches {
     pixels: usize,
+    /// Elements per patch (the DP length the planes were packed from).
+    k: usize,
     words: usize,
     /// `[pixel][p][word]` plane slab, `8 * words` words per pixel.
     planes: Vec<u64>,
@@ -69,6 +71,7 @@ impl PackedPatches {
         assert_eq!(cols.len(), pixels * k, "im2col matrix shape mismatch");
         let words = words_for(k);
         self.pixels = pixels;
+        self.k = k;
         self.words = words;
         // Every slab word is overwritten below, so stale contents from a
         // previous (larger) layer are harmless; resize only zero-fills
@@ -122,6 +125,11 @@ impl PackedPatches {
         self.pixels
     }
 
+    /// Elements per patch (DP length) of the last pack.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
     /// `u64` words per plane.
     pub fn words(&self) -> usize {
         self.words
@@ -169,6 +177,7 @@ mod tests {
             let mut packed = PackedPatches::default();
             packed.pack(&cols, k, pixels, &Parallelism::off());
             assert_eq!(packed.pixels(), pixels);
+            assert_eq!(packed.k(), k);
             assert_eq!(packed.words(), crate::util::words_for(k));
             for pix in 0..pixels {
                 let bp = BitPlanes::from_u8(&cols[pix * k..(pix + 1) * k]);

@@ -93,6 +93,61 @@ pub fn col2im_shape(g: &Conv2dGeom) -> (usize, usize) {
     (g.out_pixels(), g.dp_len())
 }
 
+/// Inverse im2col ("col scatter"): build `g`'s `[out_pixels, dp_len]`
+/// patch matrix directly from a value *producer* instead of a dense CHW
+/// tensor. `value(c, pix)` is called exactly once per input position
+/// (`pix = y·in_w + x`) and the returned byte is written into every
+/// patch slot that references that position; padding slots are filled
+/// with `pad_value` (the activation zero point).
+///
+/// This is the sparsity-encoded dataplane's producer-side lowering: the
+/// previous layer requantizes each output element once, hands it here,
+/// and no dense u8 activation tensor ever materializes between layers.
+/// For any dense `input`, `im2col_scatter_into(g, zp, out, |c, pix|
+/// input[c * hw + pix])` produces byte-for-byte the same matrix as
+/// [`im2col_into`] (property-tested below).
+pub fn im2col_scatter_into(
+    g: &Conv2dGeom,
+    pad_value: u8,
+    out: &mut Vec<u8>,
+    mut value: impl FnMut(usize, usize) -> u8,
+) {
+    let (oh, ow, k) = (g.out_h(), g.out_w(), g.dp_len());
+    // clear + resize pad-fills every element while keeping capacity.
+    out.clear();
+    out.resize(oh * ow * k, pad_value);
+    for c in 0..g.in_c {
+        for y in 0..g.in_h {
+            for x in 0..g.in_w {
+                let v = value(c, y * g.in_w + x);
+                // Output pixels (oy, ox) whose patch reads (c, y, x):
+                // oy·stride + ky − pad = y, per kernel row/col in range.
+                for ky in 0..g.kh {
+                    let ty = y + g.pad;
+                    if ty < ky || (ty - ky) % g.stride != 0 {
+                        continue;
+                    }
+                    let oy = (ty - ky) / g.stride;
+                    if oy >= oh {
+                        continue;
+                    }
+                    for kx in 0..g.kw {
+                        let tx = x + g.pad;
+                        if tx < kx || (tx - kx) % g.stride != 0 {
+                            continue;
+                        }
+                        let ox = (tx - kx) / g.stride;
+                        if ox >= ow {
+                            continue;
+                        }
+                        out[(oy * ow + ox) * k + (c * g.kh + ky) * g.kw + kx] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +288,40 @@ mod tests {
         let fresh = im2col(&input, &g, 7);
         im2col_into(&input, &g, 7, &mut buf);
         assert_eq!(buf, fresh);
+    }
+
+    #[test]
+    fn scatter_matches_gather_on_random_geometries() {
+        // The producer-side scatter must reproduce the consumer-side
+        // gather byte for byte, for every geometry the engines run.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(4096);
+        for _ in 0..40 {
+            let g = Conv2dGeom {
+                in_c: 1 + rng.below(4) as usize,
+                in_h: 3 + rng.below(8) as usize,
+                in_w: 3 + rng.below(8) as usize,
+                out_c: 1,
+                kh: 1 + rng.below(3) as usize,
+                kw: 1 + rng.below(3) as usize,
+                stride: 1 + rng.below(2) as usize,
+                pad: rng.below(2) as usize,
+            };
+            let hw = g.in_h * g.in_w;
+            let input: Vec<u8> = (0..g.in_c * hw).map(|_| rng.below(256) as u8).collect();
+            let zp = rng.below(256) as u8;
+            let gathered = im2col(&input, &g, zp);
+            // Warm buffer with different contents: must be fully rewritten.
+            let mut scattered = vec![0xAAu8; 7];
+            let mut calls = 0usize;
+            im2col_scatter_into(&g, zp, &mut scattered, |c, pix| {
+                calls += 1;
+                input[c * hw + pix]
+            });
+            assert_eq!(scattered, gathered, "geom {g:?}");
+            // The producer requantizes each element exactly once.
+            assert_eq!(calls, g.in_c * hw);
+        }
     }
 
     #[test]

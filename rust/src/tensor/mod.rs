@@ -9,7 +9,7 @@ pub mod bitplane;
 pub mod im2col;
 
 pub use bitplane::PackedPatches;
-pub use im2col::{col2im_shape, im2col, im2col_into, Conv2dGeom};
+pub use im2col::{col2im_shape, im2col, im2col_into, im2col_scatter_into, Conv2dGeom};
 
 /// Owned, contiguous, row-major tensor.
 #[derive(Debug, Clone, PartialEq)]

@@ -1,13 +1,15 @@
 //! Machine-readable bench-artifact schemas.
 //!
-//! CI uploads two JSON artifacts per run — `BENCH_hotpath.json`
-//! (`benches/perf_hotpath.rs`) and `BENCH_serve.json`
-//! (`examples/loadgen.rs`) — to track the perf trajectory across PRs.
-//! Regression gating only works if the files stay machine-readable, so
-//! the writers serialize *these* structs and `tests/bench_schema.rs`
-//! re-parses the emitted files with `deny_unknown_fields`: any schema
-//! drift (renamed, added, or removed field) fails the build instead of
-//! silently breaking the trend tooling.
+//! CI uploads three JSON artifacts per run — `BENCH_hotpath.json`
+//! (`benches/perf_hotpath.rs`), `BENCH_serve.json`
+//! (`examples/loadgen.rs`), and `BENCH_traffic.json`
+//! (`benches/fig7_system.rs`, the measured sparsity-encoded dataplane
+//! ledger) — to track the perf trajectory across PRs. Regression gating
+//! only works if the files stay machine-readable, so the writers
+//! serialize *these* structs and `tests/bench_schema.rs` re-parses the
+//! emitted files with `deny_unknown_fields`: any schema drift (renamed,
+//! added, or removed field) fails the build instead of silently
+//! breaking the trend tooling.
 
 use serde::{Deserialize, Serialize};
 
@@ -46,6 +48,28 @@ pub struct BlockedBench {
     pub bit_identical: bool,
 }
 
+/// One fused-vs-roundtrip end-to-end measurement (a
+/// `BENCH_hotpath.json` row): multi-layer PAC inference with the
+/// sparsity-encoded dataplane (producer-side requantize→scatter→pack)
+/// against the dense-u8 round-trip it replaced, same model, same
+/// images, single-thread.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct FusedBench {
+    /// Model the forward passes ran (synthetic tiny-resnet label).
+    pub model: String,
+    /// Images per timed repetition.
+    pub images: usize,
+    /// Inter-layer edges that moved in MSB+counter form per image.
+    pub encoded_layers: usize,
+    pub roundtrip_images_per_s: f64,
+    pub fused_images_per_s: f64,
+    /// `fused / roundtrip` throughput ratio (reported, not gated — the
+    /// logits bit-identity below is the hard claim).
+    pub speedup_fused: f64,
+    pub bit_identical: bool,
+}
+
 /// `BENCH_hotpath.json` — hot-path throughput report.
 #[derive(Debug, Clone, Serialize, Deserialize)]
 #[serde(deny_unknown_fields)]
@@ -57,6 +81,8 @@ pub struct HotpathReport {
     pub layers: Vec<LayerBench>,
     /// Blocked-vs-per-patch layer GEMM rows (single-thread).
     pub blocked: Vec<BlockedBench>,
+    /// Fused-dataplane vs dense-roundtrip end-to-end rows.
+    pub fused: Vec<FusedBench>,
 }
 
 /// One serving scenario (a `BENCH_serve.json` row): an executor driven
@@ -131,7 +157,171 @@ pub fn validate_hotpath(json: &str) -> Result<HotpathReport, String> {
             return Err(format!("shape '{}' has invalid blocked rate", b.shape));
         }
     }
+    for f in &r.fused {
+        if !(f.roundtrip_images_per_s.is_finite() && f.roundtrip_images_per_s > 0.0) {
+            return Err(format!("fused row '{}' has invalid roundtrip rate", f.model));
+        }
+        if !(f.fused_images_per_s.is_finite() && f.fused_images_per_s > 0.0) {
+            return Err(format!("fused row '{}' has invalid fused rate", f.model));
+        }
+        if !f.bit_identical {
+            return Err(format!("fused row '{}': dataplane diverged from round-trip", f.model));
+        }
+        if f.encoded_layers == 0 {
+            return Err(format!("fused row '{}' encoded no edges (nothing measured)", f.model));
+        }
+    }
     Ok(r)
+}
+
+/// One measured inter-layer traffic row (a `BENCH_traffic.json` row):
+/// what the executor's `TrafficLedger` recorded for one edge, next to
+/// the closed-form prediction for the same geometry + encode decision.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct TrafficLayerBench {
+    pub layer: String,
+    /// Channels per encoding group.
+    pub channels: usize,
+    /// Encoding groups moved (output pixels × images).
+    pub groups: u64,
+    /// 8-bit dense-equivalent bits (one direction).
+    pub baseline_bits: u64,
+    /// Bits the executor actually moved (one direction).
+    pub measured_bits: u64,
+    /// The analytic `memory::traffic` prediction for the same edge,
+    /// computed from layer geometry — must equal `measured_bits`.
+    pub analytic_bits: u64,
+    /// `1 − measured/baseline`.
+    pub reduction: f64,
+    /// Moved in MSB+counter form (vs dense u8).
+    pub encoded: bool,
+    /// Deep layer (≥ 128 channels): the band Fig. 7(b) quotes 40–50%
+    /// for; CI's floor gate applies to `deep && encoded` rows.
+    pub deep: bool,
+}
+
+/// `BENCH_traffic.json` — measured sparsity-encoded dataplane report.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct TrafficReport {
+    /// Always `"traffic"`.
+    pub bench: String,
+    pub quick: bool,
+    /// Model the ledger was measured on.
+    pub model: String,
+    /// Forward passes aggregated into the rows.
+    pub images: usize,
+    pub layers: Vec<TrafficLayerBench>,
+    /// Rows moved in encoded form.
+    pub encoded_layers: usize,
+    /// Minimum reduction over `deep && encoded` rows (the gated floor).
+    pub deep_encoded_min_reduction: f64,
+    /// Whole-network measured reduction (every edge, encoded or not).
+    pub network_reduction: f64,
+}
+
+/// Channel count at and above which a traffic row counts as a *deep*
+/// layer (the band Fig. 7(b) quotes 40–50% for). Part of the
+/// `BENCH_traffic.json` schema: `validate_traffic` recomputes every
+/// row's `deep` flag from this threshold, so the floor gate never
+/// trusts a writer-supplied label.
+pub const TRAFFIC_DEEP_CHANNELS: usize = 128;
+
+/// Parse + sanity-check a `BENCH_traffic.json` payload, including the
+/// measured-vs-analytic cross-check: every row's measured bits must
+/// equal the closed-form `memory::traffic` prediction for its geometry
+/// and encode decision (dense rows: the 8-bit baseline), every `deep`
+/// flag must match [`TRAFFIC_DEEP_CHANNELS`], and the summary fields
+/// must agree with the rows they summarize.
+pub fn validate_traffic(json: &str) -> Result<TrafficReport, String> {
+    let r: TrafficReport = serde_json::from_str(json).map_err(|e| e.to_string())?;
+    if r.bench != "traffic" {
+        return Err(format!("bench field is '{}', expected 'traffic'", r.bench));
+    }
+    if r.layers.is_empty() {
+        return Err("no traffic rows".into());
+    }
+    for l in &r.layers {
+        if l.baseline_bits == 0 {
+            return Err(format!("layer '{}' moved no baseline bits", l.layer));
+        }
+        if l.measured_bits != l.analytic_bits {
+            return Err(format!(
+                "layer '{}': measured {} bits but the analytic model predicts {} — \
+                 the ledger's bookkeeping drifted from `memory::traffic`",
+                l.layer, l.measured_bits, l.analytic_bits
+            ));
+        }
+        if !l.encoded && l.measured_bits != l.baseline_bits {
+            return Err(format!(
+                "layer '{}': a dense edge must move exactly the 8-bit baseline",
+                l.layer
+            ));
+        }
+        let want = 1.0 - l.measured_bits as f64 / l.baseline_bits as f64;
+        if !(l.reduction.is_finite() && (l.reduction - want).abs() < 1e-9) {
+            return Err(format!("layer '{}': reduction field inconsistent", l.layer));
+        }
+        if l.deep != (l.channels >= TRAFFIC_DEEP_CHANNELS) {
+            return Err(format!(
+                "layer '{}': deep flag disagrees with its {} channels (threshold {})",
+                l.layer, l.channels, TRAFFIC_DEEP_CHANNELS
+            ));
+        }
+    }
+    let encoded = r.layers.iter().filter(|l| l.encoded).count();
+    if encoded != r.encoded_layers {
+        return Err(format!(
+            "encoded_layers says {} but {} rows are encoded",
+            r.encoded_layers, encoded
+        ));
+    }
+    let deep_min = r
+        .layers
+        .iter()
+        .filter(|l| l.deep && l.encoded)
+        .map(|l| l.reduction)
+        .fold(f64::INFINITY, f64::min);
+    if deep_min.is_finite() && (r.deep_encoded_min_reduction - deep_min).abs() >= 1e-9 {
+        return Err(format!(
+            "deep_encoded_min_reduction says {} but the rows give {deep_min}",
+            r.deep_encoded_min_reduction
+        ));
+    }
+    let (bits, base) = r
+        .layers
+        .iter()
+        .fold((0u64, 0u64), |(b, d), l| (b + l.measured_bits, d + l.baseline_bits));
+    let net = 1.0 - bits as f64 / base as f64;
+    if (r.network_reduction - net).abs() >= 1e-9 {
+        return Err(format!(
+            "network_reduction says {} but the rows give {net}",
+            r.network_reduction
+        ));
+    }
+    Ok(r)
+}
+
+/// The traffic regression gate (CI bench-smoke, behind
+/// `PACIM_ENFORCE_TRAFFIC_REDUCTION`): every deep (≥128-channel)
+/// sparsity-encoded edge must hit at least `floor` reduction — the
+/// measured version of the paper's 40–50% deep-layer claim.
+pub fn enforce_traffic_floor(r: &TrafficReport, floor: f64) -> Result<(), String> {
+    let deep: Vec<&TrafficLayerBench> =
+        r.layers.iter().filter(|l| l.deep && l.encoded).collect();
+    if deep.is_empty() {
+        return Err("no deep encoded rows to gate".into());
+    }
+    for l in &deep {
+        if !(l.reduction.is_finite() && l.reduction >= floor) {
+            return Err(format!(
+                "layer '{}' ({} ch): measured reduction {:.3} below the {:.2} floor",
+                l.layer, l.channels, l.reduction, floor
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// The blocked-GEMM regression gate (CI bench-smoke): the blocked kernel
@@ -221,6 +411,51 @@ mod tests {
                 speedup_blocked: 2.0,
                 bit_identical: true,
             }],
+            fused: vec![FusedBench {
+                model: "tiny_resnet_c16".into(),
+                images: 4,
+                encoded_layers: 3,
+                roundtrip_images_per_s: 50.0,
+                fused_images_per_s: 55.0,
+                speedup_fused: 1.1,
+                bit_identical: true,
+            }],
+        }
+    }
+
+    fn sample_traffic() -> TrafficReport {
+        TrafficReport {
+            bench: "traffic".into(),
+            quick: true,
+            model: "tiny_resnet_c64".into(),
+            images: 1,
+            layers: vec![
+                TrafficLayerBench {
+                    layer: "block3.conv1".into(),
+                    channels: 256,
+                    groups: 16,
+                    baseline_bits: 16 * 2048,
+                    measured_bits: 16 * 1088,
+                    analytic_bits: 16 * 1088,
+                    reduction: 1.0 - 1088.0 / 2048.0,
+                    encoded: true,
+                    deep: true,
+                },
+                TrafficLayerBench {
+                    layer: "down2".into(),
+                    channels: 256,
+                    groups: 16,
+                    baseline_bits: 16 * 2048,
+                    measured_bits: 16 * 2048,
+                    analytic_bits: 16 * 2048,
+                    reduction: 0.0,
+                    encoded: false,
+                    deep: true,
+                },
+            ],
+            encoded_layers: 1,
+            deep_encoded_min_reduction: 1.0 - 1088.0 / 2048.0,
+            network_reduction: 1.0 - (1088.0 + 2048.0) / 4096.0,
         }
     }
 
@@ -231,6 +466,86 @@ mod tests {
         let back = validate_hotpath(&json).unwrap();
         assert_eq!(back.layers.len(), 1);
         assert_eq!(back.blocked.len(), 1);
+        assert_eq!(back.fused.len(), 1);
+    }
+
+    #[test]
+    fn fused_rows_must_be_bit_identical_and_encode() {
+        let mut r = sample_hotpath();
+        r.fused[0].bit_identical = false;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_hotpath(&json).unwrap_err().contains("diverged"));
+        let mut r = sample_hotpath();
+        r.fused[0].bit_identical = true;
+        r.fused[0].encoded_layers = 0;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_hotpath(&json).unwrap_err().contains("encoded no edges"));
+    }
+
+    #[test]
+    fn traffic_roundtrip_and_cross_check() {
+        let r = sample_traffic();
+        let json = serde_json::to_string_pretty(&r).unwrap();
+        let back = validate_traffic(&json).unwrap();
+        assert_eq!(back.layers.len(), 2);
+        enforce_traffic_floor(&back, 0.40).unwrap();
+
+        // Measured bits drifting from the analytic model is a hard error.
+        let mut drift = sample_traffic();
+        drift.layers[0].measured_bits += 1;
+        drift.layers[0].reduction = 1.0 - drift.layers[0].measured_bits as f64
+            / drift.layers[0].baseline_bits as f64;
+        let json = serde_json::to_string(&drift).unwrap();
+        assert!(validate_traffic(&json).unwrap_err().contains("analytic"));
+
+        // A dense edge claiming savings is a hard error too.
+        let mut dense = sample_traffic();
+        dense.layers[1].measured_bits -= 8;
+        dense.layers[1].analytic_bits -= 8;
+        dense.layers[1].reduction = 1.0 - dense.layers[1].measured_bits as f64
+            / dense.layers[1].baseline_bits as f64;
+        let json = serde_json::to_string(&dense).unwrap();
+        assert!(validate_traffic(&json).unwrap_err().contains("dense edge"));
+    }
+
+    #[test]
+    fn traffic_floor_gate() {
+        // Below-floor deep encoded row fails the gate.
+        let mut r = sample_traffic();
+        r.layers[0].measured_bits = 22938; // 30.0% reduction
+        r.layers[0].analytic_bits = 22938;
+        r.layers[0].reduction = 1.0 - 22938.0 / 32768.0;
+        r.deep_encoded_min_reduction = r.layers[0].reduction;
+        r.network_reduction = 1.0 - (22938.0 + 32768.0) / 65536.0;
+        let json = serde_json::to_string(&r).unwrap();
+        let r = validate_traffic(&json).unwrap();
+        assert!(enforce_traffic_floor(&r, 0.40).unwrap_err().contains("floor"));
+        // A report whose only encoded rows are shallow cannot pass.
+        let mut r = sample_traffic();
+        r.layers[0].channels = 64;
+        r.layers[0].deep = false;
+        let json = serde_json::to_string(&r).unwrap();
+        let r = validate_traffic(&json).unwrap();
+        assert!(enforce_traffic_floor(&r, 0.40).is_err());
+    }
+
+    #[test]
+    fn traffic_deep_flag_is_recomputed_not_trusted() {
+        // A 256-channel encoded row labeled shallow (which would dodge
+        // the floor gate) is schema-invalid, not silently exempt.
+        let mut r = sample_traffic();
+        r.layers[0].deep = false;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_traffic(&json).unwrap_err().contains("deep flag"));
+        // So are summary fields that disagree with the rows.
+        let mut r = sample_traffic();
+        r.deep_encoded_min_reduction = 0.5;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_traffic(&json).unwrap_err().contains("deep_encoded_min_reduction"));
+        let mut r = sample_traffic();
+        r.network_reduction = 0.5;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_traffic(&json).unwrap_err().contains("network_reduction"));
     }
 
     #[test]

@@ -1,15 +1,20 @@
 //! Schema gate for the CI bench artifacts.
 //!
-//! `BENCH_hotpath.json` (benches/perf_hotpath.rs) and `BENCH_serve.json`
-//! (examples/loadgen.rs) are uploaded by CI to track the perf trajectory;
-//! future regression gating parses them, so they must stay
+//! `BENCH_hotpath.json` (benches/perf_hotpath.rs), `BENCH_serve.json`
+//! (examples/loadgen.rs), and `BENCH_traffic.json`
+//! (benches/fig7_system.rs) are uploaded by CI to track the perf
+//! trajectory; future regression gating parses them, so they must stay
 //! machine-readable. These tests validate golden samples against the
 //! shared schema (`pacim::util::benchfmt`, `deny_unknown_fields`) and —
 //! when the real files exist (CI runs this after the bench/loadgen jobs,
-//! pointing `PACIM_BENCH_HOTPATH_JSON` / `PACIM_BENCH_SERVE_JSON` at the
-//! produced artifacts) — re-parse the actual emitted JSON.
+//! pointing `PACIM_BENCH_HOTPATH_JSON` / `PACIM_BENCH_SERVE_JSON` /
+//! `PACIM_BENCH_TRAFFIC_JSON` at the produced artifacts) — re-parse the
+//! actual emitted JSON.
 
-use pacim::util::benchfmt::{enforce_blocked_floor, validate_hotpath, validate_serve};
+use pacim::util::benchfmt::{
+    enforce_blocked_floor, enforce_traffic_floor, validate_hotpath, validate_serve,
+    validate_traffic,
+};
 use std::path::PathBuf;
 
 const HOTPATH_GOLDEN: &str = r#"{
@@ -38,7 +43,52 @@ const HOTPATH_GOLDEN: &str = r#"{
       "speedup_blocked": 2.08,
       "bit_identical": true
     }
+  ],
+  "fused": [
+    {
+      "model": "tiny_resnet_c16",
+      "images": 8,
+      "encoded_layers": 3,
+      "roundtrip_images_per_s": 52.0,
+      "fused_images_per_s": 57.0,
+      "speedup_fused": 1.09,
+      "bit_identical": true
+    }
   ]
+}"#;
+
+const TRAFFIC_GOLDEN: &str = r#"{
+  "bench": "traffic",
+  "quick": true,
+  "model": "tiny_resnet_c64",
+  "images": 1,
+  "layers": [
+    {
+      "layer": "block3.conv1",
+      "channels": 256,
+      "groups": 16,
+      "baseline_bits": 32768,
+      "measured_bits": 17408,
+      "analytic_bits": 17408,
+      "reduction": 0.46875,
+      "encoded": true,
+      "deep": true
+    },
+    {
+      "layer": "down2",
+      "channels": 256,
+      "groups": 16,
+      "baseline_bits": 32768,
+      "measured_bits": 32768,
+      "analytic_bits": 32768,
+      "reduction": 0.0,
+      "encoded": false,
+      "deep": true
+    }
+  ],
+  "encoded_layers": 1,
+  "deep_encoded_min_reduction": 0.46875,
+  "network_reduction": 0.234375
 }"#;
 
 const SERVE_GOLDEN: &str = r#"{
@@ -80,6 +130,43 @@ fn hotpath_golden_passes() {
 fn serve_golden_passes() {
     let r = validate_serve(SERVE_GOLDEN).unwrap();
     assert_eq!(r.scenarios[0].executor, "pac");
+}
+
+#[test]
+fn traffic_golden_passes_and_holds_the_floor() {
+    let r = validate_traffic(TRAFFIC_GOLDEN).unwrap();
+    assert_eq!(r.layers.len(), 2);
+    assert_eq!(r.encoded_layers, 1);
+    enforce_traffic_floor(&r, 0.40).unwrap();
+}
+
+#[test]
+fn traffic_schema_drift_and_drifted_measurement_rejected() {
+    // Renamed field: unknown new name / missing old name both fail.
+    let drifted = TRAFFIC_GOLDEN.replace("\"measured_bits\"", "\"bits_measured\"");
+    assert!(validate_traffic(&drifted).is_err());
+    // Measured bits disagreeing with the analytic model is a hard error
+    // (the cross-check the acceptance criterion gates on).
+    let skewed = TRAFFIC_GOLDEN.replace("\"analytic_bits\": 17408", "\"analytic_bits\": 17400");
+    assert!(validate_traffic(&skewed).unwrap_err().contains("analytic"));
+    // A below-floor deep encoded edge fails the enforcement gate.
+    let low = TRAFFIC_GOLDEN
+        .replace("\"measured_bits\": 17408", "\"measured_bits\": 22938")
+        .replace("\"analytic_bits\": 17408", "\"analytic_bits\": 22938")
+        .replace("\"reduction\": 0.46875", "\"reduction\": 0.29998779296875")
+        .replace("\"deep_encoded_min_reduction\": 0.46875",
+                 "\"deep_encoded_min_reduction\": 0.29998779296875")
+        .replace("\"network_reduction\": 0.234375",
+                 "\"network_reduction\": 0.149993896484375");
+    let r = validate_traffic(&low).unwrap();
+    assert!(enforce_traffic_floor(&r, 0.40).unwrap_err().contains("floor"));
+    // A deep encoded row mislabeled shallow cannot dodge the gate: the
+    // validator recomputes the flag from the channel count.
+    let dodged = TRAFFIC_GOLDEN.replace(
+        "\"reduction\": 0.46875,\n      \"encoded\": true,\n      \"deep\": true",
+        "\"reduction\": 0.46875,\n      \"encoded\": true,\n      \"deep\": false",
+    );
+    assert!(validate_traffic(&dodged).unwrap_err().contains("deep flag"));
 }
 
 #[test]
@@ -163,6 +250,42 @@ fn real_hotpath_artifact_if_present() {
              (checked PACIM_BENCH_HOTPATH_JSON and the default CWD path)"
         ),
         None => println!("no BENCH_hotpath.json present; golden-sample checks only"),
+    }
+}
+
+#[test]
+fn real_traffic_artifact_if_present() {
+    // CI's bench-smoke job sets PACIM_ENFORCE_TRAFFIC_REDUCTION=1 after
+    // running fig7_system: every deep (≥128-channel) encoded edge must
+    // hit the paper's ≥40% reduction floor, and the measured ledger must
+    // equal the analytic model row for row (validate_traffic), or the
+    // job fails. Mirrors PACIM_ENFORCE_BLOCKED_SPEEDUP.
+    let enforce = std::env::var("PACIM_ENFORCE_TRAFFIC_REDUCTION")
+        .is_ok_and(|v| v != "0" && !v.is_empty());
+    match artifact("PACIM_BENCH_TRAFFIC_JSON", "BENCH_traffic.json") {
+        Some(p) => {
+            let json = std::fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("cannot read {}: {e}", p.display()));
+            let r = validate_traffic(&json)
+                .unwrap_or_else(|e| panic!("{} schema drift: {e}", p.display()));
+            println!(
+                "validated {} ({} rows, {} encoded, deep min {:.3})",
+                p.display(),
+                r.layers.len(),
+                r.encoded_layers,
+                r.deep_encoded_min_reduction
+            );
+            if enforce {
+                enforce_traffic_floor(&r, 0.40)
+                    .unwrap_or_else(|e| panic!("{} traffic regression: {e}", p.display()));
+                println!("traffic floor enforced: deep encoded edges >= 40%");
+            }
+        }
+        None if enforce => panic!(
+            "PACIM_ENFORCE_TRAFFIC_REDUCTION is set but no BENCH_traffic.json was found \
+             (checked PACIM_BENCH_TRAFFIC_JSON and the default CWD path)"
+        ),
+        None => println!("no BENCH_traffic.json present; golden-sample checks only"),
     }
 }
 

@@ -35,6 +35,9 @@ fn assert_stats_eq(a: &RunStats, b: &RunStats) {
     assert_eq!(a.digital_cycles, b.digital_cycles);
     assert_eq!(a.pcu_ops, b.pcu_ops);
     assert_eq!(a.levels, b.levels);
+    // Same backend config ⇒ same dataplane decisions ⇒ the measured
+    // traffic ledgers must agree edge for edge too.
+    assert_eq!(a.traffic, b.traffic);
 }
 
 // ---------------------------------------------------------------------------
@@ -75,6 +78,7 @@ fn prop_engine_bit_identical_to_legacy_reference() {
             first_layer_exact: rng.bernoulli(0.5),
             min_dp_len: if rng.bernoulli(0.5) { 0 } else { 512 },
             par: Parallelism::off(),
+            fuse_dataplane: rng.bernoulli(0.5),
         };
 
         // Reference: explicit backend + the low-level interpreter entry.
@@ -130,6 +134,57 @@ fn prop_engine_dynamic_thresholds_match_reference() {
         assert_eq!(out.logits, ref_logits);
         assert_stats_eq(&out.stats, &ref_stats);
         assert!(out.stats.levels.total() > 0, "dynamic path must classify");
+    });
+}
+
+#[test]
+fn prop_fused_dataplane_invariant_through_engine() {
+    // The sparsity-encoded dataplane is numerically inert: an engine
+    // with producer-side encoding on must reproduce the dense
+    // round-trip engine bit for bit — logits and cycle/op counters —
+    // while the measured traffic ledgers differ exactly in the encoded
+    // edges. Covers single-image, warm-scratch repeat, and batch.
+    Checker::new("engine_fused_vs_roundtrip", 12).run(|rng| {
+        let model = small_model(rng.next_u64(), 4, 4, 8);
+        let img = image_for(&model, rng);
+        let base = PacConfig {
+            first_layer_exact: rng.bernoulli(0.5),
+            min_dp_len: 0,
+            par: Parallelism::off(),
+            fuse_dataplane: false,
+            ..PacConfig::default()
+        };
+        let fused_cfg = PacConfig {
+            fuse_dataplane: true,
+            ..base.clone()
+        };
+        let dense = EngineBuilder::new(model.clone()).pac(base).build().unwrap();
+        let fused = EngineBuilder::new(model).pac(fused_cfg).build().unwrap();
+        let (mut sd, mut sf) = (dense.session(), fused.session());
+        let a = sd.infer(&img).unwrap();
+        let b = sf.infer(&img).unwrap();
+        assert_eq!(a.logits, b.logits, "fused engine logits diverged");
+        assert_eq!(a.stats.macs, b.stats.macs);
+        assert_eq!(a.stats.digital_cycles, b.stats.digital_cycles);
+        assert_eq!(a.stats.pcu_ops, b.stats.pcu_ops);
+        assert_eq!(a.stats.levels, b.stats.levels);
+        // tiny_resnet has three in-block conv1→conv2 edges to encode.
+        assert_eq!(a.stats.traffic.encoded_layer_count(), 0);
+        assert_eq!(b.stats.traffic.encoded_layer_count(), 3);
+        assert_eq!(
+            a.stats.traffic.total_baseline_bits(),
+            b.stats.traffic.total_baseline_bits()
+        );
+        assert!(b.stats.traffic.total_bits() <= a.stats.traffic.total_bits());
+        // Warm-scratch repeat through the same sessions.
+        let b2 = sf.infer(&img).unwrap();
+        assert_eq!(b2.logits, a.logits);
+        // Batch lanes reproduce the single-image path.
+        let imgs = [img.as_slice(), img.as_slice()];
+        for lane in sf.infer_batch(&imgs).unwrap() {
+            assert_eq!(lane.logits, a.logits);
+            assert_eq!(lane.stats.traffic, b.stats.traffic);
+        }
     });
 }
 

@@ -3,8 +3,8 @@
 
 use pacim::arch::ThresholdSet;
 use pacim::nn::{
-    pac_backend, run_model_with, ConvLayer, LinearLayer, MacBackend, Model, ModelScratch, Op,
-    PacBackend, PacConfig, RunStats,
+    pac_backend, run_model_with, ConvLayer, GemmInput, LinearLayer, MacBackend, Model,
+    ModelScratch, Op, PacBackend, PacConfig, RunStats,
 };
 use pacim::pac::mac::{pac_cycle_f64, pcu_cycle, PcuRounding};
 use pacim::pac::{
@@ -268,7 +268,7 @@ impl MacBackend for PerPatchEngine {
     fn gemm_layer(
         &self,
         layer_id: usize,
-        cols: &[u8],
+        input: GemmInput<'_>,
         pixels: usize,
         zpx: i32,
         _par: &Parallelism,
@@ -276,6 +276,12 @@ impl MacBackend for PerPatchEngine {
         out: &mut Vec<i64>,
         stats: &mut RunStats,
     ) {
+        // This engine never overrides `packed_input_bits`, so the
+        // interpreter always hands it the dense matrix.
+        let cols = match input {
+            GemmInput::Dense(c) => c,
+            GemmInput::Packed(_) => unreachable!("per-patch engine never requests packed input"),
+        };
         out.clear();
         if pixels == 0 {
             return;
@@ -375,6 +381,7 @@ fn prop_blocked_engine_matches_per_patch_engine() {
             first_layer_exact: rng.bernoulli(0.25),
             min_dp_len: 0,
             par: Parallelism::off(),
+            fuse_dataplane: rng.bernoulli(0.5),
         };
         let blocked = pac_backend(&model, cfg.clone());
         let reference = PerPatchEngine(pac_backend(&model, cfg));

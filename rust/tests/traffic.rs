@@ -1,0 +1,284 @@
+//! Traffic accounting: the measured `TrafficLedger` (what the executor
+//! actually moved between layers) against the analytic `memory::traffic`
+//! / `coordinator::scheduler` model (what the closed form predicts from
+//! geometry), plus the paper's deep-layer reduction band measured on a
+//! ResNet-18-width network.
+
+use pacim::coordinator::{schedule_layer, ScheduleConfig};
+use pacim::engine::EngineBuilder;
+use pacim::memory::activation_traffic;
+use pacim::nn::layers::synthetic::random_store;
+use pacim::nn::{
+    pac_backend, run_model_with, tiny_resnet, ConvLayer, LinearLayer, Model, ModelScratch, Op,
+    PacConfig, RunStats,
+};
+use pacim::tensor::{Conv2dGeom, QuantParams, Tensor};
+use pacim::util::check::Checker;
+use pacim::util::rng::Rng;
+use pacim::util::Parallelism;
+use pacim::workload::{LayerShape, LayerShapeKind};
+
+fn run(model: &Model, cfg: PacConfig, img: &[u8]) -> (Vec<f32>, RunStats) {
+    let backend = pac_backend(model, cfg);
+    run_model_with(model, &backend, img, &Parallelism::off(), &mut ModelScratch::default())
+}
+
+/// A random stack of chained convolutions (kernel ∈ {1,3}, stride ∈
+/// {1,2}, matching padding) followed by GAP + logits — every conv but
+/// the last has a conv consumer, so under `min_dp_len = 0` every such
+/// edge rides the encoded dataplane.
+fn random_conv_stack(rng: &mut Rng) -> (Model, Vec<u8>) {
+    let depth = 2 + rng.below(2) as usize;
+    let mut in_c = 1 + rng.below(4) as usize;
+    let mut hw = 8 + rng.below(5) as usize;
+    let in_c0 = in_c;
+    let hw0 = hw;
+    let mut ops = Vec::new();
+    for i in 0..depth {
+        let kernel = if rng.bernoulli(0.5) { 1 } else { 3 };
+        let stride = 1 + rng.below(2) as usize;
+        let out_c = 1 + rng.below(12) as usize;
+        let geom = Conv2dGeom {
+            in_c,
+            in_h: hw,
+            in_w: hw,
+            out_c,
+            kh: kernel,
+            kw: kernel,
+            stride,
+            pad: kernel / 2,
+        };
+        let k = geom.dp_len();
+        let weight: Vec<u8> = (0..out_c * k).map(|_| rng.below(256) as u8).collect();
+        ops.push(Op::Conv2d(ConvLayer {
+            name: format!("c{i}"),
+            geom,
+            weight: Tensor::from_vec(&[out_c, k], weight),
+            wparams: QuantParams::new(0.02, 128),
+            bias: (0..out_c).map(|_| (rng.next_f32() - 0.5) * 0.1).collect(),
+            out_params: QuantParams::new(0.05, 32),
+            relu: rng.bernoulli(0.7),
+        }));
+        in_c = out_c;
+        hw = geom.out_h();
+    }
+    ops.push(Op::GlobalAvgPool);
+    let fc_w: Vec<u8> = (0..3 * in_c).map(|_| rng.below(256) as u8).collect();
+    ops.push(Op::Linear(LinearLayer {
+        name: "fc".into(),
+        in_f: in_c,
+        out_f: 3,
+        weight: Tensor::from_vec(&[3, in_c], fc_w),
+        wparams: QuantParams::new(0.03, 128),
+        bias: vec![0.0; 3],
+        out_params: None,
+        relu: false,
+    }));
+    let model = Model {
+        name: "traffic_stack".into(),
+        ops,
+        input_params: QuantParams::new(1.0 / 64.0, 128),
+        in_c: in_c0,
+        in_hw: hw0,
+        num_classes: 3,
+    };
+    let img: Vec<u8> = (0..in_c0 * hw0 * hw0).map(|_| rng.below(256) as u8).collect();
+    (model, img)
+}
+
+#[test]
+fn prop_measured_ledger_matches_analytic_model() {
+    // For random conv/linear geometries, every measured ledger entry
+    // must equal the closed-form `memory::traffic` prediction for its
+    // edge — bits, baseline, and the scheduler's per-layer accounting
+    // (which counts write + read, i.e. exactly 2× the ledger's
+    // one-direction bits).
+    Checker::new("ledger_vs_analytic", 32).run(|rng| {
+        let (model, img) = random_conv_stack(rng);
+        let cfg = PacConfig {
+            first_layer_exact: rng.bernoulli(0.3),
+            min_dp_len: 0,
+            par: Parallelism::off(),
+            ..PacConfig::default()
+        };
+        let (_, stats) = run(&model, cfg, &img);
+        let convs: Vec<&ConvLayer> = model
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::Conv2d(c) => Some(c),
+                _ => None,
+            })
+            .collect();
+        let sched_cfg = ScheduleConfig::pacim_default();
+        for (i, conv) in convs.iter().enumerate() {
+            let e = stats.traffic.layer(i).unwrap_or_else(|| panic!("no entry for conv {i}"));
+            let g = &conv.geom;
+            let groups = g.out_pixels() as u64;
+            assert_eq!(e.groups, groups, "conv {i} groups");
+            assert_eq!(e.group_elems, g.out_c as u64, "conv {i} channels");
+            // Every conv with a conv consumer rides the encoded
+            // dataplane (min_dp_len = 0); the last conv feeds GAP and
+            // stays dense.
+            assert_eq!(e.encoded, i + 1 < convs.len(), "conv {i} encode decision");
+            let t = activation_traffic(g.out_c, 4);
+            let want_bits = if e.encoded { groups * t.pacim } else { groups * t.baseline };
+            assert_eq!(e.bits, want_bits, "conv {i} measured bits");
+            assert_eq!(e.baseline_bits, groups * t.baseline, "conv {i} baseline");
+            // Cross-check against the scheduler's analytic accounting
+            // (assumes every edge encoded, write + read).
+            let shape = LayerShape {
+                name: conv.name.clone(),
+                kind: LayerShapeKind::Conv,
+                geom: *g,
+            };
+            let rep = schedule_layer(&shape, &sched_cfg);
+            assert_eq!(rep.act_bits_baseline, 2 * e.baseline_bits, "conv {i} sched baseline");
+            if e.encoded {
+                assert_eq!(rep.act_bits_pacim, 2 * e.bits, "conv {i} sched pacim");
+            }
+        }
+        // The terminal logits layer is host output, never a cache edge.
+        assert!(stats.traffic.layer(convs.len()).is_none());
+    });
+}
+
+#[test]
+fn prop_fused_and_roundtrip_ledgers_share_baselines() {
+    // Fusion changes how bits move, never how many elements exist: the
+    // dense round-trip and the fused run must agree on every edge's
+    // baseline, and on logits + counters bit for bit.
+    Checker::new("ledger_fused_vs_dense", 24).run(|rng| {
+        let (model, img) = random_conv_stack(rng);
+        let mk = |fuse| PacConfig {
+            first_layer_exact: false,
+            min_dp_len: 0,
+            par: Parallelism::off(),
+            fuse_dataplane: fuse,
+            ..PacConfig::default()
+        };
+        let (a, sa) = run(&model, mk(false), &img);
+        let (b, sb) = run(&model, mk(true), &img);
+        assert_eq!(a, b, "logits diverged");
+        assert_eq!(sa.macs, sb.macs);
+        assert_eq!(sa.digital_cycles, sb.digital_cycles);
+        assert_eq!(sa.pcu_ops, sb.pcu_ops);
+        assert_eq!(sa.traffic.encoded_layer_count(), 0);
+        assert_eq!(sa.traffic.total_baseline_bits(), sb.traffic.total_baseline_bits());
+        for (ea, eb) in sa.traffic.layers().iter().zip(sb.traffic.layers()) {
+            assert_eq!(ea.layer_id, eb.layer_id);
+            assert_eq!(ea.groups, eb.groups);
+            assert_eq!(ea.baseline_bits, eb.baseline_bits);
+        }
+    });
+}
+
+#[test]
+fn deep_resnet18_width_edges_land_in_the_papers_band() {
+    // End-to-end on a network with the CIFAR ResNet-18 channel ladder
+    // (64 → 128 → 256): the measured reduction on deep encoded edges
+    // must land in Fig. 7(b)'s 40–50% band, under the *default* engine
+    // configuration (first layer digital, PAC above DP 512, dataplane
+    // fused) — the same path `pacim accuracy` and serving run.
+    let mut rng = Rng::new(1818);
+    let model = tiny_resnet(&random_store(&mut rng, 64, 10), 16, 10).unwrap();
+    let img: Vec<u8> = (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect();
+
+    let engine = EngineBuilder::new(model.clone())
+        .pac(PacConfig {
+            par: Parallelism::off(),
+            ..PacConfig::default()
+        })
+        .build()
+        .unwrap();
+    let out = engine.session().infer(&img).unwrap();
+    let ledger = &out.stats.traffic;
+    let rows = engine.traffic_rows(ledger);
+    assert_eq!(rows.len(), 9, "9 conv edges (fc logits are host output)");
+
+    let find = |name: &str| {
+        rows.iter()
+            .find(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("no ledger row for {name}"))
+            .1
+    };
+    // The three in-block conv1→conv2 edges ride the encoded dataplane.
+    for (name, ch, band) in [
+        ("block1.conv1", 64u64, 0.38..0.45),
+        ("block2.conv1", 128, 0.40..0.48),
+        ("block3.conv1", 256, 0.43..0.50),
+    ] {
+        let e = find(name);
+        assert!(e.encoded, "{name} must be encoded");
+        assert_eq!(e.group_elems, ch);
+        assert_eq!(e.msb_bits, 4);
+        let r = e.reduction();
+        assert!(band.contains(&r), "{name}: reduction {r}");
+    }
+    // Edges into pools/skips stay dense — measured accounting is honest
+    // about what the software dataplane does not encode.
+    for name in ["stem", "down1", "down2", "block3.conv2"] {
+        let e = find(name);
+        assert!(!e.encoded, "{name} must be dense");
+        assert_eq!(e.reduction(), 0.0);
+    }
+    assert_eq!(ledger.encoded_layer_count(), 3);
+    assert!(ledger.reduction() > 0.0);
+
+    // The dense round-trip reproduces the fused run exactly.
+    let dense = EngineBuilder::new(model)
+        .pac(PacConfig {
+            par: Parallelism::off(),
+            fuse_dataplane: false,
+            ..PacConfig::default()
+        })
+        .build()
+        .unwrap();
+    let ref_out = dense.session().infer(&img).unwrap();
+    assert_eq!(ref_out.logits, out.logits);
+    assert_eq!(ref_out.stats.macs, out.stats.macs);
+    assert_eq!(ref_out.stats.digital_cycles, out.stats.digital_cycles);
+}
+
+#[test]
+fn hidden_linear_records_a_dense_edge_and_logits_record_none() {
+    // A hidden FC (out_params = Some) writes its activations back to
+    // cache as one layer-wise dense group; the terminal logits layer is
+    // delivered to the host and never appears in the ledger.
+    let hidden = LinearLayer {
+        name: "fc1".into(),
+        in_f: 4,
+        out_f: 6,
+        weight: Tensor::from_vec(&[6, 4], vec![1u8; 24]),
+        wparams: QuantParams::new(0.02, 128),
+        bias: vec![0.0; 6],
+        out_params: Some(QuantParams::new(0.05, 32)),
+        relu: true,
+    };
+    let logits = LinearLayer {
+        name: "fc2".into(),
+        in_f: 6,
+        out_f: 3,
+        weight: Tensor::from_vec(&[3, 6], vec![2u8; 18]),
+        wparams: QuantParams::new(0.02, 128),
+        bias: vec![0.0; 3],
+        out_params: None,
+        relu: false,
+    };
+    let model = Model {
+        name: "mini_mlp".into(),
+        ops: vec![Op::Linear(hidden), Op::Linear(logits)],
+        input_params: QuantParams::new(1.0, 0),
+        in_c: 1,
+        in_hw: 2,
+        num_classes: 3,
+    };
+    let engine = EngineBuilder::new(model).exact().build().unwrap();
+    let out = engine.session().infer(&[10, 20, 30, 40]).unwrap();
+    let t = &out.stats.traffic;
+    let e = t.layer(0).expect("hidden FC edge recorded");
+    assert!(!e.encoded);
+    assert_eq!((e.groups, e.group_elems, e.bits), (1, 6, 6 * 8));
+    assert!(t.layer(1).is_none(), "logits layer must not record traffic");
+    assert_eq!(t.layers().len(), 1);
+}
