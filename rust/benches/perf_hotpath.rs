@@ -19,9 +19,9 @@ use pacim::pac::{
     hybrid_mac, hybrid_mac_batch, par_hybrid_mac_batch, BitPlanes, ComputeMap, PcuRounding,
 };
 use pacim::tensor::{PackedPatches, Tensor};
-use pacim::util::benchfmt::{BlockedBench, FusedBench, HotpathReport, LayerBench};
+use pacim::util::benchfmt::{BlockedBench, FusedBench, HotpathReport, LayerBench, SimdBench};
 use pacim::util::rng::Rng;
-use pacim::util::Parallelism;
+use pacim::util::{KernelTier, Parallelism};
 use pacim::workload::{resnet18, Resolution};
 
 fn main() {
@@ -120,6 +120,9 @@ fn main() {
     // --- blocked vs per-patch layer GEMM (the headline single-thread row) ---
     let blocked_benches = blocked_section(quick, &mut rng, &mut checks);
 
+    // --- SIMD kernel tier vs forced scalar on the blocked GEMM ---
+    let simd_benches = simd_section(quick, &mut rng, &mut checks);
+
     // --- fused dataplane vs dense round-trip (multi-layer, end to end) ---
     let fused_benches = fused_section(quick, &mut checks);
 
@@ -127,13 +130,16 @@ fn main() {
     // (`pacim::util::benchfmt`); tests/bench_schema.rs re-parses the
     // emitted file and fails on any drift, and CI's bench-smoke job
     // additionally gates `speedup_blocked >= 1.0` on every shape
-    // (PACIM_ENFORCE_BLOCKED_SPEEDUP=1 → `benchfmt::enforce_blocked_floor`).
+    // (PACIM_ENFORCE_BLOCKED_SPEEDUP=1 → `benchfmt::enforce_blocked_floor`)
+    // and `speedup_simd >= 1.0` on every simd row
+    // (PACIM_ENFORCE_SIMD_SPEEDUP=1 → `benchfmt::enforce_simd_floor`).
     let report = HotpathReport {
         bench: "perf_hotpath".into(),
         threads,
         quick,
         layers: layer_benches,
         blocked: blocked_benches,
+        simd: simd_benches,
         fused: fused_benches,
     };
     match serde_json::to_string_pretty(&report)
@@ -332,6 +338,128 @@ fn blocked_section(quick: bool, rng: &mut Rng, checks: &mut Checks) -> Vec<Block
         });
     }
     rows
+}
+
+/// SIMD kernel tier vs forced scalar on the blocked layer GEMM
+/// (single-thread): the auto-detected tier (`PacConfig::kernel: None`,
+/// honoring `PACIM_FORCE_KERNEL`) against the same GEMM pinned to the
+/// scalar tier, same shape, same inputs, bit-identity asserted. Two
+/// weight fills per shape: dense random (the density auto-off keeps
+/// skipping disabled) and MSB-sparse in word-aligned stripes (the
+/// zero-word bitmaps actually skip). Rows go into `BENCH_hotpath.json`;
+/// CI gates `speedup_simd >= 1.0` per row on AVX2 runners
+/// (`PACIM_ENFORCE_SIMD_SPEEDUP=1`). The stem is deliberately absent:
+/// its DP length (27) packs into a single u64 word, so the vector path
+/// degenerates to the scalar tail and the ratio would be pure noise.
+fn simd_section(quick: bool, rng: &mut Rng, checks: &mut Checks) -> Vec<SimdBench> {
+    println!("\n  SIMD kernel tier vs forced scalar (single-thread blocked GEMM):");
+    let shapes = resnet18(Resolution::Cifar, 10);
+    let wanted = ["layer1.0.conv1", "layer3.0.conv2", "layer4.0.downsample"];
+    let pixel_cap = if quick { 48 } else { 192 };
+    let reps = if quick { 3 } else { 7 };
+    let mut rows = Vec::new();
+    for name in wanted {
+        let shape = shapes
+            .iter()
+            .find(|s| s.name == name)
+            .expect("ResNet-18 layer table changed");
+        let k = shape.dp_len();
+        let out_c = shape.geom.out_c;
+        let pixels = shape.out_pixels().min(pixel_cap);
+        for sparse in [false, true] {
+            let wq: Vec<u8> = if sparse {
+                msb_sparse_fill(rng, out_c, k, 0.6)
+            } else {
+                (0..out_c * k).map(|_| rng.below(256) as u8).collect()
+            };
+            let weight = Tensor::from_vec(&[out_c, k], wq);
+            let mk = |kernel| {
+                let mut b = pacim::nn::PacBackend::new(PacConfig {
+                    first_layer_exact: false,
+                    min_dp_len: 0,
+                    par: Parallelism::off(),
+                    kernel,
+                    ..PacConfig::default()
+                });
+                b.prepare(0, &weight, 128);
+                b
+            };
+            let scalar = mk(Some(KernelTier::Scalar));
+            let simd = mk(None);
+            let tier = simd.kernel_caps().tier();
+            let (live, total, skip_columns) = simd.weight_skip_profile(0);
+            let live_word_fraction =
+                if total == 0 { 1.0 } else { live as f64 / total as f64 };
+            let cols: Vec<u8> = (0..pixels * k).map(|_| rng.below(256) as u8).collect();
+            let time_gemm = |b: &pacim::nn::PacBackend| {
+                let mut planes = PackedPatches::default();
+                let mut out: Vec<i64> = Vec::new();
+                let (t, _) = timeit(reps, || {
+                    let mut stats = RunStats::default();
+                    b.gemm_layer(
+                        0,
+                        GemmInput::Dense(&cols),
+                        pixels,
+                        7,
+                        &Parallelism::off(),
+                        &mut planes,
+                        &mut out,
+                        &mut stats,
+                    );
+                });
+                (t, out)
+            };
+            let (t_sc, out_sc) = time_gemm(&scalar);
+            let (t_si, out_si) = time_gemm(&simd);
+            let identical = out_sc == out_si;
+            let macs = (pixels * out_c * k) as f64;
+            let speedup = t_sc / t_si;
+            let fill = if sparse { "msbsparse" } else { "dense" };
+            println!(
+                "    {name:<20} {fill:<9} DP={k:<5} [{:<6}]: scalar {:>9} simd {:>9} \
+                 speedup {speedup:.2}x (live {live_word_fraction:.2}, skip {skip_columns} col)",
+                tier.name(),
+                rate(macs, t_sc, "MAC"),
+                rate(macs, t_si, "MAC"),
+            );
+            checks.claim(
+                identical,
+                &format!("{name}-{fill}: {} kernel bit-identical to scalar", tier.name()),
+            );
+            rows.push(SimdBench {
+                shape: format!("{name}-{fill}"),
+                dp_len: k,
+                out_c,
+                pixels,
+                tier: tier.name().into(),
+                msb_sparse_weights: sparse,
+                live_word_fraction,
+                skip_columns,
+                scalar_macs_per_s: macs / t_sc,
+                simd_macs_per_s: macs / t_si,
+                speedup_simd: speedup,
+                bit_identical: identical,
+            });
+        }
+    }
+    rows
+}
+
+/// Word-aligned MSB-sparse weight fill: each 64-element block of a row
+/// is either all-low (values < 16, so all four MSB planes of that word
+/// are zero) or free-range — the distribution the zero-word bitmaps
+/// were built for.
+fn msb_sparse_fill(rng: &mut Rng, n_oc: usize, k: usize, p_low: f64) -> Vec<u8> {
+    let mut wq = Vec::with_capacity(n_oc * k);
+    for _ in 0..n_oc {
+        for blk in 0..k.div_ceil(64) {
+            let low = rng.bernoulli(p_low);
+            for _ in blk * 64..(blk * 64 + 64).min(k) {
+                wq.push(if low { rng.below(16) as u8 } else { rng.below(256) as u8 });
+            }
+        }
+    }
+    wq
 }
 
 /// Fused dataplane vs dense round-trip: the same multi-layer PAC

@@ -1,3 +1,8 @@
+// The AVX-512 popcount tier uses `_mm512_popcnt_epi64` & friends, which
+// are unstable on the pinned toolchain; the nightly-only `avx512` cargo
+// feature opts into them (see nn::simd and Cargo.toml).
+#![cfg_attr(feature = "avx512", feature(stdarch_x86_avx512))]
+
 //! # PACiM — sparsity-centric hybrid compute-in-memory, reproduced
 //!
 //! Production-quality reproduction of **"PACiM: A Sparsity-Centric Hybrid
@@ -18,6 +23,10 @@
 //! See `DESIGN.md` at the repository root for the full system inventory
 //! and the per-experiment index mapping every table/figure of the paper
 //! to a bench target; `README.md` covers build/test/bench usage.
+//!
+//! Popcount inner loops are tiered (scalar / AVX2 / nightly-only
+//! AVX-512 via the `avx512` feature) and runtime-dispatched through
+//! [`util::KernelCaps`]; see [`nn::simd`] and DESIGN.md §13.
 //!
 //! The front door for running inference is [`engine`]: an
 //! [`engine::EngineBuilder`] → [`engine::Engine`] → [`engine::Session`]

@@ -5,6 +5,8 @@
 //! - [`weights`] — the `weights.bin` artifact format
 //! - [`exec`] — the shared interpreter + exact integer backend
 //! - [`pac_exec`] — the PAC hybrid backend (the paper's approximation)
+//! - [`simd`] — the tiered popcount sweeps (scalar/AVX2/AVX-512) the
+//!   PAC backend's blocked GEMM dispatches into
 //!
 //! Accuracy experiments (Fig. 6, Table 2) run the same trained model
 //! through both backends and diff the top-1 accuracy.
@@ -18,6 +20,7 @@ pub mod exec;
 pub mod layers;
 pub mod pac_exec;
 pub mod profiler;
+pub mod simd;
 pub mod weights;
 
 pub use exec::{

@@ -21,12 +21,18 @@
 //!   as [`PacBackend::gemm_per_patch_reference`], the baseline the bench
 //!   harness and the property tests hold the blocked kernel against;
 //! - a digital cycle is a word-AND + popcount — the software analogue of
-//!   the 256-input adder tree;
+//!   the 256-input adder tree. The word sweep is tiered
+//!   (scalar/AVX2/AVX-512, [`super::simd`]) behind a clamped
+//!   [`KernelCaps`], and the 4×4 kernels skip weight-plane zero words
+//!   via per-column bitmaps built at prepare time (DESIGN.md §13) —
+//!   both numerically inert: logits and modeled cycle statistics are
+//!   bit-identical across tiers and with skipping on or off;
 //! - the activation element sum for the zero-point correction is
 //!   reconstructed from the sparsity counts (`Σ_p 2^p·Sx[p]`), never from
 //!   the discarded LSB bits — faithfully mirroring the architecture.
 
 use super::exec::{exact_gemm_tiled, GemmInput, MacBackend, RunStats, TILE_PIXELS};
+use super::simd;
 use crate::arch::bank_logic::{classify, spec_normalized, ThresholdSet};
 use crate::pac::compute_map::DynamicLevel;
 use crate::pac::mac::sparsity_domain_sum_fast;
@@ -35,7 +41,18 @@ use crate::pac::{zero_point_correct, ComputeMap, PcuRounding};
 use crate::tensor::{PackedPatches, Tensor};
 use crate::util::and_popcount;
 use crate::util::fastdiv::FastDiv;
-use crate::util::Parallelism;
+use crate::util::{KernelCaps, KernelTier, Parallelism};
+
+/// Columns whose live MSB-word fraction exceeds this threshold run the
+/// dense linear sweep: near-dense bitmaps skip almost nothing, and the
+/// per-word (scalar) or per-block (vector) bitmap test plus the broken
+/// streaming pattern then cost more than they save — Snippet-3-style
+/// density auto-off, decided once per column at prepare time.
+pub const SKIP_DENSITY_AUTO_OFF: f64 = 0.75;
+
+/// Below this many plane words a column's sweep is too short for the
+/// bitmap iteration to pay for itself; skipping stays off.
+pub const SKIP_MIN_WORDS: usize = 4;
 
 /// Configuration of the PAC backend.
 #[derive(Debug, Clone)]
@@ -73,6 +90,24 @@ pub struct PacConfig {
     /// either way; only the measured traffic ledger (and speed) change.
     /// Disable to force the dense-u8 round-trip on every edge.
     pub fuse_dataplane: bool,
+    /// Popcount kernel tier for the digital sweeps: `None` (default)
+    /// auto-detects the best supported tier, honoring the
+    /// `PACIM_FORCE_KERNEL` env override; `Some(t)` requests tier `t`,
+    /// clamped to what the host CPU supports (`util::kernel`).
+    /// Numerically inert — every tier computes identical integers, so
+    /// logits, cycle statistics, and traffic are bit-identical across
+    /// tiers; only host speed changes.
+    pub kernel: Option<KernelTier>,
+    /// Skip weight-plane zero words in the digital sweeps: at prepare
+    /// time each output column gets a bitmap of words that are nonzero
+    /// in at least one MSB weight plane, and the sweeps visit only
+    /// those (`x & 0 = 0` contributes nothing, so the skip is exact).
+    /// Columns denser than [`SKIP_DENSITY_AUTO_OFF`] (or shorter than
+    /// [`SKIP_MIN_WORDS`] words) auto-disable it. Numerically inert,
+    /// like `kernel` — *modeled* cycle statistics are unchanged (the
+    /// simulated bank still runs every digital cycle; skipping is a
+    /// host-side shortcut past provably-zero popcounts).
+    pub weight_skip: bool,
 }
 
 impl Default for PacConfig {
@@ -85,6 +120,8 @@ impl Default for PacConfig {
             min_dp_len: 512,
             par: Parallelism::auto(),
             fuse_dataplane: true,
+            kernel: None,
+            weight_skip: true,
         }
     }
 }
@@ -121,11 +158,43 @@ struct PreparedLayer {
     div: FastDiv,
     /// Exact fallback weights when this layer runs digitally.
     exact: Option<(Tensor<u8>, i32)>,
+    /// Per-column live-word bitmaps over the MSB weight planes, laid
+    /// out `[oc][skip_words]`: bit `i` of column `oc`'s bitmap is set
+    /// iff plane word `i` is nonzero in ≥ 1 of the column's four MSB
+    /// planes (`q ∈ 4..8`). Consulted by the skipping sweeps
+    /// (`nn::simd`); see DESIGN.md §13.3 for the worked layout.
+    skip: Vec<u64>,
+    /// Bitmap words per column: `words.div_ceil(64)`.
+    skip_words: usize,
+    /// Per-column skip decision, resolved once at prepare time:
+    /// `weight_skip` config AND `words >= SKIP_MIN_WORDS` AND live
+    /// fraction ≤ [`SKIP_DENSITY_AUTO_OFF`].
+    skip_on: Vec<bool>,
+    /// Per-column live MSB-word counts (the density numerator; kept
+    /// for the bench profile and the auto-off decision).
+    live_words: Vec<u32>,
+}
+
+impl PreparedLayer {
+    /// The skip bitmap for column `oc`, or `None` when the density
+    /// auto-off (or the config) disabled skipping for it.
+    #[inline]
+    fn skip_for(&self, oc: usize) -> Option<&[u64]> {
+        if self.skip_on[oc] {
+            Some(&self.skip[oc * self.skip_words..(oc + 1) * self.skip_words])
+        } else {
+            None
+        }
+    }
 }
 
 /// PAC backend implementing [`MacBackend`].
 pub struct PacBackend {
     pub config: PacConfig,
+    /// Kernel tier resolved once at construction: the config request
+    /// clamped to the host (see `util::kernel`). Threaded into every
+    /// tile kernel.
+    caps: KernelCaps,
     layers: Vec<PreparedLayer>,
     /// Pre-expanded digital (p,q) sets per dynamic level, and the base map.
     level_maps: [ComputeMap; 4],
@@ -149,11 +218,32 @@ impl PacBackend {
             level_maps[3].digital_set(),
         ];
         Self {
+            caps: KernelCaps::select(config.kernel),
             config,
             layers: Vec::new(),
             level_maps,
             level_sets,
         }
+    }
+
+    /// The kernel capabilities this backend resolved at construction
+    /// (config request → env override → CPUID probe, clamped to the
+    /// host; see `util::kernel`).
+    pub fn kernel_caps(&self) -> KernelCaps {
+        self.caps
+    }
+
+    /// Weight-sparsity profile of a prepared layer, for bench
+    /// reporting: `(live_msb_words, total_msb_words, skip_columns)` —
+    /// live words counted per column over the union of the four MSB
+    /// weight planes (exactly the bitmap the skipping sweeps consult),
+    /// and the number of columns whose sweep actually skips.
+    pub fn weight_skip_profile(&self, layer_id: usize) -> (u64, u64, usize) {
+        let layer = &self.layers[layer_id];
+        let live: u64 = layer.live_words.iter().map(|&v| v as u64).sum();
+        let total = (layer.sw.len() * layer.words) as u64;
+        let active = layer.skip_on.iter().filter(|&&b| b).count();
+        (live, total, active)
     }
 
     fn level_index(level: DynamicLevel) -> usize {
@@ -169,12 +259,14 @@ impl PacBackend {
         &self.level_maps[Self::level_index(level)]
     }
 
-    /// The pre-blocked per-patch engine, kept **verbatim** as the
-    /// baseline: one `BitPlanes::from_u8` + one accumulator `Vec` per
-    /// patch, columns fanned out per `config.par`. `benches/perf_hotpath`
+    /// The pre-blocked per-patch engine, kept as the frozen baseline:
+    /// one `BitPlanes::from_u8` + one accumulator `Vec` per patch,
+    /// columns fanned out per `config.par`, and the word sweep pinned
+    /// to the **scalar** tier with no weight-skipping (via the single
+    /// shared [`simd::sweep4_scalar`] helper). `benches/perf_hotpath`
     /// benchmarks the blocked GEMM against this and CI gates the ratio;
     /// `tests/proptests.rs` asserts end-to-end bit-identity between the
-    /// two engines.
+    /// two engines and across kernel tiers.
     pub fn gemm_per_patch_reference(
         &self,
         layer_id: usize,
@@ -230,24 +322,13 @@ impl PacBackend {
             let ocbase = oc * 8 * words;
             let mut raw = 0i64;
             if is_static_4x4 {
+                // The single shared scalar word sweep (`nn::simd`) —
+                // the reference is pinned to the scalar tier, no
+                // skipping, so it stays the frozen bit-identity
+                // baseline for every vector/skipping variant.
+                let wmsb = &layer.planes[ocbase + 4 * words..ocbase + 8 * words];
                 for p in 4..8 {
-                    let xpl = &xp.planes[p];
-                    let w4 = &layer.planes[ocbase + 4 * words..ocbase + 5 * words];
-                    let w5 = &layer.planes[ocbase + 5 * words..ocbase + 6 * words];
-                    let w6 = &layer.planes[ocbase + 6 * words..ocbase + 7 * words];
-                    let w7 = &layer.planes[ocbase + 7 * words..ocbase + 8 * words];
-                    let (mut c4, mut c5, mut c6, mut c7) = (0u32, 0u32, 0u32, 0u32);
-                    for i in 0..words {
-                        let xw = xpl[i];
-                        c4 += (xw & w4[i]).count_ones();
-                        c5 += (xw & w5[i]).count_ones();
-                        c6 += (xw & w6[i]).count_ones();
-                        c7 += (xw & w7[i]).count_ones();
-                    }
-                    raw += (c4 as i64) << (p + 4);
-                    raw += (c5 as i64) << (p + 5);
-                    raw += (c6 as i64) << (p + 6);
-                    raw += (c7 as i64) << (p + 7);
+                    raw += simd::fold4(simd::sweep4_scalar(&xp.planes[p], wmsb), p);
                 }
             } else {
                 for &(p, q) in &digital_set {
@@ -307,16 +388,21 @@ impl PacBackend {
             if words > 0 {
                 let xp = &xplanes[pix * pstride..(pix + 1) * pstride];
                 if level == DynamicLevel::Cycles16 {
+                    // The 16-cycle level *is* the static 4×4 block:
+                    // tier-dispatched sweep, weight-skipping valid
+                    // (only MSB planes are read).
                     for (oc, slot) in row.iter_mut().enumerate() {
                         let wp = &layer.planes[oc * pstride..(oc + 1) * pstride];
-                        *slot = pixel_digital_4x4(xp, wp, words);
+                        *slot =
+                            pixel_digital_4x4(self.caps, xp, wp, words, layer.skip_for(oc));
                     }
                 } else {
                     for (oc, slot) in row.iter_mut().enumerate() {
                         let wp = &layer.planes[oc * pstride..(oc + 1) * pstride];
                         let mut raw = 0i64;
                         for &(p, q) in set {
-                            let dp = and_popcount(
+                            let dp = simd::and_popcount(
+                                self.caps,
                                 &xp[p * words..(p + 1) * words],
                                 &wp[q * words..(q + 1) * words],
                             );
@@ -346,28 +432,20 @@ impl PacBackend {
 }
 
 /// Fused single-pixel static-4×4 digital kernel: the four weight MSB
-/// planes reduced in one pass per activation MSB plane (the activation
-/// word is loaded once per four AND-popcounts).
-fn pixel_digital_4x4(xp: &[u64], wp: &[u64], words: usize) -> i64 {
-    let w4 = &wp[4 * words..5 * words];
-    let w5 = &wp[5 * words..6 * words];
-    let w6 = &wp[6 * words..7 * words];
-    let w7 = &wp[7 * words..8 * words];
+/// planes reduced in one pass per activation MSB plane, through the
+/// tier-dispatched sweep ([`simd::sweep4`]) with optional weight
+/// zero-word skipping.
+fn pixel_digital_4x4(
+    caps: KernelCaps,
+    xp: &[u64],
+    wp: &[u64],
+    words: usize,
+    skip: Option<&[u64]>,
+) -> i64 {
+    let wmsb = &wp[4 * words..8 * words];
     let mut raw = 0i64;
     for p in 4..8 {
-        let x0 = &xp[p * words..(p + 1) * words];
-        let (mut c4, mut c5, mut c6, mut c7) = (0u32, 0u32, 0u32, 0u32);
-        for i in 0..words {
-            let xv = x0[i];
-            c4 += (xv & w4[i]).count_ones();
-            c5 += (xv & w5[i]).count_ones();
-            c6 += (xv & w6[i]).count_ones();
-            c7 += (xv & w7[i]).count_ones();
-        }
-        raw += ((c4 as i64) << (p + 4))
-            + ((c5 as i64) << (p + 5))
-            + ((c6 as i64) << (p + 6))
-            + ((c7 as i64) << (p + 7));
+        raw += simd::fold4(simd::sweep4(caps, &xp[p * words..(p + 1) * words], wmsb, skip), p);
     }
     raw
 }
@@ -375,9 +453,12 @@ fn pixel_digital_4x4(xp: &[u64], wp: &[u64], words: usize) -> i64 {
 /// Static-4×4 digital kernel over one tile: weight-column outer loop
 /// (each weight row streams through the tile exactly once, the tile's
 /// activation planes stay L1-hot), pixel-**pair** inner loop (each
-/// weight-word load feeds two pixels' popcount lanes — the register
-/// tiling that generalizes the old single-pixel fused kernel).
+/// weight-word load feeds two pixels' popcount lanes). The word sweep
+/// itself is the tier-dispatched [`simd::sweep4_pair`], with the
+/// column's zero-word bitmap threaded in when its density cleared the
+/// auto-off rule at prepare time.
 fn tile_digital_4x4(
+    caps: KernelCaps,
     layer: &PreparedLayer,
     x: &PackedPatches,
     p0: usize,
@@ -393,41 +474,23 @@ fn tile_digital_4x4(
     let xplanes = x.planes();
     for oc in 0..n {
         let wp = &layer.planes[oc * pstride..(oc + 1) * pstride];
-        let w4 = &wp[4 * words..5 * words];
-        let w5 = &wp[5 * words..6 * words];
-        let w6 = &wp[6 * words..7 * words];
-        let w7 = &wp[7 * words..8 * words];
+        let wmsb = &wp[4 * words..8 * words];
+        let skip = layer.skip_for(oc);
         let mut j = 0;
         while j + 2 <= pt {
             let xa = &xplanes[(p0 + j) * pstride..(p0 + j + 1) * pstride];
             let xb = &xplanes[(p0 + j + 1) * pstride..(p0 + j + 2) * pstride];
             let (mut ra, mut rb) = (0i64, 0i64);
             for p in 4..8 {
-                let x0 = &xa[p * words..(p + 1) * words];
-                let x1 = &xb[p * words..(p + 1) * words];
-                let (mut a4, mut a5, mut a6, mut a7) = (0u32, 0u32, 0u32, 0u32);
-                let (mut b4, mut b5, mut b6, mut b7) = (0u32, 0u32, 0u32, 0u32);
-                for i in 0..words {
-                    let (wv4, wv5, wv6, wv7) = (w4[i], w5[i], w6[i], w7[i]);
-                    let xv0 = x0[i];
-                    let xv1 = x1[i];
-                    a4 += (xv0 & wv4).count_ones();
-                    b4 += (xv1 & wv4).count_ones();
-                    a5 += (xv0 & wv5).count_ones();
-                    b5 += (xv1 & wv5).count_ones();
-                    a6 += (xv0 & wv6).count_ones();
-                    b6 += (xv1 & wv6).count_ones();
-                    a7 += (xv0 & wv7).count_ones();
-                    b7 += (xv1 & wv7).count_ones();
-                }
-                ra += ((a4 as i64) << (p + 4))
-                    + ((a5 as i64) << (p + 5))
-                    + ((a6 as i64) << (p + 6))
-                    + ((a7 as i64) << (p + 7));
-                rb += ((b4 as i64) << (p + 4))
-                    + ((b5 as i64) << (p + 5))
-                    + ((b6 as i64) << (p + 6))
-                    + ((b7 as i64) << (p + 7));
+                let [ca, cb] = simd::sweep4_pair(
+                    caps,
+                    &xa[p * words..(p + 1) * words],
+                    &xb[p * words..(p + 1) * words],
+                    wmsb,
+                    skip,
+                );
+                ra += simd::fold4(ca, p);
+                rb += simd::fold4(cb, p);
             }
             chunk[j * n + oc] = ra;
             chunk[(j + 1) * n + oc] = rb;
@@ -435,14 +498,18 @@ fn tile_digital_4x4(
         }
         if j < pt {
             let xp = &xplanes[(p0 + j) * pstride..(p0 + j + 1) * pstride];
-            chunk[j * n + oc] = pixel_digital_4x4(xp, wp, words);
+            chunk[j * n + oc] = pixel_digital_4x4(caps, xp, wp, words, skip);
         }
     }
 }
 
 /// Generic digital kernel over one tile for an arbitrary (static)
 /// digital set — same weight-outer / pixel-inner geometry, no pairing.
+/// Tier-dispatched per plane pair; no weight-skipping (the bitmap only
+/// covers the MSB planes the 4×4 kernels read, and non-4×4 maps are
+/// off the hot path).
 fn tile_digital_generic(
+    caps: KernelCaps,
     layer: &PreparedLayer,
     x: &PackedPatches,
     set: &[(usize, usize)],
@@ -463,7 +530,8 @@ fn tile_digital_generic(
             let xp = &xplanes[(p0 + j) * pstride..(p0 + j + 1) * pstride];
             let mut raw = 0i64;
             for &(p, q) in set {
-                let dp = and_popcount(
+                let dp = simd::and_popcount(
+                    caps,
                     &xp[p * words..(p + 1) * words],
                     &wp[q * words..(q + 1) * words],
                 );
@@ -533,6 +601,10 @@ impl MacBackend for PacBackend {
         let mut planes = vec![0u64; n * 8 * words];
         let mut sw = Vec::with_capacity(n);
         let mut w_sums = Vec::with_capacity(n);
+        let skip_words = crate::util::words_for(words);
+        let mut skip = vec![0u64; n * skip_words];
+        let mut skip_on = Vec::with_capacity(n);
+        let mut live_words = Vec::with_capacity(n);
         for oc in 0..n {
             let row = &wd[oc * k..(oc + 1) * k];
             let bp = BitPlanes::from_u8(row);
@@ -542,6 +614,22 @@ impl MacBackend for PacBackend {
                 let off = (oc * 8 + q) * words;
                 planes[off..off + words].copy_from_slice(&bp.planes[q]);
             }
+            // Live-word bitmap over the MSB planes + the per-column
+            // density auto-off decision (DESIGN.md §13.3).
+            let mut live = 0u32;
+            for i in 0..words {
+                if (4..8).any(|q| planes[(oc * 8 + q) * words + i] != 0) {
+                    skip[oc * skip_words + i / 64] |= 1 << (i % 64);
+                    live += 1;
+                }
+            }
+            live_words.push(live);
+            let density = if words == 0 { 1.0 } else { live as f64 / words as f64 };
+            skip_on.push(
+                self.config.weight_skip
+                    && words >= SKIP_MIN_WORDS
+                    && density <= SKIP_DENSITY_AUTO_OFF,
+            );
         }
         let exact = if (self.config.first_layer_exact && layer_id == 0)
             || k < self.config.min_dp_len
@@ -559,6 +647,10 @@ impl MacBackend for PacBackend {
             k,
             div: FastDiv::for_dp_len(k as u64),
             exact,
+            skip,
+            skip_words,
+            skip_on,
+            live_words,
         });
     }
 
@@ -632,9 +724,9 @@ impl MacBackend for PacBackend {
             match &self.config.thresholds {
                 None => {
                     if is4x4 {
-                        tile_digital_4x4(layer, x, p0, pt, chunk);
+                        tile_digital_4x4(self.caps, layer, x, p0, pt, chunk);
                     } else {
-                        tile_digital_generic(layer, x, &digital_set, p0, pt, chunk);
+                        tile_digital_generic(self.caps, layer, x, &digital_set, p0, pt, chunk);
                     }
                     tile_epilogue(
                         layer,
@@ -884,6 +976,127 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Weight matrix whose MSB planes die in word-aligned stripes:
+    /// each 64-element block of a row is either "low" (all values
+    /// < 16, so all four MSB plane words are zero) or free-range —
+    /// the shape that makes the zero-word bitmaps actually skip.
+    fn msb_sparse_weight(rng: &mut Rng, n_oc: usize, k: usize, p_low: f64) -> Tensor<u8> {
+        let mut wq = Vec::with_capacity(n_oc * k);
+        for _ in 0..n_oc {
+            for blk in 0..k.div_ceil(64) {
+                let low = rng.bernoulli(p_low);
+                for _ in blk * 64..(blk * 64 + 64).min(k) {
+                    wq.push(if low { rng.below(16) as u8 } else { rng.below(256) as u8 });
+                }
+            }
+        }
+        Tensor::from_vec(&[n_oc, k], wq)
+    }
+
+    #[test]
+    fn kernel_tiers_and_weight_skip_bit_identical() {
+        // Every kernel tier the host can run × weight-skipping on/off
+        // must reproduce the forced-scalar no-skip outputs and cycle
+        // statistics exactly, on both the static and dynamic paths.
+        let mut rng = Rng::new(330);
+        let (n_oc, k) = (9usize, 600usize);
+        let weight = msb_sparse_weight(&mut rng, n_oc, k, 0.7);
+        let pixels = 37;
+        let cols: Vec<u8> = (0..pixels * k).map(|_| rng.below(256) as u8).collect();
+        for thresholds in [None, Some(ThresholdSet::new(0.10, 0.20, 0.35))] {
+            let run = |kernel: Option<KernelTier>, weight_skip: bool| {
+                let mut b = PacBackend::new(PacConfig {
+                    thresholds,
+                    first_layer_exact: false,
+                    min_dp_len: 0,
+                    par: Parallelism::off(),
+                    kernel,
+                    weight_skip,
+                    ..PacConfig::default()
+                });
+                b.prepare(0, &weight, 128);
+                if weight_skip {
+                    let (live, total, active) = b.weight_skip_profile(0);
+                    assert!(active > 0, "crafted layer must skip ({live}/{total} live)");
+                    assert!(live < total);
+                }
+                let mut stats = RunStats::default();
+                let mut planes = PackedPatches::default();
+                let mut out = Vec::new();
+                b.gemm_layer(
+                    0,
+                    GemmInput::Dense(&cols),
+                    pixels,
+                    7,
+                    &Parallelism::off(),
+                    &mut planes,
+                    &mut out,
+                    &mut stats,
+                );
+                (out, stats)
+            };
+            let (base_out, base) = run(Some(KernelTier::Scalar), false);
+            for kernel in [
+                Some(KernelTier::Scalar),
+                Some(KernelTier::Avx2),
+                Some(KernelTier::Avx512),
+                None,
+            ] {
+                for skip in [false, true] {
+                    let (out, stats) = run(kernel, skip);
+                    assert_eq!(out, base_out, "kernel {kernel:?} skip {skip}");
+                    assert_eq!(stats.digital_cycles, base.digital_cycles);
+                    assert_eq!(stats.pcu_ops, base.pcu_ops);
+                    assert_eq!(stats.levels, base.levels);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_or_short_weights_disable_skip_via_auto_off() {
+        // Random-dense weights: every MSB-union word is live, so the
+        // density rule must turn skipping off for every column.
+        let mut rng = Rng::new(331);
+        let (n_oc, k) = (5usize, 600usize);
+        let wq: Vec<u8> = (0..n_oc * k).map(|_| rng.below(256) as u8).collect();
+        let mut b = PacBackend::new(PacConfig {
+            first_layer_exact: false,
+            min_dp_len: 0,
+            ..PacConfig::default()
+        });
+        b.prepare(0, &Tensor::from_vec(&[n_oc, k], wq), 128);
+        let (live, total, active) = b.weight_skip_profile(0);
+        assert_eq!(active, 0, "random-dense weights must auto-off ({live}/{total})");
+        assert_eq!(live, total);
+        // Short layers (words < SKIP_MIN_WORDS) never skip, however
+        // sparse: k = 150 → 3 words.
+        let sparse_short = msb_sparse_weight(&mut rng, 4, 150, 0.9);
+        b.prepare(1, &sparse_short, 128);
+        assert_eq!(b.weight_skip_profile(1).2, 0);
+        // And the config master switch wins over sparsity.
+        let mut off = PacBackend::new(PacConfig {
+            first_layer_exact: false,
+            min_dp_len: 0,
+            weight_skip: false,
+            ..PacConfig::default()
+        });
+        off.prepare(0, &msb_sparse_weight(&mut rng, 4, 600, 0.8), 128);
+        assert_eq!(off.weight_skip_profile(0).2, 0);
+    }
+
+    #[test]
+    fn kernel_caps_resolved_and_clamped_at_construction() {
+        let b = PacBackend::new(PacConfig {
+            kernel: Some(KernelTier::Scalar),
+            ..PacConfig::default()
+        });
+        assert_eq!(b.kernel_caps().tier(), KernelTier::Scalar);
+        assert!(b.kernel_caps().forced());
+        let auto = PacBackend::new(PacConfig::default());
+        assert!(auto.kernel_caps().tier() <= auto.kernel_caps().supported());
     }
 
     #[test]

@@ -1,0 +1,618 @@
+//! SIMD-native popcount sweeps for the blocked bit-plane GEMM.
+//!
+//! A PACiM digital cycle is `popcount(x_plane & w_plane)` over the DP
+//! vector's packed `u64` words. The static-4×4 tile kernels in
+//! [`super::pac_exec`] spend essentially all of their time in that word
+//! sweep, always over the **four weight MSB planes** (`q ∈ 4..8`) of one
+//! output column, which the prepared layout stores contiguously. This
+//! module owns that sweep in three bit-identical tiers, dispatched by a
+//! clamped [`KernelCaps`] (see `util::kernel` and DESIGN.md §13):
+//!
+//! - [`sweep4_scalar`] — the portable reference: one pass over the
+//!   words, four `u64::count_ones` per word. This is the *single* scalar
+//!   word sweep in the crate; the per-patch reference kernel and the
+//!   blocked tile kernels both call it.
+//! - AVX2 — 4-word (256-bit) blocks, popcount via the classic 4-bit
+//!   nibble lookup (`_mm256_shuffle_epi8`) reduced with
+//!   `_mm256_sad_epu8` into per-lane `u64` accumulators.
+//! - AVX-512 (nightly-only `avx512` cargo feature) — 8-word blocks
+//!   using the native `VPOPCNTQ` (`_mm512_popcnt_epi64`).
+//!
+//! **Weight-plane zero-skipping.** Each sweep optionally takes a
+//! per-column *live-word bitmap* (`skip`): bit `i` set means word `i`
+//! is nonzero in at least one of the column's four MSB weight planes.
+//! Words whose bit is clear contribute `x & 0 = 0` to every counter, so
+//! skipping them is exact, not approximate. The scalar tier iterates
+//! set bits (`trailing_zeros`); the vector tiers test whole blocks (a
+//! nibble/byte of the bitmap) and skip only fully-dead blocks. Columns
+//! too dense to profit opt out at prepare time (the density auto-off
+//! rule in `pac_exec`), in which case `skip` is `None` here.
+//!
+//! Every function in this module returns identical integers across
+//! tiers and across `skip` on/off; the property tests in
+//! `tests/proptests.rs` and the unit tests below pin that.
+
+use crate::util::{KernelCaps, KernelTier};
+
+/// Fold a 4-counter sweep result into the raw accumulator for
+/// activation plane `p`: counter `c[j]` (weight plane `q = 4 + j`)
+/// contributes `c[j] << (p + 4 + j)` — the bit-serial shift-add of
+/// Eq. 1 restricted to the 4×4 MSB block.
+#[inline]
+pub fn fold4(c: [u32; 4], p: usize) -> i64 {
+    ((c[0] as i64) << (p + 4))
+        + ((c[1] as i64) << (p + 5))
+        + ((c[2] as i64) << (p + 6))
+        + ((c[3] as i64) << (p + 7))
+}
+
+/// AND-popcount of one activation plane `x` against a column's four
+/// contiguous MSB weight planes `wmsb` (`wmsb.len() == 4 * x.len()`,
+/// planes `q = 4..8` back to back), dispatched by tier. Returns the
+/// four popcount counters `[c4, c5, c6, c7]`.
+///
+/// `skip`, when present, is the column's live-word bitmap
+/// (`skip.len() == x.len().div_ceil(64)`); dead words are skipped
+/// exactly (they contribute nothing to any counter).
+#[inline]
+pub fn sweep4(caps: KernelCaps, x: &[u64], wmsb: &[u64], skip: Option<&[u64]>) -> [u32; 4] {
+    debug_assert_eq!(wmsb.len(), 4 * x.len());
+    match caps.tier() {
+        KernelTier::Scalar => match skip {
+            Some(s) => sweep4_scalar_skip(x, wmsb, s),
+            None => sweep4_scalar(x, wmsb),
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `caps.tier()` can only report Avx2 when the CPUID
+        // probe confirmed AVX2 (KernelCaps clamps every request; its
+        // fields are private, so no unclamped value exists).
+        KernelTier::Avx2 => unsafe { avx2::sweep4(x, wmsb, skip) },
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        // SAFETY: as above — Avx512 is only reachable when the probe
+        // confirmed AVX-512F + VPOPCNTDQ (and the feature compiled it).
+        KernelTier::Avx512 => unsafe { avx512::sweep4(x, wmsb, skip) },
+        // Unreachable in practice (KernelCaps never resolves a tier the
+        // build can't run); keep a portable fallback rather than a panic.
+        #[allow(unreachable_patterns)]
+        _ => match skip {
+            Some(s) => sweep4_scalar_skip(x, wmsb, s),
+            None => sweep4_scalar(x, wmsb),
+        },
+    }
+}
+
+/// Two-pixel variant of [`sweep4`]: sweep activation planes `x0` and
+/// `x1` against the same four MSB weight planes in one pass, so each
+/// weight-word load feeds both pixels' popcount lanes (the register
+/// tiling of the blocked kernel's pixel-pair inner loop).
+#[inline]
+pub fn sweep4_pair(
+    caps: KernelCaps,
+    x0: &[u64],
+    x1: &[u64],
+    wmsb: &[u64],
+    skip: Option<&[u64]>,
+) -> [[u32; 4]; 2] {
+    debug_assert_eq!(x0.len(), x1.len());
+    debug_assert_eq!(wmsb.len(), 4 * x0.len());
+    match caps.tier() {
+        KernelTier::Scalar => match skip {
+            Some(s) => sweep4_pair_scalar_skip(x0, x1, wmsb, s),
+            None => sweep4_pair_scalar(x0, x1, wmsb),
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 tier implies the CPUID probe confirmed AVX2.
+        KernelTier::Avx2 => unsafe { avx2::sweep4_pair(x0, x1, wmsb, skip) },
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        // SAFETY: Avx512 tier implies AVX-512F + VPOPCNTDQ confirmed.
+        KernelTier::Avx512 => unsafe { avx512::sweep4_pair(x0, x1, wmsb, skip) },
+        #[allow(unreachable_patterns)]
+        _ => match skip {
+            Some(s) => sweep4_pair_scalar_skip(x0, x1, wmsb, s),
+            None => sweep4_pair_scalar(x0, x1, wmsb),
+        },
+    }
+}
+
+/// Tier-dispatched AND-popcount of two equal-length packed planes —
+/// the generic-set kernels' single-plane cycle (`util::and_popcount`
+/// is the frozen scalar reference it is tested against).
+#[inline]
+pub fn and_popcount(caps: KernelCaps, a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    match caps.tier() {
+        KernelTier::Scalar => crate::util::and_popcount(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 tier implies the CPUID probe confirmed AVX2.
+        KernelTier::Avx2 => unsafe { avx2::and_popcount(a, b) },
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        // SAFETY: Avx512 tier implies AVX-512F + VPOPCNTDQ confirmed.
+        KernelTier::Avx512 => unsafe { avx512::and_popcount(a, b) },
+        #[allow(unreachable_patterns)]
+        _ => crate::util::and_popcount(a, b),
+    }
+}
+
+/// The portable scalar word sweep — the one place the `c4..c7`
+/// unrolled loop lives (both the per-patch reference and the blocked
+/// kernels' scalar tier call this).
+#[inline]
+pub fn sweep4_scalar(x: &[u64], wmsb: &[u64]) -> [u32; 4] {
+    let words = x.len();
+    let (w4, rest) = wmsb.split_at(words);
+    let (w5, rest) = rest.split_at(words);
+    let (w6, w7) = rest.split_at(words);
+    let mut c = [0u32; 4];
+    for i in 0..words {
+        let xv = x[i];
+        c[0] += (xv & w4[i]).count_ones();
+        c[1] += (xv & w5[i]).count_ones();
+        c[2] += (xv & w6[i]).count_ones();
+        c[3] += (xv & w7[i]).count_ones();
+    }
+    c
+}
+
+/// Scalar sweep over only the live words named by the bitmap.
+fn sweep4_scalar_skip(x: &[u64], wmsb: &[u64], skip: &[u64]) -> [u32; 4] {
+    let words = x.len();
+    debug_assert_eq!(skip.len(), words.div_ceil(64));
+    let (w4, rest) = wmsb.split_at(words);
+    let (w5, rest) = rest.split_at(words);
+    let (w6, w7) = rest.split_at(words);
+    let mut c = [0u32; 4];
+    for (sw, &sbits) in skip.iter().enumerate() {
+        let mut bits = sbits;
+        while bits != 0 {
+            let i = sw * 64 + bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let xv = x[i];
+            c[0] += (xv & w4[i]).count_ones();
+            c[1] += (xv & w5[i]).count_ones();
+            c[2] += (xv & w6[i]).count_ones();
+            c[3] += (xv & w7[i]).count_ones();
+        }
+    }
+    c
+}
+
+/// Scalar pixel-pair sweep (shared weight-word loads).
+fn sweep4_pair_scalar(x0: &[u64], x1: &[u64], wmsb: &[u64]) -> [[u32; 4]; 2] {
+    let words = x0.len();
+    let (w4, rest) = wmsb.split_at(words);
+    let (w5, rest) = rest.split_at(words);
+    let (w6, w7) = rest.split_at(words);
+    let (mut a, mut b) = ([0u32; 4], [0u32; 4]);
+    for i in 0..words {
+        let (wv4, wv5, wv6, wv7) = (w4[i], w5[i], w6[i], w7[i]);
+        let xv0 = x0[i];
+        let xv1 = x1[i];
+        a[0] += (xv0 & wv4).count_ones();
+        b[0] += (xv1 & wv4).count_ones();
+        a[1] += (xv0 & wv5).count_ones();
+        b[1] += (xv1 & wv5).count_ones();
+        a[2] += (xv0 & wv6).count_ones();
+        b[2] += (xv1 & wv6).count_ones();
+        a[3] += (xv0 & wv7).count_ones();
+        b[3] += (xv1 & wv7).count_ones();
+    }
+    [a, b]
+}
+
+/// Scalar pixel-pair sweep over only the live words.
+fn sweep4_pair_scalar_skip(x0: &[u64], x1: &[u64], wmsb: &[u64], skip: &[u64]) -> [[u32; 4]; 2] {
+    let words = x0.len();
+    debug_assert_eq!(skip.len(), words.div_ceil(64));
+    let (w4, rest) = wmsb.split_at(words);
+    let (w5, rest) = rest.split_at(words);
+    let (w6, w7) = rest.split_at(words);
+    let (mut a, mut b) = ([0u32; 4], [0u32; 4]);
+    for (sw, &sbits) in skip.iter().enumerate() {
+        let mut bits = sbits;
+        while bits != 0 {
+            let i = sw * 64 + bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let (wv4, wv5, wv6, wv7) = (w4[i], w5[i], w6[i], w7[i]);
+            let xv0 = x0[i];
+            let xv1 = x1[i];
+            a[0] += (xv0 & wv4).count_ones();
+            b[0] += (xv1 & wv4).count_ones();
+            a[1] += (xv0 & wv5).count_ones();
+            b[1] += (xv1 & wv5).count_ones();
+            a[2] += (xv0 & wv6).count_ones();
+            b[2] += (xv1 & wv6).count_ones();
+            a[3] += (xv0 & wv7).count_ones();
+            b[3] += (xv1 & wv7).count_ones();
+        }
+    }
+    [a, b]
+}
+
+/// AVX2 tier: 256-bit AND + nibble-lookup popcount.
+///
+/// Safety conventions shared by every function in this module (the full
+/// argument is DESIGN.md §13.4):
+/// - **Feature gating**: every `fn` is `#[target_feature(enable =
+///   "avx2")]` and only reachable through a [`KernelCaps`] whose tier
+///   was clamped to the CPUID probe, so AVX2 instructions never execute
+///   on hardware without them.
+/// - **Alignment**: all vector memory access uses unaligned loads
+///   (`_mm256_loadu_si256`); slices come from `Vec<u64>` with 8-byte
+///   alignment and no further guarantee is needed.
+/// - **Bounds**: pointer arithmetic stays inside `blocks * 4 <=
+///   words == x.len()` and `q * words + words <= wmsb.len()`, both
+///   checked by the `debug_assert_eq!` in the public dispatchers and
+///   enforced structurally by the callers (prepared layouts).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Popcount each byte of `v` via the 4-bit nibble lookup, then
+    /// horizontally reduce bytes into the four 64-bit lanes
+    /// (`_mm256_sad_epu8` against zero). Lane sums fit trivially:
+    /// a lane's 8 bytes hold at most 8 × 8 = 64.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt256(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low_mask);
+        let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low_mask);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    /// Horizontal sum of the four u64 lanes of an accumulator.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256i) -> u64 {
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+        lanes[0] + lanes[1] + lanes[2] + lanes[3]
+    }
+
+    /// AVX2 [`super::sweep4`]: 4-word blocks; with a skip bitmap, a
+    /// block is processed only when its 4-bit nibble has a live bit
+    /// (block `b` covers words `4b..4b+4`, i.e. bitmap bits `4b..4b+4`,
+    /// which never straddle a bitmap word since `4b % 64 <= 60`).
+    /// The tail (`words % 4`) always runs scalar.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sweep4(x: &[u64], wmsb: &[u64], skip: Option<&[u64]>) -> [u32; 4] {
+        let words = x.len();
+        let blocks = words / 4;
+        let mut acc = [_mm256_setzero_si256(); 4];
+        for b in 0..blocks {
+            if let Some(s) = skip {
+                let bit = b * 4;
+                if (s[bit / 64] >> (bit % 64)) & 0xf == 0 {
+                    continue;
+                }
+            }
+            let xv = _mm256_loadu_si256(x.as_ptr().add(b * 4) as *const __m256i);
+            for (q, a) in acc.iter_mut().enumerate() {
+                let wv =
+                    _mm256_loadu_si256(wmsb.as_ptr().add(q * words + b * 4) as *const __m256i);
+                *a = _mm256_add_epi64(*a, popcnt256(_mm256_and_si256(xv, wv)));
+            }
+        }
+        let mut c = [0u32; 4];
+        for (q, a) in acc.iter().enumerate() {
+            c[q] = hsum(*a) as u32;
+        }
+        for i in blocks * 4..words {
+            let xv = x[i];
+            for (q, cq) in c.iter_mut().enumerate() {
+                *cq += (xv & wmsb[q * words + i]).count_ones();
+            }
+        }
+        c
+    }
+
+    /// AVX2 [`super::sweep4_pair`]: same block structure, two pixels'
+    /// accumulators fed per weight-block load (8 accumulator registers
+    /// + LUT/mask constants still fit the 16 ymm registers).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sweep4_pair(
+        x0: &[u64],
+        x1: &[u64],
+        wmsb: &[u64],
+        skip: Option<&[u64]>,
+    ) -> [[u32; 4]; 2] {
+        let words = x0.len();
+        let blocks = words / 4;
+        let mut acc0 = [_mm256_setzero_si256(); 4];
+        let mut acc1 = [_mm256_setzero_si256(); 4];
+        for b in 0..blocks {
+            if let Some(s) = skip {
+                let bit = b * 4;
+                if (s[bit / 64] >> (bit % 64)) & 0xf == 0 {
+                    continue;
+                }
+            }
+            let xv0 = _mm256_loadu_si256(x0.as_ptr().add(b * 4) as *const __m256i);
+            let xv1 = _mm256_loadu_si256(x1.as_ptr().add(b * 4) as *const __m256i);
+            for q in 0..4 {
+                let wv =
+                    _mm256_loadu_si256(wmsb.as_ptr().add(q * words + b * 4) as *const __m256i);
+                acc0[q] = _mm256_add_epi64(acc0[q], popcnt256(_mm256_and_si256(xv0, wv)));
+                acc1[q] = _mm256_add_epi64(acc1[q], popcnt256(_mm256_and_si256(xv1, wv)));
+            }
+        }
+        let (mut a, mut b) = ([0u32; 4], [0u32; 4]);
+        for q in 0..4 {
+            a[q] = hsum(acc0[q]) as u32;
+            b[q] = hsum(acc1[q]) as u32;
+        }
+        for i in blocks * 4..words {
+            for q in 0..4 {
+                let wv = wmsb[q * words + i];
+                a[q] += (x0[i] & wv).count_ones();
+                b[q] += (x1[i] & wv).count_ones();
+            }
+        }
+        [a, b]
+    }
+
+    /// AVX2 [`super::and_popcount`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+        let words = a.len();
+        let blocks = words / 4;
+        let mut acc = _mm256_setzero_si256();
+        for blk in 0..blocks {
+            let av = _mm256_loadu_si256(a.as_ptr().add(blk * 4) as *const __m256i);
+            let bv = _mm256_loadu_si256(b.as_ptr().add(blk * 4) as *const __m256i);
+            acc = _mm256_add_epi64(acc, popcnt256(_mm256_and_si256(av, bv)));
+        }
+        let mut c = hsum(acc) as u32;
+        for i in blocks * 4..words {
+            c += (a[i] & b[i]).count_ones();
+        }
+        c
+    }
+}
+
+/// AVX-512 tier: 512-bit AND + native `VPOPCNTQ`. Nightly-only (the
+/// `avx512` cargo feature turns on `feature(stdarch_x86_avx512)` in
+/// `lib.rs`); the stable CI toolchain never compiles this module, and
+/// [`KernelCaps`] never reports the tier without it. Safety mirrors the
+/// AVX2 module: feature-clamped dispatch, unaligned loads, block bounds
+/// `blocks * 8 <= words`.
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+mod avx512 {
+    use core::arch::x86_64::*;
+
+    /// AVX-512 [`super::sweep4`]: 8-word blocks, one byte of the skip
+    /// bitmap per block (bits `8b..8b+8` never straddle a bitmap word).
+    #[target_feature(enable = "avx512f", enable = "avx512vpopcntdq")]
+    pub unsafe fn sweep4(x: &[u64], wmsb: &[u64], skip: Option<&[u64]>) -> [u32; 4] {
+        let words = x.len();
+        let blocks = words / 8;
+        let mut acc = [_mm512_setzero_si512(); 4];
+        for b in 0..blocks {
+            if let Some(s) = skip {
+                let bit = b * 8;
+                if (s[bit / 64] >> (bit % 64)) & 0xff == 0 {
+                    continue;
+                }
+            }
+            let xv = _mm512_loadu_si512(x.as_ptr().add(b * 8) as *const _);
+            for (q, a) in acc.iter_mut().enumerate() {
+                let wv = _mm512_loadu_si512(wmsb.as_ptr().add(q * words + b * 8) as *const _);
+                *a = _mm512_add_epi64(*a, _mm512_popcnt_epi64(_mm512_and_si512(xv, wv)));
+            }
+        }
+        let mut c = [0u32; 4];
+        for (q, a) in acc.iter().enumerate() {
+            c[q] = _mm512_reduce_add_epi64(*a) as u32;
+        }
+        for i in blocks * 8..words {
+            let xv = x[i];
+            for (q, cq) in c.iter_mut().enumerate() {
+                *cq += (xv & wmsb[q * words + i]).count_ones();
+            }
+        }
+        c
+    }
+
+    /// AVX-512 [`super::sweep4_pair`].
+    #[target_feature(enable = "avx512f", enable = "avx512vpopcntdq")]
+    pub unsafe fn sweep4_pair(
+        x0: &[u64],
+        x1: &[u64],
+        wmsb: &[u64],
+        skip: Option<&[u64]>,
+    ) -> [[u32; 4]; 2] {
+        let words = x0.len();
+        let blocks = words / 8;
+        let mut acc0 = [_mm512_setzero_si512(); 4];
+        let mut acc1 = [_mm512_setzero_si512(); 4];
+        for b in 0..blocks {
+            if let Some(s) = skip {
+                let bit = b * 8;
+                if (s[bit / 64] >> (bit % 64)) & 0xff == 0 {
+                    continue;
+                }
+            }
+            let xv0 = _mm512_loadu_si512(x0.as_ptr().add(b * 8) as *const _);
+            let xv1 = _mm512_loadu_si512(x1.as_ptr().add(b * 8) as *const _);
+            for q in 0..4 {
+                let wv = _mm512_loadu_si512(wmsb.as_ptr().add(q * words + b * 8) as *const _);
+                acc0[q] =
+                    _mm512_add_epi64(acc0[q], _mm512_popcnt_epi64(_mm512_and_si512(xv0, wv)));
+                acc1[q] =
+                    _mm512_add_epi64(acc1[q], _mm512_popcnt_epi64(_mm512_and_si512(xv1, wv)));
+            }
+        }
+        let (mut a, mut b) = ([0u32; 4], [0u32; 4]);
+        for q in 0..4 {
+            a[q] = _mm512_reduce_add_epi64(acc0[q]) as u32;
+            b[q] = _mm512_reduce_add_epi64(acc1[q]) as u32;
+        }
+        for i in blocks * 8..words {
+            for q in 0..4 {
+                let wv = wmsb[q * words + i];
+                a[q] += (x0[i] & wv).count_ones();
+                b[q] += (x1[i] & wv).count_ones();
+            }
+        }
+        [a, b]
+    }
+
+    /// AVX-512 [`super::and_popcount`].
+    #[target_feature(enable = "avx512f", enable = "avx512vpopcntdq")]
+    pub unsafe fn and_popcount(a: &[u64], b: &[u64]) -> u32 {
+        let words = a.len();
+        let blocks = words / 8;
+        let mut acc = _mm512_setzero_si512();
+        for blk in 0..blocks {
+            let av = _mm512_loadu_si512(a.as_ptr().add(blk * 8) as *const _);
+            let bv = _mm512_loadu_si512(b.as_ptr().add(blk * 8) as *const _);
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_and_si512(av, bv)));
+        }
+        let mut c = _mm512_reduce_add_epi64(acc) as u32;
+        for i in blocks * 8..words {
+            c += (a[i] & b[i]).count_ones();
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::words_for;
+
+    /// Every tier the build can actually select on this host (always
+    /// includes Scalar; includes a vector tier when the hardware has
+    /// it). Clamping makes requesting all three tiers safe anywhere.
+    fn available_caps() -> Vec<KernelCaps> {
+        let mut caps = vec![KernelCaps::select(Some(KernelTier::Scalar))];
+        for t in [KernelTier::Avx2, KernelTier::Avx512] {
+            let c = KernelCaps::select(Some(t));
+            if caps.iter().all(|&p| p.tier() != c.tier()) {
+                caps.push(c);
+            }
+        }
+        caps
+    }
+
+    fn random_planes(rng: &mut Rng, words: usize, density: f64) -> Vec<u64> {
+        (0..words)
+            .map(|_| {
+                if rng.next_f64() < density {
+                    rng.next_u64()
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    fn live_bitmap(wmsb: &[u64], words: usize) -> Vec<u64> {
+        let mut skip = vec![0u64; words_for(words)];
+        for i in 0..words {
+            if (0..4).any(|q| wmsb[q * words + i] != 0) {
+                skip[i / 64] |= 1 << (i % 64);
+            }
+        }
+        skip
+    }
+
+    #[test]
+    fn sweeps_bit_identical_across_tiers_and_skip() {
+        let mut rng = Rng::new(61);
+        for words in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 36, 65, 130] {
+            for density in [0.0, 0.15, 0.6, 1.0] {
+                let x0 = random_planes(&mut rng, words, 0.9);
+                let x1 = random_planes(&mut rng, words, 0.9);
+                let mut wmsb = Vec::with_capacity(4 * words);
+                for _ in 0..4 {
+                    wmsb.extend(random_planes(&mut rng, words, density));
+                }
+                let skip = live_bitmap(&wmsb, words);
+                let want = sweep4_scalar(&x0, &wmsb);
+                let want_pair = sweep4_pair_scalar(&x0, &x1, &wmsb);
+                for caps in available_caps() {
+                    let tier = caps.tier().name();
+                    for sk in [None, Some(skip.as_slice())] {
+                        assert_eq!(
+                            sweep4(caps, &x0, &wmsb, sk),
+                            want,
+                            "tier {tier} words {words} density {density} skip {}",
+                            sk.is_some()
+                        );
+                        assert_eq!(
+                            sweep4_pair(caps, &x0, &x1, &wmsb, sk),
+                            want_pair,
+                            "pair tier {tier} words {words} density {density} skip {}",
+                            sk.is_some()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn and_popcount_matches_frozen_reference() {
+        let mut rng = Rng::new(62);
+        for words in [0usize, 1, 3, 4, 6, 8, 17, 64, 129] {
+            let a = random_planes(&mut rng, words, 0.7);
+            let b = random_planes(&mut rng, words, 0.5);
+            let want = crate::util::and_popcount(&a, &b);
+            for caps in available_caps() {
+                assert_eq!(
+                    and_popcount(caps, &a, &b),
+                    want,
+                    "tier {} words {words}",
+                    caps.tier().name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn skip_is_exact_not_approximate() {
+        // Zero out entire word-aligned stripes of the weight planes and
+        // check the skipping sweep agrees with the dense sweep exactly.
+        let mut rng = Rng::new(63);
+        let words = 24;
+        let x = random_planes(&mut rng, words, 1.0);
+        let mut wmsb = Vec::new();
+        for _ in 0..4 {
+            wmsb.extend(random_planes(&mut rng, words, 1.0));
+        }
+        // Kill words 4..20 across all four planes: 4 live of 24.
+        for q in 0..4 {
+            for i in 4..20 {
+                wmsb[q * words + i] = 0;
+            }
+        }
+        let skip = live_bitmap(&wmsb, words);
+        assert_eq!(skip[0].count_ones(), 8);
+        for caps in available_caps() {
+            assert_eq!(
+                sweep4(caps, &x, &wmsb, Some(&skip)),
+                sweep4_scalar(&x, &wmsb),
+                "tier {}",
+                caps.tier().name()
+            );
+        }
+    }
+
+    #[test]
+    fn fold4_matches_shift_add() {
+        let c = [3u32, 5, 7, 11];
+        for p in 4..8 {
+            let want = (3i64 << (p + 4)) + (5i64 << (p + 5)) + (7i64 << (p + 6))
+                + (11i64 << (p + 7));
+            assert_eq!(fold4(c, p), want);
+        }
+        assert_eq!(fold4([0; 4], 7), 0);
+    }
+}

@@ -22,11 +22,39 @@ const PACK_TILE: usize = 32;
 /// A layer's activation matrix as packed bit-planes plus per-pixel
 /// sparsity metadata. Reusable: [`PackedPatches::pack`] grows the
 /// buffers on first use and overwrites them thereafter.
+///
+/// # Slab layout
+///
+/// One contiguous `Vec<u64>` holds every plane of every pixel, pixel-
+/// major then plane-major (`words = ⌈k/64⌉` u64s per plane):
+///
+/// ```text
+/// planes: [ pixel 0: p0[w0..w] p1[w0..w] … p7[w0..w] | pixel 1: … ]
+///           └──────────────── 8·words ─────────────┘
+/// word w of plane p of pixel pix  =  planes[(pix*8 + p)*words + w]
+/// ```
+///
+/// Bit order matches `pac::sparsity::BitPlanes::from_u8`: patch element
+/// `i` lands in bit `i % 64` of word `i / 64`, so an AND-popcount of an
+/// activation plane word against the equally-packed weight plane word
+/// is one digital bank cycle over 64 DP lanes. The trailing bits of the
+/// last word (past `k`) are always zero — kernels may popcount whole
+/// words without masking. This is the word layout `nn::simd` sweeps and
+/// the unit the weight zero-word skip bitmaps (DESIGN.md §13) index.
+///
+/// # Sparsity metadata (the S_x side of Eq. 3)
+///
+/// Packing fuses the counter extraction with the transposition: `pop`
+/// holds each pixel's per-plane set-bit counts `S_x[0..8]` (what the PCU
+/// consumes), and `sums` the raw element sums reconstructed via the
+/// `Σv = Σ_p 2^p·S_x[p]` identity (what the zero-point correction
+/// consumes) — so the MACs' sparsity half never re-reads LSB planes.
 #[derive(Debug, Clone, Default)]
 pub struct PackedPatches {
     pixels: usize,
     /// Elements per patch (the DP length the planes were packed from).
     k: usize,
+    /// `u64` words per plane: `⌈k/64⌉` (`util::words_for`).
     words: usize,
     /// `[pixel][p][word]` plane slab, `8 * words` words per pixel.
     planes: Vec<u64>,

@@ -48,6 +48,41 @@ pub struct BlockedBench {
     pub bit_identical: bool,
 }
 
+/// One SIMD-vs-scalar kernel-tier measurement (a `BENCH_hotpath.json`
+/// row): the blocked GEMM (`PacBackend::gemm_layer`, single-thread)
+/// with the auto-detected kernel tier against the same GEMM forced to
+/// the scalar tier — same shape, same inputs, bit-identity asserted.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct SimdBench {
+    /// Layer name from the ResNet-18 shape table, suffixed with the
+    /// weight fill (`-dense` / `-msbsparse`).
+    pub shape: String,
+    pub dp_len: usize,
+    pub out_c: usize,
+    /// Output pixels fed to one layer-level GEMM call.
+    pub pixels: usize,
+    /// Kernel tier the SIMD side resolved (`KernelTier::name()`:
+    /// `"scalar"`, `"avx2"`, or `"avx512"`). `"scalar"` on hosts with
+    /// no vector tier — [`enforce_simd_floor`] then refuses to gate.
+    pub tier: String,
+    /// Whether the weight fill zeroes MSB planes in word-aligned
+    /// stripes (exercising the zero-word skipping) or is dense
+    /// (exercising the density auto-off).
+    pub msb_sparse_weights: bool,
+    /// Live MSB-word fraction of the prepared layer (the skip-bitmap
+    /// density; 1.0 for dense fills).
+    pub live_word_fraction: f64,
+    /// Columns whose sweep actually skips (post auto-off).
+    pub skip_columns: usize,
+    pub scalar_macs_per_s: f64,
+    pub simd_macs_per_s: f64,
+    /// `simd / scalar` throughput ratio; CI gates this ≥ 1.0 on every
+    /// row when the host has a vector tier ([`enforce_simd_floor`]).
+    pub speedup_simd: f64,
+    pub bit_identical: bool,
+}
+
 /// One fused-vs-roundtrip end-to-end measurement (a
 /// `BENCH_hotpath.json` row): multi-layer PAC inference with the
 /// sparsity-encoded dataplane (producer-side requantize→scatter→pack)
@@ -81,6 +116,8 @@ pub struct HotpathReport {
     pub layers: Vec<LayerBench>,
     /// Blocked-vs-per-patch layer GEMM rows (single-thread).
     pub blocked: Vec<BlockedBench>,
+    /// SIMD-tier vs forced-scalar blocked GEMM rows (single-thread).
+    pub simd: Vec<SimdBench>,
     /// Fused-dataplane vs dense-roundtrip end-to-end rows.
     pub fused: Vec<FusedBench>,
 }
@@ -155,6 +192,23 @@ pub fn validate_hotpath(json: &str) -> Result<HotpathReport, String> {
         }
         if !(b.blocked_macs_per_s.is_finite() && b.blocked_macs_per_s > 0.0) {
             return Err(format!("shape '{}' has invalid blocked rate", b.shape));
+        }
+    }
+    for s in &r.simd {
+        if !(s.scalar_macs_per_s.is_finite() && s.scalar_macs_per_s > 0.0) {
+            return Err(format!("simd row '{}' has invalid scalar rate", s.shape));
+        }
+        if !(s.simd_macs_per_s.is_finite() && s.simd_macs_per_s > 0.0) {
+            return Err(format!("simd row '{}' has invalid simd rate", s.shape));
+        }
+        if crate::util::KernelTier::parse(&s.tier).is_none() {
+            return Err(format!("simd row '{}' has unknown tier '{}'", s.shape, s.tier));
+        }
+        if !(0.0..=1.0).contains(&s.live_word_fraction) {
+            return Err(format!("simd row '{}': live_word_fraction out of [0,1]", s.shape));
+        }
+        if !s.bit_identical {
+            return Err(format!("simd row '{}': SIMD kernel diverged from scalar", s.shape));
         }
     }
     for f in &r.fused {
@@ -345,6 +399,38 @@ pub fn enforce_blocked_floor(r: &HotpathReport) -> Result<(), String> {
     Ok(())
 }
 
+/// The SIMD kernel-tier regression gate (CI bench-smoke, behind
+/// `PACIM_ENFORCE_SIMD_SPEEDUP`): every `simd[]` row must be
+/// bit-identical to the forced-scalar run and at least as fast
+/// (`speedup_simd >= 1.0`). Rows whose resolved tier is `"scalar"`
+/// mean the host has no vector unit to measure — the gate then fails
+/// loudly rather than vacuously passing, because CI only sets the
+/// enforcement variable on AVX2-capable runners.
+pub fn enforce_simd_floor(r: &HotpathReport) -> Result<(), String> {
+    if r.simd.is_empty() {
+        return Err("no simd rows to gate".into());
+    }
+    for s in &r.simd {
+        if !s.bit_identical {
+            return Err(format!("simd row '{}': SIMD kernel diverged from scalar", s.shape));
+        }
+        if s.tier == "scalar" {
+            return Err(format!(
+                "simd row '{}' resolved tier 'scalar' — nothing vectorized on this host, \
+                 refusing to gate a scalar-vs-scalar measurement",
+                s.shape
+            ));
+        }
+        if !(s.speedup_simd.is_finite() && s.speedup_simd >= 1.0) {
+            return Err(format!(
+                "simd row '{}' ({}): SIMD sweep regressed vs forced scalar (speedup {:.3} < 1.0)",
+                s.shape, s.tier, s.speedup_simd
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Parse + sanity-check a `BENCH_serve.json` payload.
 pub fn validate_serve(json: &str) -> Result<ServeReport, String> {
     let r: ServeReport = serde_json::from_str(json).map_err(|e| e.to_string())?;
@@ -411,6 +497,20 @@ mod tests {
                 speedup_blocked: 2.0,
                 bit_identical: true,
             }],
+            simd: vec![SimdBench {
+                shape: "layer1.0.conv1-msbsparse".into(),
+                dp_len: 576,
+                out_c: 64,
+                pixels: 256,
+                tier: "avx2".into(),
+                msb_sparse_weights: true,
+                live_word_fraction: 0.4,
+                skip_columns: 64,
+                scalar_macs_per_s: 1e8,
+                simd_macs_per_s: 2.5e8,
+                speedup_simd: 2.5,
+                bit_identical: true,
+            }],
             fused: vec![FusedBench {
                 model: "tiny_resnet_c16".into(),
                 images: 4,
@@ -466,7 +566,44 @@ mod tests {
         let back = validate_hotpath(&json).unwrap();
         assert_eq!(back.layers.len(), 1);
         assert_eq!(back.blocked.len(), 1);
+        assert_eq!(back.simd.len(), 1);
         assert_eq!(back.fused.len(), 1);
+    }
+
+    #[test]
+    fn simd_rows_validated() {
+        // Divergence is a schema error, not just a gate error.
+        let mut r = sample_hotpath();
+        r.simd[0].bit_identical = false;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_hotpath(&json).unwrap_err().contains("diverged"));
+        // Unknown tier strings are rejected.
+        let mut r = sample_hotpath();
+        r.simd[0].tier = "neon".into();
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_hotpath(&json).unwrap_err().contains("unknown tier"));
+        // Density out of range is rejected.
+        let mut r = sample_hotpath();
+        r.simd[0].live_word_fraction = 1.5;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_hotpath(&json).unwrap_err().contains("live_word_fraction"));
+    }
+
+    #[test]
+    fn simd_floor_gate() {
+        let mut r = sample_hotpath();
+        enforce_simd_floor(&r).unwrap();
+        // Regression: SIMD slower than the forced-scalar run.
+        r.simd[0].speedup_simd = 0.97;
+        let err = enforce_simd_floor(&r).unwrap_err();
+        assert!(err.contains("regressed"), "{err}");
+        // A scalar-resolved tier cannot satisfy the gate.
+        r.simd[0].speedup_simd = 1.2;
+        r.simd[0].tier = "scalar".into();
+        assert!(enforce_simd_floor(&r).unwrap_err().contains("refusing"));
+        // No rows cannot pass.
+        r.simd.clear();
+        assert!(enforce_simd_floor(&r).is_err());
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! CPU kernel-tier capability probe for the popcount sweeps.
+//!
+//! The blocked bit-plane GEMM (`nn::pac_exec`) has three interchangeable
+//! inner loops — a portable scalar word sweep, an AVX2 lookup-popcount
+//! sweep, and (behind the nightly-only `avx512` cargo feature) an
+//! AVX-512 `VPOPCNTQ` sweep; see `nn::simd`. All three compute identical
+//! integers; the tier only changes host speed. This module decides which
+//! tier runs, `Parallelism`-style: a [`KernelCaps`] value is resolved
+//! once per backend and threaded into the tile kernels.
+//!
+//! Resolution precedence (first hit wins):
+//! 1. an explicit request from the caller (`PacConfig::kernel`),
+//! 2. the `PACIM_FORCE_KERNEL` environment variable
+//!    (`scalar`/`avx2`/`avx512`, case-insensitive; anything else is
+//!    ignored and resolution falls through to the probe),
+//! 3. the runtime CPUID probe (`is_x86_feature_detected!`).
+//!
+//! Whatever is requested, the resolved tier is **clamped to what the
+//! host supports**: [`KernelCaps`] keeps its fields private, so the only
+//! way to obtain one is through the clamping constructors, and the
+//! `unsafe` `#[target_feature]` kernels in `nn::simd` are therefore
+//! unreachable on hardware that lacks the feature. Forcing `scalar` on
+//! any machine is always honored (that is the bit-identity escape hatch
+//! CI uses); forcing a tier *up* beyond the host silently degrades to
+//! the best supported tier.
+
+/// Environment variable overriding kernel-tier selection
+/// (`scalar` | `avx2` | `avx512`, case-insensitive).
+pub const FORCE_KERNEL_ENV: &str = "PACIM_FORCE_KERNEL";
+
+/// One inner-loop implementation tier, ordered by capability:
+/// `Scalar < Avx2 < Avx512`. The ordering is what makes clamping a
+/// `min`: a request never resolves above the host's supported tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum KernelTier {
+    /// Portable `u64::count_ones` word sweep — runs everywhere and is
+    /// the bit-identity reference for the vector tiers.
+    Scalar,
+    /// 256-bit sweep: `_mm256_*` AND + nibble-lookup popcount
+    /// (`_mm256_shuffle_epi8` + `_mm256_sad_epu8`).
+    Avx2,
+    /// 512-bit sweep using the `VPOPCNTQ` instruction
+    /// (`_mm512_popcnt_epi64`). Requires the nightly-only `avx512`
+    /// cargo feature; without it the probe never reports this tier.
+    Avx512,
+}
+
+impl KernelTier {
+    /// Canonical lower-case name, matching what [`KernelTier::parse`]
+    /// accepts and what bench artifacts record in their `tier` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Avx512 => "avx512",
+        }
+    }
+
+    /// Parse a tier name (case-insensitive). Unknown names yield `None`
+    /// — the env-override path treats that as "no override" rather than
+    /// failing, so a typo degrades to auto-detection, never to a panic
+    /// deep inside backend construction.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelTier::Scalar),
+            "avx2" => Some(KernelTier::Avx2),
+            "avx512" => Some(KernelTier::Avx512),
+            _ => None,
+        }
+    }
+}
+
+/// Resolved kernel capabilities: which tier the sweeps dispatch to and
+/// what the host could support. Fields are private on purpose — the
+/// soundness argument for the `unsafe` SIMD kernels (DESIGN.md §13)
+/// rests on every `KernelCaps` having been clamped to the probed
+/// hardware, so no public constructor may accept an arbitrary tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCaps {
+    tier: KernelTier,
+    supported: KernelTier,
+    forced: bool,
+}
+
+impl KernelCaps {
+    /// Probe the host and apply the [`FORCE_KERNEL_ENV`] override, if
+    /// any. Equivalent to `KernelCaps::select(None)`.
+    pub fn detect() -> Self {
+        Self::select(None)
+    }
+
+    /// Resolve a tier request: an explicit `request` wins over the env
+    /// override, which wins over plain auto-detection; the result is
+    /// clamped to [`KernelCaps::supported_tier`] either way.
+    pub fn select(request: Option<KernelTier>) -> Self {
+        let request = request.or_else(env_request);
+        let supported = Self::supported_tier();
+        Self {
+            tier: resolve(request, supported),
+            supported,
+            forced: request.is_some(),
+        }
+    }
+
+    /// The tier the sweeps dispatch to. Never exceeds
+    /// [`KernelCaps::supported_tier`].
+    #[inline]
+    pub fn tier(self) -> KernelTier {
+        self.tier
+    }
+
+    /// The best tier the host CPU (and build configuration) supports.
+    pub fn supported(self) -> KernelTier {
+        self.supported
+    }
+
+    /// Whether the resolved tier came from an explicit request (config
+    /// field or env override) rather than plain auto-detection. Purely
+    /// informational — bench artifacts record it.
+    pub fn forced(self) -> bool {
+        self.forced
+    }
+
+    /// Runtime probe: the best tier this host supports. AVX-512 is
+    /// only ever reported when the nightly-only `avx512` cargo feature
+    /// compiled the `VPOPCNTQ` path in; AVX2 is detected on stable via
+    /// `is_x86_feature_detected!`; everything else (including non-x86
+    /// targets) is `Scalar`.
+    pub fn supported_tier() -> KernelTier {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        {
+            if std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+            {
+                return KernelTier::Avx512;
+            }
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return KernelTier::Avx2;
+            }
+        }
+        KernelTier::Scalar
+    }
+}
+
+impl Default for KernelCaps {
+    fn default() -> Self {
+        Self::detect()
+    }
+}
+
+/// Clamp a request to the supported tier; no request means "best
+/// supported". Pure so the clamping rule is unit-testable without
+/// depending on the build machine's CPU.
+fn resolve(request: Option<KernelTier>, supported: KernelTier) -> KernelTier {
+    request.unwrap_or(supported).min(supported)
+}
+
+/// Read and parse [`FORCE_KERNEL_ENV`]; unset or unparsable → `None`.
+fn env_request() -> Option<KernelTier> {
+    std::env::var(FORCE_KERNEL_ENV).ok().and_then(|v| KernelTier::parse(&v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_ignores_unknown() {
+        for t in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512] {
+            assert_eq!(KernelTier::parse(t.name()), Some(t));
+        }
+        assert_eq!(KernelTier::parse("AVX2"), Some(KernelTier::Avx2));
+        assert_eq!(KernelTier::parse(" Scalar\n"), Some(KernelTier::Scalar));
+        assert_eq!(KernelTier::parse("avx-512"), None);
+        assert_eq!(KernelTier::parse(""), None);
+        assert_eq!(KernelTier::parse("mmx"), None);
+    }
+
+    #[test]
+    fn resolve_clamps_to_supported() {
+        use KernelTier::*;
+        // No request → best supported.
+        assert_eq!(resolve(None, Scalar), Scalar);
+        assert_eq!(resolve(None, Avx512), Avx512);
+        // Downward requests always honored.
+        assert_eq!(resolve(Some(Scalar), Avx512), Scalar);
+        assert_eq!(resolve(Some(Avx2), Avx512), Avx2);
+        // Upward requests clamp to the host.
+        assert_eq!(resolve(Some(Avx512), Scalar), Scalar);
+        assert_eq!(resolve(Some(Avx512), Avx2), Avx2);
+        assert_eq!(resolve(Some(Avx2), Avx2), Avx2);
+    }
+
+    #[test]
+    fn detect_never_selects_unsupported() {
+        let caps = KernelCaps::detect();
+        assert!(caps.tier() <= caps.supported());
+        assert_eq!(caps.supported(), KernelCaps::supported_tier());
+        // Explicit requests stay clamped, whatever the host is.
+        for req in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512] {
+            let c = KernelCaps::select(Some(req));
+            assert!(c.tier() <= c.supported(), "request {req:?}");
+            assert_eq!(c.tier(), req.min(c.supported()));
+            assert!(c.forced());
+        }
+    }
+
+    #[test]
+    fn scalar_request_always_honored() {
+        let c = KernelCaps::select(Some(KernelTier::Scalar));
+        assert_eq!(c.tier(), KernelTier::Scalar);
+    }
+
+    #[test]
+    fn env_override_roundtrips() {
+        // Tier selection is numerically inert (every tier computes the
+        // same integers), so mutating the env var here cannot perturb
+        // concurrently running tests — at worst they pick a different
+        // speed. Restore the prior state regardless.
+        let prior = std::env::var(FORCE_KERNEL_ENV).ok();
+        for t in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512] {
+            std::env::set_var(FORCE_KERNEL_ENV, t.name());
+            let c = KernelCaps::detect();
+            assert_eq!(c.tier(), t.min(c.supported()), "env {}", t.name());
+            assert!(c.forced());
+        }
+        // Unparsable values fall through to auto-detection.
+        std::env::set_var(FORCE_KERNEL_ENV, "warp-drive");
+        let c = KernelCaps::detect();
+        assert_eq!(c.tier(), c.supported());
+        assert!(!c.forced());
+        // An explicit request beats the env override.
+        std::env::set_var(FORCE_KERNEL_ENV, "avx2");
+        let c = KernelCaps::select(Some(KernelTier::Scalar));
+        assert_eq!(c.tier(), KernelTier::Scalar);
+        match prior {
+            Some(v) => std::env::set_var(FORCE_KERNEL_ENV, v),
+            None => std::env::remove_var(FORCE_KERNEL_ENV),
+        }
+    }
+
+    #[test]
+    fn default_is_detect() {
+        // Compare only the env-independent parts: `env_override_roundtrips`
+        // mutates PACIM_FORCE_KERNEL in a parallel test thread, so two
+        // back-to-back detect() calls may legitimately disagree on the
+        // resolved tier mid-run; the probed support level cannot change.
+        let d = KernelCaps::default();
+        assert_eq!(d.supported(), KernelCaps::supported_tier());
+        assert!(d.tier() <= d.supported());
+    }
+}

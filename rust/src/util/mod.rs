@@ -1,14 +1,17 @@
 //! Shared utilities: deterministic RNG, streaming statistics, a minimal
-//! property-testing harness, bench-artifact schemas, and bit-plane
-//! packing helpers used by the hot simulation paths.
+//! property-testing harness, bench-artifact schemas, the CPU kernel-tier
+//! probe ([`kernel`]), and bit-plane packing helpers used by the hot
+//! simulation paths.
 
 pub mod benchfmt;
 pub mod check;
 pub mod fastdiv;
+pub mod kernel;
 pub mod par;
 pub mod rng;
 pub mod stats;
 
+pub use kernel::{KernelCaps, KernelTier};
 pub use par::Parallelism;
 
 /// Pack a `{0,1}`-valued byte slice into `u64` words, LSB-first, for

@@ -12,8 +12,8 @@
 //! actual emitted JSON.
 
 use pacim::util::benchfmt::{
-    enforce_blocked_floor, enforce_traffic_floor, validate_hotpath, validate_serve,
-    validate_traffic,
+    enforce_blocked_floor, enforce_simd_floor, enforce_traffic_floor, validate_hotpath,
+    validate_serve, validate_traffic,
 };
 use std::path::PathBuf;
 
@@ -41,6 +41,36 @@ const HOTPATH_GOLDEN: &str = r#"{
       "per_patch_macs_per_s": 120000000.0,
       "blocked_macs_per_s": 250000000.0,
       "speedup_blocked": 2.08,
+      "bit_identical": true
+    }
+  ],
+  "simd": [
+    {
+      "shape": "layer1.0.conv1-dense",
+      "dp_len": 576,
+      "out_c": 64,
+      "pixels": 192,
+      "tier": "avx2",
+      "msb_sparse_weights": false,
+      "live_word_fraction": 1.0,
+      "skip_columns": 0,
+      "scalar_macs_per_s": 120000000.0,
+      "simd_macs_per_s": 220000000.0,
+      "speedup_simd": 1.83,
+      "bit_identical": true
+    },
+    {
+      "shape": "layer1.0.conv1-msbsparse",
+      "dp_len": 576,
+      "out_c": 64,
+      "pixels": 192,
+      "tier": "avx2",
+      "msb_sparse_weights": true,
+      "live_word_fraction": 0.41,
+      "skip_columns": 64,
+      "scalar_macs_per_s": 120000000.0,
+      "simd_macs_per_s": 320000000.0,
+      "speedup_simd": 2.67,
       "bit_identical": true
     }
   ],
@@ -181,6 +211,15 @@ fn renamed_field_is_schema_drift() {
     // Dropping the blocked section entirely is drift, not a pass.
     let drifted = HOTPATH_GOLDEN.replace("\"blocked\":", "\"blocked_rows\":");
     assert!(validate_hotpath(&drifted).is_err());
+    // Same for the SIMD kernel rows: renamed speedup field and dropped
+    // section are both drift.
+    let drifted = HOTPATH_GOLDEN.replace("\"speedup_simd\"", "\"simd_speedup\"");
+    assert!(validate_hotpath(&drifted).is_err());
+    let drifted = HOTPATH_GOLDEN.replace("\"simd\":", "\"simd_rows\":");
+    assert!(validate_hotpath(&drifted).is_err());
+    // An unknown kernel tier name is a validation error, not free text.
+    let drifted = HOTPATH_GOLDEN.replace("\"tier\": \"avx2\"", "\"tier\": \"neon\"");
+    assert!(validate_hotpath(&drifted).unwrap_err().contains("tier"));
 }
 
 #[test]
@@ -190,6 +229,32 @@ fn blocked_regression_gate_catches_slowdown() {
     let slowed = HOTPATH_GOLDEN.replace("\"speedup_blocked\": 2.08", "\"speedup_blocked\": 0.97");
     let r = validate_hotpath(&slowed).unwrap();
     assert!(enforce_blocked_floor(&r).unwrap_err().contains("regressed"));
+}
+
+#[test]
+fn simd_regression_gate_catches_slowdown_and_scalar_dodge() {
+    let r = validate_hotpath(HOTPATH_GOLDEN).unwrap();
+    enforce_simd_floor(&r).unwrap();
+    // A sub-1.0x SIMD row fails the floor.
+    let slowed = HOTPATH_GOLDEN.replace("\"speedup_simd\": 1.83", "\"speedup_simd\": 0.97");
+    let r = validate_hotpath(&slowed).unwrap();
+    assert!(enforce_simd_floor(&r).unwrap_err().contains("regressed"));
+    // A report whose rows all ran the scalar tier cannot vacuously pass
+    // the SIMD gate: that means capability detection (or the runner)
+    // silently downgraded, and the gate refuses.
+    let dodged = HOTPATH_GOLDEN.replace("\"tier\": \"avx2\"", "\"tier\": \"scalar\"");
+    let r = validate_hotpath(&dodged).unwrap();
+    assert!(enforce_simd_floor(&r).unwrap_err().contains("refusing"));
+    // An empty simd section under enforcement is an error, not a pass
+    // (an empty array is the only in-schema way for the rows to vanish;
+    // dropping the key entirely is already schema drift, tested above).
+    let emptied = {
+        let start = HOTPATH_GOLDEN.find("\"simd\": [").unwrap();
+        let end = start + HOTPATH_GOLDEN[start..].find("],").unwrap();
+        format!("{}\"simd\": [{}", &HOTPATH_GOLDEN[..start], &HOTPATH_GOLDEN[end..])
+    };
+    let r = validate_hotpath(&emptied).unwrap();
+    assert!(enforce_simd_floor(&r).is_err());
 }
 
 #[test]
@@ -220,10 +285,14 @@ fn artifact(env: &str, default_name: &str) -> Option<PathBuf> {
 
 #[test]
 fn real_hotpath_artifact_if_present() {
-    // CI's bench-smoke job sets this env var after running the bench:
+    // CI's bench-smoke job sets these env vars after running the bench:
     // the blocked kernel must beat (or tie) the per-patch baseline on
-    // every measured shape, or the job fails.
+    // every measured shape, and — on runners where the probe selects a
+    // vector tier — the SIMD sweep must beat (or tie) the forced-scalar
+    // sweep on every measured shape, or the job fails.
     let enforce = std::env::var("PACIM_ENFORCE_BLOCKED_SPEEDUP")
+        .is_ok_and(|v| v != "0" && !v.is_empty());
+    let enforce_simd = std::env::var("PACIM_ENFORCE_SIMD_SPEEDUP")
         .is_ok_and(|v| v != "0" && !v.is_empty());
     match artifact("PACIM_BENCH_HOTPATH_JSON", "BENCH_hotpath.json") {
         Some(p) => {
@@ -232,22 +301,29 @@ fn real_hotpath_artifact_if_present() {
             let r = validate_hotpath(&json)
                 .unwrap_or_else(|e| panic!("{} schema drift: {e}", p.display()));
             println!(
-                "validated {} ({} layers, {} blocked rows)",
+                "validated {} ({} layers, {} blocked rows, {} simd rows)",
                 p.display(),
                 r.layers.len(),
-                r.blocked.len()
+                r.blocked.len(),
+                r.simd.len()
             );
             if enforce {
                 enforce_blocked_floor(&r)
                     .unwrap_or_else(|e| panic!("{} blocked-GEMM regression: {e}", p.display()));
                 println!("blocked-GEMM floor enforced: all shapes >= 1.0x");
             }
+            if enforce_simd {
+                enforce_simd_floor(&r)
+                    .unwrap_or_else(|e| panic!("{} SIMD kernel regression: {e}", p.display()));
+                println!("SIMD kernel floor enforced: all shapes >= 1.0x on a vector tier");
+            }
         }
         // Enforcement with no artifact must be a hard failure — a green
         // gate that never parsed a report is worse than a red one.
-        None if enforce => panic!(
-            "PACIM_ENFORCE_BLOCKED_SPEEDUP is set but no BENCH_hotpath.json was found \
-             (checked PACIM_BENCH_HOTPATH_JSON and the default CWD path)"
+        None if enforce || enforce_simd => panic!(
+            "PACIM_ENFORCE_BLOCKED_SPEEDUP / PACIM_ENFORCE_SIMD_SPEEDUP is set but no \
+             BENCH_hotpath.json was found (checked PACIM_BENCH_HOTPATH_JSON and the \
+             default CWD path)"
         ),
         None => println!("no BENCH_hotpath.json present; golden-sample checks only"),
     }

@@ -2,6 +2,7 @@
 //! in-house `Checker` harness (proptest is unavailable offline).
 
 use pacim::arch::ThresholdSet;
+use pacim::nn::simd;
 use pacim::nn::{
     pac_backend, run_model_with, ConvLayer, GemmInput, LinearLayer, MacBackend, Model,
     ModelScratch, Op, PacBackend, PacConfig, RunStats,
@@ -15,7 +16,7 @@ use pacim::quant::{calibrate_minmax, calibrate_weights_symmetric, Requant};
 use pacim::tensor::{im2col, Conv2dGeom, PackedPatches, QuantParams, Tensor};
 use pacim::util::check::Checker;
 use pacim::util::rng::Rng;
-use pacim::util::{and_popcount, pack_bits_u64, Parallelism};
+use pacim::util::{and_popcount, pack_bits_u64, KernelCaps, KernelTier, Parallelism};
 
 #[test]
 fn prop_bitserial_identity() {
@@ -382,6 +383,8 @@ fn prop_blocked_engine_matches_per_patch_engine() {
             min_dp_len: 0,
             par: Parallelism::off(),
             fuse_dataplane: rng.bernoulli(0.5),
+            kernel: None,
+            weight_skip: rng.bernoulli(0.5),
         };
         let blocked = pac_backend(&model, cfg.clone());
         let reference = PerPatchEngine(pac_backend(&model, cfg));
@@ -406,6 +409,193 @@ fn prop_blocked_engine_matches_per_patch_engine() {
             assert_eq!(s.digital_cycles, s_ref.digital_cycles);
             assert_eq!(s.pcu_ops, s_ref.pcu_ops);
             assert_eq!(s.levels, s_ref.levels);
+        }
+    });
+}
+
+/// One random packed plane: each word is empty, sparse, dense, or full,
+/// so sweeps see zero words (skip fodder), ragged tails, and saturation.
+fn random_plane(rng: &mut Rng, words: usize) -> Vec<u64> {
+    (0..words)
+        .map(|_| match rng.below(4) {
+            0 => 0,
+            1 => rng.next_u64() & rng.next_u64() & rng.next_u64(),
+            2 => rng.next_u64(),
+            _ => u64::MAX,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_simd_sweeps_bit_identical_across_tiers() {
+    // Kernel-level pin for the SIMD tentpole: every tier the capability
+    // probe can clamp a request to (asking for Avx512 on an AVX2-only
+    // host yields Avx2, etc.) produces exactly the counts of the frozen
+    // scalar sweep — with and without a weight zero-word skip bitmap —
+    // over random word counts covering full vector blocks and ragged
+    // scalar tails.
+    Checker::new("simd_sweeps", 120).run(|rng| {
+        let words = 1 + rng.below(130) as usize;
+        let x0 = random_plane(rng, words);
+        let x1 = random_plane(rng, words);
+        let wmsb: Vec<u64> = (0..4).flat_map(|_| random_plane(rng, words)).collect();
+        // Bit b of the skip bitmap is set iff word b of any MSB weight
+        // plane is non-zero — exactly how `PacBackend::prepare` builds it.
+        let mut skip = vec![0u64; words.div_ceil(64)];
+        for b in 0..words {
+            if (0..4).any(|q| wmsb[q * words + b] != 0) {
+                skip[b / 64] |= 1 << (b % 64);
+            }
+        }
+        let base0 = simd::sweep4_scalar(&x0, &wmsb);
+        let base1 = simd::sweep4_scalar(&x1, &wmsb);
+        for req in [KernelTier::Scalar, KernelTier::Avx2, KernelTier::Avx512] {
+            let caps = KernelCaps::select(Some(req));
+            assert_eq!(simd::sweep4(caps, &x0, &wmsb, None), base0, "{req:?} no-skip");
+            assert_eq!(simd::sweep4(caps, &x0, &wmsb, Some(&skip)), base0, "{req:?} skip");
+            let pair = simd::sweep4_pair(caps, &x0, &x1, &wmsb, Some(&skip));
+            assert_eq!(pair, [base0, base1], "{req:?} pair skip");
+            let pair = simd::sweep4_pair(caps, &x0, &x1, &wmsb, None);
+            assert_eq!(pair, [base0, base1], "{req:?} pair no-skip");
+            assert_eq!(
+                simd::and_popcount(caps, &x0, &wmsb[..words]),
+                and_popcount(&x0, &wmsb[..words]),
+                "{req:?} and_popcount"
+            );
+        }
+    });
+}
+
+/// A wide random conv (dp_len ≥ 288, so the zero-word bitmap clears the
+/// `SKIP_MIN_WORDS` floor) whose weight columns are MSB-sparse in whole
+/// 64-lane blocks — the pattern the skip bitmap actually exploits.
+fn random_wide_conv_model(rng: &mut Rng) -> (Model, Vec<u8>) {
+    let in_c = 32 + rng.below(33) as usize;
+    let out_c = 3 + rng.below(6) as usize;
+    let hw = 4 + rng.below(3) as usize;
+    let geom = Conv2dGeom {
+        in_c,
+        in_h: hw,
+        in_w: hw,
+        out_c,
+        kh: 3,
+        kw: 3,
+        stride: 1,
+        pad: 1,
+    };
+    let k = geom.dp_len();
+    let mut weight = vec![0u8; out_c * k];
+    for col in weight.chunks_mut(k) {
+        for block in col.chunks_mut(64) {
+            // An all-< 16 block has zero MSB planes → a dead skip word.
+            let msb_dead = rng.bernoulli(0.7);
+            for v in block.iter_mut() {
+                *v = if msb_dead { rng.below(16) as u8 } else { rng.below(256) as u8 };
+            }
+        }
+    }
+    let conv = ConvLayer {
+        name: "wide".into(),
+        geom,
+        weight: Tensor::from_vec(&[out_c, k], weight),
+        wparams: QuantParams::new(0.02, 128),
+        bias: (0..out_c).map(|_| (rng.next_f32() - 0.5) * 0.1).collect(),
+        out_params: QuantParams::new(0.05, 32),
+        relu: true,
+    };
+    let fc_w: Vec<u8> = (0..3 * out_c).map(|_| rng.below(256) as u8).collect();
+    let lin = LinearLayer {
+        name: "fc".into(),
+        in_f: out_c,
+        out_f: 3,
+        weight: Tensor::from_vec(&[3, out_c], fc_w),
+        wparams: QuantParams::new(0.03, 128),
+        bias: vec![0.0; 3],
+        out_params: None,
+        relu: false,
+    };
+    let model = Model {
+        name: "prop_wide_conv".into(),
+        ops: vec![Op::Conv2d(conv), Op::GlobalAvgPool, Op::Linear(lin)],
+        input_params: QuantParams::new(1.0 / 64.0, 128),
+        in_c,
+        in_hw: hw,
+        num_classes: 3,
+    };
+    let img: Vec<u8> = (0..in_c * hw * hw).map(|_| rng.below(256) as u8).collect();
+    (model, img)
+}
+
+#[test]
+fn prop_kernel_tiers_and_weight_skip_model_identical() {
+    // End-to-end pin: logits AND modeled statistics are invariant under
+    // every kernel-tier request (clamped by the probe) and under weight
+    // zero-word skipping, on both the static 4×4 map and the dynamic
+    // threshold ladder. Skipping is an exact transform (x & 0 = 0), so
+    // any divergence — numeric or in the cycle ledger — is a bug.
+    Checker::new("kernel_tiers_model", 20).run(|rng| {
+        let (model, img) = random_wide_conv_model(rng);
+        let base_cfg = PacConfig {
+            map: ComputeMap::operand_based(4, 4),
+            thresholds: if rng.bernoulli(0.5) {
+                Some(ThresholdSet::new(0.08, 0.16, 0.30))
+            } else {
+                None
+            },
+            rounding: if rng.bernoulli(0.5) {
+                PcuRounding::RoundNearest
+            } else {
+                PcuRounding::Floor
+            },
+            first_layer_exact: false,
+            min_dp_len: 0,
+            par: Parallelism::off(),
+            fuse_dataplane: rng.bernoulli(0.5),
+            kernel: Some(KernelTier::Scalar),
+            weight_skip: false,
+        };
+        let base = pac_backend(&model, base_cfg.clone());
+        let (b_ref, s_ref) = run_model_with(
+            &model,
+            &base,
+            &img,
+            &Parallelism::off(),
+            &mut ModelScratch::default(),
+        );
+        let tiers = [
+            Some(KernelTier::Scalar),
+            Some(KernelTier::Avx2),
+            Some(KernelTier::Avx512),
+            None,
+        ];
+        for kernel in tiers {
+            for weight_skip in [false, true] {
+                let cfg = PacConfig {
+                    kernel,
+                    weight_skip,
+                    ..base_cfg.clone()
+                };
+                let eng = pac_backend(&model, cfg);
+                if weight_skip {
+                    // The sparse fill must actually engage the bitmap,
+                    // or this test silently stops covering the skip path.
+                    let (live, total, active) = eng.weight_skip_profile(0);
+                    assert!(active > 0, "skip auto-off unexpectedly disabled all columns");
+                    assert!(live < total, "no dead words despite MSB-sparse fill");
+                }
+                let (b, s) = run_model_with(
+                    &model,
+                    &eng,
+                    &img,
+                    &Parallelism::off(),
+                    &mut ModelScratch::default(),
+                );
+                assert_eq!(b, b_ref, "logits diverged: kernel {kernel:?} skip {weight_skip}");
+                assert_eq!(s.macs, s_ref.macs);
+                assert_eq!(s.digital_cycles, s_ref.digital_cycles);
+                assert_eq!(s.pcu_ops, s_ref.pcu_ops);
+                assert_eq!(s.levels, s_ref.levels);
+            }
         }
     });
 }
