@@ -9,7 +9,11 @@
 //!     and read `RunStats::traffic` — the workload-measured version of
 //!     (b), cross-checked row by row against the analytic model and
 //!     exported to `BENCH_traffic.json` (CI gates the ≥40% deep-layer
-//!     floor behind `PACIM_ENFORCE_TRAFFIC_REDUCTION`).
+//!     floor behind `PACIM_ENFORCE_TRAFFIC_REDUCTION`);
+//! (e) the traffic-priced multibank schedule (DESIGN.md §14): the λ
+//!     knob trading buffer-spill bits for digital replay cycles on the
+//!     same ResNet-18 shapes — the per-λ Pareto sweep lives in
+//!     `pacim tune` / `BENCH_tune.json`.
 
 #[path = "harness.rs"]
 mod harness;
@@ -107,6 +111,32 @@ fn main() {
 
     // ---- (d) measured dataplane traffic -----------------------------------
     measured_traffic_section(quick_mode(), &mut checks);
+
+    // ---- (e) traffic-priced multibank scheduling (λ knob) -----------------
+    println!("\n  (e) traffic-priced multibank schedule on ResNet-18 (DESIGN.md §14)");
+    let cfg = pacim::arch::MultiBankConfig { banks: 4, rows: 256, mwcs: 64 };
+    for lambda in [0.005, 0.02] {
+        let c = pacim::arch::compare_lambda(&shapes, "resnet18-cifar", &cfg, lambda, 16.0);
+        row(
+            &format!("lambda = {lambda}"),
+            "fewer bits, bounded cycles",
+            &format!(
+                "bits {:+.1}%  cycles {:+.1}%  ({} replayed)",
+                100.0 * (c.bits_priced as f64 / c.bits_cycles_only as f64 - 1.0),
+                100.0 * (c.cycles_priced as f64 / c.cycles_cycles_only as f64 - 1.0),
+                c.replayed_layers
+            ),
+        );
+        checks.claim(
+            c.bits_priced < c.bits_cycles_only,
+            "the priced schedule moves strictly fewer bits",
+        );
+        checks.claim(
+            c.cycles_priced as f64
+                <= c.cycles_cycles_only as f64 * pacim::util::benchfmt::TUNE_CYCLE_BOUND,
+            "the cycle premium stays inside the tune gate's bound",
+        );
+    }
     checks.finish("Fig. 7");
 }
 

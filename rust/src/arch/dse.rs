@@ -1,0 +1,414 @@
+//! Design-space exploration: the `pacim tune` sweep driver.
+//!
+//! The paper tunes its knobs one at a time — Fig. 6(b) picks the dynamic
+//! threshold map, §4.5 picks the bank tiling — but deployment has to pick
+//! them *jointly*: thresholds move accuracy and average digital cycles,
+//! bank/tile geometry moves cycles and bits, and the traffic price λ
+//! (see [`TrafficPrice`]) trades the two. This module enumerates that
+//! joint space with the `engine::EngineBuilder` front door, evaluates
+//! each point's (accuracy, cycles, bits moved) on a validation split, and
+//! returns the non-dominated Pareto front plus the λ-vs-cycles-only
+//! comparisons the CI gate (`util::benchfmt::enforce_tune_front`) prices.
+//!
+//! Axis economics: accuracy and measured average digital cycles depend
+//! only on the threshold map, so the sweep runs one engine evaluation per
+//! distinct map and reuses it across the (banks × rows × λ) cost grid —
+//! a full grid costs `thresholds` engine runs, not `points` of them.
+//!
+//! The first engine run doubles as the measured-vs-analytic cross-check:
+//! its [`TrafficLedger`](crate::memory::TrafficLedger) bit counts are
+//! recomputed per edge from layer geometry (the same closed form
+//! `benches/fig7_system.rs` asserts on) and both sums are carried into
+//! the report, where `validate_tune` requires them equal.
+
+use super::bank_logic::ThresholdSet;
+use super::multibank::{schedule_network_priced, MultiBankConfig, TrafficPrice};
+use super::tuner::candidate_grid;
+use crate::coordinator::model_shapes;
+use crate::engine::{EngineBuilder, EngineResult};
+use crate::memory::{activation_traffic, LayerTraffic};
+use crate::nn::{Model, PacConfig};
+use crate::workload::shapes::{LayerShape, LayerShapeKind};
+
+/// Sweep axes of the joint design space.
+#[derive(Debug, Clone)]
+pub struct DseAxes {
+    /// Bank counts (§4.5 tiling).
+    pub banks: Vec<usize>,
+    /// Rows per bank — the DP tile size a pass covers.
+    pub rows: Vec<usize>,
+    /// Dynamic-threshold maps; `None` is the static 16-cycle map.
+    pub thresholds: Vec<Option<ThresholdSet>>,
+    /// Traffic prices λ in cycles per bit; `0.0` is the cycles-only
+    /// schedule every other point is compared against.
+    pub lambdas: Vec<f64>,
+}
+
+impl DseAxes {
+    /// CI-sized grid: 3 threshold maps (3 engine evaluations) ×
+    /// 2 bank counts × 1 tile size × 3 λ rungs = 18 cost points.
+    pub fn quick() -> Self {
+        Self {
+            banks: vec![2, 4],
+            rows: vec![256],
+            thresholds: grid_thresholds(2),
+            lambdas: vec![0.0, 0.005, 0.02],
+        }
+    }
+
+    /// Full grid: 5 threshold maps × 5 bank counts × 2 tile sizes ×
+    /// 5 λ rungs = 250 cost points (still only 5 engine evaluations).
+    pub fn full() -> Self {
+        Self {
+            banks: vec![1, 2, 4, 8, 18],
+            rows: vec![128, 256],
+            thresholds: grid_thresholds(4),
+            lambdas: vec![0.0, 0.002, 0.005, 0.01, 0.02],
+        }
+    }
+
+    /// Number of cost points this grid enumerates.
+    pub fn points(&self) -> usize {
+        self.banks.len() * self.rows.len() * self.thresholds.len() * self.lambdas.len()
+    }
+}
+
+/// The static map (`None`) plus `n` interior samples of
+/// [`candidate_grid`]'s geometric threshold ladder, spread from
+/// conservative to aggressive.
+fn grid_thresholds(n: usize) -> Vec<Option<ThresholdSet>> {
+    let grid = candidate_grid(8);
+    let mut out = vec![None];
+    for k in 0..n {
+        if grid.is_empty() {
+            break;
+        }
+        let idx = (grid.len() * (k + 1)) / (n + 1);
+        let cand = grid[idx.min(grid.len() - 1)];
+        if !out.contains(&Some(cand)) {
+            out.push(Some(cand));
+        }
+    }
+    out
+}
+
+/// Sweep configuration: the axes, plus the workload whose shapes the
+/// priced schedule models. Accuracy comes from the evaluation split on
+/// `model`; cycles and bits come from pricing `workload` — a deep paper
+/// workload (default: ResNet-18) exposes the spill-vs-replay trade that
+/// shallow validation models cannot.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    pub axes: DseAxes,
+    /// Layer shapes the priced schedule is computed over.
+    pub workload: Vec<LayerShape>,
+    /// Human-readable workload label carried into the report.
+    pub workload_label: String,
+    /// Worker threads for the accuracy evaluations.
+    pub threads: usize,
+}
+
+/// One evaluated design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DsePoint {
+    pub banks: usize,
+    pub rows: usize,
+    /// `None` = static 16-cycle map.
+    pub thresholds: Option<ThresholdSet>,
+    /// Traffic price this point's schedule was selected under.
+    pub lambda: f64,
+    /// Top-1 accuracy on the validation split (threshold-dependent).
+    pub accuracy: f64,
+    /// Measured average digital cycles per output group.
+    pub avg_digital_cycles: f64,
+    /// Modeled cycles of the priced schedule over the workload.
+    pub cycles: u64,
+    /// Modeled bits moved (activation + spill) of the priced schedule.
+    pub bits: u64,
+}
+
+/// `a` dominates `b` iff it is at least as good on every objective
+/// (accuracy ↑, cycles ↓, bits ↓) and strictly better on at least one.
+pub fn dominates(a: &DsePoint, b: &DsePoint) -> bool {
+    let no_worse = a.accuracy >= b.accuracy && a.cycles <= b.cycles && a.bits <= b.bits;
+    no_worse && (a.accuracy > b.accuracy || a.cycles < b.cycles || a.bits < b.bits)
+}
+
+/// Indices (ascending) of the non-dominated points.
+///
+/// Deterministic — pure comparisons, no tolerance — and invariant to
+/// input order: membership depends only on each point's objective values,
+/// so permuting the input permutes the front the same way
+/// (property-tested in `tests/proptests.rs`).
+pub fn pareto_front(points: &[DsePoint]) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| {
+            !points
+                .iter()
+                .enumerate()
+                .any(|(j, p)| j != i && dominates(p, &points[i]))
+        })
+        .collect()
+}
+
+/// A λ-priced schedule next to its cycles-only baseline on one workload
+/// — the rows `enforce_tune_front` gates on (strictly fewer bits within
+/// a bounded cycle premium on at least one deep shape).
+#[derive(Debug, Clone)]
+pub struct LambdaComparison {
+    /// Workload label (e.g. `resnet18-cifar`).
+    pub workload: String,
+    pub banks: usize,
+    pub rows: usize,
+    /// The non-zero λ the priced side used.
+    pub lambda: f64,
+    /// Cycles of the λ=0 (cycles-only) schedule.
+    pub cycles_cycles_only: u64,
+    /// Bits moved by the λ=0 schedule.
+    pub bits_cycles_only: u64,
+    /// Cycles of the λ-priced schedule.
+    pub cycles_priced: u64,
+    /// Bits moved by the λ-priced schedule.
+    pub bits_priced: u64,
+    /// Layers the pricing flipped from spill to digital replay.
+    pub replayed_layers: usize,
+}
+
+/// Price one workload at `lambda` and at the λ=0 baseline.
+pub fn compare_lambda(
+    shapes: &[LayerShape],
+    label: &str,
+    cfg: &MultiBankConfig,
+    lambda: f64,
+    avg_digital_cycles: f64,
+) -> LambdaComparison {
+    let base_price = TrafficPrice {
+        lambda: 0.0,
+        avg_digital_cycles,
+        ..Default::default()
+    };
+    let price = TrafficPrice {
+        lambda,
+        avg_digital_cycles,
+        ..Default::default()
+    };
+    let base = schedule_network_priced(shapes, cfg, &base_price);
+    let priced = schedule_network_priced(shapes, cfg, &price);
+    LambdaComparison {
+        workload: label.to_string(),
+        banks: cfg.banks,
+        rows: cfg.rows,
+        lambda,
+        cycles_cycles_only: base.total_cycles(),
+        bits_cycles_only: base.total_bits(),
+        cycles_priced: priced.total_cycles(),
+        bits_priced: priced.total_bits(),
+        replayed_layers: priced.replayed_layers(),
+    }
+}
+
+/// Everything one sweep produces.
+#[derive(Debug, Clone)]
+pub struct DseOutcome {
+    /// Every evaluated point, in canonical axes order
+    /// (thresholds → rows → banks → λ).
+    pub points: Vec<DsePoint>,
+    /// Indices into `points` of the non-dominated front.
+    pub front: Vec<usize>,
+    /// λ-vs-cycles-only comparisons on the modeled workload, one per
+    /// bank count at the grid's largest λ.
+    pub comparisons: Vec<LambdaComparison>,
+    /// One-direction bits the ledger measured on the probe run.
+    pub measured_bits: u64,
+    /// Closed-form recomputation of the same edges from layer geometry.
+    pub analytic_bits: u64,
+}
+
+/// Recompute one measured ledger edge from layer geometry — the
+/// `benches/fig7_system.rs` cross-check formula.
+fn analytic_edge_bits(
+    shapes: &[LayerShape],
+    name: &str,
+    e: &LayerTraffic,
+    images: usize,
+) -> u64 {
+    let Some(g) = shapes.iter().find(|s| s.name == name) else {
+        return e.bits; // edge without a shape row: trust the measurement
+    };
+    let per_image_groups = match g.kind {
+        LayerShapeKind::Conv => g.out_pixels() as u64,
+        LayerShapeKind::Linear => 1,
+    };
+    let groups = per_image_groups * images as u64;
+    if e.encoded {
+        groups * activation_traffic(g.geom.out_c, e.msb_bits).pacim
+    } else {
+        groups * g.geom.out_c as u64 * 8
+    }
+}
+
+/// Run the sweep: one engine evaluation per distinct threshold map, the
+/// priced cost model across the full grid, Pareto filtering, and the
+/// measured-vs-analytic traffic cross-check on the probe run.
+pub fn sweep(
+    model: &Model,
+    images: &[&[u8]],
+    labels: &[usize],
+    cfg: &DseConfig,
+) -> EngineResult<DseOutcome> {
+    let eval_shapes = model_shapes(model);
+    let mut evals: Vec<(Option<ThresholdSet>, f64, f64)> = Vec::new();
+    let mut measured_bits = 0u64;
+    let mut analytic_bits = 0u64;
+    for (i, th) in cfg.axes.thresholds.iter().enumerate() {
+        let mut builder = EngineBuilder::new(model.clone()).pac(PacConfig::default());
+        if let Some(t) = th {
+            builder = builder.dynamic(*t);
+        }
+        let engine = builder.build()?;
+        let ev = engine.evaluate(images, labels, cfg.threads.max(1))?;
+        let avg = if ev.stats.levels.total() > 0 {
+            ev.stats.levels.average_cycles()
+        } else {
+            16.0 // static map: every group runs the full 16 cycles
+        };
+        if i == 0 {
+            for (name, e) in engine.traffic_rows(&ev.stats.traffic) {
+                measured_bits += e.bits;
+                analytic_bits += analytic_edge_bits(&eval_shapes, name, e, images.len());
+            }
+        }
+        evals.push((*th, ev.accuracy, avg));
+    }
+
+    let mut points = Vec::with_capacity(cfg.axes.points());
+    for (th, accuracy, avg) in &evals {
+        for &rows in &cfg.axes.rows {
+            for &banks in &cfg.axes.banks {
+                for &lambda in &cfg.axes.lambdas {
+                    let mb = MultiBankConfig { banks, rows, ..Default::default() };
+                    let price = TrafficPrice {
+                        lambda,
+                        avg_digital_cycles: *avg,
+                        ..Default::default()
+                    };
+                    let rep = schedule_network_priced(&cfg.workload, &mb, &price);
+                    points.push(DsePoint {
+                        banks,
+                        rows,
+                        thresholds: *th,
+                        lambda,
+                        accuracy: *accuracy,
+                        avg_digital_cycles: *avg,
+                        cycles: rep.total_cycles(),
+                        bits: rep.total_bits(),
+                    });
+                }
+            }
+        }
+    }
+    let front = pareto_front(&points);
+
+    let lambda_max = cfg.axes.lambdas.iter().copied().fold(0.0f64, f64::max);
+    let rows_max = cfg.axes.rows.iter().copied().max().unwrap_or(256);
+    let comparisons = if lambda_max > 0.0 {
+        cfg.axes
+            .banks
+            .iter()
+            .map(|&banks| {
+                let mb = MultiBankConfig { banks, rows: rows_max, ..Default::default() };
+                compare_lambda(&cfg.workload, &cfg.workload_label, &mb, lambda_max, 16.0)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    Ok(DseOutcome { points, front, comparisons, measured_bits, analytic_bits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::shapes::{resnet18, Resolution};
+    use crate::workload::synthetic_serving_workload;
+
+    fn point(accuracy: f64, cycles: u64, bits: u64) -> DsePoint {
+        DsePoint {
+            banks: 4,
+            rows: 256,
+            thresholds: None,
+            lambda: 0.0,
+            accuracy,
+            avg_digital_cycles: 16.0,
+            cycles,
+            bits,
+        }
+    }
+
+    #[test]
+    fn front_keeps_only_nondominated_points() {
+        let pts = vec![
+            point(0.90, 100, 100), // front: best accuracy
+            point(0.85, 50, 120),  // front: best cycles
+            point(0.85, 80, 60),   // front: best bits
+            point(0.84, 100, 130), // dominated by the first
+        ];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn duplicate_points_share_the_front() {
+        let pts = vec![point(0.9, 10, 10), point(0.9, 10, 10)];
+        assert_eq!(pareto_front(&pts), vec![0, 1]);
+    }
+
+    #[test]
+    fn grid_thresholds_start_static_and_stay_unique() {
+        let ths = grid_thresholds(4);
+        assert_eq!(ths[0], None);
+        assert!(ths.len() >= 3);
+        for (i, a) in ths.iter().enumerate() {
+            for b in ths.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn comparison_finds_the_lambda_trade_on_resnet18() {
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let mb = MultiBankConfig::default();
+        let c = compare_lambda(&shapes, "resnet18-cifar", &mb, 0.02, 16.0);
+        assert!(c.bits_priced < c.bits_cycles_only);
+        assert!(c.cycles_priced as f64 <= c.cycles_cycles_only as f64 * 1.10);
+        assert!(c.replayed_layers > 0);
+    }
+
+    #[test]
+    fn quick_sweep_produces_a_front_of_at_least_three() {
+        // End-to-end on a tiny synthetic split; the modeled workload is
+        // the deep paper shape so the λ rungs genuinely trade.
+        let (model, ds) = synthetic_serving_workload(7, 8, 16, 10, 12).expect("workload");
+        let images: Vec<&[u8]> = (0..ds.n).map(|i| ds.image(i)).collect();
+        let labels: Vec<usize> = (0..ds.n).map(|i| ds.label(i)).collect();
+        let cfg = DseConfig {
+            axes: DseAxes::quick(),
+            workload: resnet18(Resolution::Cifar, 10),
+            workload_label: "resnet18-cifar".into(),
+            threads: 2,
+        };
+        let out = sweep(&model, &images, &labels, &cfg).expect("sweep");
+        assert_eq!(out.points.len(), cfg.axes.points());
+        assert!(out.front.len() >= 3, "front: {:?}", out.front);
+        for &i in &out.front {
+            for &j in &out.front {
+                if i != j {
+                    assert!(!dominates(&out.points[i], &out.points[j]));
+                }
+            }
+        }
+        assert_eq!(out.measured_bits, out.analytic_bits);
+        assert!(out.comparisons.iter().any(|c| c.bits_priced < c.bits_cycles_only));
+    }
+}

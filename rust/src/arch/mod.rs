@@ -13,6 +13,7 @@
 
 pub mod bank_logic;
 pub mod dcim;
+pub mod dse;
 pub mod encoder;
 pub mod multibank;
 pub mod pcu;
@@ -20,9 +21,15 @@ pub mod tuner;
 
 pub use bank_logic::{classify, spec_normalized, spec_score, LevelHistogram, ThresholdSet};
 pub use dcim::{DCimBank, DCimConfig, DCimStats};
+pub use dse::{
+    compare_lambda, dominates, pareto_front, sweep, DseAxes, DseConfig, DseOutcome, DsePoint,
+    LambdaComparison,
+};
 pub use encoder::{EncodingMode, SparsityEncoder};
 pub use multibank::{
-    schedule_network_multibank, schedule_network_multibank_with, MultiBankConfig, MultiBankReport,
+    schedule_layer_priced, schedule_network_multibank, schedule_network_multibank_with,
+    schedule_network_priced, schedule_network_priced_with, MultiBankConfig, MultiBankReport,
+    PricedBankReport, PricedSchedule, SpillPolicy, TrafficPrice,
 };
 pub use pcu::{Pce, PceStats, Pcu};
 pub use tuner::{candidate_grid, tune, TunePoint, TuneResult};

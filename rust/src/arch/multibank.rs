@@ -13,9 +13,21 @@
 //! schedule, counts buffer checkpoints (zero when the DP tiles of a group
 //! fit the bank set), and quantifies the §4.5 claim that multi-bank tiling
 //! eliminates the intermediate encoding buffer.
+//!
+//! On top of the cycles-only staging sits the *traffic-priced* scheduler
+//! ([`schedule_network_priced`]): every candidate bank assignment is scored
+//! `cycles + λ · bits`, where the bits term covers both the inter-layer
+//! activation traffic (the per-layer share of
+//! [`CostEstimate::act_bits`](crate::coordinator::CostEstimate)) and the
+//! checkpoint bits an interrupted group spills to the intermediate
+//! encoding buffer. At `λ = 0` the priced schedule is bit-identical to
+//! [`schedule_network_multibank`]; at `λ > 0` the scheduler may replay
+//! interrupted groups digitally instead of spilling them, trading a
+//! bounded cycle premium for strictly fewer bits moved.
 
+use crate::memory::traffic::activation_traffic;
 use crate::util::Parallelism;
-use crate::workload::shapes::LayerShape;
+use crate::workload::shapes::{LayerShape, LayerShapeKind};
 
 /// Multi-bank configuration.
 #[derive(Debug, Clone, Copy)]
@@ -148,14 +160,290 @@ pub fn schedule_network_multibank_with(
 }
 
 /// Smallest bank count that removes the buffer for a whole network.
-pub fn min_banks_for_buffer_removal(shapes: &[LayerShape], rows: usize, mwcs: usize) -> usize {
-    let max_row_tiles = shapes
+/// Only the DP depth matters — MWC width shapes rounds, not checkpoints.
+pub fn min_banks_for_buffer_removal(shapes: &[LayerShape], rows: usize, _mwcs: usize) -> usize {
+    shapes
         .iter()
         .map(|s| (s.dp_len() + rows - 1) / rows)
         .max()
-        .unwrap_or(1);
-    let _ = mwcs;
-    max_row_tiles
+        .unwrap_or(1)
+}
+
+// --- Traffic-priced scheduling (the λ knob) --------------------------------
+
+/// Buffer-port cycles per spilled checkpoint (one write + one read
+/// transaction against the intermediate encoding buffer).
+pub const SPILL_CYCLES: f64 = 2.0;
+
+/// Pricing knobs for the traffic-aware schedule.
+///
+/// `λ` converts bits moved into schedule cost (cycles per bit), so one
+/// scalar trades the two objectives the paper optimizes separately:
+/// bit-serial cycles (§5 dynamic configuration) and bits moved (§4.4
+/// sparsity encoding, §4.5 bank tiling). `λ = 0` is the documented
+/// contract for "cycles only": [`schedule_layer_priced`] then returns the
+/// legacy [`schedule_layer_multibank`] staging bit for bit.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficPrice {
+    /// Cost weight in cycles per bit moved. `0.0` = cycles-only.
+    pub lambda: f64,
+    /// Binary MSB planes carried per activation (paper default 4).
+    pub msb_bits: u32,
+    /// Average digital bit-serial cycles per output group (16.0 static,
+    /// ≈12 with the dynamic map); scales the compute and replay terms.
+    pub avg_digital_cycles: f64,
+}
+
+impl Default for TrafficPrice {
+    fn default() -> Self {
+        Self {
+            lambda: 0.0,
+            msb_bits: 4,
+            avg_digital_cycles: 16.0,
+        }
+    }
+}
+
+/// What an interrupted output group does while its remaining DP row
+/// tiles are loaded into the bank set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillPolicy {
+    /// Checkpoint the group's partial encoding state to the intermediate
+    /// buffer and restore it next pass: cheap in cycles
+    /// ([`SPILL_CYCLES`] each), expensive in bits (the encoded group
+    /// state travels to the buffer and back).
+    Spill,
+    /// Re-broadcast the group digitally when its row tiles return
+    /// instead of spilling: zero buffer bits, but
+    /// [`TrafficPrice::avg_digital_cycles`] extra cycles per
+    /// interruption.
+    Replay,
+}
+
+/// One layer's traffic-priced schedule: the selected §4.5 staging plus
+/// the modeled cycle and bit costs the selection was scored on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PricedSchedule {
+    /// The staging this pricing selected, in cycles-only schedule terms.
+    /// At `λ = 0` this is bit-identical to [`schedule_layer_multibank`].
+    pub schedule: MultiBankSchedule,
+    /// Banks held co-resident per output group (`λ = 0` uses
+    /// `min(row_tiles, banks)`, the legacy staging).
+    pub group_banks: usize,
+    /// How interrupted groups are handled (always [`SpillPolicy::Spill`]
+    /// at `λ = 0`).
+    pub policy: SpillPolicy,
+    /// Group interruptions: `(passes − 1)` per in-flight output pixel.
+    pub interruptions: u64,
+    /// Modeled cycles: bit-serial compute + one row-write stall per bank
+    /// row per update round + the spill/replay penalty.
+    pub cycles: u64,
+    /// Inter-layer activation bits moved (write + read) — this layer's
+    /// share of [`CostEstimate::act_bits`](crate::coordinator::CostEstimate).
+    pub act_bits: u64,
+    /// Checkpoint bits spilled to the intermediate buffer (zero when the
+    /// layer never interrupts or replays instead).
+    pub spill_bits: u64,
+}
+
+impl PricedSchedule {
+    /// Total bits this layer's schedule moves (activation + spill).
+    pub fn total_bits(&self) -> u64 {
+        self.act_bits + self.spill_bits
+    }
+
+    /// The λ-weighted score candidates compete on: `cycles + λ · bits`.
+    pub fn score(&self, lambda: f64) -> f64 {
+        self.cycles as f64 + lambda * self.total_bits() as f64
+    }
+}
+
+/// Build one candidate staging: `group_banks` banks co-resident per
+/// output group, interrupted groups handled per `policy`.
+fn priced_candidate(
+    shape: &LayerShape,
+    encoded: bool,
+    cfg: &MultiBankConfig,
+    price: &TrafficPrice,
+    group_banks: usize,
+    policy: SpillPolicy,
+) -> PricedSchedule {
+    let k = shape.dp_len();
+    let row_tiles = (k + cfg.rows - 1) / cfg.rows;
+    let oc_tiles = (shape.geom.out_c + cfg.mwcs - 1) / cfg.mwcs;
+    let pixels = shape.out_pixels() as u64;
+    // Generalized §4.5 staging: `passes` sweeps over the DP with
+    // `group_banks` banks per group, `concurrent` groups side by side.
+    // `group_banks = min(row_tiles, banks)` reproduces both branches of
+    // `schedule_layer_multibank` exactly.
+    let passes = row_tiles.div_ceil(group_banks.max(1));
+    let concurrent = (cfg.banks / group_banks.max(1)).max(1);
+    let rounds = (passes * oc_tiles.div_ceil(concurrent)).max(1);
+    let interruptions = (passes as u64 - 1) * pixels;
+
+    // Bits: same write+read closed form as `coordinator::schedule_layer`
+    // (one group per output pixel for convs, one per image for linears).
+    let groups = match shape.kind {
+        LayerShapeKind::Conv => pixels,
+        LayerShapeKind::Linear => 1,
+    };
+    let t = activation_traffic(shape.geom.out_c, price.msb_bits);
+    let group_bits = if encoded { t.pacim } else { t.baseline };
+    let act_bits = 2 * groups * group_bits;
+    let spill_bits = match policy {
+        SpillPolicy::Spill => interruptions * 2 * group_bits,
+        SpillPolicy::Replay => 0,
+    };
+
+    let compute =
+        (pixels * row_tiles as u64 * oc_tiles as u64) as f64 * price.avg_digital_cycles;
+    let penalty = match policy {
+        SpillPolicy::Spill => interruptions as f64 * SPILL_CYCLES,
+        SpillPolicy::Replay => interruptions as f64 * price.avg_digital_cycles,
+    };
+    let cycles = (compute + rounds as f64 * cfg.rows as f64 + penalty) as u64;
+
+    PricedSchedule {
+        schedule: MultiBankSchedule {
+            layer: shape.name.clone(),
+            row_tiles,
+            oc_tiles,
+            update_rounds: rounds,
+            buffer_checkpoints: match policy {
+                SpillPolicy::Spill => interruptions,
+                SpillPolicy::Replay => 0,
+            },
+            encoding_uninterrupted: passes == 1,
+        },
+        group_banks,
+        policy,
+        interruptions,
+        cycles,
+        act_bits,
+        spill_bits,
+    }
+}
+
+/// Traffic-priced schedule for one layer.
+///
+/// Candidates range over group width (`1..=min(row_tiles, banks)` banks
+/// co-resident per output group) × spill policy, scored
+/// `cycles + λ · (act_bits + spill_bits)`. Selection is deterministic:
+/// the search starts from the legacy staging and only a *strictly*
+/// better score displaces it, so ties keep the cycles-only choice.
+///
+/// Contract: `price.lambda == 0.0` returns the legacy
+/// [`schedule_layer_multibank`] staging bit for bit (property-tested).
+pub fn schedule_layer_priced(
+    shape: &LayerShape,
+    encoded: bool,
+    cfg: &MultiBankConfig,
+    price: &TrafficPrice,
+) -> PricedSchedule {
+    let k = shape.dp_len();
+    let row_tiles = (k + cfg.rows - 1) / cfg.rows;
+    let legacy_banks = row_tiles.min(cfg.banks).max(1);
+    let legacy = priced_candidate(shape, encoded, cfg, price, legacy_banks, SpillPolicy::Spill);
+    debug_assert_eq!(legacy.schedule, schedule_layer_multibank(shape, cfg));
+    if price.lambda <= 0.0 {
+        return legacy;
+    }
+    let mut best = legacy;
+    for group_banks in (1..=legacy_banks).rev() {
+        for policy in [SpillPolicy::Spill, SpillPolicy::Replay] {
+            let cand = priced_candidate(shape, encoded, cfg, price, group_banks, policy);
+            if policy == SpillPolicy::Replay && cand.interruptions == 0 {
+                continue; // identical to Spill when nothing interrupts
+            }
+            if cand.score(price.lambda) < best.score(price.lambda) {
+                best = cand;
+            }
+        }
+    }
+    best
+}
+
+/// Network-level traffic-priced schedule.
+#[derive(Debug, Clone)]
+pub struct PricedBankReport {
+    /// The λ the schedules were selected under (cycles per bit).
+    pub lambda: f64,
+    /// Per-layer selections, in network order.
+    pub schedules: Vec<PricedSchedule>,
+}
+
+impl PricedBankReport {
+    /// Total modeled cycles across the network.
+    pub fn total_cycles(&self) -> u64 {
+        self.schedules.iter().map(|s| s.cycles).sum()
+    }
+
+    /// Total inter-layer activation bits (write + read). With every edge
+    /// encoded this equals
+    /// [`CostEstimate::act_bits`](crate::coordinator::CostEstimate).
+    pub fn total_act_bits(&self) -> u64 {
+        self.schedules.iter().map(|s| s.act_bits).sum()
+    }
+
+    /// Total checkpoint bits spilled to the intermediate buffer.
+    pub fn total_spill_bits(&self) -> u64 {
+        self.schedules.iter().map(|s| s.spill_bits).sum()
+    }
+
+    /// Total bits moved — the quantity λ prices against cycles.
+    pub fn total_bits(&self) -> u64 {
+        self.total_act_bits() + self.total_spill_bits()
+    }
+
+    /// Layers that replay interrupted groups instead of spilling them.
+    pub fn replayed_layers(&self) -> usize {
+        self.schedules
+            .iter()
+            .filter(|s| s.policy == SpillPolicy::Replay && s.interruptions > 0)
+            .count()
+    }
+
+    /// Strip the pricing: the §4.5 staging view of this schedule. At
+    /// `λ = 0` this is bit-identical to [`schedule_network_multibank`].
+    pub fn to_multibank(&self) -> MultiBankReport {
+        MultiBankReport {
+            schedules: self.schedules.iter().map(|s| s.schedule.clone()).collect(),
+        }
+    }
+}
+
+/// Traffic-priced schedule for a whole network, treating every
+/// inter-layer edge as sparsity-encoded — the analytic convention
+/// [`CostEstimate::act_bits`](crate::coordinator::CostEstimate) uses, so
+/// [`PricedBankReport::total_act_bits`] cross-checks against it exactly.
+/// Pass explicit per-edge flags (e.g. from the measured ledger) through
+/// [`schedule_network_priced_with`] instead.
+pub fn schedule_network_priced(
+    shapes: &[LayerShape],
+    cfg: &MultiBankConfig,
+    price: &TrafficPrice,
+) -> PricedBankReport {
+    let encoded = vec![true; shapes.len()];
+    schedule_network_priced_with(shapes, &encoded, cfg, price, &Parallelism::auto())
+}
+
+/// Traffic-priced schedule with explicit per-layer encode flags (the
+/// DESIGN.md §12 still-dense edges price at the 8-bit dense baseline)
+/// and an explicit parallelism policy.
+pub fn schedule_network_priced_with(
+    shapes: &[LayerShape],
+    encoded: &[bool],
+    cfg: &MultiBankConfig,
+    price: &TrafficPrice,
+    par: &Parallelism,
+) -> PricedBankReport {
+    assert_eq!(shapes.len(), encoded.len(), "one encode flag per layer");
+    PricedBankReport {
+        lambda: price.lambda,
+        schedules: par.map_collect(shapes.len(), |i| {
+            schedule_layer_priced(&shapes[i], encoded[i], cfg, price)
+        }),
+    }
 }
 
 #[cfg(test)]
@@ -240,5 +528,76 @@ mod tests {
         let shapes = resnet18(Resolution::Cifar, 10);
         // Deepest CONV: 3x3x512 = 4608 → 18 tiles of 256.
         assert_eq!(min_banks_for_buffer_removal(&shapes, 256, 64), 18);
+    }
+
+    #[test]
+    fn priced_lambda_zero_matches_cycles_only_schedule() {
+        // The λ=0 contract, on both paper resolutions and several bank
+        // counts (the proptest covers random shapes).
+        for res in [Resolution::Cifar, Resolution::ImageNet] {
+            let shapes = resnet18(res, 10);
+            for banks in [1usize, 2, 4, 8, 18] {
+                let cfg = MultiBankConfig { banks, ..Default::default() };
+                let priced =
+                    schedule_network_priced(&shapes, &cfg, &TrafficPrice::default());
+                assert_eq!(priced.to_multibank(), schedule_network_multibank(&shapes, &cfg));
+            }
+        }
+    }
+
+    #[test]
+    fn priced_act_bits_match_cost_estimate() {
+        // Cross-check contract: with every edge encoded, the priced
+        // schedule's activation bits equal the analytic
+        // `CostEstimate::act_bits` for the same msb width.
+        use crate::coordinator::{estimate_image_cost, ScheduleConfig};
+        use crate::energy::EnergyModel;
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let rep = schedule_network_priced(
+            &shapes,
+            &MultiBankConfig::default(),
+            &TrafficPrice::default(),
+        );
+        let est =
+            estimate_image_cost(&shapes, &ScheduleConfig::pacim_default(), &EnergyModel::default());
+        assert_eq!(rep.total_act_bits(), est.act_bits);
+    }
+
+    #[test]
+    fn lambda_trades_spill_bits_for_replay_cycles() {
+        // ResNet-18/CIFAR on 4 banks interrupts its ≥128-channel stages
+        // (up to 18 row tiles); a λ above the per-layer flip point
+        // 14 / (2·t.pacim) replays them: strictly fewer bits at a small
+        // bounded cycle premium. This is the CI gate's claim.
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let cfg = MultiBankConfig::default();
+        let base = schedule_network_priced(&shapes, &cfg, &TrafficPrice::default());
+        let price = TrafficPrice { lambda: 0.02, ..Default::default() };
+        let priced = schedule_network_priced(&shapes, &cfg, &price);
+        assert!(base.total_spill_bits() > 0, "λ=0 must spill on deep layers");
+        assert!(priced.replayed_layers() > 0);
+        assert!(priced.total_bits() < base.total_bits());
+        assert!(priced.total_cycles() as f64 <= base.total_cycles() as f64 * 1.10);
+        // Activation bits are schedule-invariant; only spills moved.
+        assert_eq!(priced.total_act_bits(), base.total_act_bits());
+    }
+
+    #[test]
+    fn dense_edges_price_at_eight_bit_baseline() {
+        // DESIGN.md §12: still-dense edges move 8 bits per element.
+        let shapes = vec![
+            LayerShape::conv("enc", 64, 128, 8, 3, 1),
+            LayerShape::linear("hidden", 512, 256),
+        ];
+        let rep = schedule_network_priced_with(
+            &shapes,
+            &[true, false],
+            &MultiBankConfig::default(),
+            &TrafficPrice::default(),
+            &Parallelism::off(),
+        );
+        let t = activation_traffic(128, 4);
+        assert_eq!(rep.schedules[0].act_bits, 2 * shapes[0].out_pixels() as u64 * t.pacim);
+        assert_eq!(rep.schedules[1].act_bits, 2 * 8 * 256);
     }
 }

@@ -25,10 +25,16 @@ pub struct TuneResult {
     pub trace: Vec<TunePoint>,
 }
 
-/// Grid-search candidate generator: geometric ladders over [lo, hi].
-/// Candidates always satisfy th0 ≤ th1 ≤ th2.
+/// Grid-search candidate generator: geometric ladders over the
+/// `0.02 · 1.6^i` step sequence, capped below 0.9.
+///
+/// Candidates always satisfy `th0 ≤ th1 ≤ th2` and are unique: the
+/// defensive `t2.min(1.0)` clamp can collapse distinct ladder rungs onto
+/// the same `ThresholdSet`, so equal candidates are dropped (evaluating
+/// a duplicate would waste a full validation-split pass in [`tune`] and
+/// in the `arch::dse` sweep, which both iterate this grid).
 pub fn candidate_grid(levels: usize) -> Vec<ThresholdSet> {
-    let mut out = Vec::new();
+    let mut out: Vec<ThresholdSet> = Vec::new();
     let steps: Vec<f64> = (0..levels)
         .map(|i| 0.02 * 1.6f64.powi(i as i32))
         .take_while(|&v| v < 0.9)
@@ -36,8 +42,10 @@ pub fn candidate_grid(levels: usize) -> Vec<ThresholdSet> {
     for (i, &t0) in steps.iter().enumerate() {
         for (j, &t1) in steps.iter().enumerate().skip(i) {
             for &t2 in steps.iter().skip(j) {
-                out.push(ThresholdSet::new(t0, t1, t2.min(1.0)));
-                let _ = j;
+                let cand = ThresholdSet::new(t0, t1, t2.min(1.0));
+                if !out.contains(&cand) {
+                    out.push(cand);
+                }
             }
         }
     }
@@ -106,6 +114,24 @@ mod tests {
         assert!(grid.len() > 20);
         for th in &grid {
             assert!(th.th0 <= th.th1 && th.th1 <= th.th2);
+        }
+    }
+
+    #[test]
+    fn grid_candidates_are_unique() {
+        // The t2.min(1.0) clamp must not leak duplicate candidates —
+        // each grid entry costs a full validation pass to evaluate.
+        for levels in [4usize, 8, 16, 32] {
+            let grid = candidate_grid(levels);
+            for (i, a) in grid.iter().enumerate() {
+                for b in grid.iter().skip(i + 1) {
+                    assert_ne!(
+                        (a.th0, a.th1, a.th2),
+                        (b.th0, b.th1, b.th2),
+                        "duplicate candidate at levels={levels}"
+                    );
+                }
+            }
         }
     }
 

@@ -70,6 +70,30 @@ impl ScheduleConfig {
             msb_bits: 8,
         }
     }
+
+    /// Bank geometry view of this schedule, for the §4.5 multi-bank and
+    /// traffic-priced schedulers in [`crate::arch::multibank`].
+    pub fn multibank(&self) -> crate::arch::MultiBankConfig {
+        crate::arch::MultiBankConfig {
+            banks: self.banks,
+            rows: self.rows,
+            mwcs: self.mwcs,
+        }
+    }
+
+    /// Traffic-pricing view of this schedule: the λ knob plus this
+    /// config's MSB width and measured digital cycle average, ready for
+    /// [`crate::arch::schedule_network_priced`]. With `lambda = 0.0` the
+    /// priced schedule reproduces the cycles-only §4.5 staging, and its
+    /// per-layer `act_bits` sum to [`CostEstimate::act_bits`] (both are
+    /// the same `activation_traffic` closed form).
+    pub fn traffic_price(&self, lambda: f64) -> crate::arch::TrafficPrice {
+        crate::arch::TrafficPrice {
+            lambda,
+            msb_bits: self.msb_bits,
+            avg_digital_cycles: self.avg_digital_cycles,
+        }
+    }
 }
 
 /// Per-layer schedule report.
@@ -401,5 +425,20 @@ mod tests {
         let e_pac = pac.compute_energy_pj(&m) + pac.memory_energy_pj(&m, true);
         let e_dig = dig.compute_energy_pj(&m) + dig.memory_energy_pj(&m, false);
         assert!(e_pac < e_dig, "pacim {e_pac} pJ vs digital {e_dig} pJ");
+    }
+
+    #[test]
+    fn traffic_price_bridge_reproduces_act_bits() {
+        // The ScheduleConfig → TrafficPrice bridge must keep the two
+        // traffic models in lock-step: the priced multibank schedule's
+        // activation bits equal the analytic CostEstimate's, and λ=0
+        // keeps the cycles-only staging.
+        use crate::arch::{schedule_network_multibank, schedule_network_priced};
+        let shapes = resnet18(Resolution::Cifar, 10);
+        let cfg = ScheduleConfig { banks: 4, ..ScheduleConfig::pacim_default() };
+        let est = estimate_image_cost(&shapes, &cfg, &EnergyModel::default());
+        let rep = schedule_network_priced(&shapes, &cfg.multibank(), &cfg.traffic_price(0.0));
+        assert_eq!(rep.total_act_bits(), est.act_bits);
+        assert_eq!(rep.to_multibank(), schedule_network_multibank(&shapes, &cfg.multibank()));
     }
 }

@@ -191,6 +191,14 @@ impl Engine {
         self.inner.cost
     }
 
+    /// Layer shapes of this engine's model, in program order — the input
+    /// the multibank / traffic-priced schedulers and the `arch::dse`
+    /// sweep consume (same extraction as
+    /// [`model_shapes`](crate::coordinator::model_shapes)).
+    pub fn layer_shapes(&self) -> Vec<crate::workload::LayerShape> {
+        crate::coordinator::model_shapes(&self.inner.model)
+    }
+
     /// Join a measured [`TrafficLedger`] (from
     /// [`RunStats::traffic`](crate::nn::RunStats)) with this engine's
     /// compute-layer names: one `(name, entry)` row per inter-layer

@@ -16,6 +16,12 @@
 //!                                # (artifacts when built, synthetic
 //!                                # workload otherwise; --pjrt needs the
 //!                                # `pjrt` feature + artifacts)
+//! pacim tune [--quick] [--images N] [--lambda X] [--out PATH]
+//!            [--model resnet18|resnet50|vgg16] [--res cifar|imagenet]
+//!                                # design-space autotune: sweep threshold
+//!                                # maps x banks x tile rows x traffic
+//!                                # price λ, print + emit the Pareto
+//!                                # front as BENCH_tune.json
 //! ```
 
 use pacim::coordinator::{schedule_model, ScheduleConfig};
@@ -38,6 +44,28 @@ fn has_flag(args: &[String], flag: &str) -> bool {
     args.iter().any(|a| a == flag)
 }
 
+/// Every subcommand with its one-line description — the single source
+/// the usage text renders, so an unknown subcommand always shows the
+/// full menu (pinned by `tests/cli_usage.rs`).
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("info", "artifact + configuration summary"),
+    ("map", "print the digital/sparsity computing map"),
+    ("rmse", "PAC Monte-Carlo error analysis"),
+    ("simulate", "schedule a workload; print cycles/energy/traffic"),
+    ("accuracy", "exact vs PAC accuracy on the built artifacts"),
+    ("serve", "serve inference via the PAC-native executor pool"),
+    ("tune", "design-space autotune: Pareto front over thresholds x banks x tiles x lambda"),
+];
+
+fn usage() {
+    let mut s = String::from("usage: pacim <subcommand> [options]\n\nsubcommands:\n");
+    for (name, desc) in SUBCOMMANDS {
+        s.push_str(&format!("  pacim {name:<9} {desc}\n"));
+    }
+    s.push_str("\nsee rust/src/main.rs header for per-subcommand options");
+    eprintln!("{s}");
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
@@ -48,11 +76,9 @@ fn main() -> anyhow::Result<()> {
         "simulate" => simulate(&args),
         "accuracy" => accuracy(&args),
         "serve" => serve(&args),
+        "tune" => tune(&args),
         _ => {
-            eprintln!(
-                "usage: pacim <info|map|rmse|simulate|accuracy|serve> [options]\n\
-                 see rust/src/main.rs header for options"
-            );
+            usage();
             Ok(())
         }
     }
@@ -208,6 +234,162 @@ fn accuracy(args: &[String]) -> anyhow::Result<()> {
             ev_p.stats.levels.cycle_reduction_vs_digital() * 100.0
         );
     }
+    Ok(())
+}
+
+/// `pacim tune` — joint design-space autotune (see `pacim::arch::dse`).
+///
+/// Accuracy and the average digital cycle count are *measured* on a
+/// validation split (built artifacts when present, the synthetic
+/// serving workload otherwise — one engine evaluation per distinct
+/// threshold map); cycles and bits are *modeled* by pricing the chosen
+/// paper workload's multibank schedule at every grid point. Prints the
+/// non-dominated Pareto front plus the λ-vs-cycles-only schedule
+/// comparison, and emits the schema-gated `BENCH_tune.json`
+/// (`pacim::util::benchfmt::TuneReport`).
+fn tune(args: &[String]) -> anyhow::Result<()> {
+    use pacim::arch::dse::{sweep, DseAxes, DseConfig};
+    use pacim::util::benchfmt::{validate_tune, TunePointBench, TuneReport, TuneScheduleBench};
+
+    let quick = has_flag(args, "--quick")
+        || std::env::var("PACIM_BENCH_QUICK")
+            .ok()
+            .is_some_and(|v| v != "0" && !v.is_empty());
+    let n_images: usize = arg_value(args, "--images")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(if quick { 48 } else { 200 });
+    let lambda: Option<f64> = arg_value(args, "--lambda").map(|s| s.parse()).transpose()?;
+    let out_path = arg_value(args, "--out").unwrap_or_else(|| "BENCH_tune.json".into());
+    let wl_name = arg_value(args, "--model").unwrap_or_else(|| "resnet18".into());
+    let res = match arg_value(args, "--res").as_deref() {
+        Some("imagenet") => Resolution::ImageNet,
+        _ => Resolution::Cifar,
+    };
+    let classes = if res == Resolution::ImageNet { 1000 } else { 10 };
+    let workload = match wl_name.as_str() {
+        "resnet18" => resnet18(res, classes),
+        "resnet50" => resnet50(res, classes),
+        "vgg16" => vgg16_bn(res, classes),
+        other => anyhow::bail!("unknown model '{other}'"),
+    };
+    let workload_label = format!(
+        "{wl_name}-{}",
+        if res == Resolution::ImageNet { "imagenet" } else { "cifar" }
+    );
+
+    let (model, ds, source) = serving_workload();
+    let n = n_images.min(ds.n).max(1);
+    let images: Vec<&[u8]> = (0..n).map(|i| ds.image(i)).collect();
+    let labels: Vec<usize> = (0..n).map(|i| ds.label(i)).collect();
+    let threads = std::thread::available_parallelism()?.get();
+
+    let mut axes = if quick { DseAxes::quick() } else { DseAxes::full() };
+    if let Some(l) = lambda {
+        anyhow::ensure!(l > 0.0, "--lambda must be positive");
+        axes.lambdas = vec![0.0, l * 0.25, l];
+    }
+    println!(
+        "tune: {} grid points ({} engine evals x {n} images) | workload {workload_label} | \
+         eval model {} ({source})",
+        axes.points(),
+        axes.thresholds.len(),
+        model.name
+    );
+    let cfg = DseConfig { axes, workload, workload_label: workload_label.clone(), threads };
+    let out = sweep(&model, &images, &labels, &cfg)?;
+
+    println!("Pareto front: {} of {} points non-dominated", out.front.len(), out.points.len());
+    println!(
+        "  {:<24} {:>5} {:>5} {:>7} {:>7} {:>7} {:>13} {:>13}",
+        "thresholds", "banks", "rows", "lambda", "acc%", "avgcyc", "cycles", "bits"
+    );
+    for &i in &out.front {
+        let p = &out.points[i];
+        let th = p
+            .thresholds
+            .map(|t| format!("[{:.3} {:.3} {:.3}]", t.th0, t.th1, t.th2))
+            .unwrap_or_else(|| "static".into());
+        println!(
+            "  {th:<24} {:>5} {:>5} {:>7.3} {:>6.2}% {:>7.2} {:>13} {:>13}",
+            p.banks,
+            p.rows,
+            p.lambda,
+            p.accuracy * 100.0,
+            p.avg_digital_cycles,
+            p.cycles,
+            p.bits
+        );
+    }
+    for c in &out.comparisons {
+        let bits_delta = 100.0 * (c.bits_priced as f64 / c.bits_cycles_only as f64 - 1.0);
+        let cyc_delta = 100.0 * (c.cycles_priced as f64 / c.cycles_cycles_only as f64 - 1.0);
+        println!(
+            "lambda {:.3} on {} (banks {}, rows {}): bits {} -> {} ({bits_delta:+.1}%), \
+             cycles {} -> {} ({cyc_delta:+.1}%), {} layer(s) replayed",
+            c.lambda,
+            c.workload,
+            c.banks,
+            c.rows,
+            c.bits_cycles_only,
+            c.bits_priced,
+            c.cycles_cycles_only,
+            c.cycles_priced,
+            c.replayed_layers
+        );
+    }
+    println!(
+        "traffic cross-check: measured {} bits, analytic {} bits",
+        out.measured_bits, out.analytic_bits
+    );
+    if source == "synthetic" {
+        println!("note: synthetic weights — accuracy is noise; cycles/bits are real");
+    }
+
+    let report = TuneReport {
+        bench: "tune".into(),
+        quick,
+        model: format!("{}-{source}", model.name),
+        workload: workload_label,
+        images: n,
+        points: out
+            .points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| TunePointBench {
+                banks: p.banks,
+                rows: p.rows,
+                thresholds: p.thresholds.map(|t| [t.th0, t.th1, t.th2]),
+                lambda: p.lambda,
+                accuracy: p.accuracy,
+                avg_digital_cycles: p.avg_digital_cycles,
+                cycles: p.cycles,
+                bits: p.bits,
+                on_front: out.front.contains(&i),
+            })
+            .collect(),
+        schedules: out
+            .comparisons
+            .iter()
+            .map(|c| TuneScheduleBench {
+                workload: c.workload.clone(),
+                banks: c.banks,
+                rows: c.rows,
+                lambda: c.lambda,
+                cycles_cycles_only: c.cycles_cycles_only,
+                bits_cycles_only: c.bits_cycles_only,
+                cycles_priced: c.cycles_priced,
+                bits_priced: c.bits_priced,
+                replayed_layers: c.replayed_layers,
+            })
+            .collect(),
+        measured_bits: out.measured_bits,
+        analytic_bits: out.analytic_bits,
+    };
+    let json = serde_json::to_string_pretty(&report)?;
+    validate_tune(&json).map_err(|e| anyhow::anyhow!("BENCH_tune self-check failed: {e}"))?;
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {out_path}");
     Ok(())
 }
 

@@ -1,11 +1,12 @@
 //! Machine-readable bench-artifact schemas.
 //!
-//! CI uploads three JSON artifacts per run — `BENCH_hotpath.json`
+//! CI uploads four JSON artifacts per run — `BENCH_hotpath.json`
 //! (`benches/perf_hotpath.rs`), `BENCH_serve.json`
-//! (`examples/loadgen.rs`), and `BENCH_traffic.json`
+//! (`examples/loadgen.rs`), `BENCH_traffic.json`
 //! (`benches/fig7_system.rs`, the measured sparsity-encoded dataplane
-//! ledger) — to track the perf trajectory across PRs. Regression gating
-//! only works if the files stay machine-readable, so the writers
+//! ledger), and `BENCH_tune.json` (`pacim tune`, the design-space
+//! Pareto front) — to track the perf trajectory across PRs. Regression
+//! gating only works if the files stay machine-readable, so the writers
 //! serialize *these* structs and `tests/bench_schema.rs` re-parses the
 //! emitted files with `deny_unknown_fields`: any schema drift (renamed,
 //! added, or removed field) fails the build instead of silently
@@ -431,6 +432,183 @@ pub fn enforce_simd_floor(r: &HotpathReport) -> Result<(), String> {
     Ok(())
 }
 
+/// One evaluated design point (a `BENCH_tune.json` row): a
+/// (threshold map × bank count × tile size × λ) configuration with its
+/// measured accuracy and modeled schedule cost.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct TunePointBench {
+    pub banks: usize,
+    /// Rows per bank (DP tile size).
+    pub rows: usize,
+    /// `[th0, th1, th2]` dynamic map; `null` = the static 16-cycle map.
+    pub thresholds: Option<[f64; 3]>,
+    /// Traffic price in cycles per bit (0 = cycles-only schedule).
+    pub lambda: f64,
+    /// Top-1 accuracy on the validation split.
+    pub accuracy: f64,
+    /// Measured average digital cycles per output group.
+    pub avg_digital_cycles: f64,
+    /// Modeled cycles of the priced schedule over the workload.
+    pub cycles: u64,
+    /// Modeled bits moved (activation + spill) by the priced schedule.
+    pub bits: u64,
+    /// On the non-dominated (accuracy ↑, cycles ↓, bits ↓) front.
+    /// `validate_tune` recomputes this from the rows — a writer cannot
+    /// promote a dominated point onto the front.
+    pub on_front: bool,
+}
+
+/// One λ-priced schedule next to its cycles-only baseline (a
+/// `BENCH_tune.json` row): the comparison [`enforce_tune_front`] gates —
+/// strictly fewer bits within [`TUNE_CYCLE_BOUND`]× the baseline cycles
+/// on at least one deep workload.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct TuneScheduleBench {
+    /// Workload the schedules were priced over (e.g. `resnet18-cifar`).
+    pub workload: String,
+    pub banks: usize,
+    pub rows: usize,
+    /// The non-zero λ the priced side used.
+    pub lambda: f64,
+    pub cycles_cycles_only: u64,
+    pub bits_cycles_only: u64,
+    pub cycles_priced: u64,
+    pub bits_priced: u64,
+    /// Layers the pricing flipped from buffer spill to digital replay.
+    pub replayed_layers: usize,
+}
+
+/// `BENCH_tune.json` — design-space autotuner report (`pacim tune`).
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct TuneReport {
+    /// Always `"tune"`.
+    pub bench: String,
+    pub quick: bool,
+    /// Model the accuracy split evaluated (label + weight source).
+    pub model: String,
+    /// Workload whose shapes the priced schedules modeled.
+    pub workload: String,
+    /// Validation images per engine evaluation.
+    pub images: usize,
+    pub points: Vec<TunePointBench>,
+    /// λ-vs-cycles-only schedule comparisons on the modeled workload.
+    pub schedules: Vec<TuneScheduleBench>,
+    /// One-direction bits the `TrafficLedger` measured on the probe run.
+    pub measured_bits: u64,
+    /// Closed-form recomputation of the same edges from layer geometry;
+    /// `validate_tune` requires it equal to `measured_bits`.
+    pub analytic_bits: u64,
+}
+
+/// Maximum cycle premium the traffic-priced schedule may pay for its
+/// bit savings and still satisfy [`enforce_tune_front`]:
+/// `cycles_priced ≤ TUNE_CYCLE_BOUND × cycles_cycles_only`.
+pub const TUNE_CYCLE_BOUND: f64 = 1.10;
+
+fn tune_dominates(a: &TunePointBench, b: &TunePointBench) -> bool {
+    let no_worse = a.accuracy >= b.accuracy && a.cycles <= b.cycles && a.bits <= b.bits;
+    no_worse && (a.accuracy > b.accuracy || a.cycles < b.cycles || a.bits < b.bits)
+}
+
+/// Parse + sanity-check a `BENCH_tune.json` payload.
+///
+/// Beyond field validity, this recomputes the Pareto front from the
+/// rows (every `on_front` flag must match non-domination over the
+/// actual (accuracy, cycles, bits) values) and enforces the
+/// measured-vs-analytic traffic cross-check — the same
+/// never-trust-the-writer posture as [`validate_traffic`].
+pub fn validate_tune(json: &str) -> Result<TuneReport, String> {
+    let r: TuneReport = serde_json::from_str(json).map_err(|e| e.to_string())?;
+    if r.bench != "tune" {
+        return Err(format!("bench field is '{}', expected 'tune'", r.bench));
+    }
+    if r.points.is_empty() {
+        return Err("no design points".into());
+    }
+    for (i, p) in r.points.iter().enumerate() {
+        if !(p.accuracy.is_finite() && (0.0..=1.0).contains(&p.accuracy)) {
+            return Err(format!("point {i}: accuracy out of [0,1]"));
+        }
+        if !(p.avg_digital_cycles.is_finite() && p.avg_digital_cycles > 0.0) {
+            return Err(format!("point {i}: invalid avg_digital_cycles"));
+        }
+        if !(p.lambda.is_finite() && p.lambda >= 0.0) {
+            return Err(format!("point {i}: invalid lambda"));
+        }
+        if p.cycles == 0 || p.bits == 0 {
+            return Err(format!("point {i}: empty schedule (zero cycles or bits)"));
+        }
+        if p.banks == 0 || p.rows == 0 {
+            return Err(format!("point {i}: degenerate bank geometry"));
+        }
+    }
+    for (i, p) in r.points.iter().enumerate() {
+        let dominated = r
+            .points
+            .iter()
+            .enumerate()
+            .any(|(j, q)| j != i && tune_dominates(q, p));
+        if p.on_front == dominated {
+            return Err(format!(
+                "point {i}: on_front flag disagrees with the rows (recomputed {})",
+                !dominated
+            ));
+        }
+    }
+    for s in &r.schedules {
+        if !(s.lambda.is_finite() && s.lambda > 0.0) {
+            return Err(format!("schedule '{}': priced row needs λ > 0", s.workload));
+        }
+        if s.cycles_cycles_only == 0 || s.cycles_priced == 0 {
+            return Err(format!("schedule '{}': zero-cycle schedule", s.workload));
+        }
+        if s.bits_cycles_only == 0 || s.bits_priced == 0 {
+            return Err(format!("schedule '{}': zero-bit schedule", s.workload));
+        }
+    }
+    if r.measured_bits != r.analytic_bits {
+        return Err(format!(
+            "measured {} bits but the analytic model predicts {} — the probe run's \
+             ledger drifted from the closed-form traffic model",
+            r.measured_bits, r.analytic_bits
+        ));
+    }
+    Ok(r)
+}
+
+/// The autotuner gate (CI bench-smoke, behind `PACIM_ENFORCE_TUNE_FRONT`):
+/// the Pareto front must hold at least 3 mutually non-dominated points,
+/// and on at least one deep workload the traffic-priced schedule must
+/// move *strictly fewer* bits than the λ=0 cycles-only baseline while
+/// staying within [`TUNE_CYCLE_BOUND`]× its cycles — the claim that the
+/// λ knob buys real traffic, not a relabeling.
+pub fn enforce_tune_front(r: &TuneReport) -> Result<(), String> {
+    let front: Vec<&TunePointBench> = r.points.iter().filter(|p| p.on_front).collect();
+    if front.len() < 3 {
+        return Err(format!(
+            "Pareto front holds {} point(s), need ≥ 3 — the sweep axes are not trading",
+            front.len()
+        ));
+    }
+    if r.schedules.is_empty() {
+        return Err("no λ-comparison rows to gate".into());
+    }
+    let ok = r.schedules.iter().any(|s| {
+        s.bits_priced < s.bits_cycles_only
+            && (s.cycles_priced as f64) <= s.cycles_cycles_only as f64 * TUNE_CYCLE_BOUND
+    });
+    if !ok {
+        return Err(format!(
+            "no workload where the traffic-priced schedule moves strictly fewer bits \
+             within the {TUNE_CYCLE_BOUND}× cycle bound"
+        ));
+    }
+    Ok(())
+}
+
 /// Parse + sanity-check a `BENCH_serve.json` payload.
 pub fn validate_serve(json: &str) -> Result<ServeReport, String> {
     let r: ServeReport = serde_json::from_str(json).map_err(|e| e.to_string())?;
@@ -700,6 +878,114 @@ mod tests {
         // A report with no blocked rows cannot pass the gate.
         r.blocked.clear();
         assert!(enforce_blocked_floor(&r).is_err());
+    }
+
+    fn tune_point(
+        accuracy: f64,
+        cycles: u64,
+        bits: u64,
+        lambda: f64,
+        on_front: bool,
+    ) -> TunePointBench {
+        TunePointBench {
+            banks: 4,
+            rows: 256,
+            thresholds: None,
+            lambda,
+            accuracy,
+            avg_digital_cycles: 16.0,
+            cycles,
+            bits,
+            on_front,
+        }
+    }
+
+    fn sample_tune() -> TuneReport {
+        TuneReport {
+            bench: "tune".into(),
+            quick: true,
+            model: "tiny_resnet-synthetic".into(),
+            workload: "resnet18-cifar".into(),
+            images: 48,
+            points: vec![
+                tune_point(0.91, 1_000_000, 5_000_000, 0.0, true),
+                tune_point(0.91, 1_010_000, 4_800_000, 0.005, true),
+                tune_point(0.905, 800_000, 4_600_000, 0.02, true),
+                tune_point(0.90, 1_020_000, 5_100_000, 0.0, false),
+            ],
+            schedules: vec![TuneScheduleBench {
+                workload: "resnet18-cifar".into(),
+                banks: 4,
+                rows: 256,
+                lambda: 0.02,
+                cycles_cycles_only: 1_000_000,
+                bits_cycles_only: 5_000_000,
+                cycles_priced: 1_030_000,
+                bits_priced: 4_600_000,
+                replayed_layers: 3,
+            }],
+            measured_bits: 1_417_216,
+            analytic_bits: 1_417_216,
+        }
+    }
+
+    #[test]
+    fn tune_roundtrip_and_gate() {
+        let r = sample_tune();
+        let json = serde_json::to_string_pretty(&r).unwrap();
+        let back = validate_tune(&json).unwrap();
+        assert_eq!(back.points.len(), 4);
+        enforce_tune_front(&back).unwrap();
+    }
+
+    #[test]
+    fn tune_front_flag_is_recomputed_not_trusted() {
+        // Promoting the dominated point onto the front is schema-invalid.
+        let mut r = sample_tune();
+        r.points[3].on_front = true;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_tune(&json).unwrap_err().contains("on_front"));
+        // So is hiding a genuine front point.
+        let mut r = sample_tune();
+        r.points[0].on_front = false;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_tune(&json).unwrap_err().contains("on_front"));
+    }
+
+    #[test]
+    fn tune_measured_must_match_analytic() {
+        let mut r = sample_tune();
+        r.measured_bits += 8;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_tune(&json).unwrap_err().contains("analytic"));
+    }
+
+    #[test]
+    fn tune_front_gate() {
+        // Fewer than 3 front points fails.
+        let mut r = sample_tune();
+        r.points.truncate(2);
+        let json = serde_json::to_string(&r).unwrap();
+        let r = validate_tune(&json).unwrap();
+        assert!(enforce_tune_front(&r).unwrap_err().contains("≥ 3"));
+        // A priced schedule with no bit savings fails.
+        let mut r = sample_tune();
+        r.schedules[0].bits_priced = r.schedules[0].bits_cycles_only;
+        let json = serde_json::to_string(&r).unwrap();
+        let r = validate_tune(&json).unwrap();
+        assert!(enforce_tune_front(&r).unwrap_err().contains("fewer bits"));
+        // Savings bought with an unbounded cycle premium fail too.
+        let mut r = sample_tune();
+        r.schedules[0].cycles_priced = 2_000_000;
+        let json = serde_json::to_string(&r).unwrap();
+        let r = validate_tune(&json).unwrap();
+        assert!(enforce_tune_front(&r).is_err());
+        // No comparison rows cannot pass.
+        let mut r = sample_tune();
+        r.schedules.clear();
+        let json = serde_json::to_string(&r).unwrap();
+        let r = validate_tune(&json).unwrap();
+        assert!(enforce_tune_front(&r).unwrap_err().contains("comparison"));
     }
 
     #[test]

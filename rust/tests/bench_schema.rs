@@ -1,19 +1,20 @@
 //! Schema gate for the CI bench artifacts.
 //!
 //! `BENCH_hotpath.json` (benches/perf_hotpath.rs), `BENCH_serve.json`
-//! (examples/loadgen.rs), and `BENCH_traffic.json`
-//! (benches/fig7_system.rs) are uploaded by CI to track the perf
-//! trajectory; future regression gating parses them, so they must stay
-//! machine-readable. These tests validate golden samples against the
-//! shared schema (`pacim::util::benchfmt`, `deny_unknown_fields`) and —
-//! when the real files exist (CI runs this after the bench/loadgen jobs,
+//! (examples/loadgen.rs), `BENCH_traffic.json`
+//! (benches/fig7_system.rs), and `BENCH_tune.json` (`pacim tune`) are
+//! uploaded by CI to track the perf trajectory; future regression
+//! gating parses them, so they must stay machine-readable. These tests
+//! validate golden samples against the shared schema
+//! (`pacim::util::benchfmt`, `deny_unknown_fields`) and — when the real
+//! files exist (CI runs this after the bench/loadgen/tune jobs,
 //! pointing `PACIM_BENCH_HOTPATH_JSON` / `PACIM_BENCH_SERVE_JSON` /
-//! `PACIM_BENCH_TRAFFIC_JSON` at the produced artifacts) — re-parse the
-//! actual emitted JSON.
+//! `PACIM_BENCH_TRAFFIC_JSON` / `PACIM_BENCH_TUNE_JSON` at the
+//! produced artifacts) — re-parse the actual emitted JSON.
 
 use pacim::util::benchfmt::{
-    enforce_blocked_floor, enforce_simd_floor, enforce_traffic_floor, validate_hotpath,
-    validate_serve, validate_traffic,
+    enforce_blocked_floor, enforce_simd_floor, enforce_traffic_floor, enforce_tune_front,
+    validate_hotpath, validate_serve, validate_traffic, validate_tune,
 };
 use std::path::PathBuf;
 
@@ -150,6 +151,75 @@ const SERVE_GOLDEN: &str = r#"{
   ]
 }"#;
 
+const TUNE_GOLDEN: &str = r#"{
+  "bench": "tune",
+  "quick": true,
+  "model": "tiny_resnet-synthetic",
+  "workload": "resnet18-cifar",
+  "images": 48,
+  "points": [
+    {
+      "banks": 4,
+      "rows": 256,
+      "thresholds": null,
+      "lambda": 0.0,
+      "accuracy": 0.91,
+      "avg_digital_cycles": 16.0,
+      "cycles": 1000000,
+      "bits": 5000000,
+      "on_front": true
+    },
+    {
+      "banks": 4,
+      "rows": 256,
+      "thresholds": null,
+      "lambda": 0.005,
+      "accuracy": 0.91,
+      "avg_digital_cycles": 16.0,
+      "cycles": 1010000,
+      "bits": 4800000,
+      "on_front": true
+    },
+    {
+      "banks": 4,
+      "rows": 256,
+      "thresholds": [0.08, 0.16, 0.3],
+      "lambda": 0.02,
+      "accuracy": 0.905,
+      "avg_digital_cycles": 13.4,
+      "cycles": 800000,
+      "bits": 4600000,
+      "on_front": true
+    },
+    {
+      "banks": 2,
+      "rows": 256,
+      "thresholds": null,
+      "lambda": 0.0,
+      "accuracy": 0.9,
+      "avg_digital_cycles": 16.0,
+      "cycles": 1020000,
+      "bits": 5100000,
+      "on_front": false
+    }
+  ],
+  "schedules": [
+    {
+      "workload": "resnet18-cifar",
+      "banks": 4,
+      "rows": 256,
+      "lambda": 0.02,
+      "cycles_cycles_only": 1000000,
+      "bits_cycles_only": 5000000,
+      "cycles_priced": 1030000,
+      "bits_priced": 4600000,
+      "replayed_layers": 3
+    }
+  ],
+  "measured_bits": 1417216,
+  "analytic_bits": 1417216
+}"#;
+
 #[test]
 fn hotpath_golden_passes() {
     let r = validate_hotpath(HOTPATH_GOLDEN).unwrap();
@@ -197,6 +267,38 @@ fn traffic_schema_drift_and_drifted_measurement_rejected() {
         "\"reduction\": 0.46875,\n      \"encoded\": true,\n      \"deep\": false",
     );
     assert!(validate_traffic(&dodged).unwrap_err().contains("deep flag"));
+}
+
+#[test]
+fn tune_golden_passes_and_holds_the_front_gate() {
+    let r = validate_tune(TUNE_GOLDEN).unwrap();
+    assert_eq!(r.points.len(), 4);
+    assert_eq!(r.points.iter().filter(|p| p.on_front).count(), 3);
+    enforce_tune_front(&r).unwrap();
+}
+
+#[test]
+fn tune_schema_drift_and_cooked_front_rejected() {
+    // Renamed field → drift in both directions.
+    let drifted = TUNE_GOLDEN.replace("\"bits_priced\"", "\"priced_bits\"");
+    assert!(validate_tune(&drifted).is_err());
+    // A writer cannot promote the dominated point onto the front…
+    let cooked = TUNE_GOLDEN.replacen("\"on_front\": false", "\"on_front\": true", 1);
+    assert!(validate_tune(&cooked).unwrap_err().contains("on_front"));
+    // …nor hide a genuine front point.
+    let cooked = TUNE_GOLDEN.replacen("\"on_front\": true", "\"on_front\": false", 1);
+    assert!(validate_tune(&cooked).unwrap_err().contains("on_front"));
+    // The measured/analytic traffic cross-check is load-bearing.
+    let skewed = TUNE_GOLDEN.replace("\"measured_bits\": 1417216", "\"measured_bits\": 1417208");
+    assert!(validate_tune(&skewed).unwrap_err().contains("analytic"));
+    // No bit savings within the cycle bound → the enforcement gate fails.
+    let flat = TUNE_GOLDEN.replace("\"bits_priced\": 4600000", "\"bits_priced\": 5000000");
+    let r = validate_tune(&flat).unwrap();
+    assert!(enforce_tune_front(&r).unwrap_err().contains("fewer bits"));
+    // Savings bought with an unbounded cycle premium fail too.
+    let slow = TUNE_GOLDEN.replace("\"cycles_priced\": 1030000", "\"cycles_priced\": 2000000");
+    let r = validate_tune(&slow).unwrap();
+    assert!(enforce_tune_front(&r).is_err());
 }
 
 #[test]
@@ -362,6 +464,42 @@ fn real_traffic_artifact_if_present() {
              (checked PACIM_BENCH_TRAFFIC_JSON and the default CWD path)"
         ),
         None => println!("no BENCH_traffic.json present; golden-sample checks only"),
+    }
+}
+
+#[test]
+fn real_tune_artifact_if_present() {
+    // CI's bench-smoke job runs `pacim tune --quick` and then sets
+    // PACIM_ENFORCE_TUNE_FRONT=1: the emitted report must hold a ≥ 3
+    // point Pareto front and show at least one deep workload where the
+    // traffic-priced schedule moves strictly fewer bits within the
+    // cycle bound, or the job fails.
+    let enforce =
+        std::env::var("PACIM_ENFORCE_TUNE_FRONT").is_ok_and(|v| v != "0" && !v.is_empty());
+    match artifact("PACIM_BENCH_TUNE_JSON", "BENCH_tune.json") {
+        Some(p) => {
+            let json = std::fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("cannot read {}: {e}", p.display()));
+            let r = validate_tune(&json)
+                .unwrap_or_else(|e| panic!("{} schema drift: {e}", p.display()));
+            println!(
+                "validated {} ({} points, {} on front, {} schedule rows)",
+                p.display(),
+                r.points.len(),
+                r.points.iter().filter(|q| q.on_front).count(),
+                r.schedules.len()
+            );
+            if enforce {
+                enforce_tune_front(&r)
+                    .unwrap_or_else(|e| panic!("{} tune-front regression: {e}", p.display()));
+                println!("tune front enforced: ≥ 3 points, priced schedule saves bits");
+            }
+        }
+        None if enforce => panic!(
+            "PACIM_ENFORCE_TUNE_FRONT is set but no BENCH_tune.json was found \
+             (checked PACIM_BENCH_TUNE_JSON and the default CWD path)"
+        ),
+        None => println!("no BENCH_tune.json present; golden-sample checks only"),
     }
 }
 

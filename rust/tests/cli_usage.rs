@@ -1,0 +1,57 @@
+//! CLI usage-text contract: an unknown subcommand must print the full
+//! subcommand menu (every subcommand, one line each) so users can
+//! discover `pacim tune` & friends without reading the source.
+
+use std::process::Command;
+
+/// Every subcommand the binary advertises. Keep in sync with
+/// `SUBCOMMANDS` in `src/main.rs` — this test is the pin.
+const EXPECTED: &[&str] = &["info", "map", "rmse", "simulate", "accuracy", "serve", "tune"];
+
+fn usage_stderr(arg: Option<&str>) -> String {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_pacim"));
+    if let Some(a) = arg {
+        cmd.arg(a);
+    }
+    let out = cmd.output().expect("spawn pacim");
+    assert!(
+        out.status.success(),
+        "usage path must exit 0, got {:?}",
+        out.status
+    );
+    String::from_utf8(out.stderr).expect("stderr utf8")
+}
+
+#[test]
+fn unknown_subcommand_lists_every_subcommand() {
+    let err = usage_stderr(Some("frobnicate"));
+    assert!(err.contains("usage: pacim"), "missing usage header:\n{err}");
+    assert!(err.contains("subcommands:"), "missing menu header:\n{err}");
+    for name in EXPECTED {
+        assert!(
+            err.contains(&format!("pacim {name}")),
+            "usage text does not mention subcommand '{name}':\n{err}"
+        );
+    }
+    // Each menu row carries a one-line description, not just the name.
+    let tune_row = err
+        .lines()
+        .find(|l| l.trim_start().starts_with("pacim tune"))
+        .expect("tune row present");
+    assert!(
+        tune_row.contains("autotune"),
+        "tune row lacks its description: {tune_row}"
+    );
+}
+
+#[test]
+fn bare_invocation_prints_the_same_menu() {
+    let err = usage_stderr(None);
+    assert!(err.contains("usage: pacim"), "missing usage header:\n{err}");
+    for name in EXPECTED {
+        assert!(
+            err.contains(&format!("pacim {name}")),
+            "usage text does not mention subcommand '{name}':\n{err}"
+        );
+    }
+}

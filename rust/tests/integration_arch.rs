@@ -85,6 +85,73 @@ fn dynamic_bank_cycle_savings_show_up_in_stats() {
 }
 
 #[test]
+fn priced_assignment_prices_still_dense_edges_at_the_baseline() {
+    // DESIGN.md §12: edges the dataplane does not sparsity-encode (the
+    // classifier input after GAP, tiny layers below the encode floor)
+    // move 8-bit dense activations. The traffic-priced scheduler must
+    // price exactly those edges at the dense baseline and the encoded
+    // ones at the MSB+counter rate — per layer, not as a global switch.
+    use pacim::arch::{schedule_network_priced_with, MultiBankConfig, TrafficPrice};
+    use pacim::memory::traffic::activation_traffic;
+    use pacim::util::Parallelism;
+
+    let shapes = vec![
+        LayerShape::conv("stem", 16, 64, 8, 3, 1), // encoded, 64 pixels
+        LayerShape::conv("mid", 64, 128, 4, 3, 1), // encoded, 16 pixels
+        LayerShape::linear("fc", 128, 10),         // still dense (§12)
+    ];
+    let encoded = [true, true, false];
+    let cfg = MultiBankConfig { banks: 4, rows: 256, mwcs: 64 };
+    let price = TrafficPrice::default();
+    let rep = schedule_network_priced_with(&shapes, &encoded, &cfg, &price, &Parallelism::off());
+
+    // Encoded conv edges: write + read of MSB planes + sparsity counters
+    // per output pixel group.
+    let stem = &rep.schedules[0];
+    let t = activation_traffic(64, price.msb_bits);
+    assert_eq!(stem.act_bits, 2 * 64 * t.pacim);
+    let mid = &rep.schedules[1];
+    let t = activation_traffic(128, price.msb_bits);
+    assert_eq!(mid.act_bits, 2 * 16 * t.pacim);
+    // The dense classifier edge: one group of out_f plain 8-bit values.
+    let fc = &rep.schedules[2];
+    assert_eq!(fc.act_bits, 2 * 8 * 10);
+    assert_eq!(fc.act_bits, 2 * activation_traffic(10, price.msb_bits).baseline);
+}
+
+#[test]
+fn priced_assignment_replays_a_deep_dense_edge_under_lambda() {
+    // A still-dense edge on a deep layer (row tiles > banks) spills
+    // *dense* groups, so its checkpoint traffic is priced at the 8-bit
+    // baseline — making the Replay flip cheaper to justify than on an
+    // encoded edge. Under a moderate λ the priced schedule must replay
+    // the layer (zero spill bits) while λ=0 keeps the spill staging.
+    use pacim::arch::{schedule_network_priced_with, MultiBankConfig, SpillPolicy, TrafficPrice};
+    use pacim::util::Parallelism;
+
+    let shapes = vec![LayerShape::conv("deep", 512, 512, 4, 3, 1)]; // 18 row tiles
+    let cfg = MultiBankConfig { banks: 4, rows: 256, mwcs: 64 };
+
+    let base = schedule_network_priced_with(
+        &shapes,
+        &[false],
+        &cfg,
+        &TrafficPrice::default(),
+        &Parallelism::off(),
+    );
+    assert_eq!(base.schedules[0].policy, SpillPolicy::Spill);
+    assert!(base.schedules[0].spill_bits > 0, "deep layer must spill at lambda = 0");
+
+    let price = TrafficPrice { lambda: 0.02, ..TrafficPrice::default() };
+    let priced = schedule_network_priced_with(&shapes, &[false], &cfg, &price, &Parallelism::off());
+    let s = &priced.schedules[0];
+    assert_eq!(s.policy, SpillPolicy::Replay, "lambda must buy the replay");
+    assert_eq!(s.spill_bits, 0);
+    assert!(s.total_bits() < base.schedules[0].total_bits());
+    assert!(s.cycles >= base.schedules[0].cycles, "replay re-runs encoding cycles");
+}
+
+#[test]
 fn weight_bits_affect_row_writes() {
     use pacim::arch::{DCimBank, DCimConfig};
     let mut full = DCimBank::new(DCimConfig { rows: 64, mwcs: 4, weight_bits: 8 });

@@ -601,6 +601,100 @@ fn prop_kernel_tiers_and_weight_skip_model_identical() {
 }
 
 #[test]
+fn prop_priced_lambda0_is_the_cycles_only_schedule() {
+    // The λ=0 contract (DESIGN.md §14): traffic-priced scheduling with a
+    // zero traffic price reproduces the legacy cycles-only multibank
+    // schedule bit-for-bit, for every random workload × bank config.
+    use pacim::arch::{
+        schedule_network_multibank, schedule_network_priced, MultiBankConfig, TrafficPrice,
+    };
+    use pacim::workload::LayerShape;
+    Checker::new("priced_lambda0", 80).run(|rng| {
+        let n_layers = 1 + rng.below(6) as usize;
+        let shapes: Vec<LayerShape> = (0..n_layers)
+            .map(|i| {
+                let name = format!("l{i}");
+                if rng.bernoulli(0.25) {
+                    let in_f = 16 + rng.below(1024) as usize;
+                    LayerShape::linear(&name, in_f, 1 + rng.below(1000) as usize)
+                } else {
+                    let k = if rng.bernoulli(0.5) { 1 } else { 3 };
+                    LayerShape::conv(
+                        &name,
+                        1 + rng.below(512) as usize,
+                        1 + rng.below(512) as usize,
+                        2 + rng.below(32) as usize,
+                        k,
+                        1 + rng.below(2) as usize,
+                    )
+                }
+            })
+            .collect();
+        let cfg = MultiBankConfig {
+            banks: 1 + rng.below(8) as usize,
+            rows: [64, 128, 256][rng.below(3) as usize],
+            mwcs: [16, 64][rng.below(2) as usize],
+        };
+        let price = TrafficPrice::default(); // lambda = 0
+        let priced = schedule_network_priced(&shapes, &cfg, &price);
+        assert_eq!(priced.to_multibank(), schedule_network_multibank(&shapes, &cfg));
+        // Every group at λ=0 keeps the legacy staging: spill policy, no
+        // replayed layers.
+        assert_eq!(priced.replayed_layers(), 0);
+    });
+}
+
+#[test]
+fn prop_pareto_front_is_sound_and_order_invariant() {
+    // Front invariants over random point clouds: non-empty, mutually
+    // non-dominating, covering (every off-front point is dominated),
+    // deterministic, and invariant (as a set of point values) under
+    // permutation of the candidate order.
+    use pacim::arch::dse::{dominates, pareto_front, DsePoint};
+    Checker::new("pareto_front", 120).run(|rng| {
+        let n = 1 + rng.below(40) as usize;
+        let mut points: Vec<DsePoint> = (0..n)
+            .map(|_| DsePoint {
+                banks: 1 + rng.below(8) as usize,
+                rows: 64 << rng.below(3),
+                thresholds: None,
+                lambda: rng.below(4) as f64 * 0.005,
+                accuracy: rng.below(5) as f64 * 0.25,
+                avg_digital_cycles: 10.0 + rng.below(7) as f64,
+                cycles: 1 + rng.below(8) as u64,
+                bits: 1 + rng.below(8) as u64,
+            })
+            .collect();
+        let front = pareto_front(&points);
+        assert!(!front.is_empty(), "front of a non-empty cloud is non-empty");
+        for &i in &front {
+            for &j in &front {
+                assert!(!dominates(&points[i], &points[j]), "front point dominates another");
+            }
+        }
+        for i in 0..points.len() {
+            if !front.contains(&i) {
+                assert!(
+                    points.iter().any(|p| dominates(p, &points[i])),
+                    "off-front point {i} is not dominated by anything"
+                );
+            }
+        }
+        assert_eq!(front, pareto_front(&points), "front is deterministic");
+        // Permute and compare the fronts as sorted multisets of values.
+        let key = |p: &DsePoint| (p.accuracy.to_bits(), p.cycles, p.bits);
+        let mut before: Vec<_> = front.iter().map(|&i| key(&points[i])).collect();
+        for i in (1..points.len()).rev() {
+            points.swap(i, rng.below(i as u32 + 1) as usize);
+        }
+        let mut after: Vec<_> = pareto_front(&points).iter().map(|&i| key(&points[i])).collect();
+        before.sort_unstable();
+        after.sort_unstable();
+        assert_eq!(before, after, "front changed under candidate reordering");
+    });
+}
+
+#[test]
 fn prop_encoder_matches_direct_counts() {
     use pacim::arch::encoder::{EncodingMode, SparsityEncoder};
     use pacim::pac::bit_sparsity_counts;
