@@ -221,6 +221,7 @@ fn run_scenario(
         max_wait: opts.wait,
         workers: opts.workers,
         queue_cap: opts.queue_cap,
+        ..BatchPolicy::default()
     };
     let server = match exec {
         Exec::Mock => {
@@ -335,5 +336,16 @@ fn run_scenario(
         batch_fill: m.batch_fill.clone(),
         modeled_cycles_per_image: sample_cost.map_or(0, |c| c.cycles),
         modeled_energy_uj_per_image: sample_cost.map_or(0.0, |c| c.total_uj()),
+        // Measured dataplane traffic, aggregated from every worker's
+        // executor telemetry at pool drain — 0 for the mock executor,
+        // which has no ledger.
+        measured_traffic_bits: m.traffic_bits,
+        traffic_baseline_bits: m.traffic_baseline_bits,
+        bits_per_request: if completed > 0 {
+            m.traffic_bits as f64 / completed as f64
+        } else {
+            0.0
+        },
+        escalated: m.escalated,
     })
 }

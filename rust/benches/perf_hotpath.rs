@@ -169,6 +169,7 @@ fn main() {
             GemmInput::Dense(&cols),
             patches,
             7,
+            0,
             &Parallelism::off(),
             &mut planes,
             &mut acc,
@@ -307,6 +308,7 @@ fn blocked_section(quick: bool, rng: &mut Rng, checks: &mut Checks) -> Vec<Block
                 GemmInput::Dense(&cols),
                 pixels,
                 7,
+                0,
                 &Parallelism::off(),
                 &mut planes,
                 &mut out,
@@ -401,6 +403,7 @@ fn simd_section(quick: bool, rng: &mut Rng, checks: &mut Checks) -> Vec<SimdBenc
                         GemmInput::Dense(&cols),
                         pixels,
                         7,
+                        0,
                         &Parallelism::off(),
                         &mut planes,
                         &mut out,

@@ -31,7 +31,7 @@ pub use multibank::{
     schedule_network_priced, schedule_network_priced_with, MultiBankConfig, MultiBankReport,
     PricedBankReport, PricedSchedule, SpillPolicy, TrafficPrice,
 };
-pub use pcu::{Pce, PceStats, Pcu};
+pub use pcu::{pcu_estimate_variance, Pce, PceStats, Pcu};
 pub use tuner::{candidate_grid, tune, TunePoint, TuneResult};
 
 use crate::pac::compute_map::DynamicLevel;

@@ -89,6 +89,36 @@ impl Pcu {
     }
 }
 
+/// Closed-form variance of one output's PCU estimate (Eq. 3 summed over
+/// the sparsity set), in accumulator LSB² — the confidence signal the
+/// DESIGN.md §15 escalation monitor thresholds against. Each
+/// approximated `(p, q)` pair's true binary dot product is modeled
+/// `Binomial(n, ŝx·ŝw)` around the PCU's mean estimate `n·ŝx·ŝw`
+/// (Counting-Cards-style variance awareness), so
+///
+/// ```text
+/// Var ≈ Σ_{(p,q)∉𝔻} 4^{p+q} · n · ŝx[p]·ŝw[q] · (1 − ŝx[p]·ŝw[q])
+/// ```
+///
+/// Degenerate sparsities (all-zero or saturated counts) contribute
+/// nothing, matching the estimator being exact there.
+pub fn pcu_estimate_variance(sx: &[u32; 8], sw: &[u32; 8], n: u32, map: &ComputeMap) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let mut var = 0.0;
+    for p in 0..8 {
+        for q in 0..8 {
+            if !map.is_digital(p, q) {
+                let rate = (sx[p] as f64 / nf) * (sw[q] as f64 / nf);
+                var += f64::powi(4.0, (p + q) as i32) * nf * rate * (1.0 - rate);
+            }
+        }
+    }
+    var
+}
+
 /// The PCE: a pool of PCUs, one logical accumulator per served MWC.
 #[derive(Debug, Clone)]
 pub struct Pce {
@@ -226,6 +256,25 @@ mod tests {
     fn sparsity_beyond_n_rejected() {
         let mut pcu = Pcu::new(PcuRounding::RoundNearest);
         pcu.load_weight_sparsity([300, 0, 0, 0, 0, 0, 0, 0], 256);
+    }
+
+    #[test]
+    fn estimate_variance_tracks_uncertainty() {
+        let map = ComputeMap::operand_based(4, 4);
+        // Degenerate sparsity: estimator exact, variance zero.
+        assert_eq!(pcu_estimate_variance(&[0; 8], &[128; 8], 256, &map), 0.0);
+        assert_eq!(pcu_estimate_variance(&[128; 8], &[256; 8], 256, &map), 0.0);
+        // All-digital map: nothing approximated.
+        assert_eq!(
+            pcu_estimate_variance(&[128; 8], &[128; 8], 256, &ComputeMap::all_digital()),
+            0.0
+        );
+        // Half-dense counts: positive, and growing with DP length.
+        let v256 = pcu_estimate_variance(&[128; 8], &[128; 8], 256, &map);
+        let v512 = pcu_estimate_variance(&[256; 8], &[256; 8], 512, &map);
+        assert!(v256 > 0.0);
+        assert!(v512 > v256);
+        assert_eq!(pcu_estimate_variance(&[0; 8], &[0; 8], 0, &map), 0.0);
     }
 
     #[test]

@@ -16,6 +16,6 @@ pub use scheduler::{
     LayerReport, ModelReport, ScheduleConfig,
 };
 pub use server::{
-    BatchExecutor, BatchPolicy, InferenceServer, PendingReply, Reply, ServeError,
-    ServerHandle, ServerMetrics, WorkerSummary,
+    BatchExecutor, BatchPolicy, ExecTelemetry, InferenceServer, PendingReply, Reply,
+    ServeError, ServerHandle, ServerMetrics, WorkerSummary,
 };

@@ -19,11 +19,24 @@
 //! Shutdown is a graceful drain: [`InferenceServer::stop`] closes the
 //! queue to new submissions, workers keep flushing batches until the
 //! queue is empty, and the per-worker metrics are merged into the
-//! aggregate [`ServerMetrics`] returned to the caller.
+//! aggregate [`ServerMetrics`] returned to the caller. The drain is
+//! *bounded* ([`BatchPolicy::drain_timeout`]): if a worker wedges, the
+//! residual queue is load-shed with a typed error instead of hanging
+//! the caller forever.
+//!
+//! The pool is hardened against its own executors (DESIGN.md §15): a
+//! panic inside `execute` is caught, the in-flight requests get a typed
+//! [`ServeError::WorkerLost`], the poisoned executor is rebuilt from the
+//! worker's factory, and the pool keeps draining. Requests may carry a
+//! per-request deadline ([`BatchPolicy::deadline`]): expired requests
+//! are reaped at batch-gather time with [`ServeError::DeadlineExceeded`]
+//! and never occupy an executor lane.
 
 use super::scheduler::CostEstimate;
+use crate::engine::Fidelity;
 use crate::util::stats::percentile_sorted;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -47,11 +60,44 @@ pub trait BatchExecutor {
     /// executors may skip the padded lanes — only the first
     /// `occupancy × output_elems()` outputs ever reach replies.
     fn execute(&mut self, batch: &[f32], occupancy: usize) -> anyhow::Result<Vec<f32>>;
+    /// Fidelity-aware variant: `fidelities[i]` is the class of occupied
+    /// lane `i` (`fidelities.len() == occupancy`). The default ignores
+    /// the classes and runs [`BatchExecutor::execute`] — executors
+    /// without an escalation path treat every class as the plain path.
+    fn execute_with(
+        &mut self,
+        batch: &[f32],
+        occupancy: usize,
+        fidelities: &[Fidelity],
+    ) -> anyhow::Result<Vec<f32>> {
+        let _ = fidelities;
+        self.execute(batch, occupancy)
+    }
     /// Modeled per-image silicon cost, attached to every reply this
     /// executor produces. Default: no cost model.
     fn cost_estimate(&self) -> Option<CostEstimate> {
         None
     }
+    /// Cumulative engine telemetry since this executor was constructed
+    /// (measured activation traffic, escalation reruns). The worker loop
+    /// folds it into [`ServerMetrics`] when the executor retires — at
+    /// drain or before a post-panic rebuild. Default: no telemetry.
+    fn telemetry(&self) -> ExecTelemetry {
+        ExecTelemetry::default()
+    }
+}
+
+/// Cumulative measured-engine counters an executor can expose to the
+/// serving metrics (see [`BatchExecutor::telemetry`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecTelemetry {
+    /// Measured inter-layer activation bits moved (producer writes, one
+    /// direction — `RunStats::traffic` totals).
+    pub traffic_bits: u64,
+    /// 8-bit dense-equivalent bits of the same edges.
+    pub traffic_baseline_bits: u64,
+    /// Samples the confidence monitor re-ran through the exact backend.
+    pub escalated: u64,
 }
 
 /// Typed submission/serving error (the load-shed and lifecycle states a
@@ -68,13 +114,23 @@ pub enum ServeError {
     Stopped,
     #[error("request dropped (batch execution failed)")]
     Dropped,
+    /// The executor serving this request's batch panicked. The pool
+    /// rebuilt the worker's executor and kept serving; only the
+    /// in-flight batch is lost.
+    #[error("worker lost (executor panicked mid-batch); retry")]
+    WorkerLost,
+    /// The request's deadline ([`BatchPolicy::deadline`]) expired while
+    /// it was still queued; it was reaped without occupying a lane.
+    #[error("request deadline exceeded while queued")]
+    DeadlineExceeded,
 }
 
 /// One inference request.
 struct Request {
     input: Vec<f32>,
+    fidelity: Fidelity,
     enqueued: Instant,
-    reply: mpsc::Sender<Reply>,
+    reply: mpsc::Sender<Result<Reply, ServeError>>,
 }
 
 /// Per-request response.
@@ -103,6 +159,13 @@ pub struct WorkerSummary {
     pub exec_time: Duration,
     pub p50_us: f64,
     pub p99_us: f64,
+    /// Measured activation bits this worker's executor moved
+    /// ([`BatchExecutor::telemetry`]).
+    pub traffic_bits: u64,
+    /// Escalation reruns this worker's executor performed.
+    pub escalated: u64,
+    /// Executor panics this worker caught and recovered from.
+    pub worker_panics: u64,
 }
 
 /// Per-worker bound on retained latency samples: beyond this, samples
@@ -119,6 +182,24 @@ pub struct ServerMetrics {
     pub failed_batches: u64,
     /// Submissions load-shed by admission control (queue full).
     pub rejected: u64,
+    /// Measured inter-layer activation bits the pool's executors moved
+    /// (one direction; see [`ExecTelemetry`]).
+    pub traffic_bits: u64,
+    /// 8-bit dense-equivalent bits of the same edges.
+    pub traffic_baseline_bits: u64,
+    /// Samples the confidence monitor re-ran through the exact backend.
+    pub escalated: u64,
+    /// Requests reaped at gather time because their deadline expired.
+    pub deadline_expired: u64,
+    /// Executor panics caught by workers (each rebuilt its executor and
+    /// kept serving; the in-flight batch got [`ServeError::WorkerLost`]).
+    pub worker_panics: u64,
+    /// Residual queued requests load-shed when the drain timeout fired.
+    pub drain_shed: u64,
+    /// Workers that could not be recovered (executor rebuild failed, the
+    /// thread itself panicked, or it was still wedged past the drain
+    /// timeout); their local metrics are lost.
+    pub workers_lost: u64,
     pub exec_time: Duration,
     /// Batch-fill histogram: `batch_fill[i]` = batches that carried
     /// exactly `i + 1` real requests.
@@ -167,6 +248,15 @@ impl ServerMetrics {
         self.requests as f64 / self.batches as f64
     }
 
+    /// Measured activation bits moved per served request (0 when the
+    /// executors expose no telemetry or nothing was served).
+    pub fn bits_per_request(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.traffic_bits as f64 / self.requests as f64
+    }
+
     /// Fold one worker's local metrics into the aggregate (sorting the
     /// worker's reservoir first, so its summary percentiles read from
     /// finalized data; the aggregate is re-finalized after the last
@@ -183,11 +273,19 @@ impl ServerMetrics {
             exec_time: m.exec_time,
             p50_us: p50,
             p99_us: p99,
+            traffic_bits: m.traffic_bits,
+            escalated: m.escalated,
+            worker_panics: m.worker_panics,
         });
         self.requests += m.requests;
         self.batches += m.batches;
         self.padded_slots += m.padded_slots;
         self.failed_batches += m.failed_batches;
+        self.traffic_bits += m.traffic_bits;
+        self.traffic_baseline_bits += m.traffic_baseline_bits;
+        self.escalated += m.escalated;
+        self.deadline_expired += m.deadline_expired;
+        self.worker_panics += m.worker_panics;
         self.exec_time += m.exec_time;
         if self.batch_fill.len() < m.batch_fill.len() {
             self.batch_fill.resize(m.batch_fill.len(), 0);
@@ -210,6 +308,16 @@ pub struct BatchPolicy {
     /// Admission-control bound: pending requests beyond this are
     /// load-shed with [`ServeError::QueueFull`].
     pub queue_cap: usize,
+    /// Per-request deadline, measured from submission: requests still
+    /// queued past it are reaped at batch-gather time with
+    /// [`ServeError::DeadlineExceeded`] and never occupy a lane.
+    /// `None` (default) keeps requests queued indefinitely.
+    pub deadline: Option<Duration>,
+    /// Bound on the [`InferenceServer::stop`] drain: past it, the
+    /// residual queue is load-shed with [`ServeError::Stopped`] and any
+    /// still-wedged worker is abandoned (counted in
+    /// [`ServerMetrics::workers_lost`]) instead of hanging the caller.
+    pub drain_timeout: Duration,
 }
 
 impl Default for BatchPolicy {
@@ -218,6 +326,8 @@ impl Default for BatchPolicy {
             max_wait: Duration::from_millis(2),
             workers: 1,
             queue_cap: 1024,
+            deadline: None,
+            drain_timeout: Duration::from_secs(10),
         }
     }
 }
@@ -309,19 +419,39 @@ impl Shared {
         self.state.lock().unwrap().open = false;
         self.notify.notify_all();
     }
+
+    /// Empty the queue, answering every residual request with a typed
+    /// [`ServeError::Stopped`] (the drain-timeout load-shed). Returns
+    /// how many were shed.
+    fn shed_residual(&self) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        let mut shed = 0u64;
+        while let Some(r) = st.queue.pop_front() {
+            let _ = r.reply.send(Err(ServeError::Stopped));
+            shed += 1;
+        }
+        shed
+    }
 }
 
 /// A reply that has been submitted but not yet waited on (open-loop
 /// clients submit many, then harvest).
 pub struct PendingReply {
-    rx: mpsc::Receiver<Reply>,
+    rx: mpsc::Receiver<Result<Reply, ServeError>>,
 }
 
 impl PendingReply {
-    /// Block until the reply arrives. Errors if the batch failed or the
-    /// server stopped before this request was served.
+    /// Block until the reply arrives. Errors are typed: batch execution
+    /// failure ([`ServeError::Dropped`]), an executor panic
+    /// ([`ServeError::WorkerLost`]), a reaped deadline
+    /// ([`ServeError::DeadlineExceeded`]), or a shutdown load-shed
+    /// ([`ServeError::Stopped`]). A dropped channel (worker thread died
+    /// without answering) degrades to [`ServeError::Dropped`].
     pub fn wait(self) -> Result<Reply, ServeError> {
-        self.rx.recv().map_err(|_| ServeError::Dropped)
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(ServeError::Dropped),
+        }
     }
 }
 
@@ -335,8 +465,19 @@ pub struct ServerHandle {
 impl ServerHandle {
     /// Enqueue one image without blocking on the result (open-loop
     /// traffic). Load-sheds with [`ServeError::QueueFull`] when the
-    /// bounded queue is at capacity.
+    /// bounded queue is at capacity. Runs at [`Fidelity::Fast`].
     pub fn submit(&self, input: Vec<f32>) -> Result<PendingReply, ServeError> {
+        self.submit_with(input, Fidelity::Fast)
+    }
+
+    /// [`ServerHandle::submit`] with an explicit per-request fidelity
+    /// class (honored by fidelity-aware executors; others run their
+    /// plain path for every class).
+    pub fn submit_with(
+        &self,
+        input: Vec<f32>,
+        fidelity: Fidelity,
+    ) -> Result<PendingReply, ServeError> {
         if input.len() != self.input_elems {
             return Err(ServeError::BadInput {
                 got: input.len(),
@@ -346,6 +487,7 @@ impl ServerHandle {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.shared.submit(Request {
             input,
+            fidelity,
             enqueued: Instant::now(),
             reply: reply_tx,
         })?;
@@ -357,6 +499,11 @@ impl ServerHandle {
     pub fn infer(&self, input: Vec<f32>) -> Result<Reply, ServeError> {
         self.submit(input)?.wait()
     }
+
+    /// Closed-loop submission at an explicit fidelity class.
+    pub fn infer_with(&self, input: Vec<f32>, fidelity: Fidelity) -> Result<Reply, ServeError> {
+        self.submit_with(input, fidelity)?.wait()
+    }
 }
 
 /// The inference server: a pool of workers, each owning an executor,
@@ -365,6 +512,7 @@ pub struct InferenceServer {
     shared: Arc<Shared>,
     handle: ServerHandle,
     workers: Vec<std::thread::JoinHandle<ServerMetrics>>,
+    drain_timeout: Duration,
 }
 
 impl InferenceServer {
@@ -403,7 +551,9 @@ impl InferenceServer {
                 // disconnect rather than block on this worker's clone
                 // for its entire serving lifetime.
                 drop(ready_tx);
-                worker_loop(w, executor, &shared, policy)
+                // The factory stays available to the loop so a poisoned
+                // executor (caught panic) can be rebuilt in place.
+                worker_loop(w, executor, &shared, policy, &|| factory(w))
             }));
         }
         drop(ready_tx);
@@ -444,6 +594,7 @@ impl InferenceServer {
             shared,
             handle,
             workers,
+            drain_timeout: policy.drain_timeout,
         })
     }
 
@@ -458,13 +609,14 @@ impl InferenceServer {
     {
         let cell = Mutex::new(Some(factory));
         Self::start_pool(
-            move |_| {
-                let f = cell
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .expect("single-worker factory called exactly once");
-                f()
+            move |_| match cell.lock().unwrap().take() {
+                Some(f) => f(),
+                // A second call is a post-panic rebuild attempt: a
+                // single-use factory cannot respawn, so the worker
+                // retires (counted in `ServerMetrics::workers_lost`).
+                None => Err(anyhow::anyhow!(
+                    "single-use executor factory already consumed; cannot rebuild"
+                )),
             },
             BatchPolicy {
                 workers: 1,
@@ -490,12 +642,43 @@ impl InferenceServer {
 
     /// Stop the server: close the queue to new submissions, drain every
     /// pending request, join the pool, and return the merged metrics.
+    ///
+    /// The drain is bounded by [`BatchPolicy::drain_timeout`]: if the
+    /// pool has not finished by then (a wedged executor), the residual
+    /// queue is load-shed with [`ServeError::Stopped`]
+    /// (`metrics.drain_shed`), workers get one more timeout window to
+    /// finish their in-flight batch, and any still unfinished are
+    /// abandoned (`metrics.workers_lost`) so the caller never hangs.
     pub fn stop(mut self) -> ServerMetrics {
         self.shared.close();
         let mut total = ServerMetrics::default();
+        let deadline = Instant::now() + self.drain_timeout;
+        while Instant::now() < deadline && !self.workers.iter().all(|w| w.is_finished()) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if !self.workers.iter().all(|w| w.is_finished()) {
+            // Timed out: unblock every still-queued client with a typed
+            // error, then give workers one more window for the batch
+            // they are already executing.
+            total.drain_shed = self.shared.shed_residual();
+            let grace = Instant::now() + self.drain_timeout;
+            while Instant::now() < grace && !self.workers.iter().all(|w| w.is_finished()) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
         for (i, w) in self.workers.drain(..).enumerate() {
-            let m = w.join().expect("server worker panicked");
-            total.absorb(i, m);
+            if w.is_finished() {
+                match w.join() {
+                    Ok(m) => total.absorb(i, m),
+                    // The worker thread itself panicked (outside the
+                    // executor guard); its metrics are lost.
+                    Err(_) => total.workers_lost += 1,
+                }
+            } else {
+                // Still wedged past both windows: abandon the thread
+                // (it holds only its own executor and a queue handle).
+                total.workers_lost += 1;
+            }
         }
         total.rejected = self.shared.rejected.load(Ordering::Relaxed);
         total.finalize();
@@ -512,16 +695,25 @@ impl Drop for InferenceServer {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // Workers that died early can leave requests queued; unblock
+        // their clients with the typed shutdown error.
+        self.shared.shed_residual();
     }
 }
 
 /// One pool worker: pop a batch from the shared queue (first request
-/// blocking, companions until the deadline), pad, execute, reply.
+/// blocking, companions until the deadline), reap expired requests, pad,
+/// execute under a panic guard, reply.
+///
+/// `rebuild` re-runs the worker's executor factory after a caught panic
+/// (the poisoned executor's internal state is unknowable). If the
+/// rebuild fails, the worker retires early; its metrics survive.
 fn worker_loop<E: BatchExecutor>(
     worker_id: usize,
     mut executor: E,
     shared: &Shared,
     policy: BatchPolicy,
+    rebuild: &dyn Fn() -> anyhow::Result<E>,
 ) -> ServerMetrics {
     let bs = executor.batch_size().max(1);
     let in_elems = executor.input_elems();
@@ -531,15 +723,39 @@ fn worker_loop<E: BatchExecutor>(
         batch_fill: vec![0; bs],
         ..ServerMetrics::default()
     };
+    // Fold an executor's cumulative telemetry into the worker metrics —
+    // at drain, and before a post-panic rebuild resets the counters.
+    let fold_telemetry = |metrics: &mut ServerMetrics, t: ExecTelemetry| {
+        metrics.traffic_bits += t.traffic_bits;
+        metrics.traffic_baseline_bits += t.traffic_baseline_bits;
+        metrics.escalated += t.escalated;
+    };
     // Deterministic per-worker stream for the latency reservoir.
     let mut rng = crate::util::rng::Rng::new(0xC0FF_EE00 ^ worker_id as u64);
     while let Some(first) = shared.pop_blocking() {
-        let deadline = Instant::now() + policy.max_wait;
+        let gather_deadline = Instant::now() + policy.max_wait;
         let mut batch = vec![first];
         while batch.len() < bs {
-            match shared.pop_until(deadline) {
+            match shared.pop_until(gather_deadline) {
                 Some(r) => batch.push(r),
                 None => break,
+            }
+        }
+        // Reap requests whose per-request deadline expired while queued:
+        // typed error, no lane occupied, no latency sample.
+        if let Some(dl) = policy.deadline {
+            let now = Instant::now();
+            batch.retain(|r| {
+                if now.duration_since(r.enqueued) > dl {
+                    metrics.deadline_expired += 1;
+                    let _ = r.reply.send(Err(ServeError::DeadlineExceeded));
+                    false
+                } else {
+                    true
+                }
+            });
+            if batch.is_empty() {
+                continue;
             }
         }
         // Assemble (pad partial batches with zeros).
@@ -547,9 +763,15 @@ fn worker_loop<E: BatchExecutor>(
         for (i, r) in batch.iter().enumerate() {
             flat[i * in_elems..(i + 1) * in_elems].copy_from_slice(&r.input);
         }
+        let fidelities: Vec<Fidelity> = batch.iter().map(|r| r.fidelity).collect();
         let t0 = Instant::now();
-        match executor.execute(&flat, batch.len()) {
-            Ok(out) => {
+        // The executor is arbitrary user code; a panic inside it must
+        // not take down the worker (the batch is lost, the pool is not).
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            executor.execute_with(&flat, batch.len(), &fidelities)
+        }));
+        match result {
+            Ok(Ok(out)) => {
                 metrics.exec_time += t0.elapsed();
                 metrics.batches += 1;
                 metrics.batch_fill[batch.len() - 1] += 1;
@@ -562,23 +784,51 @@ fn worker_loop<E: BatchExecutor>(
                     let latency = r.enqueued.elapsed();
                     metrics.requests += 1;
                     metrics.record_latency(latency.as_secs_f64() * 1e6, &mut rng);
-                    let _ = r.reply.send(Reply {
+                    let _ = r.reply.send(Ok(Reply {
                         logits: out[i * out_elems..(i + 1) * out_elems].to_vec(),
                         latency,
                         batch_size: bs,
                         occupancy,
                         cost,
-                    });
+                    }));
                 }
             }
-            Err(e) => {
-                // Fail this batch (reply senders drop → clients see an
-                // error) but keep serving.
+            Ok(Err(e)) => {
+                // Typed executor failure: fail this batch but keep
+                // serving with the same executor.
                 eprintln!("pacim-server[{worker_id}]: executor error: {e}");
                 metrics.failed_batches += 1;
+                for r in batch {
+                    let _ = r.reply.send(Err(ServeError::Dropped));
+                }
+            }
+            Err(_panic) => {
+                // Executor panicked: the lane is poisoned. Answer the
+                // in-flight requests, salvage the telemetry the old
+                // executor accumulated, and rebuild from the factory.
+                eprintln!("pacim-server[{worker_id}]: executor panicked; rebuilding");
+                metrics.worker_panics += 1;
+                metrics.failed_batches += 1;
+                for r in batch {
+                    let _ = r.reply.send(Err(ServeError::WorkerLost));
+                }
+                fold_telemetry(&mut metrics, executor.telemetry());
+                match rebuild() {
+                    Ok(e) => executor = e,
+                    Err(e) => {
+                        // No replacement: retire this worker. Sibling
+                        // workers (if any) keep draining the queue.
+                        eprintln!(
+                            "pacim-server[{worker_id}]: executor rebuild failed ({e}); \
+                             worker retiring"
+                        );
+                        return metrics;
+                    }
+                }
             }
         }
     }
+    fold_telemetry(&mut metrics, executor.telemetry());
     metrics
 }
 
@@ -593,6 +843,7 @@ pub(crate) mod testutil {
         pub out_elems: usize,
         pub delay: Duration,
         pub fail_every: Option<u64>,
+        pub panic_every: Option<u64>,
         pub calls: u64,
     }
 
@@ -611,6 +862,11 @@ pub(crate) mod testutil {
 
         fn execute(&mut self, batch: &[f32], _occupancy: usize) -> anyhow::Result<Vec<f32>> {
             self.calls += 1;
+            if let Some(k) = self.panic_every {
+                if self.calls % k == 0 {
+                    panic!("injected executor panic");
+                }
+            }
             if let Some(k) = self.fail_every {
                 if self.calls % k == 0 {
                     anyhow::bail!("injected failure");
@@ -643,6 +899,7 @@ mod tests {
             out_elems: 3,
             delay: Duration::from_micros(200),
             fail_every: None,
+            panic_every: None,
             calls: 0,
         }
     }
@@ -763,6 +1020,7 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 workers: 3,
                 queue_cap: 64,
+                ..BatchPolicy::default()
             },
         )
         .unwrap();
@@ -810,6 +1068,7 @@ mod tests {
                 max_wait: Duration::from_micros(1),
                 workers: 1,
                 queue_cap: 2,
+                ..BatchPolicy::default()
             },
         );
         let h = server.handle();
@@ -840,6 +1099,7 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 workers: 1,
                 queue_cap: 64,
+                ..BatchPolicy::default()
             },
         );
         let h = server.handle();
@@ -855,5 +1115,175 @@ mod tests {
         let m = stopper.join().unwrap();
         assert_eq!(m.requests, 10);
         assert!(matches!(h.infer(vec![0.0; 4]), Err(ServeError::Stopped)));
+    }
+
+    #[test]
+    fn executor_panic_is_isolated_and_worker_recovers() {
+        // Call 2 panics. The pool must answer that request with the
+        // typed WorkerLost error, rebuild the executor from the factory,
+        // and keep serving calls 3+ (the rebuilt executor's counter
+        // restarts, so no later call hits the panic trigger again until
+        // its own call 2 — exercise past it).
+        let server = InferenceServer::start_pool(
+            |_| {
+                Ok(MockExecutor {
+                    panic_every: Some(2),
+                    ..mock(1)
+                })
+            },
+            BatchPolicy {
+                max_wait: Duration::from_micros(1),
+                ..BatchPolicy::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        assert!(h.infer(vec![1.0; 4]).is_ok()); // call 1
+        let lost = h.infer(vec![1.0; 4]); // call 2 panics
+        assert!(matches!(lost, Err(ServeError::WorkerLost)), "{lost:?}");
+        assert!(h.infer(vec![1.0; 4]).is_ok()); // rebuilt executor, call 1
+        let m = server.stop();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(m.failed_batches, 1);
+        assert_eq!(m.workers_lost, 0);
+    }
+
+    #[test]
+    fn single_use_factory_cannot_respawn_and_pool_retires() {
+        // `start` wraps a FnOnce factory: after a panic the rebuild must
+        // fail gracefully (worker retires, stop() does not hang).
+        let server = InferenceServer::start(
+            MockExecutor {
+                panic_every: Some(1),
+                ..mock(1)
+            },
+            BatchPolicy {
+                max_wait: Duration::from_micros(1),
+                drain_timeout: Duration::from_millis(200),
+                ..BatchPolicy::default()
+            },
+        );
+        let h = server.handle();
+        assert!(matches!(h.infer(vec![0.0; 4]), Err(ServeError::WorkerLost)));
+        let m = server.stop();
+        assert_eq!(m.worker_panics, 1);
+        // The retired worker still returned its metrics.
+        assert_eq!(m.per_worker.len(), 1);
+    }
+
+    #[test]
+    fn expired_requests_are_reaped_with_typed_error() {
+        // Worker busy for 100ms; deadline 20ms. The queued victim must
+        // come back DeadlineExceeded without occupying a lane.
+        let server = InferenceServer::start(
+            MockExecutor {
+                delay: Duration::from_millis(100),
+                ..mock(1)
+            },
+            BatchPolicy {
+                max_wait: Duration::from_micros(1),
+                deadline: Some(Duration::from_millis(20)),
+                ..BatchPolicy::default()
+            },
+        );
+        let h = server.handle();
+        let busy = h.submit(vec![0.0; 4]).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let victim = h.submit(vec![1.0; 4]).unwrap();
+        assert!(busy.wait().is_ok());
+        let got = victim.wait();
+        assert!(matches!(got, Err(ServeError::DeadlineExceeded)), "{got:?}");
+        let m = server.stop();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.deadline_expired, 1);
+    }
+
+    #[test]
+    fn fidelity_reaches_the_executor_and_defaults_to_fast() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        struct Spy {
+            inner: MockExecutor,
+            accurate_seen: Arc<AtomicU64>,
+        }
+        impl BatchExecutor for Spy {
+            fn batch_size(&self) -> usize {
+                self.inner.batch_size()
+            }
+            fn input_elems(&self) -> usize {
+                self.inner.input_elems()
+            }
+            fn output_elems(&self) -> usize {
+                self.inner.output_elems()
+            }
+            fn execute(&mut self, batch: &[f32], occupancy: usize) -> anyhow::Result<Vec<f32>> {
+                self.inner.execute(batch, occupancy)
+            }
+            fn execute_with(
+                &mut self,
+                batch: &[f32],
+                occupancy: usize,
+                fidelities: &[Fidelity],
+            ) -> anyhow::Result<Vec<f32>> {
+                assert_eq!(fidelities.len(), occupancy);
+                let n = fidelities
+                    .iter()
+                    .filter(|&&f| f == Fidelity::Accurate)
+                    .count() as u64;
+                self.accurate_seen.fetch_add(n, Ordering::Relaxed);
+                self.inner.execute(batch, occupancy)
+            }
+        }
+        let seen = Arc::new(AtomicU64::new(0));
+        let seen2 = Arc::clone(&seen);
+        let server = InferenceServer::start(
+            Spy {
+                inner: mock(2),
+                accurate_seen: seen2,
+            },
+            BatchPolicy::default(),
+        );
+        let h = server.handle();
+        assert!(h.infer(vec![0.0; 4]).is_ok());
+        assert!(h.infer_with(vec![0.0; 4], Fidelity::Accurate).is_ok());
+        server.stop();
+        assert_eq!(seen.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn telemetry_flows_into_metrics() {
+        struct Telem(MockExecutor);
+        impl BatchExecutor for Telem {
+            fn batch_size(&self) -> usize {
+                self.0.batch_size()
+            }
+            fn input_elems(&self) -> usize {
+                self.0.input_elems()
+            }
+            fn output_elems(&self) -> usize {
+                self.0.output_elems()
+            }
+            fn execute(&mut self, batch: &[f32], occupancy: usize) -> anyhow::Result<Vec<f32>> {
+                self.0.execute(batch, occupancy)
+            }
+            fn telemetry(&self) -> ExecTelemetry {
+                ExecTelemetry {
+                    traffic_bits: 100 * self.0.calls,
+                    traffic_baseline_bits: 200 * self.0.calls,
+                    escalated: self.0.calls,
+                }
+            }
+        }
+        let server = InferenceServer::start(Telem(mock(1)), BatchPolicy::default());
+        let h = server.handle();
+        for _ in 0..4 {
+            h.infer(vec![0.0; 4]).unwrap();
+        }
+        let m = server.stop();
+        assert_eq!(m.traffic_bits, 400);
+        assert_eq!(m.traffic_baseline_bits, 800);
+        assert_eq!(m.escalated, 4);
+        assert_eq!(m.per_worker[0].traffic_bits, 400);
+        assert!((m.bits_per_request() - 100.0).abs() < 1e-9);
     }
 }

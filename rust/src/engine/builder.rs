@@ -13,9 +13,10 @@
 
 use crate::coordinator::scheduler::{estimate_image_cost, model_shapes, ScheduleConfig};
 use crate::energy::EnergyModel;
+use crate::fault::FaultConfig;
 use crate::nn::exec::exact_backend;
 use crate::nn::layers::{Model, Op};
-use crate::nn::pac_exec::{pac_backend, PacConfig};
+use crate::nn::pac_exec::{pac_backend, EscalationConfig, PacConfig};
 use crate::pac::ComputeMap;
 use crate::util::Parallelism;
 use std::sync::Arc;
@@ -60,6 +61,8 @@ pub struct EngineBuilder {
     mode: Mode,
     approx_bits: Option<(u32, u32)>,
     thresholds: Option<crate::arch::ThresholdSet>,
+    fault: Option<FaultConfig>,
+    escalation: Option<EscalationConfig>,
     par: Parallelism,
     lane_par: Parallelism,
     schedule: Option<ScheduleConfig>,
@@ -73,6 +76,8 @@ impl EngineBuilder {
             mode: Mode::Pac(PacConfig::default()),
             approx_bits: None,
             thresholds: None,
+            fault: None,
+            escalation: None,
             par: Parallelism::auto(),
             lane_par: Parallelism::coarse(),
             schedule: None,
@@ -108,6 +113,28 @@ impl EngineBuilder {
         self
     }
 
+    /// Inject the seeded CiM error model (`pacim::fault`): PCU sampling
+    /// noise, weight-MSB bit-cell flips, and encoded-edge transmission
+    /// flips, all position-keyed off `fault.seed` so injections are
+    /// bit-identical across tile schedules and parallelism settings.
+    /// Requires the PAC backend (validated at `build()`); a
+    /// [`FaultConfig::off`] value is free — no RNG is ever constructed.
+    pub fn fault(mut self, fault: FaultConfig) -> Self {
+        self.fault = Some(fault);
+        self
+    }
+
+    /// Arm the confidence-gated PAC→exact escalation monitor: builds an
+    /// exact digital fallback next to the PAC backend, and
+    /// [`super::Session::infer_with`] under [`super::Fidelity::Auto`]
+    /// re-runs samples whose top-two logit margin falls below
+    /// `min_margin + sigma · σ_logit` through it. Requires the PAC
+    /// backend (validated at `build()`).
+    pub fn escalation(mut self, escalation: EscalationConfig) -> Self {
+        self.escalation = Some(escalation);
+        self
+    }
+
     /// Tile fan-out policy for single-image inference (default
     /// [`Parallelism::auto`]). Bit-deterministic at any setting.
     pub fn parallelism(mut self, par: Parallelism) -> Self {
@@ -133,7 +160,7 @@ impl EngineBuilder {
     /// bit-planes once, computes the per-image cost model).
     pub fn build(self) -> EngineResult<Engine> {
         validate_model(&self.model)?;
-        let (backend, mode, default_sched) = match self.mode {
+        let (backend, mode, default_sched, fallback, escalation, logit_lsb) = match self.mode {
             Mode::Exact => {
                 if self.thresholds.is_some() {
                     return Err(PacimError::InvalidConfig(
@@ -149,10 +176,27 @@ impl EngineBuilder {
                             .into(),
                     ));
                 }
+                if self.fault.is_some() {
+                    return Err(PacimError::InvalidConfig(
+                        "fault injection models PAC-boundary errors (PCU noise, weight-MSB \
+                         cells, encoded edges) and requires the PAC backend"
+                            .into(),
+                    ));
+                }
+                if self.escalation.is_some() {
+                    return Err(PacimError::InvalidConfig(
+                        "escalation re-runs low-confidence PAC samples exactly; \
+                         the exact backend is already the escalation target"
+                            .into(),
+                    ));
+                }
                 (
                     EngineBackend::Exact(exact_backend(&self.model)),
                     "exact",
                     ScheduleConfig::digital_baseline(),
+                    None,
+                    None,
+                    0.0f32,
                 )
             }
             Mode::Pac(mut cfg) => {
@@ -169,16 +213,35 @@ impl EngineBuilder {
                 if let Some(th) = self.thresholds {
                     cfg.thresholds = Some(th);
                 }
+                if let Some(f) = self.fault {
+                    cfg.fault = f;
+                }
+                if let Some(e) = self.escalation {
+                    cfg.escalation = Some(e);
+                }
                 validate_pac_config(&cfg)?;
                 let sched = if cfg.thresholds.is_some() {
                     ScheduleConfig::pacim_dynamic()
                 } else {
                     ScheduleConfig::pacim_default()
                 };
+                // Arming escalation builds the exact digital fallback next
+                // to the PAC backend (a second packed copy of the weights)
+                // and resolves the accumulator-LSB → logit-unit conversion
+                // the margin monitor divides through.
+                let escalation = cfg.escalation;
+                let (fallback, logit_lsb) = if escalation.is_some() {
+                    (Some(exact_backend(&self.model)), terminal_logit_lsb(&self.model))
+                } else {
+                    (None, 0.0)
+                };
                 (
                     EngineBackend::Pac(pac_backend(&self.model, cfg)),
                     "pac",
                     sched,
+                    fallback,
+                    escalation,
+                    logit_lsb,
                 )
             }
         };
@@ -196,14 +259,41 @@ impl EngineBuilder {
                 lane_par: self.lane_par,
                 cost,
                 mode,
+                fallback,
+                escalation,
+                logit_lsb,
             }),
         })
     }
 }
 
+/// One integer accumulator LSB of the terminal logits layer, expressed in
+/// logit units: the classifier's weight scale times the activation scale
+/// it receives (logits are `sx·sw · (acc − corrections) + bias`, so every
+/// accumulator count is worth `sx·sw` logits). Converts the PCU estimator
+/// variance — accumulated in LSB² — into the units the escalation
+/// monitor's margin comparison runs in. `0.0` for a program without a
+/// terminal logits layer (unreachable past `validate_model`).
+fn terminal_logit_lsb(model: &Model) -> f32 {
+    let mut cur = model.input_params;
+    for op in &model.ops {
+        match op {
+            Op::Conv2d(c) => cur = c.out_params,
+            Op::Linear(l) => match &l.out_params {
+                None => return cur.scale * l.wparams.scale,
+                Some(p) => cur = *p,
+            },
+            Op::AddSkip { out_params, .. } => cur = *out_params,
+            Op::MaxPool2 | Op::GlobalAvgPool | Op::SaveSkip => {}
+        }
+    }
+    0.0
+}
+
 /// Validate a PAC configuration independent of any model (also used for
 /// executor construction): the dynamic-threshold ladder is defined on
-/// the 16-cycle 4×4 operand base map only.
+/// the 16-cycle 4×4 operand base map only, and the fault / escalation
+/// knobs must hold sane rates and thresholds.
 pub(crate) fn validate_pac_config(cfg: &PacConfig) -> EngineResult<()> {
     if cfg.thresholds.is_some() {
         let base = ComputeMap::operand_based(4, 4);
@@ -215,6 +305,10 @@ pub(crate) fn validate_pac_config(cfg: &PacConfig) -> EngineResult<()> {
                 cfg.map.digital_cycles()
             )));
         }
+    }
+    cfg.fault.validate().map_err(PacimError::InvalidConfig)?;
+    if let Some(esc) = &cfg.escalation {
+        esc.validate().map_err(PacimError::InvalidConfig)?;
     }
     Ok(())
 }

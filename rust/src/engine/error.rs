@@ -55,6 +55,16 @@ pub enum PacimError {
     #[error("request dropped (batch execution failed)")]
     RequestDropped,
 
+    /// The executor serving this request's batch panicked; the pool
+    /// rebuilt the worker and kept serving, but this batch is lost.
+    #[error("worker lost (executor panicked mid-batch); retry")]
+    WorkerLost,
+
+    /// The request's serving deadline expired while it was still queued
+    /// (reaped by the batcher; it never occupied an executor lane).
+    #[error("request deadline exceeded while queued")]
+    DeadlineExceeded,
+
     /// An internal invariant failed (e.g. an evaluation worker died).
     #[error("internal error: {0}")]
     Internal(String),
@@ -86,6 +96,8 @@ impl From<ServeError> for PacimError {
             ServeError::QueueFull { capacity } => PacimError::QueueFull { capacity },
             ServeError::Stopped => PacimError::ServerStopped,
             ServeError::Dropped => PacimError::RequestDropped,
+            ServeError::WorkerLost => PacimError::WorkerLost,
+            ServeError::DeadlineExceeded => PacimError::DeadlineExceeded,
         }
     }
 }

@@ -37,4 +37,4 @@ mod session;
 
 pub use builder::EngineBuilder;
 pub use error::{EngineResult, PacimError};
-pub use session::{Engine, Evaluation, Inference, Session};
+pub use session::{Engine, Evaluation, Fidelity, Inference, Session};

@@ -19,11 +19,32 @@ use crate::coordinator::scheduler::CostEstimate;
 use crate::memory::{LayerTraffic, TrafficLedger};
 use crate::nn::exec::{run_model_batch_with, run_model_with, ExactBackend, ModelScratch, RunStats};
 use crate::nn::layers::Model;
-use crate::nn::pac_exec::PacBackend;
+use crate::nn::pac_exec::{EscalationConfig, PacBackend};
 use crate::util::Parallelism;
 use std::sync::Arc;
 
 use super::error::{EngineResult, PacimError};
+
+/// Per-request fidelity class (DESIGN.md §15): which compute path a
+/// sample takes through a built engine.
+///
+/// On an exact engine every class runs the (only) exact backend. On a
+/// PAC engine, `Fast` is the plain hybrid path, `Accurate` routes
+/// through the exact digital fallback (available once
+/// [`crate::nn::PacConfig::escalation`] is armed), and `Auto` runs the
+/// hybrid path under the confidence monitor, re-running low-margin
+/// samples exactly ([`RunStats::escalations`] records the rerun).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Fidelity {
+    /// Exact digital result, unconditionally (per-sample ground truth).
+    Accurate,
+    /// The engine's configured backend, no monitor (the default — what
+    /// [`Session::infer`] runs).
+    #[default]
+    Fast,
+    /// Configured backend plus the confidence-gated escalation monitor.
+    Auto,
+}
 
 /// One inference result: float logits plus the engine statistics of the
 /// forward pass that produced them.
@@ -119,6 +140,19 @@ pub(crate) struct EngineInner {
     pub(crate) cost: CostEstimate,
     /// `"exact"` or `"pac"`, for reports.
     pub(crate) mode: &'static str,
+    /// Exact digital fallback next to a PAC backend — the escalation /
+    /// [`Fidelity::Accurate`] target. Built only when
+    /// [`crate::nn::PacConfig::escalation`] is armed (a second packed
+    /// copy of the weights); always `None` on exact engines.
+    pub(crate) fallback: Option<ExactBackend>,
+    /// The armed escalation thresholds (copied out of the PAC config so
+    /// the monitor never reaches into the backend).
+    pub(crate) escalation: Option<EscalationConfig>,
+    /// Logit units per terminal-accumulator LSB (`sx·sw` of the
+    /// classifier head): converts `RunStats::estimator_var` (LSB²) into
+    /// the scale the margin monitor compares against. `0.0` unless
+    /// escalation is armed.
+    pub(crate) logit_lsb: f32,
 }
 
 /// A prepared inference engine: the single typed front door to the
@@ -249,6 +283,96 @@ impl Engine {
         self.inner.backend.run(&self.inner.model, image, par, scratch)
     }
 
+    /// The escalation thresholds this engine was built with (`None` on
+    /// exact engines and on PAC engines without the monitor armed).
+    pub fn escalation(&self) -> Option<EscalationConfig> {
+        self.inner.escalation
+    }
+
+    /// Typed pre-check that `fidelity` can run on this engine:
+    /// [`Fidelity::Accurate`] on a PAC engine needs the exact fallback,
+    /// which only exists once escalation is armed.
+    pub(crate) fn check_fidelity(&self, fidelity: Fidelity) -> EngineResult<()> {
+        if fidelity == Fidelity::Accurate
+            && matches!(self.inner.backend, EngineBackend::Pac(_))
+            && self.inner.fallback.is_none()
+        {
+            return Err(PacimError::InvalidConfig(
+                "Fidelity::Accurate on a PAC engine requires the exact fallback; \
+                 arm it with EngineBuilder::escalation (or PacConfig::escalation)"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// The escalation decision (DESIGN.md §15): re-run a sample exactly
+    /// when its top-two logit margin is smaller than
+    /// `min_margin + sigma · σ_margin`, where `σ_margin` is the standard
+    /// deviation of a logit *difference* under the terminal layer's
+    /// estimator variance — `sqrt(2 · estimator_var / n_outputs)`
+    /// accumulator LSBs, converted to logit units through `logit_lsb`.
+    /// When the terminal layer ran digitally the variance is zero and
+    /// the gate degenerates to the pure margin floor.
+    pub(crate) fn should_escalate(&self, logits: &[f32], stats: &RunStats) -> bool {
+        let Some(esc) = self.inner.escalation else {
+            return false;
+        };
+        if self.inner.fallback.is_none() || logits.len() < 2 {
+            return false;
+        }
+        let mut top = f32::NEG_INFINITY;
+        let mut second = f32::NEG_INFINITY;
+        for &x in logits {
+            if x >= top {
+                second = top;
+                top = x;
+            } else if x > second {
+                second = x;
+            }
+        }
+        let margin = (top - second) as f64;
+        let per_output_var = stats.estimator_var / logits.len() as f64;
+        let sigma_margin = (2.0 * per_output_var).sqrt() * self.inner.logit_lsb as f64;
+        margin < esc.min_margin as f64 + esc.sigma * sigma_margin
+    }
+
+    /// Run one validated image under a fidelity class (internal: callers
+    /// have already run [`Engine::check_image`] and
+    /// [`Engine::check_fidelity`]). On escalation the returned stats are
+    /// the *sum* of both passes with [`RunStats::escalations`] `= 1`, and
+    /// the logits are the exact pass's.
+    pub(crate) fn run_fidelity_validated(
+        &self,
+        image: &[u8],
+        fidelity: Fidelity,
+        par: &Parallelism,
+        scratch: &mut ModelScratch,
+    ) -> (Vec<f32>, RunStats) {
+        match fidelity {
+            Fidelity::Fast => self.run_validated(image, par, scratch),
+            Fidelity::Accurate => match &self.inner.fallback {
+                Some(fb) => run_model_with(&self.inner.model, fb, image, par, scratch),
+                // Exact engines: the backend already is the exact path
+                // (check_fidelity rejected the fallback-less PAC case).
+                None => self.run_validated(image, par, scratch),
+            },
+            Fidelity::Auto => {
+                let (logits, mut stats) = self.run_validated(image, par, scratch);
+                if self.should_escalate(&logits, &stats) {
+                    if let Some(fb) = &self.inner.fallback {
+                        let (exact_logits, exact_stats) =
+                            run_model_with(&self.inner.model, fb, image, par, scratch);
+                        stats.merge(&exact_stats);
+                        stats.escalations = 1;
+                        return (exact_logits, stats);
+                    }
+                }
+                (logits, stats)
+            }
+        }
+    }
+
     /// Top-1 accuracy of this engine over a labeled image set, fanned out
     /// over `threads` workers (each with its own warm scratch arena).
     /// Bit-identical to evaluating the images one by one in a session:
@@ -260,6 +384,21 @@ impl Engine {
         labels: &[usize],
         threads: usize,
     ) -> EngineResult<Evaluation> {
+        self.evaluate_with(images, labels, threads, Fidelity::Fast)
+    }
+
+    /// [`Engine::evaluate`] under an explicit fidelity class: `Accurate`
+    /// scores the exact fallback, `Auto` runs the escalation monitor
+    /// (reruns land in `stats.escalations`). `Fast` is exactly
+    /// [`Engine::evaluate`].
+    pub fn evaluate_with(
+        &self,
+        images: &[&[u8]],
+        labels: &[usize],
+        threads: usize,
+        fidelity: Fidelity,
+    ) -> EngineResult<Evaluation> {
+        self.check_fidelity(fidelity)?;
         if images.len() != labels.len() {
             return Err(PacimError::ShapeMismatch {
                 context: "evaluate labels".into(),
@@ -299,7 +438,8 @@ impl Engine {
                         if i >= n {
                             break;
                         }
-                        let (logits, st) = self.run_validated(images[i], &par, &mut scratch);
+                        let (logits, st) =
+                            self.run_fidelity_validated(images[i], fidelity, &par, &mut scratch);
                         local.merge(&st);
                         if argmax(&logits) == labels[i] {
                             local_correct += 1;
@@ -392,11 +532,27 @@ impl Session {
         }
     }
 
-    /// Classify one quantized CHW u8 image.
+    /// Classify one quantized CHW u8 image (the [`Fidelity::Fast`] path).
     pub fn infer(&mut self, image: &[u8]) -> EngineResult<Inference> {
         self.engine.check_image(image, "Session::infer input")?;
         let par = self.engine.inner.par;
         let (logits, stats) = self.engine.run_validated(image, &par, &mut self.scratches[0]);
+        Ok(Inference { logits, stats })
+    }
+
+    /// Classify one quantized CHW u8 image under an explicit fidelity
+    /// class. `Fast` is exactly [`Session::infer`]; `Accurate` routes
+    /// through the exact fallback; `Auto` runs the PAC path and re-runs
+    /// the sample exactly when the confidence monitor trips (the result
+    /// then carries the exact logits, the summed statistics of both
+    /// passes, and `stats.escalations == 1`).
+    pub fn infer_with(&mut self, image: &[u8], fidelity: Fidelity) -> EngineResult<Inference> {
+        self.engine.check_image(image, "Session::infer input")?;
+        self.engine.check_fidelity(fidelity)?;
+        let par = self.engine.inner.par;
+        let (logits, stats) =
+            self.engine
+                .run_fidelity_validated(image, fidelity, &par, &mut self.scratches[0]);
         Ok(Inference { logits, stats })
     }
 
@@ -447,6 +603,52 @@ impl Session {
             .into_iter()
             .map(|(logits, stats)| Inference { logits, stats })
             .collect())
+    }
+
+    /// Classify a batch with a per-lane fidelity class. An all-`Fast`
+    /// batch takes the fanned-out [`Session::infer_batch`] path
+    /// unchanged; any `Accurate`/`Auto` lane switches the whole batch to
+    /// lane-serial execution (each lane still bit-identical to
+    /// [`Session::infer_with`] on the same image), since an escalated
+    /// lane re-enters the model mid-batch.
+    pub fn infer_batch_with(
+        &mut self,
+        images: &[&[u8]],
+        fidelities: &[Fidelity],
+    ) -> EngineResult<Vec<Inference>> {
+        if fidelities.len() != images.len() {
+            return Err(PacimError::ShapeMismatch {
+                context: "Session::infer_batch_with fidelities".into(),
+                got: fidelities.len(),
+                want: images.len(),
+            });
+        }
+        if fidelities.iter().all(|&f| f == Fidelity::Fast) {
+            return self.infer_batch(images);
+        }
+        for &f in fidelities {
+            self.engine.check_fidelity(f)?;
+        }
+        let want = self.engine.input_elems();
+        for (i, img) in images.iter().enumerate() {
+            if img.len() != want {
+                return Err(PacimError::ShapeMismatch {
+                    context: format!("Session::infer_batch_with lane {i} input"),
+                    got: img.len(),
+                    want,
+                });
+            }
+        }
+        self.reserve_lanes(images.len());
+        let par = self.engine.inner.par;
+        let mut out = Vec::with_capacity(images.len());
+        for (i, (&img, &f)) in images.iter().zip(fidelities).enumerate() {
+            let (logits, stats) =
+                self.engine
+                    .run_fidelity_validated(img, f, &par, &mut self.scratches[i]);
+            out.push(Inference { logits, stats });
+        }
+        Ok(out)
     }
 
     /// Labeled-set accuracy (delegates to [`Engine::evaluate`]; the

@@ -1,0 +1,353 @@
+//! Seeded CiM fault models injected at the PAC boundaries (DESIGN.md
+//! §15).
+//!
+//! PAC is a statistical estimator running on analog-adjacent hardware:
+//! bit-cells flip at array-programming time, the PCU's sparsity
+//! sampling is noisy, and the PR 5 encoded dataplane moves MSB planes
+//! over real wires. This module injects all three error sources
+//! deterministically so resilience experiments are replayable:
+//!
+//! - **Weight MSB-plane flips** (`weight_msb_ber`) — per-bit Bernoulli
+//!   flips on the *digital* weight bit-planes at `PacBackend::prepare`
+//!   time (array programming). The PCU's weight-sparsity registers and
+//!   the zero-point correction sums keep their nominal values — the
+//!   drift between the faulty array and the nominal counters is part of
+//!   the injected error, exactly as on silicon.
+//! - **PCU sampling-noise inflation** (`pcu_noise`) — additive Gaussian
+//!   on each output's sparsity-domain partial sum, with
+//!   `σ = pcu_noise · n` output LSB for DP length `n` (the `pac_rmse`
+//!   %-of-DP convention).
+//! - **Encoded-edge transmission flips** (`edge_ber`) — per-bit
+//!   Bernoulli flips on the packed MSB planes of every sparsity-encoded
+//!   inter-layer edge, applied after the producer packs and before the
+//!   consumer sweeps.
+//!
+//! **Determinism contract.** Every draw is keyed by *position* — layer,
+//! output channel, word index, plus a per-image content nonce for the
+//! runtime channels — never by a shared sequential stream. Injection is
+//! therefore bit-identical across tile schedules, lane fan-out, and
+//! `Parallelism` on/off (property-tested in
+//! `tests/fault_resilience.rs`). With [`FaultConfig::off`] no RNG is
+//! constructed and no branch reorders work: runs are bit-identical to
+//! an engine built without a fault config at all.
+
+use crate::util::rng::Rng;
+
+/// Domain tags keep the three fault channels' draws independent even
+/// when they share (layer, position) keys.
+pub(crate) const DOMAIN_WEIGHT: u64 = 0x57E1_6875;
+pub(crate) const DOMAIN_EDGE: u64 = 0xED6E_F119;
+pub(crate) const DOMAIN_PCU: u64 = 0x9C09_015E;
+
+/// Seeded, deterministic CiM error model, configured on
+/// [`crate::engine::EngineBuilder::fault`]. Default **off**: zero cost,
+/// bit-identical to the fault-free engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Master seed: same seed + same rates ⇒ identical injections,
+    /// replayable across runs and machines.
+    pub seed: u64,
+    /// σ of the additive Gaussian on each PAC output's sparsity-domain
+    /// partial sum, in units of the layer DP length (0 = off).
+    pub pcu_noise: f64,
+    /// Per-bit flip probability on the digital (MSB) weight planes at
+    /// array-programming time (0 = off).
+    pub weight_msb_ber: f64,
+    /// Per-bit transmission flip probability on the packed MSB planes
+    /// of sparsity-encoded inter-layer edges (0 = off).
+    pub edge_ber: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self::off()
+    }
+}
+
+impl FaultConfig {
+    /// The no-fault configuration: every channel disabled.
+    pub const fn off() -> Self {
+        Self { seed: 0x5EED_FA17, pcu_noise: 0.0, weight_msb_ber: 0.0, edge_ber: 0.0 }
+    }
+
+    /// All three channels driven at one bit-error rate (the sweep shape
+    /// `pacim faultsweep` plots): both BER channels at `ber`, PCU noise
+    /// at the same relative magnitude.
+    pub fn at_ber(seed: u64, ber: f64) -> Self {
+        Self { seed, pcu_noise: ber, weight_msb_ber: ber, edge_ber: ber }
+    }
+
+    /// True when no channel can ever inject.
+    pub fn is_off(&self) -> bool {
+        self.pcu_noise == 0.0 && self.weight_msb_ber == 0.0 && self.edge_ber == 0.0
+    }
+
+    /// Rates must be sane probabilities / scales; rejected at
+    /// `EngineBuilder::build` with a typed error.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [("weight_msb_ber", self.weight_msb_ber), ("edge_ber", self.edge_ber)] {
+            if !(p.is_finite() && (0.0..1.0).contains(&p)) {
+                return Err(format!("fault {name} must be in [0, 1), got {p}"));
+            }
+        }
+        if !(self.pcu_noise.is_finite() && self.pcu_noise >= 0.0) {
+            return Err(format!("fault pcu_noise must be finite and ≥ 0, got {}", self.pcu_noise));
+        }
+        Ok(())
+    }
+}
+
+/// SplitMix64 finalizer — a strong 64-bit mixer for position keys.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Position key: deterministic function of (seed, domain, a, b) with no
+/// sequential state, so draws commute with any execution order.
+#[inline]
+pub(crate) fn key(seed: u64, domain: u64, a: u64, b: u64) -> u64 {
+    let mut h = mix64(seed ^ 0x9E37_79B9_7F4A_7C15);
+    h = mix64(h ^ domain);
+    h = mix64(h ^ a);
+    mix64(h ^ b)
+}
+
+/// A position-keyed RNG stream (see [`key`]); reuses [`crate::util::rng`]
+/// so fault draws share the crate's replayability guarantees.
+#[inline]
+pub(crate) fn keyed_rng(seed: u64, domain: u64, a: u64, b: u64) -> Rng {
+    Rng::new(key(seed, domain, a, b))
+}
+
+/// Content nonce for the runtime fault channels: transmission flips and
+/// PCU noise must differ between images but stay independent of lane
+/// index and tile schedule, so the key carries a hash of the input
+/// image rather than any execution-order counter.
+pub fn image_nonce(image: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in image {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    mix64(h)
+}
+
+/// Per-bit Bernoulli flip mask over the low `valid_bits` of one packed
+/// word (tail-word padding is never flipped: pad bits must stay zero so
+/// the popcount sweeps see no phantom dot-product taps).
+pub(crate) fn flip_mask(rng: &mut Rng, ber: f64, valid_bits: u32) -> u64 {
+    debug_assert!(valid_bits <= 64);
+    let mut mask = 0u64;
+    for bit in 0..valid_bits {
+        if rng.bernoulli(ber) {
+            mask |= 1u64 << bit;
+        }
+    }
+    mask
+}
+
+/// Flip transmission bits on a sparsity-encoded conv→conv edge: every
+/// transmitted MSB plane word of every pixel draws a position-keyed
+/// Bernoulli mask at `cfg.edge_ber`. Returns the number of bits
+/// flipped. Only the top `msb_bits` planes are touched — those are the
+/// payload the PR 5 edge actually moves — and tail-word padding past
+/// `k` is never flipped (the zero-tail invariant the popcount sweeps
+/// rely on). The per-pixel sparsity counters are left at the values the
+/// producer shipped: on the wire, planes and counters are separate
+/// payloads, and the drift between them is part of the injected error.
+pub(crate) fn flip_encoded_edge(
+    cfg: &FaultConfig,
+    packed: &mut crate::tensor::PackedPatches,
+    layer_id: usize,
+    nonce: u64,
+    msb_bits: u32,
+) -> u64 {
+    if cfg.edge_ber <= 0.0 || msb_bits == 0 {
+        return 0;
+    }
+    let (pixels, k, words) = (packed.pixels(), packed.k(), packed.words());
+    if words == 0 {
+        return 0;
+    }
+    let tail_bits = (k - (words - 1) * 64) as u32;
+    let planes = packed.planes_mut();
+    let mut flipped = 0u64;
+    for pix in 0..pixels {
+        for p in (8 - msb_bits as usize)..8 {
+            let base = (pix * 8 + p) * words;
+            for w in 0..words {
+                let valid = if w + 1 == words { tail_bits } else { 64 };
+                let a = nonce ^ ((layer_id as u64) << 40) ^ (pix as u64);
+                let b = ((p as u64) << 32) | w as u64;
+                let mask =
+                    flip_mask(&mut keyed_rng(cfg.seed, DOMAIN_EDGE, a, b), cfg.edge_ber, valid);
+                planes[base + w] ^= mask;
+                flipped += mask.count_ones() as u64;
+            }
+        }
+    }
+    flipped
+}
+
+/// Per-layer injection counters, surfaced through
+/// [`crate::nn::RunStats`] so every run reports exactly what was
+/// injected where. Integer-only and merged in layer order: bit-identical
+/// across par on/off like every other stat.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LayerFaults {
+    /// Interpreter layer id the injections hit.
+    pub layer_id: usize,
+    /// Weight MSB-plane bits flipped at array-programming time (counted
+    /// once per `gemm_layer` call so per-image runs stay comparable).
+    pub weight_bits_flipped: u64,
+    /// Encoded-edge plane bits flipped in transmission.
+    pub edge_bits_flipped: u64,
+    /// Outputs whose sparsity-domain sum received PCU noise.
+    pub pcu_noise_events: u64,
+}
+
+/// Ledger of [`LayerFaults`] rows, ordered by layer id (mirrors
+/// `memory::TrafficLedger`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultLedger {
+    layers: Vec<LayerFaults>,
+}
+
+impl FaultLedger {
+    fn entry(&mut self, layer_id: usize) -> &mut LayerFaults {
+        let idx = match self.layers.binary_search_by_key(&layer_id, |l| l.layer_id) {
+            Ok(i) => i,
+            Err(i) => {
+                self.layers.insert(i, LayerFaults { layer_id, ..LayerFaults::default() });
+                i
+            }
+        };
+        &mut self.layers[idx]
+    }
+
+    /// Record weight-plane flips active for `layer_id` this run.
+    pub fn record_weight(&mut self, layer_id: usize, bits: u64) {
+        self.entry(layer_id).weight_bits_flipped += bits;
+    }
+
+    /// Record transmission flips on the encoded edge out of `layer_id`.
+    pub fn record_edge(&mut self, layer_id: usize, bits: u64) {
+        self.entry(layer_id).edge_bits_flipped += bits;
+    }
+
+    /// Record PCU-noise injections on `layer_id`'s outputs.
+    pub fn record_pcu(&mut self, layer_id: usize, events: u64) {
+        self.entry(layer_id).pcu_noise_events += events;
+    }
+
+    /// Fold another ledger in (same layer ids add; new ids insert in
+    /// order — deterministic regardless of merge order).
+    pub fn merge(&mut self, other: &FaultLedger) {
+        for l in &other.layers {
+            let e = self.entry(l.layer_id);
+            e.weight_bits_flipped += l.weight_bits_flipped;
+            e.edge_bits_flipped += l.edge_bits_flipped;
+            e.pcu_noise_events += l.pcu_noise_events;
+        }
+    }
+
+    /// Per-layer rows, ordered by layer id.
+    pub fn layers(&self) -> &[LayerFaults] {
+        &self.layers
+    }
+
+    /// No injections recorded at all.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Total weight-plane bits flipped across layers.
+    pub fn total_weight_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bits_flipped).sum()
+    }
+
+    /// Total encoded-edge bits flipped across layers.
+    pub fn total_edge_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.edge_bits_flipped).sum()
+    }
+
+    /// Total PCU-noise injection events across layers.
+    pub fn total_pcu_events(&self) -> u64 {
+        self.layers.iter().map(|l| l.pcu_noise_events).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_is_off_and_valid() {
+        let f = FaultConfig::off();
+        assert!(f.is_off());
+        f.validate().unwrap();
+        assert_eq!(FaultConfig::default(), f);
+    }
+
+    #[test]
+    fn bad_rates_rejected() {
+        let mut f = FaultConfig::off();
+        f.weight_msb_ber = 1.5;
+        assert!(f.validate().is_err());
+        f = FaultConfig::off();
+        f.edge_ber = -0.1;
+        assert!(f.validate().is_err());
+        f = FaultConfig::off();
+        f.pcu_noise = f64::NAN;
+        assert!(f.validate().is_err());
+        FaultConfig::at_ber(1, 1e-3).validate().unwrap();
+    }
+
+    #[test]
+    fn keys_are_position_determined() {
+        assert_eq!(key(1, DOMAIN_EDGE, 2, 3), key(1, DOMAIN_EDGE, 2, 3));
+        assert_ne!(key(1, DOMAIN_EDGE, 2, 3), key(1, DOMAIN_WEIGHT, 2, 3));
+        assert_ne!(key(1, DOMAIN_PCU, 2, 3), key(1, DOMAIN_PCU, 3, 2));
+        assert_ne!(key(1, DOMAIN_PCU, 2, 3), key(2, DOMAIN_PCU, 2, 3));
+    }
+
+    #[test]
+    fn flip_mask_respects_valid_bits_and_rate() {
+        let mut rng = keyed_rng(7, DOMAIN_EDGE, 0, 0);
+        assert_eq!(flip_mask(&mut rng, 1.0, 40), (1u64 << 40) - 1);
+        let mut rng = keyed_rng(7, DOMAIN_EDGE, 0, 1);
+        assert_eq!(flip_mask(&mut rng, 0.0, 64), 0);
+        // ~half the bits at p = 0.5, and replayable.
+        let a = flip_mask(&mut keyed_rng(9, DOMAIN_EDGE, 4, 2), 0.5, 64);
+        let b = flip_mask(&mut keyed_rng(9, DOMAIN_EDGE, 4, 2), 0.5, 64);
+        assert_eq!(a, b);
+        assert!((10..54).contains(&a.count_ones()));
+    }
+
+    #[test]
+    fn nonce_depends_on_content() {
+        assert_eq!(image_nonce(&[1, 2, 3]), image_nonce(&[1, 2, 3]));
+        assert_ne!(image_nonce(&[1, 2, 3]), image_nonce(&[1, 2, 4]));
+        assert_ne!(image_nonce(&[]), image_nonce(&[0]));
+    }
+
+    #[test]
+    fn ledger_merges_in_layer_order() {
+        let mut a = FaultLedger::default();
+        a.record_weight(2, 5);
+        a.record_edge(0, 3);
+        let mut b = FaultLedger::default();
+        b.record_weight(2, 7);
+        b.record_pcu(1, 10);
+        a.merge(&b);
+        let ids: Vec<usize> = a.layers().iter().map(|l| l.layer_id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        assert_eq!(a.total_weight_bits(), 12);
+        assert_eq!(a.total_edge_bits(), 3);
+        assert_eq!(a.total_pcu_events(), 10);
+        assert!(!a.is_empty());
+        assert!(FaultLedger::default().is_empty());
+    }
+}

@@ -55,6 +55,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod energy;
 pub mod engine;
+pub mod fault;
 pub mod memory;
 pub mod nn;
 pub mod pac;

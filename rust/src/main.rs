@@ -22,6 +22,11 @@
 //!                                # maps x banks x tile rows x traffic
 //!                                # price λ, print + emit the Pareto
 //!                                # front as BENCH_tune.json
+//! pacim faultsweep [--quick] [--images N] [--seed S] [--sigma X] [--out PATH]
+//!                                # seeded fault injection: accuracy vs
+//!                                # BER with and without confidence-gated
+//!                                # PAC→exact escalation, emitted as
+//!                                # BENCH_resilience.json
 //! ```
 
 use pacim::coordinator::{schedule_model, ScheduleConfig};
@@ -55,6 +60,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("accuracy", "exact vs PAC accuracy on the built artifacts"),
     ("serve", "serve inference via the PAC-native executor pool"),
     ("tune", "design-space autotune: Pareto front over thresholds x banks x tiles x lambda"),
+    ("faultsweep", "fault-injection resilience: accuracy vs BER with/without escalation"),
 ];
 
 fn usage() {
@@ -77,6 +83,7 @@ fn main() -> anyhow::Result<()> {
         "accuracy" => accuracy(&args),
         "serve" => serve(&args),
         "tune" => tune(&args),
+        "faultsweep" => faultsweep(&args),
         _ => {
             usage();
             Ok(())
@@ -393,6 +400,215 @@ fn tune(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `pacim faultsweep` — seeded fault-injection resilience sweep
+/// (DESIGN.md §15).
+///
+/// Self-labels the split with the exact engine's own argmax (so
+/// `acc_exact` is 1.0 by construction and the sweep needs no trained
+/// artifacts), calibrates the escalation margin floor at the 85th
+/// percentile of clean PAC logit margins, then scores every BER point
+/// through the faulted PAC engine with and without `Fidelity::Auto`
+/// escalation. Emits the schema-gated `BENCH_resilience.json`
+/// (`pacim::util::benchfmt::ResilienceReport`); with
+/// `PACIM_ENFORCE_RESILIENCE=1` the run also fails unless fault-off
+/// runs were bit-identical and escalation recovered at least half the
+/// fault-induced accuracy loss at BER 1e-3.
+fn faultsweep(args: &[String]) -> anyhow::Result<()> {
+    use pacim::engine::Fidelity;
+    use pacim::fault::FaultConfig;
+    use pacim::nn::EscalationConfig;
+    use pacim::util::benchfmt::{
+        enforce_resilience, resilience_recovered, validate_resilience, ResilienceReport,
+        ResilienceRow, RESILIENCE_GATE_BER,
+    };
+
+    let quick = has_flag(args, "--quick")
+        || std::env::var("PACIM_BENCH_QUICK")
+            .ok()
+            .is_some_and(|v| v != "0" && !v.is_empty());
+    let n_images: usize = arg_value(args, "--images")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(if quick { 48 } else { 128 });
+    let out_path = arg_value(args, "--out").unwrap_or_else(|| "BENCH_resilience.json".into());
+    let seed: u64 = match arg_value(args, "--seed") {
+        Some(s) => s.parse()?,
+        None => match std::env::var("PACIM_FAULT_SEED") {
+            Ok(s) => s.parse()?,
+            Err(_) => 2024,
+        },
+    };
+    let sigma: f64 = arg_value(args, "--sigma")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2.0);
+
+    let (model, ds, source) = serving_workload();
+    let n = n_images.min(ds.n).max(1);
+    let images: Vec<&[u8]> = (0..n).map(|i| ds.image(i)).collect();
+    let threads = std::thread::available_parallelism()?.get();
+
+    // Ground truth = the exact engine's own argmax: acc_exact is 1.0 by
+    // construction, so every drop below it is attributable to PAC
+    // approximation plus injected faults, never to the weights.
+    let exact = EngineBuilder::new(model.clone()).exact().build()?;
+    let mut es = exact.session();
+    let mut labels = Vec::with_capacity(n);
+    for img in &images {
+        labels.push(argmax_last(&es.infer(img)?.logits));
+    }
+    drop(es);
+    let acc_exact = exact.evaluate(&images, &labels, threads)?.accuracy;
+
+    // Calibrate the margin floor on the clean PAC engine. Under fault
+    // the sweep wants an aggressive monitor, so take the 85th percentile
+    // of clean logit margins: a fault that erodes an image's margin into
+    // the bottom ~85% of the clean distribution triggers an exact rerun.
+    let clean = EngineBuilder::new(model.clone()).pac(PacConfig::serving()).build()?;
+    let mut cs = clean.session();
+    let mut margins = Vec::with_capacity(n);
+    let mut clean_logits = Vec::with_capacity(n);
+    for img in &images {
+        let inf = cs.infer(img)?;
+        margins.push(logit_margin(&inf.logits));
+        clean_logits.push(inf.logits);
+    }
+    drop(cs);
+    margins.sort_by(|a, b| a.partial_cmp(b).expect("margins are finite"));
+    let min_margin = margins[(margins.len() - 1) * 85 / 100];
+
+    // Fault-off bit-identity: an engine carrying FaultConfig::off() must
+    // reproduce the fault-free engine's logits bit for bit.
+    let off = EngineBuilder::new(model.clone())
+        .pac(PacConfig::serving())
+        .fault(FaultConfig::off())
+        .build()?;
+    let mut os = off.session();
+    let mut fault_off_bit_identical = true;
+    for (img, want) in images.iter().zip(&clean_logits) {
+        if &os.infer(img)?.logits != want {
+            fault_off_bit_identical = false;
+            break;
+        }
+    }
+    drop(os);
+
+    let bers: &[f64] = if quick {
+        &[0.0, RESILIENCE_GATE_BER]
+    } else {
+        &[0.0, 1e-4, RESILIENCE_GATE_BER, 1e-2]
+    };
+    println!(
+        "faultsweep: {n} images | model {} ({source}) | seed {seed} | margin floor \
+         {min_margin:.4} (85th pct of clean margins) | fault-off bit-identical: \
+         {fault_off_bit_identical}",
+        model.name
+    );
+    println!(
+        "  {:>8} {:>8} {:>8} {:>8} {:>8} {:>9} {:>9} {:>9} {:>9}",
+        "ber", "exact%", "plain%", "escal%", "esc-rate", "w-flips", "e-flips", "pcu-ev",
+        "recovered"
+    );
+    let mut rows = Vec::new();
+    for &ber in bers {
+        let fc = FaultConfig::at_ber(seed, ber);
+        let plain = EngineBuilder::new(model.clone())
+            .pac(PacConfig::serving())
+            .fault(fc)
+            .build()?;
+        let ev_plain = plain.evaluate(&images, &labels, threads)?;
+        let escal = EngineBuilder::new(model.clone())
+            .pac(PacConfig::serving())
+            .fault(fc)
+            .escalation(EscalationConfig { min_margin, sigma })
+            .build()?;
+        let ev_esc = escal.evaluate_with(&images, &labels, threads, Fidelity::Auto)?;
+        let f = &ev_plain.stats.faults;
+        let row = ResilienceRow {
+            ber,
+            acc_exact,
+            acc_plain: ev_plain.accuracy,
+            acc_escalated: ev_esc.accuracy,
+            escalation_rate: ev_esc.stats.escalations as f64 / n as f64,
+            weight_bits_flipped: f.total_weight_bits(),
+            edge_bits_flipped: f.total_edge_bits(),
+            pcu_noise_events: f.total_pcu_events(),
+            recovered: resilience_recovered(acc_exact, ev_plain.accuracy, ev_esc.accuracy),
+        };
+        println!(
+            "  {:>8.0e} {:>8.2} {:>8.2} {:>8.2} {:>7.1}% {:>9} {:>9} {:>9} {:>9.3}",
+            row.ber,
+            row.acc_exact * 100.0,
+            row.acc_plain * 100.0,
+            row.acc_escalated * 100.0,
+            row.escalation_rate * 100.0,
+            row.weight_bits_flipped,
+            row.edge_bits_flipped,
+            row.pcu_noise_events,
+            row.recovered
+        );
+        rows.push(row);
+    }
+    if source == "synthetic" {
+        println!(
+            "note: synthetic weights — labels are self-generated by the exact engine, so \
+             the sweep measures fidelity to it, not dataset accuracy"
+        );
+    }
+
+    let report = ResilienceReport {
+        bench: "resilience".into(),
+        quick,
+        model: format!("{}-{source}", model.name),
+        images: n,
+        min_margin: min_margin as f64,
+        fault_off_bit_identical,
+        rows,
+    };
+    let json = serde_json::to_string_pretty(&report)?;
+    let checked = validate_resilience(&json)
+        .map_err(|e| anyhow::anyhow!("BENCH_resilience self-check failed: {e}"))?;
+    if std::env::var("PACIM_ENFORCE_RESILIENCE").is_ok_and(|v| v != "0" && !v.is_empty()) {
+        enforce_resilience(&checked)
+            .map_err(|e| anyhow::anyhow!("resilience gate failed: {e}"))?;
+        println!("resilience gate enforced: fault-off bit-identical, recovery >= 50% at BER 1e-3");
+    }
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {out_path}");
+    Ok(())
+}
+
+/// Last-wins argmax — the same tie rule `engine::session` scores
+/// evaluations with, so self-generated labels always agree with the
+/// exact engine's own verdict.
+fn argmax_last(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x >= v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-1 minus top-2 logit (the escalation monitor's margin); 0 for
+/// degenerate outputs.
+fn logit_margin(v: &[f32]) -> f32 {
+    if v.len() < 2 {
+        return 0.0;
+    }
+    let (mut top, mut second) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+    for &x in v {
+        if x >= top {
+            second = top;
+            top = x;
+        } else if x > second {
+            second = x;
+        }
+    }
+    top - second
+}
+
 fn serve(args: &[String]) -> anyhow::Result<()> {
     if has_flag(args, "--pjrt") {
         return serve_pjrt(args);
@@ -487,6 +703,7 @@ fn serve_pac(args: &[String]) -> anyhow::Result<()> {
             max_wait: std::time::Duration::from_millis(wait_ms),
             workers,
             queue_cap,
+            ..BatchPolicy::default()
         },
     )?;
     let h = server.handle();

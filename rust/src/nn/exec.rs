@@ -24,6 +24,7 @@
 
 use super::layers::{ConvLayer, Model, Op};
 use crate::arch::LevelHistogram;
+use crate::fault::{self, FaultConfig, FaultLedger};
 use crate::memory::TrafficLedger;
 use crate::tensor::{
     im2col_into, im2col_scatter_into, Conv2dGeom, PackedPatches, QuantParams, Tensor,
@@ -52,6 +53,15 @@ pub struct RunStats {
     /// edge, tagged encoded vs dense) — the workload-measured
     /// counterpart of the analytic `memory::traffic` model.
     pub traffic: TrafficLedger,
+    /// Per-layer injected-fault counters (empty when faults are off).
+    pub faults: FaultLedger,
+    /// PAC→exact escalations performed (auto fidelity; 0 or 1 per image).
+    pub escalations: u64,
+    /// Accumulated PCU estimator variance of the **terminal** PAC layer's
+    /// outputs, in accumulator LSB² (DESIGN.md §15). Stays 0 unless the
+    /// backend's escalation monitor is armed; summed in tile order, so
+    /// the f64 total is bit-identical across par on/off.
+    pub estimator_var: f64,
 }
 
 impl RunStats {
@@ -61,6 +71,9 @@ impl RunStats {
         self.pcu_ops += other.pcu_ops;
         self.levels.merge(&other.levels);
         self.traffic.merge(&other.traffic);
+        self.faults.merge(&other.faults);
+        self.escalations += other.escalations;
+        self.estimator_var += other.estimator_var;
     }
 
     /// Average digital cycles per 8b/8b MAC (64 would be fully digital).
@@ -124,6 +137,15 @@ pub trait MacBackend {
         None
     }
 
+    /// The backend's active fault model, if any (`pacim::fault`,
+    /// DESIGN.md §15). The interpreter consults it for the encoded-edge
+    /// transmission channel and to derive the per-image content nonce it
+    /// threads through [`Self::gemm_layer`]; `None` (the default) keeps
+    /// every fault path compiled out of the hot loop.
+    fn fault(&self) -> Option<&FaultConfig> {
+        None
+    }
+
     /// Layer-level blocked GEMM. `input` is the `[pixels][k]` im2col
     /// matrix, dense or producer-packed (`k` = DP length; a linear layer
     /// is `pixels = 1`); `out` is resized to `pixels * out_c` and filled
@@ -131,7 +153,9 @@ pub trait MacBackend {
     ///
     /// `par` is the driver's tile fan-out policy and `planes` the
     /// reusable packing scratch for dense inputs (backends that don't
-    /// bit-plane-pack ignore it). Implementations must be
+    /// bit-plane-pack ignore it). `nonce` is the per-image content nonce
+    /// for position-keyed runtime fault draws (0 when faults are off;
+    /// fault-free backends ignore it). Implementations must be
     /// **bit-deterministic**: the same input produces the same `out` and
     /// `stats` for every `par`, thread count, schedule, and input form
     /// (`Packed` planes are byte-identical to packing the dense matrix).
@@ -142,6 +166,7 @@ pub trait MacBackend {
         input: GemmInput<'_>,
         pixels: usize,
         zpx: i32,
+        nonce: u64,
         par: &Parallelism,
         planes: &mut PackedPatches,
         out: &mut Vec<i64>,
@@ -168,6 +193,7 @@ impl MacBackend for ExactBackend {
         input: GemmInput<'_>,
         pixels: usize,
         zpx: i32,
+        _nonce: u64,
         par: &Parallelism,
         _planes: &mut PackedPatches,
         out: &mut Vec<i64>,
@@ -294,6 +320,13 @@ pub fn run_model_with<B: MacBackend + Sync>(
         "input size mismatch"
     );
     let mut stats = RunStats::default();
+    // Per-image content nonce for the runtime fault channels: computed
+    // once, independent of lane index and tile schedule, 0 (and no hash
+    // pass) when the backend carries no fault model.
+    let nonce = match backend.fault() {
+        Some(fc) if !fc.is_off() => fault::image_nonce(image),
+        _ => 0,
+    };
     let mut act = image.to_vec();
     let mut params = model.input_params;
     let mut shape = (model.in_c, model.in_hw, model.in_hw);
@@ -328,6 +361,7 @@ pub fn run_model_with<B: MacBackend + Sync>(
                     scratch,
                     packed_ready,
                     fuse_next,
+                    nonce,
                 );
                 packed_ready = out.is_none();
                 act = out.unwrap_or_default();
@@ -344,6 +378,7 @@ pub fn run_model_with<B: MacBackend + Sync>(
                     GemmInput::Dense(&act[..]),
                     1,
                     params.zero_point,
+                    nonce,
                     par,
                     &mut scratch.planes,
                     &mut scratch.acc,
@@ -499,6 +534,7 @@ fn run_conv<B: MacBackend + Sync>(
     scratch: &mut ModelScratch,
     packed_input: bool,
     fuse_next: Option<(&Conv2dGeom, u32)>,
+    nonce: u64,
 ) -> (Option<Vec<u8>>, QuantParams, (usize, usize, usize)) {
     let g = &conv.geom;
     let pixels = g.out_pixels();
@@ -509,6 +545,7 @@ fn run_conv<B: MacBackend + Sync>(
             GemmInput::Packed(&*inbox),
             pixels,
             in_params.zero_point,
+            nonce,
             par,
             planes,
             acc,
@@ -521,6 +558,7 @@ fn run_conv<B: MacBackend + Sync>(
             GemmInput::Dense(&cols[..]),
             pixels,
             in_params.zero_point,
+            nonce,
             par,
             planes,
             acc,
@@ -542,6 +580,16 @@ fn run_conv<B: MacBackend + Sync>(
                 oq.quantize(if relu { real.max(0.0) } else { real })
             });
             inbox.pack(&cols[..], gnext.dp_len(), gnext.out_pixels(), par);
+            // Transmission faults hit the encoded edge *after* the
+            // producer packs and before the consumer sweeps — exactly
+            // the wire. Single-threaded interpreter section, so the
+            // ledger row is identical for every tile/lane schedule.
+            if let Some(fc) = backend.fault() {
+                let flipped = fault::flip_encoded_edge(fc, inbox, layer_id, nonce, msb_bits);
+                if flipped > 0 {
+                    stats.faults.record_edge(layer_id, flipped);
+                }
+            }
             stats.traffic.record_encoded(layer_id, groups, ch, msb_bits);
             (None, oq, oshape)
         }

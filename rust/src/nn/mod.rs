@@ -32,6 +32,6 @@ pub use exec::{
 #[allow(deprecated)]
 pub use exec::{evaluate, run_model, run_model_batch, run_model_par};
 pub use layers::{tiny_resnet, tiny_vgg, ConvLayer, LinearLayer, Model, Op};
-pub use pac_exec::{pac_backend, PacBackend, PacConfig};
+pub use pac_exec::{pac_backend, EscalationConfig, PacBackend, PacConfig};
 pub use profiler::{LayerProfile, ProfilingBackend};
 pub use weights::{DType, Entry, WeightStore};

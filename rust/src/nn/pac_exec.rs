@@ -34,6 +34,8 @@
 use super::exec::{exact_gemm_tiled, GemmInput, MacBackend, RunStats, TILE_PIXELS};
 use super::simd;
 use crate::arch::bank_logic::{classify, spec_normalized, ThresholdSet};
+use crate::arch::pcu::pcu_estimate_variance;
+use crate::fault::{self, FaultConfig};
 use crate::pac::compute_map::DynamicLevel;
 use crate::pac::mac::sparsity_domain_sum_fast;
 use crate::pac::sparsity::BitPlanes;
@@ -53,6 +55,48 @@ pub const SKIP_DENSITY_AUTO_OFF: f64 = 0.75;
 /// Below this many plane words a column's sweep is too short for the
 /// bitmap iteration to pay for itself; skipping stays off.
 pub const SKIP_MIN_WORDS: usize = 4;
+
+/// Confidence-monitor thresholds for the PAC→exact escalation of
+/// DESIGN.md §15 (`PacConfig::escalation`). A sample escalates when its
+/// top-two logit margin falls below
+/// `min_margin + sigma · σ_logit`, where `σ_logit` is the terminal PAC
+/// layer's estimator standard deviation ([`pcu_estimate_variance`] plus
+/// any injected PCU-noise variance) converted to logit units. When the
+/// terminal layer runs digitally (first-layer-exact / short-DP
+/// fallback), `σ_logit` is 0 and the monitor degenerates to a pure
+/// margin floor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EscalationConfig {
+    /// Absolute logit-margin floor (logit units; 0 disables the
+    /// unconditional floor).
+    pub min_margin: f32,
+    /// Estimator standard deviations of slack demanded on top of the
+    /// floor (the Counting-Cards-style variance gate; 0 disables it).
+    pub sigma: f64,
+}
+
+impl Default for EscalationConfig {
+    fn default() -> Self {
+        Self { min_margin: 0.0, sigma: 2.0 }
+    }
+}
+
+impl EscalationConfig {
+    /// Thresholds must be finite and non-negative; rejected at
+    /// `EngineBuilder::build` with a typed error.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.min_margin.is_finite() && self.min_margin >= 0.0) {
+            return Err(format!(
+                "escalation min_margin must be finite and ≥ 0, got {}",
+                self.min_margin
+            ));
+        }
+        if !(self.sigma.is_finite() && self.sigma >= 0.0) {
+            return Err(format!("escalation sigma must be finite and ≥ 0, got {}", self.sigma));
+        }
+        Ok(())
+    }
+}
 
 /// Configuration of the PAC backend.
 #[derive(Debug, Clone)]
@@ -108,6 +152,17 @@ pub struct PacConfig {
     /// simulated bank still runs every digital cycle; skipping is a
     /// host-side shortcut past provably-zero popcounts).
     pub weight_skip: bool,
+    /// Seeded CiM error model (`pacim::fault`, DESIGN.md §15). Default
+    /// [`FaultConfig::off`]: no RNG is ever constructed and runs are
+    /// bit-identical to a config without the field.
+    pub fault: FaultConfig,
+    /// Arm the confidence-gated PAC→exact escalation monitor: when set,
+    /// every run accumulates the terminal PAC layer's estimator variance
+    /// into `RunStats::estimator_var`, and `engine::Session` re-runs
+    /// low-margin samples through the exact backend under the `auto`
+    /// fidelity class. `None` (default) keeps the monitor compiled out
+    /// of the epilogues.
+    pub escalation: Option<EscalationConfig>,
 }
 
 impl Default for PacConfig {
@@ -122,6 +177,8 @@ impl Default for PacConfig {
             fuse_dataplane: true,
             kernel: None,
             weight_skip: true,
+            fault: FaultConfig::off(),
+            escalation: None,
         }
     }
 }
@@ -173,6 +230,10 @@ struct PreparedLayer {
     /// Per-column live MSB-word counts (the density numerator; kept
     /// for the bench profile and the auto-off decision).
     live_words: Vec<u32>,
+    /// Bit-cell flips injected into the MSB weight planes at prepare
+    /// ("array programming") time — 0 when the fault channel is off.
+    /// Recorded into the run's fault ledger once per `gemm_layer` call.
+    weight_bits_flipped: u64,
 }
 
 impl PreparedLayer {
@@ -368,6 +429,7 @@ impl PacBackend {
         pt: usize,
         zpx: i32,
         chunk: &mut [i64],
+        ctx: &EpilogueCtx<'_>,
         local: &mut RunStats,
     ) {
         let n = layer.sw.len();
@@ -414,7 +476,7 @@ impl PacBackend {
             }
             let sum_x = x.element_sum(pix);
             for (oc, slot) in row.iter_mut().enumerate() {
-                let raw = *slot
+                let mut raw = *slot
                     + sparsity_domain_sum_fast(
                         pop,
                         &layer.sw[oc],
@@ -422,12 +484,65 @@ impl PacBackend {
                         map,
                         self.config.rounding,
                     );
+                raw += ctx.perturb_and_monitor(layer, pop, pix, oc, map, local);
                 *slot = zero_point_correct(raw, sum_x, layer.w_sums[oc], k as i64, zpx, layer.zpw);
             }
             let dc = set.len() as u64;
             local.digital_cycles += dc * n as u64;
             local.pcu_ops += (64 - dc) * n as u64;
         }
+    }
+}
+
+/// Per-gemm runtime fault/monitor context threaded into the tile
+/// epilogues. On the fault-free, monitor-off fast path both branches
+/// are `None`/`false` and [`Self::perturb_and_monitor`] is a no-op the
+/// optimizer can drop.
+struct EpilogueCtx<'a> {
+    layer_id: usize,
+    /// Per-image content nonce (0 when faults are off).
+    nonce: u64,
+    /// PCU sampling-noise channel, when armed (`pcu_noise > 0`).
+    noise: Option<&'a FaultConfig>,
+    /// Accumulate this layer's estimator variance (terminal PAC layer
+    /// of an escalation-armed config only).
+    monitor: bool,
+}
+
+impl EpilogueCtx<'_> {
+    const OFF: EpilogueCtx<'static> =
+        EpilogueCtx { layer_id: 0, nonce: 0, noise: None, monitor: false };
+
+    /// The additive PCU-noise delta for output `(pix, oc)` (0 when the
+    /// channel is off), with the injection event and — when the monitor
+    /// is armed — the output's estimator variance recorded into `local`.
+    /// Draws are keyed by (seed, layer, image nonce, pixel, column):
+    /// identical for every tile/lane schedule.
+    #[inline]
+    fn perturb_and_monitor(
+        &self,
+        layer: &PreparedLayer,
+        pop: &[u32; 8],
+        pix: usize,
+        oc: usize,
+        map: &ComputeMap,
+        local: &mut RunStats,
+    ) -> i64 {
+        let mut delta = 0i64;
+        let mut noise_var = 0.0f64;
+        if let Some(fc) = self.noise {
+            let sigma = fc.pcu_noise * layer.k as f64;
+            let a = self.nonce ^ ((self.layer_id as u64) << 40) ^ pix as u64;
+            let mut rng = fault::keyed_rng(fc.seed, fault::DOMAIN_PCU, a, oc as u64);
+            delta = rng.gaussian(0.0, sigma).round() as i64;
+            noise_var = sigma * sigma;
+            local.faults.record_pcu(self.layer_id, 1);
+        }
+        if self.monitor {
+            local.estimator_var +=
+                pcu_estimate_variance(pop, &layer.sw[oc], layer.k as u32, map) + noise_var;
+        }
+        delta
     }
 }
 
@@ -543,7 +658,8 @@ fn tile_digital_generic(
 }
 
 /// Static-map epilogue over one tile: add the PCU sparsity-domain sum
-/// and apply the zero-point correction for every (pixel, column).
+/// (perturbed by the PCU-noise channel when armed) and apply the
+/// zero-point correction for every (pixel, column).
 #[allow(clippy::too_many_arguments)]
 fn tile_epilogue(
     layer: &PreparedLayer,
@@ -554,16 +670,20 @@ fn tile_epilogue(
     pt: usize,
     zpx: i32,
     chunk: &mut [i64],
+    ctx: &EpilogueCtx<'_>,
+    local: &mut RunStats,
 ) {
     let n = layer.sw.len();
     let k = layer.k as i64;
     for j in 0..pt {
-        let pop = x.pop(p0 + j);
-        let sum_x = x.element_sum(p0 + j);
+        let pix = p0 + j;
+        let pop = x.pop(pix);
+        let sum_x = x.element_sum(pix);
         let row = &mut chunk[j * n..(j + 1) * n];
         for (oc, slot) in row.iter_mut().enumerate() {
             let raw = *slot
-                + sparsity_domain_sum_fast(pop, &layer.sw[oc], &layer.div, map, rounding);
+                + sparsity_domain_sum_fast(pop, &layer.sw[oc], &layer.div, map, rounding)
+                + ctx.perturb_and_monitor(layer, pop, pix, oc, map, local);
             *slot = zero_point_correct(raw, sum_x, layer.w_sums[oc], k, zpx, layer.zpw);
         }
     }
@@ -605,14 +725,44 @@ impl MacBackend for PacBackend {
         let mut skip = vec![0u64; n * skip_words];
         let mut skip_on = Vec::with_capacity(n);
         let mut live_words = Vec::with_capacity(n);
+        let is_exact = (self.config.first_layer_exact && layer_id == 0)
+            || k < self.config.min_dp_len;
+        // Bit-cell fault channel: flip MSB plane bits at array-
+        // programming time, before the skip bitmaps are derived — the
+        // skip maps must describe the faulty array, not the nominal one.
+        // Digital-fallback layers never read the planes and stay clean.
+        let inject = !is_exact && self.config.fault.weight_msb_ber > 0.0;
+        let tail_bits = if words == 0 { 0 } else { (k - (words - 1) * 64) as u32 };
+        let mut weight_bits_flipped = 0u64;
         for oc in 0..n {
             let row = &wd[oc * k..(oc + 1) * k];
             let bp = BitPlanes::from_u8(row);
+            // Sparsity registers and zero-point sums keep their nominal
+            // values: the PCU and the correction were programmed from
+            // the intended weights, and the drift against the faulty
+            // array is exactly the injected error.
             sw.push(bp.pop);
             w_sums.push(row.iter().map(|&v| v as i64).sum());
             for q in 0..8 {
                 let off = (oc * 8 + q) * words;
                 planes[off..off + words].copy_from_slice(&bp.planes[q]);
+            }
+            if inject {
+                let fc = &self.config.fault;
+                for q in 4..8usize {
+                    for i in 0..words {
+                        let valid = if i + 1 == words { tail_bits } else { 64 };
+                        let mut rng = fault::keyed_rng(
+                            fc.seed,
+                            fault::DOMAIN_WEIGHT,
+                            ((layer_id as u64) << 32) | oc as u64,
+                            ((q as u64) << 32) | i as u64,
+                        );
+                        let mask = fault::flip_mask(&mut rng, fc.weight_msb_ber, valid);
+                        planes[(oc * 8 + q) * words + i] ^= mask;
+                        weight_bits_flipped += mask.count_ones() as u64;
+                    }
+                }
             }
             // Live-word bitmap over the MSB planes + the per-column
             // density auto-off decision (DESIGN.md §13.3).
@@ -631,13 +781,7 @@ impl MacBackend for PacBackend {
                     && density <= SKIP_DENSITY_AUTO_OFF,
             );
         }
-        let exact = if (self.config.first_layer_exact && layer_id == 0)
-            || k < self.config.min_dp_len
-        {
-            Some((weight.clone(), zpw))
-        } else {
-            None
-        };
+        let exact = if is_exact { Some((weight.clone(), zpw)) } else { None };
         self.layers.push(PreparedLayer {
             planes,
             words,
@@ -651,7 +795,19 @@ impl MacBackend for PacBackend {
             skip_words,
             skip_on,
             live_words,
+            weight_bits_flipped,
         });
+    }
+
+    /// Surface the configured error model to the interpreter (edge
+    /// channel + per-image nonce); `None` when every channel is off so
+    /// the fault-free path never hashes images or consults the config.
+    fn fault(&self) -> Option<&FaultConfig> {
+        if self.config.fault.is_off() {
+            None
+        } else {
+            Some(&self.config.fault)
+        }
     }
 
     fn gemm_layer(
@@ -660,6 +816,7 @@ impl MacBackend for PacBackend {
         input: GemmInput<'_>,
         pixels: usize,
         zpx: i32,
+        nonce: u64,
         par: &Parallelism,
         planes: &mut PackedPatches,
         out: &mut Vec<i64>,
@@ -713,6 +870,25 @@ impl MacBackend for PacBackend {
         let is4x4 = digital_set.len() == 16
             && digital_set.iter().all(|&(p, q)| p >= 4 && q >= 4);
 
+        // Runtime fault/monitor context for the tile epilogues: the
+        // PCU-noise channel when armed, and the estimator-variance
+        // monitor on the **terminal** PAC layer of an escalation-armed
+        // config (the layer whose accumulators become logits — the
+        // variance the Session's margin gate thresholds against).
+        let ctx = if self.config.fault.pcu_noise > 0.0
+            || (self.config.escalation.is_some() && layer_id + 1 == self.layers.len())
+        {
+            EpilogueCtx {
+                layer_id,
+                nonce,
+                noise: (self.config.fault.pcu_noise > 0.0).then_some(&self.config.fault),
+                monitor: self.config.escalation.is_some()
+                    && layer_id + 1 == self.layers.len(),
+            }
+        } else {
+            EpilogueCtx::OFF
+        };
+
         // (3) Blocked sweep: tiles of TILE_PIXELS pixels × the full
         // weight-column block per pass, fanned out over rayon per tile.
         // Each tile owns a disjoint [pixel][oc] slab range and pure
@@ -737,12 +913,14 @@ impl MacBackend for PacBackend {
                         pt,
                         zpx,
                         chunk,
+                        &ctx,
+                        &mut local,
                     );
                     let dc = digital_set.len() as u64;
                     local.digital_cycles += dc * (pt * n) as u64;
                     local.pcu_ops += (64 - dc) * (pt * n) as u64;
                 }
-                Some(th) => self.tile_dynamic(layer, x, th, p0, pt, zpx, chunk, &mut local),
+                Some(th) => self.tile_dynamic(layer, x, th, p0, pt, zpx, chunk, &ctx, &mut local),
             }
             local
         });
@@ -750,6 +928,12 @@ impl MacBackend for PacBackend {
             stats.merge(l);
         }
         stats.macs += (pixels * n * k) as u64;
+        // Array-programming flips are a property of the prepared layer,
+        // recorded once per gemm call so per-image ledgers compare
+        // across batch sizes and par settings.
+        if layer.weight_bits_flipped > 0 {
+            stats.faults.record_weight(layer_id, layer.weight_bits_flipped);
+        }
     }
 }
 
@@ -963,6 +1147,7 @@ mod tests {
                         GemmInput::Dense(&cols),
                         pixels,
                         7,
+                        0,
                         &par,
                         &mut planes,
                         &mut out,
@@ -1030,6 +1215,7 @@ mod tests {
                     GemmInput::Dense(&cols),
                     pixels,
                     7,
+                    0,
                     &Parallelism::off(),
                     &mut planes,
                     &mut out,
@@ -1119,6 +1305,7 @@ mod tests {
             GemmInput::Dense(&[]),
             4,
             5,
+            0,
             &Parallelism::off(),
             &mut planes,
             &mut out,

@@ -140,6 +140,11 @@ impl<B: MacBackend> MacBackend for ProfilingBackend<B> {
         self.inner.packed_input_bits(layer_id)
     }
 
+    /// Transparent to fault injection too: the wrapped backend's model.
+    fn fault(&self) -> Option<&crate::fault::FaultConfig> {
+        self.inner.fault()
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn gemm_layer(
         &self,
@@ -147,6 +152,7 @@ impl<B: MacBackend> MacBackend for ProfilingBackend<B> {
         input: GemmInput<'_>,
         pixels: usize,
         zpx: i32,
+        nonce: u64,
         par: &Parallelism,
         planes: &mut PackedPatches,
         out: &mut Vec<i64>,
@@ -186,7 +192,7 @@ impl<B: MacBackend> MacBackend for ProfilingBackend<B> {
             }
             p.x_elems += elems;
         }
-        self.inner.gemm_layer(layer_id, input, pixels, zpx, par, planes, out, stats)
+        self.inner.gemm_layer(layer_id, input, pixels, zpx, nonce, par, planes, out, stats)
     }
 }
 
@@ -301,6 +307,7 @@ mod tests {
             0,
             GemmInput::Dense(&[255, 255, 255, 255]),
             1,
+            0,
             0,
             &Parallelism::off(),
             &mut PackedPatches::default(),

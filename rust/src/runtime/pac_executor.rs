@@ -19,8 +19,8 @@
 //! software latency *and* modeled silicon cycles/energy side by side.
 
 use crate::coordinator::scheduler::CostEstimate;
-use crate::coordinator::server::BatchExecutor;
-use crate::engine::{Engine, EngineBuilder, PacimError, Session};
+use crate::coordinator::server::{BatchExecutor, ExecTelemetry};
+use crate::engine::{Engine, EngineBuilder, Fidelity, PacimError, Session};
 use crate::nn::exec::RunStats;
 use crate::nn::layers::Model;
 use crate::nn::pac_exec::PacConfig;
@@ -117,6 +117,41 @@ impl BatchExecutor for PacExecutor {
     }
 
     fn execute(&mut self, batch: &[f32], occupancy: usize) -> anyhow::Result<Vec<f32>> {
+        self.run(batch, occupancy, None)
+    }
+
+    fn execute_with(
+        &mut self,
+        batch: &[f32],
+        occupancy: usize,
+        fidelities: &[Fidelity],
+    ) -> anyhow::Result<Vec<f32>> {
+        self.run(batch, occupancy, Some(fidelities))
+    }
+
+    fn cost_estimate(&self) -> Option<CostEstimate> {
+        Some(self.engine.cost_estimate())
+    }
+
+    fn telemetry(&self) -> ExecTelemetry {
+        ExecTelemetry {
+            traffic_bits: self.stats.traffic.total_bits(),
+            traffic_baseline_bits: self.stats.traffic.total_baseline_bits(),
+            escalated: self.stats.escalations,
+        }
+    }
+}
+
+impl PacExecutor {
+    /// The shared execute path: quantize the occupied lanes and run them
+    /// through the session — fanned out when every lane is `Fast` (or no
+    /// fidelities were given), fidelity-routed otherwise.
+    fn run(
+        &mut self,
+        batch: &[f32],
+        occupancy: usize,
+        fidelities: Option<&[Fidelity]>,
+    ) -> anyhow::Result<Vec<f32>> {
         let in_elems = self.input_elems();
         let out_elems = self.output_elems();
         if batch.len() != self.batch * in_elems {
@@ -138,17 +173,26 @@ impl BatchExecutor for PacExecutor {
             .map(|&x| p.quantize(x))
             .collect();
         let images: Vec<&[u8]> = quantized.chunks_exact(in_elems).collect();
-        let lanes = self.session.infer_batch(&images)?;
+        let lanes = match fidelities {
+            Some(f) => {
+                if f.len() != occupancy {
+                    return Err(PacimError::ShapeMismatch {
+                        context: "PacExecutor::execute_with fidelities".into(),
+                        got: f.len(),
+                        want: occupancy,
+                    }
+                    .into());
+                }
+                self.session.infer_batch_with(&images, f)?
+            }
+            None => self.session.infer_batch(&images)?,
+        };
         let mut out = vec![0f32; self.batch * out_elems];
         for (lane, inf) in lanes.iter().enumerate() {
             self.stats.merge(&inf.stats);
             out[lane * out_elems..(lane + 1) * out_elems].copy_from_slice(&inf.logits);
         }
         Ok(out)
-    }
-
-    fn cost_estimate(&self) -> Option<CostEstimate> {
-        Some(self.engine.cost_estimate())
     }
 }
 
@@ -251,5 +295,39 @@ mod tests {
         let (model, _) = workload();
         let err = PacExecutor::new(model, PacConfig::serving(), 0).unwrap_err();
         assert!(matches!(err, PacimError::InvalidConfig(_)), "{err}");
+    }
+
+    #[test]
+    fn fidelity_classes_route_through_the_executor() {
+        use crate::nn::pac_exec::EscalationConfig;
+        let (model, ds) = workload();
+        // An unreachable margin floor: every Auto lane escalates.
+        let config = PacConfig {
+            escalation: Some(EscalationConfig {
+                min_margin: 1e30,
+                sigma: 0.0,
+            }),
+            ..PacConfig::serving()
+        };
+        let mut exec = PacExecutor::new(model.clone(), config, 2).unwrap();
+        let in_elems = exec.input_elems();
+        let mut flat = vec![0f32; 2 * in_elems];
+        for i in 0..2 {
+            for (j, &q) in ds.image(i).iter().enumerate() {
+                flat[i * in_elems + j] = ds.params.dequantize(q);
+            }
+        }
+        let auto = exec.execute_with(&flat, 2, &[Fidelity::Auto, Fidelity::Auto]).unwrap();
+        assert_eq!(exec.stats().escalations, 2);
+        let t = exec.telemetry();
+        assert_eq!(t.escalated, 2);
+        assert!(t.traffic_bits > 0);
+        assert!(t.traffic_baseline_bits >= t.traffic_bits);
+        // Escalated lanes carry the exact engine's logits.
+        let mut exact = PacExecutor::exact(model, 2).unwrap();
+        let want = exact.execute(&flat, 2).unwrap();
+        assert_eq!(auto, want);
+        // A mismatched fidelity slice is a typed error.
+        assert!(exec.execute_with(&flat, 2, &[Fidelity::Fast]).is_err());
     }
 }

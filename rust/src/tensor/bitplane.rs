@@ -169,6 +169,16 @@ impl PackedPatches {
         &self.planes
     }
 
+    /// Mutable raw plane slab — fault-injection hook (`pacim::fault`)
+    /// flips transmitted plane bits in place. Layout as
+    /// [`Self::planes`]. The sparsity counters are intentionally *not*
+    /// recomputed: the encoded edge carries planes and counters as
+    /// separate payloads, so a corrupted plane word must not repair
+    /// the counters it shipped with.
+    pub(crate) fn planes_mut(&mut self) -> &mut [u64] {
+        &mut self.planes
+    }
+
     /// Plane `p` of pixel `pix`.
     pub fn plane(&self, pix: usize, p: usize) -> &[u64] {
         let base = (pix * 8 + p) * self.words;

@@ -158,6 +158,19 @@ pub struct ServeScenario {
     pub modeled_cycles_per_image: u64,
     /// Modeled PACiM energy per image, µJ (0 = no cost model).
     pub modeled_energy_uj_per_image: f64,
+    /// Inter-layer bits the executors actually moved (the `TrafficLedger`
+    /// totals aggregated through `ServerMetrics`; 0 for executors with no
+    /// ledger, e.g. mock).
+    pub measured_traffic_bits: u64,
+    /// 8-bit dense-equivalent bits for the same edges (0 = no ledger).
+    pub traffic_baseline_bits: u64,
+    /// `measured_traffic_bits / completed` — measured bits moved per
+    /// completed request (0 when nothing completed); `validate_serve`
+    /// recomputes it from the fields, a writer cannot cook it.
+    pub bits_per_request: f64,
+    /// Requests re-run through the exact backend by the confidence
+    /// monitor (0 unless the executor serves `Fidelity::Auto` lanes).
+    pub escalated: u64,
 }
 
 /// `BENCH_serve.json` — serving-pipeline report.
@@ -643,8 +656,201 @@ pub fn validate_serve(json: &str) -> Result<ServeReport, String> {
                 s.name, filled, s.completed
             ));
         }
+        let want_bpr = if s.completed > 0 {
+            s.measured_traffic_bits as f64 / s.completed as f64
+        } else {
+            0.0
+        };
+        if !(s.bits_per_request.is_finite() && (s.bits_per_request - want_bpr).abs() < 1e-6) {
+            return Err(format!(
+                "scenario '{}': bits_per_request says {} but measured_traffic_bits / \
+                 completed gives {want_bpr}",
+                s.name, s.bits_per_request
+            ));
+        }
+        if s.measured_traffic_bits > s.traffic_baseline_bits {
+            return Err(format!(
+                "scenario '{}': measured traffic {} exceeds its 8-bit dense baseline {}",
+                s.name, s.measured_traffic_bits, s.traffic_baseline_bits
+            ));
+        }
     }
     Ok(r)
+}
+
+/// One fault-injection operating point (a `BENCH_resilience.json` row):
+/// the same image set scored through the exact baseline, the faulted
+/// PAC engine, and the faulted PAC engine with confidence-gated
+/// escalation, all at one bit-error rate.
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct ResilienceRow {
+    /// Bit-error rate driving all three fault channels
+    /// (`FaultConfig::at_ber`); 0 = the fault-free reference row.
+    pub ber: f64,
+    /// Exact 8b/8b accuracy on the (self-labeled) split — 1.0 by
+    /// construction when labels are the exact engine's own argmax.
+    pub acc_exact: f64,
+    /// Faulted PAC accuracy without escalation.
+    pub acc_plain: f64,
+    /// Faulted PAC accuracy with `Fidelity::Auto` escalation.
+    pub acc_escalated: f64,
+    /// Fraction of images the monitor re-ran through the exact backend.
+    pub escalation_rate: f64,
+    /// Weight MSB-plane bits flipped over the non-escalating sweep.
+    pub weight_bits_flipped: u64,
+    /// Encoded-edge transmission bits flipped over the same sweep.
+    pub edge_bits_flipped: u64,
+    /// Outputs that received PCU sampling noise over the same sweep.
+    pub pcu_noise_events: u64,
+    /// Fraction of the fault-induced accuracy loss the escalating engine
+    /// recovered ([`resilience_recovered`]); `validate_resilience`
+    /// recomputes it — a writer cannot cook the gated number.
+    pub recovered: f64,
+}
+
+/// `BENCH_resilience.json` — fault-injection resilience report
+/// (`pacim faultsweep`).
+#[derive(Debug, Clone, Serialize, Deserialize)]
+#[serde(deny_unknown_fields)]
+pub struct ResilienceReport {
+    /// Always `"resilience"`.
+    pub bench: String,
+    pub quick: bool,
+    /// Model the sweep evaluated (label + weight source).
+    pub model: String,
+    /// Images per engine evaluation.
+    pub images: usize,
+    /// Calibrated escalation margin floor (logit units; the clean-run
+    /// margin percentile `pacim faultsweep` chose).
+    pub min_margin: f64,
+    /// Whether an engine built with `FaultConfig::off()` reproduced the
+    /// fault-free engine's logits bit-for-bit on this split.
+    pub fault_off_bit_identical: bool,
+    pub rows: Vec<ResilienceRow>,
+}
+
+/// The operating point [`enforce_resilience`] gates on: the paper-scale
+/// "survivable" error rate where escalation must earn its keep.
+pub const RESILIENCE_GATE_BER: f64 = 1e-3;
+
+/// Minimum fraction of the fault-induced accuracy loss the escalating
+/// engine must recover at [`RESILIENCE_GATE_BER`].
+pub const RESILIENCE_RECOVERY_FLOOR: f64 = 0.5;
+
+/// Fraction of the fault-induced loss escalation won back:
+/// `(acc_escalated − acc_plain) / (acc_exact − acc_plain)`, 0 when the
+/// faulted engine lost nothing. The single definition both the
+/// `faultsweep` writer and [`validate_resilience`] use.
+pub fn resilience_recovered(acc_exact: f64, acc_plain: f64, acc_escalated: f64) -> f64 {
+    let loss = acc_exact - acc_plain;
+    if loss <= 0.0 {
+        0.0
+    } else {
+        (acc_escalated - acc_plain) / loss
+    }
+}
+
+/// Parse + sanity-check a `BENCH_resilience.json` payload.
+///
+/// Every row's `recovered` is recomputed from its accuracies, and the
+/// `ber = 0` reference row must report zero injections — the
+/// never-trust-the-writer posture of [`validate_traffic`].
+pub fn validate_resilience(json: &str) -> Result<ResilienceReport, String> {
+    let r: ResilienceReport = serde_json::from_str(json).map_err(|e| e.to_string())?;
+    if r.bench != "resilience" {
+        return Err(format!("bench field is '{}', expected 'resilience'", r.bench));
+    }
+    if r.rows.is_empty() {
+        return Err("no sweep rows".into());
+    }
+    if r.images == 0 {
+        return Err("zero images evaluated".into());
+    }
+    if !(r.min_margin.is_finite() && r.min_margin >= 0.0) {
+        return Err(format!("invalid min_margin {}", r.min_margin));
+    }
+    for row in &r.rows {
+        if !(row.ber.is_finite() && (0.0..1.0).contains(&row.ber)) {
+            return Err(format!("row ber {} out of [0, 1)", row.ber));
+        }
+        for (name, acc) in [
+            ("acc_exact", row.acc_exact),
+            ("acc_plain", row.acc_plain),
+            ("acc_escalated", row.acc_escalated),
+        ] {
+            if !(acc.is_finite() && (0.0..=1.0).contains(&acc)) {
+                return Err(format!("row ber {}: {name} out of [0, 1]", row.ber));
+            }
+        }
+        if !(row.escalation_rate.is_finite() && (0.0..=1.0).contains(&row.escalation_rate)) {
+            return Err(format!("row ber {}: escalation_rate out of [0, 1]", row.ber));
+        }
+        let want = resilience_recovered(row.acc_exact, row.acc_plain, row.acc_escalated);
+        if !(row.recovered.is_finite() && (row.recovered - want).abs() < 1e-9) {
+            return Err(format!(
+                "row ber {}: recovered says {} but the accuracies give {want}",
+                row.ber, row.recovered
+            ));
+        }
+        if row.ber == 0.0
+            && row.weight_bits_flipped + row.edge_bits_flipped + row.pcu_noise_events > 0
+        {
+            return Err(
+                "the ber = 0 reference row reports injections — the fault channels leak \
+                 when disabled"
+                    .into(),
+            );
+        }
+    }
+    for w in r.rows.windows(2) {
+        if w[1].ber <= w[0].ber {
+            return Err(format!(
+                "rows out of order: ber {} follows {}",
+                w[1].ber, w[0].ber
+            ));
+        }
+    }
+    Ok(r)
+}
+
+/// The resilience gate (CI bench-smoke, behind
+/// `PACIM_ENFORCE_RESILIENCE`): fault-off runs must be bit-identical to
+/// the fault-free engine, the sweep must include the fault-free
+/// reference row and the [`RESILIENCE_GATE_BER`] row, the gate row must
+/// show the channels actually injected and the monitor actually fired,
+/// and — when the faults cost any accuracy — escalation must recover at
+/// least [`RESILIENCE_RECOVERY_FLOOR`] of the loss.
+pub fn enforce_resilience(r: &ResilienceReport) -> Result<(), String> {
+    if !r.fault_off_bit_identical {
+        return Err("fault-off run diverged from the fault-free engine".into());
+    }
+    if !r.rows.iter().any(|row| row.ber == 0.0) {
+        return Err("no ber = 0 reference row".into());
+    }
+    let Some(gate) = r.rows.iter().find(|row| row.ber == RESILIENCE_GATE_BER) else {
+        return Err(format!("no row at the gate BER {RESILIENCE_GATE_BER:e}"));
+    };
+    if gate.weight_bits_flipped + gate.edge_bits_flipped + gate.pcu_noise_events == 0 {
+        return Err(format!(
+            "gate row (ber {RESILIENCE_GATE_BER:e}) injected nothing — the sweep \
+             measured a fault-free engine"
+        ));
+    }
+    if gate.escalation_rate <= 0.0 {
+        return Err(format!(
+            "gate row (ber {RESILIENCE_GATE_BER:e}): the confidence monitor never fired"
+        ));
+    }
+    let loss = gate.acc_exact - gate.acc_plain;
+    if loss > 0.0 && gate.recovered < RESILIENCE_RECOVERY_FLOOR {
+        return Err(format!(
+            "gate row (ber {RESILIENCE_GATE_BER:e}): escalation recovered {:.3} of the \
+             {loss:.4} accuracy loss, below the {RESILIENCE_RECOVERY_FLOOR} floor",
+            gate.recovered
+        ));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -1014,16 +1220,125 @@ mod tests {
                 batch_fill: vec![2, 1, 2, 0],
                 modeled_cycles_per_image: 0,
                 modeled_energy_uj_per_image: 0.0,
+                measured_traffic_bits: 4000,
+                traffic_baseline_bits: 8000,
+                bits_per_request: 400.0,
+                escalated: 0,
             }],
         };
         let json = serde_json::to_string(&r).unwrap();
         validate_serve(&json).unwrap();
+
+        // A cooked bits_per_request is a schema error: the validator
+        // recomputes it from measured_traffic_bits / completed.
+        let mut cooked = r.clone();
+        cooked.scenarios[0].bits_per_request = 100.0;
+        let json = serde_json::to_string(&cooked).unwrap();
+        assert!(validate_serve(&json).unwrap_err().contains("bits_per_request"));
+        // Measured traffic above its dense baseline is rejected too.
+        let mut inflated = r.clone();
+        inflated.scenarios[0].measured_traffic_bits = 9000;
+        inflated.scenarios[0].bits_per_request = 900.0;
+        let json = serde_json::to_string(&inflated).unwrap();
+        assert!(validate_serve(&json).unwrap_err().contains("baseline"));
     }
 
     #[test]
     fn unknown_field_rejected() {
         let json = r#"{"bench":"serve","quick":true,"scenarios":[],"extra":1}"#;
         assert!(validate_serve(json).is_err());
+    }
+
+    fn resilience_row(ber: f64, acc_plain: f64, acc_escalated: f64) -> ResilienceRow {
+        let injected = if ber > 0.0 { (ber * 1e6) as u64 } else { 0 };
+        ResilienceRow {
+            ber,
+            acc_exact: 1.0,
+            acc_plain,
+            acc_escalated,
+            escalation_rate: if acc_escalated > acc_plain { 0.4 } else { 0.1 },
+            weight_bits_flipped: injected,
+            edge_bits_flipped: injected / 2,
+            pcu_noise_events: injected * 3,
+            recovered: resilience_recovered(1.0, acc_plain, acc_escalated),
+        }
+    }
+
+    fn sample_resilience() -> ResilienceReport {
+        ResilienceReport {
+            bench: "resilience".into(),
+            quick: true,
+            model: "tiny_resnet-synthetic".into(),
+            images: 64,
+            min_margin: 1.25,
+            fault_off_bit_identical: true,
+            rows: vec![
+                resilience_row(0.0, 0.92, 0.98),
+                resilience_row(1e-3, 0.72, 0.95),
+            ],
+        }
+    }
+
+    #[test]
+    fn resilience_roundtrip_and_gate() {
+        let r = sample_resilience();
+        let json = serde_json::to_string_pretty(&r).unwrap();
+        let back = validate_resilience(&json).unwrap();
+        assert_eq!(back.rows.len(), 2);
+        enforce_resilience(&back).unwrap();
+    }
+
+    #[test]
+    fn resilience_recovered_is_recomputed_not_trusted() {
+        // Cooking the gated number is schema-invalid.
+        let mut r = sample_resilience();
+        r.rows[1].recovered = 0.99;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_resilience(&json).unwrap_err().contains("recovered"));
+        // A ber = 0 row reporting injections means the channels leak
+        // when disabled.
+        let mut r = sample_resilience();
+        r.rows[0].pcu_noise_events = 5;
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_resilience(&json).unwrap_err().contains("leak"));
+        // Out-of-order rows are rejected.
+        let mut r = sample_resilience();
+        r.rows.swap(0, 1);
+        let json = serde_json::to_string(&r).unwrap();
+        assert!(validate_resilience(&json).unwrap_err().contains("out of order"));
+    }
+
+    #[test]
+    fn resilience_gate() {
+        // Weak recovery at the gate BER fails.
+        let mut r = sample_resilience();
+        r.rows[1] = resilience_row(1e-3, 0.72, 0.80); // recovers 8 of 28 points
+        assert!(enforce_resilience(&r).unwrap_err().contains("floor"));
+        // A fault-off divergence is fatal regardless of accuracy.
+        let mut r = sample_resilience();
+        r.fault_off_bit_identical = false;
+        assert!(enforce_resilience(&r).unwrap_err().contains("diverged"));
+        // The gate refuses a sweep that never injected at the gate BER.
+        let mut r = sample_resilience();
+        r.rows[1].weight_bits_flipped = 0;
+        r.rows[1].edge_bits_flipped = 0;
+        r.rows[1].pcu_noise_events = 0;
+        assert!(enforce_resilience(&r).unwrap_err().contains("injected nothing"));
+        // …or whose monitor never fired there.
+        let mut r = sample_resilience();
+        r.rows[1].escalation_rate = 0.0;
+        assert!(enforce_resilience(&r).unwrap_err().contains("never fired"));
+        // …or that skipped the gate BER / the reference row entirely.
+        let mut r = sample_resilience();
+        r.rows.remove(1);
+        assert!(enforce_resilience(&r).unwrap_err().contains("gate BER"));
+        let mut r = sample_resilience();
+        r.rows.remove(0);
+        assert!(enforce_resilience(&r).unwrap_err().contains("reference"));
+        // Lossless gate rows pass without a recovery requirement.
+        let mut r = sample_resilience();
+        r.rows[1] = resilience_row(1e-3, 1.0, 1.0);
+        enforce_resilience(&r).unwrap();
     }
 
     #[test]

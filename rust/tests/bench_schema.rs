@@ -13,8 +13,9 @@
 //! produced artifacts) — re-parse the actual emitted JSON.
 
 use pacim::util::benchfmt::{
-    enforce_blocked_floor, enforce_simd_floor, enforce_traffic_floor, enforce_tune_front,
-    validate_hotpath, validate_serve, validate_traffic, validate_tune,
+    enforce_blocked_floor, enforce_resilience, enforce_simd_floor, enforce_traffic_floor,
+    enforce_tune_front, validate_hotpath, validate_resilience, validate_serve, validate_traffic,
+    validate_tune,
 };
 use std::path::PathBuf;
 
@@ -146,7 +147,11 @@ const SERVE_GOLDEN: &str = r#"{
       "mean_batch_occupancy": 6.57,
       "batch_fill": [0, 0, 1, 0, 1, 1, 0, 4],
       "modeled_cycles_per_image": 934912,
-      "modeled_energy_uj_per_image": 11.8
+      "modeled_energy_uj_per_image": 11.8,
+      "measured_traffic_bits": 4600000,
+      "traffic_baseline_bits": 9200000,
+      "bits_per_request": 100000.0,
+      "escalated": 0
     }
   ]
 }"#;
@@ -218,6 +223,39 @@ const TUNE_GOLDEN: &str = r#"{
   ],
   "measured_bits": 1417216,
   "analytic_bits": 1417216
+}"#;
+
+const RESILIENCE_GOLDEN: &str = r#"{
+  "bench": "resilience",
+  "quick": true,
+  "model": "tiny_resnet-synthetic",
+  "images": 48,
+  "min_margin": 1.5,
+  "fault_off_bit_identical": true,
+  "rows": [
+    {
+      "ber": 0.0,
+      "acc_exact": 1.0,
+      "acc_plain": 0.9375,
+      "acc_escalated": 1.0,
+      "escalation_rate": 0.85,
+      "weight_bits_flipped": 0,
+      "edge_bits_flipped": 0,
+      "pcu_noise_events": 0,
+      "recovered": 1.0
+    },
+    {
+      "ber": 0.001,
+      "acc_exact": 1.0,
+      "acc_plain": 0.75,
+      "acc_escalated": 0.9375,
+      "escalation_rate": 0.875,
+      "weight_bits_flipped": 412,
+      "edge_bits_flipped": 96,
+      "pcu_noise_events": 147456,
+      "recovered": 0.75
+    }
+  ]
 }"#;
 
 #[test]
@@ -363,6 +401,67 @@ fn simd_regression_gate_catches_slowdown_and_scalar_dodge() {
 fn extra_field_is_schema_drift() {
     let drifted = SERVE_GOLDEN.replace("\"quick\": true,", "\"quick\": true, \"v\": 2,");
     assert!(validate_serve(&drifted).is_err());
+}
+
+#[test]
+fn serve_traffic_fields_are_recomputed_not_trusted() {
+    // 4600000 bits over 46 completed requests must report exactly
+    // 100000 bits/request; a cooked value is schema drift.
+    let cooked =
+        SERVE_GOLDEN.replace("\"bits_per_request\": 100000.0", "\"bits_per_request\": 1.0");
+    assert!(validate_serve(&cooked).unwrap_err().contains("bits_per_request"));
+    // Measured traffic above the dense baseline is physically impossible
+    // for this dataplane and is rejected.
+    let inflated = SERVE_GOLDEN
+        .replace("\"measured_traffic_bits\": 4600000", "\"measured_traffic_bits\": 9660000")
+        .replace("\"bits_per_request\": 100000.0", "\"bits_per_request\": 210000.0");
+    assert!(validate_serve(&inflated).unwrap_err().contains("baseline"));
+}
+
+#[test]
+fn resilience_golden_passes_and_holds_the_gate() {
+    let r = validate_resilience(RESILIENCE_GOLDEN).unwrap();
+    assert_eq!(r.rows.len(), 2);
+    assert!(r.fault_off_bit_identical);
+    enforce_resilience(&r).unwrap();
+}
+
+#[test]
+fn resilience_schema_drift_and_cooked_recovery_rejected() {
+    // Renamed field → drift in both directions.
+    let drifted = RESILIENCE_GOLDEN.replace("\"recovered\"", "\"recovery\"");
+    assert!(validate_resilience(&drifted).is_err());
+    // The gated number is recomputed from the accuracies: a writer
+    // cannot claim more recovery than the rows show.
+    let cooked = RESILIENCE_GOLDEN.replacen("\"recovered\": 0.75", "\"recovered\": 0.99", 1);
+    assert!(validate_resilience(&cooked).unwrap_err().contains("recovered"));
+    // A ber = 0 row reporting injections means the disabled channels
+    // leak — schema-invalid, not a gate nuance.
+    let leaky = RESILIENCE_GOLDEN.replacen("\"pcu_noise_events\": 0", "\"pcu_noise_events\": 7", 1);
+    assert!(validate_resilience(&leaky).unwrap_err().contains("leak"));
+}
+
+#[test]
+fn resilience_gate_catches_weak_recovery_and_divergence() {
+    // Escalation recovering less than half the loss fails the gate
+    // (0.75 → 0.80 recovers 0.05 of the 0.25 lost).
+    let weak = RESILIENCE_GOLDEN
+        .replace("\"acc_escalated\": 0.9375", "\"acc_escalated\": 0.8")
+        .replacen("\"recovered\": 0.75", "\"recovered\": 0.2", 1);
+    let r = validate_resilience(&weak).unwrap();
+    assert!(enforce_resilience(&r).unwrap_err().contains("floor"));
+    // A fault-off divergence is fatal regardless of the accuracies.
+    let diverged = RESILIENCE_GOLDEN
+        .replace("\"fault_off_bit_identical\": true", "\"fault_off_bit_identical\": false");
+    let r = validate_resilience(&diverged).unwrap();
+    assert!(enforce_resilience(&r).unwrap_err().contains("diverged"));
+    // A gate row that never injected cannot vacuously pass.
+    let hollow = RESILIENCE_GOLDEN
+        .replace("\"weight_bits_flipped\": 412", "\"weight_bits_flipped\": 0")
+        .replace("\"edge_bits_flipped\": 96", "\"edge_bits_flipped\": 0")
+        .replace("\"pcu_noise_events\": 147456", "\"pcu_noise_events\": 0");
+    let r = validate_resilience(&hollow).unwrap();
+    assert!(enforce_resilience(&r).unwrap_err().contains("injected nothing"));
 }
 
 #[test]
@@ -514,5 +613,40 @@ fn real_serve_artifact_if_present() {
             println!("validated {} ({} scenarios)", p.display(), r.scenarios.len());
         }
         None => println!("no BENCH_serve.json present; golden-sample checks only"),
+    }
+}
+
+#[test]
+fn real_resilience_artifact_if_present() {
+    // CI's bench-smoke job runs `pacim faultsweep --quick` and then sets
+    // PACIM_ENFORCE_RESILIENCE=1: fault-off runs must have been
+    // bit-identical to the fault-free engine, and at BER 1e-3 the
+    // escalating engine must recover at least half the accuracy the
+    // non-escalating one loses, or the job fails.
+    let enforce =
+        std::env::var("PACIM_ENFORCE_RESILIENCE").is_ok_and(|v| v != "0" && !v.is_empty());
+    match artifact("PACIM_BENCH_RESILIENCE_JSON", "BENCH_resilience.json") {
+        Some(p) => {
+            let json = std::fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("cannot read {}: {e}", p.display()));
+            let r = validate_resilience(&json)
+                .unwrap_or_else(|e| panic!("{} schema drift: {e}", p.display()));
+            println!(
+                "validated {} ({} rows, fault-off bit-identical: {})",
+                p.display(),
+                r.rows.len(),
+                r.fault_off_bit_identical
+            );
+            if enforce {
+                enforce_resilience(&r)
+                    .unwrap_or_else(|e| panic!("{} resilience regression: {e}", p.display()));
+                println!("resilience gate enforced: recovery >= 50% at BER 1e-3");
+            }
+        }
+        None if enforce => panic!(
+            "PACIM_ENFORCE_RESILIENCE is set but no BENCH_resilience.json was found \
+             (checked PACIM_BENCH_RESILIENCE_JSON and the default CWD path)"
+        ),
+        None => println!("no BENCH_resilience.json present; golden-sample checks only"),
     }
 }

@@ -6,7 +6,8 @@ use std::process::Command;
 
 /// Every subcommand the binary advertises. Keep in sync with
 /// `SUBCOMMANDS` in `src/main.rs` — this test is the pin.
-const EXPECTED: &[&str] = &["info", "map", "rmse", "simulate", "accuracy", "serve", "tune"];
+const EXPECTED: &[&str] =
+    &["info", "map", "rmse", "simulate", "accuracy", "serve", "tune", "faultsweep"];
 
 fn usage_stderr(arg: Option<&str>) -> String {
     let mut cmd = Command::new(env!("CARGO_BIN_EXE_pacim"));

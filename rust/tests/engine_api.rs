@@ -79,6 +79,7 @@ fn prop_engine_bit_identical_to_legacy_reference() {
             min_dp_len: if rng.bernoulli(0.5) { 0 } else { 512 },
             par: Parallelism::off(),
             fuse_dataplane: rng.bernoulli(0.5),
+            ..PacConfig::default()
         };
 
         // Reference: explicit backend + the low-level interpreter entry.
@@ -535,6 +536,10 @@ fn queue_full_and_lifecycle_errors_pass_through_typed() {
     assert!(matches!(stopped, PacimError::ServerStopped));
     let dropped: PacimError = ServeError::Dropped.into();
     assert!(matches!(dropped, PacimError::RequestDropped));
+    let lost: PacimError = ServeError::WorkerLost.into();
+    assert!(matches!(lost, PacimError::WorkerLost));
+    let late: PacimError = ServeError::DeadlineExceeded.into();
+    assert!(matches!(late, PacimError::DeadlineExceeded));
 }
 
 #[test]

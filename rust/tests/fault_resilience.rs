@@ -1,0 +1,186 @@
+//! Fault-injection contracts (DESIGN.md §15): a `FaultConfig::off()`
+//! engine is **bit-identical** to one built without the fault stage
+//! (property-tested — logits and the full `RunStats`, fault and traffic
+//! ledgers included), and a given `(seed, BER)` injects the **same**
+//! per-layer counters no matter how the work is scheduled (tile
+//! parallelism on/off, single-image vs batch lanes) — the
+//! position-keyed RNG contract that makes fault sweeps reproducible.
+
+use pacim::engine::{EngineBuilder, Fidelity, PacimError};
+use pacim::fault::FaultConfig;
+use pacim::nn::layers::synthetic::random_store;
+use pacim::nn::{tiny_resnet, EscalationConfig, Model, PacConfig, RunStats};
+use pacim::util::check::Checker;
+use pacim::util::rng::Rng;
+use pacim::util::Parallelism;
+
+fn small_model(seed: u64, c: usize, classes: usize, hw: usize) -> Model {
+    let mut rng = Rng::new(seed);
+    tiny_resnet(&random_store(&mut rng, c, classes), hw, classes).unwrap()
+}
+
+fn image_for(model: &Model, rng: &mut Rng) -> Vec<u8> {
+    (0..model.in_c * model.in_hw * model.in_hw)
+        .map(|_| rng.below(256) as u8)
+        .collect()
+}
+
+/// A PAC config whose layers all actually run approximate (the default
+/// `min_dp_len: 512` keeps every layer of the 8×8 test model digital,
+/// which would give the fault channels nothing to hit).
+fn faultable_cfg(fuse: bool) -> PacConfig {
+    PacConfig {
+        first_layer_exact: false,
+        min_dp_len: 0,
+        fuse_dataplane: fuse,
+        ..PacConfig::default()
+    }
+}
+
+fn assert_all_stats_eq(a: &RunStats, b: &RunStats) {
+    assert_eq!(a.macs, b.macs);
+    assert_eq!(a.digital_cycles, b.digital_cycles);
+    assert_eq!(a.pcu_ops, b.pcu_ops);
+    assert_eq!(a.levels, b.levels);
+    assert_eq!(a.traffic, b.traffic);
+    assert_eq!(a.faults, b.faults);
+    assert_eq!(a.escalations, b.escalations);
+}
+
+#[test]
+fn prop_fault_off_is_bit_identical_to_no_fault_stage() {
+    // `FaultConfig::off()` must be indistinguishable from never calling
+    // `.fault(..)` at all: same logits, same statistics, empty ledger.
+    // This is the "default off / zero cost" half of the §15 contract.
+    Checker::new("fault_off_bit_identical", 16).run(|rng| {
+        let model = small_model(rng.next_u64(), 4, 4, 8);
+        let img = image_for(&model, rng);
+        let cfg = faultable_cfg(rng.bernoulli(0.5));
+        let par = if rng.bernoulli(0.5) {
+            Parallelism::off()
+        } else {
+            Parallelism {
+                enabled: true,
+                min_items: 1,
+            }
+        };
+        let plain = EngineBuilder::new(model.clone())
+            .pac(cfg.clone())
+            .parallelism(par)
+            .build()
+            .unwrap();
+        let off = EngineBuilder::new(model)
+            .pac(cfg)
+            .fault(FaultConfig::off())
+            .parallelism(par)
+            .build()
+            .unwrap();
+        let a = plain.session().infer(&img).unwrap();
+        let b = off.session().infer(&img).unwrap();
+        assert_eq!(a.logits, b.logits, "fault-off engine logits diverged");
+        assert_all_stats_eq(&a.stats, &b.stats);
+        assert!(b.stats.faults.is_empty(), "fault-off run recorded injections");
+    });
+}
+
+#[test]
+fn prop_same_seed_same_ber_same_injections_across_schedules() {
+    // The position-keyed RNG contract: injection sites depend only on
+    // (seed, channel, position), never on tile order or thread count —
+    // so the per-layer fault counters (and the faulted logits) agree
+    // bit for bit between tile parallelism on and off, and between a
+    // single-image run and a batch lane of the same image.
+    Checker::new("fault_injection_schedule_invariant", 12).run(|rng| {
+        let model = small_model(rng.next_u64(), 4, 4, 8);
+        let img = image_for(&model, rng);
+        let fc = FaultConfig::at_ber(rng.next_u64(), 1e-2);
+        let build = |par: Parallelism| {
+            EngineBuilder::new(model.clone())
+                .pac(faultable_cfg(true))
+                .fault(fc)
+                .parallelism(par)
+                .build()
+                .unwrap()
+        };
+        let seq = build(Parallelism::off());
+        let par = build(Parallelism {
+            enabled: true,
+            min_items: 1,
+        });
+        let a = seq.session().infer(&img).unwrap();
+        let b = par.session().infer(&img).unwrap();
+        assert_eq!(a.logits, b.logits, "faulted logits depend on schedule");
+        assert_all_stats_eq(&a.stats, &b.stats);
+        // At BER 1e-2 over thousands of weight-MSB bits the channels
+        // cannot all stay silent — the sweep would otherwise "pass"
+        // while injecting nothing.
+        assert!(!a.stats.faults.is_empty(), "BER 1e-2 injected nothing");
+        // Batch lanes reuse the same image nonce, so each lane carries
+        // the identical ledger.
+        let imgs = [img.as_slice(), img.as_slice()];
+        for lane in par.session().infer_batch(&imgs).unwrap() {
+            assert_eq!(lane.logits, a.logits);
+            assert_eq!(lane.stats.faults, a.stats.faults);
+        }
+    });
+}
+
+#[test]
+fn forced_escalation_recovers_exact_logits() {
+    // With the monitor armed so aggressively that every sample trips it
+    // (min_margin = +inf is rejected by validation, so use an absurdly
+    // large finite margin), Fidelity::Auto must hand back the *exact*
+    // backend's logits and count one escalation per image.
+    let model = small_model(2025, 4, 4, 8);
+    let mut rng = Rng::new(11);
+    let img = image_for(&model, &mut rng);
+    let exact = EngineBuilder::new(model.clone()).exact().build().unwrap();
+    let want = exact.session().infer(&img).unwrap();
+    let auto = EngineBuilder::new(model)
+        .pac(faultable_cfg(false))
+        .escalation(EscalationConfig {
+            min_margin: 1e6,
+            sigma: 0.0,
+        })
+        .build()
+        .unwrap();
+    let got = auto.session().infer_with(&img, Fidelity::Auto).unwrap();
+    assert_eq!(got.logits, want.logits, "escalated logits must be exact");
+    assert_eq!(got.stats.escalations, 1);
+    // Fidelity::Fast on the same engine never escalates.
+    let fast = auto.session().infer_with(&img, Fidelity::Fast).unwrap();
+    assert_eq!(fast.stats.escalations, 0);
+}
+
+#[test]
+fn fault_config_validation_and_backend_gating() {
+    // Out-of-range BERs and non-finite noise are typed config errors...
+    let model = small_model(7, 4, 4, 8);
+    for bad in [
+        FaultConfig {
+            weight_msb_ber: 1.0,
+            ..FaultConfig::off()
+        },
+        FaultConfig {
+            edge_ber: -0.1,
+            ..FaultConfig::off()
+        },
+        FaultConfig {
+            pcu_noise: f64::NAN,
+            ..FaultConfig::off()
+        },
+    ] {
+        let err = EngineBuilder::new(model.clone()).pac(PacConfig::default()).fault(bad).build();
+        assert!(
+            matches!(err, Err(PacimError::InvalidConfig(_))),
+            "invalid FaultConfig must be rejected at build()"
+        );
+    }
+    // ...and the fault stage is PAC-only: the exact backend has no PAC
+    // boundaries to corrupt.
+    let err = EngineBuilder::new(model)
+        .exact()
+        .fault(FaultConfig::at_ber(1, 1e-3))
+        .build();
+    assert!(matches!(err, Err(PacimError::InvalidConfig(_))));
+}

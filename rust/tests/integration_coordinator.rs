@@ -4,7 +4,7 @@
 
 use pacim::coordinator::server::BatchExecutor;
 use pacim::coordinator::{
-    schedule_model, BatchPolicy, InferenceServer, ScheduleConfig,
+    schedule_model, BatchPolicy, InferenceServer, ScheduleConfig, ServeError,
 };
 use pacim::engine::EngineBuilder;
 use pacim::nn::PacConfig;
@@ -12,7 +12,8 @@ use pacim::runtime::PacExecutor;
 use pacim::workload::{
     resnet18, resnet50, synthetic_serving_workload, vgg16_bn, Resolution,
 };
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Deterministic mock: logit j = input[0] * (j+1).
@@ -124,6 +125,7 @@ fn pac_pool_serves_bit_identical_to_offline_inference() {
             max_wait: Duration::from_millis(1),
             workers: 2,
             queue_cap: 64,
+            ..BatchPolicy::default()
         },
     )
     .unwrap();
@@ -151,6 +153,97 @@ fn pac_pool_serves_bit_identical_to_offline_inference() {
     assert_eq!(m.requests, 16);
     assert_eq!(m.failed_batches, 0);
     assert_eq!(m.per_worker.len(), 2);
+}
+
+#[test]
+fn worker_panic_mid_batch_is_isolated_under_concurrent_load() {
+    // Panic isolation end-to-end, under concurrency: a 2-worker pool
+    // whose shared fuse makes exactly one executor call panic mid-batch.
+    // Exactly the request riding that batch gets `WorkerLost`; every
+    // other concurrent client gets *its own* reply (value-checked, so a
+    // crossed or duplicated reply would be caught), the pool rebuilds
+    // the poisoned worker from the factory, and no worker is abandoned.
+    struct PanicOnce {
+        fuse: Arc<AtomicBool>,
+    }
+    impl BatchExecutor for PanicOnce {
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn input_elems(&self) -> usize {
+            4
+        }
+        fn output_elems(&self) -> usize {
+            3
+        }
+        fn execute(&mut self, batch: &[f32], _occupancy: usize) -> anyhow::Result<Vec<f32>> {
+            if self.fuse.swap(false, Ordering::SeqCst) {
+                panic!("injected executor panic");
+            }
+            Ok((0..3).map(|j| batch[0] * (j + 1) as f32).collect())
+        }
+    }
+
+    let fuse = Arc::new(AtomicBool::new(true));
+    let builds = Arc::new(AtomicUsize::new(0));
+    let server = {
+        let (fuse, builds) = (fuse.clone(), builds.clone());
+        InferenceServer::start_pool(
+            move |_| {
+                builds.fetch_add(1, Ordering::SeqCst);
+                Ok(PanicOnce { fuse: fuse.clone() })
+            },
+            BatchPolicy {
+                max_wait: Duration::from_micros(50),
+                workers: 2,
+                ..BatchPolicy::default()
+            },
+        )
+        .unwrap()
+    };
+    let h = server.handle();
+    let total = 12usize;
+    let served = AtomicUsize::new(0);
+    let lost = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for i in 0..total {
+            let h = h.clone();
+            let (served, lost) = (&served, &lost);
+            s.spawn(move || {
+                let v = (i + 1) as f32;
+                match h.infer(vec![v, 0.0, 0.0, 0.0]) {
+                    Ok(r) => {
+                        assert_eq!(
+                            r.logits,
+                            vec![v, 2.0 * v, 3.0 * v],
+                            "request {i} received someone else's reply"
+                        );
+                        served.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(ServeError::WorkerLost) => {
+                        lost.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(other) => panic!("request {i}: unexpected error {other}"),
+                }
+            });
+        }
+    });
+    // One fuse, batch size 1 ⇒ exactly one request rode the panic; every
+    // reply is accounted for (no drops, no duplicates).
+    assert_eq!(lost.load(Ordering::SeqCst), 1, "exactly one WorkerLost");
+    assert_eq!(served.load(Ordering::SeqCst), total - 1);
+    assert!(!fuse.load(Ordering::SeqCst), "the fuse fired");
+    let m = server.stop();
+    assert_eq!(m.worker_panics, 1);
+    assert_eq!(m.failed_batches, 1);
+    assert_eq!(m.workers_lost, 0, "the panicked worker was rebuilt, not abandoned");
+    assert_eq!(m.requests, (total - 1) as u64);
+    assert_eq!(m.per_worker.len(), 2);
+    assert_eq!(
+        builds.load(Ordering::SeqCst),
+        3,
+        "2 initial executors + 1 post-panic rebuild"
+    );
 }
 
 #[test]

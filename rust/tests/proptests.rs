@@ -272,6 +272,7 @@ impl MacBackend for PerPatchEngine {
         input: GemmInput<'_>,
         pixels: usize,
         zpx: i32,
+        _nonce: u64,
         _par: &Parallelism,
         _planes: &mut PackedPatches,
         out: &mut Vec<i64>,

@@ -75,6 +75,7 @@ fn prop_no_request_lost_or_duplicated() {
                 max_wait: Duration::from_micros(500),
                 workers,
                 queue_cap: 4 * n,
+                ..BatchPolicy::default()
             },
         )
         .unwrap();
@@ -128,6 +129,7 @@ fn prop_shutdown_drains_every_admitted_request() {
                 max_wait: Duration::from_micros(200),
                 workers,
                 queue_cap: 4 * n,
+                ..BatchPolicy::default()
             },
         )
         .unwrap();
@@ -201,6 +203,7 @@ fn prop_load_shed_fires_exactly_at_capacity() {
                 max_wait: Duration::from_micros(1),
                 workers: 1,
                 queue_cap: cap,
+                ..BatchPolicy::default()
             },
         )
         .unwrap();
