@@ -24,17 +24,31 @@
 //! --mode     open|closed|both     (default both)
 //! --requests N   --clients N   --workers N   --batch N
 //! --wait-ms T    --queue-cap N --rps R       --seed S
+//! --mix "resnet18=0.8,tinyvgg=0.2"   (multi-model open-loop rows)
 //! --out PATH     (default BENCH_serve.json)
 //! ```
 //!
+//! With `--mix`, one additional open-loop run drives a multi-model
+//! deployment (`PacExecutor::serve_registry` behind a single
+//! `MultiModelHandle`): arrivals at the total `--rps` draw a tenant by
+//! the given weights, and one `"mix-<model>-open"` row per tenant
+//! lands in the report with per-model latency, throughput, shard/steal
+//! counters, and bits-per-request. `PACIM_ENFORCE_SERVE_SLO=1` gates
+//! these rows through `benchfmt::enforce_serve_slo`.
+//!
 //! Set `PACIM_BENCH_QUICK=1` for a seconds-long smoke run (CI).
 
-use pacim::coordinator::{BatchExecutor, BatchPolicy, CostEstimate, InferenceServer, ServeError};
+use pacim::coordinator::{
+    BatchExecutor, BatchPolicy, CostEstimate, InferenceServer, ModelRegistry, ModelSpec,
+    ServeError,
+};
+use pacim::engine::EngineBuilder;
 use pacim::nn::{Model, PacConfig};
 use pacim::runtime::PacExecutor;
 use pacim::util::benchfmt::{ServeReport, ServeScenario};
 use pacim::util::rng::Rng;
-use pacim::workload::{synthetic_serving_workload, Dataset};
+use pacim::util::Parallelism;
+use pacim::workload::{synthetic_serving_workload, synthetic_tenant_workload, Dataset};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
@@ -122,6 +136,33 @@ fn arg_value(args: &[String], flag: &str) -> Option<String> {
         .and_then(|i| args.get(i + 1).cloned())
 }
 
+/// Parse `--mix "resnet18=0.8,tinyvgg=0.2"` into (tenant id, weight)
+/// pairs; weights must be positive and are normalized by the caller.
+fn parse_mix(spec: &str) -> anyhow::Result<Vec<(String, f64)>> {
+    let mut mix = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (id, w) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--mix entry '{part}' is not '<model>=<weight>'"))?;
+        let weight: f64 = w
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--mix entry '{part}': invalid weight '{w}'"))?;
+        anyhow::ensure!(
+            weight.is_finite() && weight > 0.0,
+            "--mix entry '{part}': weight must be positive"
+        );
+        let id = id.trim().to_string();
+        anyhow::ensure!(
+            !mix.iter().any(|(m, _)| *m == id),
+            "--mix lists model '{id}' twice"
+        );
+        mix.push((id, weight));
+    }
+    anyhow::ensure!(!mix.is_empty(), "--mix parsed no '<model>=<weight>' entries");
+    Ok(mix)
+}
+
 /// Parse a numeric flag: absent → default, present-but-invalid → error
 /// (a typo must not silently benchmark a different scenario).
 fn parse_num<T: std::str::FromStr>(
@@ -194,6 +235,17 @@ fn main() -> anyhow::Result<()> {
                  fill {:.2} | shed {}",
                 sc.name, sc.throughput_rps, sc.p50_us, sc.p95_us, sc.p99_us,
                 sc.mean_batch_occupancy, sc.rejected
+            );
+            scenarios.push(sc);
+        }
+    }
+
+    if let Some(spec) = arg_value(&args, "--mix") {
+        let mix = parse_mix(&spec)?;
+        for sc in run_mix(&mix, &opts)? {
+            println!(
+                "  {:<18} {:>7.1} req/s | p99 {:>8.0} us | steals {:>4} | bits/req {:.0}",
+                sc.name, sc.throughput_rps, sc.p99_us, sc.steals, sc.bits_per_request
             );
             scenarios.push(sc);
         }
@@ -318,10 +370,13 @@ fn run_scenario(
     Ok(ServeScenario {
         name: format!("{}-{}", exec.name(), mode.name()),
         executor: exec.name().into(),
+        model: model.name.clone(),
         mode: mode.name().into(),
         workers: opts.workers,
         batch_size: opts.batch,
         queue_cap: opts.queue_cap,
+        shards: m.per_shard.len().max(1) as u64,
+        steals: m.steals,
         offered_rps: if mode == Mode::Open { opts.rps } else { 0.0 },
         requests: opts.requests as u64,
         completed,
@@ -348,4 +403,121 @@ fn run_scenario(
         },
         escalated: m.escalated,
     })
+}
+
+/// One multi-model open-loop run: Poisson arrivals at the total `--rps`
+/// draw a tenant by weight and fan into a single
+/// [`pacim::coordinator::MultiModelHandle`]; one `"mix-<model>-open"`
+/// row per tenant comes back out.
+fn run_mix(mix: &[(String, f64)], opts: &Opts) -> anyhow::Result<Vec<ServeScenario>> {
+    let total_w: f64 = mix.iter().map(|(_, w)| w).sum();
+    let policy = BatchPolicy {
+        max_wait: opts.wait,
+        workers: opts.workers,
+        queue_cap: opts.queue_cap,
+        ..BatchPolicy::default()
+    };
+
+    // Per-tenant workload + PAC engine, registered behind one front door.
+    let mut registry = ModelRegistry::new();
+    let mut datasets = Vec::with_capacity(mix.len());
+    for (i, (id, _)) in mix.iter().enumerate() {
+        let (model, ds) =
+            synthetic_tenant_workload(id, opts.seed.wrapping_add(i as u64), 8, 16, 10, 64)?;
+        let engine = EngineBuilder::new(model)
+            .pac(PacConfig::serving())
+            .parallelism(Parallelism::off())
+            .build()?;
+        registry = registry
+            .register(ModelSpec::new(id.clone(), engine).batch(opts.batch).policy(policy))?;
+        datasets.push(ds);
+    }
+    let server = PacExecutor::serve_registry(registry)?;
+    let h = server.handle();
+
+    let input = |tenant: usize, i: usize| -> Vec<f32> {
+        let ds = &datasets[tenant];
+        let idx = i % ds.n;
+        ds.image(idx).iter().map(|&q| ds.params.dequantize(q)).collect()
+    };
+
+    let mut rng = Rng::new(opts.seed ^ 0x3316);
+    let mut arrivals = vec![0u64; mix.len()];
+    let mut completed = vec![0u64; mix.len()];
+    let mut sample_cost: Vec<Option<CostEstimate>> = vec![None; mix.len()];
+    let mut pending: Vec<(usize, pacim::coordinator::PendingReply)> =
+        Vec::with_capacity(opts.requests);
+    let mut next_at = Instant::now();
+    let t0 = Instant::now();
+    for i in 0..opts.requests {
+        let dt = -(1.0 - rng.next_f64()).ln() / opts.rps;
+        next_at += Duration::from_secs_f64(dt);
+        if let Some(wait) = next_at.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        // Draw the tenant by cumulative weight.
+        let draw = rng.next_f64() * total_w;
+        let mut tenant = mix.len() - 1;
+        let mut acc = 0.0;
+        for (t, (_, w)) in mix.iter().enumerate() {
+            acc += w;
+            if draw < acc {
+                tenant = t;
+                break;
+            }
+        }
+        arrivals[tenant] += 1;
+        match h.submit(&mix[tenant].0, input(tenant, i)) {
+            Ok(p) => pending.push((tenant, p)),
+            Err(ServeError::QueueFull { .. }) => {} // counted server-side
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for (tenant, p) in pending {
+        if let Ok(r) = p.wait() {
+            completed[tenant] += 1;
+            sample_cost[tenant] = sample_cost[tenant].or(r.cost);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut rows = Vec::with_capacity(mix.len());
+    for (tenant, (id, metrics)) in server.stop().into_iter().enumerate() {
+        let (_, w) = &mix[tenant];
+        let done = completed[tenant];
+        rows.push(ServeScenario {
+            name: format!("mix-{id}-open"),
+            executor: "pac".into(),
+            model: id,
+            mode: "open".into(),
+            workers: opts.workers,
+            batch_size: opts.batch,
+            queue_cap: opts.queue_cap,
+            shards: metrics.per_shard.len().max(1) as u64,
+            steals: metrics.steals,
+            offered_rps: opts.rps * w / total_w,
+            requests: arrivals[tenant],
+            completed: done,
+            rejected: metrics.rejected,
+            failed_batches: metrics.failed_batches,
+            wall_s: wall,
+            throughput_rps: if wall > 0.0 { done as f64 / wall } else { 0.0 },
+            p50_us: metrics.latency_percentile_us(50.0),
+            p95_us: metrics.latency_percentile_us(95.0),
+            p99_us: metrics.latency_percentile_us(99.0),
+            mean_batch_occupancy: metrics.mean_batch_occupancy(),
+            batch_fill: metrics.batch_fill.clone(),
+            modeled_cycles_per_image: sample_cost[tenant].map_or(0, |c| c.cycles),
+            modeled_energy_uj_per_image: sample_cost[tenant].map_or(0.0, |c| c.total_uj()),
+            measured_traffic_bits: metrics.traffic_bits,
+            traffic_baseline_bits: metrics.traffic_baseline_bits,
+            bits_per_request: if done > 0 {
+                metrics.traffic_bits as f64 / done as f64
+            } else {
+                0.0
+            },
+            escalated: metrics.escalated,
+        });
+    }
+    Ok(rows)
 }

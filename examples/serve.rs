@@ -1,12 +1,19 @@
 //! End-to-end serving driver (the E2E validation of DESIGN.md §8).
 //!
 //! Loads the AOT-compiled PAC model through PJRT, starts the threaded
-//! batch-serving coordinator, fires concurrent single-image requests from
-//! client threads, and reports latency percentiles, throughput, accuracy
-//! on the synthetic test split, and the per-request architecture-level
-//! energy estimate.
+//! batch-serving coordinator (sharded work-stealing ingress underneath,
+//! DESIGN.md §16), fires concurrent single-image requests from client
+//! threads, and reports latency percentiles, throughput, accuracy on the
+//! synthetic test split, and the per-request architecture-level energy
+//! estimate.
 //!
 //! Run: `cargo run --release --example serve -- [requests] [clients]`
+//!
+//! This driver hosts a single PJRT model. For the multi-model tenancy
+//! path (N engines behind one routing front door, per-model pools and
+//! SLO metrics) use the zero-artifact CLI instead:
+//! `pacim serve --models resnet18,tinyvgg`, or drive a traffic mix with
+//! `cargo run --release --example loadgen -- --mix "resnet18=0.8,tinyvgg=0.2"`.
 
 use pacim::coordinator::{
     estimate_image_cost, model_shapes, BatchPolicy, InferenceServer, ScheduleConfig,

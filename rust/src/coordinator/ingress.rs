@@ -1,0 +1,850 @@
+//! The sharded serving ingress and the multi-model tenancy layer.
+//!
+//! PACiM's system-level throughput comes from many banks chewing on
+//! independent slices of traffic in parallel (paper §IV). The serving
+//! front door mirrors that topology: instead of one global
+//! `Mutex + Condvar` batcher every request funnels through, each pool
+//! worker owns a *shard* — its own bounded FIFO — and the submit path
+//! never takes a global lock:
+//!
+//! - **admission** is a CAS loop on one atomic slot counter, so the
+//!   `queue_cap` bound stays *exact* (load-shed fires on submission
+//!   `cap + 1`, never earlier, never later — the PR 8 property tests
+//!   keep holding verbatim);
+//! - **placement** is power-of-two-choices over per-shard atomic depth
+//!   gauges: hash two shards, push to the shallower. P2C keeps the
+//!   maximum queue imbalance O(log log n) without any coordination, and
+//!   it makes spill *deterministic* in the way the steal tests rely on:
+//!   once one shard is strictly deeper, the next submission must land
+//!   on the other;
+//! - the only lock a submission touches is the chosen shard's own
+//!   mutex, for the `VecDeque` push.
+//!
+//! **Steal protocol.** A worker pops its own shard first (FIFO). On
+//! empty it sweeps the sibling shards round-robin starting after its
+//! own index and takes the head of the first non-empty queue — a
+//! *steal*, counted on both the victim shard ([`ShardSummary::stolen`])
+//! and the thief ([`super::server::WorkerSummary::steals`]). Idle waits
+//! park on the worker's own condvar but time out every [`STEAL_POLL`]
+//! so backlog on sibling shards is discovered even when the worker's
+//! own condvar never fires (e.g. its owner retired after a panic — no
+//! request parked on a shard is ever stranded).
+//!
+//! **Drain.** `close()` latches every shard shut under its own lock;
+//! once a closed shard is observed empty it can never refill, so the
+//! all-shards-closed-and-empty exit check is sound even though it is
+//! evaluated one shard at a time. Workers drain their own shard, then
+//! steal the residue of everyone else's, then exit.
+//!
+//! **Multi-model tenancy** (the PPAC framing: one deployed array hosts
+//! many operation modes): a [`ModelRegistry`] maps model ids to
+//! Arc-shared [`Engine`] replicas with per-model [`BatchPolicy`],
+//! default [`Fidelity`], and default [`SloClass`]. A
+//! [`MultiModelServer`] runs one sharded worker pool per model —
+//! batches never mix models, since lanes share one compiled executor —
+//! behind a single routing [`MultiModelHandle`]. Build one with
+//! [`crate::runtime::PacExecutor::serve_registry`].
+
+use super::server::{
+    BatchPolicy, InferenceServer, PendingReply, Reply, ServeError, ServerHandle, ServerMetrics,
+};
+use crate::engine::{Engine, Fidelity, PacimError};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long an idle worker parks on its own shard's condvar before
+/// re-sweeping sibling shards for stealable work. Bounds the latency of
+/// a steal when the victim's owner is wedged or retired; small enough
+/// to be invisible next to `BatchPolicy::max_wait`.
+const STEAL_POLL: Duration = Duration::from_micros(200);
+
+/// Typed submission failure of the sharded ingress (the server maps
+/// these onto [`ServeError::Stopped`] / [`ServeError::QueueFull`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IngressError {
+    /// The ingress is closed to new submissions (drain in progress).
+    Closed,
+    /// Admission control fired: `capacity` items are already queued
+    /// across all shards.
+    Full {
+        /// The exact global bound that was hit.
+        capacity: usize,
+    },
+}
+
+/// One successful pop, with provenance: which shard the item came from
+/// and whether the popper stole it from a shard it does not own.
+#[derive(Debug)]
+pub struct Popped<T> {
+    /// The dequeued item.
+    pub item: T,
+    /// Index of the shard the item was queued on.
+    pub shard: usize,
+    /// True when the popping worker is not the shard's owner.
+    pub stolen: bool,
+}
+
+/// Snapshot of one shard's lifetime counters (read at `stop()` into
+/// [`ServerMetrics::per_shard`]).
+#[derive(Debug, Clone, Default)]
+pub struct ShardSummary {
+    /// Shard index (== owning worker index).
+    pub shard: usize,
+    /// Items admitted onto this shard.
+    pub submitted: u64,
+    /// Items popped off this shard by a non-owner (steal-rate numerator;
+    /// `submitted` is the denominator).
+    pub stolen: u64,
+    /// Deepest this shard's queue ever got.
+    pub max_depth: usize,
+}
+
+struct ShardQueue<T> {
+    queue: VecDeque<T>,
+    /// `false` once drain begins: no new items enter this shard. Set
+    /// under the shard lock, so a successful push strictly precedes any
+    /// observation of `!open && empty`.
+    open: bool,
+}
+
+struct Shard<T> {
+    state: Mutex<ShardQueue<T>>,
+    notify: Condvar,
+    /// Depth gauge for P2C placement, maintained under the shard lock
+    /// (reads are relaxed: placement tolerates staleness, correctness
+    /// never depends on it).
+    depth: AtomicUsize,
+    submitted: AtomicU64,
+    stolen: AtomicU64,
+    max_depth: AtomicUsize,
+}
+
+impl<T> Shard<T> {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(ShardQueue {
+                queue: VecDeque::new(),
+                open: true,
+            }),
+            notify: Condvar::new(),
+            depth: AtomicUsize::new(0),
+            submitted: AtomicU64::new(0),
+            stolen: AtomicU64::new(0),
+            max_depth: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// SplitMix64 finalizer: turns the monotone submission ticket into the
+/// two P2C shard candidates.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-worker sharded queues with power-of-two-choices placement, work
+/// stealing, an exact global capacity bound, and bounded graceful
+/// drain. Generic over the item type so the queueing/stealing protocol
+/// is property-testable with plain payloads (`tests/proptests_ingress`).
+pub struct Ingress<T> {
+    shards: Vec<Shard<T>>,
+    capacity: usize,
+    /// Items currently queued across all shards (the CAS admission
+    /// token pool; never exceeds `capacity`).
+    queued: AtomicUsize,
+    rejected: AtomicU64,
+    /// Fast-path close flag so a submission to a stopped ingress reports
+    /// `Closed` even when the queue is still full of draining items
+    /// (the per-shard `open` flags stay authoritative).
+    closed: AtomicBool,
+    ticket: AtomicU64,
+}
+
+impl<T> Ingress<T> {
+    /// An ingress with `shards` queues (one per pool worker) and an
+    /// exact global capacity of `capacity` queued items. Both floors at
+    /// 1.
+    pub fn new(shards: usize, capacity: usize) -> Self {
+        Self {
+            shards: (0..shards.max(1)).map(|_| Shard::new()).collect(),
+            capacity: capacity.max(1),
+            queued: AtomicUsize::new(0),
+            rejected: AtomicU64::new(0),
+            closed: AtomicBool::new(false),
+            ticket: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The exact global admission bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items currently queued across all shards.
+    pub fn queued(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Submissions load-shed by admission control so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Current per-shard queue depths (relaxed gauges; for tests and
+    /// observability, not for correctness decisions).
+    pub fn depths(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|s| s.depth.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Lifetime counters of every shard.
+    pub fn shard_summaries(&self) -> Vec<ShardSummary> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ShardSummary {
+                shard: i,
+                submitted: s.submitted.load(Ordering::Relaxed),
+                stolen: s.stolen.load(Ordering::Relaxed),
+                max_depth: s.max_depth.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Acquire one admission token, or fail when `capacity` items are
+    /// already queued. A CAS loop (not fetch_add-then-undo) so rejected
+    /// submissions never transiently overshoot the bound.
+    fn try_acquire_slot(&self) -> bool {
+        let mut n = self.queued.load(Ordering::SeqCst);
+        loop {
+            if n >= self.capacity {
+                return false;
+            }
+            match self
+                .queued
+                .compare_exchange_weak(n, n + 1, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => return true,
+                Err(cur) => n = cur,
+            }
+        }
+    }
+
+    /// Power-of-two-choices: hash the submission ticket into two shard
+    /// candidates and pick the strictly shallower one (ties keep the
+    /// first, so a lone deep shard always diverts traffic).
+    fn pick_shard(&self) -> usize {
+        let k = self.shards.len();
+        if k == 1 {
+            return 0;
+        }
+        let h = splitmix64(self.ticket.fetch_add(1, Ordering::Relaxed));
+        let a = (h as u32 as usize) % k;
+        let b = ((h >> 32) as usize) % k;
+        let da = self.shards[a].depth.load(Ordering::Relaxed);
+        let db = self.shards[b].depth.load(Ordering::Relaxed);
+        if db < da {
+            b
+        } else {
+            a
+        }
+    }
+
+    /// Admit one item: acquire a capacity token, pick a shard (P2C),
+    /// push under that shard's lock only. Returns the shard index.
+    pub fn submit(&self, item: T) -> Result<usize, IngressError> {
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(IngressError::Closed);
+        }
+        if !self.try_acquire_slot() {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(IngressError::Full {
+                capacity: self.capacity,
+            });
+        }
+        let idx = self.pick_shard();
+        let shard = &self.shards[idx];
+        let mut st = shard.state.lock().unwrap();
+        if !st.open {
+            // Raced with close(): refund the token; the item was never
+            // visible to any worker.
+            drop(st);
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+            return Err(IngressError::Closed);
+        }
+        st.queue.push_back(item);
+        let depth = st.queue.len();
+        shard.depth.store(depth, Ordering::Relaxed);
+        drop(st);
+        shard.submitted.fetch_add(1, Ordering::Relaxed);
+        shard.max_depth.fetch_max(depth, Ordering::Relaxed);
+        shard.notify.notify_one();
+        Ok(idx)
+    }
+
+    fn pop_shard(&self, idx: usize) -> Option<T> {
+        let shard = &self.shards[idx];
+        let mut st = shard.state.lock().unwrap();
+        let item = st.queue.pop_front()?;
+        shard.depth.store(st.queue.len(), Ordering::Relaxed);
+        drop(st);
+        self.queued.fetch_sub(1, Ordering::SeqCst);
+        Some(item)
+    }
+
+    /// One non-blocking pass of the pop protocol: `worker`'s own shard
+    /// first, then one steal sweep round-robin from `worker + 1`.
+    pub fn try_pop(&self, worker: usize) -> Option<Popped<T>> {
+        let me = worker % self.shards.len();
+        if let Some(item) = self.pop_shard(me) {
+            return Some(Popped {
+                item,
+                shard: me,
+                stolen: false,
+            });
+        }
+        let k = self.shards.len();
+        for off in 1..k {
+            let v = (me + off) % k;
+            if let Some(item) = self.pop_shard(v) {
+                self.shards[v].stolen.fetch_add(1, Ordering::Relaxed);
+                return Some(Popped {
+                    item,
+                    shard: v,
+                    stolen: true,
+                });
+            }
+        }
+        None
+    }
+
+    /// Every shard closed *and* empty. A closed shard observed empty can
+    /// never refill (pushes require `open`, set under the same lock), so
+    /// the shard-at-a-time sweep is a sound exit condition.
+    fn all_drained(&self) -> bool {
+        self.shards.iter().all(|s| {
+            let st = s.state.lock().unwrap();
+            !st.open && st.queue.is_empty()
+        })
+    }
+
+    /// Pop one item for `worker`, blocking until one is available
+    /// anywhere. Returns `None` only when the ingress is closed and
+    /// every shard is drained.
+    pub fn pop_blocking(&self, worker: usize) -> Option<Popped<T>> {
+        let me = worker % self.shards.len();
+        loop {
+            if let Some(p) = self.try_pop(me) {
+                return Some(p);
+            }
+            let shard = &self.shards[me];
+            let st = shard.state.lock().unwrap();
+            if !st.queue.is_empty() {
+                continue; // refilled while we were sweeping siblings
+            }
+            if !st.open {
+                drop(st);
+                if self.all_drained() {
+                    return None;
+                }
+                // Own shard is done but a sibling still holds work:
+                // loop back into the steal sweep (each iteration either
+                // pops an item or observes the system one step closer
+                // to fully drained, so this cannot spin unboundedly).
+                std::thread::yield_now();
+                continue;
+            }
+            let (st, _) = shard.notify.wait_timeout(st, STEAL_POLL).unwrap();
+            drop(st);
+        }
+    }
+
+    /// Pop one item for `worker`, waiting at most until `deadline` (the
+    /// batch-gather companion wait). During drain an empty own shard
+    /// falls through one steal sweep and then returns `None` so partial
+    /// batches flush immediately.
+    pub fn pop_until(&self, worker: usize, deadline: Instant) -> Option<Popped<T>> {
+        let me = worker % self.shards.len();
+        loop {
+            if let Some(p) = self.try_pop(me) {
+                return Some(p);
+            }
+            let shard = &self.shards[me];
+            let st = shard.state.lock().unwrap();
+            if !st.queue.is_empty() {
+                continue;
+            }
+            if !st.open {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let wait = (deadline - now).min(STEAL_POLL);
+            let (st, _) = shard.notify.wait_timeout(st, wait).unwrap();
+            drop(st);
+        }
+    }
+
+    /// Close every shard to new submissions and wake every waiter.
+    /// Idempotent.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        for shard in &self.shards {
+            let mut st = shard.state.lock().unwrap();
+            st.open = false;
+            drop(st);
+            shard.notify.notify_all();
+        }
+    }
+
+    /// Empty every shard, handing each residual item to `f` (the
+    /// drain-timeout load-shed answers them with a typed error). Returns
+    /// how many were shed.
+    pub fn drain_residual(&self, mut f: impl FnMut(T)) -> u64 {
+        let mut shed = 0u64;
+        for shard in &self.shards {
+            let mut st = shard.state.lock().unwrap();
+            while let Some(item) = st.queue.pop_front() {
+                self.queued.fetch_sub(1, Ordering::SeqCst);
+                shed += 1;
+                f(item);
+            }
+            shard.depth.store(0, Ordering::Relaxed);
+        }
+        shed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SLO classes
+// ---------------------------------------------------------------------------
+
+/// Per-request service-level objective: a latency deadline and/or a
+/// traffic budget in measured activation bits.
+///
+/// - `deadline` overrides the pool-wide [`BatchPolicy::deadline`] for
+///   this request: still queued past it, the request is reaped at
+///   gather time with [`ServeError::DeadlineExceeded`] and never
+///   occupies a lane.
+/// - `max_bits` is enforced through the measured `ExecTelemetry`
+///   plumbing: a request whose budget is below the executor's modeled
+///   per-image floor (`CostEstimate::act_bits`) is reaped *before*
+///   execution with [`ServeError::TrafficBudgetExceeded`]; a served
+///   request whose measured per-lane share exceeds its budget is
+///   flagged on the reply (`Reply::budget_exceeded`) and counted in
+///   `ServerMetrics::budget_violations`.
+///
+/// The default (no deadline, no budget) is best-effort and leaves the
+/// pool's behavior reply-for-reply identical to the un-SLO'd path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SloClass {
+    /// Per-request latency deadline, measured from submission.
+    pub deadline: Option<Duration>,
+    /// Measured activation-traffic budget for this request, in bits.
+    pub max_bits: Option<u64>,
+}
+
+impl SloClass {
+    /// No deadline, no budget (the default).
+    pub fn best_effort() -> Self {
+        Self::default()
+    }
+
+    /// A latency-only SLO.
+    pub fn latency(deadline: Duration) -> Self {
+        Self {
+            deadline: Some(deadline),
+            max_bits: None,
+        }
+    }
+
+    /// A traffic-budget-only SLO.
+    pub fn traffic_budget(max_bits: u64) -> Self {
+        Self {
+            deadline: None,
+            max_bits: Some(max_bits),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-model tenancy
+// ---------------------------------------------------------------------------
+
+/// One tenant model: an Arc-shared [`Engine`] plus the per-model
+/// serving defaults. Build with [`ModelSpec::new`] and the builder
+/// methods, then [`ModelRegistry::register`].
+#[derive(Clone)]
+pub struct ModelSpec {
+    /// Routing id (`MultiModelHandle::submit` key). Must be unique in a
+    /// registry.
+    pub id: String,
+    /// The engine replicated (cheap Arc clone) across the pool workers.
+    pub engine: Engine,
+    /// Executor batch size for this model's pool.
+    pub batch: usize,
+    /// Per-model batching/pool policy.
+    pub policy: BatchPolicy,
+    /// Fidelity for requests routed without an explicit class.
+    pub default_fidelity: Fidelity,
+    /// SLO for requests routed without an explicit class.
+    pub default_slo: SloClass,
+}
+
+impl ModelSpec {
+    /// A spec with batch 8, the default [`BatchPolicy`], fast fidelity,
+    /// and a best-effort SLO.
+    pub fn new(id: impl Into<String>, engine: Engine) -> Self {
+        Self {
+            id: id.into(),
+            engine,
+            batch: 8,
+            policy: BatchPolicy::default(),
+            default_fidelity: Fidelity::Fast,
+            default_slo: SloClass::default(),
+        }
+    }
+
+    /// Set the executor batch size.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Set the per-model pool policy.
+    pub fn policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Set the default fidelity class.
+    pub fn fidelity(mut self, fidelity: Fidelity) -> Self {
+        self.default_fidelity = fidelity;
+        self
+    }
+
+    /// Set the default SLO class.
+    pub fn slo(mut self, slo: SloClass) -> Self {
+        self.default_slo = slo;
+        self
+    }
+}
+
+/// The model catalog one server deployment hosts: validated specs,
+/// unique ids. Consumed by
+/// [`crate::runtime::PacExecutor::serve_registry`].
+#[derive(Default)]
+pub struct ModelRegistry {
+    specs: Vec<ModelSpec>,
+}
+
+impl ModelRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a model, validating the spec: unique id, nonzero batch and
+    /// workers, and a default fidelity the engine can actually run
+    /// (`Accurate` on a PAC engine needs the exact fallback armed).
+    pub fn register(mut self, spec: ModelSpec) -> Result<Self, PacimError> {
+        if spec.id.is_empty() {
+            return Err(PacimError::InvalidConfig("empty model id".into()));
+        }
+        if self.specs.iter().any(|s| s.id == spec.id) {
+            return Err(PacimError::InvalidConfig(format!(
+                "duplicate model id '{}' in registry",
+                spec.id
+            )));
+        }
+        if spec.batch == 0 {
+            return Err(PacimError::InvalidConfig(format!(
+                "model '{}': batch must be >= 1",
+                spec.id
+            )));
+        }
+        if !spec.engine.supports_fidelity(spec.default_fidelity) {
+            return Err(PacimError::InvalidConfig(format!(
+                "model '{}': default fidelity {:?} unsupported by its engine \
+                 (Accurate on a PAC engine requires the exact fallback)",
+                spec.id, spec.default_fidelity
+            )));
+        }
+        self.specs.push(spec);
+        Ok(self)
+    }
+
+    /// The registered specs, in registration order.
+    pub fn specs(&self) -> &[ModelSpec] {
+        &self.specs
+    }
+
+    /// Consume the registry (the serve-startup path).
+    pub fn into_specs(self) -> Vec<ModelSpec> {
+        self.specs
+    }
+
+    /// Registered model ids, in registration order.
+    pub fn ids(&self) -> Vec<&str> {
+        self.specs.iter().map(|s| s.id.as_str()).collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+/// One running tenant: a started per-model pool plus its routing
+/// defaults (assembled by `PacExecutor::serve_registry`, or manually
+/// for custom executors).
+pub struct Tenant {
+    /// Routing id.
+    pub id: String,
+    /// The model's running pool (sharded ingress inside).
+    pub server: InferenceServer,
+    /// Fidelity for requests routed without an explicit class.
+    pub default_fidelity: Fidelity,
+    /// SLO for requests routed without an explicit class.
+    pub default_slo: SloClass,
+}
+
+struct Route {
+    id: String,
+    handle: ServerHandle,
+    fidelity: Fidelity,
+    slo: SloClass,
+}
+
+/// N models behind one routing front door: each tenant runs its own
+/// sharded pool (batches never mix models), requests fan out by model
+/// id through a shared [`MultiModelHandle`].
+pub struct MultiModelServer {
+    tenants: Vec<Tenant>,
+    routes: Arc<Vec<Route>>,
+}
+
+impl MultiModelServer {
+    /// Assemble a multi-model server from started tenants. Fails on an
+    /// empty list or duplicate ids.
+    pub fn from_tenants(tenants: Vec<Tenant>) -> Result<Self, PacimError> {
+        if tenants.is_empty() {
+            return Err(PacimError::InvalidConfig(
+                "multi-model server needs at least one tenant".into(),
+            ));
+        }
+        for (i, t) in tenants.iter().enumerate() {
+            if tenants[..i].iter().any(|p| p.id == t.id) {
+                return Err(PacimError::InvalidConfig(format!(
+                    "duplicate tenant id '{}'",
+                    t.id
+                )));
+            }
+        }
+        let routes = Arc::new(
+            tenants
+                .iter()
+                .map(|t| Route {
+                    id: t.id.clone(),
+                    handle: t.server.handle(),
+                    fidelity: t.default_fidelity,
+                    slo: t.default_slo,
+                })
+                .collect::<Vec<_>>(),
+        );
+        Ok(Self { tenants, routes })
+    }
+
+    /// A cloneable routing handle over every tenant.
+    pub fn handle(&self) -> MultiModelHandle {
+        MultiModelHandle {
+            routes: Arc::clone(&self.routes),
+        }
+    }
+
+    /// Hosted model ids, in registration order.
+    pub fn models(&self) -> Vec<&str> {
+        self.tenants.iter().map(|t| t.id.as_str()).collect()
+    }
+
+    /// Stop every tenant pool (graceful bounded drain each) and return
+    /// the per-model metrics, in registration order.
+    pub fn stop(self) -> Vec<(String, ServerMetrics)> {
+        self.tenants
+            .into_iter()
+            .map(|t| (t.id, t.server.stop()))
+            .collect()
+    }
+}
+
+/// Cloneable submission handle over a [`MultiModelServer`]: routes by
+/// model id, applying the tenant's default fidelity/SLO unless the
+/// caller overrides them.
+#[derive(Clone)]
+pub struct MultiModelHandle {
+    routes: Arc<Vec<Route>>,
+}
+
+impl MultiModelHandle {
+    fn route(&self, model: &str) -> Result<&Route, ServeError> {
+        self.routes
+            .iter()
+            .find(|r| r.id == model)
+            .ok_or_else(|| ServeError::UnknownModel {
+                model: model.to_string(),
+            })
+    }
+
+    /// Hosted model ids.
+    pub fn models(&self) -> Vec<&str> {
+        self.routes.iter().map(|r| r.id.as_str()).collect()
+    }
+
+    /// Open-loop submission to `model` under its default fidelity/SLO.
+    pub fn submit(&self, model: &str, input: Vec<f32>) -> Result<PendingReply, ServeError> {
+        let r = self.route(model)?;
+        r.handle.submit_slo(input, r.fidelity, r.slo)
+    }
+
+    /// Open-loop submission with explicit per-request classes.
+    pub fn submit_slo(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        fidelity: Fidelity,
+        slo: SloClass,
+    ) -> Result<PendingReply, ServeError> {
+        self.route(model)?.handle.submit_slo(input, fidelity, slo)
+    }
+
+    /// Closed-loop inference on `model` under its defaults.
+    pub fn infer(&self, model: &str, input: Vec<f32>) -> Result<Reply, ServeError> {
+        self.submit(model, input)?.wait()
+    }
+
+    /// Closed-loop inference with explicit per-request classes.
+    pub fn infer_slo(
+        &self,
+        model: &str,
+        input: Vec<f32>,
+        fidelity: Fidelity,
+        slo: SloClass,
+    ) -> Result<Reply, ServeError> {
+        self.submit_slo(model, input, fidelity, slo)?.wait()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2c_spills_to_the_shallower_shard() {
+        // With no poppers, depths only grow: once one shard is strictly
+        // deeper, the next submission must land on the other. After two
+        // submissions both shards hold exactly one item.
+        let ing: Ingress<u32> = Ingress::new(2, 64);
+        ing.submit(1).unwrap();
+        ing.submit(2).unwrap();
+        assert_eq!(ing.depths().iter().sum::<usize>(), 2);
+        assert_eq!(ing.depths(), vec![1, 1]);
+    }
+
+    #[test]
+    fn capacity_bound_is_exact_across_shards() {
+        let ing: Ingress<u32> = Ingress::new(3, 4);
+        for i in 0..4 {
+            assert_eq!(ing.submit(i).is_ok(), true, "submission {i} admitted");
+        }
+        for i in 4..6 {
+            assert_eq!(ing.submit(i), Err(IngressError::Full { capacity: 4 }));
+        }
+        assert_eq!(ing.rejected(), 2);
+        assert_eq!(ing.queued(), 4);
+        // Popping frees a slot for exactly one more admission.
+        assert!(ing.pop_blocking(0).is_some());
+        assert!(ing.submit(9).is_ok());
+        assert_eq!(ing.submit(10), Err(IngressError::Full { capacity: 4 }));
+    }
+
+    #[test]
+    fn closed_wins_over_full() {
+        let ing: Ingress<u32> = Ingress::new(2, 1);
+        ing.submit(1).unwrap();
+        ing.close();
+        // Stopped-while-full must report Closed, not Full.
+        assert_eq!(ing.submit(2), Err(IngressError::Closed));
+    }
+
+    #[test]
+    fn single_popper_drains_and_steals_every_shard() {
+        let ing: Ingress<u64> = Ingress::new(4, 1024);
+        let n = 64u64;
+        for i in 0..n {
+            ing.submit(i).unwrap();
+        }
+        ing.close();
+        let mut got = Vec::new();
+        let mut stolen_seen = 0u64;
+        while let Some(p) = ing.pop_blocking(0) {
+            assert_eq!(p.stolen, p.shard != 0, "provenance is consistent");
+            if p.stolen {
+                stolen_seen += 1;
+            }
+            got.push(p.item);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..n).collect::<Vec<_>>(), "no loss, no dup");
+        let sums = ing.shard_summaries();
+        assert_eq!(sums.iter().map(|s| s.submitted).sum::<u64>(), n);
+        // Everything on shards 1..3 was, by definition, stolen by worker 0.
+        let foreign: u64 = sums.iter().skip(1).map(|s| s.submitted).sum();
+        assert_eq!(stolen_seen, foreign);
+        assert_eq!(sums.iter().map(|s| s.stolen).sum::<u64>(), foreign);
+        assert!(foreign > 0, "P2C spread 64 items over 4 shards");
+    }
+
+    #[test]
+    fn pop_until_deadline_returns_none_when_empty() {
+        let ing: Ingress<u32> = Ingress::new(2, 8);
+        let t0 = Instant::now();
+        assert!(ing
+            .pop_until(0, Instant::now() + Duration::from_millis(5))
+            .is_none());
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn drain_residual_counts_and_delivers() {
+        let ing: Ingress<u32> = Ingress::new(3, 64);
+        for i in 0..10 {
+            ing.submit(i).unwrap();
+        }
+        ing.close();
+        let mut got = Vec::new();
+        let shed = ing.drain_residual(|x| got.push(x));
+        assert_eq!(shed, 10);
+        got.sort_unstable();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        assert_eq!(ing.queued(), 0);
+        assert!(ing.pop_blocking(0).is_none(), "closed and drained");
+    }
+}

@@ -1,16 +1,26 @@
 //! L3 coordination: the bank scheduler (analytic cycle/energy/traffic
-//! accounting) and the multi-worker batch-serving pool.
+//! accounting), the sharded work-stealing ingress, and the multi-worker
+//! batch-serving pool.
 //!
 //! - [`scheduler`] — maps DNN layer shapes onto PACiM banks; powers the
 //!   Fig. 7 / Table 3-4 system analyses, `examples/trace_sim.rs`, and the
 //!   per-reply [`CostEstimate`] serving annotation.
-//! - [`server`] — the worker pool + shared dynamic batcher with admission
-//!   control; powers `pacim serve`, `examples/loadgen.rs`, and (with the
-//!   `pjrt` feature) `examples/serve.rs`.
+//! - [`ingress`] — per-worker sharded request queues with
+//!   power-of-two-choices placement and work stealing (no global lock on
+//!   the submit path), per-request [`SloClass`]es, and the multi-model
+//!   tenancy layer ([`ModelRegistry`], [`MultiModelServer`]).
+//! - [`server`] — the worker pool on top of the sharded ingress; powers
+//!   `pacim serve`, `examples/loadgen.rs`, and (with the `pjrt` feature)
+//!   `examples/serve.rs`.
 
+pub mod ingress;
 pub mod scheduler;
 pub mod server;
 
+pub use ingress::{
+    Ingress, IngressError, ModelRegistry, ModelSpec, MultiModelHandle, MultiModelServer,
+    Popped, ShardSummary, SloClass, Tenant,
+};
 pub use scheduler::{
     estimate_image_cost, model_shapes, schedule_layer, schedule_model, CostEstimate,
     LayerReport, ModelReport, ScheduleConfig,

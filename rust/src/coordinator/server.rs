@@ -1,11 +1,14 @@
-//! The serving coordinator: a multi-worker pool behind a shared dynamic
-//! batcher with admission control.
+//! The serving coordinator: a multi-worker pool behind a sharded
+//! work-stealing ingress with admission control.
 //!
-//! This is the L3 runtime path: clients submit single images into a
-//! bounded queue; N workers (each owning its own [`BatchExecutor`]) pop
-//! up to `batch_size` requests or wait out a deadline, pad partial
-//! batches, execute, and distribute per-request results. When the queue
-//! is full the submission is load-shed with a typed error
+//! This is the L3 runtime path: clients submit single images through the
+//! sharded [`Ingress`] (one bounded queue per worker, power-of-two-
+//! choices placement, no global lock on the submit path — see
+//! [`super::ingress`]); N workers (each owning its own [`BatchExecutor`])
+//! drain their own shard first and steal from siblings on empty, pop up
+//! to `batch_size` requests or wait out a deadline, pad partial batches,
+//! execute, and distribute per-request results. When the global capacity
+//! bound is hit the submission is load-shed with a typed error
 //! ([`ServeError::QueueFull`]) instead of queueing unbounded latency —
 //! the backpressure policy of DESIGN.md §8.
 //!
@@ -17,28 +20,31 @@
 //! architecture-exploration scenario.
 //!
 //! Shutdown is a graceful drain: [`InferenceServer::stop`] closes the
-//! queue to new submissions, workers keep flushing batches until the
-//! queue is empty, and the per-worker metrics are merged into the
-//! aggregate [`ServerMetrics`] returned to the caller. The drain is
-//! *bounded* ([`BatchPolicy::drain_timeout`]): if a worker wedges, the
-//! residual queue is load-shed with a typed error instead of hanging
-//! the caller forever.
+//! ingress to new submissions, workers keep flushing batches (stealing
+//! the residue of retired siblings' shards) until every shard is empty,
+//! and the per-worker metrics are merged into the aggregate
+//! [`ServerMetrics`] returned to the caller. The drain is *bounded*
+//! ([`BatchPolicy::drain_timeout`]): if a worker wedges, the residual
+//! queues are load-shed with a typed error instead of hanging the caller
+//! forever.
 //!
 //! The pool is hardened against its own executors (DESIGN.md §15): a
 //! panic inside `execute` is caught, the in-flight requests get a typed
 //! [`ServeError::WorkerLost`], the poisoned executor is rebuilt from the
 //! worker's factory, and the pool keeps draining. Requests may carry a
-//! per-request deadline ([`BatchPolicy::deadline`]): expired requests
-//! are reaped at batch-gather time with [`ServeError::DeadlineExceeded`]
-//! and never occupy an executor lane.
+//! per-request SLO class ([`SloClass`]): a latency deadline (overriding
+//! the pool-wide [`BatchPolicy::deadline`]) reaped at batch-gather time
+//! with [`ServeError::DeadlineExceeded`], and/or a traffic budget in
+//! measured activation bits, enforced against the executor's modeled
+//! floor before execution ([`ServeError::TrafficBudgetExceeded`]) and
+//! flagged on the reply when the measured share overruns it.
 
+use super::ingress::{Ingress, IngressError, ShardSummary, SloClass};
 use super::scheduler::CostEstimate;
 use crate::engine::Fidelity;
 use crate::util::stats::percentile_sorted;
-use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Something that can run a fixed-batch forward pass.
@@ -74,14 +80,19 @@ pub trait BatchExecutor {
         self.execute(batch, occupancy)
     }
     /// Modeled per-image silicon cost, attached to every reply this
-    /// executor produces. Default: no cost model.
+    /// executor produces. Also the floor for SLO traffic budgets: a
+    /// request whose [`SloClass::max_bits`] is below `act_bits` cannot
+    /// possibly be served within budget and is reaped before execution.
+    /// Default: no cost model.
     fn cost_estimate(&self) -> Option<CostEstimate> {
         None
     }
     /// Cumulative engine telemetry since this executor was constructed
     /// (measured activation traffic, escalation reruns). The worker loop
     /// folds it into [`ServerMetrics`] when the executor retires — at
-    /// drain or before a post-panic rebuild. Default: no telemetry.
+    /// drain or before a post-panic rebuild — and differences it around
+    /// every batch to attribute measured bits to replies. Default: no
+    /// telemetry.
     fn telemetry(&self) -> ExecTelemetry {
         ExecTelemetry::default()
     }
@@ -106,7 +117,7 @@ pub struct ExecTelemetry {
 pub enum ServeError {
     #[error("input has {got} elems, expected {want}")]
     BadInput { got: usize, want: usize },
-    /// Admission control fired: the bounded queue already holds
+    /// Admission control fired: the sharded ingress already holds
     /// `capacity` pending requests. Clients should back off and retry.
     #[error("admission queue full ({capacity} pending requests); load shed")]
     QueueFull { capacity: usize },
@@ -119,16 +130,27 @@ pub enum ServeError {
     /// in-flight batch is lost.
     #[error("worker lost (executor panicked mid-batch); retry")]
     WorkerLost,
-    /// The request's deadline ([`BatchPolicy::deadline`]) expired while
-    /// it was still queued; it was reaped without occupying a lane.
+    /// The request's deadline ([`SloClass::deadline`] or the pool-wide
+    /// [`BatchPolicy::deadline`]) expired while it was still queued; it
+    /// was reaped without occupying a lane.
     #[error("request deadline exceeded while queued")]
     DeadlineExceeded,
+    /// The request's traffic budget ([`SloClass::max_bits`]) is below
+    /// the executor's modeled per-image floor
+    /// ([`CostEstimate::act_bits`]); it cannot possibly be served within
+    /// budget and was reaped before occupying a lane.
+    #[error("traffic budget {budget_bits} bits below the modeled floor of {floor_bits} bits")]
+    TrafficBudgetExceeded { budget_bits: u64, floor_bits: u64 },
+    /// The multi-model router has no tenant registered under this id.
+    #[error("unknown model '{model}'")]
+    UnknownModel { model: String },
 }
 
 /// One inference request.
 struct Request {
     input: Vec<f32>,
     fidelity: Fidelity,
+    slo: SloClass,
     enqueued: Instant,
     reply: mpsc::Sender<Result<Reply, ServeError>>,
 }
@@ -146,6 +168,15 @@ pub struct Reply {
     /// Modeled per-image PACiM cycles/energy, when the executor carries a
     /// cost model (see [`BatchExecutor::cost_estimate`]).
     pub cost: Option<CostEstimate>,
+    /// Measured activation bits attributed to this request: the batch's
+    /// telemetry delta split evenly over its occupied lanes (0 when the
+    /// executor exposes no telemetry).
+    pub traffic_bits: u64,
+    /// True when `traffic_bits` overran the request's SLO budget
+    /// ([`SloClass::max_bits`]). The reply is still delivered — the
+    /// overrun is a flag, not a failure — and counted in
+    /// [`ServerMetrics::budget_violations`].
+    pub budget_exceeded: bool,
 }
 
 /// Per-worker slice of the aggregate metrics (one entry per pool worker
@@ -166,6 +197,12 @@ pub struct WorkerSummary {
     pub escalated: u64,
     /// Executor panics this worker caught and recovered from.
     pub worker_panics: u64,
+    /// Requests this worker stole from sibling shards.
+    pub steals: u64,
+    /// This worker's own batch-fill histogram (`batch_fill[i]` = batches
+    /// that carried exactly `i + 1` real requests), so shard-level fill
+    /// is visible next to the pool aggregate.
+    pub batch_fill: Vec<u64>,
 }
 
 /// Per-worker bound on retained latency samples: beyond this, samples
@@ -191,6 +228,14 @@ pub struct ServerMetrics {
     pub escalated: u64,
     /// Requests reaped at gather time because their deadline expired.
     pub deadline_expired: u64,
+    /// Traffic-budget SLO violations: requests reaped because their
+    /// budget sat below the modeled floor, plus served requests whose
+    /// measured share overran their budget (flagged on the reply).
+    pub budget_violations: u64,
+    /// Requests workers popped from shards they do not own (the
+    /// work-stealing engagement counter; per-victim counts are in
+    /// [`ServerMetrics::per_shard`]).
+    pub steals: u64,
     /// Executor panics caught by workers (each rebuilt its executor and
     /// kept serving; the in-flight batch got [`ServeError::WorkerLost`]).
     pub worker_panics: u64,
@@ -206,6 +251,9 @@ pub struct ServerMetrics {
     pub batch_fill: Vec<u64>,
     /// Per-worker breakdown (empty until `stop()` merges the pool).
     pub per_worker: Vec<WorkerSummary>,
+    /// Per-shard ingress counters (empty until `stop()` snapshots the
+    /// ingress): submissions, steals suffered, peak depth.
+    pub per_shard: Vec<ShardSummary>,
     /// Bounded latency reservoir (≤ [`LATENCY_RESERVOIR`] per worker).
     /// Finalized (sorted ascending) exactly once, in
     /// [`InferenceServer::stop`], so percentile queries are `&self`.
@@ -257,6 +305,15 @@ impl ServerMetrics {
         self.traffic_bits as f64 / self.requests as f64
     }
 
+    /// Fraction of served requests that were stolen from a sibling
+    /// shard (0 when nothing was served).
+    pub fn steal_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.steals as f64 / self.requests as f64
+    }
+
     /// Fold one worker's local metrics into the aggregate (sorting the
     /// worker's reservoir first, so its summary percentiles read from
     /// finalized data; the aggregate is re-finalized after the last
@@ -276,6 +333,8 @@ impl ServerMetrics {
             traffic_bits: m.traffic_bits,
             escalated: m.escalated,
             worker_panics: m.worker_panics,
+            steals: m.steals,
+            batch_fill: m.batch_fill.clone(),
         });
         self.requests += m.requests;
         self.batches += m.batches;
@@ -285,6 +344,8 @@ impl ServerMetrics {
         self.traffic_baseline_bits += m.traffic_baseline_bits;
         self.escalated += m.escalated;
         self.deadline_expired += m.deadline_expired;
+        self.budget_violations += m.budget_violations;
+        self.steals += m.steals;
         self.worker_panics += m.worker_panics;
         self.exec_time += m.exec_time;
         if self.batch_fill.len() < m.batch_fill.len() {
@@ -303,19 +364,21 @@ impl ServerMetrics {
 pub struct BatchPolicy {
     /// Max time the first request of a batch waits for company.
     pub max_wait: Duration,
-    /// Worker threads in the pool (each owns one executor).
+    /// Worker threads in the pool (each owns one executor and one
+    /// ingress shard).
     pub workers: usize,
-    /// Admission-control bound: pending requests beyond this are
-    /// load-shed with [`ServeError::QueueFull`].
+    /// Admission-control bound across all shards: pending requests
+    /// beyond this are load-shed with [`ServeError::QueueFull`].
     pub queue_cap: usize,
-    /// Per-request deadline, measured from submission: requests still
-    /// queued past it are reaped at batch-gather time with
-    /// [`ServeError::DeadlineExceeded`] and never occupy a lane.
+    /// Pool-wide per-request deadline, measured from submission:
+    /// requests still queued past it are reaped at batch-gather time
+    /// with [`ServeError::DeadlineExceeded`] and never occupy a lane.
+    /// A request's own [`SloClass::deadline`] takes precedence.
     /// `None` (default) keeps requests queued indefinitely.
     pub deadline: Option<Duration>,
     /// Bound on the [`InferenceServer::stop`] drain: past it, the
-    /// residual queue is load-shed with [`ServeError::Stopped`] and any
-    /// still-wedged worker is abandoned (counted in
+    /// residual queues are load-shed with [`ServeError::Stopped`] and
+    /// any still-wedged worker is abandoned (counted in
     /// [`ServerMetrics::workers_lost`]) instead of hanging the caller.
     pub drain_timeout: Duration,
 }
@@ -332,108 +395,6 @@ impl Default for BatchPolicy {
     }
 }
 
-/// The shared dynamic batcher: a bounded queue all pool workers pull
-/// from, plus the lifecycle flag for graceful drain.
-struct Shared {
-    state: Mutex<QueueState>,
-    notify: Condvar,
-    capacity: usize,
-    rejected: AtomicU64,
-}
-
-struct QueueState {
-    queue: VecDeque<Request>,
-    /// `false` once shutdown begins: no new submissions, workers drain.
-    open: bool,
-}
-
-impl Shared {
-    fn new(capacity: usize) -> Self {
-        Self {
-            state: Mutex::new(QueueState {
-                queue: VecDeque::new(),
-                open: true,
-            }),
-            notify: Condvar::new(),
-            capacity: capacity.max(1),
-            rejected: AtomicU64::new(0),
-        }
-    }
-
-    fn submit(&self, req: Request) -> Result<(), ServeError> {
-        {
-            let mut st = self.state.lock().unwrap();
-            if !st.open {
-                return Err(ServeError::Stopped);
-            }
-            if st.queue.len() >= self.capacity {
-                drop(st);
-                self.rejected.fetch_add(1, Ordering::Relaxed);
-                return Err(ServeError::QueueFull {
-                    capacity: self.capacity,
-                });
-            }
-            st.queue.push_back(req);
-        }
-        self.notify.notify_one();
-        Ok(())
-    }
-
-    /// Pop one request, blocking until one arrives. Returns `None` only
-    /// when the queue is closed *and* fully drained.
-    fn pop_blocking(&self) -> Option<Request> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if let Some(r) = st.queue.pop_front() {
-                return Some(r);
-            }
-            if !st.open {
-                return None;
-            }
-            st = self.notify.wait(st).unwrap();
-        }
-    }
-
-    /// Pop one request, waiting at most until `deadline`. During drain
-    /// (queue closed) an empty queue returns immediately so partial
-    /// batches flush without waiting out the deadline.
-    fn pop_until(&self, deadline: Instant) -> Option<Request> {
-        let mut st = self.state.lock().unwrap();
-        loop {
-            if let Some(r) = st.queue.pop_front() {
-                return Some(r);
-            }
-            if !st.open {
-                return None;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (guard, _) = self.notify.wait_timeout(st, deadline - now).unwrap();
-            st = guard;
-        }
-    }
-
-    fn close(&self) {
-        self.state.lock().unwrap().open = false;
-        self.notify.notify_all();
-    }
-
-    /// Empty the queue, answering every residual request with a typed
-    /// [`ServeError::Stopped`] (the drain-timeout load-shed). Returns
-    /// how many were shed.
-    fn shed_residual(&self) -> u64 {
-        let mut st = self.state.lock().unwrap();
-        let mut shed = 0u64;
-        while let Some(r) = st.queue.pop_front() {
-            let _ = r.reply.send(Err(ServeError::Stopped));
-            shed += 1;
-        }
-        shed
-    }
-}
-
 /// A reply that has been submitted but not yet waited on (open-loop
 /// clients submit many, then harvest).
 pub struct PendingReply {
@@ -444,7 +405,8 @@ impl PendingReply {
     /// Block until the reply arrives. Errors are typed: batch execution
     /// failure ([`ServeError::Dropped`]), an executor panic
     /// ([`ServeError::WorkerLost`]), a reaped deadline
-    /// ([`ServeError::DeadlineExceeded`]), or a shutdown load-shed
+    /// ([`ServeError::DeadlineExceeded`]), an unservable traffic budget
+    /// ([`ServeError::TrafficBudgetExceeded`]), or a shutdown load-shed
     /// ([`ServeError::Stopped`]). A dropped channel (worker thread died
     /// without answering) degrades to [`ServeError::Dropped`].
     pub fn wait(self) -> Result<Reply, ServeError> {
@@ -458,16 +420,17 @@ impl PendingReply {
 /// Handle for submitting requests to a running server.
 #[derive(Clone)]
 pub struct ServerHandle {
-    shared: Arc<Shared>,
+    ingress: Arc<Ingress<Request>>,
     input_elems: usize,
 }
 
 impl ServerHandle {
     /// Enqueue one image without blocking on the result (open-loop
     /// traffic). Load-sheds with [`ServeError::QueueFull`] when the
-    /// bounded queue is at capacity. Runs at [`Fidelity::Fast`].
+    /// ingress is at capacity. Runs at [`Fidelity::Fast`], best-effort
+    /// SLO.
     pub fn submit(&self, input: Vec<f32>) -> Result<PendingReply, ServeError> {
-        self.submit_with(input, Fidelity::Fast)
+        self.submit_slo(input, Fidelity::Fast, SloClass::default())
     }
 
     /// [`ServerHandle::submit`] with an explicit per-request fidelity
@@ -478,6 +441,17 @@ impl ServerHandle {
         input: Vec<f32>,
         fidelity: Fidelity,
     ) -> Result<PendingReply, ServeError> {
+        self.submit_slo(input, fidelity, SloClass::default())
+    }
+
+    /// Fully classed submission: explicit fidelity *and* SLO class
+    /// (latency deadline, traffic budget).
+    pub fn submit_slo(
+        &self,
+        input: Vec<f32>,
+        fidelity: Fidelity,
+        slo: SloClass,
+    ) -> Result<PendingReply, ServeError> {
         if input.len() != self.input_elems {
             return Err(ServeError::BadInput {
                 got: input.len(),
@@ -485,12 +459,18 @@ impl ServerHandle {
             });
         }
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.shared.submit(Request {
-            input,
-            fidelity,
-            enqueued: Instant::now(),
-            reply: reply_tx,
-        })?;
+        self.ingress
+            .submit(Request {
+                input,
+                fidelity,
+                slo,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            })
+            .map_err(|e| match e {
+                IngressError::Closed => ServeError::Stopped,
+                IngressError::Full { capacity } => ServeError::QueueFull { capacity },
+            })?;
         Ok(PendingReply { rx: reply_rx })
     }
 
@@ -504,12 +484,22 @@ impl ServerHandle {
     pub fn infer_with(&self, input: Vec<f32>, fidelity: Fidelity) -> Result<Reply, ServeError> {
         self.submit_with(input, fidelity)?.wait()
     }
+
+    /// Closed-loop submission with explicit fidelity and SLO classes.
+    pub fn infer_slo(
+        &self,
+        input: Vec<f32>,
+        fidelity: Fidelity,
+        slo: SloClass,
+    ) -> Result<Reply, ServeError> {
+        self.submit_slo(input, fidelity, slo)?.wait()
+    }
 }
 
-/// The inference server: a pool of workers, each owning an executor,
-/// pulling from the shared dynamic batcher.
+/// The inference server: a pool of workers, each owning an executor and
+/// one shard of the work-stealing ingress.
 pub struct InferenceServer {
-    shared: Arc<Shared>,
+    ingress: Arc<Ingress<Request>>,
     handle: ServerHandle,
     workers: Vec<std::thread::JoinHandle<ServerMetrics>>,
     drain_timeout: Duration,
@@ -519,6 +509,7 @@ impl InferenceServer {
     /// Start a pool of `policy.workers` workers. `factory(i)` builds
     /// worker `i`'s executor *on that worker's thread* (PJRT executables
     /// are not `Send`; pure-rust executors are usually a cheap `clone`).
+    /// Each worker owns one ingress shard (shards == workers).
     /// Fails if any factory fails or workers disagree on input size.
     pub fn start_pool<E, F>(factory: F, policy: BatchPolicy) -> anyhow::Result<Self>
     where
@@ -526,13 +517,13 @@ impl InferenceServer {
         F: Fn(usize) -> anyhow::Result<E> + Send + Sync + 'static,
     {
         let factory = Arc::new(factory);
-        let shared = Arc::new(Shared::new(policy.queue_cap));
         let n = policy.workers.max(1);
+        let ingress = Arc::new(Ingress::new(n, policy.queue_cap));
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<usize>>();
         let mut workers = Vec::with_capacity(n);
         for w in 0..n {
             let factory = Arc::clone(&factory);
-            let shared = Arc::clone(&shared);
+            let ingress = Arc::clone(&ingress);
             let ready_tx = ready_tx.clone();
             workers.push(std::thread::spawn(move || {
                 let executor = match factory(w) {
@@ -553,7 +544,7 @@ impl InferenceServer {
                 drop(ready_tx);
                 // The factory stays available to the loop so a poisoned
                 // executor (caught panic) can be rebuilt in place.
-                worker_loop(w, executor, &shared, policy, &|| factory(w))
+                worker_loop(w, executor, &ingress, policy, &|| factory(w))
             }));
         }
         drop(ready_tx);
@@ -579,7 +570,7 @@ impl InferenceServer {
             }
         }
         if let Some(e) = startup_err {
-            shared.close();
+            ingress.close();
             for w in workers {
                 let _ = w.join();
             }
@@ -587,11 +578,11 @@ impl InferenceServer {
         }
         let input_elems = input_elems.expect("at least one worker");
         let handle = ServerHandle {
-            shared: Arc::clone(&shared),
+            ingress: Arc::clone(&ingress),
             input_elems,
         };
         Ok(Self {
-            shared,
+            ingress,
             handle,
             workers,
             drain_timeout: policy.drain_timeout,
@@ -640,17 +631,18 @@ impl InferenceServer {
         self.handle.clone()
     }
 
-    /// Stop the server: close the queue to new submissions, drain every
-    /// pending request, join the pool, and return the merged metrics.
+    /// Stop the server: close the ingress to new submissions, drain
+    /// every pending request, join the pool, and return the merged
+    /// metrics (including the per-shard ingress counters).
     ///
     /// The drain is bounded by [`BatchPolicy::drain_timeout`]: if the
     /// pool has not finished by then (a wedged executor), the residual
-    /// queue is load-shed with [`ServeError::Stopped`]
+    /// queues are load-shed with [`ServeError::Stopped`]
     /// (`metrics.drain_shed`), workers get one more timeout window to
     /// finish their in-flight batch, and any still unfinished are
     /// abandoned (`metrics.workers_lost`) so the caller never hangs.
     pub fn stop(mut self) -> ServerMetrics {
-        self.shared.close();
+        self.ingress.close();
         let mut total = ServerMetrics::default();
         let deadline = Instant::now() + self.drain_timeout;
         while Instant::now() < deadline && !self.workers.iter().all(|w| w.is_finished()) {
@@ -660,7 +652,9 @@ impl InferenceServer {
             // Timed out: unblock every still-queued client with a typed
             // error, then give workers one more window for the batch
             // they are already executing.
-            total.drain_shed = self.shared.shed_residual();
+            total.drain_shed = self.ingress.drain_residual(|r| {
+                let _ = r.reply.send(Err(ServeError::Stopped));
+            });
             let grace = Instant::now() + self.drain_timeout;
             while Instant::now() < grace && !self.workers.iter().all(|w| w.is_finished()) {
                 std::thread::sleep(Duration::from_millis(1));
@@ -676,11 +670,12 @@ impl InferenceServer {
                 }
             } else {
                 // Still wedged past both windows: abandon the thread
-                // (it holds only its own executor and a queue handle).
+                // (it holds only its own executor and an ingress handle).
                 total.workers_lost += 1;
             }
         }
-        total.rejected = self.shared.rejected.load(Ordering::Relaxed);
+        total.rejected = self.ingress.rejected();
+        total.per_shard = self.ingress.shard_summaries();
         total.finalize();
         total
     }
@@ -691,27 +686,31 @@ impl Drop for InferenceServer {
         // `stop()` drains `workers`, so this only fires on an abandoned
         // server (e.g. a panicking test): release the pool so threads
         // drain and exit instead of blocking forever.
-        self.shared.close();
+        self.ingress.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
         // Workers that died early can leave requests queued; unblock
         // their clients with the typed shutdown error.
-        self.shared.shed_residual();
+        self.ingress.drain_residual(|r| {
+            let _ = r.reply.send(Err(ServeError::Stopped));
+        });
     }
 }
 
-/// One pool worker: pop a batch from the shared queue (first request
-/// blocking, companions until the deadline), reap expired requests, pad,
-/// execute under a panic guard, reply.
+/// One pool worker: pop a batch from the sharded ingress (own shard
+/// first, stealing from siblings on empty; first request blocking,
+/// companions until the deadline), reap requests whose SLO can no longer
+/// be met, pad, execute under a panic guard, reply.
 ///
 /// `rebuild` re-runs the worker's executor factory after a caught panic
 /// (the poisoned executor's internal state is unknowable). If the
-/// rebuild fails, the worker retires early; its metrics survive.
+/// rebuild fails, the worker retires early; its metrics survive, and
+/// sibling workers steal the residue of its shard.
 fn worker_loop<E: BatchExecutor>(
     worker_id: usize,
     mut executor: E,
-    shared: &Shared,
+    ingress: &Ingress<Request>,
     policy: BatchPolicy,
     rebuild: &dyn Fn() -> anyhow::Result<E>,
 ) -> ServerMetrics {
@@ -732,31 +731,50 @@ fn worker_loop<E: BatchExecutor>(
     };
     // Deterministic per-worker stream for the latency reservoir.
     let mut rng = crate::util::rng::Rng::new(0xC0FF_EE00 ^ worker_id as u64);
-    while let Some(first) = shared.pop_blocking() {
+    while let Some(first) = ingress.pop_blocking(worker_id) {
+        if first.stolen {
+            metrics.steals += 1;
+        }
         let gather_deadline = Instant::now() + policy.max_wait;
-        let mut batch = vec![first];
+        let mut batch = vec![first.item];
         while batch.len() < bs {
-            match shared.pop_until(gather_deadline) {
-                Some(r) => batch.push(r),
+            match ingress.pop_until(worker_id, gather_deadline) {
+                Some(p) => {
+                    if p.stolen {
+                        metrics.steals += 1;
+                    }
+                    batch.push(p.item);
+                }
                 None => break,
             }
         }
-        // Reap requests whose per-request deadline expired while queued:
-        // typed error, no lane occupied, no latency sample.
-        if let Some(dl) = policy.deadline {
-            let now = Instant::now();
-            batch.retain(|r| {
+        // Reap requests whose SLO can no longer be met: an expired
+        // deadline (per-request class first, pool-wide fallback), or a
+        // traffic budget below the executor's modeled per-image floor.
+        // Typed error, no lane occupied, no latency sample.
+        let now = Instant::now();
+        batch.retain(|r| {
+            if let Some(dl) = r.slo.deadline.or(policy.deadline) {
                 if now.duration_since(r.enqueued) > dl {
                     metrics.deadline_expired += 1;
                     let _ = r.reply.send(Err(ServeError::DeadlineExceeded));
-                    false
-                } else {
-                    true
+                    return false;
                 }
-            });
-            if batch.is_empty() {
-                continue;
             }
+            if let (Some(budget), Some(c)) = (r.slo.max_bits, cost) {
+                if c.act_bits > budget {
+                    metrics.budget_violations += 1;
+                    let _ = r.reply.send(Err(ServeError::TrafficBudgetExceeded {
+                        budget_bits: budget,
+                        floor_bits: c.act_bits,
+                    }));
+                    return false;
+                }
+            }
+            true
+        });
+        if batch.is_empty() {
+            continue;
         }
         // Assemble (pad partial batches with zeros).
         let mut flat = vec![0f32; bs * in_elems];
@@ -764,6 +782,7 @@ fn worker_loop<E: BatchExecutor>(
             flat[i * in_elems..(i + 1) * in_elems].copy_from_slice(&r.input);
         }
         let fidelities: Vec<Fidelity> = batch.iter().map(|r| r.fidelity).collect();
+        let telem_before = executor.telemetry();
         let t0 = Instant::now();
         // The executor is arbitrary user code; a panic inside it must
         // not take down the worker (the batch is lost, the pool is not).
@@ -780,16 +799,29 @@ fn worker_loop<E: BatchExecutor>(
                 // even after failed batches.
                 metrics.padded_slots += (bs - batch.len()) as u64;
                 let occupancy = batch.len();
+                // Attribute the batch's measured traffic evenly over its
+                // occupied lanes (0 for telemetry-less executors).
+                let delta_bits = executor
+                    .telemetry()
+                    .traffic_bits
+                    .saturating_sub(telem_before.traffic_bits);
+                let share = delta_bits / occupancy as u64;
                 for (i, r) in batch.into_iter().enumerate() {
                     let latency = r.enqueued.elapsed();
                     metrics.requests += 1;
                     metrics.record_latency(latency.as_secs_f64() * 1e6, &mut rng);
+                    let budget_exceeded = r.slo.max_bits.is_some_and(|b| share > b);
+                    if budget_exceeded {
+                        metrics.budget_violations += 1;
+                    }
                     let _ = r.reply.send(Ok(Reply {
                         logits: out[i * out_elems..(i + 1) * out_elems].to_vec(),
                         latency,
                         batch_size: bs,
                         occupancy,
                         cost,
+                        traffic_bits: share,
+                        budget_exceeded,
                     }));
                 }
             }
@@ -817,7 +849,7 @@ fn worker_loop<E: BatchExecutor>(
                     Ok(e) => executor = e,
                     Err(e) => {
                         // No replacement: retire this worker. Sibling
-                        // workers (if any) keep draining the queue.
+                        // workers (if any) steal its shard's residue.
                         eprintln!(
                             "pacim-server[{worker_id}]: executor rebuild failed ({e}); \
                              worker retiring"
@@ -913,11 +945,16 @@ mod tests {
         assert_eq!(reply.batch_size, 4);
         assert_eq!(reply.occupancy, 1);
         assert!(reply.cost.is_none(), "mock has no cost model");
+        assert_eq!(reply.traffic_bits, 0, "mock exposes no telemetry");
+        assert!(!reply.budget_exceeded, "best-effort SLO never flags");
         let metrics = server.stop();
         assert_eq!(metrics.requests, 1);
         assert_eq!(metrics.batches, 1);
         assert_eq!(metrics.padded_slots, 3);
         assert_eq!(metrics.batch_fill, vec![1, 0, 0, 0]);
+        assert_eq!(metrics.per_shard.len(), 1);
+        assert_eq!(metrics.per_shard[0].submitted, 1);
+        assert_eq!(metrics.steals, 0, "one shard: nothing to steal");
     }
 
     #[test]
@@ -1053,6 +1090,19 @@ mod tests {
             .sum();
         assert_eq!(filled, m.requests);
         assert_eq!(m.padded_slots, m.batches * 2 - m.requests);
+        // Per-shard ingress accounting covers every admission, and the
+        // per-worker fill histograms partition the aggregate exactly.
+        assert_eq!(m.per_shard.len(), 3);
+        let shard_submitted: u64 = m.per_shard.iter().map(|s| s.submitted).sum();
+        assert_eq!(shard_submitted, 24);
+        for i in 0..m.batch_fill.len() {
+            let per_worker_sum: u64 = m
+                .per_worker
+                .iter()
+                .map(|w| w.batch_fill.get(i).copied().unwrap_or(0))
+                .sum();
+            assert_eq!(per_worker_sum, m.batch_fill[i], "fill bucket {i}");
+        }
     }
 
     #[test]
@@ -1200,6 +1250,138 @@ mod tests {
     }
 
     #[test]
+    fn slo_deadline_overrides_pool_policy() {
+        // Pool-wide deadline is None, but the victim carries its own
+        // 20ms SLO deadline — it must be reaped while the best-effort
+        // sibling queued behind the same slow batch is served.
+        let server = InferenceServer::start(
+            MockExecutor {
+                delay: Duration::from_millis(100),
+                ..mock(1)
+            },
+            BatchPolicy {
+                max_wait: Duration::from_micros(1),
+                ..BatchPolicy::default()
+            },
+        );
+        let h = server.handle();
+        let busy = h.submit(vec![0.0; 4]).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let victim = h
+            .submit_slo(
+                vec![1.0; 4],
+                Fidelity::Fast,
+                SloClass::latency(Duration::from_millis(20)),
+            )
+            .unwrap();
+        let patient = h.submit(vec![2.0; 4]).unwrap();
+        assert!(busy.wait().is_ok());
+        let got = victim.wait();
+        assert!(matches!(got, Err(ServeError::DeadlineExceeded)), "{got:?}");
+        assert!(patient.wait().is_ok(), "best-effort request survives");
+        let m = server.stop();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.deadline_expired, 1);
+    }
+
+    #[test]
+    fn traffic_budget_below_modeled_floor_is_reaped() {
+        // The executor models 1000 act bits per image; a 10-bit budget
+        // can never be met, so the request is reaped pre-execution with
+        // the typed error, while a generous budget rides through.
+        struct Costed(MockExecutor);
+        impl BatchExecutor for Costed {
+            fn batch_size(&self) -> usize {
+                self.0.batch_size()
+            }
+            fn input_elems(&self) -> usize {
+                self.0.input_elems()
+            }
+            fn output_elems(&self) -> usize {
+                self.0.output_elems()
+            }
+            fn execute(&mut self, batch: &[f32], occupancy: usize) -> anyhow::Result<Vec<f32>> {
+                self.0.execute(batch, occupancy)
+            }
+            fn cost_estimate(&self) -> Option<CostEstimate> {
+                Some(CostEstimate {
+                    cycles: 1,
+                    compute_pj: 0.0,
+                    memory_pj: 0.0,
+                    act_bits: 1000,
+                    act_bits_baseline: 8000,
+                })
+            }
+        }
+        let server = InferenceServer::start(Costed(mock(1)), BatchPolicy::default());
+        let h = server.handle();
+        let got = h.infer_slo(vec![0.0; 4], Fidelity::Fast, SloClass::traffic_budget(10));
+        assert!(
+            matches!(
+                got,
+                Err(ServeError::TrafficBudgetExceeded {
+                    budget_bits: 10,
+                    floor_bits: 1000,
+                })
+            ),
+            "{got:?}"
+        );
+        let ok = h.infer_slo(
+            vec![0.0; 4],
+            Fidelity::Fast,
+            SloClass::traffic_budget(1_000_000),
+        );
+        assert!(ok.is_ok());
+        let m = server.stop();
+        assert_eq!(m.requests, 1, "the reaped request never occupied a lane");
+        assert_eq!(m.budget_violations, 1);
+    }
+
+    #[test]
+    fn measured_share_overrun_flags_the_reply() {
+        // Telemetry grows 100 bits per call; with batch 1 every request
+        // is attributed 100 measured bits. A 50-bit budget is overrun
+        // (flagged, still served); a 1000-bit budget is within SLO.
+        struct Telem(MockExecutor);
+        impl BatchExecutor for Telem {
+            fn batch_size(&self) -> usize {
+                self.0.batch_size()
+            }
+            fn input_elems(&self) -> usize {
+                self.0.input_elems()
+            }
+            fn output_elems(&self) -> usize {
+                self.0.output_elems()
+            }
+            fn execute(&mut self, batch: &[f32], occupancy: usize) -> anyhow::Result<Vec<f32>> {
+                self.0.execute(batch, occupancy)
+            }
+            fn telemetry(&self) -> ExecTelemetry {
+                ExecTelemetry {
+                    traffic_bits: 100 * self.0.calls,
+                    traffic_baseline_bits: 200 * self.0.calls,
+                    escalated: 0,
+                }
+            }
+        }
+        let server = InferenceServer::start(Telem(mock(1)), BatchPolicy::default());
+        let h = server.handle();
+        let flagged = h
+            .infer_slo(vec![0.0; 4], Fidelity::Fast, SloClass::traffic_budget(50))
+            .unwrap();
+        assert_eq!(flagged.traffic_bits, 100);
+        assert!(flagged.budget_exceeded, "100 measured bits > 50 budget");
+        let within = h
+            .infer_slo(vec![0.0; 4], Fidelity::Fast, SloClass::traffic_budget(1000))
+            .unwrap();
+        assert_eq!(within.traffic_bits, 100);
+        assert!(!within.budget_exceeded);
+        let m = server.stop();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.budget_violations, 1);
+    }
+
+    #[test]
     fn fidelity_reaches_the_executor_and_defaults_to_fast() {
         use std::sync::atomic::{AtomicU64, Ordering};
         struct Spy {
@@ -1277,7 +1459,8 @@ mod tests {
         let server = InferenceServer::start(Telem(mock(1)), BatchPolicy::default());
         let h = server.handle();
         for _ in 0..4 {
-            h.infer(vec![0.0; 4]).unwrap();
+            let r = h.infer(vec![0.0; 4]).unwrap();
+            assert_eq!(r.traffic_bits, 100, "per-reply measured attribution");
         }
         let m = server.stop();
         assert_eq!(m.traffic_bits, 400);

@@ -65,6 +65,16 @@ pub enum PacimError {
     #[error("request deadline exceeded while queued")]
     DeadlineExceeded,
 
+    /// The request's traffic-budget SLO is below the executor's modeled
+    /// per-image floor; it cannot possibly be served within budget and
+    /// was reaped before occupying a lane.
+    #[error("traffic budget {budget_bits} bits below the modeled floor of {floor_bits} bits")]
+    TrafficBudgetExceeded { budget_bits: u64, floor_bits: u64 },
+
+    /// The multi-model router has no tenant registered under this id.
+    #[error("unknown model '{model}'")]
+    UnknownModel { model: String },
+
     /// An internal invariant failed (e.g. an evaluation worker died).
     #[error("internal error: {0}")]
     Internal(String),
@@ -98,6 +108,14 @@ impl From<ServeError> for PacimError {
             ServeError::Dropped => PacimError::RequestDropped,
             ServeError::WorkerLost => PacimError::WorkerLost,
             ServeError::DeadlineExceeded => PacimError::DeadlineExceeded,
+            ServeError::TrafficBudgetExceeded {
+                budget_bits,
+                floor_bits,
+            } => PacimError::TrafficBudgetExceeded {
+                budget_bits,
+                floor_bits,
+            },
+            ServeError::UnknownModel { model } => PacimError::UnknownModel { model },
         }
     }
 }

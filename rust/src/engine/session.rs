@@ -306,6 +306,14 @@ impl Engine {
         Ok(())
     }
 
+    /// Whether `fidelity` can run on this engine ([`Fidelity::Accurate`]
+    /// on a PAC engine needs the exact fallback, which only exists once
+    /// escalation is armed). The registry validation hook of
+    /// [`crate::coordinator::ModelRegistry`].
+    pub fn supports_fidelity(&self, fidelity: Fidelity) -> bool {
+        self.check_fidelity(fidelity).is_ok()
+    }
+
     /// The escalation decision (DESIGN.md §15): re-run a sample exactly
     /// when its top-two logit margin is smaller than
     /// `min_margin + sigma · σ_margin`, where `σ_margin` is the standard

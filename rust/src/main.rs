@@ -12,9 +12,12 @@
 //! pacim accuracy [--images N] [--dynamic]  # exact vs PAC accuracy on artifacts
 //! pacim serve [--requests N] [--clients N] [--workers N] [--batch N]
 //!             [--batch-wait-ms T] [--queue-cap N] [--dynamic] [--exact]
-//!             [--pjrt]           # serve via the PAC-native executor pool
+//!             [--models a,b] [--pjrt]
+//!                                # serve via the PAC-native executor pool
 //!                                # (artifacts when built, synthetic
-//!                                # workload otherwise; --pjrt needs the
+//!                                # workload otherwise; --models hosts
+//!                                # >= 2 synthetic tenants behind one
+//!                                # routing front door; --pjrt needs the
 //!                                # `pjrt` feature + artifacts)
 //! pacim tune [--quick] [--images N] [--lambda X] [--out PATH]
 //!            [--model resnet18|resnet50|vgg16] [--res cifar|imagenet]
@@ -613,7 +616,142 @@ fn serve(args: &[String]) -> anyhow::Result<()> {
     if has_flag(args, "--pjrt") {
         return serve_pjrt(args);
     }
+    if let Some(models) = arg_value(args, "--models") {
+        return serve_multi(args, &models);
+    }
     serve_pac(args)
+}
+
+/// Multi-model serving (`pacim serve --models resnet18,tinyvgg`): one
+/// tenant pool per id behind `PacExecutor::serve_registry`'s routing
+/// front door, driven by closed-loop round-robin clients. The built
+/// artifacts hold a single model, so tenants always come from the
+/// synthetic workload table
+/// ([`pacim::workload::synthetic_tenant_workload`]) — accuracy is
+/// noise, but latency, stealing, and traffic attribution are real.
+fn serve_multi(args: &[String], models: &str) -> anyhow::Result<()> {
+    use pacim::coordinator::{BatchPolicy, ModelRegistry, ModelSpec};
+    use pacim::runtime::PacExecutor;
+    use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+
+    let ids: Vec<String> = models
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(ids.len() >= 2, "--models needs >= 2 comma-separated ids, got '{models}'");
+    let requests: usize = arg_value(args, "--requests")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(128);
+    let clients: usize = arg_value(args, "--clients")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(8)
+        .max(1);
+    let workers: usize = arg_value(args, "--workers")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2)
+        .max(1);
+    let batch: usize = arg_value(args, "--batch")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(8)
+        .max(1);
+    let wait_ms: u64 = arg_value(args, "--batch-wait-ms")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2);
+    let queue_cap: usize = arg_value(args, "--queue-cap")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1024);
+
+    let policy = BatchPolicy {
+        max_wait: std::time::Duration::from_millis(wait_ms),
+        workers,
+        queue_cap,
+        ..BatchPolicy::default()
+    };
+    let mut registry = ModelRegistry::new();
+    let mut datasets = Vec::new();
+    for (i, id) in ids.iter().enumerate() {
+        let (model, ds) =
+            pacim::workload::synthetic_tenant_workload(id, 2024 + i as u64, 8, 16, 10, 64)?;
+        let engine = EngineBuilder::new(model)
+            .pac(PacConfig::serving())
+            .parallelism(pacim::util::Parallelism::off())
+            .build()?;
+        registry =
+            registry.register(ModelSpec::new(id.clone(), engine).batch(batch).policy(policy))?;
+        datasets.push(ds);
+    }
+    let server = PacExecutor::serve_registry(registry)?;
+    let h = server.handle();
+    println!(
+        "serving {} tenants ({}) | {workers} workers/pool | batch {batch} | \
+         {clients} clients | {requests} requests round-robin",
+        ids.len(),
+        ids.join(", ")
+    );
+
+    let next = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..clients {
+            let h = h.clone();
+            let (next, shed) = (&next, &shed);
+            let (ids, datasets) = (&ids, &datasets);
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Relaxed);
+                if i >= requests {
+                    break;
+                }
+                let t = i % ids.len();
+                let ds = &datasets[t];
+                let idx = (i / ids.len()) % ds.n;
+                let img: Vec<f32> =
+                    ds.image(idx).iter().map(|&q| ds.params.dequantize(q)).collect();
+                if let Err(e) = h.infer(&ids[t], img) {
+                    shed.fetch_add(1, Relaxed);
+                    eprintln!("request {i} ({}): {e}", ids[t]);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let shed = shed.load(Relaxed);
+    let all = server.stop();
+    let total: u64 = all.iter().map(|(_, m)| m.requests).sum();
+    println!(
+        "served {total}/{requests} requests in {:.1} ms ({shed} shed/dropped) | \
+         aggregate {:.1} img/s",
+        wall.as_secs_f64() * 1e3,
+        total as f64 / wall.as_secs_f64()
+    );
+    for (id, m) in &all {
+        println!(
+            "  {id:<12} {:>5} reqs | p50 {:>7.0} us | p99 {:>7.0} us | mean batch {:.2} | \
+             steals {} ({:.1}%) | bits/req {:.0}",
+            m.requests,
+            m.latency_percentile_us(50.0),
+            m.latency_percentile_us(99.0),
+            m.mean_batch_occupancy(),
+            m.steals,
+            m.steal_rate() * 100.0,
+            m.bits_per_request()
+        );
+        for sh in &m.per_shard {
+            println!(
+                "    shard {}: {} submitted, {} stolen, max depth {}",
+                sh.shard, sh.submitted, sh.stolen, sh.max_depth
+            );
+        }
+    }
+    println!("note: synthetic tenants — accuracy is noise; latency/steals/traffic are real");
+    Ok(())
 }
 
 /// Load the trained artifact model + dataset, or fall back to the

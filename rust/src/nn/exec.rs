@@ -258,55 +258,18 @@ pub(crate) fn exact_gemm_tiled(
     });
 }
 
-/// The shared interpreter. Runs `model` on one quantized CHW image with
-/// the driver scalar (the deterministic reference path; a backend's own
-/// configured parallelism, e.g. `PacConfig::par`, still applies).
-#[deprecated(
-    since = "0.1.0",
-    note = "construct inference through `pacim::engine` \
-            (`EngineBuilder::new(model).build()?.session().infer(&img)?`); \
-            `run_model_with` remains the low-level reference entry point"
-)]
-pub fn run_model<B: MacBackend + Sync>(
-    model: &Model,
-    backend: &B,
-    image: &[u8],
-) -> (Vec<f32>, RunStats) {
-    run_model_with(
-        model,
-        backend,
-        image,
-        &Parallelism::off(),
-        &mut ModelScratch::default(),
-    )
-}
-
-/// The shared interpreter with an explicit parallelism policy, handed to
-/// each layer's blocked GEMM as the tile fan-out policy (tiles of
-/// `TILE_PIXELS` output pixels — coarse enough to amortize rayon
-/// fork/join, unlike the per-pixel fan-out this replaced).
+/// The shared interpreter: runs `model` on one quantized CHW image with
+/// an explicit parallelism policy (handed to each layer's blocked GEMM
+/// as the tile fan-out policy — tiles of [`TILE_PIXELS`] output pixels)
+/// and a caller-owned scratch arena. Serving workers and evaluation
+/// loops thread one [`ModelScratch`] per worker through every request so
+/// steady-state inference allocates nothing per pixel.
 ///
-/// Bit-identical to [`run_model`] for any `par`: tiles own disjoint
-/// output rows, per-tile statistics are integer counters merged in tile
-/// order, and backends are required to be bit-deterministic.
-#[deprecated(
-    since = "0.1.0",
-    note = "construct inference through `pacim::engine` \
-            (`EngineBuilder::new(model).parallelism(par).build()?`); \
-            `run_model_with` remains the low-level reference entry point"
-)]
-pub fn run_model_par<B: MacBackend + Sync>(
-    model: &Model,
-    backend: &B,
-    image: &[u8],
-    par: &Parallelism,
-) -> (Vec<f32>, RunStats) {
-    run_model_with(model, backend, image, par, &mut ModelScratch::default())
-}
-
-/// [`run_model_par`] with a caller-owned scratch arena: serving workers
-/// and evaluation loops thread one [`ModelScratch`] per worker through
-/// every request so steady-state inference allocates nothing per pixel.
+/// Bit-identical for any `par`: tiles own disjoint output rows, per-tile
+/// statistics are integer counters merged in tile order, and backends
+/// are required to be bit-deterministic. This is the low-level reference
+/// entry point; typed, validated inference goes through `pacim::engine`
+/// (`EngineBuilder::new(model).build()?.session().infer(&img)?`).
 pub fn run_model_with<B: MacBackend + Sync>(
     model: &Model,
     backend: &B,
@@ -469,33 +432,16 @@ pub fn run_model_with<B: MacBackend + Sync>(
 }
 
 /// Run a batch of images through the interpreter, fanning the *lanes*
-/// out over rayon (the intra-batch parallelism of the serving path:
-/// each lane is one whole forward pass, so the fan-out threshold is
-/// coarse — see [`Parallelism::coarse`]).
-///
-/// Bit-identical to looping [`run_model`] over `images`: lanes are
-/// independent and collected in lane order.
-#[deprecated(
-    since = "0.1.0",
-    note = "construct inference through `pacim::engine` \
-            (`Session::infer_batch`); `run_model_batch_with` remains the \
-            low-level reference entry point"
-)]
-pub fn run_model_batch<B: MacBackend + Sync>(
-    model: &Model,
-    backend: &B,
-    images: &[&[u8]],
-    par: &Parallelism,
-) -> Vec<(Vec<f32>, RunStats)> {
-    let mut scratches = vec![ModelScratch::default(); images.len()];
-    run_model_batch_with(model, backend, images, par, &mut scratches)
-}
-
-/// [`run_model_batch`] with caller-owned per-lane scratch arenas
-/// (`scratches.len() >= images.len()`): the serving executor keeps its
-/// arenas across requests, so a warm worker's whole forward pass runs
-/// out of reused buffers. Each lane's driver is scalar (the lanes *are*
-/// the parallel grain); a backend's configured parallelism still applies.
+/// out over rayon (the intra-batch parallelism of the serving path: each
+/// lane is one whole forward pass, so the fan-out threshold is coarse —
+/// see [`Parallelism::coarse`]) with caller-owned per-lane scratch
+/// arenas (`scratches.len() >= images.len()`): the serving executor
+/// keeps its arenas across requests, so a warm worker's whole forward
+/// pass runs out of reused buffers. Each lane's driver is scalar (the
+/// lanes *are* the parallel grain); a backend's configured parallelism
+/// still applies. Bit-identical to looping [`run_model_with`] over
+/// `images`: lanes are independent and collected in lane order. Typed
+/// batch inference goes through `Session::infer_batch`.
 pub fn run_model_batch_with<B: MacBackend + Sync>(
     model: &Model,
     backend: &B,
@@ -630,67 +576,27 @@ pub fn exact_backend(model: &Model) -> ExactBackend {
     b
 }
 
-/// Run a whole dataset slice and return top-1 accuracy.
-#[deprecated(
-    since = "0.1.0",
-    note = "construct inference through `pacim::engine` \
-            (`Engine::evaluate` returns a typed `Evaluation` and never aborts)"
-)]
-pub fn evaluate<B: MacBackend + Sync>(
-    model: &Model,
-    backend: &B,
-    images: &[&[u8]],
-    labels: &[usize],
-    threads: usize,
-) -> (f64, RunStats) {
-    assert_eq!(images.len(), labels.len());
-    let n = images.len();
-    let correct = std::sync::atomic::AtomicUsize::new(0);
-    let all_stats = std::sync::Mutex::new(RunStats::default());
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        for _ in 0..threads.max(1) {
-            s.spawn(|| {
-                let mut local = RunStats::default();
-                // Per-worker scratch arena, reused across every image this
-                // worker claims (steady-state: zero allocation per pixel).
-                let mut scratch = ModelScratch::default();
-                let par = Parallelism::off();
-                loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let (logits, st) =
-                        run_model_with(model, backend, images[i], &par, &mut scratch);
-                    local.merge(&st);
-                    let pred = logits
-                        .iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i)
-                        .unwrap();
-                    if pred == labels[i] {
-                        correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    }
-                }
-                all_stats.lock().unwrap().merge(&local);
-            });
-        }
-    });
-    let acc = correct.load(std::sync::atomic::Ordering::Relaxed) as f64 / n.max(1) as f64;
-    (acc, all_stats.into_inner().unwrap())
-}
-
 #[cfg(test)]
 mod tests {
-    // The deprecated convenience wrappers stay covered until the shims
-    // are deleted; new code goes through `pacim::engine`.
-    #![allow(deprecated)]
-
     use super::*;
     use crate::nn::layers::{synthetic, tiny_resnet};
     use crate::util::rng::Rng;
+
+    /// Scalar-driver, fresh-scratch convenience for these tests (dataset
+    /// evaluation goes through `Engine::evaluate`).
+    fn run_model<B: MacBackend + Sync>(
+        model: &Model,
+        backend: &B,
+        image: &[u8],
+    ) -> (Vec<f32>, RunStats) {
+        run_model_with(
+            model,
+            backend,
+            image,
+            &Parallelism::off(),
+            &mut ModelScratch::default(),
+        )
+    }
 
     #[test]
     fn exact_engine_runs_tiny_resnet() {
@@ -747,7 +653,8 @@ mod tests {
                 min_items: 1,
             },
         ] {
-            let (b, sb) = run_model_par(&model, &backend, &img, &par);
+            let (b, sb) =
+                run_model_with(&model, &backend, &img, &par, &mut ModelScratch::default());
             assert_eq!(a, b);
             assert_eq!(sa.macs, sb.macs);
             assert_eq!(sa.digital_cycles, sb.digital_cycles);
@@ -771,7 +678,8 @@ mod tests {
             .map(|img| run_model(&model, &backend, img))
             .collect();
         for par in [Parallelism::off(), Parallelism::coarse()] {
-            let lanes = run_model_batch(&model, &backend, &refs, &par);
+            let mut scratches = vec![ModelScratch::default(); refs.len()];
+            let lanes = run_model_batch_with(&model, &backend, &refs, &par, &mut scratches);
             for ((a, sa), (b, sb)) in seq.iter().zip(&lanes) {
                 assert_eq!(a, b);
                 assert_eq!(sa.macs, sb.macs);
@@ -797,33 +705,6 @@ mod tests {
             assert_eq!(fresh, warm);
             assert_eq!(sf.macs, sw.macs);
         }
-    }
-
-    #[test]
-    fn evaluate_counts_accuracy() {
-        let mut rng = Rng::new(203);
-        let store = synthetic::random_store(&mut rng, 8, 4);
-        let model = tiny_resnet(&store, 16, 4).unwrap();
-        let backend = exact_backend(&model);
-        let imgs: Vec<Vec<u8>> = (0..8)
-            .map(|_| (0..3 * 16 * 16).map(|_| rng.below(256) as u8).collect())
-            .collect();
-        let refs: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
-        // Label each image by the model's own prediction → accuracy 1.0.
-        let labels: Vec<usize> = refs
-            .iter()
-            .map(|img| {
-                let (lg, _) = run_model(&model, &backend, img);
-                lg.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0
-            })
-            .collect();
-        let (acc, stats) = evaluate(&model, &backend, &refs, &labels, 4);
-        assert_eq!(acc, 1.0);
-        assert_eq!(stats.macs, model.macs() * 8);
     }
 
     #[test]

@@ -278,43 +278,29 @@ pub mod synthetic {
     use crate::quant::{calibrate_minmax, calibrate_weights_symmetric};
     use crate::util::rng::Rng;
 
-    /// A fully-populated `tiny_resnet` weight store with width `c` and
-    /// `classes` output classes, deterministic in the `rng` stream.
-    pub fn random_store(rng: &mut Rng, c: usize, classes: usize) -> WeightStore {
-        let mut s = WeightStore::default();
-        s.insert_f32("input.oq", &[2], &[1.0 / 64.0, 128.0]);
-        let mut conv = |s: &mut WeightStore, name: &str, ic: usize, oc: usize| {
-            let k = ic * 9;
-            let wf: Vec<f32> = (0..oc * k)
-                .map(|_| (rng.next_f32() - 0.5) * 0.6)
-                .collect();
-            let wt = Tensor::from_vec(&[oc, k], wf.clone());
-            let wp = calibrate_weights_symmetric(&wt);
-            let wq: Vec<u8> = wf.iter().map(|&v| wp.quantize(v)).collect();
-            s.insert_u8(&format!("{name}.w"), &[oc, k], wq, wp);
-            let b: Vec<f32> = (0..oc).map(|_| (rng.next_f32() - 0.5) * 0.1).collect();
-            s.insert_f32(&format!("{name}.b"), &[oc], &b);
-            let oqp = calibrate_minmax(0.0, 4.0);
-            s.insert_f32(
-                &format!("{name}.oq"),
-                &[2],
-                &[oqp.scale, oqp.zero_point as f32],
-            );
-        };
-        conv(&mut s, "stem", 3, c);
-        for (tag, ch) in [("block1", c), ("block2", 2 * c), ("block3", 4 * c)] {
-            conv(&mut s, &format!("{tag}.conv1"), ch, ch);
-            conv(&mut s, &format!("{tag}.conv2"), ch, ch);
-            let oqp = calibrate_minmax(0.0, 6.0);
-            s.insert_f32(
-                &format!("{tag}.add.oq"),
-                &[2],
-                &[oqp.scale, oqp.zero_point as f32],
-            );
-        }
-        conv(&mut s, "down1", c, 2 * c);
-        conv(&mut s, "down2", 2 * c, 4 * c);
-        let k = 4 * c;
+    /// Insert a 3×3 conv layer (`name.w`/`name.b`/`name.oq`) drawn from
+    /// the `rng` stream.
+    fn insert_conv(rng: &mut Rng, s: &mut WeightStore, name: &str, ic: usize, oc: usize) {
+        let k = ic * 9;
+        let wf: Vec<f32> = (0..oc * k)
+            .map(|_| (rng.next_f32() - 0.5) * 0.6)
+            .collect();
+        let wt = Tensor::from_vec(&[oc, k], wf.clone());
+        let wp = calibrate_weights_symmetric(&wt);
+        let wq: Vec<u8> = wf.iter().map(|&v| wp.quantize(v)).collect();
+        s.insert_u8(&format!("{name}.w"), &[oc, k], wq, wp);
+        let b: Vec<f32> = (0..oc).map(|_| (rng.next_f32() - 0.5) * 0.1).collect();
+        s.insert_f32(&format!("{name}.b"), &[oc], &b);
+        let oqp = calibrate_minmax(0.0, 4.0);
+        s.insert_f32(
+            &format!("{name}.oq"),
+            &[2],
+            &[oqp.scale, oqp.zero_point as f32],
+        );
+    }
+
+    /// Insert the classifier head (`fc.w`/`fc.b`) with `k` input features.
+    fn insert_fc(rng: &mut Rng, s: &mut WeightStore, k: usize, classes: usize) {
         let wf: Vec<f32> = (0..classes * k)
             .map(|_| (rng.next_f32() - 0.5) * 0.8)
             .collect();
@@ -324,6 +310,43 @@ pub mod synthetic {
         s.insert_u8("fc.w", &[classes, k], wq, wp);
         let b: Vec<f32> = (0..classes).map(|_| (rng.next_f32() - 0.5) * 0.1).collect();
         s.insert_f32("fc.b", &[classes], &b);
+    }
+
+    /// A fully-populated `tiny_resnet` weight store with width `c` and
+    /// `classes` output classes, deterministic in the `rng` stream.
+    pub fn random_store(rng: &mut Rng, c: usize, classes: usize) -> WeightStore {
+        let mut s = WeightStore::default();
+        s.insert_f32("input.oq", &[2], &[1.0 / 64.0, 128.0]);
+        insert_conv(rng, &mut s, "stem", 3, c);
+        for (tag, ch) in [("block1", c), ("block2", 2 * c), ("block3", 4 * c)] {
+            insert_conv(rng, &mut s, &format!("{tag}.conv1"), ch, ch);
+            insert_conv(rng, &mut s, &format!("{tag}.conv2"), ch, ch);
+            let oqp = calibrate_minmax(0.0, 6.0);
+            s.insert_f32(
+                &format!("{tag}.add.oq"),
+                &[2],
+                &[oqp.scale, oqp.zero_point as f32],
+            );
+        }
+        insert_conv(rng, &mut s, "down1", c, 2 * c);
+        insert_conv(rng, &mut s, "down2", 2 * c, 4 * c);
+        insert_fc(rng, &mut s, 4 * c, classes);
+        s
+    }
+
+    /// A fully-populated `tiny_vgg` weight store with base width `c` and
+    /// `classes` output classes, deterministic in the `rng` stream —
+    /// the second-tenant model of the multi-model serving path.
+    pub fn random_vgg_store(rng: &mut Rng, c: usize, classes: usize) -> WeightStore {
+        let mut s = WeightStore::default();
+        s.insert_f32("input.oq", &[2], &[1.0 / 64.0, 128.0]);
+        insert_conv(rng, &mut s, "conv1a", 3, c);
+        insert_conv(rng, &mut s, "conv1b", c, c);
+        insert_conv(rng, &mut s, "conv2a", c, 2 * c);
+        insert_conv(rng, &mut s, "conv2b", 2 * c, 2 * c);
+        insert_conv(rng, &mut s, "conv3a", 2 * c, 4 * c);
+        insert_conv(rng, &mut s, "conv3b", 4 * c, 4 * c);
+        insert_fc(rng, &mut s, 4 * c, classes);
         s
     }
 }
@@ -347,6 +370,22 @@ mod tests {
             .filter(|o| matches!(o, Op::Conv2d(_)))
             .count();
         assert_eq!(convs, 9);
+        assert!(m.macs() > 0);
+    }
+
+    #[test]
+    fn tiny_vgg_builds_from_store() {
+        let mut rng = Rng::new(321);
+        let store = synthetic::random_vgg_store(&mut rng, 8, 10);
+        let m = tiny_vgg(&store, 16, 10).unwrap();
+        assert_eq!(m.num_classes, 10);
+        assert_eq!(m.in_hw, 16);
+        let convs = m
+            .ops
+            .iter()
+            .filter(|o| matches!(o, Op::Conv2d(_)))
+            .count();
+        assert_eq!(convs, 6);
         assert!(m.macs() > 0);
     }
 

@@ -13,8 +13,7 @@
 //!
 //! Construct inference through [`crate::engine`] (the typed Session
 //! front door); the free functions re-exported here are the low-level
-//! reference path (`run_model_with`, `run_model_batch_with`) plus
-//! deprecated convenience shims kept for migration.
+//! reference path (`run_model_with`, `run_model_batch_with`).
 
 pub mod exec;
 pub mod layers;
@@ -27,10 +26,6 @@ pub use exec::{
     exact_backend, run_model_batch_with, run_model_with, ExactBackend, GemmInput, MacBackend,
     ModelScratch, RunStats,
 };
-// Deprecated convenience wrappers, kept as shims while call sites move to
-// `pacim::engine` (the typed Session front door).
-#[allow(deprecated)]
-pub use exec::{evaluate, run_model, run_model_batch, run_model_par};
 pub use layers::{tiny_resnet, tiny_vgg, ConvLayer, LinearLayer, Model, Op};
 pub use pac_exec::{pac_backend, EscalationConfig, PacBackend, PacConfig};
 pub use profiler::{LayerProfile, ProfilingBackend};

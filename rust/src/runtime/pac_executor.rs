@@ -101,6 +101,36 @@ impl PacExecutor {
     pub fn engine(&self) -> &Engine {
         &self.engine
     }
+
+    /// Start one sharded serving pool per registered model and put them
+    /// behind a single routing front door (the `pacim serve --models`
+    /// path). Each tenant's pool clones one [`PacExecutor`] per worker —
+    /// the engine's packed weight planes are `Arc`-shared, so replicas
+    /// cost only their session arenas — and keeps the spec's
+    /// [`BatchPolicy`](crate::coordinator::BatchPolicy), default
+    /// [`Fidelity`], and default
+    /// [`SloClass`](crate::coordinator::SloClass).
+    pub fn serve_registry(
+        registry: crate::coordinator::ModelRegistry,
+    ) -> anyhow::Result<crate::coordinator::MultiModelServer> {
+        use crate::coordinator::{InferenceServer, MultiModelServer, Tenant};
+        if registry.is_empty() {
+            anyhow::bail!("model registry is empty; register at least one ModelSpec");
+        }
+        let mut tenants = Vec::with_capacity(registry.len());
+        for spec in registry.into_specs() {
+            let exec = PacExecutor::from_engine(spec.engine.clone(), spec.batch)?;
+            let server =
+                InferenceServer::start_pool(move |_| Ok(exec.clone()), spec.policy)?;
+            tenants.push(Tenant {
+                id: spec.id,
+                server,
+                default_fidelity: spec.default_fidelity,
+                default_slo: spec.default_slo,
+            });
+        }
+        Ok(MultiModelServer::from_tenants(tenants)?)
+    }
 }
 
 impl BatchExecutor for PacExecutor {

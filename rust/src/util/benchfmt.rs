@@ -128,13 +128,22 @@ pub struct HotpathReport {
 #[derive(Debug, Clone, Serialize, Deserialize)]
 #[serde(deny_unknown_fields)]
 pub struct ServeScenario {
-    /// `"<executor>-<mode>"`, e.g. `"pac-open"`.
+    /// `"<executor>-<mode>"`, e.g. `"pac-open"`, or `"mix-<model>-open"`
+    /// for per-model rows of a multi-model run.
     pub name: String,
     /// `"mock"`, `"pac"`, or `"exact"`.
     pub executor: String,
+    /// Tenant model the scenario served (registry id, e.g. `"resnet18"`;
+    /// single-model scenarios use the workload's model label).
+    pub model: String,
     /// `"open"` (Poisson arrivals) or `"closed"` (fixed client loop).
     pub mode: String,
     pub workers: usize,
+    /// Ingress shards behind the scenario (1 = the pre-sharded pool).
+    pub shards: u64,
+    /// Requests executed by a worker other than the one whose shard
+    /// admitted them (`ServerMetrics::steals`); 0 on a single shard.
+    pub steals: u64,
     pub batch_size: usize,
     pub queue_cap: usize,
     /// Offered open-loop rate (req/s); 0 for closed-loop scenarios.
@@ -632,6 +641,18 @@ pub fn validate_serve(json: &str) -> Result<ServeReport, String> {
         return Err("no scenarios".into());
     }
     for s in &r.scenarios {
+        if s.model.is_empty() {
+            return Err(format!("scenario '{}': empty model id", s.name));
+        }
+        if s.shards == 0 {
+            return Err(format!("scenario '{}': zero ingress shards", s.name));
+        }
+        if s.shards == 1 && s.steals > 0 {
+            return Err(format!(
+                "scenario '{}': {} steals reported on a single shard — nothing to steal from",
+                s.name, s.steals
+            ));
+        }
         if s.completed + s.rejected > s.requests {
             return Err(format!(
                 "scenario '{}': completed {} + rejected {} exceed requests {}",
@@ -676,6 +697,83 @@ pub fn validate_serve(json: &str) -> Result<ServeReport, String> {
         }
     }
     Ok(r)
+}
+
+/// Highest p99 latency a gated multi-model open-loop row may report and
+/// still satisfy [`enforce_serve_slo`] (microseconds). Generous enough
+/// for a loaded CI runner; the gate's job is catching collapse (a
+/// stalled shard, a stranded queue), not micro-benchmark variance.
+pub const SERVE_SLO_P99_FLOOR_US: f64 = 250_000.0;
+
+/// Minimum fraction of the summed offered rate the gated rows must
+/// sustain as completed throughput under [`enforce_serve_slo`].
+pub const SERVE_SLO_MIN_RATE_FRACTION: f64 = 0.5;
+
+/// The multi-model serving SLO gate (CI serve-smoke, behind
+/// `PACIM_ENFORCE_SERVE_SLO`).
+///
+/// Gated rows are the sharded (`shards ≥ 2`) open-loop scenarios — the
+/// multi-model ingress measurement this PR's acceptance names. The gate
+/// refuses vacuous passes: no gated rows, fewer than two distinct
+/// models, or a row that completed nothing all fail. On the gated set
+/// it requires every p99 under [`SERVE_SLO_P99_FLOOR_US`], aggregate
+/// completed throughput at least [`SERVE_SLO_MIN_RATE_FRACTION`] of the
+/// aggregate offered rate, a nonzero steal count somewhere (proof the
+/// work-stealing path actually ran), and — on `pac` rows — a positive
+/// measured bits-per-request (proof the per-model traffic attribution
+/// is wired through).
+pub fn enforce_serve_slo(r: &ServeReport) -> Result<(), String> {
+    let gated: Vec<&ServeScenario> = r
+        .scenarios
+        .iter()
+        .filter(|s| s.shards >= 2 && s.mode == "open")
+        .collect();
+    if gated.is_empty() {
+        return Err("no sharded open-loop rows to gate".into());
+    }
+    let mut models: Vec<&str> = gated.iter().map(|s| s.model.as_str()).collect();
+    models.sort_unstable();
+    models.dedup();
+    if models.len() < 2 {
+        return Err(format!(
+            "gated rows cover {} model(s), need ≥ 2 — not a multi-model measurement",
+            models.len()
+        ));
+    }
+    let (mut offered, mut achieved, mut steals) = (0.0f64, 0.0f64, 0u64);
+    for s in &gated {
+        if s.completed == 0 {
+            return Err(format!("scenario '{}': completed nothing", s.name));
+        }
+        if !(s.p99_us.is_finite() && s.p99_us <= SERVE_SLO_P99_FLOOR_US) {
+            return Err(format!(
+                "scenario '{}': p99 {:.0}µs over the {SERVE_SLO_P99_FLOOR_US:.0}µs SLO floor",
+                s.name, s.p99_us
+            ));
+        }
+        if s.executor == "pac" && s.bits_per_request <= 0.0 {
+            return Err(format!(
+                "scenario '{}': a pac row with no measured bits per request — the \
+                 per-model traffic attribution is not wired through",
+                s.name
+            ));
+        }
+        offered += s.offered_rps;
+        achieved += s.throughput_rps;
+        steals += s.steals;
+    }
+    if steals == 0 {
+        return Err("no gated row recorded a steal — the work-stealing path never ran".into());
+    }
+    if achieved < offered * SERVE_SLO_MIN_RATE_FRACTION {
+        return Err(format!(
+            "aggregate throughput {achieved:.1} req/s under {:.1} ({} of the {offered:.1} \
+             req/s offered)",
+            offered * SERVE_SLO_MIN_RATE_FRACTION,
+            SERVE_SLO_MIN_RATE_FRACTION
+        ));
+    }
+    Ok(())
 }
 
 /// One fault-injection operating point (a `BENCH_resilience.json` row):
@@ -1194,37 +1292,44 @@ mod tests {
         assert!(enforce_tune_front(&r).unwrap_err().contains("comparison"));
     }
 
+    fn serve_scenario() -> ServeScenario {
+        ServeScenario {
+            name: "mock-closed".into(),
+            executor: "mock".into(),
+            model: "tiny_resnet_c8".into(),
+            mode: "closed".into(),
+            workers: 2,
+            batch_size: 4,
+            queue_cap: 64,
+            shards: 2,
+            steals: 3,
+            offered_rps: 0.0,
+            requests: 10,
+            completed: 10,
+            rejected: 0,
+            failed_batches: 0,
+            wall_s: 0.5,
+            throughput_rps: 20.0,
+            p50_us: 100.0,
+            p95_us: 200.0,
+            p99_us: 300.0,
+            mean_batch_occupancy: 2.5,
+            batch_fill: vec![2, 1, 2, 0],
+            modeled_cycles_per_image: 0,
+            modeled_energy_uj_per_image: 0.0,
+            measured_traffic_bits: 4000,
+            traffic_baseline_bits: 8000,
+            bits_per_request: 400.0,
+            escalated: 0,
+        }
+    }
+
     #[test]
     fn serve_roundtrip_and_conservation() {
         let r = ServeReport {
             bench: "serve".into(),
             quick: true,
-            scenarios: vec![ServeScenario {
-                name: "mock-closed".into(),
-                executor: "mock".into(),
-                mode: "closed".into(),
-                workers: 2,
-                batch_size: 4,
-                queue_cap: 64,
-                offered_rps: 0.0,
-                requests: 10,
-                completed: 10,
-                rejected: 0,
-                failed_batches: 0,
-                wall_s: 0.5,
-                throughput_rps: 20.0,
-                p50_us: 100.0,
-                p95_us: 200.0,
-                p99_us: 300.0,
-                mean_batch_occupancy: 2.5,
-                batch_fill: vec![2, 1, 2, 0],
-                modeled_cycles_per_image: 0,
-                modeled_energy_uj_per_image: 0.0,
-                measured_traffic_bits: 4000,
-                traffic_baseline_bits: 8000,
-                bits_per_request: 400.0,
-                escalated: 0,
-            }],
+            scenarios: vec![serve_scenario()],
         };
         let json = serde_json::to_string(&r).unwrap();
         validate_serve(&json).unwrap();
@@ -1241,6 +1346,71 @@ mod tests {
         inflated.scenarios[0].bits_per_request = 900.0;
         let json = serde_json::to_string(&inflated).unwrap();
         assert!(validate_serve(&json).unwrap_err().contains("baseline"));
+        // Steals on a single shard are impossible — schema error.
+        let mut lone = r.clone();
+        lone.scenarios[0].shards = 1;
+        let json = serde_json::to_string(&lone).unwrap();
+        assert!(validate_serve(&json).unwrap_err().contains("steal"));
+        // So is an anonymous scenario.
+        let mut anon = r;
+        anon.scenarios[0].model = String::new();
+        let json = serde_json::to_string(&anon).unwrap();
+        assert!(validate_serve(&json).unwrap_err().contains("model"));
+    }
+
+    #[test]
+    fn serve_slo_gate() {
+        fn mix_row(model: &str, steals: u64) -> ServeScenario {
+            ServeScenario {
+                name: format!("mix-{model}-open"),
+                executor: "pac".into(),
+                model: model.into(),
+                mode: "open".into(),
+                shards: 2,
+                steals,
+                offered_rps: 40.0,
+                throughput_rps: 38.0,
+                ..serve_scenario()
+            }
+        }
+        let report = |scenarios: Vec<ServeScenario>| ServeReport {
+            bench: "serve".into(),
+            quick: true,
+            scenarios,
+        };
+        let good = report(vec![mix_row("resnet18", 4), mix_row("tinyvgg", 0)]);
+        enforce_serve_slo(&good).unwrap();
+
+        // Closed-loop-only / single-shard-only reports have nothing to
+        // gate — that is a failure, not a pass.
+        let err = enforce_serve_slo(&report(vec![serve_scenario()])).unwrap_err();
+        assert!(err.contains("no sharded open-loop"), "{err}");
+        // One model is not a multi-model measurement.
+        let err = enforce_serve_slo(&report(vec![mix_row("resnet18", 4)])).unwrap_err();
+        assert!(err.contains("≥ 2"), "{err}");
+        // A p99 over the floor fails.
+        let mut slow = good.clone();
+        slow.scenarios[0].p99_us = SERVE_SLO_P99_FLOOR_US * 2.0;
+        assert!(enforce_serve_slo(&slow).unwrap_err().contains("SLO floor"));
+        // Zero steals everywhere means the stealing path never ran.
+        let mut idle = good.clone();
+        idle.scenarios[0].steals = 0;
+        assert!(enforce_serve_slo(&idle).unwrap_err().contains("steal"));
+        // Collapsed throughput fails.
+        let mut starved = good.clone();
+        for s in &mut starved.scenarios {
+            s.throughput_rps = 5.0;
+        }
+        assert!(enforce_serve_slo(&starved).unwrap_err().contains("throughput"));
+        // A pac row with no measured traffic attribution fails.
+        let mut unwired = good.clone();
+        unwired.scenarios[1].bits_per_request = 0.0;
+        unwired.scenarios[1].measured_traffic_bits = 0;
+        assert!(enforce_serve_slo(&unwired).unwrap_err().contains("attribution"));
+        // An empty row fails before any aggregate check.
+        let mut empty = good;
+        empty.scenarios[0].completed = 0;
+        assert!(enforce_serve_slo(&empty).unwrap_err().contains("completed nothing"));
     }
 
     #[test]

@@ -37,7 +37,7 @@ impl Parallelism {
 
     /// Parallel with a coarse-grained threshold: fan out from 2 items.
     /// For loops whose items are whole forward passes (serving lanes in
-    /// `nn::run_model_batch` / `runtime::PacExecutor`), where per-item
+    /// `nn::run_model_batch_with` / `runtime::PacExecutor`), where per-item
     /// work dwarfs fork/join overhead even at tiny batch sizes.
     pub fn coarse() -> Self {
         Self {
@@ -63,7 +63,7 @@ impl Parallelism {
     /// Combine two policies: `self` when it is enabled, else `fallback`.
     /// Backends use this to merge the driver's policy (authoritative when
     /// it asks for parallelism) with their own configured default (the
-    /// fallback when the driver runs scalar, e.g. `nn::run_model` driving
+    /// fallback when the driver runs scalar, e.g. `nn::run_model_with` driving
     /// a backend whose `PacConfig::par` is enabled).
     #[inline]
     pub fn or(&self, fallback: &Parallelism) -> Parallelism {

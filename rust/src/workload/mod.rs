@@ -13,4 +13,7 @@ pub mod synthetic;
 
 pub use dataset::Dataset;
 pub use shapes::{resnet18, resnet50, vgg16_bn, LayerShape, LayerShapeKind, Resolution};
-pub use synthetic::{synthetic_dataset, synthetic_serving_workload};
+pub use synthetic::{
+    synthetic_dataset, synthetic_serving_workload, synthetic_tenant_workload,
+    synthetic_vgg_workload,
+};

@@ -12,7 +12,10 @@
 //! artifacts, because the compute is identical.
 
 use super::dataset::Dataset;
-use crate::nn::layers::{synthetic::random_store, tiny_resnet, Model};
+use crate::nn::layers::{
+    synthetic::{random_store, random_vgg_store},
+    tiny_resnet, tiny_vgg, Model,
+};
 use crate::tensor::QuantParams;
 use crate::util::rng::Rng;
 use crate::Result;
@@ -58,6 +61,52 @@ pub fn synthetic_serving_workload(
     Ok((model, ds))
 }
 
+/// The `tiny_vgg` twin of [`synthetic_serving_workload`]: a random VGG
+/// of base width `width` plus a matching dataset. Deterministic in
+/// `seed`; the dataset stream is offset so two tenants seeded alike
+/// still serve distinct images.
+pub fn synthetic_vgg_workload(
+    seed: u64,
+    width: usize,
+    hw: usize,
+    n_classes: usize,
+    n_images: usize,
+) -> Result<(Model, Dataset)> {
+    let mut rng = Rng::new(seed);
+    let store = random_vgg_store(&mut rng, width, n_classes);
+    let model = tiny_vgg(&store, hw, n_classes)?;
+    let ds = synthetic_dataset(seed ^ 0x0066_0066, n_images, hw, n_classes);
+    Ok((model, ds))
+}
+
+/// Resolve a tenant id to its synthetic (model, dataset) pair — the
+/// multi-model serving entry (`pacim serve --models`, loadgen `--mix`)
+/// shares this table so every surface accepts the same names.
+///
+/// Accepted ids: `resnet18` / `tinyresnet` → [`synthetic_serving_workload`],
+/// `tinyvgg` / `vgg` → [`synthetic_vgg_workload`]. Matching is
+/// case-insensitive.
+pub fn synthetic_tenant_workload(
+    id: &str,
+    seed: u64,
+    width: usize,
+    hw: usize,
+    n_classes: usize,
+    n_images: usize,
+) -> Result<(Model, Dataset)> {
+    match id.to_ascii_lowercase().as_str() {
+        "resnet18" | "tinyresnet" | "tiny_resnet" => {
+            synthetic_serving_workload(seed, width, hw, n_classes, n_images)
+        }
+        "tinyvgg" | "vgg" | "tiny_vgg" => {
+            synthetic_vgg_workload(seed, width, hw, n_classes, n_images)
+        }
+        other => Err(crate::Error::Config(format!(
+            "unknown tenant model '{other}' (expected resnet18|tinyresnet|tinyvgg|vgg)"
+        ))),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +140,32 @@ mod tests {
         let d1 = synthetic_dataset(1, 2, 8, 10);
         let d2 = synthetic_dataset(2, 2, 8, 10);
         assert_ne!(d1.images, d2.images);
+    }
+
+    #[test]
+    fn vgg_workload_is_consistent_and_distinct() {
+        let (m, d) = synthetic_vgg_workload(42, 8, 16, 10, 4).unwrap();
+        assert_eq!(m.input_params, d.params);
+        assert_eq!(m.in_hw, d.h);
+        assert_eq!(m.num_classes, d.n_classes);
+        assert!(m.name.starts_with("tiny_vgg"));
+        // Same seed, different topology ⇒ a *different* image stream, so
+        // co-seeded tenants never serve identical traffic.
+        let (_, dr) = synthetic_serving_workload(42, 8, 16, 10, 4).unwrap();
+        assert_ne!(d.images, dr.images);
+    }
+
+    #[test]
+    fn tenant_resolver_accepts_aliases_and_rejects_unknown() {
+        for id in ["resnet18", "TinyResNet", "tiny_resnet"] {
+            let (m, _) = synthetic_tenant_workload(id, 7, 8, 16, 10, 2).unwrap();
+            assert!(m.name.starts_with("tiny_resnet"), "{id} -> {}", m.name);
+        }
+        for id in ["tinyvgg", "VGG", "tiny_vgg"] {
+            let (m, _) = synthetic_tenant_workload(id, 7, 8, 16, 10, 2).unwrap();
+            assert!(m.name.starts_with("tiny_vgg"), "{id} -> {}", m.name);
+        }
+        let err = synthetic_tenant_workload("alexnet", 7, 8, 16, 10, 2).unwrap_err();
+        assert!(err.to_string().contains("alexnet"), "{err}");
     }
 }

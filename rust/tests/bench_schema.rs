@@ -13,9 +13,9 @@
 //! produced artifacts) — re-parse the actual emitted JSON.
 
 use pacim::util::benchfmt::{
-    enforce_blocked_floor, enforce_resilience, enforce_simd_floor, enforce_traffic_floor,
-    enforce_tune_front, validate_hotpath, validate_resilience, validate_serve, validate_traffic,
-    validate_tune,
+    enforce_blocked_floor, enforce_resilience, enforce_serve_slo, enforce_simd_floor,
+    enforce_traffic_floor, enforce_tune_front, validate_hotpath, validate_resilience,
+    validate_serve, validate_traffic, validate_tune,
 };
 use std::path::PathBuf;
 
@@ -130,10 +130,13 @@ const SERVE_GOLDEN: &str = r#"{
     {
       "name": "pac-open",
       "executor": "pac",
+      "model": "tiny_resnet_c8",
       "mode": "open",
       "workers": 2,
       "batch_size": 8,
       "queue_cap": 256,
+      "shards": 2,
+      "steals": 5,
       "offered_rps": 300.0,
       "requests": 48,
       "completed": 46,
@@ -268,6 +271,19 @@ fn hotpath_golden_passes() {
 fn serve_golden_passes() {
     let r = validate_serve(SERVE_GOLDEN).unwrap();
     assert_eq!(r.scenarios[0].executor, "pac");
+    assert_eq!(r.scenarios[0].model, "tiny_resnet_c8");
+    assert_eq!(r.scenarios[0].shards, 2);
+    // The golden is schema-valid but hosts only one model, so the
+    // multi-model SLO gate must refuse it rather than vacuously pass.
+    assert!(enforce_serve_slo(&r).is_err());
+}
+
+#[test]
+fn serve_single_shard_steals_are_schema_drift() {
+    // A single-shard row has nobody to steal from; nonzero steal
+    // counters there mean the writer's accounting is broken.
+    let drifted = SERVE_GOLDEN.replace("\"shards\": 2", "\"shards\": 1");
+    assert!(validate_serve(&drifted).unwrap_err().contains("steal"));
 }
 
 #[test]
@@ -604,6 +620,14 @@ fn real_tune_artifact_if_present() {
 
 #[test]
 fn real_serve_artifact_if_present() {
+    // CI's serve-smoke job runs the multi-model loadgen mix and then
+    // sets PACIM_ENFORCE_SERVE_SLO=1: the report must hold ≥ 2 models
+    // on sharded open-loop rows, every gated row under the p99 floor
+    // with per-model traffic attribution, a nonzero steal count, and
+    // aggregate throughput at a sane fraction of the offered rate — or
+    // the job fails. An empty or single-shard report cannot pass.
+    let enforce =
+        std::env::var("PACIM_ENFORCE_SERVE_SLO").is_ok_and(|v| v != "0" && !v.is_empty());
     match artifact("PACIM_BENCH_SERVE_JSON", "BENCH_serve.json") {
         Some(p) => {
             let json = std::fs::read_to_string(&p)
@@ -611,7 +635,16 @@ fn real_serve_artifact_if_present() {
             let r = validate_serve(&json)
                 .unwrap_or_else(|e| panic!("{} schema drift: {e}", p.display()));
             println!("validated {} ({} scenarios)", p.display(), r.scenarios.len());
+            if enforce {
+                enforce_serve_slo(&r)
+                    .unwrap_or_else(|e| panic!("{} serve SLO regression: {e}", p.display()));
+                println!("serve SLO enforced: multi-model p99/steals/traffic all held");
+            }
         }
+        None if enforce => panic!(
+            "PACIM_ENFORCE_SERVE_SLO is set but no BENCH_serve.json was found \
+             (checked PACIM_BENCH_SERVE_JSON and the default CWD path)"
+        ),
         None => println!("no BENCH_serve.json present; golden-sample checks only"),
     }
 }

@@ -216,26 +216,48 @@ fn prop_infer_batch_matches_sequential_infer() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn engine_evaluate_matches_legacy_evaluate() {
-    // Same accuracy, same aggregate statistics, including argmax
-    // tie-breaking, vs the deprecated free-function evaluate.
+fn engine_evaluate_matches_sequential_reference() {
+    // Same accuracy, same aggregate statistics, including last-wins
+    // argmax tie-breaking, vs an explicit sequential reference sweep
+    // over the retained low-level entry point — at 1 and 4 threads.
     let model = small_model(4242, 8, 10, 16);
     let mut rng = Rng::new(77);
     let imgs: Vec<Vec<u8>> = (0..12).map(|_| image_for(&model, &mut rng)).collect();
     let images: Vec<&[u8]> = imgs.iter().map(|v| v.as_slice()).collect();
     let labels: Vec<usize> = (0..12).map(|_| rng.below(10) as usize).collect();
+
+    // Reference: one image at a time through `run_model_with`, with the
+    // engine's argmax semantics (ties go to the *last* maximal index).
+    let backend = pac_backend(&model, PacConfig::default());
+    let mut correct = 0usize;
+    let mut ref_stats = RunStats::default();
+    let mut scratch = ModelScratch::default();
+    for (img, &label) in images.iter().zip(&labels) {
+        let (logits, stats) =
+            run_model_with(&model, &backend, img, &Parallelism::off(), &mut scratch);
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &x) in logits.iter().enumerate() {
+            if x >= best_v {
+                best_v = x;
+                best = i;
+            }
+        }
+        if best == label {
+            correct += 1;
+        }
+        ref_stats.merge(&stats);
+    }
+    let ref_acc = correct as f64 / images.len() as f64;
+
     for threads in [1usize, 4] {
-        let backend = pac_backend(&model, PacConfig::default());
-        let (legacy_acc, legacy_stats) =
-            pacim::nn::evaluate(&model, &backend, &images, &labels, threads);
         let engine = EngineBuilder::new(model.clone())
             .pac(PacConfig::default())
             .build()
             .unwrap();
         let ev = engine.evaluate(&images, &labels, threads).unwrap();
-        assert_eq!(ev.accuracy, legacy_acc, "threads={threads}");
-        assert_stats_eq(&ev.stats, &legacy_stats);
+        assert_eq!(ev.accuracy, ref_acc, "threads={threads}");
+        assert_stats_eq(&ev.stats, &ref_stats);
         assert_eq!(ev.images, 12);
     }
 }

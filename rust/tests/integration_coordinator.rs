@@ -4,13 +4,15 @@
 
 use pacim::coordinator::server::BatchExecutor;
 use pacim::coordinator::{
-    schedule_model, BatchPolicy, InferenceServer, ScheduleConfig, ServeError,
+    schedule_model, BatchPolicy, InferenceServer, ModelRegistry, ModelSpec, ScheduleConfig,
+    ServeError,
 };
 use pacim::engine::EngineBuilder;
 use pacim::nn::PacConfig;
 use pacim::runtime::PacExecutor;
 use pacim::workload::{
-    resnet18, resnet50, synthetic_serving_workload, vgg16_bn, Resolution,
+    resnet18, resnet50, synthetic_serving_workload, synthetic_tenant_workload, vgg16_bn,
+    Resolution,
 };
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -244,6 +246,151 @@ fn worker_panic_mid_batch_is_isolated_under_concurrent_load() {
         3,
         "2 initial executors + 1 post-panic rebuild"
     );
+}
+
+#[test]
+fn retired_worker_shard_is_not_stranded() {
+    // The WorkerLost-then-retire path end-to-end: worker A panics, its
+    // rebuild fails (single-use factory), and it retires cleanly. Its
+    // ingress shard stays live — P2C keeps placing new submissions on
+    // it — so the surviving worker must keep *stealing* that shard's
+    // requests. No request may hang, and the retiree's telemetry must
+    // survive into the final metrics.
+    struct PanicOnce {
+        fuse: Arc<AtomicBool>,
+    }
+    impl BatchExecutor for PanicOnce {
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn input_elems(&self) -> usize {
+            4
+        }
+        fn output_elems(&self) -> usize {
+            3
+        }
+        fn execute(&mut self, batch: &[f32], _occupancy: usize) -> anyhow::Result<Vec<f32>> {
+            if self.fuse.swap(false, Ordering::SeqCst) {
+                panic!("injected executor panic");
+            }
+            Ok((0..3).map(|j| batch[0] * (j + 1) as f32).collect())
+        }
+    }
+
+    let fuse = Arc::new(AtomicBool::new(true));
+    let builds = Arc::new(AtomicUsize::new(0));
+    let server = {
+        let (fuse, builds) = (fuse.clone(), builds.clone());
+        InferenceServer::start_pool(
+            move |_| {
+                if builds.fetch_add(1, Ordering::SeqCst) >= 2 {
+                    anyhow::bail!("no spare executor for the rebuild");
+                }
+                Ok(PanicOnce { fuse: fuse.clone() })
+            },
+            BatchPolicy {
+                max_wait: Duration::from_micros(50),
+                workers: 2,
+                ..BatchPolicy::default()
+            },
+        )
+        .unwrap()
+    };
+    let h = server.handle();
+    // The first request rides the panicking batch: whichever worker
+    // executes it trips the shared fuse and then fails to respawn.
+    match h.infer(vec![1.0, 0.0, 0.0, 0.0]) {
+        Err(ServeError::WorkerLost) => {}
+        other => panic!("expected WorkerLost for the fused request, got {other:?}"),
+    }
+    // Post-retirement traffic: every request must still be answered,
+    // including the roughly-half that P2C places on the dead shard.
+    let total = 32usize;
+    for i in 0..total {
+        let v = (i + 2) as f32;
+        let r = h.infer(vec![v, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!(r.logits, vec![v, 2.0 * v, 3.0 * v], "request {i}");
+    }
+    let m = server.stop();
+    assert_eq!(m.worker_panics, 1);
+    assert_eq!(m.failed_batches, 1);
+    assert_eq!(m.workers_lost, 0, "retirement is a clean join, not a loss");
+    assert_eq!(m.requests, total as u64);
+    assert_eq!(m.per_worker.len(), 2, "the retiree's telemetry survives");
+    assert!(m.steals >= 1, "the survivor stole from the retired shard");
+    assert_eq!(m.per_shard.len(), 2);
+    let submitted: u64 = m.per_shard.iter().map(|s| s.submitted).sum();
+    assert_eq!(submitted, (total + 1) as u64, "the fused request counts too");
+    assert_eq!(
+        builds.load(Ordering::SeqCst),
+        3,
+        "2 initial executors + 1 failed rebuild attempt"
+    );
+}
+
+#[test]
+fn multi_model_registry_routes_and_matches_offline() {
+    // Two tenants with distinct topologies behind one front door: each
+    // routed reply must be bit-identical to that tenant's own offline
+    // session (so routing can never cross-wire models), an unknown id
+    // gets the typed routing error, and stop() reports per-model
+    // metrics in registration order.
+    let mut registry = ModelRegistry::new();
+    let mut offline = Vec::new();
+    for (i, id) in ["resnet18", "tinyvgg"].into_iter().enumerate() {
+        let (model, ds) = synthetic_tenant_workload(id, 90 + i as u64, 8, 16, 10, 6).unwrap();
+        let engine = EngineBuilder::new(model)
+            .pac(PacConfig::serving())
+            .build()
+            .unwrap();
+        let mut session = engine.session();
+        let logits: Vec<Vec<f32>> = (0..6)
+            .map(|j| session.infer(ds.image(j)).unwrap().logits)
+            .collect();
+        registry = registry
+            .register(ModelSpec::new(id, engine).batch(4).policy(BatchPolicy {
+                max_wait: Duration::from_millis(1),
+                workers: 2,
+                ..BatchPolicy::default()
+            }))
+            .unwrap();
+        offline.push((id, ds, logits));
+    }
+
+    let server = PacExecutor::serve_registry(registry).unwrap();
+    assert_eq!(server.models(), vec!["resnet18", "tinyvgg"]);
+    let h = server.handle();
+    match h.infer("alexnet", vec![0.0; 3 * 16 * 16]) {
+        Err(ServeError::UnknownModel { model }) => assert_eq!(model, "alexnet"),
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    std::thread::scope(|s| {
+        for (id, ds, logits) in &offline {
+            for j in 0..6 {
+                let h = h.clone();
+                s.spawn(move || {
+                    let img: Vec<f32> = ds
+                        .image(j)
+                        .iter()
+                        .map(|&q| ds.params.dequantize(q))
+                        .collect();
+                    let r = h.infer(id, img).unwrap();
+                    assert_eq!(&r.logits, &logits[j], "{id} request {j}");
+                    assert!(r.cost.is_some(), "{id}: cost annotation missing");
+                });
+            }
+        }
+    });
+    let metrics = server.stop();
+    assert_eq!(metrics.len(), 2);
+    assert_eq!(metrics[0].0, "resnet18");
+    assert_eq!(metrics[1].0, "tinyvgg");
+    for (tid, m) in &metrics {
+        assert_eq!(m.requests, 6, "{tid}");
+        assert_eq!(m.failed_batches, 0, "{tid}");
+        assert_eq!(m.per_shard.len(), 2, "{tid}");
+        assert!(m.traffic_bits > 0, "{tid}: traffic telemetry not wired");
+    }
 }
 
 #[test]

@@ -1,0 +1,191 @@
+//! Property-based tests over the sharded work-stealing ingress
+//! (`pacim::coordinator::ingress`), using the in-house `Checker` harness
+//! (proptest is unavailable offline).
+//!
+//! The invariants under test, across random shard counts, capacities,
+//! popper counts, and item counts:
+//!
+//! 1. **No item lost or duplicated across shards**: with K concurrent
+//!    poppers draining (own shard first, stealing on empty), the union
+//!    of everything popped is exactly the submitted multiset, and the
+//!    stolen flags agree with the per-shard steal counters.
+//! 2. **Close-then-drain accounts for every residual item**: items not
+//!    popped before `close()` all come back out of `drain_residual`,
+//!    exactly once.
+//! 3. **Per-request SLO deadlines survive stealing** (server-level):
+//!    under a pool whose workers steal, every request either completes
+//!    or is reaped with the typed deadline error — never lost — and the
+//!    two outcomes partition the admitted set.
+
+use pacim::coordinator::{
+    BatchExecutor, BatchPolicy, InferenceServer, Ingress, ServeError, SloClass,
+};
+use pacim::engine::Fidelity;
+use pacim::util::check::Checker;
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn prop_no_item_lost_or_duplicated_across_shards() {
+    Checker::new("ingress_no_loss_no_dup", 20).run(|rng| {
+        let shards = 1 + rng.below(6) as usize;
+        let poppers = 1 + rng.below(4) as usize;
+        let n = 1 + rng.below(200) as usize;
+        let ingress: Arc<Ingress<u64>> = Arc::new(Ingress::new(shards, 4 * n));
+
+        // Poppers first, so submission and draining race for real.
+        let mut joins = Vec::new();
+        for w in 0..poppers {
+            let ing = Arc::clone(&ingress);
+            joins.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                let mut stolen = 0u64;
+                while let Some(p) = ing.pop_blocking(w % ing.shard_count()) {
+                    if p.stolen {
+                        stolen += 1;
+                    }
+                    got.push(p.item);
+                }
+                (got, stolen)
+            }));
+        }
+        for i in 0..n {
+            ingress.submit(i as u64).unwrap();
+        }
+        ingress.close();
+
+        let mut all = Vec::new();
+        let mut stolen_seen = 0u64;
+        for j in joins {
+            let (got, stolen) = j.join().unwrap();
+            all.extend(got);
+            stolen_seen += stolen;
+        }
+        all.sort_unstable();
+        let want: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(all, want, "items lost or duplicated across shards");
+
+        // Accounting closes: admissions partition over shards, steal
+        // flags match the victims' counters, nothing was rejected.
+        let summaries = ingress.shard_summaries();
+        assert_eq!(summaries.len(), shards);
+        let submitted: u64 = summaries.iter().map(|s| s.submitted).sum();
+        assert_eq!(submitted, n as u64);
+        let stolen_counted: u64 = summaries.iter().map(|s| s.stolen).sum();
+        assert_eq!(stolen_seen, stolen_counted, "steal flags vs shard counters");
+        assert_eq!(ingress.rejected(), 0);
+        assert_eq!(ingress.queued(), 0, "drained ingress holds nothing");
+    });
+}
+
+#[test]
+fn prop_close_then_drain_accounts_for_every_residual_item() {
+    Checker::new("ingress_drain_residual", 30).run(|rng| {
+        let shards = 1 + rng.below(5) as usize;
+        let n = 1 + rng.below(60) as usize;
+        let take = rng.below(n as u32 + 1) as usize;
+        let ingress: Ingress<u64> = Ingress::new(shards, n);
+        for i in 0..n {
+            ingress.submit(i as u64).unwrap();
+        }
+        // Pop a prefix single-threaded (stealing across shards as the
+        // popper's own shard empties), then close with the rest queued.
+        let mut popped = Vec::with_capacity(take);
+        for _ in 0..take {
+            popped.push(ingress.try_pop(0).expect("queued items remain").item);
+        }
+        ingress.close();
+        let mut residual = Vec::new();
+        let shed = ingress.drain_residual(|v| residual.push(v));
+        assert_eq!(shed as usize, n - take, "drain count");
+        assert_eq!(residual.len(), n - take);
+        let mut all: Vec<u64> = popped.iter().chain(&residual).copied().collect();
+        all.sort_unstable();
+        let want: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(all, want, "popped ∪ drained must be the admitted set");
+        // The drained set and popped set are disjoint by construction.
+        let seen: HashSet<u64> = popped.into_iter().collect();
+        assert!(residual.iter().all(|v| !seen.contains(v)));
+        // A second drain finds nothing.
+        assert_eq!(ingress.drain_residual(|_| ()), 0);
+    });
+}
+
+/// Echo executor with a fixed per-batch delay, slow enough that queued
+/// requests outlive tight SLO deadlines.
+struct SlowEcho {
+    in_elems: usize,
+    delay: Duration,
+}
+
+impl BatchExecutor for SlowEcho {
+    fn batch_size(&self) -> usize {
+        1
+    }
+
+    fn input_elems(&self) -> usize {
+        self.in_elems
+    }
+
+    fn output_elems(&self) -> usize {
+        1
+    }
+
+    fn execute(&mut self, batch: &[f32], _occupancy: usize) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        Ok(vec![batch[0]])
+    }
+}
+
+#[test]
+fn prop_slo_deadlines_partition_requests_under_stealing() {
+    Checker::new("ingress_slo_partition", 10).run(|rng| {
+        let workers = 2 + rng.below(2) as usize;
+        let n = 8 + rng.below(24) as usize;
+        let server = InferenceServer::start_pool(
+            move |_| {
+                Ok(SlowEcho {
+                    in_elems: 2,
+                    delay: Duration::from_millis(2),
+                })
+            },
+            BatchPolicy {
+                max_wait: Duration::from_micros(100),
+                workers,
+                queue_cap: 4 * n,
+                ..BatchPolicy::default()
+            },
+        )
+        .unwrap();
+        let h = server.handle();
+        // A tight per-request deadline: under 2ms batches some requests
+        // will be served in time, the rest must be reaped — none lost,
+        // none answered with anything but the typed deadline error, and
+        // a reply that does arrive echoes its own payload (a stolen
+        // request must not be cross-wired to another shard's reply).
+        let slo = SloClass::latency(Duration::from_millis(5));
+        let pending: Vec<_> = (0..n)
+            .map(|i| h.submit_slo(vec![i as f32, 0.0], Fidelity::Fast, slo).unwrap())
+            .collect();
+        let mut served = 0u64;
+        let mut reaped = 0u64;
+        for (i, p) in pending.into_iter().enumerate() {
+            match p.wait() {
+                Ok(r) => {
+                    assert_eq!(r.logits, vec![i as f32], "reply cross-wired");
+                    served += 1;
+                }
+                Err(ServeError::DeadlineExceeded) => reaped += 1,
+                Err(e) => panic!("request {i}: unexpected error {e:?}"),
+            }
+        }
+        let m = server.stop();
+        assert_eq!(served + reaped, n as u64, "an admitted request vanished");
+        assert_eq!(m.requests, served, "served count disagrees");
+        assert_eq!(m.deadline_expired, reaped, "reap count disagrees");
+        assert_eq!(m.per_shard.len(), workers);
+        let submitted: u64 = m.per_shard.iter().map(|s| s.submitted).sum();
+        assert_eq!(submitted, n as u64);
+    });
+}
