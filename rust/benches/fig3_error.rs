@@ -48,8 +48,8 @@ fn main() {
         prof.name_layers(&model);
         let mut scratch = ModelScratch::default();
         for i in 0..16.min(ds.n) {
-            let _ =
-                run_model_with(&model, &prof, ds.image(i), &Parallelism::off(), &mut scratch);
+            run_model_with(&model, &prof, ds.image(i), &Parallelism::off(), &mut scratch)
+                .expect("profiling pass executes");
         }
         let wr = prof.aggregate_w_rates();
         let xr = prof.aggregate_x_rates();

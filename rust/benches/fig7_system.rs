@@ -7,9 +7,11 @@
 //! (d) **measured** activation traffic of the sparsity-encoded
 //!     dataplane: run a ResNet-18-width network through the PAC engine
 //!     and read `RunStats::traffic` — the workload-measured version of
-//!     (b), cross-checked row by row against the analytic model and
-//!     exported to `BENCH_traffic.json` (CI gates the ≥40% deep-layer
-//!     floor behind `PACIM_ENFORCE_TRAFFIC_REDUCTION`);
+//!     (b), now covering the residual save/add edges the fused
+//!     dataplane encodes (DESIGN.md §12), cross-checked row by row
+//!     against the analytic model and exported to `BENCH_traffic.json`
+//!     (CI gates the ≥44% deep payload-edge floor behind
+//!     `PACIM_ENFORCE_TRAFFIC_REDUCTION`);
 //! (e) the traffic-priced multibank schedule (DESIGN.md §14): the λ
 //!     knob trading buffer-spill bits for digital replay cycles on the
 //!     same ResNet-18 shapes — the per-λ Pareto sweep lives in
@@ -143,7 +145,12 @@ fn main() {
 /// Run a ResNet-18-width network (64→128→256 channels, the CIFAR
 /// ResNet-18 ladder) through the PAC engine and report what the
 /// sparsity-encoded dataplane *actually moved*, edge by edge, next to
-/// the closed-form prediction for the same geometry.
+/// the closed-form prediction for the same geometry. Since the fused
+/// residual dataplane landed, the ledger also carries the skip-slot
+/// save, add-in, and post-add edges of every residual block — the save
+/// rows honestly cost bits (8 planes + counters vs an 8-bit copy), the
+/// add-in rows are eliminated outright, and the triple nets out
+/// strictly below the dense round-trip.
 fn measured_traffic_section(quick: bool, checks: &mut Checks) {
     use pacim::engine::EngineBuilder;
     use pacim::nn::layers::synthetic::random_store;
@@ -179,17 +186,27 @@ fn measured_traffic_section(quick: bool, checks: &mut Checks) {
     // decision the executor actually took.
     let geoms = engine.model().compute_layers();
     let mut rows = Vec::new();
+    let (mut res_bits, mut res_base) = (0u64, 0u64);
     for (name, e) in engine.traffic_rows(ledger) {
         let (_, g) = geoms[e.layer_id];
         let analytic_groups = g.out_pixels() as u64 * images as u64;
-        let analytic_bits = if e.encoded {
+        let analytic_bits = if e.is_eliminated() {
+            // Encoded residual_in edges never touch the buffer: the
+            // epilogue reads the skip slot's planes in place.
+            0
+        } else if e.encoded {
             analytic_groups * activation_traffic(g.out_c, e.msb_bits).pacim
         } else {
             analytic_groups * g.out_c as u64 * 8
         };
+        let kind = e.kind.as_str();
+        if kind.starts_with("residual") {
+            res_bits += e.bits;
+            res_base += e.baseline_bits;
+        }
         let deep = e.group_elems as usize >= pacim::util::benchfmt::TRAFFIC_DEEP_CHANNELS;
         println!(
-            "      {name:<16} {:>4} ch  {:>9} -> {:>9} bits  {}{:5.1}%",
+            "      {name:<16} {kind:<13} {:>4} ch  {:>9} -> {:>9} bits  {}{:6.1}%",
             e.group_elems,
             e.baseline_bits,
             e.bits,
@@ -198,6 +215,7 @@ fn measured_traffic_section(quick: bool, checks: &mut Checks) {
         );
         rows.push(TrafficLayerBench {
             layer: name.to_string(),
+            kind: kind.to_string(),
             channels: e.group_elems as usize,
             groups: e.groups,
             baseline_bits: e.baseline_bits,
@@ -210,16 +228,21 @@ fn measured_traffic_section(quick: bool, checks: &mut Checks) {
     }
     let deep_min = rows
         .iter()
-        .filter(|r| r.deep && r.encoded)
+        .filter(|r| r.deep && r.encoded && pacim::util::benchfmt::traffic_payload_row(r))
         .map(|r| r.reduction)
         .fold(f64::INFINITY, f64::min);
     row(
-        "deep encoded edges (>=128 ch)",
+        "deep encoded payload edges (>=128 ch)",
         "40-50%",
         &format!("min {:.1}%", deep_min * 100.0),
     );
     row(
-        "whole-net measured (fused edges only)",
+        "residual save/add edges vs dense round-trip",
+        "strictly fewer bits",
+        &format!("{res_bits} vs {res_base}"),
+    );
+    row(
+        "whole-net measured (all edges)",
         "<= analytic",
         &format!("{:.1}%", ledger.reduction() * 100.0),
     );
@@ -229,11 +252,21 @@ fn measured_traffic_section(quick: bool, checks: &mut Checks) {
     );
     checks.claim(
         deep_min.is_finite() && (0.40..0.52).contains(&deep_min),
-        "deep encoded edges land in the paper's 40-50% band",
+        "deep encoded payload edges land in the paper's 40-50% band",
     );
     checks.claim(
-        ledger.encoded_layer_count() == 3,
-        "the three in-block conv1->conv2 edges moved encoded",
+        ledger.encoded_layer_count() == 14,
+        "14 of 15 edges moved encoded (only the add->GAP handoff is dense)",
+    );
+    checks.claim(
+        rows.iter()
+            .filter(|r| r.kind == "residual_in")
+            .all(|r| r.encoded && r.measured_bits == 0),
+        "every fused add-in edge is eliminated outright",
+    );
+    checks.claim(
+        res_base > 0 && res_bits < res_base,
+        "the fused residual triple beats the dense save/add round-trip",
     );
 
     let report = TrafficReport {

@@ -498,7 +498,8 @@ fn fused_section(quick: bool, checks: &mut Checks) -> Vec<FusedBench> {
         let mut logits = Vec::new();
         let mut encoded = 0usize;
         for img in &images {
-            let (lg, st) = run_model_with(&model, backend, img, &par, scratch);
+            let (lg, st) = run_model_with(&model, backend, img, &par, scratch)
+                .expect("bench model executes");
             encoded = st.traffic.encoded_layer_count();
             logits.push(lg);
         }

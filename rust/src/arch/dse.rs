@@ -26,7 +26,7 @@ use super::multibank::{schedule_network_priced, MultiBankConfig, TrafficPrice};
 use super::tuner::candidate_grid;
 use crate::coordinator::model_shapes;
 use crate::engine::{EngineBuilder, EngineResult};
-use crate::memory::{activation_traffic, LayerTraffic};
+use crate::memory::{activation_traffic, EdgeKind, LayerTraffic};
 use crate::nn::{Model, PacConfig};
 use crate::workload::shapes::{LayerShape, LayerShapeKind};
 
@@ -222,16 +222,29 @@ pub struct DseOutcome {
     pub measured_bits: u64,
     /// Closed-form recomputation of the same edges from layer geometry.
     pub analytic_bits: u64,
+    /// Measured bits of the probe run's residual edges (save + add-in +
+    /// post-add) under the fused dataplane.
+    pub residual_bits_encoded: u64,
+    /// Dense-baseline bits of those same residual edges — what the
+    /// round-trip representation would have moved.
+    pub residual_bits_dense: u64,
 }
 
 /// Recompute one measured ledger edge from layer geometry — the
-/// `benches/fig7_system.rs` cross-check formula.
+/// `benches/fig7_system.rs` cross-check formula. Covers every edge kind:
+/// eliminated edges (the fused residual add-in) are zero by definition,
+/// encoded edges follow the MSB+counter closed form at the edge's own
+/// plane count (8 on `residual_save` slots, the map's bits elsewhere),
+/// dense edges are 8 bits per element.
 fn analytic_edge_bits(
     shapes: &[LayerShape],
     name: &str,
     e: &LayerTraffic,
     images: usize,
 ) -> u64 {
+    if e.is_eliminated() {
+        return 0;
+    }
     let Some(g) = shapes.iter().find(|s| s.name == name) else {
         return e.bits; // edge without a shape row: trust the measurement
     };
@@ -260,6 +273,8 @@ pub fn sweep(
     let mut evals: Vec<(Option<ThresholdSet>, f64, f64)> = Vec::new();
     let mut measured_bits = 0u64;
     let mut analytic_bits = 0u64;
+    let mut residual_bits_encoded = 0u64;
+    let mut residual_bits_dense = 0u64;
     for (i, th) in cfg.axes.thresholds.iter().enumerate() {
         let mut builder = EngineBuilder::new(model.clone()).pac(PacConfig::default());
         if let Some(t) = th {
@@ -276,6 +291,13 @@ pub fn sweep(
             for (name, e) in engine.traffic_rows(&ev.stats.traffic) {
                 measured_bits += e.bits;
                 analytic_bits += analytic_edge_bits(&eval_shapes, name, e, images.len());
+                if matches!(
+                    e.kind,
+                    EdgeKind::ResidualSave | EdgeKind::ResidualIn | EdgeKind::ResidualAdd
+                ) {
+                    residual_bits_encoded += e.bits;
+                    residual_bits_dense += e.baseline_bits;
+                }
             }
         }
         evals.push((*th, ev.accuracy, avg));
@@ -324,7 +346,15 @@ pub fn sweep(
         Vec::new()
     };
 
-    Ok(DseOutcome { points, front, comparisons, measured_bits, analytic_bits })
+    Ok(DseOutcome {
+        points,
+        front,
+        comparisons,
+        measured_bits,
+        analytic_bits,
+        residual_bits_encoded,
+        residual_bits_dense,
+    })
 }
 
 #[cfg(test)]
@@ -409,6 +439,16 @@ mod tests {
             }
         }
         assert_eq!(out.measured_bits, out.analytic_bits);
+        // The probe's fused residual edges move strictly fewer bits than
+        // their dense round-trip baseline (the eliminated add-in edge
+        // pays for the 8-plane save slot at every width ≥ 2 channels).
+        assert!(out.residual_bits_dense > 0);
+        assert!(
+            out.residual_bits_encoded < out.residual_bits_dense,
+            "encoded {} vs dense {}",
+            out.residual_bits_encoded,
+            out.residual_bits_dense
+        );
         assert!(out.comparisons.iter().any(|c| c.bits_priced < c.bits_cycles_only));
     }
 }

@@ -428,8 +428,13 @@ pub fn schedule_network_priced(
 }
 
 /// Traffic-priced schedule with explicit per-layer encode flags (the
-/// DESIGN.md §12 still-dense edges price at the 8-bit dense baseline)
-/// and an explicit parallelism policy.
+/// DESIGN.md §12 still-dense edges — pooling heads, digital fallbacks —
+/// price at the 8-bit dense baseline) and an explicit parallelism
+/// policy. The flags cover the per-layer *payload* edges this scheduler
+/// models; residual save/add edges are costed separately by the
+/// measured ledger and `arch::dse`'s residual accounting
+/// (`memory::residual_traffic` is their closed form), so a fused
+/// residual block no longer silently prices as a dense round-trip.
 pub fn schedule_network_priced_with(
     shapes: &[LayerShape],
     encoded: &[bool],

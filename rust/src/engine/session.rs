@@ -104,7 +104,7 @@ impl EngineBackend {
         image: &[u8],
         par: &Parallelism,
         scratch: &mut ModelScratch,
-    ) -> (Vec<f32>, RunStats) {
+    ) -> EngineResult<(Vec<f32>, RunStats)> {
         match self {
             EngineBackend::Exact(b) => run_model_with(model, b, image, par, scratch),
             EngineBackend::Pac(b) => run_model_with(model, b, image, par, scratch),
@@ -117,7 +117,7 @@ impl EngineBackend {
         images: &[&[u8]],
         par: &Parallelism,
         scratches: &mut [ModelScratch],
-    ) -> Vec<(Vec<f32>, RunStats)> {
+    ) -> EngineResult<Vec<(Vec<f32>, RunStats)>> {
         match self {
             EngineBackend::Exact(b) => run_model_batch_with(model, b, images, par, scratches),
             EngineBackend::Pac(b) => run_model_batch_with(model, b, images, par, scratches),
@@ -273,13 +273,14 @@ impl Engine {
     }
 
     /// Run one validated image (internal: callers have already checked
-    /// the input length, so the interpreter's invariants hold).
+    /// the input length; interpreter errors — a malformed skip program,
+    /// an in-model shape clash — surface as typed [`PacimError`]s).
     pub(crate) fn run_validated(
         &self,
         image: &[u8],
         par: &Parallelism,
         scratch: &mut ModelScratch,
-    ) -> (Vec<f32>, RunStats) {
+    ) -> EngineResult<(Vec<f32>, RunStats)> {
         self.inner.backend.run(&self.inner.model, image, par, scratch)
     }
 
@@ -356,7 +357,7 @@ impl Engine {
         fidelity: Fidelity,
         par: &Parallelism,
         scratch: &mut ModelScratch,
-    ) -> (Vec<f32>, RunStats) {
+    ) -> EngineResult<(Vec<f32>, RunStats)> {
         match fidelity {
             Fidelity::Fast => self.run_validated(image, par, scratch),
             Fidelity::Accurate => match &self.inner.fallback {
@@ -366,17 +367,17 @@ impl Engine {
                 None => self.run_validated(image, par, scratch),
             },
             Fidelity::Auto => {
-                let (logits, mut stats) = self.run_validated(image, par, scratch);
+                let (logits, mut stats) = self.run_validated(image, par, scratch)?;
                 if self.should_escalate(&logits, &stats) {
                     if let Some(fb) = &self.inner.fallback {
                         let (exact_logits, exact_stats) =
-                            run_model_with(&self.inner.model, fb, image, par, scratch);
+                            run_model_with(&self.inner.model, fb, image, par, scratch)?;
                         stats.merge(&exact_stats);
                         stats.escalations = 1;
-                        return (exact_logits, stats);
+                        return Ok((exact_logits, stats));
                     }
                 }
-                (logits, stats)
+                Ok((logits, stats))
             }
         }
     }
@@ -430,11 +431,12 @@ impl Engine {
         let mut correct = 0usize;
         let mut stats = RunStats::default();
         let mut worker_died = false;
+        let mut failure: Option<PacimError> = None;
         std::thread::scope(|s| {
             let mut handles = Vec::new();
             for _ in 0..threads.max(1) {
                 let next = &next;
-                handles.push(s.spawn(move || {
+                handles.push(s.spawn(move || -> EngineResult<(usize, RunStats)> {
                     let mut local_correct = 0usize;
                     let mut local = RunStats::default();
                     // Per-worker scratch arena, reused across every image
@@ -447,27 +449,31 @@ impl Engine {
                             break;
                         }
                         let (logits, st) =
-                            self.run_fidelity_validated(images[i], fidelity, &par, &mut scratch);
+                            self.run_fidelity_validated(images[i], fidelity, &par, &mut scratch)?;
                         local.merge(&st);
                         if argmax(&logits) == labels[i] {
                             local_correct += 1;
                         }
                     }
-                    (local_correct, local)
+                    Ok((local_correct, local))
                 }));
             }
             for h in handles {
                 match h.join() {
-                    Ok((c, st)) => {
+                    Ok(Ok((c, st))) => {
                         correct += c;
                         stats.merge(&st);
                     }
+                    Ok(Err(e)) => failure = Some(e),
                     Err(_) => worker_died = true,
                 }
             }
         });
         if worker_died {
             return Err(PacimError::Internal("an evaluation worker died".into()));
+        }
+        if let Some(e) = failure {
+            return Err(e);
         }
         Ok(Evaluation {
             accuracy: correct as f64 / n.max(1) as f64,
@@ -544,7 +550,7 @@ impl Session {
     pub fn infer(&mut self, image: &[u8]) -> EngineResult<Inference> {
         self.engine.check_image(image, "Session::infer input")?;
         let par = self.engine.inner.par;
-        let (logits, stats) = self.engine.run_validated(image, &par, &mut self.scratches[0]);
+        let (logits, stats) = self.engine.run_validated(image, &par, &mut self.scratches[0])?;
         Ok(Inference { logits, stats })
     }
 
@@ -560,7 +566,7 @@ impl Session {
         let par = self.engine.inner.par;
         let (logits, stats) =
             self.engine
-                .run_fidelity_validated(image, fidelity, &par, &mut self.scratches[0]);
+                .run_fidelity_validated(image, fidelity, &par, &mut self.scratches[0])?;
         Ok(Inference { logits, stats })
     }
 
@@ -606,7 +612,7 @@ impl Session {
             images,
             &self.lane_par,
             &mut self.scratches[..images.len()],
-        );
+        )?;
         Ok(lanes
             .into_iter()
             .map(|(logits, stats)| Inference { logits, stats })
@@ -653,7 +659,7 @@ impl Session {
         for (i, (&img, &f)) in images.iter().zip(fidelities).enumerate() {
             let (logits, stats) =
                 self.engine
-                    .run_fidelity_validated(img, f, &par, &mut self.scratches[i]);
+                    .run_fidelity_validated(img, f, &par, &mut self.scratches[i])?;
             out.push(Inference { logits, stats });
         }
         Ok(out)

@@ -229,7 +229,8 @@ fn accuracy(args: &[String]) -> anyhow::Result<()> {
     );
     for (name, e) in pac.traffic_rows(t) {
         println!(
-            "  {name:<16} {:>4} ch  {:>10} -> {:>10} bits  {}{:5.1}%",
+            "  {name:<16} {:<13} {:>4} ch  {:>10} -> {:>10} bits  {}{:6.1}%",
+            e.kind.as_str(),
             e.group_elems,
             e.baseline_bits,
             e.bits,
@@ -352,6 +353,10 @@ fn tune(args: &[String]) -> anyhow::Result<()> {
         "traffic cross-check: measured {} bits, analytic {} bits",
         out.measured_bits, out.analytic_bits
     );
+    println!(
+        "residual edges: {} bits fused vs {} dense round-trip",
+        out.residual_bits_encoded, out.residual_bits_dense
+    );
     if source == "synthetic" {
         println!("note: synthetic weights — accuracy is noise; cycles/bits are real");
     }
@@ -395,6 +400,8 @@ fn tune(args: &[String]) -> anyhow::Result<()> {
             .collect(),
         measured_bits: out.measured_bits,
         analytic_bits: out.analytic_bits,
+        residual_bits_encoded: out.residual_bits_encoded,
+        residual_bits_dense: out.residual_bits_dense,
     };
     let json = serde_json::to_string_pretty(&report)?;
     validate_tune(&json).map_err(|e| anyhow::anyhow!("BENCH_tune self-check failed: {e}"))?;

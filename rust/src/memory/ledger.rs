@@ -7,10 +7,19 @@
 //! running a network: the interpreter appends one entry per inter-layer
 //! activation edge as it emits it, tagged with the real encode decision
 //! (producer-packed MSB+counter form vs dense u8), the real group count
-//! (output pixels), and the real channel width. Exact-mode layers,
-//! first-layer and short-DP digital fallbacks, and unfusable program
-//! points (pooling, residual adds) therefore show up as the dense edges
-//! they are — the honesty that closed-form traffic claims lack.
+//! (output pixels), the real channel width, and the *kind* of consumer
+//! the edge feeds ([`EdgeKind`]). Exact-mode layers, first-layer and
+//! short-DP digital fallbacks, and unfusable program points (pooling,
+//! the logits head) therefore show up as the dense edges they are — the
+//! honesty that closed-form traffic claims lack.
+//!
+//! A residual block contributes three edges per pass: the producer's
+//! write into the skip slot ([`EdgeKind::ResidualSave`]), the in-block
+//! tail conv's operand hand-off into the add ([`EdgeKind::ResidualIn`] —
+//! *eliminated* when the add is fused into that conv's requantize step,
+//! recorded via [`TrafficLedger::record_eliminated`] with zero measured
+//! bits against the full dense baseline), and the post-add activation
+//! flowing on to the next consumer ([`EdgeKind::ResidualAdd`]).
 //!
 //! Units: one entry's `bits` is the producer's write; the consumer read
 //! mirrors it under the paper's write-once/read-once cache model, so
@@ -21,6 +30,42 @@
 
 use super::traffic::activation_traffic;
 
+/// What the consumer side of an inter-layer edge is — the class of op
+/// that reads the producer's write. One compute layer can emit several
+/// edges of different kinds (a residual tail conv writes both the add
+/// operand and, post-add, the next layer's input), so ledger entries
+/// are keyed by `(layer_id, kind)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Straight conv→conv activation edge.
+    Conv,
+    /// Edge into a (hidden) linear layer.
+    Linear,
+    /// Edge into a pooling op (max pool / global average pool).
+    Pool,
+    /// Producer write into a residual skip slot (`SaveSkip`).
+    ResidualSave,
+    /// In-block tail conv → `AddSkip` operand; eliminated (zero bits)
+    /// when the add is fused into the producing conv's epilogue.
+    ResidualIn,
+    /// Post-`AddSkip` activation flowing to the next consumer.
+    ResidualAdd,
+}
+
+impl EdgeKind {
+    /// Stable lower-snake name, used by the bench schema and printouts.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EdgeKind::Conv => "conv",
+            EdgeKind::Linear => "linear",
+            EdgeKind::Pool => "pool",
+            EdgeKind::ResidualSave => "residual_save",
+            EdgeKind::ResidualIn => "residual_in",
+            EdgeKind::ResidualAdd => "residual_add",
+        }
+    }
+}
+
 /// Measured traffic of one inter-layer activation edge, accumulated
 /// over every forward pass merged into the owning ledger.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,6 +73,8 @@ pub struct LayerTraffic {
     /// Producer compute-layer id (prepare order); join with
     /// `Model::compute_layers()` for names.
     pub layer_id: usize,
+    /// Consumer class of this edge (one layer may emit several kinds).
+    pub kind: EdgeKind,
     /// Forward passes accumulated into this entry.
     pub runs: u64,
     /// Encoding groups moved (one output pixel per group for CONV, one
@@ -36,9 +83,10 @@ pub struct LayerTraffic {
     /// Channels per encoding group (constant per layer).
     pub group_elems: u64,
     /// Binary MSB planes transmitted per element when encoded (0 on
-    /// dense edges).
+    /// dense edges *and* on eliminated edges).
     pub msb_bits: u32,
-    /// Whether this edge moved in MSB+counter form.
+    /// Whether this edge moved in MSB+counter form (or, with
+    /// `msb_bits == 0`, was eliminated outright by fusion).
     pub encoded: bool,
     /// Measured bits moved, one direction (producer write).
     pub bits: u64,
@@ -52,16 +100,24 @@ impl LayerTraffic {
         self.groups * self.group_elems
     }
 
+    /// A fused-away edge: nothing moved at all (the add was folded into
+    /// the producing conv's requantize step), against a real baseline.
+    pub fn is_eliminated(&self) -> bool {
+        self.encoded && self.msb_bits == 0
+    }
+
     /// Fractional reduction vs the 8-bit dense baseline (0 on dense
-    /// edges; can be negative when counter overhead exceeds the LSB
-    /// saving — the crossover the analytic model also exposes).
+    /// edges; 1 on eliminated edges; can be negative when counter
+    /// overhead exceeds the LSB saving — the crossover the analytic
+    /// model also exposes, and what the 8-plane `ResidualSave` edge
+    /// shows on narrow layers).
     pub fn reduction(&self) -> f64 {
         1.0 - self.bits as f64 / self.baseline_bits.max(1) as f64
     }
 }
 
-/// Running per-layer tally of measured activation traffic; lives in
-/// [`crate::nn::RunStats`] and merges like the other counters.
+/// Running per-(layer, kind) tally of measured activation traffic;
+/// lives in [`crate::nn::RunStats`] and merges like the other counters.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TrafficLedger {
     layers: Vec<LayerTraffic>,
@@ -70,10 +126,11 @@ pub struct TrafficLedger {
 impl TrafficLedger {
     /// Record a dense u8 edge: `groups × group_elems` activations moved
     /// at 8 bits each.
-    pub fn record_dense(&mut self, layer_id: usize, groups: u64, group_elems: u64) {
+    pub fn record_dense(&mut self, layer_id: usize, kind: EdgeKind, groups: u64, group_elems: u64) {
         let bits = groups * group_elems * 8;
         self.record(LayerTraffic {
             layer_id,
+            kind,
             runs: 1,
             groups,
             group_elems,
@@ -90,6 +147,7 @@ impl TrafficLedger {
     pub fn record_encoded(
         &mut self,
         layer_id: usize,
+        kind: EdgeKind,
         groups: u64,
         group_elems: u64,
         msb_bits: u32,
@@ -102,6 +160,7 @@ impl TrafficLedger {
         };
         self.record(LayerTraffic {
             layer_id,
+            kind,
             runs: 1,
             groups,
             group_elems,
@@ -112,13 +171,39 @@ impl TrafficLedger {
         });
     }
 
+    /// Record an edge the fused dataplane eliminated outright: the
+    /// residual-add operand consumed inside the producing conv's
+    /// epilogue. Zero bits move; the baseline stays the dense tensor
+    /// the round-trip path would have written.
+    pub fn record_eliminated(
+        &mut self,
+        layer_id: usize,
+        kind: EdgeKind,
+        groups: u64,
+        group_elems: u64,
+    ) {
+        self.record(LayerTraffic {
+            layer_id,
+            kind,
+            runs: 1,
+            groups,
+            group_elems,
+            msb_bits: 0,
+            encoded: true,
+            bits: 0,
+            baseline_bits: groups * group_elems * 8,
+        });
+    }
+
     fn record(&mut self, e: LayerTraffic) {
-        if let Some(cur) = self.layers.iter_mut().find(|l| l.layer_id == e.layer_id) {
+        let key = |l: &LayerTraffic| (l.layer_id, l.kind);
+        if let Some(cur) = self.layers.iter_mut().find(|l| key(l) == key(&e)) {
             debug_assert_eq!(
                 (cur.encoded, cur.msb_bits, cur.group_elems),
                 (e.encoded, e.msb_bits, e.group_elems),
-                "layer {} changed encoding between runs",
-                e.layer_id
+                "layer {} edge {:?} changed encoding between runs",
+                e.layer_id,
+                e.kind
             );
             cur.runs += e.runs;
             cur.groups += e.groups;
@@ -129,8 +214,8 @@ impl TrafficLedger {
         }
     }
 
-    /// Fold another ledger in (same program ⇒ entries align by layer id;
-    /// per-layer counters sum).
+    /// Fold another ledger in (same program ⇒ entries align by
+    /// (layer id, kind); per-entry counters sum).
     pub fn merge(&mut self, other: &TrafficLedger) {
         for e in &other.layers {
             self.record(*e);
@@ -142,12 +227,20 @@ impl TrafficLedger {
         &self.layers
     }
 
-    /// The entry for one compute layer, if it moved activations.
+    /// The first entry for one compute layer, if it moved activations
+    /// (layers with several edge kinds: see [`Self::row`]).
     pub fn layer(&self, layer_id: usize) -> Option<&LayerTraffic> {
         self.layers.iter().find(|l| l.layer_id == layer_id)
     }
 
-    /// Edges that moved in MSB+counter form.
+    /// The entry for one (layer, kind) edge, if recorded.
+    pub fn row(&self, layer_id: usize, kind: EdgeKind) -> Option<&LayerTraffic> {
+        self.layers
+            .iter()
+            .find(|l| l.layer_id == layer_id && l.kind == kind)
+    }
+
+    /// Edges that moved in MSB+counter form (or were eliminated).
     pub fn encoded_layer_count(&self) -> usize {
         self.layers.iter().filter(|l| l.encoded).count()
     }
@@ -176,9 +269,10 @@ mod tests {
     #[test]
     fn dense_edge_is_8_bits_per_element() {
         let mut t = TrafficLedger::default();
-        t.record_dense(0, 16, 64);
+        t.record_dense(0, EdgeKind::Conv, 16, 64);
         let e = t.layer(0).unwrap();
         assert!(!e.encoded);
+        assert_eq!(e.kind, EdgeKind::Conv);
         assert_eq!(e.bits, 16 * 64 * 8);
         assert_eq!(e.baseline_bits, e.bits);
         assert_eq!(e.reduction(), 0.0);
@@ -187,9 +281,10 @@ mod tests {
     #[test]
     fn encoded_edge_matches_analytic_formula() {
         let mut t = TrafficLedger::default();
-        t.record_encoded(3, 16, 256, 4);
+        t.record_encoded(3, EdgeKind::Conv, 16, 256, 4);
         let e = t.layer(3).unwrap();
         assert!(e.encoded);
+        assert!(!e.is_eliminated());
         assert_eq!(e.baseline_bits, 16 * 256 * 8);
         assert_eq!(e.bits, 16 * (256 * 4 + 8 * counter_bits(256) as u64));
         // 256-channel groups sit in the paper's deep-layer band.
@@ -197,13 +292,42 @@ mod tests {
     }
 
     #[test]
+    fn eliminated_edge_moves_nothing_against_a_dense_baseline() {
+        let mut t = TrafficLedger::default();
+        t.record_eliminated(2, EdgeKind::ResidualIn, 64, 16);
+        let e = t.row(2, EdgeKind::ResidualIn).unwrap();
+        assert!(e.encoded && e.is_eliminated());
+        assert_eq!(e.bits, 0);
+        assert_eq!(e.baseline_bits, 64 * 16 * 8);
+        assert_eq!(e.reduction(), 1.0);
+        assert_eq!(t.encoded_layer_count(), 1);
+    }
+
+    #[test]
+    fn same_layer_different_kinds_are_separate_rows() {
+        // A residual tail conv writes its add operand (eliminated) and,
+        // post-add, the next layer's encoded input — two rows, one id.
+        let mut t = TrafficLedger::default();
+        t.record_eliminated(5, EdgeKind::ResidualIn, 64, 32);
+        t.record_encoded(5, EdgeKind::ResidualAdd, 64, 32, 4);
+        assert_eq!(t.layers().len(), 2);
+        assert!(t.row(5, EdgeKind::ResidualIn).unwrap().is_eliminated());
+        assert!(!t.row(5, EdgeKind::ResidualAdd).unwrap().is_eliminated());
+        // Merging a second pass accumulates per (layer, kind).
+        let copy = t.clone();
+        t.merge(&copy);
+        assert_eq!(t.layers().len(), 2);
+        assert_eq!(t.row(5, EdgeKind::ResidualAdd).unwrap().runs, 2);
+    }
+
+    #[test]
     fn merge_accumulates_per_layer() {
         let mut a = TrafficLedger::default();
-        a.record_dense(0, 4, 8);
-        a.record_encoded(1, 4, 64, 4);
+        a.record_dense(0, EdgeKind::Conv, 4, 8);
+        a.record_encoded(1, EdgeKind::Conv, 4, 64, 4);
         let mut b = TrafficLedger::default();
-        b.record_dense(0, 4, 8);
-        b.record_encoded(1, 4, 64, 4);
+        b.record_dense(0, EdgeKind::Conv, 4, 8);
+        b.record_encoded(1, EdgeKind::Conv, 4, 64, 4);
         a.merge(&b);
         assert_eq!(a.layers().len(), 2);
         assert_eq!(a.layer(0).unwrap().runs, 2);
@@ -215,8 +339,8 @@ mod tests {
     #[test]
     fn network_reduction_weights_by_bits() {
         let mut t = TrafficLedger::default();
-        t.record_dense(0, 1, 1000); // 8000 bits both
-        t.record_encoded(1, 1, 1000, 4); // 4000 + 80 bits vs 8000
+        t.record_dense(0, EdgeKind::Conv, 1, 1000); // 8000 bits both
+        t.record_encoded(1, EdgeKind::Conv, 1, 1000, 4); // 4000 + 80 bits vs 8000
         let red = t.reduction();
         let want = 1.0 - (8000.0 + 4080.0) / 16000.0;
         assert!((red - want).abs() < 1e-12, "{red} vs {want}");
@@ -225,8 +349,8 @@ mod tests {
     #[test]
     fn degenerate_groups_record_zero_bits() {
         let mut t = TrafficLedger::default();
-        t.record_encoded(0, 0, 64, 4);
-        t.record_encoded(1, 4, 0, 4);
+        t.record_encoded(0, EdgeKind::Conv, 0, 64, 4);
+        t.record_encoded(1, EdgeKind::Conv, 4, 0, 4);
         assert_eq!(t.total_bits(), 0);
         assert_eq!(t.total_baseline_bits(), 0);
     }

@@ -11,8 +11,10 @@
 pub mod ledger;
 pub mod traffic;
 
-pub use ledger::{LayerTraffic, TrafficLedger};
-pub use traffic::{activation_traffic, weight_traffic, TrafficBits};
+pub use ledger::{EdgeKind, LayerTraffic, TrafficLedger};
+pub use traffic::{
+    activation_traffic, residual_traffic, weight_traffic, ResidualTraffic, TrafficBits,
+};
 
 use crate::energy::EnergyModel;
 

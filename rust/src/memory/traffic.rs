@@ -48,6 +48,64 @@ pub fn weight_traffic(dp_len: usize, msb_bits: u32) -> TrafficBits {
     TrafficBits { baseline, pacim }
 }
 
+/// Closed-form traffic of one residual block's three inter-layer edges
+/// under the fused dataplane vs the dense round-trip (the analytic
+/// counterpart of the ledger's `ResidualSave`/`ResidualIn`/`ResidualAdd`
+/// rows, one direction, for `pixels` encoding groups of `channels`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidualTraffic {
+    /// Producer write into the skip slot. Fused, the slot stores packed
+    /// planes: the add needs the exact u8 operand back, so all 8 planes
+    /// travel plus the counters — slightly *above* the dense baseline
+    /// (the honest cost of keeping the operand in encoded form).
+    pub save: TrafficBits,
+    /// In-block tail conv → add operand: eliminated outright when the
+    /// add is fused into that conv's requantize step (`pacim = 0`).
+    pub add_in: TrafficBits,
+    /// Post-add activation to the next consumer, encoded at `msb_bits`
+    /// planes (callers model this edge dense when the next consumer
+    /// cannot take packed input, e.g. a pooling head).
+    pub add_out: TrafficBits,
+}
+
+impl ResidualTraffic {
+    /// Whole-block totals across the three edges.
+    pub fn total(&self) -> TrafficBits {
+        TrafficBits {
+            baseline: self.save.baseline + self.add_in.baseline + self.add_out.baseline,
+            pacim: self.save.pacim + self.add_in.pacim + self.add_out.pacim,
+        }
+    }
+}
+
+/// Analytic residual-block edge traffic for `pixels` groups of
+/// `channels` activations with `msb_bits` MSB planes on the post-add
+/// edge. For every `C ≥ 2` the fused block moves strictly fewer total
+/// bits than the dense round-trip: the save edge's counter overhead
+/// (`8·⌈log2 C⌉` per group) is strictly smaller than the eliminated
+/// add-in edge (`8·C` per group). At `C = 1` the counters dominate and
+/// the block honestly loses — the math exposes the crossover rather
+/// than hiding it.
+pub fn residual_traffic(channels: usize, pixels: u64, msb_bits: u32) -> ResidualTraffic {
+    let per_group_save = activation_traffic(channels, 8);
+    let per_group_add = activation_traffic(channels, msb_bits);
+    let dense = channels as u64 * 8;
+    ResidualTraffic {
+        save: TrafficBits {
+            baseline: pixels * per_group_save.baseline,
+            pacim: pixels * per_group_save.pacim,
+        },
+        add_in: TrafficBits {
+            baseline: pixels * dense,
+            pacim: 0,
+        },
+        add_out: TrafficBits {
+            baseline: pixels * per_group_add.baseline,
+            pacim: pixels * per_group_add.pacim,
+        },
+    }
+}
+
 /// Fig. 7(b) sweep: activation cache-access reduction vs channel count.
 pub fn reduction_vs_channels(channels: &[usize], msb_bits: u32) -> Vec<(usize, f64)> {
     channels
@@ -100,6 +158,37 @@ mod tests {
         // §4.2: weight DRAM access reduced ≈50% (4-bit MSB storage).
         let t = weight_traffic(1152, 4); // 3×3×128 CONV kernel
         assert!((0.45..0.51).contains(&t.reduction()), "{}", t.reduction());
+    }
+
+    #[test]
+    fn residual_block_saves_at_every_width() {
+        // The save edge alone costs more than dense (8 planes + counter
+        // overhead), but the eliminated add-in edge pays for it: net
+        // saving at every channel width from 2 up.
+        for c in [2usize, 4, 8, 16, 64, 128, 256, 512] {
+            let r = residual_traffic(c, 100, 4);
+            assert!(r.save.pacim >= r.save.baseline, "c={c}");
+            assert_eq!(r.add_in.pacim, 0);
+            assert!(r.add_out.pacim <= r.add_out.baseline, "c={c}");
+            let t = r.total();
+            assert!(t.pacim < t.baseline, "c={c}: {t:?}");
+        }
+        // C = 1 is the honest crossover: one counter bit per plane
+        // matches the single data channel and the block loses.
+        let t = residual_traffic(1, 100, 4).total();
+        assert!(t.pacim > t.baseline, "{t:?}");
+    }
+
+    #[test]
+    fn residual_block_matches_per_edge_formula() {
+        // C=16, 9 pixels: save = (16·8 + 8·4)·9, add_in = 0 vs 16·8·9,
+        // add_out = (16·4 + 8·4)·9.
+        let r = residual_traffic(16, 9, 4);
+        assert_eq!(r.save.pacim, 9 * (16 * 8 + 8 * 4));
+        assert_eq!(r.save.baseline, 9 * 16 * 8);
+        assert_eq!(r.add_in.baseline, 9 * 16 * 8);
+        assert_eq!(r.add_out.pacim, 9 * (16 * 4 + 8 * 4));
+        assert_eq!(r.total().baseline, 3 * 9 * 16 * 8);
     }
 
     #[test]

@@ -145,6 +145,11 @@ impl<B: MacBackend> MacBackend for ProfilingBackend<B> {
         self.inner.fault()
     }
 
+    /// Residual skip-edge representation is the wrapped backend's call.
+    fn fuse_residual(&self) -> bool {
+        self.inner.fuse_residual()
+    }
+
     #[allow(clippy::too_many_arguments)]
     fn gemm_layer(
         &self,
@@ -206,6 +211,7 @@ mod tests {
 
     fn run<B: MacBackend + Sync>(model: &Model, backend: &B, img: &[u8]) -> (Vec<f32>, RunStats) {
         run_model_with(model, backend, img, &Parallelism::off(), &mut ModelScratch::default())
+            .unwrap()
     }
 
     fn prepare_wrapped<B: MacBackend>(prof: &mut ProfilingBackend<B>, model: &Model) {

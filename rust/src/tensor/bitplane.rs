@@ -195,6 +195,24 @@ impl PackedPatches {
     pub fn element_sum(&self, pix: usize) -> i64 {
         self.sums[pix]
     }
+
+    /// Gather element `i` of pixel `pix` back out of the plane domain —
+    /// the encoded skip slot's point read. The residual add consumes
+    /// its saved operand one element at a time from the packed planes
+    /// (no dense u8 copy ever exists), so this reassembles the byte
+    /// from bit `i % 64` of word `i / 64` across all 8 planes. Reads
+    /// the slab as transmitted: fault-injected plane flips are visible
+    /// here, exactly like on a consumer-side unpack.
+    pub fn value(&self, pix: usize, i: usize) -> u8 {
+        debug_assert!(pix < self.pixels && i < self.k);
+        let (w, b) = (i / 64, i % 64);
+        let base = pix * 8 * self.words + w;
+        let mut v = 0u8;
+        for p in 0..8 {
+            v |= (((self.planes[base + p * self.words] >> b) & 1) as u8) << p;
+        }
+        v
+    }
 }
 
 #[cfg(test)]
@@ -269,6 +287,23 @@ mod tests {
         for pix in 0..4 {
             assert_eq!(reused.pop(pix), fresh.pop(pix));
             assert_eq!(reused.element_sum(pix), fresh.element_sum(pix));
+        }
+    }
+
+    #[test]
+    fn value_gathers_every_element_back() {
+        // The plane-domain point read must reproduce the packed bytes
+        // exactly, including across word boundaries and ragged tails.
+        let mut rng = Rng::new(45);
+        for (pixels, k) in [(1usize, 1usize), (5, 64), (9, 65), (16, 130)] {
+            let cols = random_cols(&mut rng, pixels, k);
+            let mut packed = PackedPatches::default();
+            packed.pack(&cols, k, pixels, &Parallelism::off());
+            for pix in 0..pixels {
+                for i in 0..k {
+                    assert_eq!(packed.value(pix, i), cols[pix * k + i], "pix {pix} i {i}");
+                }
+            }
         }
     }
 

@@ -85,10 +85,10 @@ fn prop_engine_bit_identical_to_legacy_reference() {
         // Reference: explicit backend + the low-level interpreter entry.
         let (ref_logits, ref_stats) = if exact_mode {
             let b = exact_backend(&model);
-            run_model_with(&model, &b, &img, &par, &mut ModelScratch::default())
+            run_model_with(&model, &b, &img, &par, &mut ModelScratch::default()).unwrap()
         } else {
             let b = pac_backend(&model, cfg.clone());
-            run_model_with(&model, &b, &img, &par, &mut ModelScratch::default())
+            run_model_with(&model, &b, &img, &par, &mut ModelScratch::default()).unwrap()
         };
 
         // Façade: the same computation through the one front door.
@@ -124,7 +124,8 @@ fn prop_engine_dynamic_thresholds_match_reference() {
         };
         let b = pac_backend(&model, cfg);
         let (ref_logits, ref_stats) =
-            run_model_with(&model, &b, &img, &Parallelism::off(), &mut ModelScratch::default());
+            run_model_with(&model, &b, &img, &Parallelism::off(), &mut ModelScratch::default())
+                .unwrap();
         let engine = EngineBuilder::new(model)
             .pac(PacConfig::default())
             .dynamic(th)
@@ -169,9 +170,11 @@ fn prop_fused_dataplane_invariant_through_engine() {
         assert_eq!(a.stats.digital_cycles, b.stats.digital_cycles);
         assert_eq!(a.stats.pcu_ops, b.stats.pcu_ops);
         assert_eq!(a.stats.levels, b.stats.levels);
-        // tiny_resnet has three in-block conv1→conv2 edges to encode.
+        // tiny_resnet's fused dataplane encodes 14 of 15 ledger rows:
+        // 9 conv/save payload edges, 3 eliminated add-in edges, and 2
+        // encoded post-add edges — only the add→GAP handoff stays dense.
         assert_eq!(a.stats.traffic.encoded_layer_count(), 0);
-        assert_eq!(b.stats.traffic.encoded_layer_count(), 3);
+        assert_eq!(b.stats.traffic.encoded_layer_count(), 14);
         assert_eq!(
             a.stats.traffic.total_baseline_bits(),
             b.stats.traffic.total_baseline_bits()
@@ -234,7 +237,7 @@ fn engine_evaluate_matches_sequential_reference() {
     let mut scratch = ModelScratch::default();
     for (img, &label) in images.iter().zip(&labels) {
         let (logits, stats) =
-            run_model_with(&model, &backend, img, &Parallelism::off(), &mut scratch);
+            run_model_with(&model, &backend, img, &Parallelism::off(), &mut scratch).unwrap();
         let mut best = 0usize;
         let mut best_v = f32::NEG_INFINITY;
         for (i, &x) in logits.iter().enumerate() {

@@ -395,7 +395,8 @@ fn prop_blocked_engine_matches_per_patch_engine() {
             &img,
             &Parallelism::off(),
             &mut ModelScratch::default(),
-        );
+        )
+        .expect("per-patch reference executes");
         for par in [
             Parallelism::off(),
             Parallelism {
@@ -404,7 +405,8 @@ fn prop_blocked_engine_matches_per_patch_engine() {
             },
         ] {
             let (b, s) =
-                run_model_with(&model, &blocked, &img, &par, &mut ModelScratch::default());
+                run_model_with(&model, &blocked, &img, &par, &mut ModelScratch::default())
+                    .expect("blocked run executes");
             assert_eq!(b, b_ref, "logits diverged (variant {variant})");
             assert_eq!(s.macs, s_ref.macs);
             assert_eq!(s.digital_cycles, s_ref.digital_cycles);
@@ -562,7 +564,8 @@ fn prop_kernel_tiers_and_weight_skip_model_identical() {
             &img,
             &Parallelism::off(),
             &mut ModelScratch::default(),
-        );
+        )
+        .expect("scalar baseline executes");
         let tiers = [
             Some(KernelTier::Scalar),
             Some(KernelTier::Avx2),
@@ -590,7 +593,8 @@ fn prop_kernel_tiers_and_weight_skip_model_identical() {
                     &img,
                     &Parallelism::off(),
                     &mut ModelScratch::default(),
-                );
+                )
+                .expect("kernel-tier run executes");
                 assert_eq!(b, b_ref, "logits diverged: kernel {kernel:?} skip {weight_skip}");
                 assert_eq!(s.macs, s_ref.macs);
                 assert_eq!(s.digital_cycles, s_ref.digital_cycles);
